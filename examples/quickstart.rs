@@ -1,0 +1,53 @@
+//! Quickstart: load the compiled artifacts, route a few prompts through
+//! the hybrid router, and generate completions on the tier Alg. 2 picks.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use pick_and_spin::config::Config;
+use pick_and_spin::gateway::LiveStack;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::default();
+    println!("== Pick and Spin quickstart ==");
+    println!("loading + compiling artifacts (once; Python never runs at request time)...");
+    let t0 = std::time::Instant::now();
+    let stack = LiveStack::start(&cfg)?;
+    println!("stack ready in {:.1}s\n", t0.elapsed().as_secs_f64());
+
+    let prompts = [
+        "What is 7 plus 12?",
+        "Natalia sold 48 clips in April and half as many in May. How many in total?",
+        "Write a python function that reverses a linked list.",
+        "Prove that the sequence defined by f(n) = 3n + 7 is monotonic for all natural numbers n.",
+    ];
+    for p in prompts {
+        let r = stack.complete(p, 12)?;
+        println!("prompt: {p}");
+        println!(
+            "  → complexity {} ({}, conf {:.2}) routed to {} [{} tier]",
+            r.complexity,
+            ["low", "medium", "high"][r.complexity],
+            r.confidence,
+            r.model,
+            r.tier
+        );
+        println!(
+            "  → {} prompt tokens, {} generated, TTFT {:.1} ms, total {:.1} ms",
+            r.prompt_tokens,
+            r.tokens.len(),
+            r.ttft_s * 1e3,
+            r.latency_s * 1e3
+        );
+        println!("  → token ids: {:?}\n", &r.tokens[..r.tokens.len().min(8)]);
+    }
+
+    // The easy prompt must land on a smaller model than the proof.
+    let easy = stack.complete(prompts[0], 8)?;
+    let hard = stack.complete(prompts[3], 8)?;
+    assert!(easy.complexity < hard.complexity, "routing sanity");
+    println!("routing sanity holds: easy → tier {}, hard → tier {}", easy.tier, hard.tier);
+    stack.shutdown();
+    Ok(())
+}

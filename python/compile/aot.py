@@ -1,0 +1,265 @@
+"""AOT pipeline: lower every serving computation to HLO text + weights.
+
+Run once at build time (``make artifacts``); the Rust coordinator is
+self-contained afterwards.  Outputs under ``artifacts/``:
+
+* ``<module>.hlo.txt``      — HLO text per compiled computation
+  (classifier at batch 1/8; per LM tier: prefill at batch 1/4 and decode
+  at batch 1/4/8).  HLO *text*, not serialized protos: jax >= 0.5 emits
+  64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+  parser reassigns ids (see /opt/xla-example/README.md).
+* ``<model>.psw``           — weights as runtime inputs (see psw.py).
+* ``manifest.json``         — module inventory: input/output specs in the
+  exact positional order the Rust runtime must feed PJRT.
+* ``tokenizer_parity.json`` — cross-language tokenizer test vectors.
+* ``../data/templates.json``— shared benchmark templates for the Rust
+  workload generator.
+
+The complexity classifier is *trained* here (paper: DistilBERT fine-tuned
+to 96.8% val acc; gate: >= 95%).  LM tier weights are seeded-random — the
+serving system's behaviour depends on latency/cost/shape, not on text
+quality (DESIGN.md §Substitutions).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import psw
+from . import templates
+from . import tokenizer as tok
+from .train_classifier import MIN_VAL_ACC, train
+
+PREFILL_BATCHES = [1, 4]
+DECODE_BATCHES = [1, 4, 8]
+CLASSIFIER_BATCHES = [1, 8]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _param_specs(cfg: M.ModelConfig) -> list[jax.ShapeDtypeStruct]:
+    shapes = M.param_shapes(cfg)
+    return [
+        jax.ShapeDtypeStruct(shapes[n], jnp.float32)
+        for n in M.param_names(cfg)
+    ]
+
+
+def _weight_inputs(cfg: M.ModelConfig) -> list[dict]:
+    shapes = M.param_shapes(cfg)
+    return [
+        {"kind": "weight", "name": n, "dtype": "f32",
+         "shape": list(shapes[n])}
+        for n in M.param_names(cfg)
+    ]
+
+
+def lower_classifier(cfg: M.ModelConfig, batch: int) -> str:
+    def fn(*args):
+        *params, tokens = args
+        return (M.classifier_probs(cfg, list(params), tokens, True),)
+
+    specs = _param_specs(cfg) + [
+        jax.ShapeDtypeStruct((batch, cfg.seq_prefill), jnp.int32)
+    ]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def lower_prefill(cfg: M.ModelConfig, batch: int) -> str:
+    def fn(*args):
+        *params, tokens, lengths = args
+        return M.lm_prefill(cfg, list(params), tokens, lengths, True)
+
+    specs = _param_specs(cfg) + [
+        jax.ShapeDtypeStruct((batch, cfg.seq_prefill), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+    ]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def lower_decode(cfg: M.ModelConfig, batch: int) -> str:
+    def fn(*args):
+        *params, kv, tokens, pos = args
+        return M.lm_decode(cfg, list(params), kv, tokens, pos, True)
+
+    kv_shape = (cfg.n_layers, 2, batch, cfg.n_heads, cfg.seq_max, cfg.d_head)
+    specs = _param_specs(cfg) + [
+        jax.ShapeDtypeStruct(kv_shape, jnp.float32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+    ]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def kv_shape(cfg: M.ModelConfig, batch: int) -> list[int]:
+    return [cfg.n_layers, 2, batch, cfg.n_heads, cfg.seq_max, cfg.d_head]
+
+
+def parity_vectors() -> dict:
+    """Tokenizer test vectors checked by BOTH pytest and cargo test."""
+    texts = [
+        "What is 2 plus 2?",
+        "Prove that the function f(n) = 3n + 7 is monotonic.",
+        "write a python function that reverses a linked list.",
+        "Ünïcödé   mixed WITH caps & punct!!! 123abc",
+        "",
+        "a",
+        " ".join(["word"] * 100),  # truncation case
+    ]
+    return {
+        "vocab": tok.VOCAB,
+        "seq_cls": tok.SEQ_CLS,
+        "cases": [
+            {"text": t, "ids": tok.encode(t, tok.SEQ_CLS)} for t in texts
+        ],
+        "word_ids": {w: tok.word_id(w) for w in
+                     ["sum", "prove", "derive", "list", "define", "the",
+                      "photosynthesis", "123abc"]},
+    }
+
+
+def build(out_dir: str, data_dir: str, seed: int, retrain: bool,
+          quick: bool) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    os.makedirs(data_dir, exist_ok=True)
+
+    templates.dump(os.path.join(data_dir, "templates.json"))
+    with open(os.path.join(out_dir, "tokenizer_parity.json"), "w") as f:
+        json.dump(parity_vectors(), f, indent=1)
+
+    modules: list[dict] = []
+    models: dict[str, dict] = {}
+
+    # ----- classifier (trained) -----
+    print("== training classifier ==", flush=True)
+    epochs = 1 if quick else 2
+    result = train(seed=seed, epochs=epochs)
+    if result.val_accuracy < MIN_VAL_ACC and not quick:
+        sys.exit(
+            f"classifier val acc {result.val_accuracy:.4f} < {MIN_VAL_ACC}"
+        )
+    ccfg = M.CLASSIFIER
+    cls_params = [np.asarray(p) for p in result.params]
+    psw.write(os.path.join(out_dir, "classifier.psw"),
+              list(zip(M.param_names(ccfg), cls_params)))
+    models["classifier"] = {
+        "weights": "classifier.psw",
+        "config": ccfg.__dict__,
+        "param_count": int(sum(p.size for p in cls_params)),
+        "val_accuracy": result.val_accuracy,
+        "train_accuracy": result.train_accuracy,
+    }
+    for b in CLASSIFIER_BATCHES:
+        name = f"classifier_b{b}"
+        print(f"== lowering {name} ==", flush=True)
+        with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(lower_classifier(ccfg, b))
+        modules.append({
+            "name": name, "kind": "classifier", "model": "classifier",
+            "batch": b,
+            "hlo": f"{name}.hlo.txt",
+            "inputs": _weight_inputs(ccfg) + [
+                {"kind": "tokens", "dtype": "i32",
+                 "shape": [b, ccfg.seq_prefill]},
+            ],
+            "outputs": [{"kind": "probs", "dtype": "f32",
+                         "shape": [b, ccfg.n_classes]}],
+        })
+
+    # ----- LM tiers (seeded-random weights) -----
+    for tier, cfg in M.TIERS.items():
+        params = [np.asarray(p) for p in M.init_params(cfg, seed + hash_tier(tier))]
+        psw.write(os.path.join(out_dir, f"lm_{tier}.psw"),
+                  list(zip(M.param_names(cfg), params)))
+        models[tier] = {
+            "weights": f"lm_{tier}.psw",
+            "config": cfg.__dict__,
+            "param_count": int(sum(p.size for p in params)),
+        }
+        for b in PREFILL_BATCHES:
+            name = f"lm_{tier}_prefill_b{b}"
+            print(f"== lowering {name} ==", flush=True)
+            with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+                f.write(lower_prefill(cfg, b))
+            modules.append({
+                "name": name, "kind": "prefill", "model": tier, "batch": b,
+                "hlo": f"{name}.hlo.txt",
+                "inputs": _weight_inputs(cfg) + [
+                    {"kind": "tokens", "dtype": "i32",
+                     "shape": [b, cfg.seq_prefill]},
+                    {"kind": "lengths", "dtype": "i32", "shape": [b]},
+                ],
+                "outputs": [
+                    {"kind": "logits", "dtype": "f32",
+                     "shape": [b, cfg.vocab]},
+                    {"kind": "kv", "dtype": "f32", "shape": kv_shape(cfg, b)},
+                ],
+            })
+        for b in DECODE_BATCHES:
+            name = f"lm_{tier}_decode_b{b}"
+            print(f"== lowering {name} ==", flush=True)
+            with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+                f.write(lower_decode(cfg, b))
+            modules.append({
+                "name": name, "kind": "decode", "model": tier, "batch": b,
+                "hlo": f"{name}.hlo.txt",
+                "inputs": _weight_inputs(cfg) + [
+                    {"kind": "kv", "dtype": "f32", "shape": kv_shape(cfg, b)},
+                    {"kind": "tokens", "dtype": "i32", "shape": [b]},
+                    {"kind": "pos", "dtype": "i32", "shape": [b]},
+                ],
+                "outputs": [
+                    {"kind": "logits", "dtype": "f32",
+                     "shape": [b, cfg.vocab]},
+                    {"kind": "kv", "dtype": "f32", "shape": kv_shape(cfg, b)},
+                ],
+            })
+
+    manifest = {
+        "format": 1,
+        "tokenizer": {"vocab": tok.VOCAB, "seq_cls": tok.SEQ_CLS,
+                      "pad": tok.PAD, "cls": tok.CLS, "sep": tok.SEP},
+        "models": models,
+        "modules": modules,
+        "complexity_classes": ["low", "medium", "high"],
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(modules)} modules to {out_dir}")
+    return manifest
+
+
+def hash_tier(name: str) -> int:
+    return sum(name.encode()) % 1000
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--data", default="../data")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--retrain", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="1 training epoch, skip accuracy gate (CI smoke)")
+    args = ap.parse_args()
+    build(args.out, args.data, args.seed, args.retrain, args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Synthetic training corpus for the complexity classifier.
+
+Generates the same number of unique prompts per benchmark as the paper
+(31,019 total = Table 1 runs / 5 profiles), labeled with the template's
+ground-truth complexity class.  A deterministic SplitMix64 stream drives
+template and slot selection so the corpus is reproducible bit-for-bit.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from . import templates as T
+
+_MASK64 = 0xFFFFFFFFFFFFFFFF
+
+
+class SplitMix64:
+    """Deterministic 64-bit stream; mirrored in rust/src/util/rng.rs."""
+
+    def __init__(self, seed: int):
+        self.state = seed & _MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & _MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _MASK64
+        return z ^ (z >> 31)
+
+    def below(self, n: int) -> int:
+        return self.next_u64() % n
+
+
+@dataclass
+class Prompt:
+    benchmark: str
+    text: str
+    complexity: int  # 0 low, 1 medium, 2 high
+
+
+def fill(template: str, rng: SplitMix64) -> str:
+    """Substitute every {slot} with a filler chosen by ``rng``."""
+    out: list[str] = []
+    i = 0
+    while i < len(template):
+        ch = template[i]
+        if ch == "{":
+            j = template.index("}", i)
+            slot = template[i + 1 : j]
+            fillers = T.SLOTS[slot]
+            out.append(fillers[rng.below(len(fillers))])
+            i = j + 1
+        else:
+            out.append(ch)
+            i += 1
+    return "".join(out)
+
+
+def generate(seed: int = 0x5EED_CAFE) -> list[Prompt]:
+    """All unique prompts across the eight benchmarks (paper: 31,019)."""
+    prompts: list[Prompt] = []
+    for b in T.BENCHMARKS:
+        rng = SplitMix64(seed ^ hash_name(b))
+        tpls = T.benchmark_templates(b)
+        for _ in range(T.unique_prompts(b)):
+            c, t = tpls[rng.below(len(tpls))]
+            prompts.append(Prompt(b, fill(t, rng), c))
+    return prompts
+
+
+def hash_name(name: str) -> int:
+    """FNV-1a 64 of the benchmark name (stable across sessions)."""
+    h = 0xCBF29CE484222325
+    for byte in name.encode():
+        h ^= byte
+        h = (h * 0x100000001B3) & _MASK64
+    return h
+
+
+def train_val_split(
+    prompts: list[Prompt], val_frac: float = 0.1, seed: int = 1234
+) -> tuple[list[Prompt], list[Prompt]]:
+    """Deterministic shuffle then split (paper: 10% held-out)."""
+    rng = SplitMix64(seed)
+    idx = list(range(len(prompts)))
+    for i in range(len(idx) - 1, 0, -1):  # Fisher-Yates
+        j = rng.below(i + 1)
+        idx[i], idx[j] = idx[j], idx[i]
+    n_val = int(len(prompts) * val_frac)
+    val = [prompts[i] for i in idx[:n_val]]
+    train = [prompts[i] for i in idx[n_val:]]
+    return train, val
+
+
+if __name__ == "__main__":
+    ps = generate()
+    from collections import Counter
+
+    print(f"{len(ps)} prompts")
+    print(Counter(p.benchmark for p in ps))
+    print(Counter(p.complexity for p in ps))

@@ -1,0 +1,16 @@
+"""Pallas kernels (L1) and their pure-jnp oracles (ref.py)."""
+
+from .attention import attention_encoder, attention_prefill
+from .classifier_head import classifier_head
+from .decode import attention_decode
+from .ffn import ffn
+from .layernorm import layernorm
+
+__all__ = [
+    "attention_prefill",
+    "attention_encoder",
+    "attention_decode",
+    "classifier_head",
+    "ffn",
+    "layernorm",
+]

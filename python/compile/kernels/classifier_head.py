@@ -1,0 +1,40 @@
+"""Classifier head Pallas kernel: CLS projection + softmax (paper Eq. 3/4).
+
+p_k = softmax(W · h_[CLS] + b) — the routing decision's final compute.
+Fused into one VMEM-resident step so the router's semantic path adds a
+single kernel after the encoder.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, assert_vmem_ok
+
+
+def _head_kernel(h_ref, w_ref, b_ref, o_ref):
+    logits = jnp.dot(h_ref[...], w_ref[...]) + b_ref[...]   # [B, C]
+    z = logits - jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(z)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def classifier_head(h_cls: jnp.ndarray, w: jnp.ndarray,
+                    b: jnp.ndarray) -> jnp.ndarray:
+    """h_cls: [B, D], w: [D, C], b: [C] → class probabilities [B, C]."""
+    bsz, d = h_cls.shape
+    c = w.shape[1]
+    assert_vmem_ok("classifier_head", [(bsz, d), (d, c), (c,), (bsz, c)])
+    return pl.pallas_call(
+        _head_kernel,
+        out_shape=jax.ShapeDtypeStruct((bsz, c), h_cls.dtype),
+        in_specs=[
+            pl.BlockSpec((bsz, d), lambda: (0, 0)),
+            pl.BlockSpec((d, c), lambda: (0, 0)),
+            pl.BlockSpec((c,), lambda: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bsz, c), lambda: (0, 0)),
+        interpret=INTERPRET,
+    )(h_cls, w, b)

@@ -1,0 +1,62 @@
+"""Shared Pallas kernel configuration.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin (and the
+``xla`` crate's CPU client on the Rust side) cannot execute Mosaic
+custom-calls, so interpret mode lowers each kernel to plain HLO ops that
+round-trip through the AOT HLO-text pipeline.  Real-TPU performance is
+*estimated* from the BlockSpec-implied VMEM footprint and MXU utilization
+(see DESIGN.md §Perf and ``vmem_report`` below) rather than measured.
+"""
+
+from __future__ import annotations
+
+INTERPRET = True
+
+NEG_INF = -1e30
+
+# TPU v4-ish budget used for the static VMEM feasibility check.
+VMEM_BYTES = 16 * 1024 * 1024
+MXU_DIM = 128  # systolic array edge
+LANE = 128     # last-dim tiling
+SUBLANE = 8    # second-to-last-dim tiling (f32)
+
+
+def vmem_footprint(block_shapes: list[tuple[int, ...]],
+                   dtype_bytes: int = 4) -> int:
+    """Bytes of VMEM used by one grid step holding the given blocks."""
+    total = 0
+    for shape in block_shapes:
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * dtype_bytes
+    return total
+
+
+def assert_vmem_ok(name: str, block_shapes: list[tuple[int, ...]],
+                   dtype_bytes: int = 4) -> int:
+    """Static check that a kernel's working set fits the VMEM budget."""
+    used = vmem_footprint(block_shapes, dtype_bytes)
+    if used > VMEM_BYTES:
+        raise ValueError(
+            f"kernel {name}: VMEM working set {used} B exceeds budget "
+            f"{VMEM_BYTES} B — shrink the block shapes"
+        )
+    return used
+
+
+def mxu_utilization(m: int, n: int, k: int) -> float:
+    """Fraction of MXU lanes busy for an (m,k)x(k,n) matmul tile.
+
+    The systolic array processes MXU_DIM x MXU_DIM tiles; dimensions that
+    are not multiples waste lanes on the ragged edge.  This is the number
+    the §Perf report tracks per kernel.
+    """
+    def eff(d: int) -> float:
+        if d >= MXU_DIM:
+            full = d // MXU_DIM
+            rem = d % MXU_DIM
+            return (full * MXU_DIM + rem) / ((full + (1 if rem else 0)) * MXU_DIM)
+        return d / MXU_DIM
+
+    return eff(m) * eff(n) * eff(k)

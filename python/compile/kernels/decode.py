@@ -1,0 +1,69 @@
+"""Single-token decode attention over a KV cache — the serving hot path.
+
+Each grid step handles one (batch, head) pair: the new query attends to
+all cache positions j <= pos with a fused masked softmax.  This is the
+PagedAttention-style decode kernel of the paper's vLLM backend rethought
+for TPU: instead of warps gathering KV blocks from GPU global memory, the
+BlockSpec index map streams the head's [Smax, Dh] cache slab HBM→VMEM and
+the mask (rather than a page table) bounds the valid window.  The Rust
+coordinator's block-granular KV manager (rust/src/backend/kv_cache.rs)
+supplies the ``pos`` watermark per sequence.
+
+VMEM working set per step: 2·Smax·Dh + Smax + 2·Dh floats — tiny for the
+tier sizes here; the assertion keeps it honest.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, NEG_INF, assert_vmem_ok
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, pos_ref, o_ref):
+    q = q_ref[0]              # [Dh]
+    k = k_ref[0]              # [Smax, Dh]
+    v = v_ref[0]
+    pos = pos_ref[0, 0]
+    smax, dh = k.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    scores = jnp.dot(k, q) * scale                      # [Smax]
+    j = jax.lax.broadcasted_iota(jnp.int32, (smax,), 0)
+    scores = jnp.where(j <= pos, scores, NEG_INF)
+    m = jnp.max(scores)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p)
+    o_ref[0] = jnp.dot(p, v)                            # [Dh]
+
+
+def attention_decode(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
+    """Decode attention: q [B, H, Dh], caches [B, H, Smax, Dh], pos [B] i32.
+
+    Positions are per-sequence — a continuous-batching decode step serves
+    sequences at different depths in one kernel launch, exactly what the
+    Rust batcher produces.  The caller must already have written this
+    step's K/V at each sequence's ``pos``.  Returns [B, H, Dh].
+    """
+    b, h, smax, dh = k_cache.shape
+    assert_vmem_ok("attention_decode", [(smax, dh), (smax, dh), (dh,), (dh,)])
+    pos_arr = jnp.reshape(pos.astype(jnp.int32), (b, 1))
+    qf = q.reshape(b * h, dh)
+    kf = k_cache.reshape(b * h, smax, dh)
+    vf = v_cache.reshape(b * h, smax, dh)
+    out = pl.pallas_call(
+        _decode_kernel,
+        out_shape=jax.ShapeDtypeStruct((b * h, dh), q.dtype),
+        grid=(b * h,),
+        in_specs=[
+            pl.BlockSpec((1, dh), lambda i: (i, 0)),
+            pl.BlockSpec((1, smax, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, smax, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i // h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, dh), lambda i: (i, 0)),
+        interpret=INTERPRET,
+    )(qf, kf, vf, pos_arr)
+    return out.reshape(b, h, dh)

@@ -1,0 +1,52 @@
+"""Fused LayerNorm Pallas kernel.
+
+One grid step normalizes a block of rows entirely in VMEM: mean/variance
+reduction, scale and shift in a single pass — the fusion the paper's
+backends get from vLLM/TensorRT layer-norm plugins.
+
+TPU mapping: rows tile the sublane axis (multiples of 8), the model dim
+lives on the lane axis (multiples of 128 for the medium/large tiers; the
+small tier's d=64 under-fills lanes and is padded by Mosaic — documented
+in the §Perf kernel table).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, assert_vmem_ok
+
+
+def _ln_kernel(x_ref, gamma_ref, beta_ref, o_ref, *, eps: float):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    o_ref[...] = (x - mu) / jnp.sqrt(var + eps) * gamma_ref[...] + beta_ref[...]
+
+
+def layernorm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
+              eps: float = 1e-5, block_rows: int = 64) -> jnp.ndarray:
+    """LayerNorm over the last axis of a [N, D] array."""
+    n, d = x.shape
+    bn = min(block_rows, n)
+    # Grid only divides evenly in this library (shapes are static).
+    while n % bn:
+        bn -= 1
+    assert_vmem_ok("layernorm", [(bn, d), (bn, d), (d,), (d,)])
+    grid = (n // bn,)
+    return pl.pallas_call(
+        functools.partial(_ln_kernel, eps=eps),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn, d), lambda i: (i, 0)),
+        interpret=INTERPRET,
+    )(x, gamma, beta)

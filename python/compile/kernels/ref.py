@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These are also the *differentiable* implementations used by the classifier
+training loop (`pallas_call` has no automatic VJP); pytest asserts that the
+kernel-backed forward matches these references to tight tolerances, so
+weights trained against the references serve identically through the
+kernel path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def layernorm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
+              eps: float = 1e-5) -> jnp.ndarray:
+    """LayerNorm over the last axis."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def gelu(x: jnp.ndarray) -> jnp.ndarray:
+    """tanh-approximation GeLU (matches the Pallas kernel exactly)."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def ffn(x: jnp.ndarray, w1: jnp.ndarray, b1: jnp.ndarray,
+        w2: jnp.ndarray, b2: jnp.ndarray) -> jnp.ndarray:
+    """Fused feed-forward: GeLU(x@w1+b1)@w2+b2."""
+    return gelu(x @ w1 + b1) @ w2 + b2
+
+
+def _attention(q, k, v, lengths, causal):
+    b, h, s, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    qi = jnp.arange(s)[:, None]
+    kj = jnp.arange(s)[None, :]
+    in_len = kj[None] < lengths.reshape(b, 1, 1)          # [B, S, S]
+    mask = in_len & (kj <= qi)[None] if causal else in_len
+    scores = jnp.where(mask[:, None], scores, NEG_INF)
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+def attention_prefill(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      lengths: jnp.ndarray) -> jnp.ndarray:
+    """Causal multi-head attention over a padded prefill window.
+
+    q, k, v: [B, H, S, Dh]; lengths: [B] i32 — positions >= lengths[b] are
+    padding and are masked out of the keys (queries there produce garbage
+    that downstream code never reads).
+    """
+    return _attention(q, k, v, lengths, causal=True)
+
+
+def attention_encoder(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      lengths: jnp.ndarray) -> jnp.ndarray:
+    """Bidirectional multi-head attention with padding mask."""
+    return _attention(q, k, v, lengths, causal=False)
+
+
+def attention_decode(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
+    """Single-position decode attention over a KV cache.
+
+    q: [B, H, Dh] (the new position's query, already written to cache at
+    index ``pos[b]``); k_cache, v_cache: [B, H, Smax, Dh]; pos: [B] i32.
+    Each sequence attends to cache positions j <= pos[b].
+    """
+    b, h, smax, dh = k_cache.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    scores = jnp.einsum("bhd,bhkd->bhk", q, k_cache) * scale
+    mask = jnp.arange(smax)[None, None, :] <= pos.reshape(b, 1, 1)
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhk,bhkd->bhd", p, v_cache)
+
+
+def classifier_head(h_cls: jnp.ndarray, w: jnp.ndarray,
+                    b: jnp.ndarray) -> jnp.ndarray:
+    """CLS projection + softmax: [B, D] @ [D, C] + [C] -> probs [B, C]."""
+    logits = h_cls @ w + b
+    z = logits - jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(z)
+    return e / jnp.sum(e, axis=-1, keepdims=True)

@@ -1,0 +1,314 @@
+"""L2 — JAX compute graphs: decoder-LM tiers and the DistilBERT-lite router.
+
+Every forward exists in two numerically-identical variants selected by
+``use_kernels``:
+
+* ``use_kernels=True``  — Pallas kernels (L1); this is what ``aot.py``
+  lowers to HLO for the Rust serving path.
+* ``use_kernels=False`` — the pure-jnp oracle (``kernels/ref.py``); this
+  is differentiable and is what ``train_classifier.py`` optimizes.
+
+pytest asserts the two agree to tight tolerances, so weights trained on
+the reference serve identically through the kernel path.
+
+Parameters are flat *lists* of arrays in the canonical order given by
+``param_names`` — the same order ``aot.py`` writes to the ``.psw`` weight
+file and the Rust runtime feeds to PJRT, so there is no pytree-ordering
+ambiguity across the language boundary.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from . import tokenizer as tok
+from .kernels import (
+    attention_decode,
+    attention_encoder,
+    attention_prefill,
+    classifier_head,
+    ffn,
+    layernorm,
+)
+from .kernels import ref
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture of one compiled model."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_head: int
+    d_ffn: int
+    seq_prefill: int
+    seq_max: int
+    n_classes: int = 0  # 0 => decoder LM, >0 => encoder classifier
+
+    @property
+    def is_classifier(self) -> bool:
+        return self.n_classes > 0
+
+    def param_count(self) -> int:
+        n = self.vocab * self.d_model + self.seq_max * self.d_model
+        per_layer = (
+            4 * self.d_model * (self.n_heads * self.d_head)
+            + 2 * self.d_model * self.d_ffn
+            + self.d_ffn
+            + self.d_model
+            + 4 * self.d_model
+        )
+        n += self.n_layers * per_layer + 2 * self.d_model
+        if self.is_classifier:
+            n += self.d_model * self.n_classes + self.n_classes
+        else:
+            n += self.d_model * self.vocab
+        return n
+
+
+# The three serving tiers (paper: Gemma-3 27B / Llama-3 90B / Qwen-3 235B +
+# DeepSeek-R1 685B collapse onto small/medium/large; see DESIGN.md
+# §Substitutions).  Dims are MXU/lane-friendly multiples.
+TIERS: dict[str, ModelConfig] = {
+    "small": ModelConfig("small", tok.VOCAB, 64, 2, 2, 32, 256, 64, 96),
+    "medium": ModelConfig("medium", tok.VOCAB, 128, 4, 4, 32, 512, 64, 96),
+    "large": ModelConfig("large", tok.VOCAB, 256, 6, 8, 32, 1024, 64, 96),
+}
+
+# DistilBERT-lite complexity classifier (paper: DistilBERT, 3-way).
+CLASSIFIER = ModelConfig(
+    "classifier", tok.VOCAB, 96, 2, 4, 24, 384, tok.SEQ_CLS, tok.SEQ_CLS,
+    n_classes=3,
+)
+
+
+def param_names(cfg: ModelConfig) -> list[str]:
+    """Canonical parameter order shared with aot.py / .psw / Rust."""
+    names = ["embed", "pos_embed"]
+    for i in range(cfg.n_layers):
+        names += [
+            f"l{i}.ln1.g", f"l{i}.ln1.b",
+            f"l{i}.wq", f"l{i}.wk", f"l{i}.wv", f"l{i}.wo",
+            f"l{i}.ln2.g", f"l{i}.ln2.b",
+            f"l{i}.w1", f"l{i}.b1", f"l{i}.w2", f"l{i}.b2",
+        ]
+    names += ["ln_f.g", "ln_f.b"]
+    if cfg.is_classifier:
+        names += ["head.w", "head.b"]
+    else:
+        names += ["w_out"]
+    return names
+
+
+def param_shapes(cfg: ModelConfig) -> dict[str, tuple[int, ...]]:
+    d, dh, h, f = cfg.d_model, cfg.d_head, cfg.n_heads, cfg.d_ffn
+    shapes: dict[str, tuple[int, ...]] = {
+        "embed": (cfg.vocab, d),
+        "pos_embed": (cfg.seq_max, d),
+        "ln_f.g": (d,),
+        "ln_f.b": (d,),
+    }
+    for i in range(cfg.n_layers):
+        shapes[f"l{i}.ln1.g"] = (d,)
+        shapes[f"l{i}.ln1.b"] = (d,)
+        shapes[f"l{i}.wq"] = (d, h * dh)
+        shapes[f"l{i}.wk"] = (d, h * dh)
+        shapes[f"l{i}.wv"] = (d, h * dh)
+        shapes[f"l{i}.wo"] = (h * dh, d)
+        shapes[f"l{i}.ln2.g"] = (d,)
+        shapes[f"l{i}.ln2.b"] = (d,)
+        shapes[f"l{i}.w1"] = (d, f)
+        shapes[f"l{i}.b1"] = (f,)
+        shapes[f"l{i}.w2"] = (f, d)
+        shapes[f"l{i}.b2"] = (d,)
+    if cfg.is_classifier:
+        shapes["head.w"] = (d, cfg.n_classes)
+        shapes["head.b"] = (cfg.n_classes,)
+    else:
+        shapes["w_out"] = (d, cfg.vocab)
+    return shapes
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> list[jnp.ndarray]:
+    """Initialize parameters in canonical order (scaled-normal / ones)."""
+    key = jax.random.PRNGKey(seed)
+    shapes = param_shapes(cfg)
+    out: list[jnp.ndarray] = []
+    for name in param_names(cfg):
+        shape = shapes[name]
+        key, sub = jax.random.split(key)
+        if name.endswith(".g"):
+            out.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith((".b", ".b1", ".b2")) or name == "head.b":
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            out.append(jax.random.normal(sub, shape, jnp.float32) * 0.02)
+    return out
+
+
+def as_dict(cfg: ModelConfig, flat: list[jnp.ndarray]) -> dict[str, jnp.ndarray]:
+    names = param_names(cfg)
+    assert len(names) == len(flat), f"{len(names)} names vs {len(flat)} params"
+    return dict(zip(names, flat))
+
+
+# ---------------------------------------------------------------------------
+# Shared transformer blocks
+# ---------------------------------------------------------------------------
+
+
+def _ops(use_kernels: bool):
+    if use_kernels:
+        return layernorm, ffn, attention_prefill, attention_encoder
+    return ref.layernorm, ref.ffn, ref.attention_prefill, ref.attention_encoder
+
+
+def _split_heads(x: jnp.ndarray, h: int, dh: int) -> jnp.ndarray:
+    b, s, _ = x.shape
+    return x.reshape(b, s, h, dh).transpose(0, 2, 1, 3)  # [B,H,S,Dh]
+
+
+def _merge_heads(x: jnp.ndarray) -> jnp.ndarray:
+    b, h, s, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+
+
+def _block_full(cfg: ModelConfig, p: dict, i: int, hdn: jnp.ndarray,
+                lengths: jnp.ndarray, causal: bool,
+                use_kernels: bool) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One pre-LN transformer block over a full [B, S, D] sequence.
+
+    Returns (hidden, k, v) with k/v shaped [B, H, S, Dh] for KV caching.
+    """
+    ln, mlp, attn_causal, attn_enc = _ops(use_kernels)
+    b, s, d = hdn.shape
+    flat = hdn.reshape(b * s, d)
+    x = ln(flat, p[f"l{i}.ln1.g"], p[f"l{i}.ln1.b"]).reshape(b, s, d)
+    q = _split_heads(x @ p[f"l{i}.wq"], cfg.n_heads, cfg.d_head)
+    k = _split_heads(x @ p[f"l{i}.wk"], cfg.n_heads, cfg.d_head)
+    v = _split_heads(x @ p[f"l{i}.wv"], cfg.n_heads, cfg.d_head)
+    attn = attn_causal(q, k, v, lengths) if causal else attn_enc(q, k, v, lengths)
+    hdn = hdn + _merge_heads(attn) @ p[f"l{i}.wo"]
+    flat = hdn.reshape(b * s, d)
+    y = ln(flat, p[f"l{i}.ln2.g"], p[f"l{i}.ln2.b"])
+    hdn = hdn + mlp(y, p[f"l{i}.w1"], p[f"l{i}.b1"],
+                    p[f"l{i}.w2"], p[f"l{i}.b2"]).reshape(b, s, d)
+    return hdn, k, v
+
+
+# ---------------------------------------------------------------------------
+# Decoder LM: prefill + decode step
+# ---------------------------------------------------------------------------
+
+
+def lm_prefill(cfg: ModelConfig, flat_params: list[jnp.ndarray],
+               tokens: jnp.ndarray, lengths: jnp.ndarray,
+               use_kernels: bool = True):
+    """Prefill a padded prompt batch.
+
+    tokens: [B, S] i32 (S = cfg.seq_prefill); lengths: [B] i32.
+    Returns (last_logits [B, V], kv [L, 2, B, H, Smax, Dh]).
+    The KV cache is padded to seq_max so decode steps can append in place.
+    """
+    p = as_dict(cfg, flat_params)
+    ln, _, _, _ = _ops(use_kernels)
+    b, s = tokens.shape
+    hdn = p["embed"][tokens] + p["pos_embed"][:s][None]
+    ks, vs = [], []
+    for i in range(cfg.n_layers):
+        hdn, k, v = _block_full(cfg, p, i, hdn, lengths, True, use_kernels)
+        pad = cfg.seq_max - s
+        ks.append(jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))))
+        vs.append(jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))))
+    kv = jnp.stack([jnp.stack(ks), jnp.stack(vs)], axis=1)  # [L,2,B,H,Smax,Dh]
+    flat = hdn.reshape(b * s, cfg.d_model)
+    hdn = ln(flat, p["ln_f.g"], p["ln_f.b"]).reshape(b, s, cfg.d_model)
+    last = jnp.take_along_axis(
+        hdn, (lengths - 1).reshape(b, 1, 1).astype(jnp.int32), axis=1
+    )[:, 0]                                                  # [B, D]
+    logits = last @ p["w_out"]
+    return logits, kv
+
+
+def _write_kv(cache: jnp.ndarray, new: jnp.ndarray,
+              pos: jnp.ndarray) -> jnp.ndarray:
+    """Scatter new K or V ([B, H, Dh]) into cache [B, H, Smax, Dh] at pos[b]."""
+
+    def one(c, x, q):
+        return jax.lax.dynamic_update_slice(c, x[:, None, :], (0, q, 0))
+
+    return jax.vmap(one)(cache, new, pos)
+
+
+def lm_decode(cfg: ModelConfig, flat_params: list[jnp.ndarray],
+              kv: jnp.ndarray, tokens: jnp.ndarray, pos: jnp.ndarray,
+              use_kernels: bool = True):
+    """One decode step for a continuous batch.
+
+    kv: [L, 2, B, H, Smax, Dh]; tokens: [B] i32 (this step's inputs);
+    pos: [B] i32 per-sequence positions (where this token goes).
+    Returns (logits [B, V], kv updated).
+    """
+    p = as_dict(cfg, flat_params)
+    if use_kernels:
+        ln, dec = layernorm, attention_decode
+    else:
+        ln, dec = ref.layernorm, ref.attention_decode
+    b = tokens.shape[0]
+    hdn = p["embed"][tokens] + p["pos_embed"][pos]           # [B, D]
+    new_kv = []
+    for i in range(cfg.n_layers):
+        x = ln(hdn, p[f"l{i}.ln1.g"], p[f"l{i}.ln1.b"])
+        q = (x @ p[f"l{i}.wq"]).reshape(b, cfg.n_heads, cfg.d_head)
+        k = (x @ p[f"l{i}.wk"]).reshape(b, cfg.n_heads, cfg.d_head)
+        v = (x @ p[f"l{i}.wv"]).reshape(b, cfg.n_heads, cfg.d_head)
+        k_cache = _write_kv(kv[i, 0], k, pos)
+        v_cache = _write_kv(kv[i, 1], v, pos)
+        new_kv.append(jnp.stack([k_cache, v_cache]))
+        attn = dec(q, k_cache, v_cache, pos)                 # [B, H, Dh]
+        hdn = hdn + attn.reshape(b, -1) @ p[f"l{i}.wo"]
+        y = ln(hdn, p[f"l{i}.ln2.g"], p[f"l{i}.ln2.b"])
+        if use_kernels:
+            hdn = hdn + ffn(y, p[f"l{i}.w1"], p[f"l{i}.b1"],
+                            p[f"l{i}.w2"], p[f"l{i}.b2"])
+        else:
+            hdn = hdn + ref.ffn(y, p[f"l{i}.w1"], p[f"l{i}.b1"],
+                                p[f"l{i}.w2"], p[f"l{i}.b2"])
+    kv = jnp.stack(new_kv)
+    hdn = ln(hdn, p["ln_f.g"], p["ln_f.b"])
+    return hdn @ p["w_out"], kv
+
+
+# ---------------------------------------------------------------------------
+# DistilBERT-lite classifier (the Pick router's semantic path)
+# ---------------------------------------------------------------------------
+
+
+def classifier_probs(cfg: ModelConfig, flat_params: list[jnp.ndarray],
+                     tokens: jnp.ndarray,
+                     use_kernels: bool = True) -> jnp.ndarray:
+    """Complexity probabilities (paper Eq. 3/4).
+
+    tokens: [B, S] i32 ([CLS] ... [SEP] PAD...).  Returns [B, 3].
+    Lengths are derived from the PAD mask inside the graph so the Rust
+    caller only ships token ids.
+    """
+    p = as_dict(cfg, flat_params)
+    ln, _, _, _ = _ops(use_kernels)
+    b, s = tokens.shape
+    lengths = jnp.sum((tokens != tok.PAD).astype(jnp.int32), axis=1)
+    hdn = p["embed"][tokens] + p["pos_embed"][:s][None]
+    for i in range(cfg.n_layers):
+        hdn, _, _ = _block_full(cfg, p, i, hdn, lengths, False, use_kernels)
+    flat = hdn.reshape(b * s, cfg.d_model)
+    hdn = ln(flat, p["ln_f.g"], p["ln_f.b"]).reshape(b, s, cfg.d_model)
+    h_cls = hdn[:, 0]                                        # [CLS]
+    if use_kernels:
+        return classifier_head(h_cls, p["head.w"], p["head.b"])
+    return ref.classifier_head(h_cls, p["head.w"], p["head.b"])

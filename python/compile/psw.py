@@ -1,0 +1,68 @@
+"""PSW — the Pick-and-Spin weight container (build-time writer).
+
+A deliberately trivial binary tensor format shared with the Rust loader
+(``rust/src/runtime/weights.rs``); we cannot ship safetensors/npz offline
+and HLO-text constants would bloat the interchange files, so weights are
+runtime inputs stored here.
+
+Layout (little-endian):
+    magic   b"PSW1"
+    u32     tensor count
+    repeat:
+        u16     name length, then name (utf-8)
+        u8      dtype (0 = f32, 1 = i32)
+        u8      ndim
+        u32[n]  dims
+        bytes   row-major data
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"PSW1"
+DTYPE_F32 = 0
+DTYPE_I32 = 1
+
+
+def write(path: str, tensors: list[tuple[str, np.ndarray]]) -> int:
+    """Write named tensors; returns total bytes."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype == np.float32:
+                dt = DTYPE_F32
+            elif arr.dtype == np.int32:
+                dt = DTYPE_I32
+            else:
+                raise ValueError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", dt, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+        return f.tell()
+
+
+def read(path: str) -> list[tuple[str, np.ndarray]]:
+    """Read back (for round-trip tests)."""
+    out: list[tuple[str, np.ndarray]] = []
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad magic"
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode("utf-8")
+            dt, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            np_dt = np.float32 if dt == DTYPE_F32 else np.int32
+            n = int(np.prod(dims)) if dims else 1
+            data = np.frombuffer(f.read(4 * n), np_dt).reshape(dims)
+            out.append((name, data))
+    return out

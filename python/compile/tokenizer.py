@@ -1,0 +1,89 @@
+"""Hashed-wordpiece tokenizer shared (bit-for-bit) between Python and Rust.
+
+The serving path never runs Python, so the Rust coordinator re-implements
+exactly this algorithm (``rust/src/tokenizer``).  Parity is enforced by
+``aot.py`` emitting test vectors (``artifacts/tokenizer_parity.json``) that
+both the pytest suite and the cargo test suite check.
+
+Algorithm
+---------
+1. Lowercase the input.
+2. Split into maximal runs of ASCII alphanumeric characters (everything
+   else is a separator and is dropped).  Non-ASCII bytes are separators.
+3. Each word hashes to an id via FNV-1a 64 over its UTF-8 bytes:
+       id = RESERVED + (fnv1a64(word) % (VOCAB - RESERVED))
+4. A sequence is ``[CLS] w_1 ... w_n [SEP]`` truncated to ``seq_len`` and
+   right-padded with PAD.
+
+The hash vocabulary avoids shipping a learned vocab file while remaining
+deterministic and language-agnostic; collisions act like subword sharing.
+"""
+
+from __future__ import annotations
+
+VOCAB: int = 4096
+PAD: int = 0
+CLS: int = 1
+SEP: int = 2
+UNK: int = 3  # reserved, currently unused (hash never emits it)
+RESERVED: int = 4
+
+# Classifier input length; LM contexts use SEQ_PREFILL from model.py.
+SEQ_CLS: int = 48
+
+_FNV_OFFSET = 0xCBF29CE484222325
+_FNV_PRIME = 0x100000001B3
+_MASK64 = 0xFFFFFFFFFFFFFFFF
+
+
+def fnv1a64(data: bytes) -> int:
+    """FNV-1a 64-bit hash (wrapping multiply)."""
+    h = _FNV_OFFSET
+    for b in data:
+        h ^= b
+        h = (h * _FNV_PRIME) & _MASK64
+    return h
+
+
+def split_words(text: str) -> list[str]:
+    """Lowercase and split into maximal ASCII-alphanumeric runs."""
+    out: list[str] = []
+    cur: list[str] = []
+    for ch in text.lower():
+        if ("a" <= ch <= "z") or ("0" <= ch <= "9"):
+            cur.append(ch)
+        elif cur:
+            out.append("".join(cur))
+            cur = []
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
+def word_id(word: str) -> int:
+    return RESERVED + fnv1a64(word.encode("utf-8")) % (VOCAB - RESERVED)
+
+
+def encode(text: str, seq_len: int = SEQ_CLS) -> list[int]:
+    """Encode to exactly ``seq_len`` ids: [CLS] words... [SEP] PAD..."""
+    ids = [CLS]
+    for w in split_words(text)[: seq_len - 2]:
+        ids.append(word_id(w))
+    ids.append(SEP)
+    ids.extend([PAD] * (seq_len - len(ids)))
+    return ids[:seq_len]
+
+
+def encode_words(text: str, max_words: int) -> list[int]:
+    """Encode without CLS/SEP framing (LM input): word ids, PAD-padded."""
+    ids = [word_id(w) for w in split_words(text)[:max_words]]
+    ids.extend([PAD] * (max_words - len(ids)))
+    return ids
+
+
+def valid_len(ids: list[int]) -> int:
+    """Number of non-PAD positions (PAD only appears as right padding)."""
+    n = len(ids)
+    while n > 0 and ids[n - 1] == PAD:
+        n -= 1
+    return n

@@ -1,0 +1,99 @@
+"""AOT artifact contract: manifest consistency, psw round-trip, HLO text."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import psw
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_all_modules_present(manifest):
+    names = {m["name"] for m in manifest["modules"]}
+    for tier in ("small", "medium", "large"):
+        assert f"lm_{tier}_prefill_b1" in names
+        assert f"lm_{tier}_decode_b1" in names
+        assert f"lm_{tier}_decode_b8" in names
+    assert "classifier_b1" in names
+
+
+def test_hlo_files_exist_and_are_text(manifest):
+    for m in manifest["modules"]:
+        path = os.path.join(ARTIFACTS, m["hlo"])
+        assert os.path.exists(path), m["hlo"]
+        with open(path) as f:
+            head = f.read(200)
+        assert "HloModule" in head, f"{m['hlo']} is not HLO text"
+
+
+def test_psw_roundtrip(manifest):
+    for model, info in manifest["models"].items():
+        path = os.path.join(ARTIFACTS, info["weights"])
+        tensors = psw.read(path)
+        total = sum(int(np.prod(a.shape)) if a.shape else 1 for _, a in tensors)
+        assert total == info["param_count"]
+        # order must match the canonical param order
+        cfg_d = dict(info["config"])
+        cfg = M.ModelConfig(**cfg_d)
+        assert [n for n, _ in tensors] == M.param_names(cfg)
+
+
+def test_input_order_weights_first(manifest):
+    for m in manifest["modules"]:
+        kinds = [i["kind"] for i in m["inputs"]]
+        n_w = sum(1 for k in kinds if k == "weight")
+        assert all(k == "weight" for k in kinds[:n_w])
+        assert all(k != "weight" for k in kinds[n_w:])
+
+
+def test_decode_io_shapes_consistent(manifest):
+    for m in manifest["modules"]:
+        if m["kind"] != "decode":
+            continue
+        kv_in = [i for i in m["inputs"] if i["kind"] == "kv"][0]
+        kv_out = [o for o in m["outputs"] if o["kind"] == "kv"][0]
+        assert kv_in["shape"] == kv_out["shape"]
+        b = m["batch"]
+        toks = [i for i in m["inputs"] if i["kind"] == "tokens"][0]
+        assert toks["shape"] == [b]
+        assert kv_in["shape"][2] == b
+
+
+def test_classifier_accuracy_recorded(manifest):
+    acc = manifest["models"]["classifier"]["val_accuracy"]
+    assert acc >= 0.95  # the paper reports 96.8%
+
+
+def test_trained_classifier_separates_complexity():
+    """Weights from artifacts must route obvious prompts correctly."""
+    import jax.numpy as jnp
+
+    from compile import tokenizer as tok
+
+    tensors = psw.read(os.path.join(ARTIFACTS, "classifier.psw"))
+    params = [jnp.asarray(a) for _, a in tensors]
+    cases = [
+        ("what is 7 plus 3?", 0),
+        ("prove that the sequence defined by f(n) = 3n + 7 is monotonic "
+         "for all natural numbers n.", 2),
+    ]
+    ids = jnp.asarray([tok.encode(t) for t, _ in cases], jnp.int32)
+    probs = M.classifier_probs(M.CLASSIFIER, params, ids, use_kernels=True)
+    preds = np.argmax(np.asarray(probs), axis=1)
+    assert preds[0] == 0
+    assert preds[1] == 2

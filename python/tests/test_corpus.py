@@ -1,0 +1,56 @@
+"""Corpus generator: determinism, counts, class balance, template fidelity."""
+
+from collections import Counter
+
+from compile import corpus
+from compile import templates as T
+
+
+def test_counts_match_table1():
+    ps = corpus.generate()
+    by_bench = Counter(p.benchmark for p in ps)
+    for b in T.BENCHMARKS:
+        assert by_bench[b] == T.unique_prompts(b)
+    # Paper: 31,019 unique prompts (Table 1 runs / 5 profiles)
+    assert len(ps) == sum(T.unique_prompts(b) for b in T.BENCHMARKS)
+
+
+def test_deterministic():
+    a = corpus.generate()
+    b = corpus.generate()
+    assert [(p.text, p.complexity) for p in a[:500]] == [
+        (p.text, p.complexity) for p in b[:500]
+    ]
+
+
+def test_no_unfilled_slots():
+    for p in corpus.generate()[:2000]:
+        assert "{" not in p.text and "}" not in p.text
+
+
+def test_all_classes_present_per_split():
+    train, val = corpus.train_val_split(corpus.generate())
+    for split in (train, val):
+        classes = {p.complexity for p in split}
+        assert classes == {0, 1, 2}
+
+
+def test_split_disjoint_and_complete():
+    ps = corpus.generate()
+    train, val = corpus.train_val_split(ps)
+    assert len(train) + len(val) == len(ps)
+    assert len(val) == int(len(ps) * 0.1)
+
+
+def test_splitmix_matches_reference():
+    # First outputs of SplitMix64(0) — cross-checked with the Rust impl.
+    r = corpus.SplitMix64(0)
+    assert r.next_u64() == 0xE220A8397B1DCDAF
+    assert r.next_u64() == 0x6E789E6AA1B965F4
+    assert r.next_u64() == 0x06C45D188009454F
+
+
+def test_table1_internal_note():
+    # The paper's Table 1 total (163,720) != column sum; we reproduce rows.
+    rows = sum(T.TABLE1[b]["runs"] for b in T.BENCHMARKS)
+    assert rows == 155_095

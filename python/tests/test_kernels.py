@@ -1,0 +1,231 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (and the f32 dtype the AOT path uses) per the
+repro contract; tolerances are tight because interpret-mode Pallas and
+jnp share the same scalar semantics.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    attention_decode,
+    attention_encoder,
+    attention_prefill,
+    classifier_head,
+    ffn,
+    layernorm,
+    ref,
+)
+
+settings.register_profile("kernels", deadline=None, max_examples=20)
+settings.load_profile("kernels")
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale
+
+
+def assert_close(a, b, rtol=1e-4, atol=1e-5):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------- layernorm
+
+
+@given(n=st.integers(1, 96), d=st.sampled_from([8, 64, 96, 128, 256]),
+       seed=st.integers(0, 2**31))
+def test_layernorm_matches_ref(n, d, seed):
+    x = rand(seed, (n, d))
+    g = rand(seed + 1, (d,), 0.5) + 1.0
+    b = rand(seed + 2, (d,), 0.1)
+    assert_close(layernorm(x, g, b), ref.layernorm(x, g, b))
+
+
+def test_layernorm_normalizes():
+    x = rand(0, (32, 64), 5.0) + 3.0
+    y = np.asarray(layernorm(x, jnp.ones(64), jnp.zeros(64)))
+    assert np.allclose(y.mean(-1), 0.0, atol=1e-4)
+    assert np.allclose(y.std(-1), 1.0, atol=1e-2)
+
+
+def test_layernorm_odd_rows_falls_back_to_divisor_block():
+    # 17 rows: block search must find a divisor (here 17 itself → 1 step)
+    x = rand(3, (17, 64))
+    assert_close(layernorm(x, jnp.ones(64), jnp.zeros(64)),
+                 ref.layernorm(x, jnp.ones(64), jnp.zeros(64)))
+
+
+# ---------------------------------------------------------------------- ffn
+
+
+@given(n=st.sampled_from([1, 4, 32, 64]),
+       d=st.sampled_from([32, 64, 128]),
+       f=st.sampled_from([64, 256, 512]),
+       seed=st.integers(0, 2**31))
+def test_ffn_matches_ref(n, d, f, seed):
+    x = rand(seed, (n, d))
+    w1 = rand(seed + 1, (d, f), 0.05)
+    b1 = rand(seed + 2, (f,), 0.01)
+    w2 = rand(seed + 3, (f, d), 0.05)
+    b2 = rand(seed + 4, (d,), 0.01)
+    assert_close(ffn(x, w1, b1, w2, b2), ref.ffn(x, w1, b1, w2, b2),
+                 rtol=1e-4, atol=1e-4)
+
+
+def test_gelu_reference_values():
+    # GeLU(0)=0, GeLU(large)≈large, GeLU(-large)≈0
+    x = jnp.array([[0.0, 10.0, -10.0, 1.0]])
+    w1 = jnp.eye(4)
+    w2 = jnp.eye(4)
+    z = np.asarray(ffn(x, w1, jnp.zeros(4), w2, jnp.zeros(4)))
+    assert abs(z[0, 0]) < 1e-6
+    assert abs(z[0, 1] - 10.0) < 1e-3
+    assert abs(z[0, 2]) < 1e-3
+    assert abs(z[0, 3] - 0.8412) < 1e-3
+
+
+# ---------------------------------------------------------- prefill attention
+
+
+@given(b=st.sampled_from([1, 2, 4]), h=st.sampled_from([1, 2, 4]),
+       s=st.sampled_from([8, 16, 64]), dh=st.sampled_from([8, 24, 32]),
+       seed=st.integers(0, 2**31))
+def test_attention_prefill_matches_ref(b, h, s, dh, seed):
+    q = rand(seed, (b, h, s, dh))
+    k = rand(seed + 1, (b, h, s, dh))
+    v = rand(seed + 2, (b, h, s, dh))
+    lengths = jnp.asarray(
+        np.random.RandomState(seed % 2**31).randint(1, s + 1, size=b),
+        jnp.int32)
+    got = attention_prefill(q, k, v, lengths)
+    want = ref.attention_prefill(q, k, v, lengths)
+    # only positions < length are meaningful per example
+    for i in range(b):
+        L = int(lengths[i])
+        assert_close(got[i, :, :L], want[i, :, :L])
+
+
+def test_attention_prefill_is_causal():
+    # Changing K/V at position j must not affect outputs at positions < j.
+    b, h, s, dh = 1, 2, 16, 8
+    q = rand(0, (b, h, s, dh))
+    k = rand(1, (b, h, s, dh))
+    v = rand(2, (b, h, s, dh))
+    L = jnp.array([s], jnp.int32)
+    base = np.asarray(attention_prefill(q, k, v, L))
+    k2 = k.at[:, :, 10].set(99.0)
+    v2 = v.at[:, :, 10].set(-99.0)
+    pert = np.asarray(attention_prefill(q, k2, v2, L))
+    assert np.allclose(base[:, :, :10], pert[:, :, :10], atol=1e-6)
+    assert not np.allclose(base[:, :, 10:], pert[:, :, 10:], atol=1e-3)
+
+
+def test_attention_encoder_sees_future():
+    b, h, s, dh = 1, 1, 8, 8
+    q = rand(0, (b, h, s, dh))
+    k = rand(1, (b, h, s, dh))
+    v = rand(2, (b, h, s, dh))
+    L = jnp.array([s], jnp.int32)
+    base = np.asarray(attention_encoder(q, k, v, L))
+    v2 = v.at[:, :, 7].set(50.0)
+    pert = np.asarray(attention_encoder(q, k, v2, L))
+    # position 0 must change: encoder attention is bidirectional
+    assert not np.allclose(base[:, :, 0], pert[:, :, 0], atol=1e-3)
+    assert_close(base, ref.attention_encoder(q, k, v, L))
+
+
+def test_attention_padding_ignored():
+    # K/V beyond each example's length must not influence the output.
+    b, h, s, dh = 2, 2, 16, 8
+    q = rand(0, (b, h, s, dh))
+    k = rand(1, (b, h, s, dh))
+    v = rand(2, (b, h, s, dh))
+    lengths = jnp.array([5, 9], jnp.int32)
+    base = np.asarray(attention_prefill(q, k, v, lengths))
+    k2 = k.at[0, :, 5:].set(77.0).at[1, :, 9:].set(77.0)
+    v2 = v.at[0, :, 5:].set(-77.0).at[1, :, 9:].set(-77.0)
+    pert = np.asarray(attention_prefill(q, k2, v2, lengths))
+    assert np.allclose(base[0, :, :5], pert[0, :, :5], atol=1e-6)
+    assert np.allclose(base[1, :, :9], pert[1, :, :9], atol=1e-6)
+
+
+# ----------------------------------------------------------- decode attention
+
+
+@given(b=st.sampled_from([1, 2, 8]), h=st.sampled_from([1, 4]),
+       smax=st.sampled_from([16, 96]), dh=st.sampled_from([8, 32]),
+       seed=st.integers(0, 2**31))
+def test_attention_decode_matches_ref(b, h, smax, dh, seed):
+    q = rand(seed, (b, h, dh))
+    kc = rand(seed + 1, (b, h, smax, dh))
+    vc = rand(seed + 2, (b, h, smax, dh))
+    pos = jnp.asarray(
+        np.random.RandomState(seed % 2**31).randint(0, smax, size=b),
+        jnp.int32)
+    assert_close(attention_decode(q, kc, vc, pos),
+                 ref.attention_decode(q, kc, vc, pos))
+
+
+def test_attention_decode_ignores_future_cache():
+    b, h, smax, dh = 1, 2, 32, 8
+    q = rand(0, (b, h, dh))
+    kc = rand(1, (b, h, smax, dh))
+    vc = rand(2, (b, h, smax, dh))
+    pos = jnp.array([10], jnp.int32)
+    base = np.asarray(attention_decode(q, kc, vc, pos))
+    kc2 = kc.at[:, :, 11:].set(123.0)
+    vc2 = vc.at[:, :, 11:].set(-123.0)
+    pert = np.asarray(attention_decode(q, kc2, vc2, pos))
+    assert np.allclose(base, pert, atol=1e-6)
+
+
+def test_attention_decode_per_sequence_positions():
+    # Two sequences at different depths in one launch (continuous batching).
+    b, h, smax, dh = 2, 1, 16, 8
+    q = rand(0, (b, h, dh))
+    kc = rand(1, (b, h, smax, dh))
+    vc = rand(2, (b, h, smax, dh))
+    pos = jnp.array([3, 12], jnp.int32)
+    got = np.asarray(attention_decode(q, kc, vc, pos))
+    for i in range(b):
+        solo = np.asarray(attention_decode(
+            q[i : i + 1], kc[i : i + 1], vc[i : i + 1], pos[i : i + 1]))
+        assert np.allclose(got[i : i + 1], solo, atol=1e-6)
+
+
+# ------------------------------------------------------------ classifier head
+
+
+@given(b=st.sampled_from([1, 8, 32]), d=st.sampled_from([16, 96]),
+       c=st.sampled_from([2, 3, 5]), seed=st.integers(0, 2**31))
+def test_classifier_head_matches_ref(b, d, c, seed):
+    h = rand(seed, (b, d))
+    w = rand(seed + 1, (d, c))
+    bias = rand(seed + 2, (c,), 0.1)
+    got = classifier_head(h, w, bias)
+    assert_close(got, ref.classifier_head(h, w, bias), rtol=1e-5, atol=1e-6)
+    probs = np.asarray(got)
+    assert np.allclose(probs.sum(-1), 1.0, atol=1e-5)
+    assert (probs >= 0).all()
+
+
+# ------------------------------------------------------------- VMEM contract
+
+
+def test_vmem_budget_enforced():
+    from compile.kernels.common import assert_vmem_ok
+
+    with pytest.raises(ValueError):
+        assert_vmem_ok("huge", [(4096, 4096)])  # 64 MiB > 16 MiB budget
+
+
+def test_mxu_utilization_model():
+    from compile.kernels.common import mxu_utilization
+
+    assert mxu_utilization(128, 128, 128) == 1.0
+    assert mxu_utilization(64, 128, 128) == 0.5
+    assert 0 < mxu_utilization(24, 24, 96) < 0.1

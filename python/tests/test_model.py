@@ -1,0 +1,191 @@
+"""L2 invariants: kernel/ref agreement, KV-cache equivalence, causality."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import tokenizer as tok
+
+
+def small_cfg():
+    # An extra-small config so tests run fast; same code path as the tiers.
+    return M.ModelConfig("test", 256, 32, 2, 2, 16, 64, 16, 24)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return small_cfg()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return M.init_params(cfg, 7)
+
+
+def toks(cfg, lengths, seed=0):
+    rs = np.random.RandomState(seed)
+    b = len(lengths)
+    t = np.zeros((b, cfg.seq_prefill), np.int32)
+    for i, L in enumerate(lengths):
+        t[i, :L] = rs.randint(4, cfg.vocab, size=L)
+    return jnp.asarray(t), jnp.asarray(lengths, jnp.int32)
+
+
+class TestParamPlumbing:
+    def test_param_names_match_shapes(self, cfg):
+        names = M.param_names(cfg)
+        shapes = M.param_shapes(cfg)
+        assert set(names) == set(shapes)
+        assert len(names) == len(set(names))
+
+    def test_param_count_formula(self, cfg, params):
+        assert sum(int(p.size) for p in params) == cfg.param_count()
+
+    def test_classifier_param_count(self):
+        c = M.CLASSIFIER
+        ps = M.init_params(c, 0)
+        assert sum(int(p.size) for p in ps) == c.param_count()
+
+    def test_tier_ordering(self):
+        sizes = [M.TIERS[t].param_count() for t in ("small", "medium", "large")]
+        assert sizes[0] < sizes[1] < sizes[2]
+
+
+class TestPrefill:
+    def test_kernel_matches_ref(self, cfg, params):
+        t, L = toks(cfg, [10, 16])
+        lk, kvk = M.lm_prefill(cfg, params, t, L, use_kernels=True)
+        lr, kvr = M.lm_prefill(cfg, params, t, L, use_kernels=False)
+        np.testing.assert_allclose(lk, lr, rtol=1e-4, atol=1e-4)
+        # KV only meaningful for positions < length
+        for i, n in enumerate([10, 16]):
+            np.testing.assert_allclose(
+                np.asarray(kvk)[:, :, i, :, :n],
+                np.asarray(kvr)[:, :, i, :, :n], rtol=1e-4, atol=1e-4)
+
+    def test_logits_at_last_valid_position(self, cfg, params):
+        # Changing padding tokens must not change the last-position logits.
+        t, L = toks(cfg, [8])
+        l1, _ = M.lm_prefill(cfg, params, t, L)
+        t2 = t.at[0, 12:].set(99)
+        l2, _ = M.lm_prefill(cfg, params, t2, L)
+        np.testing.assert_allclose(l1, l2, atol=1e-5)
+
+    def test_batch_matches_solo(self, cfg, params):
+        t, L = toks(cfg, [9, 13], seed=3)
+        lb, kvb = M.lm_prefill(cfg, params, t, L)
+        for i in range(2):
+            ls, _ = M.lm_prefill(cfg, params, t[i : i + 1], L[i : i + 1])
+            np.testing.assert_allclose(lb[i : i + 1], ls, rtol=2e-4, atol=1e-4)
+
+
+class TestDecodeKVEquivalence:
+    def test_decode_continues_prefill(self, cfg, params):
+        """Prefill(n) + decode steps == prefill(n+k): the KV-cache contract
+        the Rust serving loop depends on."""
+        full_len = 12
+        split = 8
+        rs = np.random.RandomState(5)
+        seq = rs.randint(4, cfg.vocab, size=full_len).astype(np.int32)
+
+        # Ground truth: prefill over the first n+k tokens directly.
+        t_full = np.zeros((1, cfg.seq_prefill), np.int32)
+        t_full[0, :full_len] = seq
+        logits_full, _ = M.lm_prefill(
+            cfg, params, jnp.asarray(t_full),
+            jnp.asarray([full_len], jnp.int32))
+
+        # Serving path: prefill the prompt, then feed tokens one by one.
+        t_pre = np.zeros((1, cfg.seq_prefill), np.int32)
+        t_pre[0, :split] = seq[:split]
+        logits, kv = M.lm_prefill(
+            cfg, params, jnp.asarray(t_pre), jnp.asarray([split], jnp.int32))
+        for i in range(split, full_len):
+            logits, kv = M.lm_decode(
+                cfg, params, kv,
+                jnp.asarray([seq[i]], jnp.int32),
+                jnp.asarray([i], jnp.int32))
+        np.testing.assert_allclose(logits, logits_full, rtol=2e-3, atol=2e-3)
+
+    def test_decode_kernel_matches_ref(self, cfg, params):
+        t, L = toks(cfg, [6, 11], seed=9)
+        _, kv = M.lm_prefill(cfg, params, t, L)
+        nt = jnp.asarray([42, 99], jnp.int32)
+        lk, kvk = M.lm_decode(cfg, params, kv, nt, L, use_kernels=True)
+        lr, kvr = M.lm_decode(cfg, params, kv, nt, L, use_kernels=False)
+        np.testing.assert_allclose(lk, lr, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(kvk, kvr, rtol=1e-4, atol=1e-4)
+
+    def test_decode_batch_independent_positions(self, cfg, params):
+        """Sequences at different depths decode independently — the
+        continuous-batching invariant."""
+        t, L = toks(cfg, [5, 14], seed=11)
+        _, kv = M.lm_prefill(cfg, params, t, L)
+        nt = jnp.asarray([7, 8], jnp.int32)
+        lb, _ = M.lm_decode(cfg, params, kv, nt, L)
+        for i in range(2):
+            ti, Li = toks(cfg, [[5, 14][i]], seed=11)
+            # regenerate the same tokens for example i
+            t_solo = t[i : i + 1]
+            L_solo = L[i : i + 1]
+            _, kv_solo = M.lm_prefill(cfg, params, t_solo, L_solo)
+            ls, _ = M.lm_decode(cfg, params, kv_solo, nt[i : i + 1], L_solo)
+            np.testing.assert_allclose(lb[i : i + 1], ls, rtol=2e-4, atol=2e-4)
+
+    def test_greedy_generation_deterministic(self, cfg, params):
+        t, L = toks(cfg, [10], seed=13)
+        outs = []
+        for _ in range(2):
+            logits, kv = M.lm_prefill(cfg, params, t, L)
+            cur = int(jnp.argmax(logits[0]))
+            gen = [cur]
+            pos = 10
+            for _ in range(5):
+                logits, kv = M.lm_decode(
+                    cfg, params, kv, jnp.asarray([cur], jnp.int32),
+                    jnp.asarray([pos], jnp.int32))
+                cur = int(jnp.argmax(logits[0]))
+                gen.append(cur)
+                pos += 1
+            outs.append(gen)
+        assert outs[0] == outs[1]
+        assert all(0 <= g < cfg.vocab for g in outs[0])
+
+
+class TestClassifier:
+    def test_kernel_matches_ref_on_real_prompts(self):
+        cfg = M.CLASSIFIER
+        ps = M.init_params(cfg, 3)
+        texts = ["what is 2 plus 2", "prove that f is monotonic",
+                 "write a python function that reverses a list"]
+        ids = jnp.asarray([tok.encode(t) for t in texts], jnp.int32)
+        # batch of 3 → pad to 8 like the serving path does
+        ids = jnp.pad(ids, ((0, 5), (0, 0)))
+        pk = M.classifier_probs(cfg, ps, ids, use_kernels=True)
+        pr = M.classifier_probs(cfg, ps, ids, use_kernels=False)
+        np.testing.assert_allclose(pk, pr, rtol=1e-4, atol=1e-5)
+
+    def test_probs_normalized(self):
+        cfg = M.CLASSIFIER
+        ps = M.init_params(cfg, 4)
+        ids = jnp.asarray([tok.encode("hello world")], jnp.int32)
+        p = np.asarray(M.classifier_probs(cfg, ps, ids))
+        assert p.shape == (1, 3)
+        assert abs(p.sum() - 1.0) < 1e-5
+
+    def test_padding_invariance(self):
+        # Two encodings of the same text with different trailing PAD counts
+        # must classify identically (lengths derive from the PAD mask).
+        cfg = M.CLASSIFIER
+        ps = M.init_params(cfg, 5)
+        ids1 = tok.encode("explain why the sky is blue", tok.SEQ_CLS)
+        x1 = jnp.asarray([ids1], jnp.int32)
+        p1 = M.classifier_probs(cfg, ps, x1)
+        # identical content; PAD region can hold anything the mask excludes?
+        # No — PAD must be PAD; instead check batch with another row.
+        x2 = jnp.asarray([ids1, tok.encode("something else entirely")],
+                         jnp.int32)
+        p2 = M.classifier_probs(cfg, ps, x2)
+        np.testing.assert_allclose(p1[0], p2[0], rtol=1e-4, atol=1e-5)

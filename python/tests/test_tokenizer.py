@@ -1,0 +1,88 @@
+"""Tokenizer unit tests + the cross-language parity contract."""
+
+import json
+import os
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import tokenizer as tok
+
+settings.register_profile("tok", deadline=None, max_examples=100)
+settings.load_profile("tok")
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_fnv_known_vectors():
+    # Standard FNV-1a 64 test vectors
+    assert tok.fnv1a64(b"") == 0xCBF29CE484222325
+    assert tok.fnv1a64(b"a") == 0xAF63DC4C8601EC8C
+    assert tok.fnv1a64(b"foobar") == 0x85944171F73967E8
+
+
+def test_split_words():
+    assert tok.split_words("Hello, World!") == ["hello", "world"]
+    assert tok.split_words("f(n) = 3n + 7") == ["f", "n", "3n", "7"]
+    assert tok.split_words("") == []
+    assert tok.split_words("  ... !!! ") == []
+    assert tok.split_words("Ünïcödé") == ["n", "c", "d"]  # non-ascii splits
+
+
+def test_encode_framing():
+    ids = tok.encode("hello world", 8)
+    assert ids[0] == tok.CLS
+    assert ids[3] == tok.SEP
+    assert ids[4:] == [tok.PAD] * 4
+    assert len(ids) == 8
+
+
+def test_encode_truncation():
+    ids = tok.encode(" ".join(["w"] * 100), 16)
+    assert len(ids) == 16
+    assert ids[0] == tok.CLS
+    assert tok.PAD not in ids  # full
+
+
+def test_empty_prompt():
+    ids = tok.encode("", 8)
+    assert ids == [tok.CLS, tok.SEP] + [tok.PAD] * 6
+
+
+@given(st.text(max_size=300))
+def test_encode_always_well_formed(text):
+    ids = tok.encode(text, tok.SEQ_CLS)
+    assert len(ids) == tok.SEQ_CLS
+    assert ids[0] == tok.CLS
+    assert all(0 <= i < tok.VOCAB for i in ids)
+    # PAD appears only as a suffix
+    n = tok.valid_len(ids)
+    assert all(i != tok.PAD for i in ids[:n])
+    assert all(i == tok.PAD for i in ids[n:])
+
+
+@given(st.text(max_size=200))
+def test_ids_never_reserved_except_framing(text):
+    ids = tok.encode(text, tok.SEQ_CLS)
+    body = [i for i in ids[1:] if i not in (tok.PAD, tok.SEP)]
+    assert all(i >= tok.RESERVED for i in body)
+
+
+@given(st.text(max_size=200))
+def test_deterministic(text):
+    assert tok.encode(text) == tok.encode(text)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "tokenizer_parity.json")),
+    reason="artifacts not built",
+)
+def test_parity_vectors_match_artifacts():
+    """The vectors cargo test checks must match what this code produces."""
+    with open(os.path.join(ARTIFACTS, "tokenizer_parity.json")) as f:
+        vec = json.load(f)
+    assert vec["vocab"] == tok.VOCAB
+    for case in vec["cases"]:
+        assert tok.encode(case["text"], tok.SEQ_CLS) == case["ids"]
+    for w, i in vec["word_ids"].items():
+        assert tok.word_id(w) == i

@@ -1,0 +1,137 @@
+//! Hot-path microbenchmarks — the §Perf numbers for L3 (and the live
+//! PJRT path when artifacts exist).
+//!
+//! Targets (DESIGN.md §Perf): keyword routing < 50 µs, matrix selection
+//! < 10 µs, simulator ≥ 1M events/s equivalent, tokenizer > 1M words/s.
+
+mod common;
+
+use common::{library, measure, selected, simulate, routed};
+use pick_and_spin::baselines::SelectionPolicy;
+use pick_and_spin::config::{Profile, RouterMode};
+use pick_and_spin::models::zoo;
+use pick_and_spin::orchestrator::select;
+use pick_and_spin::registry::Registry;
+use pick_and_spin::router::keyword::KeywordRouter;
+use pick_and_spin::router::Classification;
+use pick_and_spin::scoring::Weights;
+use pick_and_spin::tokenizer;
+use pick_and_spin::workload::Generator;
+
+fn main() {
+    println!("# hot-path microbenchmarks\n");
+    let lib = library();
+    let mut gen = Generator::new(&lib, 3);
+    let prompts: Vec<String> =
+        (0..512).map(|_| gen.prompt_mixed().text).collect();
+
+    if selected("router") {
+        let mut i = 0;
+        let m = measure("keyword route", 200_000, || {
+            let _ = KeywordRouter::classify(&prompts[i % prompts.len()]);
+            i += 1;
+        });
+        println!("{}", m.report());
+        assert!(m.per_iter_us() < 50.0, "keyword routing too slow");
+    }
+
+    if selected("tokenizer") {
+        let mut i = 0;
+        let m = measure("tokenizer encode (seq 48)", 200_000, || {
+            let _ = tokenizer::encode(&prompts[i % prompts.len()], 48);
+            i += 1;
+        });
+        println!("{}", m.report());
+    }
+
+    if selected("selection") {
+        let mut registry = Registry::new(&zoo(), 300.0);
+        for s in &mut registry.services {
+            s.ready_replicas = 1;
+        }
+        let w = Weights::from_profile(&Profile::BALANCED);
+        let class = Classification {
+            complexity: 1,
+            confidence: 0.9,
+            mode: RouterMode::Hybrid,
+            overhead_s: 0.0,
+        };
+        let m = measure("matrix selection (Alg. 2, 12 cells)", 500_000, || {
+            let _ = select(&registry, w, &class, 50.0, 80.0, |_| 0.0);
+        });
+        println!("{}", m.report());
+        assert!(m.per_iter_us() < 10.0, "selection too slow");
+    }
+
+    if selected("sim") {
+        let sc = routed(20_000, RouterMode::Keyword, SelectionPolicy::MultiObjective);
+        let t0 = std::time::Instant::now();
+        let rep = simulate(&lib, &sc);
+        let dt = t0.elapsed().as_secs_f64();
+        // Each request ≈ 4 events (arrival, start, finish, control share).
+        println!(
+            "{:<44} {:>10} reqs   {:>12.0} req/s     ({:.2}s wall)",
+            "simulator end-to-end", rep.records.len(),
+            rep.records.len() as f64 / dt, dt
+        );
+    }
+
+    if selected("kv") {
+        use pick_and_spin::backend::kv_cache::{KvBlockManager, SeqId};
+        let m = measure("kv admit+release (reservation)", 500_000, || {
+            let mut kv = KvBlockManager::new(64, 16);
+            kv.admit(SeqId(1), 40, 24).unwrap();
+            kv.release(SeqId(1));
+        });
+        println!("{}", m.report());
+    }
+
+    // Live PJRT path (needs artifacts).
+    let artifacts = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if std::path::Path::new(&format!("{artifacts}/manifest.json")).exists() {
+        use pick_and_spin::router::Classifier;
+        use pick_and_spin::runtime::Runtime;
+        let mut rt = Runtime::load(artifacts).expect("runtime");
+
+        if selected("classifier") {
+            let mut cls = rt.classifier_engine().expect("classifier");
+            let mut i = 0;
+            let m = measure("live semantic classify (PJRT)", 2_000, || {
+                let _ = cls.probs(&prompts[i % prompts.len()]).unwrap();
+                i += 1;
+            });
+            println!("{}", m.report());
+            assert!(m.per_iter_us() < 5_000.0, "semantic classify too slow");
+        }
+
+        if selected("decode") {
+            for tier in ["small", "medium", "large"] {
+                let lm = rt.lm_engine(tier, &[1, 4, 8]).expect("engine");
+                lm.generate("warm up the engine", 4).unwrap();
+                let m = measure(&format!("live decode step b=1 ({tier})"), 64, || {
+                    let _ = lm.generate("a prompt of medium length for decoding", 8);
+                });
+                // The measured closure runs prefill + 7 decode steps.
+                println!(
+                    "{}   (≈{:.2} ms/token)",
+                    m.report(),
+                    m.per_iter_us() / 8.0 / 1000.0
+                );
+                // Batched throughput:
+                let p: Vec<&str> = (0..8).map(|_| "a medium length batch prompt").collect();
+                let t0 = std::time::Instant::now();
+                let gens = lm.generate_batch(&p, 8).unwrap();
+                let dt = t0.elapsed().as_secs_f64();
+                let toks: usize = gens.iter().map(|g| g.tokens.len()).sum();
+                println!(
+                    "{:<44} {:>10} toks   {:>12.0} tok/s     (batch 8, {tier})",
+                    "live batched decode (PJRT)", toks, toks as f64 / dt
+                );
+            }
+        }
+    } else {
+        println!("(live PJRT benches skipped: artifacts not built)");
+    }
+
+    println!("\ndone.");
+}

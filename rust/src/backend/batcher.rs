@@ -1,0 +1,169 @@
+//! Dynamic batcher — forms decode/prefill batches for the compiled
+//! batch sizes.
+//!
+//! The AOT pipeline exports each module at fixed batch sizes (decode at
+//! 1/4/8, prefill at 1/4); the batcher packs waiting work into the
+//! largest compiled size that the queue can fill, padding the remainder
+//! (padding rows are masked out downstream). Backends differ in policy:
+//! vLLM-like batches eagerly at max size (throughput), TRT-like caps
+//! batch size low (latency), TGI-like batches at moderate size with a
+//! flush timeout.
+
+use crate::models::BackendKind;
+
+/// Batch-size ladders matching `python/compile/aot.py`.
+pub const DECODE_BATCHES: [usize; 3] = [1, 4, 8];
+pub const PREFILL_BATCHES: [usize; 2] = [1, 4];
+
+/// Policy knobs per backend kind.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Largest decode batch this backend will form.
+    pub max_decode_batch: usize,
+    /// Largest prefill batch.
+    pub max_prefill_batch: usize,
+    /// Max time a request may wait for batch-mates before we flush.
+    pub flush_timeout_s: f64,
+}
+
+impl BatchPolicy {
+    pub fn for_backend(kind: BackendKind) -> BatchPolicy {
+        match kind {
+            // Throughput: fill the biggest compiled batch.
+            BackendKind::Vllm => BatchPolicy {
+                max_decode_batch: 8,
+                max_prefill_batch: 4,
+                flush_timeout_s: 0.050,
+            },
+            // Latency: keep batches small, flush almost immediately.
+            BackendKind::TrtLlm => BatchPolicy {
+                max_decode_batch: 4,
+                max_prefill_batch: 1,
+                flush_timeout_s: 0.005,
+            },
+            // Memory-lean middle ground.
+            BackendKind::Tgi => BatchPolicy {
+                max_decode_batch: 4,
+                max_prefill_batch: 4,
+                flush_timeout_s: 0.025,
+            },
+        }
+    }
+
+    /// Pick the compiled batch size for `waiting` ready items: the
+    /// largest ladder size ≤ min(waiting, policy max) — or the smallest
+    /// ladder size if the timeout forces a flush of a partial batch.
+    pub fn decode_batch_size(&self, waiting: usize, timed_out: bool) -> Option<usize> {
+        let cap = self.max_decode_batch.min(waiting);
+        if cap == 0 {
+            return None;
+        }
+        let fit = DECODE_BATCHES.iter().rev().find(|&&b| b <= cap).copied();
+        match fit {
+            Some(b) if b == self.max_decode_batch || timed_out => Some(b),
+            Some(b) => {
+                // Not full yet: wait for more unless the queue can't grow
+                // past the next ladder rung anyway.
+                if waiting >= self.max_decode_batch {
+                    Some(b)
+                } else if timed_out {
+                    Some(b)
+                } else {
+                    None
+                }
+            }
+            None => None,
+        }
+    }
+
+    /// Same for prefill.
+    pub fn prefill_batch_size(&self, waiting: usize, timed_out: bool) -> Option<usize> {
+        let cap = self.max_prefill_batch.min(waiting);
+        if cap == 0 {
+            return None;
+        }
+        let fit = PREFILL_BATCHES.iter().rev().find(|&&b| b <= cap).copied()?;
+        if fit == self.max_prefill_batch || timed_out || waiting >= self.max_prefill_batch {
+            Some(fit)
+        } else {
+            None
+        }
+    }
+}
+
+/// Batch efficiency: useful rows / padded rows — the batching ablation's
+/// metric.
+pub fn batch_efficiency(useful: usize, batch: usize) -> f64 {
+    if batch == 0 {
+        0.0
+    } else {
+        useful as f64 / batch as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vllm_waits_to_fill_big_batches() {
+        let p = BatchPolicy::for_backend(BackendKind::Vllm);
+        // 3 waiting, no timeout → hold for more.
+        assert_eq!(p.decode_batch_size(3, false), None);
+        // Timeout → flush partial batch at the largest fitting rung.
+        assert_eq!(p.decode_batch_size(3, true), Some(1));
+        assert_eq!(p.decode_batch_size(4, true), Some(4));
+        // Full queue → max batch immediately.
+        assert_eq!(p.decode_batch_size(9, false), Some(8));
+    }
+
+    #[test]
+    fn trt_flushes_small() {
+        let p = BatchPolicy::for_backend(BackendKind::TrtLlm);
+        assert_eq!(p.decode_batch_size(8, false), Some(4));
+        assert_eq!(p.decode_batch_size(1, true), Some(1));
+        assert!(p.flush_timeout_s < 0.01);
+    }
+
+    #[test]
+    fn empty_queue_never_batches() {
+        for kind in BackendKind::ALL {
+            let p = BatchPolicy::for_backend(kind);
+            assert_eq!(p.decode_batch_size(0, true), None);
+            assert_eq!(p.prefill_batch_size(0, true), None);
+        }
+    }
+
+    #[test]
+    fn prefill_ladder() {
+        let p = BatchPolicy::for_backend(BackendKind::Vllm);
+        assert_eq!(p.prefill_batch_size(1, true), Some(1));
+        assert_eq!(p.prefill_batch_size(4, false), Some(4));
+        assert_eq!(p.prefill_batch_size(2, false), None); // wait to fill
+        assert_eq!(p.prefill_batch_size(2, true), Some(1));
+    }
+
+    #[test]
+    fn batch_sizes_are_compiled_sizes() {
+        for kind in BackendKind::ALL {
+            let p = BatchPolicy::for_backend(kind);
+            for waiting in 0..20 {
+                for timed_out in [false, true] {
+                    if let Some(b) = p.decode_batch_size(waiting, timed_out) {
+                        assert!(DECODE_BATCHES.contains(&b), "{b} not compiled");
+                        assert!(b <= waiting.max(1));
+                    }
+                    if let Some(b) = p.prefill_batch_size(waiting, timed_out) {
+                        assert!(PREFILL_BATCHES.contains(&b));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn efficiency_metric() {
+        assert_eq!(batch_efficiency(3, 4), 0.75);
+        assert_eq!(batch_efficiency(0, 0), 0.0);
+    }
+}

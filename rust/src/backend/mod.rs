@@ -1,0 +1,142 @@
+//! Backend pool — request/response types and the per-backend service
+//! model shared by live and simulated execution.
+//!
+//! * [`kv_cache`] — block-granular KV accounting (PagedAttention-style).
+//! * [`batcher`] — dynamic batching policies per backend kind.
+//! * [`service_time`] — the calibrated service-time model the
+//!   discrete-event simulator samples from (live mode measures instead).
+
+pub mod batcher;
+pub mod kv_cache;
+
+use crate::models::{BackendKind, ModelSpec};
+use crate::util::rng::SplitMix64;
+
+/// A request as the backend pool sees it (routing already happened).
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    pub id: u64,
+    pub prompt: String,
+    pub benchmark: String,
+    /// Ground-truth complexity from the workload generator (evaluation
+    /// only — routing must not look at it).
+    pub true_complexity: usize,
+    pub in_tokens: usize,
+    pub max_new_tokens: usize,
+    pub arrival_s: f64,
+}
+
+/// The outcome of serving one request.
+#[derive(Debug, Clone)]
+pub struct InferenceOutcome {
+    pub request_id: u64,
+    /// Time to first token (queue + cold start + classification + prefill).
+    pub ttft_s: f64,
+    /// End-to-end latency.
+    pub latency_s: f64,
+    pub tokens_out: usize,
+    pub success: bool,
+    /// $ attributed to this query.
+    pub cost_usd: f64,
+    pub service: crate::registry::ServiceId,
+    /// Complexity the router predicted (for routing-accuracy metrics).
+    pub predicted_complexity: usize,
+}
+
+/// Sampled service time for one request on one (model, backend) pair.
+#[derive(Debug, Clone, Copy)]
+pub struct ServiceTime {
+    /// Prefill completes (first token) after this many seconds of work.
+    pub prefill_s: f64,
+    /// Decode completes after this much additional work.
+    pub decode_s: f64,
+}
+
+impl ServiceTime {
+    pub fn total(&self) -> f64 {
+        self.prefill_s + self.decode_s
+    }
+}
+
+/// Sample the service time: deterministic token-rate core with log-normal
+/// jitter (±~10%), matching the long-tail shape of real serving traces.
+pub fn service_time(
+    spec: &ModelSpec,
+    backend: BackendKind,
+    in_tokens: usize,
+    out_tokens: usize,
+    rng: &mut SplitMix64,
+) -> ServiceTime {
+    let lf = backend.latency_factor();
+    let jitter = rng.lognormal(0.0, 0.1);
+    let prefill = in_tokens as f64 / spec.prefill_tps * lf * jitter;
+    let jitter2 = rng.lognormal(0.0, 0.1);
+    let decode = out_tokens as f64 / spec.decode_tps * lf * jitter2;
+    ServiceTime { prefill_s: prefill, decode_s: decode }
+}
+
+/// $ cost of one request: the replica-seconds it occupied divided by the
+/// streams sharing the replica, at the model's GPU rate.
+pub fn request_cost_usd(
+    spec: &ModelSpec,
+    backend: BackendKind,
+    busy_s: f64,
+    concurrent_streams: usize,
+) -> f64 {
+    let sharing = concurrent_streams.max(1) as f64;
+    busy_s * spec.cost_per_replica_second() * backend.cost_factor() / sharing
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    #[test]
+    fn service_time_scales_with_tokens() {
+        let z = zoo();
+        let mut rng = SplitMix64::new(1);
+        let short = service_time(&z[0], BackendKind::Vllm, 50, 20, &mut rng);
+        let long = service_time(&z[0], BackendKind::Vllm, 50, 400, &mut rng);
+        assert!(long.decode_s > short.decode_s * 10.0);
+    }
+
+    #[test]
+    fn big_models_slower() {
+        let z = zoo();
+        let mut rng = SplitMix64::new(2);
+        let small = service_time(&z[0], BackendKind::Vllm, 100, 100, &mut rng);
+        let big = service_time(&z[3], BackendKind::Vllm, 100, 100, &mut rng);
+        assert!(big.total() > small.total() * 2.0);
+    }
+
+    #[test]
+    fn trt_cuts_latency() {
+        let z = zoo();
+        // Same seed → same jitter draws, isolating the backend factor.
+        let mut r1 = SplitMix64::new(3);
+        let mut r2 = SplitMix64::new(3);
+        let vllm = service_time(&z[1], BackendKind::Vllm, 100, 100, &mut r1);
+        let trt = service_time(&z[1], BackendKind::TrtLlm, 100, 100, &mut r2);
+        assert!(trt.total() < vllm.total());
+    }
+
+    #[test]
+    fn jitter_is_bounded_ish() {
+        let z = zoo();
+        let mut rng = SplitMix64::new(4);
+        let base = 100.0 / z[0].decode_tps;
+        for _ in 0..1000 {
+            let st = service_time(&z[0], BackendKind::Vllm, 0, 100, &mut rng);
+            assert!(st.decode_s > base * 0.5 && st.decode_s < base * 2.0);
+        }
+    }
+
+    #[test]
+    fn cost_divides_by_sharing() {
+        let z = zoo();
+        let solo = request_cost_usd(&z[2], BackendKind::Vllm, 10.0, 1);
+        let shared = request_cost_usd(&z[2], BackendKind::Vllm, 10.0, 8);
+        assert!((solo / shared - 8.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,218 @@
+//! Baseline policies the paper compares against.
+//!
+//! * Selection strategies (Table 3): random assignment and latency-only,
+//!   vs Pick-and-Spin's multi-objective matrix policy.
+//! * Deployment modes (Tables 1/4): static always-on deployment vs
+//!   dynamic orchestration (scale-to-zero + warm pools + auto recovery).
+
+use crate::registry::{Registry, Service, ServiceId};
+use crate::router::Classification;
+use crate::scoring::Weights;
+use crate::util::rng::SplitMix64;
+
+/// How a service is chosen for a classified prompt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SelectionPolicy {
+    /// Eq. 2 / Alg. 2 (the paper's contribution).
+    MultiObjective,
+    /// Uniform-random over routable services (Table 3 baseline).
+    Random,
+    /// Minimize expected latency only (Table 3 baseline).
+    LatencyOnly,
+    /// Round-robin over models on the default backend, ignoring the
+    /// classification (Table 1's unrouted static baseline).
+    RoundRobin,
+    /// Tier-directed routing (paper §Routing: "routes queries to model
+    /// tiers L1–L3 based on complexity"): the predicted class fixes the
+    /// model tier, Eq. 2 picks the best cell within that tier. This is
+    /// the configuration behind Table 2 and Figs. 4–7.
+    TierDirected,
+}
+
+impl SelectionPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            SelectionPolicy::MultiObjective => "multi-objective",
+            SelectionPolicy::Random => "random",
+            SelectionPolicy::LatencyOnly => "latency-only",
+            SelectionPolicy::RoundRobin => "round-robin",
+            SelectionPolicy::TierDirected => "tier-directed",
+        }
+    }
+}
+
+/// Stateful selector wrapping all policies behind one call.
+pub struct Selector {
+    pub policy: SelectionPolicy,
+    pub weights: Weights,
+    rng: SplitMix64,
+    rr_next: usize,
+}
+
+impl Selector {
+    pub fn new(policy: SelectionPolicy, weights: Weights, seed: u64) -> Self {
+        Self { policy, weights, rng: SplitMix64::new(seed), rr_next: 0 }
+    }
+
+    /// Choose a service for a classified prompt.
+    pub fn select(
+        &mut self,
+        registry: &Registry,
+        class: &Classification,
+        in_tokens: f64,
+        out_tokens: f64,
+        cold_start_of: impl Fn(&Service) -> f64,
+    ) -> Option<ServiceId> {
+        match self.policy {
+            SelectionPolicy::MultiObjective => crate::orchestrator::select(
+                registry,
+                self.weights,
+                class,
+                in_tokens,
+                out_tokens,
+                cold_start_of,
+            )
+            .map(|s| s.service),
+            SelectionPolicy::Random => {
+                let cands: Vec<ServiceId> =
+                    registry.routable().map(|s| s.id).collect();
+                if cands.is_empty() {
+                    None
+                } else {
+                    Some(cands[self.rng.below(cands.len() as u64) as usize])
+                }
+            }
+            SelectionPolicy::LatencyOnly => registry
+                .routable()
+                .map(|s| {
+                    let t = s.expected_latency_s(
+                        in_tokens,
+                        out_tokens,
+                        cold_start_of(s),
+                    );
+                    (s.id, t)
+                })
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .map(|(id, _)| id),
+            SelectionPolicy::RoundRobin => {
+                // Model rows on the default (vLLM) backend column.
+                let cands: Vec<ServiceId> = registry
+                    .routable()
+                    .filter(|s| s.backend == crate::models::BackendKind::Vllm)
+                    .map(|s| s.id)
+                    .collect();
+                if cands.is_empty() {
+                    return None;
+                }
+                let id = cands[self.rr_next % cands.len()];
+                self.rr_next += 1;
+                Some(id)
+            }
+            SelectionPolicy::TierDirected => {
+                let tier = crate::models::Tier::for_complexity(class.complexity);
+                // Best Eq. 2 score among the predicted tier's cells; the
+                // class fixes the row group, the score picks the backend.
+                let mut best: Option<(ServiceId, f64)> = None;
+                for s in registry.routable().filter(|s| s.spec.tier == tier) {
+                    let t = s.expected_latency_s(in_tokens, out_tokens,
+                                                 cold_start_of(s));
+                    let c = s.expected_cost_usd(in_tokens, out_tokens);
+                    // Within one tier relevance is constant; score on
+                    // latency+cost with the profile's relative weights.
+                    let f = -(self.weights.w_t * t
+                        + self.weights.w_c * c * 1e3
+                        + (1.0 - self.weights.w_t - self.weights.w_c) * t);
+                    if best.map(|(_, bf)| f > bf).unwrap_or(true) {
+                        best = Some((s.id, f));
+                    }
+                }
+                best.map(|(id, _)| id)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Profile, RouterMode};
+    use crate::models::zoo;
+    use crate::registry::Registry;
+
+    fn setup() -> Registry {
+        let mut r = Registry::new(&zoo(), 300.0);
+        for s in &mut r.services {
+            s.ready_replicas = 1;
+        }
+        r
+    }
+
+    fn class() -> Classification {
+        Classification {
+            complexity: 1,
+            confidence: 0.9,
+            mode: RouterMode::Hybrid,
+            overhead_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles_models() {
+        let r = setup();
+        let mut sel = Selector::new(
+            SelectionPolicy::RoundRobin,
+            Weights::from_profile(&Profile::BASELINE),
+            0,
+        );
+        let picks: Vec<ServiceId> = (0..8)
+            .map(|_| sel.select(&r, &class(), 50.0, 50.0, |_| 0.0).unwrap())
+            .collect();
+        assert_eq!(picks[0], picks[4]);
+        assert_eq!(picks[1], picks[5]);
+        let distinct: std::collections::BTreeSet<_> = picks.iter().collect();
+        assert_eq!(distinct.len(), 4);
+    }
+
+    #[test]
+    fn latency_only_picks_fastest() {
+        let r = setup();
+        let mut sel = Selector::new(
+            SelectionPolicy::LatencyOnly,
+            Weights::from_profile(&Profile::BASELINE),
+            0,
+        );
+        let id = sel.select(&r, &class(), 100.0, 100.0, |_| 0.0).unwrap();
+        let svc = r.get(id);
+        // Fastest cell: the small model on the latency backend.
+        assert_eq!(svc.spec.name, "gemma3-27b");
+        assert_eq!(svc.backend, crate::models::BackendKind::TrtLlm);
+    }
+
+    #[test]
+    fn random_covers_the_matrix() {
+        let r = setup();
+        let mut sel = Selector::new(
+            SelectionPolicy::Random,
+            Weights::from_profile(&Profile::BASELINE),
+            7,
+        );
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..300 {
+            seen.insert(sel.select(&r, &class(), 50.0, 50.0, |_| 0.0).unwrap());
+        }
+        assert_eq!(seen.len(), 12);
+    }
+
+    #[test]
+    fn multi_objective_delegates_to_alg2() {
+        let r = setup();
+        let mut sel = Selector::new(
+            SelectionPolicy::MultiObjective,
+            Weights::from_profile(&Profile::QUALITY),
+            0,
+        );
+        let hard = Classification { complexity: 2, ..class() };
+        let id = sel.select(&r, &hard, 100.0, 200.0, |_| 0.0).unwrap();
+        assert!(r.get(id).spec.capability[2] > 0.85);
+    }
+}

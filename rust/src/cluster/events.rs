@@ -1,0 +1,143 @@
+//! Discrete-event queue — the virtual-time engine behind sim mode.
+//!
+//! A binary heap of (timestamp, sequence, event) with FIFO tie-breaking,
+//! so simulations are fully deterministic for a given seed.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+struct Entry<E> {
+    t_ns: u64,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.t_ns == other.t_ns && self.seq == other.seq
+    }
+}
+
+impl<E> Eq for Entry<E> {}
+
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse for min-heap behaviour on BinaryHeap (a max-heap).
+        other
+            .t_ns
+            .cmp(&self.t_ns)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Min-heap event queue keyed on virtual nanoseconds.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+    /// Timestamp of the last popped event (monotonicity check).
+    last_t: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        Self { heap: BinaryHeap::new(), seq: 0, last_t: 0 }
+    }
+
+    /// Schedule an event at absolute virtual time `t_ns`.
+    pub fn push(&mut self, t_ns: u64, event: E) {
+        self.heap.push(Entry { t_ns, seq: self.seq, event });
+        self.seq += 1;
+    }
+
+    /// Schedule relative to a given now.
+    pub fn push_after(&mut self, now_ns: u64, delay_ns: u64, event: E) {
+        self.push(now_ns.saturating_add(delay_ns), event);
+    }
+
+    /// Pop the earliest event.
+    pub fn pop(&mut self) -> Option<(u64, E)> {
+        self.heap.pop().map(|e| {
+            debug_assert!(e.t_ns >= self.last_t, "event time regressed");
+            self.last_t = e.t_ns;
+            (e.t_ns, e.event)
+        })
+    }
+
+    /// Earliest pending timestamp.
+    pub fn peek_time(&self) -> Option<u64> {
+        self.heap.peek().map(|e| e.t_ns)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(300, "c");
+        q.push(100, "a");
+        q.push(200, "b");
+        assert_eq!(q.pop(), Some((100, "a")));
+        assert_eq!(q.pop(), Some((200, "b")));
+        assert_eq!(q.pop(), Some((300, "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn ties_break_fifo() {
+        let mut q = EventQueue::new();
+        q.push(100, 1);
+        q.push(100, 2);
+        q.push(100, 3);
+        assert_eq!(q.pop().unwrap().1, 1);
+        assert_eq!(q.pop().unwrap().1, 2);
+        assert_eq!(q.pop().unwrap().1, 3);
+    }
+
+    #[test]
+    fn push_after_adds_delay() {
+        let mut q = EventQueue::new();
+        q.push_after(1_000, 500, "x");
+        assert_eq!(q.peek_time(), Some(1_500));
+    }
+
+    #[test]
+    fn len_tracks() {
+        let mut q: EventQueue<u8> = EventQueue::new();
+        assert!(q.is_empty());
+        q.push(1, 0);
+        q.push(2, 1);
+        assert_eq!(q.len(), 2);
+        q.pop();
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn saturating_delay() {
+        let mut q = EventQueue::new();
+        q.push_after(u64::MAX - 1, 100, "end");
+        assert_eq!(q.peek_time(), Some(u64::MAX));
+    }
+}

@@ -1,0 +1,447 @@
+//! Cluster substrate — the simulated Kubernetes the Spin layer drives.
+//!
+//! The paper deploys on Kubernetes with Helm/Knative/KEDA; Algorithms 1
+//! and 2 consume only replica counts, cold-start latencies, health, and
+//! GPU occupancy. This module provides exactly those signals with a
+//! faithful pod lifecycle:
+//!
+//! ```text
+//! Scheduled → Pulling(image) → Loading(weights ← PVC) → Initializing
+//!           → Ready → Terminating → (gone)         ↘ Failed
+//! ```
+//!
+//! Cold-start latency decomposes the way real clusters do: image pull
+//! (cold vs node-cached), weight load at PVC bandwidth (model size /
+//! GB/s — the paper stores weights in PVCs for "persistence and fast
+//! recovery"), then engine init (backend-dependent). Everything is
+//! poll-driven on explicit timestamps so live and virtual time share the
+//! code.
+
+pub mod events;
+
+use std::collections::BTreeMap;
+
+use crate::config::ClusterConfig;
+use crate::models::{BackendKind, ModelSpec};
+use crate::registry::ServiceId;
+
+/// Pod identity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PodId(pub u64);
+
+/// Node identity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub usize);
+
+/// Pod lifecycle state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PodState {
+    Pulling,
+    Loading,
+    Initializing,
+    Ready,
+    Terminating,
+    Failed,
+}
+
+/// A pod: one replica of a (model, backend) service.
+#[derive(Debug, Clone)]
+pub struct Pod {
+    pub id: PodId,
+    pub service: ServiceId,
+    pub node: NodeId,
+    pub gpus: usize,
+    pub state: PodState,
+    /// When the current state completes (state machine deadline).
+    pub state_deadline_s: f64,
+    pub created_s: f64,
+    pub ready_s: Option<f64>,
+}
+
+/// Cluster-level change produced by `poll`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClusterEvent {
+    PodReady { pod: PodId, service: ServiceId, at_s: f64, cold_start_s: f64 },
+    PodGone { pod: PodId, service: ServiceId, at_s: f64 },
+    PodFailed { pod: PodId, service: ServiceId, at_s: f64 },
+}
+
+/// One GPU node.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub gpus_total: usize,
+    pub gpus_free: usize,
+    /// Images already pulled on this node (model indices).
+    pub image_cache: Vec<usize>,
+    /// Models whose weights are warm on this node (page cache / local
+    /// PVC) — reloads run ~5× faster, the paper's "PVCs for persistence
+    /// and fast recovery".
+    pub weight_cache: Vec<usize>,
+}
+
+/// Speedup of a warm (locally cached) weight load vs a cold PVC read.
+pub const WARM_WEIGHT_SPEEDUP: f64 = 5.0;
+
+/// The simulated cluster.
+pub struct Cluster {
+    pub cfg: ClusterConfig,
+    pub nodes: Vec<Node>,
+    pub pods: BTreeMap<PodId, Pod>,
+    /// Per-pod (weight-load, engine-init) stage durations.
+    stage_durations: BTreeMap<PodId, (f64, f64)>,
+    next_pod: u64,
+    /// Integrated GPU-seconds held (cost basis).
+    gpu_seconds: f64,
+    last_account_s: f64,
+}
+
+impl Cluster {
+    pub fn new(cfg: ClusterConfig) -> Cluster {
+        let nodes = (0..cfg.nodes)
+            .map(|i| Node {
+                id: NodeId(i),
+                gpus_total: cfg.gpus_per_node,
+                gpus_free: cfg.gpus_per_node,
+                image_cache: Vec::new(),
+                weight_cache: Vec::new(),
+            })
+            .collect();
+        Cluster {
+            cfg,
+            nodes,
+            pods: BTreeMap::new(),
+            stage_durations: BTreeMap::new(),
+            next_pod: 0,
+            gpu_seconds: 0.0,
+            last_account_s: 0.0,
+        }
+    }
+
+    /// GPUs currently held by live pods.
+    pub fn gpus_held(&self) -> usize {
+        self.pods.values().map(|p| p.gpus).sum()
+    }
+
+    /// Total GPU capacity.
+    pub fn gpus_total(&self) -> usize {
+        self.nodes.iter().map(|n| n.gpus_total).sum()
+    }
+
+    /// Accrue GPU-seconds up to `now` (call before any state change).
+    fn account(&mut self, now_s: f64) {
+        if now_s > self.last_account_s {
+            self.gpu_seconds +=
+                self.gpus_held() as f64 * (now_s - self.last_account_s);
+            self.last_account_s = now_s;
+        }
+    }
+
+    /// Total GPU-seconds consumed through `now`.
+    pub fn gpu_seconds(&self, now_s: f64) -> f64 {
+        self.gpu_seconds
+            + self.gpus_held() as f64 * (now_s - self.last_account_s).max(0.0)
+    }
+
+    /// Cold-start stage durations (pull, load, init) for a (model,
+    /// backend) placed on `node`.
+    pub fn cold_start_stages(
+        &self,
+        node: &Node,
+        model_idx: usize,
+        spec: &ModelSpec,
+        backend: BackendKind,
+    ) -> (f64, f64, f64) {
+        let pull = if node.image_cache.contains(&model_idx) {
+            self.cfg.image_pull_cached_s
+        } else {
+            self.cfg.image_pull_cold_s
+        };
+        let mut load = spec.weight_gb / self.cfg.pvc_bandwidth_gbps;
+        if node.weight_cache.contains(&model_idx) {
+            load /= WARM_WEIGHT_SPEEDUP;
+        }
+        let init = backend.engine_init_s();
+        (pull, load, init)
+    }
+
+    /// Estimated total cold start for routing-time latency estimates
+    /// (assumes a cached image, the steady-state case).
+    pub fn estimate_cold_start_s(&self, spec: &ModelSpec, backend: BackendKind) -> f64 {
+        self.cfg.image_pull_cached_s
+            + spec.weight_gb / self.cfg.pvc_bandwidth_gbps
+            + backend.engine_init_s()
+    }
+
+    /// Schedule one replica: tightest-fit bin packing (fewest free GPUs
+    /// that still fit) to limit fragmentation. None if no capacity.
+    pub fn schedule(
+        &mut self,
+        service: ServiceId,
+        model_idx: usize,
+        spec: &ModelSpec,
+        backend: BackendKind,
+        now_s: f64,
+    ) -> Option<PodId> {
+        self.account(now_s);
+        let node_idx = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.gpus_free >= spec.gpus)
+            .min_by_key(|(_, n)| n.gpus_free)?
+            .0;
+        let (pull, load, init) =
+            self.cold_start_stages(&self.nodes[node_idx], model_idx, spec, backend);
+        self.nodes[node_idx].gpus_free -= spec.gpus;
+        if !self.nodes[node_idx].image_cache.contains(&model_idx) {
+            self.nodes[node_idx].image_cache.push(model_idx);
+        }
+        if !self.nodes[node_idx].weight_cache.contains(&model_idx) {
+            self.nodes[node_idx].weight_cache.push(model_idx);
+        }
+        let id = PodId(self.next_pod);
+        self.next_pod += 1;
+        self.pods.insert(id, Pod {
+            id,
+            service,
+            node: NodeId(node_idx),
+            gpus: spec.gpus,
+            state: PodState::Pulling,
+            state_deadline_s: now_s + pull,
+            created_s: now_s,
+            ready_s: None,
+        });
+        self.stage_durations.insert(id, (load, init));
+        Some(id)
+    }
+
+    /// Begin graceful termination of a pod (2 s drain grace).
+    pub fn terminate(&mut self, pod: PodId, now_s: f64) {
+        self.account(now_s);
+        if let Some(p) = self.pods.get_mut(&pod) {
+            p.state = PodState::Terminating;
+            p.state_deadline_s = now_s + 2.0;
+        }
+    }
+
+    /// Kill a pod abruptly (failure injection for recovery experiments).
+    pub fn fail(&mut self, pod: PodId, now_s: f64) -> Option<ClusterEvent> {
+        self.account(now_s);
+        let p = self.pods.get(&pod)?;
+        let service = p.service;
+        let node = p.node;
+        let gpus = p.gpus;
+        self.pods.remove(&pod);
+        self.stage_durations.remove(&pod);
+        self.nodes[node.0].gpus_free += gpus;
+        Some(ClusterEvent::PodFailed { pod, service, at_s: now_s })
+    }
+
+    /// Advance pod state machines up to `now`; returns lifecycle events.
+    pub fn poll(&mut self, now_s: f64) -> Vec<ClusterEvent> {
+        self.account(now_s);
+        let mut out = Vec::new();
+        let ids: Vec<PodId> = self.pods.keys().copied().collect();
+        for id in ids {
+            loop {
+                let Some(p) = self.pods.get_mut(&id) else { break };
+                if p.state_deadline_s > now_s {
+                    break;
+                }
+                match p.state {
+                    PodState::Pulling => {
+                        let (load, _) = self.stage_durations[&id];
+                        p.state = PodState::Loading;
+                        p.state_deadline_s += load;
+                    }
+                    PodState::Loading => {
+                        let (_, init) = self.stage_durations[&id];
+                        p.state = PodState::Initializing;
+                        p.state_deadline_s += init;
+                    }
+                    PodState::Initializing => {
+                        p.state = PodState::Ready;
+                        let at = p.state_deadline_s;
+                        p.ready_s = Some(at);
+                        out.push(ClusterEvent::PodReady {
+                            pod: id,
+                            service: p.service,
+                            at_s: at,
+                            cold_start_s: at - p.created_s,
+                        });
+                        p.state_deadline_s = f64::INFINITY;
+                    }
+                    PodState::Ready | PodState::Failed => break,
+                    PodState::Terminating => {
+                        let service = p.service;
+                        let at = p.state_deadline_s;
+                        let node = p.node;
+                        let gpus = p.gpus;
+                        self.pods.remove(&id);
+                        self.stage_durations.remove(&id);
+                        self.nodes[node.0].gpus_free += gpus;
+                        out.push(ClusterEvent::PodGone { pod: id, service, at_s: at });
+                        break;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Ready pods of a service.
+    pub fn ready_pods(&self, service: ServiceId) -> Vec<PodId> {
+        self.pods
+            .values()
+            .filter(|p| p.service == service && p.state == PodState::Ready)
+            .map(|p| p.id)
+            .collect()
+    }
+
+    /// Pods of a service in any pre-Ready state.
+    pub fn pending_pods(&self, service: ServiceId) -> usize {
+        self.pods
+            .values()
+            .filter(|p| {
+                p.service == service
+                    && matches!(
+                        p.state,
+                        PodState::Pulling | PodState::Loading | PodState::Initializing
+                    )
+            })
+            .count()
+    }
+
+    /// Next state-machine deadline (for the sim driver's event horizon).
+    pub fn next_deadline_s(&self) -> Option<f64> {
+        self.pods
+            .values()
+            .map(|p| p.state_deadline_s)
+            .filter(|d| d.is_finite())
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::models::zoo;
+
+    fn cluster() -> Cluster {
+        Cluster::new(ClusterConfig::default())
+    }
+
+    #[test]
+    fn schedule_walks_lifecycle() {
+        let z = zoo();
+        let mut c = cluster();
+        let pod = c
+            .schedule(ServiceId(0), 0, &z[0], BackendKind::Vllm, 0.0)
+            .unwrap();
+        assert_eq!(c.pods[&pod].state, PodState::Pulling);
+        // cold pull 12s + weights 28GB / 2GBps = 14s + vllm init 3s = 29s
+        assert!(c.poll(28.9).is_empty());
+        let evs = c.poll(29.1);
+        assert_eq!(evs.len(), 1);
+        match &evs[0] {
+            ClusterEvent::PodReady { cold_start_s, .. } => {
+                assert!((cold_start_s - 29.0).abs() < 1e-9);
+            }
+            e => panic!("unexpected {e:?}"),
+        }
+        assert_eq!(c.ready_pods(ServiceId(0)).len(), 1);
+    }
+
+    #[test]
+    fn cached_image_starts_faster() {
+        let z = zoo();
+        let mut c = cluster();
+        let p1 = c.schedule(ServiceId(0), 0, &z[0], BackendKind::Vllm, 0.0).unwrap();
+        c.poll(40.0);
+        c.terminate(p1, 40.0);
+        c.poll(50.0);
+        // Second pod: image cached (1s pull) AND weights warm (14/5 s)
+        // → 1 + 2.8 + 3 = 6.8s total.
+        c.schedule(ServiceId(0), 0, &z[0], BackendKind::Vllm, 50.0).unwrap();
+        let evs = c.poll(50.0 + 6.8 + 0.1);
+        assert!(matches!(evs[0], ClusterEvent::PodReady { cold_start_s, .. }
+                         if (cold_start_s - 6.8).abs() < 1e-9));
+    }
+
+    #[test]
+    fn capacity_respected() {
+        let z = zoo();
+        let mut c = Cluster::new(ClusterConfig {
+            nodes: 1,
+            gpus_per_node: 8,
+            ..ClusterConfig::default()
+        });
+        assert!(c.schedule(ServiceId(1), 3, &z[3], BackendKind::Vllm, 0.0).is_some());
+        assert!(c.schedule(ServiceId(1), 3, &z[3], BackendKind::Vllm, 0.0).is_none());
+        assert_eq!(c.gpus_held(), 8);
+    }
+
+    #[test]
+    fn terminate_releases_gpus() {
+        let z = zoo();
+        let mut c = cluster();
+        let pod = c.schedule(ServiceId(0), 2, &z[2], BackendKind::Tgi, 0.0).unwrap();
+        assert_eq!(c.gpus_held(), 4);
+        c.poll(200.0);
+        c.terminate(pod, 200.0);
+        let evs = c.poll(202.1);
+        assert!(matches!(evs[0], ClusterEvent::PodGone { .. }));
+        assert_eq!(c.gpus_held(), 0);
+        assert_eq!(c.nodes.iter().map(|n| n.gpus_free).sum::<usize>(), 32);
+    }
+
+    #[test]
+    fn failure_frees_and_reports() {
+        let z = zoo();
+        let mut c = cluster();
+        let pod = c.schedule(ServiceId(0), 1, &z[1], BackendKind::Vllm, 0.0).unwrap();
+        c.poll(100.0);
+        let ev = c.fail(pod, 100.0).unwrap();
+        assert!(matches!(ev, ClusterEvent::PodFailed { .. }));
+        assert_eq!(c.gpus_held(), 0);
+        assert!(c.ready_pods(ServiceId(0)).is_empty());
+    }
+
+    #[test]
+    fn gpu_seconds_accrue() {
+        let z = zoo();
+        let mut c = cluster();
+        c.schedule(ServiceId(0), 0, &z[0], BackendKind::Vllm, 0.0).unwrap();
+        c.poll(100.0);
+        assert!((c.gpu_seconds(100.0) - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn tightest_fit_packing() {
+        let z = zoo();
+        let mut c = Cluster::new(ClusterConfig {
+            nodes: 2,
+            gpus_per_node: 8,
+            ..ClusterConfig::default()
+        });
+        // 4-GPU pod lands on node 0; a 2-GPU pod packs onto the same node
+        // (tightest fit), keeping node 1 whole for an 8-GPU model.
+        c.schedule(ServiceId(0), 2, &z[2], BackendKind::Vllm, 0.0).unwrap();
+        let p2 = c.schedule(ServiceId(1), 1, &z[1], BackendKind::Vllm, 0.0).unwrap();
+        assert_eq!(c.pods[&p2].node, NodeId(0));
+        assert!(c.schedule(ServiceId(2), 3, &z[3], BackendKind::Vllm, 0.0).is_some());
+    }
+
+    #[test]
+    fn pending_counts_prestages() {
+        let z = zoo();
+        let mut c = cluster();
+        c.schedule(ServiceId(5), 0, &z[0], BackendKind::Vllm, 0.0).unwrap();
+        c.poll(5.0); // still pulling
+        assert_eq!(c.pending_pods(ServiceId(5)), 1);
+        c.poll(30.0);
+        assert_eq!(c.pending_pods(ServiceId(5)), 0);
+    }
+}

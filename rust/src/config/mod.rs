@@ -1,0 +1,348 @@
+//! Typed configuration system with JSON overlay loading.
+//!
+//! Everything tunable lives here with documented defaults; a JSON config
+//! file (`--config path`) overrides fields selectively. The four operator
+//! profiles of the paper ((α, λ, μ) preference weights) are first-class
+//! values.
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// Non-negative preference parameters (α, λ, μ) of the orchestration
+/// objective — normalized into convex weights by [`crate::scoring`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Profile {
+    pub name: &'static str,
+    /// α — model quality / relevance preference.
+    pub alpha: f64,
+    /// λ — latency preference.
+    pub lambda: f64,
+    /// μ — resource-cost preference.
+    pub mu: f64,
+}
+
+impl Profile {
+    /// The paper's four operator profiles plus the unrouted baseline.
+    pub const BASELINE: Profile =
+        Profile { name: "baseline", alpha: 0.0, lambda: 0.0, mu: 0.0 };
+    pub const QUALITY: Profile =
+        Profile { name: "quality", alpha: 1.0, lambda: 0.1, mu: 0.1 };
+    pub const COST: Profile =
+        Profile { name: "cost", alpha: 0.3, lambda: 0.2, mu: 0.8 };
+    pub const SPEED: Profile =
+        Profile { name: "speed", alpha: 0.3, lambda: 0.8, mu: 0.2 };
+    pub const BALANCED: Profile =
+        Profile { name: "balanced", alpha: 0.5, lambda: 0.3, mu: 0.3 };
+
+    pub const ALL: [Profile; 5] = [
+        Profile::BASELINE,
+        Profile::QUALITY,
+        Profile::COST,
+        Profile::SPEED,
+        Profile::BALANCED,
+    ];
+
+    pub fn by_name(name: &str) -> Option<Profile> {
+        Profile::ALL.iter().copied().find(|p| p.name == name)
+    }
+}
+
+/// Router operating mode (paper: keyword, DistilBERT, hybrid).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterMode {
+    Keyword,
+    Semantic,
+    Hybrid,
+}
+
+impl RouterMode {
+    pub fn parse(s: &str) -> Option<RouterMode> {
+        match s {
+            "keyword" => Some(RouterMode::Keyword),
+            "semantic" | "distilbert" => Some(RouterMode::Semantic),
+            "hybrid" => Some(RouterMode::Hybrid),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RouterMode::Keyword => "keyword",
+            RouterMode::Semantic => "semantic",
+            RouterMode::Hybrid => "hybrid",
+        }
+    }
+}
+
+/// Router tunables.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    pub mode: RouterMode,
+    /// Hybrid: below this keyword-confidence the semantic path refines.
+    pub hybrid_confidence: f64,
+    /// Semantic classification overhead added per query (paper: the
+    /// DistilBERT step costs extra latency; measured live, simulated in
+    /// sim mode).
+    pub semantic_overhead_s: f64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self {
+            mode: RouterMode::Hybrid,
+            hybrid_confidence: 0.65,
+            semantic_overhead_s: 0.35,
+        }
+    }
+}
+
+/// Spin (Algorithm 1) tunables.
+#[derive(Debug, Clone)]
+pub struct OrchestratorConfig {
+    /// Telemetry window w (paper: 5 min).
+    pub telemetry_window_s: f64,
+    /// Per-replica target concurrency (Little's-law divisor).
+    pub target_concurrency: f64,
+    /// Idle threshold τ before scale-down.
+    pub idle_timeout_s: f64,
+    /// Cooldown between scale-ups (prevents oscillation).
+    pub cooldown_s: f64,
+    /// Warm-pool size per tier index [small, medium, large].
+    pub warm_pool: [usize; 3],
+    /// Hard replica cap per service.
+    pub max_replicas: usize,
+    /// Health-check period.
+    pub health_period_s: f64,
+}
+
+impl Default for OrchestratorConfig {
+    fn default() -> Self {
+        Self {
+            telemetry_window_s: 300.0,
+            target_concurrency: 4.0,
+            idle_timeout_s: 120.0,
+            cooldown_s: 30.0,
+            warm_pool: [1, 1, 0],
+            max_replicas: 8,
+            health_period_s: 5.0,
+        }
+    }
+}
+
+/// Gateway tunables.
+#[derive(Debug, Clone)]
+pub struct GatewayConfig {
+    pub port: u16,
+    pub queue_capacity: usize,
+    pub worker_threads: usize,
+    pub request_timeout_s: f64,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        Self {
+            port: 8080,
+            queue_capacity: 1024,
+            worker_threads: 8,
+            request_timeout_s: 120.0,
+        }
+    }
+}
+
+/// Cluster-substrate constants (the simulated Kubernetes behaviour).
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// GPUs per node.
+    pub gpus_per_node: usize,
+    /// Number of nodes.
+    pub nodes: usize,
+    /// Container image pull time (cold / cached).
+    pub image_pull_cold_s: f64,
+    pub image_pull_cached_s: f64,
+    /// PVC read bandwidth for weight loading (GB/s).
+    pub pvc_bandwidth_gbps: f64,
+    /// Engine initialization time after weights are resident.
+    pub engine_init_s: f64,
+    /// Pod failure rate (failures per pod-hour) for recovery experiments.
+    pub failure_rate_per_hour: f64,
+    /// Scheduler tick.
+    pub tick_s: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            gpus_per_node: 8,
+            nodes: 4,
+            image_pull_cold_s: 12.0,
+            image_pull_cached_s: 1.0,
+            pvc_bandwidth_gbps: 2.0,
+            engine_init_s: 3.0,
+            failure_rate_per_hour: 0.0,
+            tick_s: 1.0,
+        }
+    }
+}
+
+/// Paths to build artifacts and shared data.
+#[derive(Debug, Clone)]
+pub struct Paths {
+    pub artifacts: String,
+    pub data: String,
+}
+
+impl Default for Paths {
+    fn default() -> Self {
+        Self { artifacts: "artifacts".into(), data: "data".into() }
+    }
+}
+
+/// Top-level configuration.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub paths: Paths,
+    pub router: RouterConfig,
+    pub orchestrator: OrchestratorConfig,
+    pub gateway: GatewayConfig,
+    pub cluster: ClusterConfig,
+    pub profile: Profile,
+}
+
+impl Default for Profile {
+    fn default() -> Self {
+        Profile::BALANCED
+    }
+}
+
+impl Config {
+    /// Load defaults, then overlay a JSON file if given.
+    pub fn load(path: Option<&str>) -> Result<Config> {
+        let mut cfg = Config::default();
+        if let Some(p) = path {
+            cfg.overlay(&Json::from_file(p)?)?;
+        }
+        Ok(cfg)
+    }
+
+    /// Apply a JSON overlay (partial — only present keys override).
+    pub fn overlay(&mut self, j: &Json) -> Result<()> {
+        if let Some(p) = j.get("paths") {
+            self.paths.artifacts =
+                p.str_or("artifacts", &self.paths.artifacts).to_string();
+            self.paths.data = p.str_or("data", &self.paths.data).to_string();
+        }
+        if let Some(r) = j.get("router") {
+            if let Some(m) = r.get("mode").and_then(Json::as_str) {
+                self.router.mode = RouterMode::parse(m)
+                    .ok_or_else(|| anyhow::anyhow!("bad router mode `{m}`"))?;
+            }
+            self.router.hybrid_confidence =
+                r.f64_or("hybrid_confidence", self.router.hybrid_confidence);
+            self.router.semantic_overhead_s =
+                r.f64_or("semantic_overhead_s", self.router.semantic_overhead_s);
+        }
+        if let Some(o) = j.get("orchestrator") {
+            self.orchestrator.telemetry_window_s =
+                o.f64_or("telemetry_window_s", self.orchestrator.telemetry_window_s);
+            self.orchestrator.target_concurrency =
+                o.f64_or("target_concurrency", self.orchestrator.target_concurrency);
+            self.orchestrator.idle_timeout_s =
+                o.f64_or("idle_timeout_s", self.orchestrator.idle_timeout_s);
+            self.orchestrator.cooldown_s =
+                o.f64_or("cooldown_s", self.orchestrator.cooldown_s);
+            self.orchestrator.max_replicas =
+                o.usize_or("max_replicas", self.orchestrator.max_replicas);
+            if let Some(w) = o.get("warm_pool").and_then(Json::as_arr) {
+                for (i, v) in w.iter().take(3).enumerate() {
+                    if let Some(n) = v.as_usize() {
+                        self.orchestrator.warm_pool[i] = n;
+                    }
+                }
+            }
+        }
+        if let Some(g) = j.get("gateway") {
+            self.gateway.port = g.usize_or("port", self.gateway.port as usize) as u16;
+            self.gateway.queue_capacity =
+                g.usize_or("queue_capacity", self.gateway.queue_capacity);
+            self.gateway.worker_threads =
+                g.usize_or("worker_threads", self.gateway.worker_threads);
+            self.gateway.request_timeout_s =
+                g.f64_or("request_timeout_s", self.gateway.request_timeout_s);
+        }
+        if let Some(c) = j.get("cluster") {
+            self.cluster.gpus_per_node =
+                c.usize_or("gpus_per_node", self.cluster.gpus_per_node);
+            self.cluster.nodes = c.usize_or("nodes", self.cluster.nodes);
+            self.cluster.image_pull_cold_s =
+                c.f64_or("image_pull_cold_s", self.cluster.image_pull_cold_s);
+            self.cluster.image_pull_cached_s =
+                c.f64_or("image_pull_cached_s", self.cluster.image_pull_cached_s);
+            self.cluster.pvc_bandwidth_gbps =
+                c.f64_or("pvc_bandwidth_gbps", self.cluster.pvc_bandwidth_gbps);
+            self.cluster.engine_init_s =
+                c.f64_or("engine_init_s", self.cluster.engine_init_s);
+            self.cluster.failure_rate_per_hour =
+                c.f64_or("failure_rate_per_hour", self.cluster.failure_rate_per_hour);
+        }
+        if let Some(p) = j.get("profile").and_then(Json::as_str) {
+            self.profile = Profile::by_name(p)
+                .ok_or_else(|| anyhow::anyhow!("unknown profile `{p}`"))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_match_paper() {
+        assert_eq!(Profile::QUALITY.alpha, 1.0);
+        assert_eq!(Profile::COST.mu, 0.8);
+        assert_eq!(Profile::SPEED.lambda, 0.8);
+        assert_eq!(Profile::BALANCED.alpha, 0.5);
+        assert_eq!(Profile::by_name("quality"), Some(Profile::QUALITY));
+        assert_eq!(Profile::by_name("nope"), None);
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = Config::default();
+        assert_eq!(c.orchestrator.telemetry_window_s, 300.0);
+        assert!(c.orchestrator.cooldown_s > 0.0);
+        assert_eq!(c.router.mode, RouterMode::Hybrid);
+    }
+
+    #[test]
+    fn overlay_partial() {
+        let mut c = Config::default();
+        let j = Json::parse(
+            r#"{"router":{"mode":"keyword"},
+                "orchestrator":{"idle_timeout_s":60,"warm_pool":[2,1,1]},
+                "profile":"cost"}"#,
+        )
+        .unwrap();
+        c.overlay(&j).unwrap();
+        assert_eq!(c.router.mode, RouterMode::Keyword);
+        assert_eq!(c.orchestrator.idle_timeout_s, 60.0);
+        assert_eq!(c.orchestrator.warm_pool, [2, 1, 1]);
+        assert_eq!(c.profile, Profile::COST);
+        // untouched fields keep defaults
+        assert_eq!(c.gateway.port, 8080);
+    }
+
+    #[test]
+    fn overlay_rejects_bad_mode() {
+        let mut c = Config::default();
+        let j = Json::parse(r#"{"router":{"mode":"quantum"}}"#).unwrap();
+        assert!(c.overlay(&j).is_err());
+    }
+
+    #[test]
+    fn router_mode_parse() {
+        assert_eq!(RouterMode::parse("distilbert"), Some(RouterMode::Semantic));
+        assert_eq!(RouterMode::parse("hybrid").unwrap().name(), "hybrid");
+    }
+}

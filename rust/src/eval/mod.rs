@@ -1,0 +1,342 @@
+//! Evaluation: metrics and report generation for every table and figure
+//! in the paper (the bench harnesses call these and print).
+
+use std::collections::BTreeMap;
+
+use crate::sim::{RequestRecord, SimReport};
+use crate::util::format_table;
+use crate::util::stats::{eq10_scale, mean, Summary};
+
+/// Per-benchmark aggregate.
+#[derive(Debug, Clone, Default)]
+pub struct BenchAgg {
+    pub runs: usize,
+    pub successes: usize,
+    pub latencies: Vec<f64>,
+    pub ttfts: Vec<f64>,
+}
+
+impl BenchAgg {
+    pub fn success_rate(&self) -> f64 {
+        if self.runs == 0 {
+            0.0
+        } else {
+            self.successes as f64 / self.runs as f64
+        }
+    }
+}
+
+/// Group records by benchmark.
+pub fn per_benchmark(records: &[RequestRecord]) -> BTreeMap<String, BenchAgg> {
+    let mut out: BTreeMap<String, BenchAgg> = BTreeMap::new();
+    for r in records {
+        let e = out.entry(r.benchmark.clone()).or_default();
+        e.runs += 1;
+        if r.success {
+            e.successes += 1;
+        }
+        e.latencies.push(r.latency_s);
+        e.ttfts.push(r.ttft_s);
+    }
+    out
+}
+
+/// Table 1 — baseline completion per benchmark.
+pub fn table1(report: &SimReport, paper_rates: &[(&str, f64)]) -> String {
+    let agg = per_benchmark(&report.records);
+    let mut rows = Vec::new();
+    let (mut truns, mut tsucc) = (0usize, 0usize);
+    for (name, a) in &agg {
+        let paper = paper_rates
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, r)| format!("{:.1}", r * 100.0))
+            .unwrap_or_else(|| "-".into());
+        rows.push(vec![
+            name.clone(),
+            a.runs.to_string(),
+            a.successes.to_string(),
+            (a.runs - a.successes).to_string(),
+            format!("{:.1}", a.success_rate() * 100.0),
+            paper,
+        ]);
+        truns += a.runs;
+        tsucc += a.successes;
+    }
+    rows.push(vec![
+        "TOTAL".into(),
+        truns.to_string(),
+        tsucc.to_string(),
+        (truns - tsucc).to_string(),
+        format!("{:.1}", 100.0 * tsucc as f64 / truns.max(1) as f64),
+        "77.1".into(),
+    ]);
+    format_table(
+        &["Benchmark", "Runs", "Success", "Failures", "Success (%)", "Paper (%)"],
+        &rows,
+    )
+}
+
+/// Table 2 — routing strategy comparison. Values are deltas vs the
+/// unrouted baseline, as the paper reports them.
+pub struct RoutingRow {
+    pub strategy: String,
+    pub accuracy_gain_pct: f64,
+    pub latency_reduction_pct: f64,
+    pub gpu_util_pct: f64,
+}
+
+pub fn routing_row(name: &str, routed: &SimReport, baseline: &SimReport) -> RoutingRow {
+    let acc_gain =
+        (routed.success_rate() - baseline.success_rate()) * 100.0;
+    let lat_red = if baseline.mean_latency_s() > 0.0 {
+        (1.0 - routed.mean_latency_s() / baseline.mean_latency_s()) * 100.0
+    } else {
+        0.0
+    };
+    RoutingRow {
+        strategy: name.to_string(),
+        accuracy_gain_pct: acc_gain,
+        latency_reduction_pct: lat_red,
+        gpu_util_pct: routed.gpu_utilization() * 100.0,
+    }
+}
+
+pub fn table2(rows: &[RoutingRow]) -> String {
+    format_table(
+        &["Strategy", "Accuracy (%+)", "Latency (%↓)", "GPU Util. (%)"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.strategy.clone(),
+                    format!("{:.1}", r.accuracy_gain_pct),
+                    format!("{:.1}", r.latency_reduction_pct),
+                    format!("{:.1}", r.gpu_util_pct),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    )
+}
+
+/// Table 3 — selection strategies.
+pub fn table3(rows: &[(&str, &SimReport)]) -> String {
+    let base_acc = rows
+        .first()
+        .map(|(_, r)| r.success_rate())
+        .unwrap_or(0.0);
+    format_table(
+        &["Selection Strategy", "Accuracy (%)", "Latency (s)", "Cost (USD)", "Gain (%)"],
+        &rows
+            .iter()
+            .map(|(name, r)| {
+                let gain = (r.success_rate() - base_acc) * 100.0;
+                vec![
+                    name.to_string(),
+                    format!("{:.1}", r.success_rate() * 100.0),
+                    format!("{:.1}", r.mean_latency_s()),
+                    format!("{:.4}", mean(&r.records.iter().map(|x| x.cost_usd).collect::<Vec<_>>())),
+                    if gain.abs() < 1e-9 {
+                        "-".into()
+                    } else {
+                        format!("{gain:+.1}")
+                    },
+                ]
+            })
+            .collect::<Vec<_>>(),
+    )
+}
+
+/// Table 4 — cost & recovery per deployment configuration.
+pub fn table4(rows: &[(&str, &SimReport)]) -> String {
+    format_table(
+        &["Configuration", "Cost / Query (USD)", "Recovery (s)"],
+        &rows
+            .iter()
+            .map(|(name, r)| {
+                vec![
+                    name.to_string(),
+                    format!("{:.4}", r.cost_per_query_usd()),
+                    r.mean_recovery_s
+                        .map(|s| format!("{s:.1}"))
+                        .unwrap_or_else(|| "-".into()),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    )
+}
+
+/// Eq. 9 — routing efficiency η = (A_r/A_b) / (C_r/C_b).
+///
+/// Costs are the *marginal inference* cost per query (the paper's
+/// "corresponding inference costs"), not the amortized fleet cost —
+/// fleet idle time is Table 4's metric.
+pub fn eta(routed: &SimReport, baseline: &SimReport) -> f64 {
+    let a = routed.success_rate() / baseline.success_rate().max(1e-9);
+    let rc = mean(&routed.records.iter().map(|r| r.cost_usd).collect::<Vec<_>>());
+    let bc = mean(&baseline.records.iter().map(|r| r.cost_usd).collect::<Vec<_>>());
+    let c = rc / bc.max(1e-12);
+    a / c.max(1e-9)
+}
+
+/// Fig. 4 — complexity distribution histogram per router.
+pub fn complexity_distribution(records: &[RequestRecord]) -> [usize; 3] {
+    let mut dist = [0usize; 3];
+    for r in records {
+        dist[r.predicted_complexity.min(2)] += 1;
+    }
+    dist
+}
+
+/// Fig. 5/6 — per-benchmark success and latency for one router.
+pub fn per_benchmark_rows(report: &SimReport) -> Vec<(String, f64, f64)> {
+    per_benchmark(&report.records)
+        .into_iter()
+        .map(|(name, a)| (name, a.success_rate() * 100.0, mean(&a.latencies)))
+        .collect()
+}
+
+/// Fig. 9 — the five normalized dimensions (Eq. 10) for a set of systems.
+/// Dimensions: accuracy, latency (inverted), scalability (throughput),
+/// utilization, robustness (success under failures).
+pub fn radar(rows: &[(&str, &SimReport)]) -> Vec<(String, Vec<f64>)> {
+    let acc: Vec<f64> = rows.iter().map(|(_, r)| r.success_rate()).collect();
+    let lat: Vec<f64> = rows.iter().map(|(_, r)| -r.mean_latency_s()).collect();
+    let thr: Vec<f64> = rows.iter().map(|(_, r)| r.throughput_qps()).collect();
+    let util: Vec<f64> = rows.iter().map(|(_, r)| r.gpu_utilization()).collect();
+    let rob: Vec<f64> = rows
+        .iter()
+        .map(|(_, r)| {
+            // robustness: success weighted by tail latency control
+            let s = Summary::of(
+                &r.records.iter().map(|x| x.latency_s).collect::<Vec<_>>(),
+            );
+            r.success_rate() / (1.0 + s.p99 / s.p50.max(1e-9))
+        })
+        .collect();
+    let dims = [acc, lat, thr, util, rob].map(|v| eq10_scale(&v));
+    rows.iter()
+        .enumerate()
+        .map(|(i, (name, _))| {
+            (name.to_string(), dims.iter().map(|d| d[i]).collect())
+        })
+        .collect()
+}
+
+/// Fig. 10/11 — TTFT summary per router.
+pub fn ttft_summary(report: &SimReport) -> Summary {
+    Summary::of(&report.records.iter().map(|r| r.ttft_s).collect::<Vec<_>>())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::BackendKind;
+
+    fn record(bench: &str, success: bool, lat: f64) -> RequestRecord {
+        RequestRecord {
+            benchmark: bench.into(),
+            true_complexity: 1,
+            predicted_complexity: 1,
+            model: "gemma3-27b",
+            backend: BackendKind::Vllm,
+            success,
+            latency_s: lat,
+            ttft_s: lat / 4.0,
+            wait_s: 0.1,
+            router_overhead_s: 0.0,
+            cost_usd: 0.01,
+        }
+    }
+
+    fn report(records: Vec<RequestRecord>) -> SimReport {
+        SimReport {
+            records,
+            duration_s: 100.0,
+            gpu_seconds_held: 1000.0,
+            gpu_seconds_busy: 600.0,
+            system_cost_usd: 0.69,
+            mean_recovery_s: Some(10.0),
+            n_failures_injected: 2,
+            semantic_refinement_rate: 0.4,
+        }
+    }
+
+    #[test]
+    fn per_benchmark_groups() {
+        let recs = vec![
+            record("arc", true, 1.0),
+            record("arc", false, 2.0),
+            record("math", true, 3.0),
+        ];
+        let agg = per_benchmark(&recs);
+        assert_eq!(agg["arc"].runs, 2);
+        assert_eq!(agg["arc"].successes, 1);
+        assert!((agg["arc"].success_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(agg["math"].runs, 1);
+    }
+
+    #[test]
+    fn table1_formats_with_total() {
+        let rep = report(vec![record("arc", true, 1.0), record("arc", false, 2.0)]);
+        let t = table1(&rep, &[("arc", 0.803)]);
+        assert!(t.contains("arc"));
+        assert!(t.contains("TOTAL"));
+        assert!(t.contains("50.0"));
+        assert!(t.contains("80.3"));
+    }
+
+    #[test]
+    fn eta_matches_formula() {
+        let routed = report(vec![record("arc", true, 1.0); 9]
+            .into_iter()
+            .chain(vec![record("arc", false, 1.0); 1])
+            .collect());
+        let base = report(vec![record("arc", true, 1.0); 7]
+            .into_iter()
+            .chain(vec![record("arc", false, 1.0); 3])
+            .collect());
+        // Same cost/query → η = accuracy ratio = 0.9/0.7
+        let e = eta(&routed, &base);
+        assert!((e - 0.9 / 0.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn radar_scales_to_ten() {
+        let a = report(vec![record("arc", true, 1.0); 10]);
+        let b = report(vec![record("arc", false, 5.0); 10]);
+        let rows = radar(&[("A", &a), ("B", &b)]);
+        assert_eq!(rows.len(), 2);
+        for (_, dims) in &rows {
+            assert_eq!(dims.len(), 5);
+            for d in dims {
+                assert!((0.0..=10.0).contains(d));
+            }
+        }
+        // A dominates on accuracy (dim 0).
+        assert!(rows[0].1[0] > rows[1].1[0]);
+    }
+
+    #[test]
+    fn routing_row_computes_deltas() {
+        let routed = report(vec![record("arc", true, 1.0); 10]);
+        let base = report(
+            vec![record("arc", true, 2.0); 8]
+                .into_iter()
+                .chain(vec![record("arc", false, 2.0); 2])
+                .collect(),
+        );
+        let row = routing_row("keyword", &routed, &base);
+        assert!((row.accuracy_gain_pct - 20.0).abs() < 1e-9);
+        assert!((row.latency_reduction_pct - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn complexity_distribution_counts() {
+        let mut recs = vec![record("arc", true, 1.0); 3];
+        recs[0].predicted_complexity = 0;
+        recs[1].predicted_complexity = 2;
+        let d = complexity_distribution(&recs);
+        assert_eq!(d, [1, 1, 1]);
+    }
+}

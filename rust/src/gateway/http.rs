@@ -1,0 +1,262 @@
+//! Minimal HTTP/1.1 substrate (no hyper/axum offline): request parser,
+//! response writer, and a threadpool-backed listener loop.
+//!
+//! Supports exactly what the gateway needs: GET/POST, Content-Length
+//! bodies, JSON payloads, keep-alive off (connection: close per
+//! response) — deliberately boring and easy to audit.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::threadpool::ThreadPool;
+
+/// A parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn body_str(&self) -> Result<&str> {
+        std::str::from_utf8(&self.body).map_err(|e| anyhow!("body utf8: {e}"))
+    }
+}
+
+/// Parse one request from a stream.
+pub fn parse_request(stream: &mut TcpStream) -> Result<Request> {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().ok_or_else(|| anyhow!("empty request"))?.to_string();
+    let path = parts.next().ok_or_else(|| anyhow!("missing path"))?.to_string();
+    let mut headers = Vec::new();
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        let (k, v) = h
+            .split_once(':')
+            .ok_or_else(|| anyhow!("bad header `{h}`"))?;
+        let k = k.trim().to_string();
+        let v = v.trim().to_string();
+        if k.eq_ignore_ascii_case("content-length") {
+            content_length = v.parse()?;
+        }
+        headers.push((k, v));
+    }
+    if content_length > 8 * 1024 * 1024 {
+        bail!("body too large");
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok(Request { method, path, headers, body })
+}
+
+/// Write a response.
+pub fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+) -> Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    };
+    write!(
+        stream,
+        "HTTP/1.1 {status} {reason}\r\ncontent-type: {content_type}\r\n\
+         content-length: {}\r\nconnection: close\r\n\r\n",
+        body.len()
+    )?;
+    stream.write_all(body)?;
+    Ok(())
+}
+
+/// A running HTTP server; `stop()` makes `serve` return.
+pub struct HttpServer {
+    pub port: u16,
+    stop: Arc<AtomicBool>,
+}
+
+impl HttpServer {
+    /// Bind and serve on a threadpool; `handler` maps requests to
+    /// (status, content-type, body). Returns once bound, serving on a
+    /// background thread.
+    pub fn start<F>(port: u16, threads: usize, handler: F) -> Result<HttpServer>
+    where
+        F: Fn(&Request) -> (u16, String, Vec<u8>) + Send + Sync + 'static,
+    {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let actual_port = listener.local_addr()?.port();
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handler = Arc::new(handler);
+        std::thread::Builder::new()
+            .name("http-accept".into())
+            .spawn(move || {
+                let pool = ThreadPool::new(threads, "http");
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((mut stream, _)) => {
+                            let h = Arc::clone(&handler);
+                            pool.execute(move || {
+                                let _ = stream.set_nodelay(true);
+                                match parse_request(&mut stream) {
+                                    Ok(req) => {
+                                        let (status, ct, body) = h(&req);
+                                        let _ = write_response(
+                                            &mut stream, status, &ct, &body,
+                                        );
+                                    }
+                                    Err(e) => {
+                                        let _ = write_response(
+                                            &mut stream,
+                                            400,
+                                            "text/plain",
+                                            e.to_string().as_bytes(),
+                                        );
+                                    }
+                                }
+                            });
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                pool.shutdown();
+            })?;
+        Ok(HttpServer { port: actual_port, stop })
+    }
+
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Tiny HTTP client for tests/examples (same substrate, reversed).
+pub fn http_request(
+    port: u16,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(("127.0.0.1", port))?;
+    let body = body.unwrap_or("");
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nhost: localhost\r\n\
+         content-length: {}\r\ncontent-type: application/json\r\n\r\n{body}",
+        body.len()
+    )?;
+    let mut reader = BufReader::new(&mut stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .ok_or_else(|| anyhow!("bad status line"))?
+        .parse()?;
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        if h.trim_end().is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse()?;
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok((status, String::from_utf8(body)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip() {
+        let srv = HttpServer::start(0, 2, |req| {
+            assert_eq!(req.method, "POST");
+            let echo = format!("path={} body={}", req.path, req.body_str().unwrap());
+            (200, "text/plain".into(), echo.into_bytes())
+        })
+        .unwrap();
+        let (status, body) =
+            http_request(srv.port, "POST", "/echo", Some("hello")).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, "path=/echo body=hello");
+        srv.stop();
+    }
+
+    #[test]
+    fn get_without_body() {
+        let srv = HttpServer::start(0, 2, |req| match req.path.as_str() {
+            "/healthz" => (200, "text/plain".into(), b"ok".to_vec()),
+            _ => (404, "text/plain".into(), b"nope".to_vec()),
+        })
+        .unwrap();
+        let (s1, b1) = http_request(srv.port, "GET", "/healthz", None).unwrap();
+        assert_eq!((s1, b1.as_str()), (200, "ok"));
+        let (s2, _) = http_request(srv.port, "GET", "/missing", None).unwrap();
+        assert_eq!(s2, 404);
+    }
+
+    #[test]
+    fn concurrent_requests() {
+        let srv = HttpServer::start(0, 4, |_req| {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            (200, "text/plain".into(), b"done".to_vec())
+        })
+        .unwrap();
+        let port = srv.port;
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    http_request(port, "GET", "/", None).unwrap().0
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 200);
+        }
+    }
+}

@@ -1,0 +1,273 @@
+//! API Gateway — the entry point of Fig. 1, plus the live serving stack.
+//!
+//! Two layers:
+//! * [`http`] — the from-scratch HTTP/1.1 substrate.
+//! * [`LiveStack`] — the real serving path: an engine thread that owns
+//!   the PJRT runtime (classifier + the three compiled LM tiers; PJRT
+//!   handles are not `Send`, so the thread *creates* them) and serves
+//!   jobs from a bounded channel (admission control / backpressure).
+//!
+//! Requests: `POST /v1/completions {"prompt": "...", "max_tokens": N}` →
+//! routed by the hybrid router, executed on the tier the matrix picks,
+//! answered with token ids + timing. `GET /healthz`, `GET /metrics`.
+
+pub mod http;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{Config, RouterMode};
+use crate::models::{zoo, Tier};
+use crate::registry::Registry;
+use crate::router::hybrid::HybridRouter;
+use crate::router::keyword::KeywordRouter;
+use crate::router::{Classification, Router};
+use crate::runtime::Runtime;
+use crate::scoring::Weights;
+use crate::util::json::Json;
+use crate::util::threadpool::{Channel, OneShot};
+
+/// A live completion response.
+#[derive(Debug, Clone)]
+pub struct LiveResponse {
+    pub tokens: Vec<i32>,
+    pub tier: String,
+    pub model: &'static str,
+    pub complexity: usize,
+    pub confidence: f64,
+    pub ttft_s: f64,
+    pub latency_s: f64,
+    pub prompt_tokens: usize,
+}
+
+struct Job {
+    prompt: String,
+    max_tokens: usize,
+    reply: OneShot<Result<LiveResponse, String>>,
+}
+
+/// Counters exported at `/metrics`.
+#[derive(Default)]
+pub struct GatewayMetrics {
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub errors: AtomicU64,
+    pub rejected: AtomicU64,
+    pub tokens_out: AtomicU64,
+}
+
+/// The live serving stack: hybrid router + three compiled LM tiers on a
+/// dedicated engine thread.
+pub struct LiveStack {
+    jobs: Channel<Job>,
+    pub metrics: Arc<GatewayMetrics>,
+    engine: Option<std::thread::JoinHandle<()>>,
+}
+
+impl LiveStack {
+    /// Spin up the engine thread (compiles artifacts — takes a few
+    /// seconds; returns after the engines are warm).
+    pub fn start(cfg: &Config) -> Result<LiveStack> {
+        let jobs: Channel<Job> = Channel::bounded(cfg.gateway.queue_capacity);
+        let metrics = Arc::new(GatewayMetrics::default());
+        let rx = jobs.clone();
+        let artifacts = cfg.paths.artifacts.clone();
+        let router_cfg = cfg.router.clone();
+        let profile = cfg.profile;
+        let ready: OneShot<Result<(), String>> = OneShot::new();
+        let ready_tx = ready.clone();
+        let metrics2 = Arc::clone(&metrics);
+        let engine = std::thread::Builder::new()
+            .name("engine".into())
+            .spawn(move || {
+                // PJRT objects live and die on this thread.
+                let mut rt = match Runtime::load(&artifacts) {
+                    Ok(rt) => rt,
+                    Err(e) => {
+                        ready_tx.put(Err(format!("runtime: {e:#}")));
+                        return;
+                    }
+                };
+                let classifier = match rt.classifier_engine() {
+                    Ok(c) => c,
+                    Err(e) => {
+                        ready_tx.put(Err(format!("classifier: {e:#}")));
+                        return;
+                    }
+                };
+                let mut engines = Vec::new();
+                for tier in ["small", "medium", "large"] {
+                    match rt.lm_engine(tier, &[1, 4]) {
+                        Ok(e) => engines.push(e),
+                        Err(e) => {
+                            ready_tx.put(Err(format!("lm {tier}: {e:#}")));
+                            return;
+                        }
+                    }
+                }
+                // Routing state: the registry scores the matrix; live
+                // replicas are the in-process engines (1 each).
+                let zoo_models = zoo();
+                let mut registry = Registry::new(&zoo_models, 300.0);
+                for s in &mut registry.services {
+                    s.ready_replicas = 1;
+                }
+                let weights = Weights::from_profile(&profile);
+                let mut router: Box<dyn Router> = match router_cfg.mode {
+                    RouterMode::Keyword => Box::new(KeywordRouter::new()),
+                    _ => Box::new(HybridRouter::new(classifier, &router_cfg)),
+                };
+                ready_tx.put(Ok(()));
+                while let Some(job) = rx.recv() {
+                    let out = serve_one(
+                        &mut *router,
+                        &registry,
+                        weights,
+                        &engines,
+                        &job.prompt,
+                        job.max_tokens,
+                    );
+                    match &out {
+                        Ok(r) => {
+                            metrics2.completed.fetch_add(1, Ordering::Relaxed);
+                            metrics2
+                                .tokens_out
+                                .fetch_add(r.tokens.len() as u64, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            metrics2.errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    job.reply.put(out.map_err(|e| format!("{e:#}")));
+                }
+            })?;
+        match ready.wait() {
+            Ok(()) => Ok(LiveStack { jobs, metrics, engine: Some(engine) }),
+            Err(e) => Err(anyhow!("engine thread failed to start: {e}")),
+        }
+    }
+
+    /// Serve one prompt (blocks until the engine thread answers).
+    pub fn complete(&self, prompt: &str, max_tokens: usize) -> Result<LiveResponse> {
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let reply: OneShot<Result<LiveResponse, String>> = OneShot::new();
+        let job = Job {
+            prompt: prompt.to_string(),
+            max_tokens,
+            reply: reply.clone(),
+        };
+        if self.jobs.try_send(job).is_err() {
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(anyhow!("queue full (backpressure)"));
+        }
+        reply.wait().map_err(|e| anyhow!(e))
+    }
+
+    pub fn shutdown(mut self) {
+        self.jobs.close();
+        if let Some(h) = self.engine.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for LiveStack {
+    fn drop(&mut self) {
+        self.jobs.close();
+        if let Some(h) = self.engine.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Route + execute one prompt on the in-process engines.
+fn serve_one(
+    router: &mut dyn Router,
+    registry: &Registry,
+    weights: Weights,
+    engines: &[crate::runtime::LmEngine],
+    prompt: &str,
+    max_tokens: usize,
+) -> Result<LiveResponse> {
+    let class: Classification = router.route(prompt)?;
+    // Alg. 2 over the matrix picks the model; its engine tier executes.
+    let in_tokens = crate::tokenizer::word_count(prompt).max(1) as f64;
+    let out_est = 0.5 * max_tokens as f64;
+    let sel = crate::orchestrator::select(
+        registry, weights, &class, in_tokens, out_est, |_| 0.0,
+    )
+    .ok_or_else(|| anyhow!("no routable service"))?;
+    let svc = registry.get(sel.service);
+    let tier: Tier = svc.spec.tier;
+    let engine = &engines[tier.index()];
+    let gen = engine.generate(prompt, max_tokens)?;
+    Ok(LiveResponse {
+        tokens: gen.tokens,
+        tier: tier.name().to_string(),
+        model: svc.spec.name,
+        complexity: class.complexity,
+        confidence: class.confidence,
+        ttft_s: gen.ttft_s,
+        latency_s: gen.latency_s,
+        prompt_tokens: gen.prompt_tokens,
+    })
+}
+
+/// Start the HTTP gateway over a live stack. Returns the bound server.
+pub fn serve_http(stack: Arc<LiveStack>, port: u16, threads: usize) -> Result<http::HttpServer> {
+    http::HttpServer::start(port, threads, move |req| {
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/healthz") => (200, "text/plain".into(), b"ok".to_vec()),
+            ("GET", "/metrics") => {
+                let m = &stack.metrics;
+                let body = crate::telemetry::export_prometheus(&[
+                    ("ps_requests_total".into(),
+                     m.requests.load(Ordering::Relaxed) as f64),
+                    ("ps_completed_total".into(),
+                     m.completed.load(Ordering::Relaxed) as f64),
+                    ("ps_errors_total".into(),
+                     m.errors.load(Ordering::Relaxed) as f64),
+                    ("ps_rejected_total".into(),
+                     m.rejected.load(Ordering::Relaxed) as f64),
+                    ("ps_tokens_out_total".into(),
+                     m.tokens_out.load(Ordering::Relaxed) as f64),
+                ]);
+                (200, "text/plain".into(), body.into_bytes())
+            }
+            ("POST", "/v1/completions") => match handle_completion(&stack, req) {
+                Ok(body) => (200, "application/json".into(), body.into_bytes()),
+                Err(e) => (
+                    500,
+                    "application/json".into(),
+                    Json::obj(vec![("error", Json::str(format!("{e:#}")))])
+                        .dump()
+                        .into_bytes(),
+                ),
+            },
+            _ => (404, "text/plain".into(), b"not found".to_vec()),
+        }
+    })
+}
+
+fn handle_completion(stack: &LiveStack, req: &http::Request) -> Result<String> {
+    let j = Json::parse(req.body_str()?)?;
+    let prompt = j.rstr("prompt")?;
+    let max_tokens = j.usize_or("max_tokens", 16).min(64);
+    let r = stack.complete(prompt, max_tokens)?;
+    Ok(Json::obj(vec![
+        ("model", Json::str(r.model)),
+        ("tier", Json::str(r.tier.clone())),
+        ("complexity", Json::num(r.complexity as f64)),
+        ("confidence", Json::num(r.confidence)),
+        ("ttft_s", Json::num(r.ttft_s)),
+        ("latency_s", Json::num(r.latency_s)),
+        ("prompt_tokens", Json::num(r.prompt_tokens as f64)),
+        (
+            "tokens",
+            Json::arr(r.tokens.iter().map(|&t| Json::num(t as f64))),
+        ),
+    ])
+    .dump())
+}

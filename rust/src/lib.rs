@@ -1,0 +1,43 @@
+//! # Pick and Spin
+//!
+//! A from-scratch reproduction of *"Efficient Multi-Model Orchestration for
+//! Self-Hosted Large Language Models"* (Vangala & Malik, 2025) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Pick** — the routing layer ([`router`]): keyword heuristics, a
+//!   compiled DistilBERT-lite complexity classifier executed via PJRT, and
+//!   a hybrid policy; scored against the service matrix with the
+//!   normalized multi-objective function of Eq. 2 ([`scoring`]).
+//! * **Spin** — the orchestration layer ([`orchestrator`]): warm pools,
+//!   Little's-law capacity planning, cooldowns, scale-to-zero and fault
+//!   recovery over a simulated Kubernetes substrate ([`cluster`]).
+//! * **Serving** — backend pool ([`backend`]) with continuous batching and
+//!   a block-granular KV manager, executing AOT-compiled HLO modules
+//!   through the PJRT C API ([`runtime`]). Python never runs at request
+//!   time.
+//!
+//! The crate is dependency-light by necessity (offline build): [`util`]
+//! provides the JSON, RNG, stats, threadpool, logging, clock and CLI
+//! substrates that would otherwise come from serde/rand/tokio/clap.
+
+pub mod backend;
+pub mod baselines;
+pub mod cluster;
+pub mod config;
+pub mod eval;
+pub mod gateway;
+pub mod models;
+pub mod orchestrator;
+pub mod registry;
+pub mod router;
+pub mod runtime;
+pub mod scoring;
+pub mod sim;
+pub mod telemetry;
+pub mod testkit;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,233 @@
+//! `pick-and-spin` — leader entrypoint and CLI.
+//!
+//! Subcommands:
+//! * `serve`  — start the live HTTP gateway over the compiled artifacts.
+//! * `route`  — classify a prompt and print the matrix scores (Alg. 2).
+//! * `sim`    — run a virtual-time simulation and print the report.
+//! * `report` — regenerate the paper's headline tables quickly.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use pick_and_spin::baselines::SelectionPolicy;
+use pick_and_spin::config::{Config, Profile, RouterMode};
+use pick_and_spin::eval;
+use pick_and_spin::gateway::{serve_http, LiveStack};
+use pick_and_spin::models::completion::TABLE1_RATES;
+use pick_and_spin::router::keyword::KeywordRouter;
+use pick_and_spin::sim::{Deployment, SimConfig};
+use pick_and_spin::util::args::{Args, Spec};
+use pick_and_spin::util::logging;
+use pick_and_spin::workload::{OracleClassifier, TemplateLibrary};
+
+fn spec() -> Spec {
+    Spec {
+        name: "pick-and-spin",
+        about: "multi-model LLM orchestration (paper reproduction)",
+        options: vec![
+            ("config", true, "JSON config file"),
+            ("artifacts", true, "artifacts directory (default: artifacts)"),
+            ("data", true, "data directory (default: data)"),
+            ("port", true, "gateway port (serve)"),
+            ("prompt", true, "prompt text (route)"),
+            ("requests", true, "simulated requests (sim)"),
+            ("rate", true, "arrival rate qps (sim)"),
+            ("router", true, "keyword | semantic | hybrid"),
+            ("profile", true, "baseline|quality|cost|speed|balanced"),
+            ("policy", true, "multi|random|latency|roundrobin"),
+            ("static", false, "static deployment (sim)"),
+            ("seed", true, "rng seed"),
+            ("log-level", true, "error|warn|info|debug|trace"),
+        ],
+    }
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    logging::init_from_env();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (command, rest) = match argv.split_first() {
+        Some((c, rest)) if !c.starts_with("--") => (c.clone(), rest.to_vec()),
+        _ => (String::from("help"), argv.clone()),
+    };
+    let args = spec().parse(&rest)?;
+    if let Some(l) = args.opt("log-level") {
+        if let Some(level) = logging::Level::parse(l) {
+            logging::set_level(level);
+        }
+    }
+    let mut cfg = Config::load(args.opt("config"))?;
+    if let Some(a) = args.opt("artifacts") {
+        cfg.paths.artifacts = a.to_string();
+    }
+    if let Some(d) = args.opt("data") {
+        cfg.paths.data = d.to_string();
+    }
+    if let Some(p) = args.opt("profile") {
+        cfg.profile = Profile::by_name(p)
+            .ok_or_else(|| anyhow::anyhow!("unknown profile `{p}`"))?;
+    }
+    if let Some(r) = args.opt("router") {
+        cfg.router.mode = RouterMode::parse(r)
+            .ok_or_else(|| anyhow::anyhow!("unknown router `{r}`"))?;
+    }
+
+    match command.as_str() {
+        "serve" => cmd_serve(&cfg, &args),
+        "route" => cmd_route(&cfg, &args),
+        "sim" => cmd_sim(&cfg, &args),
+        "report" => cmd_report(&cfg, &args),
+        _ => {
+            println!("{}", spec().usage());
+            println!("Commands: serve | route | sim | report");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
+    let port = args.opt_usize("port", cfg.gateway.port as usize)? as u16;
+    println!("loading artifacts from {} ...", cfg.paths.artifacts);
+    let stack = Arc::new(LiveStack::start(cfg)?);
+    let srv = serve_http(Arc::clone(&stack), port, cfg.gateway.worker_threads)?;
+    println!(
+        "pick-and-spin listening on http://127.0.0.1:{} \
+         (POST /v1/completions, GET /metrics)",
+        srv.port
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_route(cfg: &Config, args: &Args) -> Result<()> {
+    let prompt = args
+        .opt("prompt")
+        .ok_or_else(|| anyhow::anyhow!("route requires --prompt"))?;
+    let kw = KeywordRouter::classify(prompt);
+    println!(
+        "keyword   → class {} ({}) conf {:.2}",
+        kw.complexity,
+        ["low", "medium", "high"][kw.complexity],
+        kw.confidence
+    );
+    // Semantic path needs artifacts.
+    let manifest = format!("{}/manifest.json", cfg.paths.artifacts);
+    if std::path::Path::new(&manifest).exists() {
+        use pick_and_spin::router::Classifier;
+        let mut rt = pick_and_spin::runtime::Runtime::load(&cfg.paths.artifacts)?;
+        let mut cls = rt.classifier_engine()?;
+        let p = cls.probs(prompt)?;
+        let (k, conf) = cls.classify(prompt)?;
+        println!(
+            "semantic  → class {} ({}) conf {:.2}  probs {:?}",
+            k,
+            ["low", "medium", "high"][k],
+            conf,
+            p.map(|x| (x * 1000.0).round() / 1000.0)
+        );
+    } else {
+        println!("semantic  → (artifacts not built; run `make artifacts`)");
+    }
+    Ok(())
+}
+
+fn parse_policy(s: &str) -> Result<SelectionPolicy> {
+    Ok(match s {
+        "multi" | "multi-objective" => SelectionPolicy::MultiObjective,
+        "random" => SelectionPolicy::Random,
+        "latency" | "latency-only" => SelectionPolicy::LatencyOnly,
+        "roundrobin" | "rr" => SelectionPolicy::RoundRobin,
+        _ => anyhow::bail!("unknown policy `{s}`"),
+    })
+}
+
+fn load_library(cfg: &Config) -> Result<TemplateLibrary> {
+    TemplateLibrary::load(&format!("{}/templates.json", cfg.paths.data))
+}
+
+fn cmd_sim(cfg: &Config, args: &Args) -> Result<()> {
+    let lib = load_library(cfg)?;
+    let mut sc = SimConfig::defaults();
+    sc.router_mode = cfg.router.mode;
+    sc.profile = cfg.profile;
+    sc.n_requests = args.opt_usize("requests", 20_000)?;
+    sc.rate_qps = args.opt_f64("rate", 20.0)?;
+    sc.seed = args.opt_u64("seed", 42)?;
+    sc.cluster.nodes = 8;
+    if let Some(p) = args.opt("policy") {
+        sc.policy = parse_policy(p)?;
+    }
+    if args.flag("static") {
+        sc.deployment = Deployment::Static;
+        sc.policy = SelectionPolicy::RoundRobin;
+    }
+    let classifier = Box::new(OracleClassifier::new(
+        lib.clone(),
+        sc.classifier_error,
+        sc.seed ^ 0xC1,
+    ));
+    let t0 = std::time::Instant::now();
+    let rep = pick_and_spin::sim::run(&sc, &lib, classifier)?;
+    println!(
+        "simulated {} requests in {:.2}s wall ({:.0} req/s sim speed)",
+        rep.records.len(),
+        t0.elapsed().as_secs_f64(),
+        rep.records.len() as f64 / t0.elapsed().as_secs_f64()
+    );
+    println!("{}", eval::table1(&rep, &TABLE1_RATES));
+    println!(
+        "success {:.1}%  mean latency {:.1}s  cost/query ${:.4}  \
+         GPU util {:.1}%  throughput {:.1} qps",
+        rep.success_rate() * 100.0,
+        rep.mean_latency_s(),
+        rep.cost_per_query_usd(),
+        rep.gpu_utilization() * 100.0,
+        rep.throughput_qps()
+    );
+    Ok(())
+}
+
+fn cmd_report(cfg: &Config, args: &Args) -> Result<()> {
+    let lib = load_library(cfg)?;
+    let n = args.opt_usize("requests", 8_000)?;
+    let seed = args.opt_u64("seed", 42)?;
+    let mk = |policy, deployment, router| {
+        let mut sc = SimConfig::defaults();
+        sc.n_requests = n;
+        sc.rate_qps = 20.0;
+        sc.seed = seed;
+        sc.cluster.nodes = 8;
+        sc.policy = policy;
+        sc.deployment = deployment;
+        sc.router_mode = router;
+        sc
+    };
+    let run = |sc: &SimConfig| {
+        let cls = Box::new(OracleClassifier::new(lib.clone(), sc.classifier_error, seed));
+        pick_and_spin::sim::run(sc, &lib, cls)
+    };
+    println!("== Table 1: baseline completion ==");
+    let base = run(&mk(SelectionPolicy::RoundRobin, Deployment::Static, RouterMode::Keyword))?;
+    println!("{}", eval::table1(&base, &TABLE1_RATES));
+    println!("== Table 3: selection strategies ==");
+    let rand = run(&mk(SelectionPolicy::Random, Deployment::Dynamic { auto_recovery: false }, RouterMode::Hybrid))?;
+    let lat = run(&mk(SelectionPolicy::LatencyOnly, Deployment::Dynamic { auto_recovery: false }, RouterMode::Hybrid))?;
+    let multi = run(&mk(SelectionPolicy::MultiObjective, Deployment::Dynamic { auto_recovery: false }, RouterMode::Hybrid))?;
+    println!(
+        "{}",
+        eval::table3(&[
+            ("Random assignment", &rand),
+            ("Latency only", &lat),
+            ("Multi objective", &multi),
+        ])
+    );
+    println!("η (Eq. 9, multi vs baseline) = {:.2}", eval::eta(&multi, &base));
+    Ok(())
+}

@@ -1,0 +1,255 @@
+//! Model zoo + calibrated performance/quality model.
+//!
+//! The paper serves four foundation models (Gemma-3 27B, Llama-3 90B,
+//! Qwen-3 235B, DeepSeek-R1 685B) on GPU clusters. Here each logical
+//! model maps to one of the three *compiled engine tiers* (the AOT HLO
+//! artifacts) for live execution, plus a calibrated performance/cost/
+//! quality profile used by the discrete-event simulator for the paper's
+//! large-scale tables (DESIGN.md §Substitutions).
+//!
+//! Calibration sources are documented per field; the simulator's
+//! *relative* ordering (who is faster/cheaper/stronger) is what the
+//! orchestration results depend on, not absolute numbers.
+
+pub mod completion;
+
+/// Engine tier — which compiled artifact family executes the model live.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Tier {
+    Small = 0,
+    Medium = 1,
+    Large = 2,
+}
+
+impl Tier {
+    pub const ALL: [Tier; 3] = [Tier::Small, Tier::Medium, Tier::Large];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Small => "small",
+            Tier::Medium => "medium",
+            Tier::Large => "large",
+        }
+    }
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn from_index(i: usize) -> Tier {
+        Tier::ALL[i]
+    }
+
+    /// The complexity class this tier is the *intended* destination for
+    /// (paper: small/medium/large ↔ low/medium/high).
+    pub fn for_complexity(c: usize) -> Tier {
+        Tier::ALL[c.min(2)]
+    }
+}
+
+/// One logical model in the zoo.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    /// Compiled engine tier used for live PJRT execution.
+    pub tier: Tier,
+    /// Parameter count in billions (paper's model sizes).
+    pub params_b: f64,
+    /// Weight footprint on the PVC in GB (fp8/int8-ish serving footprint:
+    /// ~1.05 bytes/param).
+    pub weight_gb: f64,
+    /// GPUs per replica (tensor-parallel degree needed to fit).
+    pub gpus: usize,
+    /// $ per GPU-hour (A100-class on-prem amortized; the paper's cost
+    /// unit is $/query derived from occupancy × this rate).
+    pub cost_per_gpu_hour: f64,
+    /// Decode throughput per stream, tokens/s, on the vLLM reference
+    /// backend (public serving benchmarks for each model class).
+    pub decode_tps: f64,
+    /// Prefill throughput, tokens/s.
+    pub prefill_tps: f64,
+    /// P(valid completion | complexity class) — the reliability the
+    /// paper's "success" metric measures, per complexity {low, med, high}.
+    pub capability: [f64; 3],
+}
+
+impl ModelSpec {
+    pub fn cost_per_replica_second(&self) -> f64 {
+        self.gpus as f64 * self.cost_per_gpu_hour / 3600.0
+    }
+}
+
+/// The four paper models.
+pub fn zoo() -> Vec<ModelSpec> {
+    vec![
+        ModelSpec {
+            name: "gemma3-27b",
+            tier: Tier::Small,
+            params_b: 27.0,
+            weight_gb: 28.0,
+            gpus: 1,
+            cost_per_gpu_hour: 2.5,
+            decode_tps: 45.0,
+            prefill_tps: 2200.0,
+            capability: [0.97, 0.80, 0.45],
+        },
+        ModelSpec {
+            name: "llama3-90b",
+            tier: Tier::Medium,
+            params_b: 90.0,
+            weight_gb: 94.0,
+            gpus: 2,
+            cost_per_gpu_hour: 2.5,
+            decode_tps: 25.0,
+            prefill_tps: 1400.0,
+            capability: [0.97, 0.90, 0.70],
+        },
+        ModelSpec {
+            name: "qwen3-235b",
+            tier: Tier::Large,
+            params_b: 235.0,
+            weight_gb: 245.0,
+            gpus: 4,
+            cost_per_gpu_hour: 2.5,
+            decode_tps: 15.0,
+            prefill_tps: 900.0,
+            capability: [0.98, 0.94, 0.88],
+        },
+        ModelSpec {
+            name: "deepseek-r1-685b",
+            tier: Tier::Large,
+            params_b: 685.0,
+            weight_gb: 700.0,
+            gpus: 8,
+            cost_per_gpu_hour: 2.5,
+            decode_tps: 10.0,
+            prefill_tps: 600.0,
+            capability: [0.98, 0.95, 0.92],
+        },
+    ]
+}
+
+/// Inference backends (columns of the paper's service matrix, with their
+/// stated characters: vLLM throughput, TensorRT-LLM latency, TGI memory).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    Vllm,
+    TrtLlm,
+    Tgi,
+}
+
+impl BackendKind {
+    pub const ALL: [BackendKind; 3] =
+        [BackendKind::Vllm, BackendKind::TrtLlm, BackendKind::Tgi];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Vllm => "vllm",
+            BackendKind::TrtLlm => "trt-llm",
+            BackendKind::Tgi => "tgi",
+        }
+    }
+
+    pub fn from_index(i: usize) -> BackendKind {
+        BackendKind::ALL[i]
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            BackendKind::Vllm => 0,
+            BackendKind::TrtLlm => 1,
+            BackendKind::Tgi => 2,
+        }
+    }
+
+    /// Latency multiplier vs the vLLM reference (TRT-LLM's compiled
+    /// kernels cut per-token latency; TGI trades latency for memory).
+    pub fn latency_factor(self) -> f64 {
+        match self {
+            BackendKind::Vllm => 1.0,
+            BackendKind::TrtLlm => 0.75,
+            BackendKind::Tgi => 1.15,
+        }
+    }
+
+    /// Max concurrent streams per replica (continuous-batching capacity;
+    /// vLLM's PagedAttention packs the most).
+    pub fn max_concurrency(self) -> usize {
+        match self {
+            BackendKind::Vllm => 16,
+            BackendKind::TrtLlm => 8,
+            BackendKind::Tgi => 12,
+        }
+    }
+
+    /// Cost multiplier (TGI's memory efficiency fits more replicas per
+    /// GPU budget; TRT's engines cost extra build/VRAM headroom).
+    pub fn cost_factor(self) -> f64 {
+        match self {
+            BackendKind::Vllm => 1.0,
+            BackendKind::TrtLlm => 1.1,
+            BackendKind::Tgi => 0.9,
+        }
+    }
+
+    /// Engine initialization time on cold start (TRT engine load is slow).
+    pub fn engine_init_s(self) -> f64 {
+        match self {
+            BackendKind::Vllm => 3.0,
+            BackendKind::TrtLlm => 8.0,
+            BackendKind::Tgi => 4.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_has_paper_models() {
+        let z = zoo();
+        assert_eq!(z.len(), 4);
+        assert_eq!(z[0].name, "gemma3-27b");
+        assert_eq!(z[3].params_b, 685.0);
+    }
+
+    #[test]
+    fn capability_monotone_in_size() {
+        let z = zoo();
+        // On high-complexity prompts bigger models are strictly stronger.
+        for w in z.windows(2) {
+            assert!(w[1].capability[2] > w[0].capability[2]);
+        }
+    }
+
+    #[test]
+    fn speed_monotone_decreasing_in_size() {
+        let z = zoo();
+        for w in z.windows(2) {
+            assert!(w[1].decode_tps < w[0].decode_tps);
+        }
+    }
+
+    #[test]
+    fn cost_scales_with_gpus() {
+        let z = zoo();
+        assert!(z[3].cost_per_replica_second() > 4.0 * z[0].cost_per_replica_second());
+    }
+
+    #[test]
+    fn tier_for_complexity() {
+        assert_eq!(Tier::for_complexity(0), Tier::Small);
+        assert_eq!(Tier::for_complexity(2), Tier::Large);
+        assert_eq!(Tier::for_complexity(9), Tier::Large);
+    }
+
+    #[test]
+    fn backend_characters() {
+        // TRT is the latency backend, vLLM the throughput backend, TGI the
+        // memory/cost backend — the paper's stated matrix columns.
+        assert!(BackendKind::TrtLlm.latency_factor() < BackendKind::Vllm.latency_factor());
+        assert!(BackendKind::Vllm.max_concurrency() > BackendKind::TrtLlm.max_concurrency());
+        assert!(BackendKind::Tgi.cost_factor() < BackendKind::Vllm.cost_factor());
+    }
+}

@@ -1,0 +1,15 @@
+//! Spin — the orchestration layer.
+//!
+//! * [`selection`] — Algorithm 2: score every viable matrix cell with
+//!   Eq. 2 and route to the argmax.
+//! * [`scaling`] — Algorithm 1: Little's-law capacity planning with warm
+//!   pools, cooldowns, and scale-to-zero.
+//! * [`recovery`] — failure detection and automatic redeployment (the
+//!   paper's recovery-time experiments, Table 4).
+
+pub mod recovery;
+pub mod scaling;
+pub mod selection;
+
+pub use scaling::{ScaleAction, Scaler};
+pub use selection::{select, Selection};

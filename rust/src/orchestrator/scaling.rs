@@ -1,0 +1,211 @@
+//! Algorithm 1 — Orchestration-Aware Scaling with Warm Pools.
+//!
+//! ```text
+//! for each model m in pool:
+//!     r_m      ← GetAvgRequestRate(m, w)          # telemetry window
+//!     lat_m    ← GetAvgLatency(m)
+//!     target   ← ceil(r_m × lat_m / Concurrency)  # Little's Law
+//!     current  ← GetReplicas(m)
+//!     min_warm ← WarmPoolSize(ModelTier(m))
+//!     if target > current AND CooldownExpired():  scale(max(target, min_warm))
+//!     elif IdleTime(m) > τ:                       scale(max(0, min_warm))
+//! ```
+//!
+//! The scaler is pure decision logic: it reads the registry and emits
+//! [`ScaleAction`]s; the caller applies them to the cluster (sim or
+//! live). This keeps Alg. 1 unit-testable in isolation.
+
+use crate::config::OrchestratorConfig;
+use crate::registry::{Registry, ServiceId};
+
+/// A scaling decision for one service.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScaleAction {
+    /// Scale up to `target` replicas (spawn `target - current` pods).
+    Up { service: ServiceId, target: usize },
+    /// Scale down to `target` replicas (terminate extras).
+    Down { service: ServiceId, target: usize },
+}
+
+/// Little's-law scaler with cooldown and warm pools.
+pub struct Scaler {
+    cfg: OrchestratorConfig,
+    /// Per-service end-of-cooldown timestamps.
+    cooldown_until: Vec<f64>,
+}
+
+impl Scaler {
+    pub fn new(cfg: OrchestratorConfig, n_services: usize) -> Scaler {
+        Scaler { cfg, cooldown_until: vec![0.0; n_services] }
+    }
+
+    pub fn cfg(&self) -> &OrchestratorConfig {
+        &self.cfg
+    }
+
+    /// Warm-pool floor for a service (by engine tier, paper's
+    /// `WarmPoolSize(ModelTier(m))`).
+    pub fn warm_pool(&self, registry: &Registry, id: ServiceId) -> usize {
+        let tier = registry.get(id).spec.tier;
+        self.cfg.warm_pool[tier.index()]
+    }
+
+    /// Run one Alg. 1 pass; returns actions to apply.
+    pub fn plan(&mut self, registry: &mut Registry, now_s: f64) -> Vec<ScaleAction> {
+        let mut actions = Vec::new();
+        for idx in 0..registry.services.len() {
+            let id = ServiceId(idx);
+            let min_warm = self.warm_pool(registry, id);
+            let svc = registry.get_mut(id);
+            let rate = svc.telemetry.arrivals.rate(now_s);          // r_m
+            let lat = svc.telemetry.avg_latency(                     // lat_m
+                // Prior for cold services: a mid-size request estimate.
+                svc.expected_latency_s(60.0, 80.0, 0.0),
+            );
+            // Little's Law: L = λW → replicas to hold L streams at
+            // `target_concurrency` streams each.
+            let target_raw =
+                (rate * lat / self.cfg.target_concurrency).ceil() as usize;
+            let current = svc.ready_replicas + svc.pending_replicas;
+            let idle = svc.telemetry.arrivals.idle_time(now_s);
+
+            if target_raw > current && now_s >= self.cooldown_until[idx] {
+                let target = target_raw
+                    .max(min_warm)
+                    .min(self.cfg.max_replicas);
+                if target > current {
+                    actions.push(ScaleAction::Up { service: id, target });
+                    self.cooldown_until[idx] = now_s + self.cfg.cooldown_s;
+                }
+            } else if idle > self.cfg.idle_timeout_s {
+                let target = min_warm; // max(0, min_warm)
+                if target < current {
+                    actions.push(ScaleAction::Down { service: id, target });
+                }
+            }
+        }
+        actions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OrchestratorConfig;
+    use crate::models::zoo;
+    use crate::registry::Registry;
+
+    fn setup(warm: [usize; 3]) -> (Registry, Scaler) {
+        let r = Registry::new(&zoo(), 300.0);
+        let n = r.services.len();
+        let cfg = OrchestratorConfig {
+            warm_pool: warm,
+            cooldown_s: 30.0,
+            idle_timeout_s: 120.0,
+            target_concurrency: 4.0,
+            ..OrchestratorConfig::default()
+        };
+        (r, Scaler::new(cfg, n))
+    }
+
+    /// Drive `rate` arrivals/s into a service for `dur` seconds.
+    fn drive(r: &mut Registry, idx: usize, rate: f64, dur: f64, lat: f64) {
+        let svc = r.get_mut(ServiceId(idx));
+        let n = (rate * dur) as usize;
+        for i in 0..n {
+            let t = i as f64 / rate;
+            svc.telemetry.on_dispatch(t, 16.0);
+            svc.telemetry.on_complete(t + lat, 16.0, lat, lat / 4.0, true);
+        }
+    }
+
+    #[test]
+    fn littles_law_target() {
+        let (mut r, mut s) = setup([0, 0, 0]);
+        // 2 req/s × 10 s latency / 4 concurrency = 5 replicas.
+        drive(&mut r, 0, 2.0, 300.0, 10.0);
+        let actions = s.plan(&mut r, 300.0);
+        assert!(actions.iter().any(|a| matches!(a,
+            ScaleAction::Up { service: ServiceId(0), target: 5 })),
+            "actions: {actions:?}");
+    }
+
+    #[test]
+    fn cooldown_blocks_rescale() {
+        let (mut r, mut s) = setup([0, 0, 0]);
+        drive(&mut r, 0, 2.0, 300.0, 10.0);
+        let a1 = s.plan(&mut r, 300.0);
+        assert!(!a1.is_empty());
+        // Still zero replicas (caller hasn't applied) but cooldown active:
+        let a2 = s.plan(&mut r, 310.0);
+        assert!(a2.iter().all(|a| !matches!(a,
+            ScaleAction::Up { service: ServiceId(0), .. })));
+        // After cooldown expires it fires again.
+        let a3 = s.plan(&mut r, 331.0);
+        assert!(a3.iter().any(|a| matches!(a,
+            ScaleAction::Up { service: ServiceId(0), .. })));
+    }
+
+    #[test]
+    fn idle_scales_to_zero_without_warm_pool() {
+        let (mut r, mut s) = setup([0, 0, 0]);
+        drive(&mut r, 3, 1.0, 10.0, 2.0); // traffic stops at t=10
+        r.get_mut(ServiceId(3)).ready_replicas = 2;
+        let actions = s.plan(&mut r, 200.0); // idle 190s > τ=120
+        assert!(actions.contains(&ScaleAction::Down {
+            service: ServiceId(3),
+            target: 0
+        }));
+    }
+
+    #[test]
+    fn idle_keeps_warm_pool_floor() {
+        let (mut r, mut s) = setup([1, 1, 1]);
+        drive(&mut r, 3, 1.0, 10.0, 2.0);
+        r.get_mut(ServiceId(3)).ready_replicas = 3;
+        let actions = s.plan(&mut r, 200.0);
+        assert!(actions.contains(&ScaleAction::Down {
+            service: ServiceId(3),
+            target: 1
+        }));
+    }
+
+    #[test]
+    fn no_action_when_capacity_matches() {
+        let (mut r, mut s) = setup([0, 0, 0]);
+        drive(&mut r, 0, 2.0, 300.0, 10.0);
+        r.get_mut(ServiceId(0)).ready_replicas = 6; // above target 5
+        let actions = s.plan(&mut r, 300.0);
+        assert!(actions.iter().all(|a| !matches!(a,
+            ScaleAction::Up { service: ServiceId(0), .. })));
+    }
+
+    #[test]
+    fn max_replicas_caps_target() {
+        let (mut r, mut s) = setup([0, 0, 0]);
+        drive(&mut r, 0, 50.0, 300.0, 10.0); // would want 125 replicas
+        let actions = s.plan(&mut r, 300.0);
+        match actions.iter().find(|a| matches!(a,
+            ScaleAction::Up { service: ServiceId(0), .. })) {
+            Some(ScaleAction::Up { target, .. }) => assert_eq!(*target, 8),
+            other => panic!("expected capped up-scale, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pending_replicas_count_toward_current() {
+        let (mut r, mut s) = setup([0, 0, 0]);
+        drive(&mut r, 0, 2.0, 300.0, 10.0);
+        r.get_mut(ServiceId(0)).pending_replicas = 5; // already starting
+        let actions = s.plan(&mut r, 300.0);
+        assert!(actions.iter().all(|a| !matches!(a,
+            ScaleAction::Up { service: ServiceId(0), .. })));
+    }
+
+    #[test]
+    fn quiet_service_with_no_history_stays_down() {
+        let (mut r, mut s) = setup([0, 0, 0]);
+        let actions = s.plan(&mut r, 1000.0);
+        assert!(actions.is_empty(), "{actions:?}");
+    }
+}

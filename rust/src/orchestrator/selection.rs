@@ -1,0 +1,215 @@
+//! Algorithm 2 — Matrix Selection and Routing.
+//!
+//! For a classified prompt, evaluate `f(p, S_xy)` (Eq. 2) over every
+//! healthy cell of the service matrix and pick the argmax. Relevance
+//! comes from capability–complexity matching; the latency and cost
+//! expectations are min–max normalized **across the candidate set**
+//! (the matrix itself is the "historical system statistics" of Eq. 2 —
+//! normalizing over the candidates keeps the scores discriminative at
+//! any traffic scale, where a fixed global window would saturate).
+
+use crate::registry::{Registry, ServiceId};
+use crate::router::Classification;
+use crate::scoring::{relevance, score, Components, Weights};
+use crate::util::stats::minmax_norm;
+
+/// The outcome of one matrix selection.
+#[derive(Debug, Clone)]
+pub struct Selection {
+    pub service: ServiceId,
+    pub score: f64,
+    pub components: Components,
+    /// Scores of every candidate (for ablation/analysis output).
+    pub all_scores: Vec<(ServiceId, f64)>,
+}
+
+/// Evaluate Alg. 2 over the matrix.
+///
+/// `in_tokens`/`out_tokens` are the prompt-size estimates used for the
+/// T and C expectations; `cold_start_of` supplies the per-service
+/// cold-start penalty when a cell is scaled to zero.
+pub fn select(
+    registry: &Registry,
+    weights: Weights,
+    class: &Classification,
+    in_tokens: f64,
+    out_tokens: f64,
+    cold_start_of: impl Fn(&crate::registry::Service) -> f64,
+) -> Option<Selection> {
+    // Pass 1: raw estimates per candidate.
+    let mut cands: Vec<(ServiceId, f64, f64, f64)> = Vec::new(); // id, R, T, C
+    for svc in registry.routable() {
+        let r = relevance(&svc.spec.capability, class.complexity, class.confidence);
+        let t = svc.expected_latency_s(in_tokens, out_tokens, cold_start_of(svc));
+        let c = svc.expected_cost_usd(in_tokens, out_tokens);
+        cands.push((svc.id, r, t, c));
+    }
+    if cands.is_empty() {
+        return None;
+    }
+    // Pass 2: min–max normalize all three components over the candidate
+    // set ("all terms lie in a common numerical range", paper §Problem).
+    // Without normalizing R̂ alongside T̂/Ĉ, the capability spread
+    // (0.45–0.98) is drowned by the full-range cost/latency spread and
+    // routing degenerates toward cheapest-only. The relevance range is
+    // floored so a *negligible* capability spread (easy prompts, where
+    // every model succeeds) is not stretched into a decisive signal.
+    const R_RANGE_FLOOR: f64 = 0.25;
+    let (r_min, r_max) = min_max(cands.iter().map(|c| c.1));
+    let r_max_eff = r_max.max(r_min + R_RANGE_FLOOR);
+    let (t_min, t_max) = min_max(cands.iter().map(|c| c.2));
+    let (c_min, c_max) = min_max(cands.iter().map(|c| c.3));
+
+    let mut best: Option<Selection> = None;
+    let mut all_scores = Vec::with_capacity(cands.len());
+    for (id, r, t_raw, c_raw) in cands {
+        let comps = Components {
+            relevance: minmax_norm(r, r_min, r_max_eff),
+            timeliness: 1.0 - minmax_norm(t_raw, t_min, t_max),
+            economy: 1.0 - minmax_norm(c_raw, c_min, c_max),
+        };
+        let f = score(weights, comps);
+        all_scores.push((id, f));
+        let better = best.as_ref().map(|b| f > b.score).unwrap_or(true);
+        if better {
+            best = Some(Selection {
+                service: id,
+                score: f,
+                components: comps,
+                all_scores: Vec::new(),
+            });
+        }
+    }
+    best.map(|mut b| {
+        b.all_scores = all_scores;
+        b
+    })
+}
+
+fn min_max(values: impl Iterator<Item = f64>) -> (f64, f64) {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for v in values {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    (lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Profile, RouterMode};
+    use crate::models::{zoo, BackendKind};
+    use crate::registry::{Health, Registry};
+    use crate::scoring::Weights;
+
+    fn setup() -> Registry {
+        let mut r = Registry::new(&zoo(), 300.0);
+        for s in &mut r.services {
+            s.ready_replicas = 1;
+        }
+        r
+    }
+
+    fn class(complexity: usize) -> Classification {
+        Classification {
+            complexity,
+            confidence: 0.95,
+            mode: RouterMode::Hybrid,
+            overhead_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn quality_profile_routes_hard_prompts_to_big_models() {
+        let r = setup();
+        let w = Weights::from_profile(&Profile::QUALITY);
+        let sel = select(&r, w, &class(2), 100.0, 200.0, |_| 30.0).unwrap();
+        assert!(r.get(sel.service).spec.capability[2] > 0.85,
+                "picked {}", r.get(sel.service).spec.name);
+    }
+
+    #[test]
+    fn cost_profile_routes_easy_prompts_to_small_models() {
+        let r = setup();
+        let w = Weights::from_profile(&Profile::COST);
+        let sel = select(&r, w, &class(0), 50.0, 30.0, |_| 30.0).unwrap();
+        assert_eq!(r.get(sel.service).spec.name, "gemma3-27b");
+    }
+
+    #[test]
+    fn speed_profile_avoids_slowest_cells() {
+        let r = setup();
+        let w = Weights::from_profile(&Profile::SPEED);
+        let sel = select(&r, w, &class(1), 50.0, 50.0, |_| 30.0).unwrap();
+        let svc = r.get(sel.service);
+        // Latency-dominated choice: never the big models' slow decode.
+        assert!(svc.spec.decode_tps >= 25.0, "picked {}", svc.spec.name);
+        assert_ne!(svc.backend, BackendKind::Tgi);
+    }
+
+    #[test]
+    fn unhealthy_cells_skipped() {
+        let mut r = setup();
+        for s in &mut r.services {
+            s.health = Health::Unhealthy;
+        }
+        let w = Weights::from_profile(&Profile::BALANCED);
+        assert!(select(&r, w, &class(1), 50.0, 50.0, |_| 0.0).is_none());
+    }
+
+    #[test]
+    fn cold_start_penalty_discourages_scaled_to_zero() {
+        let mut r = setup();
+        for s in &mut r.services {
+            s.ready_replicas = 0;
+        }
+        let warm = r.cell(1, BackendKind::Vllm).id;
+        r.get_mut(warm).ready_replicas = 1;
+        let w = Weights::from_profile(&Profile::SPEED);
+        let sel = select(&r, w, &class(1), 50.0, 50.0, |_| 300.0).unwrap();
+        assert_eq!(sel.service, warm);
+    }
+
+    #[test]
+    fn all_scores_cover_matrix() {
+        let r = setup();
+        let w = Weights::from_profile(&Profile::BALANCED);
+        let sel = select(&r, w, &class(1), 50.0, 50.0, |_| 0.0).unwrap();
+        assert_eq!(sel.all_scores.len(), 12);
+        let best = sel
+            .all_scores
+            .iter()
+            .map(|(_, f)| *f)
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert!((best - sel.score).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scores_bounded() {
+        let r = setup();
+        for profile in &Profile::ALL {
+            let w = Weights::from_profile(profile);
+            for c in 0..3 {
+                let sel = select(&r, w, &class(c), 50.0, 50.0, |_| 10.0).unwrap();
+                for (_, f) in &sel.all_scores {
+                    assert!((0.0..=1.0).contains(f));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_profile_spreads_by_complexity() {
+        // Balanced weights should send low ↦ small-ish, high ↦ large-ish.
+        let r = setup();
+        let w = Weights::from_profile(&Profile::BALANCED);
+        let lo = select(&r, w, &class(0), 30.0, 20.0, |_| 30.0).unwrap();
+        let hi = select(&r, w, &class(2), 100.0, 250.0, |_| 30.0).unwrap();
+        let lo_cap = r.get(lo.service).spec.capability[2];
+        let hi_cap = r.get(hi.service).spec.capability[2];
+        assert!(hi_cap > lo_cap, "low→{} high→{}",
+                r.get(lo.service).spec.name, r.get(hi.service).spec.name);
+    }
+}

@@ -1,0 +1,240 @@
+//! Service Registry — the paper's service matrix `M ∈ R^{L×I}` (Eq. 5).
+//!
+//! Every deployable (model `L_x`, backend `I_y`) pair is a service
+//! instance `S_xy` with live state: replica count, health, telemetry,
+//! and the latency/cost estimators the scorer consumes. The Router reads
+//! the matrix to score candidates (Alg. 2); the Orchestrator writes
+//! replica/health state as the cluster changes (Alg. 1).
+
+use crate::models::{BackendKind, ModelSpec};
+use crate::models::completion::mean_output_tokens;
+use crate::telemetry::ServiceTelemetry;
+
+/// Row-major index into the matrix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ServiceId(pub usize);
+
+/// Health as the orchestrator's recovery manager sees it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    Healthy,
+    Degraded,
+    Unhealthy,
+}
+
+/// One cell of the service matrix.
+pub struct Service {
+    pub id: ServiceId,
+    pub model_idx: usize,
+    pub backend: BackendKind,
+    pub spec: ModelSpec,
+    pub health: Health,
+    /// Ready replicas (warm, accepting traffic).
+    pub ready_replicas: usize,
+    /// Replicas currently cold-starting.
+    pub pending_replicas: usize,
+    pub telemetry: ServiceTelemetry,
+}
+
+impl Service {
+    /// Total stream capacity right now.
+    pub fn capacity(&self) -> usize {
+        self.ready_replicas * self.backend.max_concurrency()
+    }
+
+    /// Routable = healthy with at least one ready replica, or scalable
+    /// from zero (the orchestrator will spin it up — at cold-start cost,
+    /// which the latency estimate includes).
+    pub fn routable(&self) -> bool {
+        self.health != Health::Unhealthy
+    }
+
+    /// Expected end-to-end latency for a prompt of `in_tokens` expecting
+    /// `out_tokens`, including queueing pressure and (if scaled to zero)
+    /// the cold-start penalty. This is `T(S_xy)` before normalization.
+    pub fn expected_latency_s(
+        &self,
+        in_tokens: f64,
+        out_tokens: f64,
+        cold_start_s: f64,
+    ) -> f64 {
+        let lf = self.backend.latency_factor();
+        let prefill = in_tokens / self.spec.prefill_tps * lf;
+        let decode = out_tokens / self.spec.decode_tps * lf;
+        let cold = if self.ready_replicas == 0 { cold_start_s } else { 0.0 };
+        // Queueing pressure: inflight vs capacity (M/M/c-ish inflation).
+        let cap = self.capacity().max(1) as f64;
+        let rho = (self.telemetry.inflight as f64 / cap).min(0.95);
+        let queue_factor = 1.0 / (1.0 - rho);
+        cold + (prefill + decode) * queue_factor
+    }
+
+    /// Expected $ cost of serving one query: replica occupancy time ×
+    /// replica rate ÷ concurrent streams sharing it. `C(S_xy)` before
+    /// normalization.
+    pub fn expected_cost_usd(&self, in_tokens: f64, out_tokens: f64) -> f64 {
+        let lf = self.backend.latency_factor();
+        let busy_s = in_tokens / self.spec.prefill_tps * lf
+            + out_tokens / self.spec.decode_tps * lf;
+        let sharing = (self.backend.max_concurrency() as f64 / 2.0).max(1.0);
+        busy_s * self.spec.cost_per_replica_second() * self.backend.cost_factor()
+            / sharing
+    }
+}
+
+/// The L×I matrix plus lookup helpers.
+pub struct Registry {
+    pub services: Vec<Service>,
+    pub n_models: usize,
+    pub n_backends: usize,
+}
+
+impl Registry {
+    /// Build the full matrix over a model zoo and all backends.
+    pub fn new(zoo: &[ModelSpec], telemetry_window_s: f64) -> Registry {
+        let mut services = Vec::new();
+        for (mi, spec) in zoo.iter().enumerate() {
+            for &backend in &BackendKind::ALL {
+                let id = ServiceId(services.len());
+                services.push(Service {
+                    id,
+                    model_idx: mi,
+                    backend,
+                    spec: spec.clone(),
+                    health: Health::Healthy,
+                    ready_replicas: 0,
+                    pending_replicas: 0,
+                    telemetry: ServiceTelemetry::new(telemetry_window_s),
+                });
+            }
+        }
+        Registry {
+            services,
+            n_models: zoo.len(),
+            n_backends: BackendKind::ALL.len(),
+        }
+    }
+
+    pub fn get(&self, id: ServiceId) -> &Service {
+        &self.services[id.0]
+    }
+
+    pub fn get_mut(&mut self, id: ServiceId) -> &mut Service {
+        &mut self.services[id.0]
+    }
+
+    /// Matrix cell (x = model row, y = backend column).
+    pub fn cell(&self, model_idx: usize, backend: BackendKind) -> &Service {
+        &self.services[model_idx * self.n_backends + backend.index()]
+    }
+
+    pub fn cell_mut(&mut self, model_idx: usize, backend: BackendKind) -> &mut Service {
+        &mut self.services[model_idx * self.n_backends + backend.index()]
+    }
+
+    /// All services that Alg. 2 may consider.
+    pub fn routable(&self) -> impl Iterator<Item = &Service> {
+        self.services.iter().filter(|s| s.routable())
+    }
+
+    /// Estimate a prompt's expected output length from its benchmark and
+    /// complexity (used for T/C estimation at scoring time).
+    pub fn estimate_out_tokens(benchmark: &str, complexity: usize) -> f64 {
+        mean_output_tokens(benchmark) * (1.0 + 0.4 * complexity as f64)
+    }
+
+    /// Total ready replicas across the matrix (for utilization reports).
+    pub fn total_ready(&self) -> usize {
+        self.services.iter().map(|s| s.ready_replicas).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    fn registry() -> Registry {
+        Registry::new(&zoo(), 300.0)
+    }
+
+    #[test]
+    fn matrix_dimensions() {
+        let r = registry();
+        assert_eq!(r.n_models, 4);
+        assert_eq!(r.n_backends, 3);
+        assert_eq!(r.services.len(), 12);
+    }
+
+    #[test]
+    fn cell_lookup_consistent() {
+        let r = registry();
+        for mi in 0..r.n_models {
+            for &b in &BackendKind::ALL {
+                let s = r.cell(mi, b);
+                assert_eq!(s.model_idx, mi);
+                assert_eq!(s.backend, b);
+            }
+        }
+    }
+
+    #[test]
+    fn cold_service_latency_includes_cold_start() {
+        let mut r = registry();
+        let id = r.cell(0, BackendKind::Vllm).id;
+        let cold = r.get(id).expected_latency_s(100.0, 50.0, 30.0);
+        r.get_mut(id).ready_replicas = 1;
+        let warm = r.get(id).expected_latency_s(100.0, 50.0, 30.0);
+        assert!((cold - warm - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn queue_pressure_inflates_latency() {
+        let mut r = registry();
+        let id = r.cell(0, BackendKind::Vllm).id;
+        r.get_mut(id).ready_replicas = 1;
+        let idle = r.get(id).expected_latency_s(100.0, 50.0, 0.0);
+        r.get_mut(id).telemetry.inflight = 15; // near 16-stream capacity
+        let busy = r.get(id).expected_latency_s(100.0, 50.0, 0.0);
+        assert!(busy > idle * 5.0);
+    }
+
+    #[test]
+    fn bigger_models_cost_more() {
+        let r = registry();
+        let small = r.cell(0, BackendKind::Vllm).expected_cost_usd(100.0, 100.0);
+        let big = r.cell(3, BackendKind::Vllm).expected_cost_usd(100.0, 100.0);
+        assert!(big > small * 5.0);
+    }
+
+    #[test]
+    fn trt_is_faster_tgi_cheaper() {
+        let mut r = registry();
+        for s in &mut r.services {
+            s.ready_replicas = 1;
+        }
+        let vllm = r.cell(1, BackendKind::Vllm).expected_latency_s(100.0, 100.0, 0.0);
+        let trt = r.cell(1, BackendKind::TrtLlm).expected_latency_s(100.0, 100.0, 0.0);
+        assert!(trt < vllm);
+        // TGI's memory efficiency makes it cheaper per query than the
+        // latency-optimized TRT engines (the paper's matrix characters).
+        let trt_c = r.cell(1, BackendKind::TrtLlm).expected_cost_usd(100.0, 100.0);
+        let tgi_c = r.cell(1, BackendKind::Tgi).expected_cost_usd(100.0, 100.0);
+        assert!(tgi_c < trt_c);
+    }
+
+    #[test]
+    fn unhealthy_not_routable() {
+        let mut r = registry();
+        let id = r.cell(2, BackendKind::Tgi).id;
+        r.get_mut(id).health = Health::Unhealthy;
+        assert_eq!(r.routable().count(), 11);
+    }
+
+    #[test]
+    fn out_token_estimate_grows_with_complexity() {
+        let low = Registry::estimate_out_tokens("math", 0);
+        let high = Registry::estimate_out_tokens("math", 2);
+        assert!(high > low);
+    }
+}

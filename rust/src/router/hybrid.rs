@@ -1,0 +1,158 @@
+//! Hybrid routing (paper §Pick): "Simple queries are routed using
+//! keywords, while ambiguous ones are refined by DistilBERT."
+//!
+//! The keyword verdict stands when its confidence clears the configured
+//! threshold; otherwise the semantic classifier re-classifies, paying the
+//! classification overhead only on the ambiguous fraction — the balance
+//! between latency and precision the paper claims for this mode.
+
+use crate::config::{RouterConfig, RouterMode};
+
+use super::keyword::KeywordRouter;
+use super::{Classification, Classifier, Router};
+
+/// Semantic router: always consults the classifier.
+pub struct SemanticRouter<C: Classifier> {
+    classifier: C,
+    overhead_s: f64,
+}
+
+impl<C: Classifier> SemanticRouter<C> {
+    pub fn new(classifier: C, overhead_s: f64) -> Self {
+        Self { classifier, overhead_s }
+    }
+}
+
+impl<C: Classifier> Router for SemanticRouter<C> {
+    fn route(&mut self, text: &str) -> crate::Result<Classification> {
+        let (complexity, confidence) = self.classifier.classify(text)?;
+        Ok(Classification {
+            complexity,
+            confidence,
+            mode: RouterMode::Semantic,
+            overhead_s: self.overhead_s,
+        })
+    }
+
+    fn mode(&self) -> RouterMode {
+        RouterMode::Semantic
+    }
+}
+
+/// Hybrid router: keyword fast path + semantic refinement.
+pub struct HybridRouter<C: Classifier> {
+    classifier: C,
+    confidence_threshold: f64,
+    semantic_overhead_s: f64,
+    /// Telemetry: how often each path decided (Fig. 4 support).
+    pub keyword_decisions: u64,
+    pub semantic_decisions: u64,
+}
+
+impl<C: Classifier> HybridRouter<C> {
+    pub fn new(classifier: C, cfg: &RouterConfig) -> Self {
+        Self {
+            classifier,
+            confidence_threshold: cfg.hybrid_confidence,
+            semantic_overhead_s: cfg.semantic_overhead_s,
+            keyword_decisions: 0,
+            semantic_decisions: 0,
+        }
+    }
+
+    /// Fraction of prompts the semantic path had to refine.
+    pub fn refinement_rate(&self) -> f64 {
+        let total = self.keyword_decisions + self.semantic_decisions;
+        if total == 0 {
+            0.0
+        } else {
+            self.semantic_decisions as f64 / total as f64
+        }
+    }
+}
+
+impl<C: Classifier> Router for HybridRouter<C> {
+    fn route(&mut self, text: &str) -> crate::Result<Classification> {
+        let kw = KeywordRouter::classify(text);
+        if kw.confidence >= self.confidence_threshold {
+            self.keyword_decisions += 1;
+            return Ok(Classification { mode: RouterMode::Hybrid, ..kw });
+        }
+        self.semantic_decisions += 1;
+        let (complexity, confidence) = self.classifier.classify(text)?;
+        Ok(Classification {
+            complexity,
+            confidence,
+            mode: RouterMode::Hybrid,
+            overhead_s: self.semantic_overhead_s,
+        })
+    }
+
+    fn mode(&self) -> RouterMode {
+        RouterMode::Hybrid
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RouterConfig;
+
+    /// Classifier that always answers `class` with given confidence.
+    struct Fixed(usize, f64);
+
+    impl Classifier for Fixed {
+        fn probs(&mut self, _t: &str) -> crate::Result<[f64; 3]> {
+            let mut p = [(1.0 - self.1) / 2.0; 3];
+            p[self.0] = self.1;
+            Ok(p)
+        }
+    }
+
+    fn cfg() -> RouterConfig {
+        RouterConfig {
+            mode: RouterMode::Hybrid,
+            hybrid_confidence: 0.5,
+            semantic_overhead_s: 0.3,
+        }
+    }
+
+    #[test]
+    fn confident_keywords_skip_classifier() {
+        let mut r = HybridRouter::new(Fixed(1, 0.9), &cfg());
+        // "prove" is a strong high cue → keyword path decides.
+        let c = r.route("prove the theorem").unwrap();
+        assert_eq!(c.complexity, 2);
+        assert_eq!(c.overhead_s, 0.0);
+        assert_eq!(r.keyword_decisions, 1);
+        assert_eq!(r.semantic_decisions, 0);
+    }
+
+    #[test]
+    fn ambiguous_prompts_get_refined() {
+        let mut r = HybridRouter::new(Fixed(2, 0.92), &cfg());
+        // No keyword cues → keyword confidence 0.35 < 0.5 → semantic.
+        let c = r.route("natalia sold clips in april").unwrap();
+        assert_eq!(c.complexity, 2);
+        assert!((c.confidence - 0.92).abs() < 1e-9);
+        assert!(c.overhead_s > 0.0);
+        assert_eq!(r.semantic_decisions, 1);
+        assert!((r.refinement_rate() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn semantic_router_always_pays_overhead() {
+        let mut r = SemanticRouter::new(Fixed(0, 0.8), 0.35);
+        let c = r.route("what is 2 plus 2").unwrap();
+        assert_eq!(c.complexity, 0);
+        assert!((c.overhead_s - 0.35).abs() < 1e-12);
+        assert_eq!(c.mode, RouterMode::Semantic);
+    }
+
+    #[test]
+    fn hybrid_mode_reported() {
+        let mut r = HybridRouter::new(Fixed(1, 0.9), &cfg());
+        assert_eq!(r.route("prove it").unwrap().mode, RouterMode::Hybrid);
+        assert_eq!(r.mode(), RouterMode::Hybrid);
+    }
+}

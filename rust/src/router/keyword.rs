@@ -1,0 +1,178 @@
+//! Keyword-based routing (paper §Pick): deterministic, transparent,
+//! near-zero latency.
+//!
+//! "Words such as 'sum', 'list', or 'define' indicate low complexity,
+//! while 'prove', 'derive', or 'explain why' suggest high complexity.
+//! Prompts that do not match any keyword are treated as medium."
+//!
+//! High-complexity cues dominate when both appear ("list the steps to
+//! prove...") — underestimating a hard prompt fails it, overestimating a
+//! easy one merely costs money; length nudges borderline prompts.
+
+use crate::config::RouterMode;
+use crate::tokenizer::split_words;
+
+use super::{Classification, Router};
+
+/// Single-word cues for low complexity.
+const LOW_WORDS: &[&str] = &[
+    "sum", "list", "define", "name", "true", "false", "compute", "finish",
+    "choose", "times", "plus", "minus",
+];
+
+/// Single-word cues for high complexity.
+const HIGH_WORDS: &[&str] = &[
+    "prove", "derive", "analyze", "optimize", "design", "induction",
+    "compare", "contrast", "terminates", "asymptotic", "complexity",
+];
+
+/// Phrase cues (checked on the normalized word sequence).
+const LOW_PHRASES: &[&[&str]] = &[
+    &["what", "is"],
+    &["how", "many"],
+    &["what", "happens", "next"],
+];
+
+const HIGH_PHRASES: &[&[&str]] = &[
+    &["explain", "why"],
+    &["step", "by", "step"],
+    &["reasoning", "step"],
+    &["why", "does"],
+    &["closed", "form"],
+];
+
+/// Words above this count nudge a no-match prompt toward high.
+const LONG_PROMPT_WORDS: usize = 28;
+
+#[derive(Debug, Default, Clone)]
+pub struct KeywordRouter;
+
+impl KeywordRouter {
+    pub fn new() -> Self {
+        Self
+    }
+
+    /// Count cue hits in a prompt.
+    fn hits(words: &[String]) -> (usize, usize) {
+        let mut low = 0;
+        let mut high = 0;
+        for w in words {
+            if LOW_WORDS.contains(&w.as_str()) {
+                low += 1;
+            }
+            if HIGH_WORDS.contains(&w.as_str()) {
+                high += 1;
+            }
+        }
+        for phrase in LOW_PHRASES {
+            if contains_seq(words, phrase) {
+                low += 1;
+            }
+        }
+        for phrase in HIGH_PHRASES {
+            if contains_seq(words, phrase) {
+                high += 2; // phrases are stronger evidence than words
+            }
+        }
+        (low, high)
+    }
+
+    /// Pure classification (no trait plumbing) — also used by the hybrid
+    /// router and benches.
+    pub fn classify(text: &str) -> Classification {
+        let words = split_words(text);
+        let (low, high) = Self::hits(&words);
+        let (complexity, confidence) = if high > 0 && high >= low {
+            // High cues win ties: under-provisioning fails the request.
+            (2, 0.55 + 0.15 * high.min(3) as f64)
+        } else if low > 0 && high == 0 {
+            (0, 0.55 + 0.15 * low.min(3) as f64)
+        } else if low > 0 && high > 0 {
+            (1, 0.4) // conflicting evidence
+        } else if words.len() > LONG_PROMPT_WORDS {
+            (2, 0.45)
+        } else {
+            (1, 0.35) // no signal: medium, low confidence
+        };
+        Classification {
+            complexity,
+            confidence: confidence.min(1.0),
+            mode: RouterMode::Keyword,
+            overhead_s: 0.0,
+        }
+    }
+}
+
+fn contains_seq(words: &[String], phrase: &[&str]) -> bool {
+    if phrase.len() > words.len() {
+        return false;
+    }
+    words
+        .windows(phrase.len())
+        .any(|w| w.iter().zip(phrase).all(|(a, b)| a == b))
+}
+
+impl Router for KeywordRouter {
+    fn route(&mut self, text: &str) -> crate::Result<Classification> {
+        Ok(Self::classify(text))
+    }
+
+    fn mode(&self) -> RouterMode {
+        RouterMode::Keyword
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn low_cues() {
+        let c = KeywordRouter::classify("what is 2 plus 2?");
+        assert_eq!(c.complexity, 0);
+        assert!(c.confidence > 0.5);
+    }
+
+    #[test]
+    fn high_cues() {
+        let c = KeywordRouter::classify(
+            "prove that the sum converges and derive a closed form");
+        assert_eq!(c.complexity, 2);
+    }
+
+    #[test]
+    fn phrase_cues() {
+        assert_eq!(KeywordRouter::classify("explain why the sky is blue").complexity, 2);
+        assert_eq!(KeywordRouter::classify("how many apples remain").complexity, 0);
+    }
+
+    #[test]
+    fn no_signal_is_medium_low_confidence() {
+        let c = KeywordRouter::classify("natalia sold clips to friends in april");
+        assert_eq!(c.complexity, 1);
+        assert!(c.confidence < 0.5);
+    }
+
+    #[test]
+    fn high_beats_low_on_conflict() {
+        // "list the steps to prove ..." — the confusable the corpus plants.
+        let c = KeywordRouter::classify("list the steps to prove the theorem");
+        assert_eq!(c.complexity, 2);
+    }
+
+    #[test]
+    fn long_prompts_lean_high() {
+        let long = vec!["word"; 40].join(" ");
+        assert_eq!(KeywordRouter::classify(&long).complexity, 2);
+    }
+
+    #[test]
+    fn zero_overhead() {
+        assert_eq!(KeywordRouter::classify("anything").overhead_s, 0.0);
+    }
+
+    #[test]
+    fn empty_prompt_is_medium() {
+        assert_eq!(KeywordRouter::classify("").complexity, 1);
+    }
+}

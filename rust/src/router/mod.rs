@@ -1,0 +1,84 @@
+//! Pick — the routing layer (paper §Routing Design).
+//!
+//! Predicts each prompt's complexity class (low/medium/high → tier
+//! small/medium/large) through one of three modes:
+//!
+//! * [`keyword::KeywordRouter`] — deterministic lexical heuristics,
+//!   near-zero latency;
+//! * semantic — the compiled DistilBERT-lite classifier behind the
+//!   [`Classifier`] trait (PJRT implementation in
+//!   [`crate::runtime::classifier`]);
+//! * [`hybrid::HybridRouter`] — keywords first, semantic refinement when
+//!   keyword confidence is low.
+
+pub mod keyword;
+pub mod hybrid;
+
+use crate::config::RouterMode;
+
+/// Complexity classes (paper: low/medium/high, Eq. 3/4 outputs).
+pub const N_CLASSES: usize = 3;
+
+/// A routing verdict for one prompt.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Classification {
+    /// Predicted class: 0 = low, 1 = medium, 2 = high.
+    pub complexity: usize,
+    /// Confidence in [0, 1] (softmax max-prob for the semantic path,
+    /// rule strength for keywords).
+    pub confidence: f64,
+    /// Which path produced the verdict (for telemetry / Fig. 4).
+    pub mode: RouterMode,
+    /// Classification overhead in seconds (the semantic path's extra
+    /// latency the paper measures in Figs. 6/10).
+    pub overhead_s: f64,
+}
+
+/// Anything that can classify prompt complexity semantically.
+///
+/// The production implementation wraps the AOT-compiled classifier HLO
+/// behind PJRT; tests and pure simulations may use
+/// [`crate::workload::OracleClassifier`].
+pub trait Classifier {
+    /// Class probabilities for a prompt (length [`N_CLASSES`]).
+    fn probs(&mut self, text: &str) -> crate::Result<[f64; N_CLASSES]>;
+
+    /// Convenience: argmax class + confidence.
+    fn classify(&mut self, text: &str) -> crate::Result<(usize, f64)> {
+        let p = self.probs(text)?;
+        let mut best = 0;
+        for k in 1..N_CLASSES {
+            if p[k] > p[best] {
+                best = k;
+            }
+        }
+        Ok((best, p[best]))
+    }
+}
+
+/// A router maps prompts to classifications.
+pub trait Router {
+    fn route(&mut self, text: &str) -> crate::Result<Classification>;
+    fn mode(&self) -> RouterMode;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Fixed(pub [f64; 3]);
+
+    impl Classifier for Fixed {
+        fn probs(&mut self, _t: &str) -> crate::Result<[f64; 3]> {
+            Ok(self.0)
+        }
+    }
+
+    #[test]
+    fn classify_takes_argmax() {
+        let mut c = Fixed([0.1, 0.2, 0.7]);
+        let (k, p) = c.classify("x").unwrap();
+        assert_eq!(k, 2);
+        assert!((p - 0.7).abs() < 1e-12);
+    }
+}

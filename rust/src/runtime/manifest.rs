@@ -1,0 +1,224 @@
+//! `artifacts/manifest.json` — the AOT pipeline's module inventory.
+//!
+//! The manifest is the contract between `python/compile/aot.py` and this
+//! runtime: per compiled module it records the positional input specs
+//! (weights first, then activations) and output specs the PJRT call must
+//! honor.
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+/// Kind of a compiled module.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModuleKind {
+    Classifier,
+    Prefill,
+    Decode,
+}
+
+impl ModuleKind {
+    fn parse(s: &str) -> Result<ModuleKind> {
+        match s {
+            "classifier" => Ok(ModuleKind::Classifier),
+            "prefill" => Ok(ModuleKind::Prefill),
+            "decode" => Ok(ModuleKind::Decode),
+            _ => Err(anyhow!("unknown module kind `{s}`")),
+        }
+    }
+}
+
+/// One positional input or output.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub kind: String, // weight | tokens | lengths | kv | pos | logits | probs
+    pub dtype: String, // f32 | i32
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    fn parse(j: &Json) -> Result<IoSpec> {
+        Ok(IoSpec {
+            kind: j.rstr("kind")?.to_string(),
+            dtype: j.rstr("dtype")?.to_string(),
+            shape: j
+                .rarr("shape")?
+                .iter()
+                .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One compiled module.
+#[derive(Debug, Clone)]
+pub struct ModuleSpec {
+    pub name: String,
+    pub kind: ModuleKind,
+    pub model: String,
+    pub batch: usize,
+    pub hlo_file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl ModuleSpec {
+    /// Number of leading weight inputs.
+    pub fn n_weights(&self) -> usize {
+        self.inputs.iter().take_while(|i| i.kind == "weight").count()
+    }
+}
+
+/// Architecture dims of one model (mirrors python ModelConfig).
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub weights_file: String,
+    pub param_count: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub seq_prefill: usize,
+    pub seq_max: usize,
+    pub n_classes: usize,
+    pub val_accuracy: Option<f64>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub modules: Vec<ModuleSpec>,
+    pub models: Vec<ModelInfo>,
+    pub tokenizer_vocab: usize,
+    pub tokenizer_seq_cls: usize,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &str) -> Result<Manifest> {
+        let j = Json::from_file(&format!("{artifacts_dir}/manifest.json"))?;
+        Self::parse(&j)
+    }
+
+    pub fn parse(j: &Json) -> Result<Manifest> {
+        let tok = j.req("tokenizer")?;
+        let mut modules = Vec::new();
+        for m in j.rarr("modules")? {
+            modules.push(ModuleSpec {
+                name: m.rstr("name")?.to_string(),
+                kind: ModuleKind::parse(m.rstr("kind")?)?,
+                model: m.rstr("model")?.to_string(),
+                batch: m.rusize("batch")?,
+                hlo_file: m.rstr("hlo")?.to_string(),
+                inputs: m
+                    .rarr("inputs")?
+                    .iter()
+                    .map(IoSpec::parse)
+                    .collect::<Result<_>>()?,
+                outputs: m
+                    .rarr("outputs")?
+                    .iter()
+                    .map(IoSpec::parse)
+                    .collect::<Result<_>>()?,
+            });
+        }
+        let mut models = Vec::new();
+        let model_obj = j
+            .req("models")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("models not an object"))?;
+        for (name, info) in model_obj {
+            let cfg = info.req("config")?;
+            models.push(ModelInfo {
+                name: name.clone(),
+                weights_file: info.rstr("weights")?.to_string(),
+                param_count: info.rusize("param_count")?,
+                vocab: cfg.rusize("vocab")?,
+                d_model: cfg.rusize("d_model")?,
+                n_layers: cfg.rusize("n_layers")?,
+                n_heads: cfg.rusize("n_heads")?,
+                d_head: cfg.rusize("d_head")?,
+                seq_prefill: cfg.rusize("seq_prefill")?,
+                seq_max: cfg.rusize("seq_max")?,
+                n_classes: cfg.usize_or("n_classes", 0),
+                val_accuracy: info.get("val_accuracy").and_then(Json::as_f64),
+            });
+        }
+        Ok(Manifest {
+            modules,
+            models,
+            tokenizer_vocab: tok.rusize("vocab")?,
+            tokenizer_seq_cls: tok.rusize("seq_cls")?,
+        })
+    }
+
+    pub fn module(&self, name: &str) -> Result<&ModuleSpec> {
+        self.modules
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| anyhow!("module `{name}` not in manifest"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| anyhow!("model `{name}` not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Json {
+        Json::parse(
+            r#"{
+              "tokenizer": {"vocab": 4096, "seq_cls": 48},
+              "models": {
+                "small": {"weights": "lm_small.psw", "param_count": 10,
+                  "config": {"name":"small","vocab":4096,"d_model":64,
+                   "n_layers":2,"n_heads":2,"d_head":32,"d_ffn":256,
+                   "seq_prefill":64,"seq_max":96,"n_classes":0}}
+              },
+              "modules": [
+                {"name":"lm_small_decode_b1","kind":"decode","model":"small",
+                 "batch":1,"hlo":"lm_small_decode_b1.hlo.txt",
+                 "inputs":[{"kind":"weight","dtype":"f32","shape":[4096,64]},
+                           {"kind":"kv","dtype":"f32","shape":[2,2,1,2,96,32]},
+                           {"kind":"tokens","dtype":"i32","shape":[1]},
+                           {"kind":"pos","dtype":"i32","shape":[1]}],
+                 "outputs":[{"kind":"logits","dtype":"f32","shape":[1,4096]},
+                            {"kind":"kv","dtype":"f32","shape":[2,2,1,2,96,32]}]}
+              ]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(&sample()).unwrap();
+        assert_eq!(m.tokenizer_vocab, 4096);
+        assert_eq!(m.modules.len(), 1);
+        let spec = m.module("lm_small_decode_b1").unwrap();
+        assert_eq!(spec.kind, ModuleKind::Decode);
+        assert_eq!(spec.n_weights(), 1);
+        assert_eq!(spec.inputs[1].elements(), 2 * 2 * 2 * 96 * 32);
+        let info = m.model("small").unwrap();
+        assert_eq!(info.d_model, 64);
+        assert_eq!(info.n_classes, 0);
+    }
+
+    #[test]
+    fn missing_module_errors() {
+        let m = Manifest::parse(&sample()).unwrap();
+        assert!(m.module("nope").is_err());
+        assert!(m.model("nope").is_err());
+    }
+}

@@ -1,0 +1,409 @@
+//! PJRT runtime — loads AOT artifacts and serves them on the hot path.
+//!
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → compile →
+//! `execute_b`. Model weights load once from `.psw` (the PVC-read step of
+//! a pod cold start) and stay device-resident as PJRT buffers; per step
+//! only the small activations (tokens, positions, KV) cross the host
+//! boundary. Python never runs here.
+//!
+//! KV note: the compiled modules return `(logits, kv)` as a tuple buffer,
+//! and the PJRT wrapper exposes no tuple-splitting on device, so the KV
+//! state round-trips through the host each decode step (≈100 KB–1.2 MB
+//! per step for these tiers — a memcpy on the CPU plugin, measured in the
+//! §Perf log).
+
+pub mod manifest;
+pub mod weights;
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient,
+          PjRtLoadedExecutable, XlaComputation};
+
+use crate::router::Classifier;
+use crate::tokenizer;
+use manifest::Manifest;
+use weights::Dtype;
+
+/// Shared PJRT client + artifact inventory.
+pub struct Runtime {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    artifacts_dir: String,
+    /// Compile cache: module name → executable.
+    compiled: BTreeMap<String, PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and read the manifest.
+    pub fn load(artifacts_dir: &str) -> Result<Runtime> {
+        let client = PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        let manifest = Manifest::load(artifacts_dir)?;
+        Ok(Runtime {
+            client,
+            manifest,
+            artifacts_dir: artifacts_dir.to_string(),
+            compiled: BTreeMap::new(),
+        })
+    }
+
+    /// Compile (or fetch from cache) a module by name.
+    pub fn compile(&mut self, name: &str) -> Result<&PjRtLoadedExecutable> {
+        if !self.compiled.contains_key(name) {
+            let spec = self.manifest.module(name)?.clone();
+            let path = format!("{}/{}", self.artifacts_dir, spec.hlo_file);
+            let t0 = Instant::now();
+            let proto = HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("loading {path}: {e:?}"))?;
+            let comp = XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            crate::debug!("compiled {name} in {:?}", t0.elapsed());
+            self.compiled.insert(name.to_string(), exe);
+        }
+        Ok(&self.compiled[name])
+    }
+
+    /// Upload a model's weights as device buffers, in manifest order.
+    pub fn upload_weights(&self, model: &str) -> Result<Vec<PjRtBuffer>> {
+        let info = self.manifest.model(model)?;
+        let path = format!("{}/{}", self.artifacts_dir, info.weights_file);
+        let tensors = weights::load(&path)?;
+        let mut bufs = Vec::with_capacity(tensors.len());
+        for t in &tensors {
+            // NOTE: the typed upload path is used deliberately — the
+            // crate's `buffer_from_host_raw_bytes` casts `ElementType` to
+            // the C enum directly, which mislabels F32 (=10) as F16.
+            let buf = match t.dtype {
+                Dtype::F32 => {
+                    let v = t.as_f32()?;
+                    self.client.buffer_from_host_buffer(&v, &t.shape, None)
+                }
+                Dtype::I32 => {
+                    let v: Vec<i32> = t
+                        .data
+                        .chunks_exact(4)
+                        .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                        .collect();
+                    self.client.buffer_from_host_buffer(&v, &t.shape, None)
+                }
+            }
+            .map_err(|e| anyhow!("uploading {}: {e:?}", t.name))?;
+            bufs.push(buf);
+        }
+        Ok(bufs)
+    }
+
+    /// Build the semantic-router engine (classifier at batch 1).
+    pub fn classifier_engine(&mut self) -> Result<ClassifierEngine> {
+        self.compile("classifier_b1")?;
+        let weights = self.upload_weights("classifier")?;
+        let spec = self.manifest.module("classifier_b1")?.clone();
+        let exe = self.compiled.remove("classifier_b1").unwrap();
+        Ok(ClassifierEngine {
+            client: self.client.clone(),
+            exe,
+            weights,
+            seq: spec.inputs.last().unwrap().shape[1],
+        })
+    }
+
+    /// Build an LM engine for a tier at the given decode batch sizes.
+    pub fn lm_engine(&mut self, tier: &str, decode_batches: &[usize]) -> Result<LmEngine> {
+        let info = self.manifest.model(tier)?.clone();
+        let weights = self.upload_weights(tier)?;
+        let prefill_name = format!("lm_{tier}_prefill_b1");
+        self.compile(&prefill_name)?;
+        let prefill = self.compiled.remove(&prefill_name).unwrap();
+        let mut decode = BTreeMap::new();
+        for &b in decode_batches {
+            let name = format!("lm_{tier}_decode_b{b}");
+            self.compile(&name)?;
+            decode.insert(b, self.compiled.remove(&name).unwrap());
+        }
+        Ok(LmEngine {
+            client: self.client.clone(),
+            tier: tier.to_string(),
+            prefill,
+            decode,
+            weights,
+            vocab: info.vocab,
+            n_layers: info.n_layers,
+            n_heads: info.n_heads,
+            d_head: info.d_head,
+            seq_prefill: info.seq_prefill,
+            seq_max: info.seq_max,
+        })
+    }
+}
+
+/// Upload i32 data as a device buffer.
+fn i32_buffer(client: &PjRtClient, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+    client
+        .buffer_from_host_buffer(data, dims, None)
+        .map_err(|e| anyhow!("i32 upload: {e:?}"))
+}
+
+/// Upload raw f32 bytes as a device buffer (via the typed path — see the
+/// ElementType-cast note in `upload_weights`).
+fn f32_bytes_buffer(client: &PjRtClient, bytes: &[u8], dims: &[usize]) -> Result<PjRtBuffer> {
+    let v: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    client
+        .buffer_from_host_buffer(&v, dims, None)
+        .map_err(|e| anyhow!("f32 upload: {e:?}"))
+}
+
+/// Execute and untuple the (single-device) result into literals.
+fn run_untuple(exe: &PjRtLoadedExecutable, args: &[&PjRtBuffer]) -> Result<Vec<Literal>> {
+    let out = exe
+        .execute_b(args)
+        .map_err(|e| anyhow!("execute: {e:?}"))?;
+    let lit = out[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("download: {e:?}"))?;
+    lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))
+}
+
+/// Argmax over each row of a [b, vocab] logits literal.
+fn argmax_rows(logits: &Literal, b: usize, vocab: usize) -> Result<Vec<i32>> {
+    let v: Vec<f32> = logits.to_vec().map_err(|e| anyhow!("logits: {e:?}"))?;
+    if v.len() != b * vocab {
+        bail!("logits size {} != {b}×{vocab}", v.len());
+    }
+    Ok((0..b)
+        .map(|i| {
+            let row = &v[i * vocab..(i + 1) * vocab];
+            let mut best = 0usize;
+            for (j, &x) in row.iter().enumerate() {
+                if x > row[best] {
+                    best = j;
+                }
+            }
+            best as i32
+        })
+        .collect())
+}
+
+// ---------------------------------------------------------------------------
+// Classifier engine (the Pick router's semantic path)
+// ---------------------------------------------------------------------------
+
+/// The compiled DistilBERT-lite classifier behind the `Classifier` trait.
+pub struct ClassifierEngine {
+    client: PjRtClient,
+    exe: PjRtLoadedExecutable,
+    weights: Vec<PjRtBuffer>,
+    seq: usize,
+}
+
+impl ClassifierEngine {
+    /// Raw class probabilities for already-encoded token ids.
+    pub fn probs_ids(&self, ids: &[i32]) -> Result<[f64; 3]> {
+        debug_assert_eq!(ids.len(), self.seq);
+        let toks = i32_buffer(&self.client, ids, &[1, self.seq])?;
+        let mut args: Vec<&PjRtBuffer> = self.weights.iter().collect();
+        args.push(&toks);
+        let outs = run_untuple(&self.exe, &args)?;
+        let p: Vec<f32> = outs[0].to_vec().map_err(|e| anyhow!("probs: {e:?}"))?;
+        if p.len() != 3 {
+            bail!("expected 3 probs, got {}", p.len());
+        }
+        Ok([p[0] as f64, p[1] as f64, p[2] as f64])
+    }
+}
+
+impl Classifier for ClassifierEngine {
+    fn probs(&mut self, text: &str) -> Result<[f64; 3]> {
+        let ids = tokenizer::encode(text, self.seq);
+        self.probs_ids(&ids)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LM engine (prefill + KV-cache decode loop)
+// ---------------------------------------------------------------------------
+
+/// Result of one generation.
+#[derive(Debug, Clone)]
+pub struct Generation {
+    pub tokens: Vec<i32>,
+    /// Wall-clock seconds until the first token (prefill).
+    pub ttft_s: f64,
+    /// Total wall-clock seconds.
+    pub latency_s: f64,
+    pub prompt_tokens: usize,
+}
+
+/// Per-sequence decode state (KV bytes live on the host between steps).
+struct SeqState {
+    kv: Vec<u8>,
+    pos: i32,
+    last_token: i32,
+    out: Vec<i32>,
+}
+
+/// A compiled LM tier: batch-1 prefill plus decode executables per batch.
+pub struct LmEngine {
+    client: PjRtClient,
+    pub tier: String,
+    prefill: PjRtLoadedExecutable,
+    decode: BTreeMap<usize, PjRtLoadedExecutable>,
+    weights: Vec<PjRtBuffer>,
+    pub vocab: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub seq_prefill: usize,
+    pub seq_max: usize,
+}
+
+impl LmEngine {
+    /// Bytes of one sequence's KV cache ([L, 2, 1, H, Smax, Dh] f32).
+    fn kv_bytes_per_seq(&self) -> usize {
+        self.n_layers * 2 * self.n_heads * self.seq_max * self.d_head * 4
+    }
+
+    /// KV dims at a given batch.
+    fn kv_dims(&self, b: usize) -> [usize; 6] {
+        [self.n_layers, 2, b, self.n_heads, self.seq_max, self.d_head]
+    }
+
+    /// Prefill one prompt; returns its decode state (first token sampled).
+    fn prefill_one(&self, prompt: &str) -> Result<SeqState> {
+        let ids = tokenizer::encode_words(prompt, self.seq_prefill);
+        let len = tokenizer::valid_len(&ids).max(1);
+        let toks = i32_buffer(&self.client, &ids, &[1, self.seq_prefill])?;
+        let lens = i32_buffer(&self.client, &[len as i32], &[1])?;
+        let mut args: Vec<&PjRtBuffer> = self.weights.iter().collect();
+        args.push(&toks);
+        args.push(&lens);
+        let outs = run_untuple(&self.prefill, &args)?;
+        let first = argmax_rows(&outs[0], 1, self.vocab)?[0];
+        let kv = literal_bytes(&outs[1])?;
+        if kv.len() != self.kv_bytes_per_seq() {
+            bail!("kv size {} != expected {}", kv.len(), self.kv_bytes_per_seq());
+        }
+        Ok(SeqState { kv, pos: len as i32, last_token: first, out: vec![first] })
+    }
+
+    /// One decode step over a batch of sequences (continuous batching:
+    /// positions may differ per sequence). Batch size must be compiled.
+    fn decode_step(&self, states: &mut [&mut SeqState]) -> Result<()> {
+        let b = states.len();
+        let exe = self
+            .decode
+            .get(&b)
+            .ok_or_else(|| anyhow!("decode batch {b} not compiled"))?;
+        // Pack per-seq KV into the [L*2, B, rest] device layout.
+        let per = self.kv_bytes_per_seq();
+        let chunk = per / (self.n_layers * 2);
+        let mut kv = vec![0u8; per * b];
+        for (bi, st) in states.iter().enumerate() {
+            for l in 0..self.n_layers * 2 {
+                let src = &st.kv[l * chunk..(l + 1) * chunk];
+                let dst = (l * b + bi) * chunk;
+                kv[dst..dst + chunk].copy_from_slice(src);
+            }
+        }
+        let kv_buf = f32_bytes_buffer(&self.client, &kv, &self.kv_dims(b))?;
+        let toks: Vec<i32> = states.iter().map(|s| s.last_token).collect();
+        let pos: Vec<i32> = states.iter().map(|s| s.pos).collect();
+        let tok_buf = i32_buffer(&self.client, &toks, &[b])?;
+        let pos_buf = i32_buffer(&self.client, &pos, &[b])?;
+        let mut args: Vec<&PjRtBuffer> = self.weights.iter().collect();
+        args.push(&kv_buf);
+        args.push(&tok_buf);
+        args.push(&pos_buf);
+        let outs = run_untuple(exe, &args)?;
+        let next = argmax_rows(&outs[0], b, self.vocab)?;
+        let kv_out = literal_bytes(&outs[1])?;
+        for (bi, st) in states.iter_mut().enumerate() {
+            for l in 0..self.n_layers * 2 {
+                let src = (l * b + bi) * chunk;
+                st.kv[l * chunk..(l + 1) * chunk]
+                    .copy_from_slice(&kv_out[src..src + chunk]);
+            }
+            st.pos += 1;
+            st.last_token = next[bi];
+            st.out.push(next[bi]);
+        }
+        Ok(())
+    }
+
+    /// Greedy generation for a single prompt.
+    pub fn generate(&self, prompt: &str, max_new: usize) -> Result<Generation> {
+        let t0 = Instant::now();
+        let mut st = self.prefill_one(prompt)?;
+        let ttft = t0.elapsed().as_secs_f64();
+        let prompt_tokens = st.pos as usize;
+        let budget = max_new.min(self.seq_max.saturating_sub(st.pos as usize));
+        for _ in 1..budget.max(1) {
+            let mut only = [&mut st];
+            self.decode_step(&mut only)?;
+        }
+        Ok(Generation {
+            tokens: st.out,
+            ttft_s: ttft,
+            latency_s: t0.elapsed().as_secs_f64(),
+            prompt_tokens,
+        })
+    }
+
+    /// Greedy generation for a batch of prompts using a compiled batch
+    /// size (prompts prefill individually, then decode jointly — the
+    /// continuous-batching pattern the paper's vLLM backend uses).
+    pub fn generate_batch(&self, prompts: &[&str], max_new: usize) -> Result<Vec<Generation>> {
+        let b = prompts.len();
+        if !self.decode.contains_key(&b) {
+            bail!("decode batch {b} not compiled");
+        }
+        let t0 = Instant::now();
+        let mut states = Vec::with_capacity(b);
+        let mut ttfts = Vec::with_capacity(b);
+        for p in prompts {
+            let st = self.prefill_one(p)?;
+            ttfts.push(t0.elapsed().as_secs_f64());
+            states.push(st);
+        }
+        let max_pos = states.iter().map(|s| s.pos).max().unwrap_or(0) as usize;
+        let budget = max_new.min(self.seq_max.saturating_sub(max_pos));
+        for _ in 1..budget.max(1) {
+            let mut refs: Vec<&mut SeqState> = states.iter_mut().collect();
+            self.decode_step(&mut refs)?;
+        }
+        let total = t0.elapsed().as_secs_f64();
+        Ok(states
+            .into_iter()
+            .zip(ttfts)
+            .map(|(st, ttft)| Generation {
+                prompt_tokens: st.pos as usize - (st.out.len() - 1),
+                tokens: st.out,
+                ttft_s: ttft,
+                latency_s: total,
+            })
+            .collect())
+    }
+
+    /// Compiled decode batch sizes (for the batcher).
+    pub fn decode_batches(&self) -> Vec<usize> {
+        self.decode.keys().copied().collect()
+    }
+}
+
+/// Raw bytes of an f32 literal.
+fn literal_bytes(lit: &Literal) -> Result<Vec<u8>> {
+    let v: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("literal: {e:?}"))?;
+    let mut out = Vec::with_capacity(v.len() * 4);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    Ok(out)
+}

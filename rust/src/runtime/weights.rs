@@ -1,0 +1,178 @@
+//! `.psw` weight-container loader (the Rust half of `python/compile/psw.py`).
+//!
+//! Weights are runtime inputs to the compiled HLO modules, stored in a
+//! trivial binary format and uploaded once per engine as device-resident
+//! PJRT buffers — loading these files is exactly the "weights from PVC"
+//! step of the pod cold-start model.
+
+use anyhow::{bail, Context, Result};
+
+/// Element type of a stored tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn size(self) -> usize {
+        4
+    }
+}
+
+/// One named tensor: raw little-endian bytes + shape.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != Dtype::F32 {
+            bail!("{}: not f32", self.name);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+}
+
+/// Parse a `.psw` file.
+pub fn load(path: &str) -> Result<Vec<Tensor>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+    parse(&bytes).with_context(|| format!("parsing {path}"))
+}
+
+/// Parse from bytes.
+pub fn parse(bytes: &[u8]) -> Result<Vec<Tensor>> {
+    let mut r = Reader { b: bytes, i: 0 };
+    if r.take(4)? != b"PSW1" {
+        bail!("bad magic");
+    }
+    let count = r.u32()? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = r.u16()? as usize;
+        let name = String::from_utf8(r.take(name_len)?.to_vec())?;
+        let dtype = match r.u8()? {
+            0 => Dtype::F32,
+            1 => Dtype::I32,
+            d => bail!("{name}: unknown dtype {d}"),
+        };
+        let ndim = r.u8()? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(r.u32()? as usize);
+        }
+        let n: usize = shape.iter().product::<usize>().max(1);
+        let data = r.take(n * dtype.size())?.to_vec();
+        out.push(Tensor { name, dtype, shape, data });
+    }
+    if r.i != bytes.len() {
+        bail!("trailing bytes after {} tensors", count);
+    }
+    Ok(out)
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("truncated file at byte {}", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<u8> {
+        // PSW1, 1 tensor: name "w", f32, shape [2,2], data [1,2,3,4]
+        let mut b = b"PSW1".to_vec();
+        b.extend(1u32.to_le_bytes());
+        b.extend(1u16.to_le_bytes());
+        b.push(b'w');
+        b.push(0); // f32
+        b.push(2); // ndim
+        b.extend(2u32.to_le_bytes());
+        b.extend(2u32.to_le_bytes());
+        for v in [1f32, 2.0, 3.0, 4.0] {
+            b.extend(v.to_le_bytes());
+        }
+        b
+    }
+
+    #[test]
+    fn parses_sample() {
+        let ts = parse(&sample()).unwrap();
+        assert_eq!(ts.len(), 1);
+        assert_eq!(ts[0].name, "w");
+        assert_eq!(ts[0].shape, vec![2, 2]);
+        assert_eq!(ts[0].as_f32().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut b = sample();
+        b[0] = b'X';
+        assert!(parse(&b).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let b = sample();
+        assert!(parse(&b[..b.len() - 2]).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut b = sample();
+        b.push(0);
+        assert!(parse(&b).is_err());
+    }
+
+    #[test]
+    fn scalar_tensor() {
+        let mut b = b"PSW1".to_vec();
+        b.extend(1u32.to_le_bytes());
+        b.extend(1u16.to_le_bytes());
+        b.push(b's');
+        b.push(1); // i32
+        b.push(0); // ndim 0 → scalar
+        b.extend(7i32.to_le_bytes());
+        let ts = parse(&b).unwrap();
+        assert_eq!(ts[0].elements(), 1);
+        assert_eq!(ts[0].dtype, Dtype::I32);
+    }
+}

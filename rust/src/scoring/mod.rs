@@ -1,0 +1,208 @@
+//! The normalized multi-objective orchestration score (paper Eq. 2).
+//!
+//! `f(p, S_xy) = w_R·R̂(p, L_x) + w_T·T̂(S_xy) + w_C·Ĉ(S_xy)`
+//!
+//! with `(w_R, w_T, w_C)` the convex normalization of the operator
+//! profile's `(α, λ, μ)` and each component min–max normalized over
+//! historical system statistics — latency and cost become *goodness*
+//! scores via `1 − norm(·)`.
+
+use crate::config::Profile;
+use crate::util::stats::HistoryNorm;
+
+/// Convex weights derived from an operator profile.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Weights {
+    pub w_r: f64,
+    pub w_t: f64,
+    pub w_c: f64,
+}
+
+impl Weights {
+    /// Normalize (α, λ, μ) into convex weights. The all-zero baseline
+    /// profile degenerates to pure relevance (routing disabled upstream).
+    pub fn from_profile(p: &Profile) -> Weights {
+        let total = p.alpha + p.lambda + p.mu;
+        if total <= 0.0 {
+            return Weights { w_r: 1.0, w_t: 0.0, w_c: 0.0 };
+        }
+        Weights {
+            w_r: p.alpha / total,
+            w_t: p.lambda / total,
+            w_c: p.mu / total,
+        }
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.w_r + self.w_t + self.w_c
+    }
+}
+
+/// Normalized component scores for one (prompt, service) pair.
+#[derive(Debug, Clone, Copy)]
+pub struct Components {
+    /// R̂ ∈ [0,1] — relevance of model to predicted complexity.
+    pub relevance: f64,
+    /// T̂ ∈ [0,1] — 1 − normalized expected latency.
+    pub timeliness: f64,
+    /// Ĉ ∈ [0,1] — 1 − normalized expected cost.
+    pub economy: f64,
+}
+
+/// Eq. 2: convex combination, guaranteed in [0, 1].
+pub fn score(w: Weights, c: Components) -> f64 {
+    debug_assert!((w.sum() - 1.0).abs() < 1e-9);
+    let f = w.w_r * c.relevance + w.w_t * c.timeliness + w.w_c * c.economy;
+    debug_assert!((0.0..=1.0 + 1e-9).contains(&f));
+    f.clamp(0.0, 1.0)
+}
+
+/// Rolling normalizers for the latency and cost components — "min–max or
+/// distributional normalization computed over historical system
+/// statistics" (paper §Problem). One instance is shared per registry.
+#[derive(Debug)]
+pub struct ScoreNormalizer {
+    latency: HistoryNorm,
+    cost: HistoryNorm,
+}
+
+impl ScoreNormalizer {
+    pub fn new(window: usize) -> Self {
+        Self {
+            latency: HistoryNorm::new(window),
+            cost: HistoryNorm::new(window),
+        }
+    }
+
+    /// Record an observed (latency, cost) sample into history.
+    pub fn observe(&mut self, latency_s: f64, cost_usd: f64) {
+        self.latency.observe(latency_s);
+        self.cost.observe(cost_usd);
+    }
+
+    /// T̂ = 1 − norm(T): higher is better.
+    pub fn timeliness(&self, expected_latency_s: f64) -> f64 {
+        1.0 - self.latency.normalize(expected_latency_s)
+    }
+
+    /// Ĉ = 1 − norm(C): higher is better.
+    pub fn economy(&self, expected_cost_usd: f64) -> f64 {
+        1.0 - self.cost.normalize(expected_cost_usd)
+    }
+
+    pub fn samples(&self) -> usize {
+        self.latency.len()
+    }
+}
+
+/// Relevance R̂(p, L_x): how well a model's capability matches the
+/// predicted complexity class. A capability exactly matched to demand
+/// scores 1; overkill decays mildly (wasted capacity), underkill decays
+/// steeply (failures) — the asymmetry that pushes hard prompts to big
+/// models without sending everything there.
+pub fn relevance(capability: &[f64; 3], complexity: usize, confidence: f64) -> f64 {
+    let c = complexity.min(2);
+    // Expected capability under classification uncertainty: blend the
+    // predicted class with its neighbours proportional to (1 - confidence).
+    let mut need = [0.0f64; 3];
+    need[c] = confidence;
+    let spill = (1.0 - confidence) / 2.0;
+    need[(c + 1).min(2)] += spill;
+    need[c.saturating_sub(1)] += spill;
+    // Renormalize (edge classes fold spill onto themselves).
+    let total: f64 = need.iter().sum();
+    let mut r = 0.0;
+    for (k, n) in need.iter().enumerate() {
+        r += (n / total) * capability[k];
+    }
+    r.clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Profile;
+
+    #[test]
+    fn weights_are_convex() {
+        for p in &Profile::ALL {
+            let w = Weights::from_profile(p);
+            assert!((w.sum() - 1.0).abs() < 1e-12, "{}", p.name);
+            assert!(w.w_r >= 0.0 && w.w_t >= 0.0 && w.w_c >= 0.0);
+        }
+    }
+
+    #[test]
+    fn quality_profile_weights_match_paper() {
+        // (1.0, 0.1, 0.1) → w_R = 1/1.2 ≈ 0.833
+        let w = Weights::from_profile(&Profile::QUALITY);
+        assert!((w.w_r - 1.0 / 1.2).abs() < 1e-12);
+        assert!((w.w_t - 0.1 / 1.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn score_bounded() {
+        let w = Weights::from_profile(&Profile::BALANCED);
+        for r in [0.0, 0.5, 1.0] {
+            for t in [0.0, 0.5, 1.0] {
+                for c in [0.0, 0.5, 1.0] {
+                    let f = score(w, Components {
+                        relevance: r,
+                        timeliness: t,
+                        economy: c,
+                    });
+                    assert!((0.0..=1.0).contains(&f));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cost_profile_prefers_cheap() {
+        let w = Weights::from_profile(&Profile::COST);
+        let cheap = score(w, Components { relevance: 0.6, timeliness: 0.5, economy: 0.9 });
+        let pricey = score(w, Components { relevance: 0.9, timeliness: 0.5, economy: 0.1 });
+        assert!(cheap > pricey);
+    }
+
+    #[test]
+    fn quality_profile_prefers_capable() {
+        let w = Weights::from_profile(&Profile::QUALITY);
+        let strong = score(w, Components { relevance: 0.95, timeliness: 0.2, economy: 0.2 });
+        let weak = score(w, Components { relevance: 0.45, timeliness: 1.0, economy: 1.0 });
+        assert!(strong > weak);
+    }
+
+    #[test]
+    fn normalizer_learns_scale() {
+        let mut n = ScoreNormalizer::new(64);
+        for i in 0..32 {
+            n.observe(1.0 + i as f64 / 10.0, 0.01 + i as f64 / 1000.0);
+        }
+        assert!(n.timeliness(1.0) > n.timeliness(4.0));
+        assert!(n.economy(0.01) > n.economy(0.04));
+    }
+
+    #[test]
+    fn relevance_matches_capability_under_certainty() {
+        let cap = [0.97, 0.85, 0.50];
+        assert!((relevance(&cap, 0, 1.0) - 0.97).abs() < 1e-12);
+        assert!((relevance(&cap, 2, 1.0) - 0.50).abs() < 1e-12);
+    }
+
+    #[test]
+    fn relevance_blends_under_uncertainty() {
+        let cap = [0.9, 0.8, 0.4];
+        let certain = relevance(&cap, 2, 1.0);
+        let unsure = relevance(&cap, 2, 0.5);
+        // Uncertainty about a hard prompt pulls in the medium capability.
+        assert!(unsure > certain);
+    }
+
+    #[test]
+    fn baseline_profile_degenerates_to_relevance() {
+        let w = Weights::from_profile(&Profile::BASELINE);
+        assert_eq!(w.w_r, 1.0);
+        assert_eq!(w.w_t, 0.0);
+    }
+}

@@ -1,0 +1,233 @@
+//! Telemetry: the closed-loop signals feeding the Router and Orchestrator
+//! (paper Fig. 1 — "Telemetry continuously monitors latency, utilization,
+//! and service health").
+//!
+//! All APIs take explicit timestamps (seconds) so the same code serves
+//! live mode (wall clock) and virtual-time simulation.
+
+use std::collections::VecDeque;
+
+use crate::util::stats::{Ema, Summary};
+
+/// Sliding-window request counter → arrival-rate estimate (Alg. 1's
+/// `GetAvgRequestRate(m, w)`).
+#[derive(Debug, Clone)]
+pub struct RateWindow {
+    window_s: f64,
+    events: VecDeque<f64>,
+    /// Total ever observed (events are evicted, the counter is not).
+    pub total: u64,
+}
+
+impl RateWindow {
+    pub fn new(window_s: f64) -> Self {
+        Self { window_s, events: VecDeque::new(), total: 0 }
+    }
+
+    pub fn record(&mut self, now_s: f64) {
+        self.events.push_back(now_s);
+        self.total += 1;
+        self.evict(now_s);
+    }
+
+    fn evict(&mut self, now_s: f64) {
+        while let Some(&t) = self.events.front() {
+            if now_s - t > self.window_s {
+                self.events.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Requests per second over the window.
+    pub fn rate(&mut self, now_s: f64) -> f64 {
+        self.evict(now_s);
+        if self.window_s <= 0.0 {
+            return 0.0;
+        }
+        self.events.len() as f64 / self.window_s
+    }
+
+    /// Seconds since the most recent event (∞ if none) — Alg. 1's
+    /// `IdleTime(m)`.
+    pub fn idle_time(&self, now_s: f64) -> f64 {
+        match self.events.back() {
+            Some(&t) => (now_s - t).max(0.0),
+            None => f64::INFINITY,
+        }
+    }
+}
+
+/// Per-service telemetry: arrival rate, latency, queue, success counts.
+#[derive(Debug)]
+pub struct ServiceTelemetry {
+    pub arrivals: RateWindow,
+    pub latency_ema: Ema,
+    pub ttft_ema: Ema,
+    latencies: Vec<f64>,
+    ttfts: Vec<f64>,
+    pub successes: u64,
+    pub failures: u64,
+    /// In-flight requests right now (gauge).
+    pub inflight: usize,
+    /// Integral of inflight over time → utilization (gpu-occupancy proxy).
+    busy_integral: f64,
+    last_update_s: f64,
+}
+
+impl ServiceTelemetry {
+    pub fn new(window_s: f64) -> Self {
+        Self {
+            arrivals: RateWindow::new(window_s),
+            latency_ema: Ema::new(0.1),
+            ttft_ema: Ema::new(0.1),
+            latencies: Vec::new(),
+            ttfts: Vec::new(),
+            successes: 0,
+            failures: 0,
+            inflight: 0,
+            busy_integral: 0.0,
+            last_update_s: 0.0,
+        }
+    }
+
+    fn integrate(&mut self, now_s: f64, capacity: f64) {
+        if now_s > self.last_update_s && capacity > 0.0 {
+            let busy = (self.inflight as f64 / capacity).min(1.0);
+            self.busy_integral += busy * (now_s - self.last_update_s);
+        }
+        self.last_update_s = self.last_update_s.max(now_s);
+    }
+
+    pub fn on_dispatch(&mut self, now_s: f64, capacity: f64) {
+        self.integrate(now_s, capacity);
+        self.arrivals.record(now_s);
+        self.inflight += 1;
+    }
+
+    pub fn on_complete(
+        &mut self,
+        now_s: f64,
+        capacity: f64,
+        latency_s: f64,
+        ttft_s: f64,
+        success: bool,
+    ) {
+        self.integrate(now_s, capacity);
+        self.inflight = self.inflight.saturating_sub(1);
+        self.latency_ema.observe(latency_s);
+        self.ttft_ema.observe(ttft_s);
+        self.latencies.push(latency_s);
+        self.ttfts.push(ttft_s);
+        if success {
+            self.successes += 1;
+        } else {
+            self.failures += 1;
+        }
+    }
+
+    /// Mean busy fraction since t=0 (GPU utilization proxy).
+    pub fn utilization(&self, now_s: f64) -> f64 {
+        if now_s <= 0.0 {
+            0.0
+        } else {
+            (self.busy_integral / now_s).clamp(0.0, 1.0)
+        }
+    }
+
+    pub fn success_rate(&self) -> f64 {
+        let total = self.successes + self.failures;
+        if total == 0 {
+            1.0
+        } else {
+            self.successes as f64 / total as f64
+        }
+    }
+
+    pub fn latency_summary(&self) -> Summary {
+        Summary::of(&self.latencies)
+    }
+
+    pub fn ttft_summary(&self) -> Summary {
+        Summary::of(&self.ttfts)
+    }
+
+    /// Average latency (Alg. 1's `GetAvgLatency(m)`), with a prior for
+    /// cold services.
+    pub fn avg_latency(&self, prior_s: f64) -> f64 {
+        self.latency_ema.get_or(prior_s)
+    }
+}
+
+/// Prometheus-style text exposition of a metrics snapshot (the gateway's
+/// `/metrics` endpoint).
+pub fn export_prometheus(
+    metrics: &[(String, f64)],
+) -> String {
+    let mut out = String::new();
+    for (name, value) in metrics {
+        out.push_str(&format!("# TYPE {name} gauge\n{name} {value}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_window_counts_and_evicts() {
+        let mut w = RateWindow::new(10.0);
+        for t in 0..20 {
+            w.record(t as f64);
+        }
+        // Events older than now-10 are gone: at t=19 window holds 9..=19.
+        let rate = w.rate(19.0);
+        assert!((rate - 1.1).abs() < 1e-9, "rate {rate}");
+        assert_eq!(w.total, 20);
+    }
+
+    #[test]
+    fn idle_time_tracks_last_event() {
+        let mut w = RateWindow::new(10.0);
+        assert!(w.idle_time(5.0).is_infinite());
+        w.record(3.0);
+        assert!((w.idle_time(8.0) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utilization_integrates_busy_time() {
+        let mut t = ServiceTelemetry::new(60.0);
+        // One request occupying a capacity-1 service from t=0 to t=5,
+        // then idle until t=10 → utilization 0.5.
+        t.on_dispatch(0.0, 1.0);
+        t.on_complete(5.0, 1.0, 5.0, 1.0, true);
+        t.integrate(10.0, 1.0);
+        assert!((t.utilization(10.0) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn success_rate_counts() {
+        let mut t = ServiceTelemetry::new(60.0);
+        t.on_dispatch(0.0, 4.0);
+        t.on_complete(1.0, 4.0, 1.0, 0.2, true);
+        t.on_dispatch(1.0, 4.0);
+        t.on_complete(2.0, 4.0, 1.0, 0.2, false);
+        assert!((t.success_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(t.inflight, 0);
+    }
+
+    #[test]
+    fn avg_latency_uses_prior_when_cold() {
+        let t = ServiceTelemetry::new(60.0);
+        assert_eq!(t.avg_latency(2.5), 2.5);
+    }
+
+    #[test]
+    fn prometheus_format() {
+        let s = export_prometheus(&[("ps_requests_total".into(), 42.0)]);
+        assert!(s.contains("ps_requests_total 42"));
+        assert!(s.contains("# TYPE"));
+    }
+}

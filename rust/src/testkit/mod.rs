@@ -1,0 +1,166 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+//!
+//! Deterministic, seed-sweeping property checks with input reporting on
+//! failure. Used by the property test suite for coordinator invariants
+//! (routing, batching, KV accounting, scaling).
+//!
+//! ```no_run
+//! use pick_and_spin::testkit::{check, Gen};
+//! check("reverse twice is identity", 100, |g| {
+//!     let v: Vec<u32> = g.vec(0..50, |g| g.u32(0..1000));
+//!     let mut w = v.clone();
+//!     w.reverse();
+//!     w.reverse();
+//!     assert_eq!(v, w);
+//! });
+//! ```
+
+use std::ops::Range;
+
+use crate::util::rng::SplitMix64;
+
+/// Generator handle passed to properties.
+pub struct Gen {
+    rng: SplitMix64,
+    /// Human-readable log of drawn values, shown on failure.
+    pub trace: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Self { rng: SplitMix64::new(seed), trace: Vec::new() }
+    }
+
+    pub fn u64(&mut self, range: Range<u64>) -> u64 {
+        let v = range.start + self.rng.below(range.end - range.start);
+        self.trace.push(format!("u64 {v}"));
+        v
+    }
+
+    pub fn u32(&mut self, range: Range<u32>) -> u32 {
+        self.u64(range.start as u64..range.end as u64) as u32
+    }
+
+    pub fn usize(&mut self, range: Range<usize>) -> usize {
+        self.u64(range.start as u64..range.end as u64) as usize
+    }
+
+    pub fn f64(&mut self, range: Range<f64>) -> f64 {
+        let v = self.rng.range(range.start, range.end);
+        self.trace.push(format!("f64 {v:.6}"));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.chance(0.5);
+        self.trace.push(format!("bool {v}"));
+        v
+    }
+
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T
+    where
+        T: std::fmt::Debug,
+    {
+        let idx = self.rng.below(items.len() as u64) as usize;
+        self.trace.push(format!("pick[{idx}] {:?}", items[idx]));
+        &items[idx]
+    }
+
+    pub fn vec<T>(
+        &mut self,
+        len: Range<usize>,
+        mut f: impl FnMut(&mut Gen) -> T,
+    ) -> Vec<T> {
+        let n = self.usize(len);
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// ASCII-ish text of bounded length (prompt-like inputs).
+    pub fn text(&mut self, max_words: usize) -> String {
+        const WORDS: &[&str] = &[
+            "prove", "sum", "list", "define", "derive", "explain", "why",
+            "what", "is", "the", "a", "function", "of", "number", "step",
+            "by", "how", "many", "apples", "123", "x",
+        ];
+        let n = self.usize(0..max_words + 1);
+        let s = (0..n)
+            .map(|_| *self.rng.choose(WORDS))
+            .collect::<Vec<_>>()
+            .join(" ");
+        self.trace.push(format!("text {s:?}"));
+        s
+    }
+
+    /// Raw RNG access for custom draws.
+    pub fn rng(&mut self) -> &mut SplitMix64 {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` against `cases` deterministic seeds; panics with the seed
+/// and drawn-value trace of the first failing case.
+pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    for seed in 0..cases {
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed ^ 0x5EED);
+            prop(&mut g);
+            g
+        });
+        if let Err(err) = result {
+            // Re-run to capture the trace (prop may have partially logged).
+            let mut g = Gen::new(seed ^ 0x5EED);
+            let trace = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                prop(&mut g);
+            }))
+            .err()
+            .map(|_| g.trace.join("\n  "))
+            .unwrap_or_default();
+            panic!(
+                "property `{name}` failed at seed {seed}\n  drawn:\n  {trace}\n  panic: {:?}",
+                err.downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("add commutes", 50, |g| {
+            let a = g.u32(0..1000);
+            let b = g.u32(0..1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn failing_property_reports_seed() {
+        check("always fails", 5, |g| {
+            let x = g.u32(0..10);
+            assert!(x > 100, "x was {x}");
+        });
+    }
+
+    #[test]
+    fn generators_deterministic_per_seed() {
+        let mut a = Gen::new(1);
+        let mut b = Gen::new(1);
+        assert_eq!(a.u64(0..1000), b.u64(0..1000));
+        assert_eq!(a.text(5), b.text(5));
+    }
+
+    #[test]
+    fn vec_respects_bounds() {
+        let mut g = Gen::new(2);
+        for _ in 0..100 {
+            let v = g.vec(2..5, |g| g.u32(0..10));
+            assert!(v.len() >= 2 && v.len() < 5);
+        }
+    }
+}

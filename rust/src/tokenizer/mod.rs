@@ -1,0 +1,138 @@
+//! Hashed-wordpiece tokenizer — bit-parity with `python/compile/tokenizer.py`.
+//!
+//! The semantic router tokenizes on the request path, so this is Rust;
+//! the Python twin runs only at build time (training corpus, AOT). Parity
+//! is enforced against `artifacts/tokenizer_parity.json` in the
+//! integration tests.
+
+use crate::util::rng::fnv1a64;
+
+pub const VOCAB: u32 = 4096;
+pub const PAD: u32 = 0;
+pub const CLS: u32 = 1;
+pub const SEP: u32 = 2;
+pub const UNK: u32 = 3; // reserved, never emitted by the hash
+pub const RESERVED: u32 = 4;
+
+/// Classifier input length (must match `manifest.json` / SEQ_CLS).
+pub const SEQ_CLS: usize = 48;
+
+/// Lowercase and split into maximal ASCII-alphanumeric runs.
+pub fn split_words(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    for ch in text.chars() {
+        let ch = ch.to_ascii_lowercase();
+        if ch.is_ascii_alphanumeric() {
+            cur.push(ch);
+        } else if !cur.is_empty() {
+            out.push(std::mem::take(&mut cur));
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// Hash a word to its vocabulary id.
+pub fn word_id(word: &str) -> u32 {
+    RESERVED + (fnv1a64(word.as_bytes()) % (VOCAB - RESERVED) as u64) as u32
+}
+
+/// Encode to exactly `seq_len` ids: `[CLS] words... [SEP] PAD...`.
+pub fn encode(text: &str, seq_len: usize) -> Vec<i32> {
+    let mut ids: Vec<i32> = Vec::with_capacity(seq_len);
+    ids.push(CLS as i32);
+    for w in split_words(text).into_iter().take(seq_len - 2) {
+        ids.push(word_id(&w) as i32);
+    }
+    ids.push(SEP as i32);
+    while ids.len() < seq_len {
+        ids.push(PAD as i32);
+    }
+    ids.truncate(seq_len);
+    ids
+}
+
+/// Encode without CLS/SEP framing (LM prompt): word ids, PAD-padded.
+pub fn encode_words(text: &str, max_words: usize) -> Vec<i32> {
+    let mut ids: Vec<i32> = split_words(text)
+        .into_iter()
+        .take(max_words)
+        .map(|w| word_id(&w) as i32)
+        .collect();
+    while ids.len() < max_words {
+        ids.push(PAD as i32);
+    }
+    ids
+}
+
+/// Number of non-PAD positions (PAD only appears as right padding).
+pub fn valid_len(ids: &[i32]) -> usize {
+    let mut n = ids.len();
+    while n > 0 && ids[n - 1] == PAD as i32 {
+        n -= 1;
+    }
+    n
+}
+
+/// Token count of a prompt (before truncation) — the router's length
+/// feature and the serving layer's prompt-size estimate.
+pub fn word_count(text: &str) -> usize {
+    split_words(text).len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_matches_python_semantics() {
+        assert_eq!(split_words("Hello, World!"), vec!["hello", "world"]);
+        assert_eq!(split_words("f(n) = 3n + 7"), vec!["f", "n", "3n", "7"]);
+        assert!(split_words("").is_empty());
+        assert!(split_words("  ... !!! ").is_empty());
+        // non-ascii characters act as separators
+        assert_eq!(split_words("Ünïcödé"), vec!["n", "c", "d"]);
+    }
+
+    #[test]
+    fn encode_framing() {
+        let ids = encode("hello world", 8);
+        assert_eq!(ids[0], CLS as i32);
+        assert_eq!(ids[3], SEP as i32);
+        assert_eq!(&ids[4..], &[PAD as i32; 4]);
+    }
+
+    #[test]
+    fn encode_truncates() {
+        let long = vec!["w"; 100].join(" ");
+        let ids = encode(&long, 16);
+        assert_eq!(ids.len(), 16);
+        assert!(!ids.contains(&(PAD as i32)));
+    }
+
+    #[test]
+    fn empty_prompt() {
+        assert_eq!(
+            encode("", 6),
+            vec![CLS as i32, SEP as i32, 0, 0, 0, 0]
+        );
+    }
+
+    #[test]
+    fn ids_in_range() {
+        for w in ["sum", "prove", "the", "123abc", "a"] {
+            let id = word_id(w);
+            assert!(id >= RESERVED && id < VOCAB);
+        }
+    }
+
+    #[test]
+    fn valid_len_strips_padding() {
+        assert_eq!(valid_len(&[1, 5, 2, 0, 0]), 3);
+        assert_eq!(valid_len(&[0, 0]), 0);
+        assert_eq!(valid_len(&[1, 2]), 2);
+    }
+}

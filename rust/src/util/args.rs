@@ -1,0 +1,190 @@
+//! CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `command [--flag] [--key value] [positional...]` with typed
+//! accessors and generated usage text — enough surface for the
+//! `pick-and-spin` binary and the bench harnesses.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: Option<String>,
+    pub flags: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+/// Declarative spec used for parsing + usage text.
+#[derive(Debug, Clone)]
+pub struct Spec {
+    pub name: &'static str,
+    pub about: &'static str,
+    /// (name, takes_value, help)
+    pub options: Vec<(&'static str, bool, &'static str)>,
+}
+
+impl Spec {
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        for (name, takes_value, help) in &self.options {
+            let arg = if *takes_value {
+                format!("--{name} <value>")
+            } else {
+                format!("--{name}")
+            };
+            s.push_str(&format!("  {arg:<28} {help}\n"));
+        }
+        s
+    }
+
+    /// Parse argv (excluding the program name and command).
+    pub fn parse(&self, argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let known: BTreeMap<&str, bool> =
+            self.options.iter().map(|(n, tv, _)| (*n, *tv)).collect();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                // --key=value form
+                if let Some((k, v)) = name.split_once('=') {
+                    match known.get(k) {
+                        Some(true) => {
+                            args.options.insert(k.to_string(), v.to_string());
+                        }
+                        Some(false) => bail!("--{k} does not take a value"),
+                        None => bail!("unknown option --{k}\n\n{}", self.usage()),
+                    }
+                } else {
+                    match known.get(name) {
+                        Some(true) => {
+                            i += 1;
+                            let v = argv.get(i).ok_or_else(|| {
+                                anyhow!("--{name} requires a value")
+                            })?;
+                            args.options.insert(name.to_string(), v.clone());
+                        }
+                        Some(false) => args.flags.push(name.to_string()),
+                        None => bail!("unknown option --{name}\n\n{}", self.usage()),
+                    }
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name}: `{v}` is not an integer")),
+        }
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name}: `{v}` is not a number")),
+        }
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name}: `{v}` is not an integer")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Spec {
+        Spec {
+            name: "test",
+            about: "test spec",
+            options: vec![
+                ("count", true, "how many"),
+                ("verbose", false, "chatty"),
+                ("rate", true, "qps"),
+            ],
+        }
+    }
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_mixed() {
+        let a = spec()
+            .parse(&sv(&["--count", "5", "--verbose", "pos1", "--rate=2.5"]))
+            .unwrap();
+        assert_eq!(a.opt_usize("count", 0).unwrap(), 5);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.opt_f64("rate", 0.0).unwrap(), 2.5);
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(spec().parse(&sv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(spec().parse(&sv(&["--count"])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(spec().parse(&sv(&["--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = spec().parse(&sv(&[])).unwrap();
+        assert_eq!(a.opt_usize("count", 7).unwrap(), 7);
+        assert_eq!(a.opt_or("missing", "x"), "x");
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = spec().parse(&sv(&["--count", "abc"])).unwrap();
+        assert!(a.opt_usize("count", 0).is_err());
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = spec().usage();
+        assert!(u.contains("--count"));
+        assert!(u.contains("--verbose"));
+    }
+}

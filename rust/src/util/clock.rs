@@ -1,0 +1,114 @@
+//! Clock abstraction: one trait, two implementations.
+//!
+//! The whole control plane is written against [`Clock`] so the same
+//! router/orchestrator/backend code runs in **live** mode (wall time,
+//! real PJRT inference) and **sim** mode (virtual time driven by the
+//! discrete-event engine, where the 163k-run paper tables finish in
+//! seconds).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Monotonic time source measured in nanoseconds from an arbitrary epoch.
+pub trait Clock: Send + Sync {
+    fn now_ns(&self) -> u64;
+
+    fn now_secs(&self) -> f64 {
+        self.now_ns() as f64 / 1e9
+    }
+}
+
+/// Wall-clock implementation.
+pub struct RealClock {
+    epoch: Instant,
+}
+
+impl RealClock {
+    pub fn new() -> Self {
+        Self { epoch: Instant::now() }
+    }
+}
+
+impl Default for RealClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for RealClock {
+    fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+}
+
+/// Virtual clock — advanced explicitly by the discrete-event engine.
+#[derive(Default)]
+pub struct VirtualClock {
+    ns: AtomicU64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self { ns: AtomicU64::new(0) })
+    }
+
+    /// Advance to an absolute timestamp. Monotonic by construction:
+    /// `fetch_max` ignores timestamps in the past.
+    pub fn advance_to(&self, t_ns: u64) {
+        self.ns.fetch_max(t_ns, Ordering::SeqCst);
+    }
+
+    /// Advance by a delta, returning the new now.
+    pub fn advance_by(&self, delta_ns: u64) -> u64 {
+        self.ns.fetch_add(delta_ns, Ordering::SeqCst) + delta_ns
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now_ns(&self) -> u64 {
+        self.ns.load(Ordering::SeqCst)
+    }
+}
+
+/// Seconds → nanoseconds helper (f64 seconds are the config-facing unit).
+pub fn secs_to_ns(s: f64) -> u64 {
+    (s * 1e9) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn real_clock_is_monotonic() {
+        let c = RealClock::new();
+        let a = c.now_ns();
+        let b = c.now_ns();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn virtual_clock_advances() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now_ns(), 0);
+        c.advance_to(5_000);
+        assert_eq!(c.now_ns(), 5_000);
+        c.advance_by(1_000);
+        assert_eq!(c.now_ns(), 6_000);
+        assert!((c.now_secs() - 6e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn virtual_clock_never_regresses() {
+        let c = VirtualClock::new();
+        c.advance_to(100);
+        c.advance_to(50); // fetch_max keeps 100
+        assert_eq!(c.now_ns(), 100);
+    }
+
+    #[test]
+    fn conversion() {
+        assert_eq!(secs_to_ns(1.5), 1_500_000_000);
+    }
+}

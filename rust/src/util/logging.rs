@@ -1,0 +1,123 @@
+//! Leveled logger (the `log`/`env_logger` facade is unavailable offline).
+//!
+//! Global level set once at startup from `--log-level` or `PS_LOG`;
+//! the macros are zero-cost below the active level apart from one atomic
+//! load.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> u8 {
+    LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Init from the `PS_LOG` env var (if set).
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("PS_LOG") {
+        if let Some(l) = Level::parse(&v) {
+            set_level(l);
+        }
+    }
+}
+
+#[doc(hidden)]
+pub fn emit(level: Level, module: &str, args: std::fmt::Arguments<'_>) {
+    eprintln!("[{} {}] {}", level.tag(), module, args);
+}
+
+#[macro_export]
+macro_rules! log_at {
+    ($level:expr, $($arg:tt)*) => {
+        if $crate::util::logging::enabled($level) {
+            $crate::util::logging::emit($level, module_path!(),
+                                        format_args!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::log_at!($crate::util::logging::Level::Error, $($arg)*) };
+}
+
+#[macro_export]
+macro_rules! warn_ {
+    ($($arg:tt)*) => { $crate::log_at!($crate::util::logging::Level::Warn, $($arg)*) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::log_at!($crate::util::logging::Level::Info, $($arg)*) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::log_at!($crate::util::logging::Level::Debug, $($arg)*) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => { $crate::log_at!($crate::util::logging::Level::Trace, $($arg)*) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(Level::parse("info"), Some(Level::Info));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("nope"), None);
+    }
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info); // restore default for other tests
+    }
+}

@@ -1,0 +1,65 @@
+//! Dependency substrates built from scratch for the offline environment:
+//! JSON, PRNG/distributions, statistics, clocks, threadpool/channels,
+//! logging, and CLI parsing.
+
+pub mod args;
+pub mod clock;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+/// Format a markdown-style table for report output (used by the bench
+/// harnesses to print the paper's tables).
+pub fn format_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let mut s = String::from("|");
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+        }
+        s.push('\n');
+        s
+    };
+    out.push_str(&fmt_row(
+        &headers.iter().map(|h| h.to_string()).collect::<Vec<_>>(),
+        &widths,
+    ));
+    out.push('|');
+    for w in &widths {
+        out.push_str(&format!("{:-<w$}|", "", w = w + 2));
+    }
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_aligns() {
+        let t = format_table(
+            &["name", "value"],
+            &[
+                vec!["a".into(), "1".into()],
+                vec!["longer".into(), "2.5".into()],
+            ],
+        );
+        assert!(t.contains("| name   | value |"));
+        assert!(t.contains("| longer | 2.5   |"));
+        assert_eq!(t.lines().count(), 4);
+    }
+}

@@ -1,0 +1,349 @@
+//! Statistics substrate: summaries, percentiles, EMA, rolling windows,
+//! histograms, and the min–max normalizers the scoring layer (Eq. 2) and
+//! the paper's Eq. 10 radar normalization use.
+
+/// Summary statistics over a sample.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary::default();
+        }
+        let mut sorted: Vec<f64> = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let var = sorted.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+            / n as f64;
+        Summary {
+            count: n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile_sorted(&sorted, 50.0),
+            p95: percentile_sorted(&sorted, 95.0),
+            p99: percentile_sorted(&sorted, 99.0),
+        }
+    }
+}
+
+/// Percentile by linear interpolation over a sorted slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+/// Percentile of an unsorted sample.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    let mut sorted: Vec<f64> = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&sorted, p)
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Min–max normalization to [0, 1]; constant inputs map to 0.5 (neutral).
+pub fn minmax_norm(x: f64, min: f64, max: f64) -> f64 {
+    if max <= min {
+        0.5
+    } else {
+        ((x - min) / (max - min)).clamp(0.0, 1.0)
+    }
+}
+
+/// The paper's Eq. 10: `N_i = 10 * (x_i - min) / (max - min)`.
+pub fn eq10_scale(xs: &[f64]) -> Vec<f64> {
+    if xs.is_empty() {
+        return vec![];
+    }
+    let min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    xs.iter().map(|&x| 10.0 * minmax_norm(x, min, max)).collect()
+}
+
+/// Exponential moving average.
+#[derive(Debug, Clone)]
+pub struct Ema {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        Self { alpha, value: None }
+    }
+
+    pub fn observe(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => self.alpha * x + (1.0 - self.alpha) * prev,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+
+    pub fn get_or(&self, default: f64) -> f64 {
+        self.value.unwrap_or(default)
+    }
+}
+
+/// Fixed-capacity rolling window (ring buffer) of observations.
+#[derive(Debug, Clone)]
+pub struct Rolling {
+    buf: Vec<f64>,
+    cap: usize,
+    head: usize,
+    full: bool,
+}
+
+impl Rolling {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        Self { buf: Vec::with_capacity(cap), cap, head: 0, full: false }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.buf.len() < self.cap {
+            self.buf.push(x);
+            if self.buf.len() == self.cap {
+                self.full = true;
+            }
+        } else {
+            self.buf[self.head] = x;
+            self.head = (self.head + 1) % self.cap;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        mean(&self.buf)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.buf.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.buf.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.buf
+    }
+
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.buf)
+    }
+}
+
+/// Streaming normalizer over historical observations — the paper's
+/// "min–max or distributional normalization computed over historical
+/// system statistics" for T̂ and Ĉ in Eq. 2.
+#[derive(Debug, Clone)]
+pub struct HistoryNorm {
+    window: Rolling,
+}
+
+impl HistoryNorm {
+    pub fn new(window: usize) -> Self {
+        Self { window: Rolling::new(window) }
+    }
+
+    /// Record an observation and return its normalized *badness* in [0,1]
+    /// relative to history (0 = best seen, 1 = worst seen).
+    pub fn observe(&mut self, x: f64) -> f64 {
+        self.window.push(x);
+        self.normalize(x)
+    }
+
+    /// Normalize without recording.
+    pub fn normalize(&self, x: f64) -> f64 {
+        if self.window.len() < 2 {
+            return 0.5;
+        }
+        minmax_norm(x, self.window.min(), self.window.max())
+    }
+
+    pub fn len(&self) -> usize {
+        self.window.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.window.is_empty()
+    }
+}
+
+/// Simple linear-bucket histogram for latency distributions.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub buckets: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, n: usize) -> Self {
+        assert!(hi > lo && n > 0);
+        Self { lo, hi, buckets: vec![0; n], underflow: 0, overflow: 0 }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let n = self.buckets.len();
+            let idx = ((x - self.lo) / (self.hi - self.lo) * n as f64) as usize;
+            self.buckets[idx.min(n - 1)] += 1;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.buckets.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+
+    /// ASCII sparkline for report output.
+    pub fn sparkline(&self) -> String {
+        const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let max = self.buckets.iter().copied().max().unwrap_or(0).max(1);
+        self.buckets
+            .iter()
+            .map(|&c| BARS[(c * 7 / max) as usize])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.count, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_empty() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.count, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((percentile(&xs, 50.0) - 50.5).abs() < 1e-9);
+        assert!((percentile(&xs, 99.0) - 99.01).abs() < 0.02);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+    }
+
+    #[test]
+    fn minmax_norm_clamps_and_degenerates() {
+        assert_eq!(minmax_norm(5.0, 0.0, 10.0), 0.5);
+        assert_eq!(minmax_norm(-1.0, 0.0, 10.0), 0.0);
+        assert_eq!(minmax_norm(11.0, 0.0, 10.0), 1.0);
+        assert_eq!(minmax_norm(3.0, 2.0, 2.0), 0.5);
+    }
+
+    #[test]
+    fn eq10_matches_paper_form() {
+        let v = eq10_scale(&[2.0, 4.0, 6.0]);
+        assert_eq!(v, vec![0.0, 5.0, 10.0]);
+    }
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.5);
+        assert_eq!(e.observe(10.0), 10.0);
+        let v = e.observe(0.0);
+        assert!((v - 5.0).abs() < 1e-12);
+        for _ in 0..64 {
+            e.observe(3.0);
+        }
+        assert!((e.get().unwrap() - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rolling_evicts_oldest() {
+        let mut r = Rolling::new(3);
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            r.push(x);
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.min(), 2.0);
+        assert_eq!(r.max(), 4.0);
+    }
+
+    #[test]
+    fn history_norm_tracks_window() {
+        let mut h = HistoryNorm::new(8);
+        assert_eq!(h.normalize(1.0), 0.5); // no history yet
+        h.observe(0.0);
+        h.observe(10.0);
+        assert!((h.normalize(5.0) - 0.5).abs() < 1e-12);
+        assert_eq!(h.normalize(0.0), 0.0);
+        assert_eq!(h.normalize(10.0), 1.0);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for x in [0.5, 1.5, 9.9, -1.0, 10.0] {
+            h.add(x);
+        }
+        assert_eq!(h.buckets[0], 1);
+        assert_eq!(h.buckets[1], 1);
+        assert_eq!(h.buckets[9], 1);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.total(), 5);
+        assert_eq!(h.sparkline().chars().count(), 10);
+    }
+}

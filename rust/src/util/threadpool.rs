@@ -1,0 +1,390 @@
+//! Worker pool + MPMC channel (tokio is unavailable offline).
+//!
+//! A deliberately small, predictable substrate: a mutex+condvar MPMC
+//! queue with bounded capacity (backpressure for the gateway) and a
+//! fixed-size worker pool used by the HTTP server and the batch
+//! executors. The serving hot loop itself is single-threaded per model
+//! replica (PJRT executables are not Sync), matching the one-engine-per-
+//! replica design of the paper's backends.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Error returned by a send on a closed channel.
+#[derive(Debug, PartialEq, Eq)]
+pub struct SendError;
+
+/// Bounded MPMC channel.
+pub struct Channel<T> {
+    inner: Arc<ChannelInner<T>>,
+}
+
+struct ChannelInner<T> {
+    q: Mutex<ChannelState<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+struct ChannelState<T> {
+    buf: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> Clone for Channel<T> {
+    fn clone(&self) -> Self {
+        Self { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl<T> Channel<T> {
+    pub fn bounded(cap: usize) -> Self {
+        assert!(cap > 0);
+        Self {
+            inner: Arc::new(ChannelInner {
+                q: Mutex::new(ChannelState { buf: VecDeque::new(), closed: false }),
+                not_empty: Condvar::new(),
+                not_full: Condvar::new(),
+                cap,
+            }),
+        }
+    }
+
+    /// Blocking send; errors if the channel is closed.
+    pub fn send(&self, item: T) -> Result<(), SendError> {
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(SendError);
+            }
+            if st.buf.len() < self.inner.cap {
+                st.buf.push_back(item);
+                self.inner.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.inner.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking send; returns the item back if full/closed.
+    pub fn try_send(&self, item: T) -> Result<(), T> {
+        let mut st = self.inner.q.lock().unwrap();
+        if st.closed || st.buf.len() >= self.inner.cap {
+            return Err(item);
+        }
+        st.buf.push_back(item);
+        self.inner.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking receive; `None` when closed and drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            if let Some(item) = st.buf.pop_front() {
+                self.inner.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.inner.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Option<T> {
+        let mut st = self.inner.q.lock().unwrap();
+        let item = st.buf.pop_front();
+        if item.is_some() {
+            self.inner.not_full.notify_one();
+        }
+        item
+    }
+
+    /// Drain up to `max` items without blocking (batch collection).
+    pub fn drain_up_to(&self, max: usize) -> Vec<T> {
+        let mut st = self.inner.q.lock().unwrap();
+        let n = st.buf.len().min(max);
+        let out: Vec<T> = st.buf.drain(..n).collect();
+        if !out.is_empty() {
+            self.inner.not_full.notify_all();
+        }
+        out
+    }
+
+    /// Blocking receive with timeout.
+    pub fn recv_timeout(&self, timeout: std::time::Duration) -> Option<T> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            if let Some(item) = st.buf.pop_front() {
+                self.inner.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, res) = self
+                .inner
+                .not_empty
+                .wait_timeout(st, deadline - now)
+                .unwrap();
+            st = guard;
+            if res.timed_out() && st.buf.is_empty() {
+                return None;
+            }
+        }
+    }
+
+    pub fn close(&self) {
+        let mut st = self.inner.q.lock().unwrap();
+        st.closed = true;
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.q.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool.
+pub struct ThreadPool {
+    jobs: Channel<Job>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize, name: &str) -> Self {
+        assert!(threads > 0);
+        let jobs: Channel<Job> = Channel::bounded(4096);
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = jobs.clone();
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || {
+                        while let Some(job) = rx.recv() {
+                            job();
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { jobs, workers }
+    }
+
+    /// Submit a job (blocks if the queue is full — natural backpressure).
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.jobs
+            .send(Box::new(f))
+            .unwrap_or_else(|_| panic!("pool is shut down"));
+    }
+
+    pub fn queued(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Close the queue and join all workers.
+    pub fn shutdown(mut self) {
+        self.jobs.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.jobs.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// A one-shot result slot for request/response rendezvous between the
+/// gateway threads and a backend engine (a tiny `oneshot` channel).
+pub struct OneShot<T> {
+    state: Arc<(Mutex<Option<T>>, Condvar)>,
+}
+
+impl<T> Clone for OneShot<T> {
+    fn clone(&self) -> Self {
+        Self { state: Arc::clone(&self.state) }
+    }
+}
+
+impl<T> Default for OneShot<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> OneShot<T> {
+    pub fn new() -> Self {
+        Self { state: Arc::new((Mutex::new(None), Condvar::new())) }
+    }
+
+    pub fn put(&self, value: T) {
+        let (m, cv) = &*self.state;
+        *m.lock().unwrap() = Some(value);
+        cv.notify_all();
+    }
+
+    pub fn wait(&self) -> T {
+        let (m, cv) = &*self.state;
+        let mut guard = m.lock().unwrap();
+        loop {
+            if let Some(v) = guard.take() {
+                return v;
+            }
+            guard = cv.wait(guard).unwrap();
+        }
+    }
+
+    pub fn wait_timeout(&self, timeout: std::time::Duration) -> Option<T> {
+        let (m, cv) = &*self.state;
+        let deadline = std::time::Instant::now() + timeout;
+        let mut guard = m.lock().unwrap();
+        loop {
+            if let Some(v) = guard.take() {
+                return Some(v);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (g, _) = cv.wait_timeout(guard, deadline - now).unwrap();
+            guard = g;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn channel_fifo() {
+        let ch = Channel::bounded(8);
+        ch.send(1).unwrap();
+        ch.send(2).unwrap();
+        assert_eq!(ch.recv(), Some(1));
+        assert_eq!(ch.recv(), Some(2));
+    }
+
+    #[test]
+    fn channel_close_drains_then_none() {
+        let ch = Channel::bounded(8);
+        ch.send("a").unwrap();
+        ch.close();
+        assert_eq!(ch.recv(), Some("a"));
+        assert_eq!(ch.recv(), None);
+        assert_eq!(ch.send("b"), Err(SendError));
+    }
+
+    #[test]
+    fn try_send_respects_capacity() {
+        let ch = Channel::bounded(1);
+        assert!(ch.try_send(1).is_ok());
+        assert_eq!(ch.try_send(2), Err(2));
+    }
+
+    #[test]
+    fn drain_up_to_batches() {
+        let ch = Channel::bounded(16);
+        for i in 0..10 {
+            ch.send(i).unwrap();
+        }
+        let batch = ch.drain_up_to(4);
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        assert_eq!(ch.len(), 6);
+    }
+
+    #[test]
+    fn recv_timeout_expires() {
+        let ch: Channel<u32> = Channel::bounded(1);
+        let t0 = std::time::Instant::now();
+        assert_eq!(ch.recv_timeout(std::time::Duration::from_millis(30)), None);
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(25));
+    }
+
+    #[test]
+    fn pool_runs_jobs_concurrently() {
+        let pool = ThreadPool::new(4, "test");
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.shutdown();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn oneshot_rendezvous() {
+        let slot = OneShot::new();
+        let slot2 = slot.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            slot2.put(99);
+        });
+        assert_eq!(slot.wait(), 99);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn oneshot_timeout() {
+        let slot: OneShot<u8> = OneShot::new();
+        assert_eq!(
+            slot.wait_timeout(std::time::Duration::from_millis(20)),
+            None
+        );
+    }
+
+    #[test]
+    fn mpmc_many_producers_consumers() {
+        let ch = Channel::bounded(4);
+        let consumed = Arc::new(AtomicUsize::new(0));
+        let mut handles = vec![];
+        for _ in 0..3 {
+            let rx = ch.clone();
+            let c = Arc::clone(&consumed);
+            handles.push(std::thread::spawn(move || {
+                while rx.recv().is_some() {
+                    c.fetch_add(1, Ordering::SeqCst);
+                }
+            }));
+        }
+        for _ in 0..4 {
+            let tx = ch.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50 {
+                    tx.send(i).unwrap();
+                }
+            }));
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        ch.close();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(consumed.load(Ordering::SeqCst), 200);
+    }
+}

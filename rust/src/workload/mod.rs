@@ -1,0 +1,459 @@
+//! Workload generation — synthetic versions of the paper's eight
+//! benchmarks, plus arrival processes and trace replay.
+//!
+//! Templates come from `data/templates.json` (the single source shared
+//! with the Python training corpus), so the compiled classifier sees the
+//! same prompt families at serve time that it was trained on — exactly
+//! the generalization the paper's DistilBERT router relies on.
+
+use anyhow::{anyhow, Result};
+
+use crate::backend::InferenceRequest;
+use crate::models::completion::mean_output_tokens;
+use crate::router::Classifier;
+use crate::tokenizer;
+use crate::util::json::Json;
+use crate::util::rng::SplitMix64;
+
+/// One prompt template.
+#[derive(Debug, Clone)]
+pub struct Template {
+    pub complexity: usize,
+    pub text: String,
+}
+
+/// One benchmark's generator data.
+#[derive(Debug, Clone)]
+pub struct Benchmark {
+    pub name: String,
+    pub runs: usize,
+    pub baseline_success: usize,
+    pub unique_prompts: usize,
+    pub templates: Vec<Template>,
+}
+
+impl Benchmark {
+    /// Complexity mix over this benchmark's templates (uniform template
+    /// choice, matching the generator).
+    pub fn complexity_mix(&self) -> [f64; 3] {
+        let mut mix = [0.0; 3];
+        for t in &self.templates {
+            mix[t.complexity] += 1.0;
+        }
+        let total: f64 = mix.iter().sum();
+        mix.map(|m| m / total)
+    }
+}
+
+/// The template library.
+#[derive(Debug, Clone)]
+pub struct TemplateLibrary {
+    pub benchmarks: Vec<Benchmark>,
+    pub slots: Vec<(String, Vec<String>)>,
+}
+
+impl TemplateLibrary {
+    pub fn load(path: &str) -> Result<TemplateLibrary> {
+        Self::parse(&Json::from_file(path)?)
+    }
+
+    pub fn parse(j: &Json) -> Result<TemplateLibrary> {
+        let mut slots = Vec::new();
+        for (name, vals) in j
+            .req("slots")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("slots not an object"))?
+        {
+            let items = vals
+                .as_arr()
+                .ok_or_else(|| anyhow!("slot {name} not an array"))?
+                .iter()
+                .map(|v| v.as_str().unwrap_or_default().to_string())
+                .collect();
+            slots.push((name.clone(), items));
+        }
+        let mut benchmarks = Vec::new();
+        for b in j.rarr("benchmarks")? {
+            benchmarks.push(Benchmark {
+                name: b.rstr("name")?.to_string(),
+                runs: b.rusize("runs")?,
+                baseline_success: b.rusize("success")?,
+                unique_prompts: b.rusize("unique_prompts")?,
+                templates: b
+                    .rarr("templates")?
+                    .iter()
+                    .map(|t| {
+                        Ok(Template {
+                            complexity: t.rusize("complexity")?,
+                            text: t.rstr("text")?.to_string(),
+                        })
+                    })
+                    .collect::<Result<_>>()?,
+            });
+        }
+        Ok(TemplateLibrary { benchmarks, slots })
+    }
+
+    pub fn benchmark(&self, name: &str) -> Result<&Benchmark> {
+        self.benchmarks
+            .iter()
+            .find(|b| b.name == name)
+            .ok_or_else(|| anyhow!("unknown benchmark `{name}`"))
+    }
+
+    fn slot(&self, name: &str) -> Option<&[String]> {
+        self.slots
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_slice())
+    }
+
+    /// Fill a template's `{slot}` markers.
+    pub fn fill(&self, template: &str, rng: &mut SplitMix64) -> String {
+        let mut out = String::with_capacity(template.len());
+        let mut rest = template;
+        while let Some(start) = rest.find('{') {
+            out.push_str(&rest[..start]);
+            let end = rest[start..].find('}').map(|e| start + e).unwrap_or(rest.len());
+            let slot = &rest[start + 1..end];
+            match self.slot(slot) {
+                Some(items) if !items.is_empty() => {
+                    out.push_str(&items[rng.below(items.len() as u64) as usize]);
+                }
+                _ => out.push_str(slot),
+            }
+            rest = &rest[(end + 1).min(rest.len())..];
+        }
+        out.push_str(rest);
+        out
+    }
+}
+
+/// A generated prompt with ground truth.
+#[derive(Debug, Clone)]
+pub struct Prompt {
+    pub benchmark: String,
+    pub text: String,
+    pub complexity: usize,
+}
+
+/// Prompt generator over the library.
+pub struct Generator<'a> {
+    pub lib: &'a TemplateLibrary,
+    rng: SplitMix64,
+}
+
+impl<'a> Generator<'a> {
+    pub fn new(lib: &'a TemplateLibrary, seed: u64) -> Self {
+        Self { lib, rng: SplitMix64::new(seed) }
+    }
+
+    /// One prompt from a specific benchmark.
+    pub fn prompt_from(&mut self, bench: &Benchmark) -> Prompt {
+        let t = &bench.templates[self.rng.below(bench.templates.len() as u64) as usize];
+        Prompt {
+            benchmark: bench.name.clone(),
+            text: self.lib.fill(&t.text, &mut self.rng),
+            complexity: t.complexity,
+        }
+    }
+
+    /// One prompt from a benchmark chosen ∝ its Table-1 run count (the
+    /// paper's evaluation mix).
+    pub fn prompt_mixed(&mut self) -> Prompt {
+        let total: usize = self.lib.benchmarks.iter().map(|b| b.runs).sum();
+        let mut pick = self.rng.below(total as u64) as usize;
+        for b in &self.lib.benchmarks {
+            if pick < b.runs {
+                // Avoid borrow conflict: clone the benchmark handle data.
+                let bench = b.clone();
+                return self.prompt_from(&bench);
+            }
+            pick -= b.runs;
+        }
+        let bench = self.lib.benchmarks[0].clone();
+        self.prompt_from(&bench)
+    }
+
+    /// Build a full [`InferenceRequest`] with token estimates.
+    pub fn request(&mut self, id: u64, arrival_s: f64) -> InferenceRequest {
+        let p = self.prompt_mixed();
+        self.to_request(id, arrival_s, p)
+    }
+
+    pub fn to_request(&mut self, id: u64, arrival_s: f64, p: Prompt) -> InferenceRequest {
+        let in_tokens = tokenizer::word_count(&p.text).max(1);
+        let base = mean_output_tokens(&p.benchmark);
+        // Output-length demand grows with complexity, with spread.
+        let mean = base * (1.0 + 0.4 * p.complexity as f64);
+        let out = self.rng.lognormal(mean.ln(), 0.35).round().max(1.0) as usize;
+        InferenceRequest {
+            id,
+            prompt: p.text,
+            benchmark: p.benchmark,
+            true_complexity: p.complexity,
+            in_tokens,
+            max_new_tokens: out.min(512),
+            arrival_s,
+        }
+    }
+
+    pub fn rng(&mut self) -> &mut SplitMix64 {
+        &mut self.rng
+    }
+}
+
+/// Poisson arrival process at a fixed rate.
+pub struct PoissonArrivals {
+    rng: SplitMix64,
+    rate: f64,
+    t: f64,
+}
+
+impl PoissonArrivals {
+    pub fn new(rate_qps: f64, seed: u64) -> Self {
+        Self { rng: SplitMix64::new(seed), rate: rate_qps, t: 0.0 }
+    }
+
+    pub fn set_rate(&mut self, rate_qps: f64) {
+        self.rate = rate_qps;
+    }
+}
+
+impl Iterator for PoissonArrivals {
+    type Item = f64;
+
+    fn next(&mut self) -> Option<f64> {
+        self.t += self.rng.exp(self.rate);
+        Some(self.t)
+    }
+}
+
+/// Bursty arrivals: alternating high/low-rate phases (the fluctuating
+/// demand the scale-to-zero experiments need).
+pub struct BurstyArrivals {
+    rng: SplitMix64,
+    pub high_qps: f64,
+    pub low_qps: f64,
+    pub phase_s: f64,
+    t: f64,
+}
+
+impl BurstyArrivals {
+    pub fn new(high_qps: f64, low_qps: f64, phase_s: f64, seed: u64) -> Self {
+        Self { rng: SplitMix64::new(seed), high_qps, low_qps, phase_s, t: 0.0 }
+    }
+}
+
+impl Iterator for BurstyArrivals {
+    type Item = f64;
+
+    fn next(&mut self) -> Option<f64> {
+        let phase = (self.t / self.phase_s) as u64;
+        let rate = if phase % 2 == 0 { self.high_qps } else { self.low_qps };
+        self.t += self.rng.exp(rate.max(1e-9));
+        Some(self.t)
+    }
+}
+
+/// An oracle classifier for pure simulations/tests: returns the ground
+/// truth complexity with a configurable error rate (the compiled
+/// PJRT classifier is used whenever artifacts are available).
+pub struct OracleClassifier {
+    lib: TemplateLibrary,
+    rng: SplitMix64,
+    pub error_rate: f64,
+}
+
+impl OracleClassifier {
+    pub fn new(lib: TemplateLibrary, error_rate: f64, seed: u64) -> Self {
+        Self { lib, rng: SplitMix64::new(seed), error_rate }
+    }
+
+    /// Ground truth by re-matching the prompt against template families:
+    /// find the template whose filled skeleton matches. Falls back to a
+    /// lexical heuristic if no template matches (never happens for
+    /// generator output).
+    fn truth(&self, text: &str) -> usize {
+        for b in &self.lib.benchmarks {
+            for t in &b.templates {
+                if skeleton_matches(&t.text, text) {
+                    return t.complexity;
+                }
+            }
+        }
+        1
+    }
+}
+
+impl Classifier for OracleClassifier {
+    fn probs(&mut self, text: &str) -> Result<[f64; 3]> {
+        let mut c = self.truth(text);
+        if self.rng.chance(self.error_rate) {
+            c = (c + 1 + self.rng.below(2) as usize) % 3;
+        }
+        let mut p = [0.02; 3];
+        p[c] = 0.96;
+        Ok(p)
+    }
+}
+
+/// Does `text` match `template` with `{slot}`s treated as wildcards?
+fn skeleton_matches(template: &str, text: &str) -> bool {
+    // Split the template into literal segments around slots and check the
+    // segments appear in order.
+    let mut pos = 0usize;
+    let mut rest = template;
+    let mut first = true;
+    while !rest.is_empty() {
+        let (lit, after) = match rest.find('{') {
+            Some(i) => {
+                let lit = &rest[..i];
+                let after = match rest[i..].find('}') {
+                    Some(j) => &rest[i + j + 1..],
+                    None => "",
+                };
+                (lit, after)
+            }
+            None => (rest, ""),
+        };
+        if !lit.is_empty() {
+            match text[pos..].find(lit) {
+                Some(i) => {
+                    if first && i != 0 {
+                        return false;
+                    }
+                    pos += i + lit.len();
+                }
+                None => return false,
+            }
+        }
+        first = false;
+        rest = after;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lib() -> TemplateLibrary {
+        TemplateLibrary::parse(
+            &Json::parse(
+                r#"{
+          "slots": {"x": ["alpha", "beta"], "n": ["3", "7"]},
+          "benchmarks": [
+            {"name": "easy", "runs": 100, "success": 80, "unique_prompts": 20,
+             "templates": [{"complexity": 0, "text": "what is {n} plus {n}?"}]},
+            {"name": "hard", "runs": 300, "success": 210, "unique_prompts": 60,
+             "templates": [{"complexity": 2, "text": "prove that {x} is {x}."}]}
+          ],
+          "profiles": ["baseline"]
+        }"#,
+            )
+            .unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn fill_substitutes_slots() {
+        let l = lib();
+        let mut rng = SplitMix64::new(0);
+        let s = l.fill("what is {n} plus {n}?", &mut rng);
+        assert!(!s.contains('{'));
+        assert!(s.starts_with("what is "));
+    }
+
+    #[test]
+    fn generator_is_deterministic() {
+        let l = lib();
+        let a: Vec<_> = {
+            let mut g = Generator::new(&l, 42);
+            (0..20).map(|_| g.prompt_mixed().text).collect()
+        };
+        let b: Vec<_> = {
+            let mut g = Generator::new(&l, 42);
+            (0..20).map(|_| g.prompt_mixed().text).collect()
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn mixed_sampling_respects_run_weights() {
+        let l = lib();
+        let mut g = Generator::new(&l, 7);
+        let mut hard = 0;
+        let n = 2000;
+        for _ in 0..n {
+            if g.prompt_mixed().benchmark == "hard" {
+                hard += 1;
+            }
+        }
+        let frac = hard as f64 / n as f64;
+        assert!((frac - 0.75).abs() < 0.05, "hard frac {frac}");
+    }
+
+    #[test]
+    fn poisson_mean_rate() {
+        let mut arr = PoissonArrivals::new(10.0, 1);
+        let times: Vec<f64> = arr.by_ref().take(5000).collect();
+        let rate = 5000.0 / times.last().unwrap();
+        assert!((rate - 10.0).abs() < 0.5, "rate {rate}");
+    }
+
+    #[test]
+    fn bursty_alternates() {
+        let mut arr = BurstyArrivals::new(100.0, 1.0, 10.0, 2);
+        let times: Vec<f64> = arr.by_ref().take(2000).collect();
+        // Count arrivals in the first high phase vs first low phase.
+        let hi = times.iter().filter(|&&t| t < 10.0).count();
+        let lo = times.iter().filter(|&&t| (10.0..20.0).contains(&t)).count();
+        assert!(hi > lo * 10, "hi {hi} lo {lo}");
+    }
+
+    #[test]
+    fn oracle_matches_ground_truth() {
+        let l = lib();
+        let mut g = Generator::new(&l, 3);
+        let p1 = g.prompt_from(&l.benchmark("easy").unwrap().clone());
+        let p2 = g.prompt_from(&l.benchmark("hard").unwrap().clone());
+        let mut oracle = OracleClassifier::new(l.clone(), 0.0, 0);
+        assert_eq!(oracle.classify(&p1.text).unwrap().0, 0);
+        assert_eq!(oracle.classify(&p2.text).unwrap().0, 2);
+    }
+
+    #[test]
+    fn requests_have_sane_token_counts() {
+        let l = lib();
+        let mut g = Generator::new(&l, 9);
+        for i in 0..100 {
+            let r = g.request(i, 0.0);
+            assert!(r.in_tokens >= 1);
+            assert!(r.max_new_tokens >= 1 && r.max_new_tokens <= 512);
+        }
+    }
+
+    #[test]
+    fn complexity_mix_sums_to_one() {
+        let l = lib();
+        for b in &l.benchmarks {
+            let mix = b.complexity_mix();
+            assert!((mix.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn real_templates_load() {
+        // Uses the repo's data file when present (written by aot.py).
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/data/templates.json");
+        if std::path::Path::new(path).exists() {
+            let l = TemplateLibrary::load(path).unwrap();
+            assert_eq!(l.benchmarks.len(), 8);
+            let total: usize = l.benchmarks.iter().map(|b| b.runs).sum();
+            assert_eq!(total, 155_095);
+            let _ = crate::util::rng::fnv1a64(b"sanity");
+        }
+    }
+}

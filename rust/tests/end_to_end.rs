@@ -1,0 +1,76 @@
+//! End-to-end: live gateway over compiled artifacts (HTTP in, routed PJRT
+//! inference out) and a full simulated experiment, exercising every layer.
+
+use pick_and_spin::config::Config;
+
+fn artifacts_exist() -> bool {
+    let ok = std::path::Path::new(
+        concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json")).exists();
+    if !ok {
+        eprintln!("skipping: artifacts not built");
+    }
+    ok
+}
+
+#[test]
+fn live_gateway_serves_http() {
+    if !artifacts_exist() {
+        return;
+    }
+    use pick_and_spin::gateway::http::http_request;
+    use pick_and_spin::gateway::{serve_http, LiveStack};
+    use std::sync::Arc;
+
+    let stack = Arc::new(LiveStack::start(&Config::default()).unwrap());
+    let srv = serve_http(Arc::clone(&stack), 0, 2).unwrap();
+
+    let (status, body) = http_request(
+        srv.port,
+        "POST",
+        "/v1/completions",
+        Some(r#"{"prompt": "prove that the function is monotonic", "max_tokens": 5}"#),
+    )
+    .unwrap();
+    assert_eq!(status, 200, "body: {body}");
+    let j = pick_and_spin::util::json::Json::parse(&body).unwrap();
+    assert_eq!(j.rstr("tier").unwrap(), "large"); // proof → high tier
+    assert!(j.rarr("tokens").unwrap().len() <= 5);
+
+    let (status, metrics) = http_request(srv.port, "GET", "/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    assert!(metrics.contains("ps_completed_total 1"));
+
+    let (status, _) = http_request(srv.port, "GET", "/healthz", None).unwrap();
+    assert_eq!(status, 200);
+    srv.stop();
+}
+
+#[test]
+fn simulated_experiment_reproduces_table1_shape() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/data/templates.json");
+    if !std::path::Path::new(path).exists() {
+        eprintln!("skipping: templates not built");
+        return;
+    }
+    use pick_and_spin::baselines::SelectionPolicy;
+    use pick_and_spin::sim::{Deployment, SimConfig};
+    use pick_and_spin::workload::{OracleClassifier, TemplateLibrary};
+
+    let lib = TemplateLibrary::load(path).unwrap();
+    let mut sc = SimConfig::defaults();
+    sc.deployment = Deployment::Static;
+    sc.policy = SelectionPolicy::RoundRobin;
+    sc.n_requests = 12_000;
+    sc.rate_qps = 4.0;
+    sc.cluster.nodes = 8;
+    let cls = Box::new(OracleClassifier::new(lib.clone(), 0.03, 1));
+    let rep = pick_and_spin::sim::run(&sc, &lib, cls).unwrap();
+    // Paper Table 1: overall 77.1%; shape tolerance ±5 points.
+    let rate = rep.success_rate();
+    assert!((0.70..=0.83).contains(&rate), "baseline success {rate}");
+    // mbpp must be the least reliable benchmark (paper: 69.4%), within noise.
+    let agg = pick_and_spin::eval::per_benchmark(&rep.records);
+    let mbpp = agg["mbpp"].success_rate();
+    let gsm = agg["gsm8k"].success_rate();
+    assert!(gsm > mbpp, "gsm8k {gsm} should beat mbpp {mbpp}");
+}

@@ -1,0 +1,95 @@
+//! Cross-module integration: router → scoring → registry → orchestrator
+//! over the real template library, no PJRT required.
+
+use pick_and_spin::baselines::{SelectionPolicy, Selector};
+use pick_and_spin::config::{Profile, RouterMode};
+use pick_and_spin::models::zoo;
+use pick_and_spin::registry::Registry;
+use pick_and_spin::router::keyword::KeywordRouter;
+use pick_and_spin::router::Router;
+use pick_and_spin::scoring::Weights;
+use pick_and_spin::workload::{Generator, OracleClassifier, TemplateLibrary};
+
+fn lib() -> Option<TemplateLibrary> {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/data/templates.json");
+    if std::path::Path::new(path).exists() {
+        Some(TemplateLibrary::load(path).unwrap())
+    } else {
+        eprintln!("skipping: data/templates.json not built");
+        None
+    }
+}
+
+#[test]
+fn keyword_router_beats_chance_on_real_templates() {
+    let Some(lib) = lib() else { return };
+    let mut gen = Generator::new(&lib, 5);
+    let mut router = KeywordRouter::new();
+    let (mut hits, n) = (0usize, 3000);
+    for _ in 0..n {
+        let p = gen.prompt_mixed();
+        if router.route(&p.text).unwrap().complexity == p.complexity {
+            hits += 1;
+        }
+    }
+    let acc = hits as f64 / n as f64;
+    assert!(acc > 0.45, "keyword accuracy {acc} not better than chance");
+    assert!(acc < 0.98, "keyword accuracy {acc} suspiciously perfect");
+}
+
+#[test]
+fn oracle_classifier_accuracy_tracks_error_rate() {
+    let Some(lib) = lib() else { return };
+    let mut gen = Generator::new(&lib, 6);
+    use pick_and_spin::router::Classifier;
+    let mut oracle = OracleClassifier::new(lib.clone(), 0.05, 1);
+    let (mut hits, n) = (0usize, 2000);
+    for _ in 0..n {
+        let p = gen.prompt_mixed();
+        if oracle.classify(&p.text).unwrap().0 == p.complexity {
+            hits += 1;
+        }
+    }
+    let acc = hits as f64 / n as f64;
+    assert!((acc - 0.95).abs() < 0.03, "oracle accuracy {acc}");
+}
+
+#[test]
+fn full_pipeline_routes_by_complexity() {
+    let Some(lib) = lib() else { return };
+    let mut registry = Registry::new(&zoo(), 300.0);
+    for s in &mut registry.services {
+        s.ready_replicas = 1;
+    }
+    let mut selector = Selector::new(
+        SelectionPolicy::MultiObjective,
+        Weights::from_profile(&Profile::BALANCED),
+        3,
+    );
+    let mut gen = Generator::new(&lib, 9);
+    use pick_and_spin::router::Classifier;
+    let mut oracle = OracleClassifier::new(lib.clone(), 0.0, 2);
+    // Average capability of the chosen model must rise with complexity.
+    let mut cap_by_class = [0.0f64; 3];
+    let mut count_by_class = [0usize; 3];
+    for _ in 0..600 {
+        let p = gen.prompt_mixed();
+        let (c, conf) = oracle.classify(&p.text).unwrap();
+        let class = pick_and_spin::router::Classification {
+            complexity: c,
+            confidence: conf,
+            mode: RouterMode::Hybrid,
+            overhead_s: 0.0,
+        };
+        let sid = selector
+            .select(&registry, &class, 30.0, 80.0, |_| 30.0)
+            .unwrap();
+        cap_by_class[c] += registry.get(sid).spec.capability[2];
+        count_by_class[c] += 1;
+    }
+    let avg: Vec<f64> = (0..3)
+        .map(|c| cap_by_class[c] / count_by_class[c].max(1) as f64)
+        .collect();
+    assert!(avg[2] > avg[0],
+            "hard prompts should land on stronger models: {avg:?}");
+}

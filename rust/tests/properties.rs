@@ -1,0 +1,171 @@
+//! Property-based tests (own testkit — proptest is unavailable offline)
+//! over coordinator invariants: routing, batching, KV accounting, scaling.
+
+use pick_and_spin::backend::batcher::{BatchPolicy, DECODE_BATCHES};
+use pick_and_spin::backend::kv_cache::{KvBlockManager, SeqId};
+use pick_and_spin::models::BackendKind;
+use pick_and_spin::router::keyword::KeywordRouter;
+use pick_and_spin::testkit::{check, Gen};
+use pick_and_spin::tokenizer;
+use pick_and_spin::util::json::Json;
+use pick_and_spin::util::stats::{percentile, Summary};
+
+#[test]
+fn prop_tokenizer_well_formed_for_any_text() {
+    check("tokenizer well-formed", 300, |g: &mut Gen| {
+        let text = g.text(60);
+        let ids = tokenizer::encode(&text, tokenizer::SEQ_CLS);
+        assert_eq!(ids.len(), tokenizer::SEQ_CLS);
+        assert_eq!(ids[0], tokenizer::CLS as i32);
+        let n = tokenizer::valid_len(&ids);
+        assert!(ids[..n].iter().all(|&i| i != tokenizer::PAD as i32));
+        assert!(ids[n..].iter().all(|&i| i == tokenizer::PAD as i32));
+        assert!(ids.iter().all(|&i| (0..tokenizer::VOCAB as i32).contains(&i)));
+    });
+}
+
+#[test]
+fn prop_keyword_router_total_and_bounded() {
+    check("keyword router total", 500, |g: &mut Gen| {
+        let text = g.text(50);
+        let c = KeywordRouter::classify(&text);
+        assert!(c.complexity <= 2);
+        assert!((0.0..=1.0).contains(&c.confidence));
+        assert_eq!(c.overhead_s, 0.0);
+        // Determinism
+        let c2 = KeywordRouter::classify(&text);
+        assert_eq!(c.complexity, c2.complexity);
+    });
+}
+
+#[test]
+fn prop_kv_manager_never_leaks_blocks() {
+    check("kv conservation", 100, |g: &mut Gen| {
+        let total = g.usize(4..64);
+        let block = g.usize(1..32);
+        let mut kv = KvBlockManager::new(total, block);
+        let mut live: Vec<SeqId> = Vec::new();
+        for i in 0..200u64 {
+            if g.bool() {
+                let prompt = g.usize(1..40);
+                let gen_budget = g.usize(0..40);
+                if kv.can_admit(prompt + gen_budget) {
+                    kv.admit(SeqId(i), prompt, gen_budget).unwrap();
+                    live.push(SeqId(i));
+                }
+            } else if !live.is_empty() {
+                let idx = g.usize(0..live.len());
+                kv.release(live.swap_remove(idx));
+            }
+            kv.check_invariants().unwrap();
+        }
+        for id in live {
+            kv.release(id);
+        }
+        assert_eq!(kv.free_blocks(), total);
+    });
+}
+
+#[test]
+fn prop_batcher_returns_compiled_sizes_only() {
+    check("batcher ladder", 300, |g: &mut Gen| {
+        let kind = *g.pick(&BackendKind::ALL);
+        let policy = BatchPolicy::for_backend(kind);
+        let waiting = g.usize(0..40);
+        let timed_out = g.bool();
+        if let Some(b) = policy.decode_batch_size(waiting, timed_out) {
+            assert!(DECODE_BATCHES.contains(&b));
+            assert!(b <= waiting);
+            assert!(b <= policy.max_decode_batch);
+        } else {
+            // Refusing to batch is only allowed when not timed out or empty.
+            assert!(waiting == 0 || !timed_out);
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_preserves_structure() {
+    check("json roundtrip", 150, |g: &mut Gen| {
+        // Build a random JSON value.
+        fn build(g: &mut Gen, depth: usize) -> Json {
+            match if depth > 2 { g.usize(0..4) } else { g.usize(0..6) } {
+                0 => Json::Null,
+                1 => Json::Bool(g.bool()),
+                2 => Json::Num((g.f64(-1e6..1e6) * 100.0).round() / 100.0),
+                3 => Json::str(g.text(6)),
+                4 => Json::arr((0..g.usize(0..4)).map(|_| build(g, depth + 1))),
+                _ => Json::obj(
+                    (0..g.usize(0..4))
+                        .map(|i| {
+                            (["a", "b", "c", "d"][i], build(g, depth + 1))
+                        })
+                        .collect(),
+                ),
+            }
+        }
+        let v = build(g, 0);
+        assert_eq!(Json::parse(&v.dump()).unwrap(), v);
+        assert_eq!(Json::parse(&v.pretty()).unwrap(), v);
+    });
+}
+
+#[test]
+fn prop_percentiles_monotone_and_bounded() {
+    check("percentile order", 200, |g: &mut Gen| {
+        let xs = g.vec(1..200, |g| g.f64(-1e3..1e3));
+        let s = Summary::of(&xs);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.p99);
+        assert!(s.p99 <= s.max);
+        let p0 = percentile(&xs, 0.0);
+        let p100 = percentile(&xs, 100.0);
+        assert!((p0 - s.min).abs() < 1e-9);
+        assert!((p100 - s.max).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn prop_scaling_targets_littles_law() {
+    use pick_and_spin::config::OrchestratorConfig;
+    use pick_and_spin::models::zoo;
+    use pick_and_spin::orchestrator::{ScaleAction, Scaler};
+    use pick_and_spin::registry::{Registry, ServiceId};
+
+    check("littles law", 60, |g: &mut Gen| {
+        let rate = g.f64(0.5..10.0);
+        let lat = g.f64(1.0..20.0);
+        let conc = g.f64(2.0..16.0);
+        let mut registry = Registry::new(&zoo(), 300.0);
+        let cfg = OrchestratorConfig {
+            target_concurrency: conc,
+            max_replicas: 1000,
+            warm_pool: [0, 0, 0],
+            ..OrchestratorConfig::default()
+        };
+        let mut scaler = Scaler::new(cfg, registry.services.len());
+        // Drive synthetic telemetry into service 0.
+        {
+            let svc = registry.get_mut(ServiceId(0));
+            let n = (rate * 300.0) as usize;
+            for i in 0..n {
+                let t = i as f64 / rate;
+                svc.telemetry.on_dispatch(t, 1e9);
+                svc.telemetry.on_complete(t + lat, 1e9, lat, 0.1, true);
+            }
+        }
+        let expected = (rate * lat / conc).ceil() as usize;
+        let actions = scaler.plan(&mut registry, 300.0);
+        match actions.iter().find(|a| matches!(a,
+            ScaleAction::Up { service: ServiceId(0), .. })) {
+            Some(ScaleAction::Up { target, .. }) => {
+                // EMA-smoothed latency and window-edge effects allow ±40%.
+                let lo = (expected as f64 * 0.6) as usize;
+                let hi = (expected as f64 * 1.5).ceil() as usize + 1;
+                assert!((lo..=hi).contains(target),
+                        "target {target} for expected {expected}");
+            }
+            _ => assert!(expected == 0,
+                         "no scale-up planned but expected {expected}"),
+        }
+    });
+}

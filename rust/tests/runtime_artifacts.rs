@@ -1,0 +1,141 @@
+//! Integration tests over the real AOT artifacts: HLO round-trip, weight
+//! upload, classifier inference, LM prefill + decode — the full
+//! Python-compile → Rust-serve bridge.
+//!
+//! Skipped (pass trivially) when `artifacts/` hasn't been built.
+
+use pick_and_spin::router::Classifier;
+use pick_and_spin::runtime::Runtime;
+use pick_and_spin::tokenizer;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built");
+        None
+    }
+}
+
+#[test]
+fn manifest_loads_and_covers_tiers() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    for tier in ["small", "medium", "large"] {
+        let info = rt.manifest.model(tier).unwrap();
+        assert!(info.param_count > 0);
+        rt.manifest.module(&format!("lm_{tier}_prefill_b1")).unwrap();
+        rt.manifest.module(&format!("lm_{tier}_decode_b4")).unwrap();
+    }
+    let cls = rt.manifest.model("classifier").unwrap();
+    assert!(cls.val_accuracy.unwrap() >= 0.95);
+}
+
+#[test]
+fn tokenizer_parity_with_python() {
+    let Some(dir) = artifacts_dir() else { return };
+    let j = pick_and_spin::util::json::Json::from_file(
+        &format!("{dir}/tokenizer_parity.json")).unwrap();
+    assert_eq!(j.rusize("vocab").unwrap(), tokenizer::VOCAB as usize);
+    for case in j.rarr("cases").unwrap() {
+        let text = case.rstr("text").unwrap();
+        let want: Vec<i32> = case
+            .rarr("ids")
+            .unwrap()
+            .iter()
+            .map(|v| v.as_i64().unwrap() as i32)
+            .collect();
+        assert_eq!(tokenizer::encode(text, want.len()), want, "text: {text:?}");
+    }
+    for (word, id) in j.req("word_ids").unwrap().as_obj().unwrap() {
+        assert_eq!(tokenizer::word_id(word) as i64, id.as_i64().unwrap());
+    }
+}
+
+#[test]
+fn classifier_engine_routes_complexity() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).unwrap();
+    let mut cls = rt.classifier_engine().unwrap();
+
+    let (lo, lo_conf) = cls.classify("what is 7 plus 3?").unwrap();
+    assert_eq!(lo, 0, "easy prompt misrouted (conf {lo_conf})");
+
+    let (hi, _) = cls
+        .classify("prove that the sequence defined by f(n) = 3n + 7 is \
+                   monotonic for all natural numbers n.")
+        .unwrap();
+    assert_eq!(hi, 2);
+
+    // Probabilities are a distribution.
+    let p = cls.probs("write a python function that reverses a list").unwrap();
+    let sum: f64 = p.iter().sum();
+    assert!((sum - 1.0).abs() < 1e-4, "probs {p:?}");
+}
+
+#[test]
+fn lm_engine_generates_deterministically() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).unwrap();
+    let lm = rt.lm_engine("small", &[1]).unwrap();
+    let g1 = lm.generate("natalia sold 12 apples in april", 8).unwrap();
+    let g2 = lm.generate("natalia sold 12 apples in april", 8).unwrap();
+    assert_eq!(g1.tokens, g2.tokens);
+    assert_eq!(g1.tokens.len(), 8);
+    assert!(g1.tokens.iter().all(|&t| (0..4096).contains(&t)));
+    assert!(g1.ttft_s > 0.0 && g1.ttft_s <= g1.latency_s);
+    assert_eq!(g1.prompt_tokens, 6);
+}
+
+#[test]
+fn lm_batch_decode_matches_solo() {
+    // The continuous-batching invariant, end-to-end through PJRT:
+    // a sequence decoded in a batch of 4 must produce the same tokens
+    // as decoded alone.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).unwrap();
+    let lm = rt.lm_engine("small", &[1, 4]).unwrap();
+    let prompts = vec![
+        "what is 3 plus 7?",
+        "prove that the function is monotonic step by step",
+        "natalia sold 12 apples",
+        "write a python function that reverses a linked list",
+    ];
+    let batch = lm.generate_batch(&prompts, 6).unwrap();
+    for (p, bg) in prompts.iter().zip(&batch) {
+        let solo = lm.generate(p, 6).unwrap();
+        let n = 6.min(solo.tokens.len()).min(bg.tokens.len());
+        assert_eq!(&solo.tokens[..n], &bg.tokens[..n], "prompt {p:?}");
+    }
+}
+
+#[test]
+fn medium_and_large_tiers_execute() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).unwrap();
+    for tier in ["medium", "large"] {
+        let lm = rt.lm_engine(tier, &[1]).unwrap();
+        let g = lm.generate("explain why plate tectonics occurs", 4).unwrap();
+        assert_eq!(g.tokens.len(), 4, "tier {tier}");
+    }
+}
+
+#[test]
+fn larger_tiers_are_slower_per_token() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).unwrap();
+    let small = rt.lm_engine("small", &[1]).unwrap();
+    let large = rt.lm_engine("large", &[1]).unwrap();
+    // Warm up both, then measure.
+    small.generate("warm up", 4).unwrap();
+    large.generate("warm up", 4).unwrap();
+    let gs = small.generate("compare and contrast two theories", 16).unwrap();
+    let gl = large.generate("compare and contrast two theories", 16).unwrap();
+    assert!(
+        gl.latency_s > gs.latency_s,
+        "large {:.4}s should exceed small {:.4}s",
+        gl.latency_s,
+        gs.latency_s
+    );
+}
