@@ -1,0 +1,12 @@
+"""Make `compile.*` importable however pytest is invoked.
+
+The test-suite imports the AOT pipeline as `from compile import ...`,
+which resolves when pytest runs from `python/` but not from the repo
+root (the CI invocation is `python -m pytest python/tests -q`). Pin the
+package root onto sys.path here so both work.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

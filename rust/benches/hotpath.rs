@@ -86,6 +86,67 @@ fn main() {
         println!("{}", m.report());
     }
 
+    if selected("pool") {
+        // Continuous batching vs the serial seed path, on the calibrated
+        // synthetic engine (same per-step cost shape as the PJRT CPU
+        // plugin: dispatch-dominated, so batching amortizes dispatch).
+        use pick_and_spin::backend::batcher::BatchPolicy;
+        use pick_and_spin::backend::scheduler::{
+            Admit, Scheduler, SchedulerConfig, SimStepEngine,
+        };
+
+        let serve = |max_inflight: usize, max_batch: usize| -> (usize, f64) {
+            let mut sched: Scheduler<SimStepEngine, usize> = Scheduler::new(
+                SimStepEngine::calibrated(),
+                SchedulerConfig {
+                    policy: BatchPolicy::custom(max_batch, 1, 0.001),
+                    max_inflight,
+                    kv_blocks: 1024,
+                    kv_block_tokens: 16,
+                },
+            );
+            let mut queued: Vec<usize> = (0..64).rev().collect();
+            let t0 = std::time::Instant::now();
+            let mut tokens = 0usize;
+            let mut done = 0usize;
+            while done < 64 {
+                while let Some(i) = queued.pop() {
+                    match sched.admit(&format!("bench prompt number {i}"), 16, 5, i) {
+                        Admit::Admitted => {}
+                        Admit::Rejected(i) => {
+                            queued.push(i);
+                            break;
+                        }
+                        Admit::Failed(_, e) => panic!("sim engine failed: {e}"),
+                    }
+                }
+                let t = sched.tick(t0.elapsed().as_secs_f64()).unwrap();
+                done += t.finished.len();
+                tokens += t.finished.iter().map(|f| f.tokens.len()).sum::<usize>();
+            }
+            (tokens, t0.elapsed().as_secs_f64())
+        };
+
+        let (serial_toks, serial_s) = serve(1, 1); // the seed's serial path
+        let (pool_toks, pool_s) = serve(16, 8); // the engine-pool path
+        let serial_tps = serial_toks as f64 / serial_s;
+        let pool_tps = pool_toks as f64 / pool_s;
+        println!(
+            "{:<44} {:>10} toks   {:>12.0} tok/s     (serial, batch 1)",
+            "scheduler throughput (sim engine)", serial_toks, serial_tps
+        );
+        println!(
+            "{:<44} {:>10} toks   {:>12.0} tok/s     (16 slots, batch ≤8, {:.2}× serial)",
+            "scheduler throughput (sim engine)", pool_toks, pool_tps,
+            pool_tps / serial_tps
+        );
+        assert!(
+            pool_tps > serial_tps,
+            "continuous batching must beat the serial path \
+             ({pool_tps:.0} vs {serial_tps:.0} tok/s)"
+        );
+    }
+
     // Live PJRT path (needs artifacts).
     let artifacts = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
     if std::path::Path::new(&format!("{artifacts}/manifest.json")).exists() {

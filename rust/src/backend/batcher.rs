@@ -15,6 +15,9 @@ use crate::models::BackendKind;
 pub const DECODE_BATCHES: [usize; 3] = [1, 4, 8];
 pub const PREFILL_BATCHES: [usize; 2] = [1, 4];
 
+/// Rung count, for sizing per-rung metric arrays alongside the ladder.
+pub const N_DECODE_BATCHES: usize = DECODE_BATCHES.len();
+
 /// Policy knobs per backend kind.
 #[derive(Debug, Clone, Copy)]
 pub struct BatchPolicy {
@@ -50,40 +53,50 @@ impl BatchPolicy {
         }
     }
 
+    /// Policy from explicit knobs (the engine pool's config overrides).
+    pub fn custom(
+        max_decode_batch: usize,
+        max_prefill_batch: usize,
+        flush_timeout_s: f64,
+    ) -> BatchPolicy {
+        BatchPolicy { max_decode_batch, max_prefill_batch, flush_timeout_s }
+    }
+
     /// Pick the compiled batch size for `waiting` ready items: the
-    /// largest ladder size ≤ min(waiting, policy max) — or the smallest
-    /// ladder size if the timeout forces a flush of a partial batch.
+    /// largest ladder size ≤ min(waiting, policy max) — or that same
+    /// partial rung if the timeout forces a flush. Returns `None` when
+    /// nothing is waiting, when the cap sits below the smallest ladder
+    /// size, or when it is worth holding out for a fuller batch. "Full"
+    /// means the largest *rung* this policy can ever form — a cap
+    /// between rungs (say 6) must not make a maxed-out rung-4 batch
+    /// wait for a fill that cannot happen.
     pub fn decode_batch_size(&self, waiting: usize, timed_out: bool) -> Option<usize> {
         let cap = self.max_decode_batch.min(waiting);
-        if cap == 0 {
-            return None;
-        }
-        let fit = DECODE_BATCHES.iter().rev().find(|&&b| b <= cap).copied();
-        match fit {
-            Some(b) if b == self.max_decode_batch || timed_out => Some(b),
-            Some(b) => {
-                // Not full yet: wait for more unless the queue can't grow
-                // past the next ladder rung anyway.
-                if waiting >= self.max_decode_batch {
-                    Some(b)
-                } else if timed_out {
-                    Some(b)
-                } else {
-                    None
-                }
-            }
-            None => None,
+        let fit = DECODE_BATCHES.iter().rev().find(|&&b| b <= cap).copied()?;
+        let top = DECODE_BATCHES
+            .iter()
+            .rev()
+            .find(|&&b| b <= self.max_decode_batch)
+            .copied()?;
+        if timed_out || fit == top {
+            Some(fit)
+        } else {
+            // Not full yet and the flush window is still open: hold for
+            // batch-mates.
+            None
         }
     }
 
     /// Same for prefill.
     pub fn prefill_batch_size(&self, waiting: usize, timed_out: bool) -> Option<usize> {
         let cap = self.max_prefill_batch.min(waiting);
-        if cap == 0 {
-            return None;
-        }
         let fit = PREFILL_BATCHES.iter().rev().find(|&&b| b <= cap).copied()?;
-        if fit == self.max_prefill_batch || timed_out || waiting >= self.max_prefill_batch {
+        let top = PREFILL_BATCHES
+            .iter()
+            .rev()
+            .find(|&&b| b <= self.max_prefill_batch)
+            .copied()?;
+        if timed_out || fit == top {
             Some(fit)
         } else {
             None
@@ -165,5 +178,55 @@ mod tests {
     fn efficiency_metric() {
         assert_eq!(batch_efficiency(3, 4), 0.75);
         assert_eq!(batch_efficiency(0, 0), 0.0);
+    }
+
+    #[test]
+    fn waiting_zero_never_batches_even_on_timeout() {
+        for kind in BackendKind::ALL {
+            let p = BatchPolicy::for_backend(kind);
+            for timed_out in [false, true] {
+                assert_eq!(p.decode_batch_size(0, timed_out), None);
+                assert_eq!(p.prefill_batch_size(0, timed_out), None);
+            }
+        }
+    }
+
+    #[test]
+    fn timeout_flushes_to_smallest_ladder_size() {
+        let p = BatchPolicy::for_backend(BackendKind::Vllm);
+        // One straggler: the flush timer fires and it runs at the
+        // smallest compiled size rather than waiting forever.
+        assert_eq!(p.decode_batch_size(1, true), Some(DECODE_BATCHES[0]));
+        assert_eq!(p.prefill_batch_size(1, true), Some(PREFILL_BATCHES[0]));
+        // …but while the window is open it holds for batch-mates.
+        assert_eq!(p.decode_batch_size(1, false), None);
+    }
+
+    #[test]
+    fn cap_below_smallest_ladder_refuses() {
+        // A policy capped below the smallest compiled size can never
+        // form a batch — decode/prefill must both return None instead of
+        // an uncompiled size.
+        let p = BatchPolicy::custom(0, 0, 0.01);
+        for waiting in 0..10 {
+            for timed_out in [false, true] {
+                assert_eq!(p.decode_batch_size(waiting, timed_out), None);
+                assert_eq!(p.prefill_batch_size(waiting, timed_out), None);
+            }
+        }
+    }
+
+    #[test]
+    fn custom_policy_caps_at_intermediate_rung() {
+        // Cap between ladder rungs (6 ∈ (4, 8)): rung 4 is the fullest
+        // batch this policy can ever form, so once it forms it must run
+        // without waiting for a fill that cannot happen.
+        let p = BatchPolicy::custom(6, 4, 0.02);
+        assert_eq!(p.decode_batch_size(32, false), Some(4));
+        assert_eq!(p.decode_batch_size(4, false), Some(4));
+        // Below the top rung it still holds for batch-mates…
+        assert_eq!(p.decode_batch_size(3, false), None);
+        // …until the flush timer fires.
+        assert_eq!(p.decode_batch_size(3, true), Some(1));
     }
 }

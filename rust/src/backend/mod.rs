@@ -3,11 +3,14 @@
 //!
 //! * [`kv_cache`] — block-granular KV accounting (PagedAttention-style).
 //! * [`batcher`] — dynamic batching policies per backend kind.
+//! * [`scheduler`] — the continuous-batching replica loop (slot
+//!   management + batch formation over `batcher` and `kv_cache`).
 //! * [`service_time`] — the calibrated service-time model the
 //!   discrete-event simulator samples from (live mode measures instead).
 
 pub mod batcher;
 pub mod kv_cache;
+pub mod scheduler;
 
 use crate::models::{BackendKind, ModelSpec};
 use crate::util::rng::SplitMix64;

@@ -150,6 +150,47 @@ impl Default for GatewayConfig {
     }
 }
 
+/// Engine-pool tunables: the continuous-batching serving path
+/// (gateway job intake → per-tier scheduler → N engine replicas).
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    /// Engine replicas per tier index [small, medium, large]. Each
+    /// replica is one engine thread owning its own compiled engines.
+    pub replicas: [usize; 3],
+    /// Decode slots per replica (max in-flight sequences sharing one
+    /// engine's interleaved decode loop).
+    pub max_inflight: usize,
+    /// Per-tier queue bound between the router and the replicas
+    /// (admission control: beyond this, requests are rejected).
+    pub queue_capacity: usize,
+    /// Largest decode batch the scheduler may form (≤ largest compiled).
+    pub max_decode_batch: usize,
+    /// How long a partial batch may wait for batch-mates before it runs.
+    pub flush_timeout_s: f64,
+    /// Paged-KV pool per replica: block count × tokens per block bounds
+    /// admitted work (reservation-based, no mid-flight OOM).
+    pub kv_blocks: usize,
+    pub kv_block_tokens: usize,
+    /// How often the pool scaler re-plans per-tier active replicas from
+    /// queue depth + slot occupancy.
+    pub scale_interval_s: f64,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        Self {
+            replicas: [1, 1, 1],
+            max_inflight: 8,
+            queue_capacity: 256,
+            max_decode_batch: 8,
+            flush_timeout_s: 0.020,
+            kv_blocks: 128,
+            kv_block_tokens: 16,
+            scale_interval_s: 2.0,
+        }
+    }
+}
+
 /// Cluster-substrate constants (the simulated Kubernetes behaviour).
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
@@ -205,6 +246,7 @@ pub struct Config {
     pub router: RouterConfig,
     pub orchestrator: OrchestratorConfig,
     pub gateway: GatewayConfig,
+    pub pool: PoolConfig,
     pub cluster: ClusterConfig,
     pub profile: Profile,
 }
@@ -270,6 +312,28 @@ impl Config {
             self.gateway.request_timeout_s =
                 g.f64_or("request_timeout_s", self.gateway.request_timeout_s);
         }
+        if let Some(p) = j.get("pool") {
+            if let Some(r) = p.get("replicas").and_then(Json::as_arr) {
+                for (i, v) in r.iter().take(3).enumerate() {
+                    if let Some(n) = v.as_usize() {
+                        self.pool.replicas[i] = n;
+                    }
+                }
+            }
+            self.pool.max_inflight =
+                p.usize_or("max_inflight", self.pool.max_inflight);
+            self.pool.queue_capacity =
+                p.usize_or("queue_capacity", self.pool.queue_capacity);
+            self.pool.max_decode_batch =
+                p.usize_or("max_decode_batch", self.pool.max_decode_batch);
+            self.pool.flush_timeout_s =
+                p.f64_or("flush_timeout_s", self.pool.flush_timeout_s);
+            self.pool.kv_blocks = p.usize_or("kv_blocks", self.pool.kv_blocks);
+            self.pool.kv_block_tokens =
+                p.usize_or("kv_block_tokens", self.pool.kv_block_tokens);
+            self.pool.scale_interval_s =
+                p.f64_or("scale_interval_s", self.pool.scale_interval_s);
+        }
         if let Some(c) = j.get("cluster") {
             self.cluster.gpus_per_node =
                 c.usize_or("gpus_per_node", self.cluster.gpus_per_node);
@@ -331,6 +395,34 @@ mod tests {
         assert_eq!(c.profile, Profile::COST);
         // untouched fields keep defaults
         assert_eq!(c.gateway.port, 8080);
+    }
+
+    #[test]
+    fn pool_defaults_are_sane() {
+        let c = Config::default();
+        assert_eq!(c.pool.replicas, [1, 1, 1]);
+        assert!(c.pool.max_inflight >= c.pool.max_decode_batch);
+        assert!(c.pool.flush_timeout_s > 0.0);
+        // The KV pool must fit at least one full-budget sequence.
+        assert!(c.pool.kv_blocks * c.pool.kv_block_tokens >= 256);
+    }
+
+    #[test]
+    fn overlay_pool_section() {
+        let mut c = Config::default();
+        let j = Json::parse(
+            r#"{"pool":{"replicas":[2,2,1],"max_inflight":16,
+                "flush_timeout_s":0.004,"queue_capacity":64}}"#,
+        )
+        .unwrap();
+        c.overlay(&j).unwrap();
+        assert_eq!(c.pool.replicas, [2, 2, 1]);
+        assert_eq!(c.pool.max_inflight, 16);
+        assert_eq!(c.pool.queue_capacity, 64);
+        assert!((c.pool.flush_timeout_s - 0.004).abs() < 1e-12);
+        // untouched knobs keep defaults
+        assert_eq!(c.pool.max_decode_batch, 8);
+        assert_eq!(c.pool.kv_blocks, 128);
     }
 
     #[test]

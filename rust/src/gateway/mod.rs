@@ -2,10 +2,16 @@
 //!
 //! Two layers:
 //! * [`http`] — the from-scratch HTTP/1.1 substrate.
-//! * [`LiveStack`] — the real serving path: an engine thread that owns
-//!   the PJRT runtime (classifier + the three compiled LM tiers; PJRT
-//!   handles are not `Send`, so the thread *creates* them) and serves
-//!   jobs from a bounded channel (admission control / backpressure).
+//! * [`LiveStack`] — the continuous-batching engine pool. A router thread
+//!   owns the classifier (PJRT handles are not `Send`, so each thread
+//!   *creates* its engines) and fans jobs out to bounded per-tier queues;
+//!   N replica threads per tier each run a
+//!   [`crate::backend::scheduler::Scheduler`] that drains its queue into
+//!   prefill/decode batches at the compiled ladder sizes, interleaves
+//!   decode across in-flight sequences, and frees slots the moment a
+//!   short completion finishes. A [`PoolScaler`] parks idle replicas
+//!   (scale-to-zero down to the warm-pool floor) from per-tier queue
+//!   depth + slot occupancy; the next enqueue is a "cold wake".
 //!
 //! Requests: `POST /v1/completions {"prompt": "...", "max_tokens": N}` →
 //! routed by the hybrid router, executed on the tier the matrix picks,
@@ -13,13 +19,20 @@
 
 pub mod http;
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::config::{Config, RouterMode};
+use crate::backend::batcher::{BatchPolicy, DECODE_BATCHES, N_DECODE_BATCHES};
+use crate::backend::scheduler::{
+    Admit, Finished, Scheduler, SchedulerConfig, SimStepEngine, StepEngine,
+};
+use crate::config::{Config, PoolConfig, RouterMode};
 use crate::models::{zoo, Tier};
+use crate::orchestrator::{PoolScaler, TierLoad};
 use crate::registry::Registry;
 use crate::router::hybrid::HybridRouter;
 use crate::router::keyword::KeywordRouter;
@@ -39,13 +52,32 @@ pub struct LiveResponse {
     pub confidence: f64,
     pub ttft_s: f64,
     pub latency_s: f64,
+    /// Time spent in the per-tier queue before prefill started.
+    pub queue_wait_s: f64,
     pub prompt_tokens: usize,
 }
 
+/// An unrouted job, as `complete()` hands it to the router thread.
 struct Job {
     prompt: String,
     max_tokens: usize,
     reply: OneShot<Result<LiveResponse, String>>,
+}
+
+/// A routed job queued for one tier's replicas.
+struct TierJob {
+    prompt: String,
+    max_tokens: usize,
+    /// Seconds (pool epoch) when routing enqueued the job.
+    enqueue_s: f64,
+    /// Stamped at admission (prefill complete = first token).
+    ttft_s: f64,
+    queue_wait_s: f64,
+    reply: OneShot<Result<LiveResponse, String>>,
+    tier: Tier,
+    model: &'static str,
+    complexity: usize,
+    confidence: f64,
 }
 
 /// Counters exported at `/metrics`.
@@ -56,100 +88,276 @@ pub struct GatewayMetrics {
     pub errors: AtomicU64,
     pub rejected: AtomicU64,
     pub tokens_out: AtomicU64,
+    /// Decode steps that ran with batch size > 1 — the proof that
+    /// continuous batching actually engaged.
+    pub batched: AtomicU64,
+    pub decode_steps: AtomicU64,
+    pub prefills: AtomicU64,
+    /// Total queue-wait across requests, in microseconds (exported as
+    /// `ps_queue_wait_seconds_total`).
+    pub queue_wait_us: AtomicU64,
+    /// Enqueues that un-parked a scaled-to-zero tier.
+    pub cold_wakes: AtomicU64,
+    /// Callers that gave up waiting (the work itself is not cancelled —
+    /// see [`LiveStack::complete`]).
+    pub timeouts: AtomicU64,
+    /// Formed-batch histogram: one counter per compiled rung, in
+    /// [`DECODE_BATCHES`] order.
+    pub batch_counts: [AtomicU64; N_DECODE_BATCHES],
 }
 
-/// The live serving stack: hybrid router + three compiled LM tiers on a
-/// dedicated engine thread.
-pub struct LiveStack {
-    jobs: Channel<Job>,
-    pub metrics: Arc<GatewayMetrics>,
-    engine: Option<std::thread::JoinHandle<()>>,
-}
-
-impl LiveStack {
-    /// Spin up the engine thread (compiles artifacts — takes a few
-    /// seconds; returns after the engines are warm).
-    pub fn start(cfg: &Config) -> Result<LiveStack> {
-        let jobs: Channel<Job> = Channel::bounded(cfg.gateway.queue_capacity);
-        let metrics = Arc::new(GatewayMetrics::default());
-        let rx = jobs.clone();
-        let artifacts = cfg.paths.artifacts.clone();
-        let router_cfg = cfg.router.clone();
-        let profile = cfg.profile;
-        let ready: OneShot<Result<(), String>> = OneShot::new();
-        let ready_tx = ready.clone();
-        let metrics2 = Arc::clone(&metrics);
-        let engine = std::thread::Builder::new()
-            .name("engine".into())
-            .spawn(move || {
-                // PJRT objects live and die on this thread.
-                let mut rt = match Runtime::load(&artifacts) {
-                    Ok(rt) => rt,
-                    Err(e) => {
-                        ready_tx.put(Err(format!("runtime: {e:#}")));
-                        return;
-                    }
-                };
-                let classifier = match rt.classifier_engine() {
-                    Ok(c) => c,
-                    Err(e) => {
-                        ready_tx.put(Err(format!("classifier: {e:#}")));
-                        return;
-                    }
-                };
-                let mut engines = Vec::new();
-                for tier in ["small", "medium", "large"] {
-                    match rt.lm_engine(tier, &[1, 4]) {
-                        Ok(e) => engines.push(e),
-                        Err(e) => {
-                            ready_tx.put(Err(format!("lm {tier}: {e:#}")));
-                            return;
-                        }
-                    }
-                }
-                // Routing state: the registry scores the matrix; live
-                // replicas are the in-process engines (1 each).
-                let zoo_models = zoo();
-                let mut registry = Registry::new(&zoo_models, 300.0);
-                for s in &mut registry.services {
-                    s.ready_replicas = 1;
-                }
-                let weights = Weights::from_profile(&profile);
-                let mut router: Box<dyn Router> = match router_cfg.mode {
-                    RouterMode::Keyword => Box::new(KeywordRouter::new()),
-                    _ => Box::new(HybridRouter::new(classifier, &router_cfg)),
-                };
-                ready_tx.put(Ok(()));
-                while let Some(job) = rx.recv() {
-                    let out = serve_one(
-                        &mut *router,
-                        &registry,
-                        weights,
-                        &engines,
-                        &job.prompt,
-                        job.max_tokens,
-                    );
-                    match &out {
-                        Ok(r) => {
-                            metrics2.completed.fetch_add(1, Ordering::Relaxed);
-                            metrics2
-                                .tokens_out
-                                .fetch_add(r.tokens.len() as u64, Ordering::Relaxed);
-                        }
-                        Err(_) => {
-                            metrics2.errors.fetch_add(1, Ordering::Relaxed);
-                        }
-                    }
-                    job.reply.put(out.map_err(|e| format!("{e:#}")));
-                }
-            })?;
-        match ready.wait() {
-            Ok(()) => Ok(LiveStack { jobs, metrics, engine: Some(engine) }),
-            Err(e) => Err(anyhow!("engine thread failed to start: {e}")),
+impl GatewayMetrics {
+    /// Record one executed decode batch of size `b`.
+    pub fn observe_batch(&self, b: usize) {
+        self.decode_steps.fetch_add(1, Ordering::Relaxed);
+        if b > 1 {
+            self.batched.fetch_add(1, Ordering::Relaxed);
+        }
+        if let Some(i) = DECODE_BATCHES.iter().position(|&x| x == b) {
+            self.batch_counts[i].fetch_add(1, Ordering::Relaxed);
         }
     }
 
-    /// Serve one prompt (blocks until the engine thread answers).
+    pub fn add_queue_wait_s(&self, s: f64) {
+        self.queue_wait_us
+            .fetch_add((s.max(0.0) * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    pub fn queue_wait_total_s(&self) -> f64 {
+        self.queue_wait_us.load(Ordering::Relaxed) as f64 / 1e6
+    }
+}
+
+/// Per-tier pool control shared between the router (scaler) and the
+/// tier's replica threads.
+struct TierControl {
+    /// Replicas with index < target actively pull work; the rest drain
+    /// and park (scale-to-zero keeps engines warm but idle).
+    target: AtomicUsize,
+    /// Occupied decode slots across the tier's replicas.
+    slots_in_use: AtomicUsize,
+    /// Last enqueue, µs since the pool epoch (idle tracking).
+    last_enqueue_us: AtomicU64,
+}
+
+/// The live serving stack: hybrid router + a continuous-batching engine
+/// pool (N replica threads per compiled tier).
+pub struct LiveStack {
+    jobs: Channel<Job>,
+    pub metrics: Arc<GatewayMetrics>,
+    tier_queues: Vec<Channel<TierJob>>,
+    ctls: Vec<Arc<TierControl>>,
+    threads: Vec<JoinHandle<()>>,
+    request_timeout_s: f64,
+}
+
+impl LiveStack {
+    /// Spin up the engine pool over the compiled PJRT artifacts
+    /// (compiles each tier per replica — takes a few seconds; returns
+    /// after every engine is warm).
+    pub fn start(cfg: &Config) -> Result<LiveStack> {
+        let router_artifacts = cfg.paths.artifacts.clone();
+        let router_cfg = cfg.router.clone();
+        let engine_artifacts = cfg.paths.artifacts.clone();
+        let max_batch = cfg.pool.max_decode_batch;
+        Self::start_pool(
+            cfg,
+            move || {
+                let mut rt = Runtime::load(&router_artifacts)
+                    .map_err(|e| format!("runtime: {e:#}"))?;
+                let router: Box<dyn Router> = match router_cfg.mode {
+                    RouterMode::Keyword => Box::new(KeywordRouter::new()),
+                    _ => {
+                        let classifier = rt
+                            .classifier_engine()
+                            .map_err(|e| format!("classifier: {e:#}"))?;
+                        Box::new(HybridRouter::new(classifier, &router_cfg))
+                    }
+                };
+                Ok(router)
+            },
+            move |tier: Tier, _replica: usize| {
+                let mut rt = Runtime::load(&engine_artifacts)
+                    .map_err(|e| format!("runtime: {e:#}"))?;
+                // Compile a *prefix* of the ladder (stop at the first
+                // missing rung): the scheduler may form any compiled
+                // rung ≤ its max, so a gap (say b4 absent but b8
+                // present) would make it form batches the engine can't
+                // execute.
+                let mut ladder: Vec<usize> = Vec::new();
+                for &b in DECODE_BATCHES.iter() {
+                    let have = rt
+                        .manifest
+                        .module(&format!("lm_{}_decode_b{b}", tier.name()))
+                        .is_ok();
+                    if b > max_batch.max(1) || !have {
+                        break;
+                    }
+                    ladder.push(b);
+                }
+                if ladder.is_empty() {
+                    ladder.push(1);
+                }
+                rt.lm_engine(tier.name(), &ladder)
+                    .map_err(|e| format!("lm {}: {e:#}", tier.name()))
+            },
+        )
+    }
+
+    /// The same pool wired to the deterministic synthetic engine and the
+    /// keyword router — no artifacts or PJRT needed. Used by integration
+    /// tests and benches to exercise queueing, batching, scaling and
+    /// metrics end-to-end.
+    pub fn start_sim(cfg: &Config) -> Result<LiveStack> {
+        Self::start_pool(
+            cfg,
+            || Ok(Box::new(KeywordRouter::new()) as Box<dyn Router>),
+            |_tier: Tier, _replica: usize| Ok(SimStepEngine::calibrated()),
+        )
+    }
+
+    /// Generic pool bring-up: `router_factory` runs on the router thread,
+    /// `engine_factory` once per replica on its own thread (PJRT objects
+    /// live and die on the thread that made them).
+    fn start_pool<E, RF, EF>(
+        cfg: &Config,
+        router_factory: RF,
+        engine_factory: EF,
+    ) -> Result<LiveStack>
+    where
+        E: StepEngine,
+        RF: FnOnce() -> std::result::Result<Box<dyn Router>, String> + Send + 'static,
+        EF: Fn(Tier, usize) -> std::result::Result<E, String> + Send + Sync + 'static,
+    {
+        let epoch = Instant::now();
+        let jobs: Channel<Job> = Channel::bounded(cfg.gateway.queue_capacity);
+        let metrics = Arc::new(GatewayMetrics::default());
+        let tier_queues: Vec<Channel<TierJob>> = (0..3)
+            .map(|_| Channel::bounded(cfg.pool.queue_capacity.max(1)))
+            .collect();
+        let ctls: Vec<Arc<TierControl>> = (0..3)
+            .map(|i| {
+                Arc::new(TierControl {
+                    target: AtomicUsize::new(cfg.pool.replicas[i]),
+                    slots_in_use: AtomicUsize::new(0),
+                    last_enqueue_us: AtomicU64::new(0),
+                })
+            })
+            .collect();
+        let mut threads = Vec::new();
+        let factory = Arc::new(engine_factory);
+        let total_replicas: usize = cfg.pool.replicas.iter().sum();
+        // Sized so every thread can report without blocking even when
+        // start aborts early on the first failure.
+        let ready: Channel<std::result::Result<(), String>> =
+            Channel::bounded(total_replicas + 2);
+
+        for (ti, &tier) in Tier::ALL.iter().enumerate() {
+            for r in 0..cfg.pool.replicas[ti] {
+                let ctx = ReplicaCtx {
+                    index: r,
+                    queue: tier_queues[ti].clone(),
+                    ctl: Arc::clone(&ctls[ti]),
+                    metrics: Arc::clone(&metrics),
+                    epoch,
+                    pool: cfg.pool.clone(),
+                };
+                let factory = Arc::clone(&factory);
+                let ready_tx = ready.clone();
+                threads.push(
+                    std::thread::Builder::new()
+                        .name(format!("engine-{}-{r}", tier.name()))
+                        .spawn(move || {
+                            // Engines are built on this thread (not Send).
+                            match (*factory)(tier, r) {
+                                Ok(engine) => {
+                                    let _ = ready_tx.send(Ok(()));
+                                    replica_loop(engine, ctx);
+                                }
+                                Err(e) => {
+                                    let _ = ready_tx.send(Err(e));
+                                }
+                            }
+                        })?,
+                );
+            }
+        }
+
+        {
+            let jobs_rx = jobs.clone();
+            let tqs = tier_queues.clone();
+            let ctls = ctls.clone();
+            let metrics = Arc::clone(&metrics);
+            let pool = cfg.pool.clone();
+            let orch = cfg.orchestrator.clone();
+            let profile = cfg.profile;
+            let ready_tx = ready.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("router".into())
+                    .spawn(move || {
+                        let router = match router_factory() {
+                            Ok(r) => {
+                                let _ = ready_tx.send(Ok(()));
+                                r
+                            }
+                            Err(e) => {
+                                let _ = ready_tx.send(Err(e));
+                                for q in &tqs {
+                                    q.close();
+                                }
+                                return;
+                            }
+                        };
+                        router_loop(
+                            router, jobs_rx, tqs, ctls, metrics, epoch, pool, orch,
+                            profile,
+                        );
+                    })?,
+            );
+        }
+
+        // Wait until the router and every replica report warm (or fail).
+        for _ in 0..(total_replicas + 1) {
+            match ready.recv() {
+                Some(Ok(())) => {}
+                Some(Err(e)) => {
+                    jobs.close();
+                    for q in &tier_queues {
+                        q.close();
+                    }
+                    for t in threads {
+                        let _ = t.join();
+                    }
+                    return Err(anyhow!("engine pool failed to start: {e}"));
+                }
+                None => return Err(anyhow!("engine pool start interrupted")),
+            }
+        }
+        // Sanitize: Duration::from_secs_f64 panics on negative/NaN/∞.
+        let timeout = cfg.gateway.request_timeout_s;
+        let request_timeout_s = if timeout.is_finite() {
+            timeout.clamp(0.001, 86_400.0)
+        } else {
+            crate::config::GatewayConfig::default().request_timeout_s
+        };
+        Ok(LiveStack {
+            jobs,
+            metrics,
+            tier_queues,
+            ctls,
+            threads,
+            request_timeout_s,
+        })
+    }
+
+    /// Serve one prompt (blocks until a replica answers or the request
+    /// timeout elapses).
+    ///
+    /// A timeout abandons the *reply*, not the work: the sequence has no
+    /// mid-flight cancellation yet, so it decodes to completion server
+    /// side and still counts in `completed`/`tokens_out`; the timeout
+    /// itself is counted in `timeouts`.
     pub fn complete(&self, prompt: &str, max_tokens: usize) -> Result<LiveResponse> {
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         let reply: OneShot<Result<LiveResponse, String>> = OneShot::new();
@@ -162,37 +370,102 @@ impl LiveStack {
             self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
             return Err(anyhow!("queue full (backpressure)"));
         }
-        reply.wait().map_err(|e| anyhow!(e))
+        match reply.wait_timeout(Duration::from_secs_f64(self.request_timeout_s)) {
+            Some(out) => out.map_err(|e| anyhow!(e)),
+            None => {
+                self.metrics.timeouts.fetch_add(1, Ordering::Relaxed);
+                Err(anyhow!("request timed out"))
+            }
+        }
     }
 
-    pub fn shutdown(mut self) {
-        self.jobs.close();
-        if let Some(h) = self.engine.take() {
-            let _ = h.join();
+    /// Active (unparked) replicas across all tiers — the scale-to-zero
+    /// observable.
+    pub fn active_replicas(&self) -> usize {
+        self.ctls
+            .iter()
+            .map(|c| c.target.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Occupied decode slots across the pool.
+    pub fn slots_in_use(&self) -> usize {
+        self.ctls
+            .iter()
+            .map(|c| c.slots_in_use.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// The `/metrics` exposition snapshot.
+    pub fn metrics_snapshot(&self) -> Vec<(String, f64)> {
+        let m = &self.metrics;
+        let c = |v: &AtomicU64| v.load(Ordering::Relaxed) as f64;
+        let mut out = vec![
+            ("ps_requests_total".to_string(), c(&m.requests)),
+            ("ps_completed_total".to_string(), c(&m.completed)),
+            ("ps_errors_total".to_string(), c(&m.errors)),
+            ("ps_rejected_total".to_string(), c(&m.rejected)),
+            ("ps_tokens_out_total".to_string(), c(&m.tokens_out)),
+            ("ps_batched_total".to_string(), c(&m.batched)),
+            ("ps_decode_steps_total".to_string(), c(&m.decode_steps)),
+            ("ps_prefill_total".to_string(), c(&m.prefills)),
+            (
+                "ps_queue_wait_seconds_total".to_string(),
+                m.queue_wait_total_s(),
+            ),
+            ("ps_cold_wakes_total".to_string(), c(&m.cold_wakes)),
+            ("ps_timeouts_total".to_string(), c(&m.timeouts)),
+        ];
+        for (i, &b) in DECODE_BATCHES.iter().enumerate() {
+            out.push((format!("ps_decode_b{b}_total"), c(&m.batch_counts[i])));
         }
+        out.push((
+            "ps_queue_depth".to_string(),
+            self.tier_queues.iter().map(|q| q.len()).sum::<usize>() as f64,
+        ));
+        out.push(("ps_slots_in_use".to_string(), self.slots_in_use() as f64));
+        out.push((
+            "ps_active_replicas".to_string(),
+            self.active_replicas() as f64,
+        ));
+        out
+    }
+
+    pub fn shutdown(self) {
+        // Dropping joins everything (Drop below).
     }
 }
 
 impl Drop for LiveStack {
     fn drop(&mut self) {
         self.jobs.close();
-        if let Some(h) = self.engine.take() {
-            let _ = h.join();
+        // The router (the last thread spawned) drains buffered jobs and
+        // then closes the tier queues itself — join it first so those
+        // jobs route normally instead of bouncing off closed queues.
+        if let Some(router) = self.threads.pop() {
+            let _ = router.join();
+        }
+        // Normally a no-op; guarantees replica exit if the router died
+        // without closing the queues.
+        for q in &self.tier_queues {
+            q.close();
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
         }
     }
 }
 
-/// Route + execute one prompt on the in-process engines.
-fn serve_one(
+/// Route one prompt against the matrix (Alg. 2): returns the execution
+/// tier, the logical model picked, and the classification.
+fn route_one(
     router: &mut dyn Router,
     registry: &Registry,
     weights: Weights,
-    engines: &[crate::runtime::LmEngine],
     prompt: &str,
     max_tokens: usize,
-) -> Result<LiveResponse> {
+) -> Result<(Tier, &'static str, Classification)> {
     let class: Classification = router.route(prompt)?;
-    // Alg. 2 over the matrix picks the model; its engine tier executes.
     let in_tokens = crate::tokenizer::word_count(prompt).max(1) as f64;
     let out_est = 0.5 * max_tokens as f64;
     let sel = crate::orchestrator::select(
@@ -200,19 +473,300 @@ fn serve_one(
     )
     .ok_or_else(|| anyhow!("no routable service"))?;
     let svc = registry.get(sel.service);
-    let tier: Tier = svc.spec.tier;
-    let engine = &engines[tier.index()];
-    let gen = engine.generate(prompt, max_tokens)?;
-    Ok(LiveResponse {
-        tokens: gen.tokens,
-        tier: tier.name().to_string(),
-        model: svc.spec.name,
-        complexity: class.complexity,
-        confidence: class.confidence,
-        ttft_s: gen.ttft_s,
-        latency_s: gen.latency_s,
-        prompt_tokens: gen.prompt_tokens,
-    })
+    Ok((svc.spec.tier, svc.spec.name, class))
+}
+
+/// The router thread: drain gateway jobs → classify → per-tier queues,
+/// and run the pool scaler every `scale_interval_s` (also while idle, so
+/// scale-to-zero fires without traffic).
+#[allow(clippy::too_many_arguments)]
+fn router_loop(
+    mut router: Box<dyn Router>,
+    jobs: Channel<Job>,
+    tier_queues: Vec<Channel<TierJob>>,
+    ctls: Vec<Arc<TierControl>>,
+    metrics: Arc<GatewayMetrics>,
+    epoch: Instant,
+    pool: PoolConfig,
+    orch: crate::config::OrchestratorConfig,
+    profile: crate::config::Profile,
+) {
+    let zoo_models = zoo();
+    let mut registry = Registry::new(&zoo_models, orch.telemetry_window_s);
+    for s in &mut registry.services {
+        // Live replicas are the pool's engine threads for that tier. A
+        // tier provisioned with zero replicas can never serve: mark its
+        // services unhealthy so Alg. 2 routes around them instead of
+        // hard-failing every request it sends there.
+        let n = pool.replicas[s.spec.tier.index()];
+        s.ready_replicas = n;
+        if n == 0 {
+            s.health = crate::registry::Health::Unhealthy;
+        }
+    }
+    let weights = Weights::from_profile(&profile);
+    let mut scaler = PoolScaler::new(orch, pool.max_inflight);
+    let mut last_scale = 0.0f64;
+    loop {
+        let job = jobs.recv_timeout(Duration::from_millis(100));
+        let now = epoch.elapsed().as_secs_f64();
+        if let Some(job) = job {
+            match route_one(&mut *router, &registry, weights, &job.prompt, job.max_tokens)
+            {
+                Err(e) => {
+                    metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    job.reply.put(Err(format!("{e:#}")));
+                }
+                Ok((tier, model, class)) => {
+                    // Zero-replica tiers were marked Unhealthy at
+                    // registry init, so Alg. 2 cannot select one here.
+                    let ti = tier.index();
+                    let tj = TierJob {
+                        prompt: job.prompt,
+                        max_tokens: job.max_tokens,
+                        enqueue_s: now,
+                        ttft_s: 0.0,
+                        queue_wait_s: 0.0,
+                        reply: job.reply,
+                        tier,
+                        model,
+                        complexity: class.complexity,
+                        confidence: class.confidence,
+                    };
+                    match tier_queues[ti].try_send(tj) {
+                        Ok(()) => {
+                            ctls[ti]
+                                .last_enqueue_us
+                                .store((now * 1e6) as u64, Ordering::Relaxed);
+                            // Scale-from-zero: wake a parked tier now
+                            // rather than waiting for the next plan.
+                            if ctls[ti].target.fetch_max(1, Ordering::Relaxed) == 0 {
+                                metrics.cold_wakes.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        Err(tj) => {
+                            metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                            tj.reply
+                                .put(Err("tier queue full (backpressure)".to_string()));
+                        }
+                    }
+                }
+            }
+        } else if jobs.is_closed() && jobs.is_empty() {
+            break;
+        }
+        if now - last_scale >= pool.scale_interval_s {
+            last_scale = now;
+            for ti in 0..3 {
+                let load = TierLoad {
+                    queue_depth: tier_queues[ti].len(),
+                    slots_in_use: ctls[ti].slots_in_use.load(Ordering::Relaxed),
+                    active_replicas: ctls[ti].target.load(Ordering::Relaxed),
+                    idle_s: now
+                        - ctls[ti].last_enqueue_us.load(Ordering::Relaxed) as f64 / 1e6,
+                };
+                let target = scaler.target(ti, load, pool.replicas[ti], now);
+                ctls[ti].target.store(target, Ordering::Relaxed);
+            }
+        }
+    }
+    for q in &tier_queues {
+        q.close();
+    }
+}
+
+/// Everything one replica thread needs besides its engine.
+struct ReplicaCtx {
+    index: usize,
+    queue: Channel<TierJob>,
+    ctl: Arc<TierControl>,
+    metrics: Arc<GatewayMetrics>,
+    epoch: Instant,
+    pool: PoolConfig,
+}
+
+/// Publish this replica's slot occupancy into the tier aggregate.
+fn sync_occupancy(ctl: &TierControl, reported: &mut usize, current: usize) {
+    if current > *reported {
+        ctl.slots_in_use
+            .fetch_add(current - *reported, Ordering::Relaxed);
+    } else if current < *reported {
+        ctl.slots_in_use
+            .fetch_sub(*reported - current, Ordering::Relaxed);
+    }
+    *reported = current;
+}
+
+/// Try to move one routed job into the scheduler. Returns the job back
+/// when the replica has no slot/KV headroom right now.
+fn admit_job<E: StepEngine>(
+    sched: &mut Scheduler<E, TierJob>,
+    mut job: TierJob,
+    ctx: &ReplicaCtx,
+) -> Option<TierJob> {
+    let now = ctx.epoch.elapsed().as_secs_f64();
+    let est = crate::tokenizer::word_count(&job.prompt).max(1) + 1;
+    job.queue_wait_s = (now - job.enqueue_s).max(0.0);
+    // The payload moves into the scheduler while the prompt is borrowed
+    // for prefill; restore it if the job bounces.
+    let prompt = std::mem::take(&mut job.prompt);
+    match sched.admit(&prompt, job.max_tokens, est, job) {
+        Admit::Admitted => {
+            let done = ctx.epoch.elapsed().as_secs_f64();
+            ctx.metrics.prefills.fetch_add(1, Ordering::Relaxed);
+            if let Some(p) = sched.last_admitted_mut() {
+                ctx.metrics.add_queue_wait_s(p.queue_wait_s);
+                // Prefill produced the first token: that's TTFT.
+                p.ttft_s = (done - p.enqueue_s).max(0.0);
+            }
+            None
+        }
+        Admit::Rejected(mut job) => {
+            job.prompt = prompt;
+            Some(job)
+        }
+        Admit::Failed(job, e) => {
+            ctx.metrics.errors.fetch_add(1, Ordering::Relaxed);
+            job.reply.put(Err(format!("admission failed: {e:#}")));
+            None
+        }
+    }
+}
+
+/// Complete a finished request back to its caller.
+fn finish_job(f: Finished<TierJob>, ctx: &ReplicaCtx) {
+    let now = ctx.epoch.elapsed().as_secs_f64();
+    let job = f.payload;
+    ctx.metrics.completed.fetch_add(1, Ordering::Relaxed);
+    ctx.metrics
+        .tokens_out
+        .fetch_add(f.tokens.len() as u64, Ordering::Relaxed);
+    job.reply.put(Ok(LiveResponse {
+        tokens: f.tokens,
+        tier: job.tier.name().to_string(),
+        model: job.model,
+        complexity: job.complexity,
+        confidence: job.confidence,
+        ttft_s: job.ttft_s,
+        latency_s: (now - job.enqueue_s).max(0.0),
+        queue_wait_s: job.queue_wait_s,
+        prompt_tokens: f.prompt_tokens,
+    }));
+}
+
+/// One replica's serving loop: admit → batch-decode → retire, with
+/// flush-timeout holds that wake early on new arrivals, and parking when
+/// the scaler's target drops below this replica's index.
+fn replica_loop<E: StepEngine>(engine: E, ctx: ReplicaCtx) {
+    // Clamp the batch target to the slot count too: with fewer slots
+    // than the biggest rung, a full replica could otherwise never
+    // "fill" a batch and would eat the flush timeout while saturated.
+    let max_batch = ctx
+        .pool
+        .max_decode_batch
+        .min(engine.max_batch())
+        .min(ctx.pool.max_inflight.max(1))
+        .max(1);
+    let policy = BatchPolicy::custom(max_batch, 1, ctx.pool.flush_timeout_s);
+    let mut sched: Scheduler<E, TierJob> = Scheduler::new(
+        engine,
+        SchedulerConfig {
+            policy,
+            max_inflight: ctx.pool.max_inflight.max(1),
+            kv_blocks: ctx.pool.kv_blocks.max(1),
+            kv_block_tokens: ctx.pool.kv_block_tokens.max(1),
+        },
+    );
+    let mut held: Option<TierJob> = None;
+    let mut reported = 0usize;
+    loop {
+        let active = ctx.index < ctx.ctl.target.load(Ordering::Relaxed);
+        // Admit as much as fits. A parked replica stops pulling from the
+        // queue but still finishes a held job and drains its slots.
+        if active || held.is_some() {
+            loop {
+                let job = match held.take().or_else(|| {
+                    if active {
+                        ctx.queue.try_recv()
+                    } else {
+                        None
+                    }
+                }) {
+                    Some(j) => j,
+                    None => break,
+                };
+                match admit_job(&mut sched, job, &ctx) {
+                    None => continue,
+                    Some(back) => {
+                        held = Some(back);
+                        break;
+                    }
+                }
+            }
+        }
+        if sched.inflight() == 0 {
+            sync_occupancy(&ctx.ctl, &mut reported, 0);
+            // Break even with a job still held — the post-loop cleanup
+            // fails it back to its caller instead of spinning forever.
+            if ctx.queue.is_closed() && ctx.queue.is_empty() {
+                break;
+            }
+            if active && held.is_none() {
+                if let Some(j) = ctx.queue.recv_timeout(Duration::from_millis(20)) {
+                    held = Some(j);
+                }
+            } else {
+                // Parked (scale-to-zero): poll coarsely — this bounds
+                // cold-wake latency at ~50 ms while keeping an idle
+                // tier's CPU cost negligible. (A held job cannot persist
+                // at zero inflight — admission fails unserveable
+                // requests outright rather than bouncing them.)
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            continue;
+        }
+        match sched.tick(ctx.epoch.elapsed().as_secs_f64()) {
+            Ok(tick) => {
+                if tick.stepped > 0 {
+                    ctx.metrics.observe_batch(tick.stepped);
+                }
+                for f in tick.finished {
+                    finish_job(f, &ctx);
+                }
+                sync_occupancy(&ctx.ctl, &mut reported, sched.inflight());
+                if tick.stepped == 0 {
+                    if let Some(wait) = tick.wait_s {
+                        // Holding for batch-mates: sleep out the flush
+                        // window, but wake immediately on a new arrival.
+                        let wait = Duration::from_secs_f64(wait.clamp(0.0002, 0.1));
+                        if active && held.is_none() {
+                            if let Some(j) = ctx.queue.recv_timeout(wait) {
+                                held = Some(j);
+                            }
+                        } else {
+                            std::thread::sleep(wait);
+                        }
+                    }
+                }
+            }
+            Err(e) => {
+                let msg = format!("engine step failed: {e:#}");
+                for job in sched.fail_all() {
+                    ctx.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    job.reply.put(Err(msg.clone()));
+                }
+                sync_occupancy(&ctx.ctl, &mut reported, 0);
+            }
+        }
+    }
+    // Never strand a caller on shutdown.
+    if let Some(job) = held.take() {
+        job.reply.put(Err("gateway shutting down".to_string()));
+    }
+    for job in sched.fail_all() {
+        job.reply.put(Err("gateway shutting down".to_string()));
+    }
+    sync_occupancy(&ctx.ctl, &mut reported, 0);
 }
 
 /// Start the HTTP gateway over a live stack. Returns the bound server.
@@ -221,19 +775,8 @@ pub fn serve_http(stack: Arc<LiveStack>, port: u16, threads: usize) -> Result<ht
         match (req.method.as_str(), req.path.as_str()) {
             ("GET", "/healthz") => (200, "text/plain".into(), b"ok".to_vec()),
             ("GET", "/metrics") => {
-                let m = &stack.metrics;
-                let body = crate::telemetry::export_prometheus(&[
-                    ("ps_requests_total".into(),
-                     m.requests.load(Ordering::Relaxed) as f64),
-                    ("ps_completed_total".into(),
-                     m.completed.load(Ordering::Relaxed) as f64),
-                    ("ps_errors_total".into(),
-                     m.errors.load(Ordering::Relaxed) as f64),
-                    ("ps_rejected_total".into(),
-                     m.rejected.load(Ordering::Relaxed) as f64),
-                    ("ps_tokens_out_total".into(),
-                     m.tokens_out.load(Ordering::Relaxed) as f64),
-                ]);
+                let body =
+                    crate::telemetry::export_prometheus(&stack.metrics_snapshot());
                 (200, "text/plain".into(), body.into_bytes())
             }
             ("POST", "/v1/completions") => match handle_completion(&stack, req) {
@@ -263,6 +806,7 @@ fn handle_completion(stack: &LiveStack, req: &http::Request) -> Result<String> {
         ("confidence", Json::num(r.confidence)),
         ("ttft_s", Json::num(r.ttft_s)),
         ("latency_s", Json::num(r.latency_s)),
+        ("queue_wait_s", Json::num(r.queue_wait_s)),
         ("prompt_tokens", Json::num(r.prompt_tokens as f64)),
         (
             "tokens",

@@ -11,14 +11,19 @@
 //! * **Spin** — the orchestration layer ([`orchestrator`]): warm pools,
 //!   Little's-law capacity planning, cooldowns, scale-to-zero and fault
 //!   recovery over a simulated Kubernetes substrate ([`cluster`]).
-//! * **Serving** — backend pool ([`backend`]) with continuous batching and
-//!   a block-granular KV manager, executing AOT-compiled HLO modules
-//!   through the PJRT C API ([`runtime`]). Python never runs at request
-//!   time.
+//! * **Serving** — a continuous-batching engine pool: the gateway
+//!   ([`gateway`]) fans routed jobs into per-tier queues served by N
+//!   replica threads, each running the slot-managed scheduler of
+//!   [`backend::scheduler`] over the batch ladder ([`backend::batcher`])
+//!   and the block-granular KV manager ([`backend::kv_cache`]),
+//!   executing AOT-compiled HLO modules through the PJRT C API
+//!   ([`runtime`]). Python never runs at request time.
 //!
 //! The crate is dependency-light by necessity (offline build): [`util`]
 //! provides the JSON, RNG, stats, threadpool, logging, clock and CLI
-//! substrates that would otherwise come from serde/rand/tokio/clap.
+//! substrates that would otherwise come from serde/rand/tokio/clap;
+//! `anyhow` is vendored in-tree, and the PJRT bindings sit behind the
+//! `pjrt` feature ([`runtime::pjrt`] stubs them otherwise).
 
 pub mod backend;
 pub mod baselines;

@@ -11,5 +11,5 @@ pub mod recovery;
 pub mod scaling;
 pub mod selection;
 
-pub use scaling::{ScaleAction, Scaler};
+pub use scaling::{PoolScaler, ScaleAction, Scaler, TierLoad};
 pub use selection::{select, Selection};

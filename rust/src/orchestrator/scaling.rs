@@ -88,6 +88,70 @@ impl Scaler {
     }
 }
 
+/// Live load signal for one engine-pool tier (the gateway samples these
+/// each scaling interval).
+#[derive(Debug, Clone, Copy)]
+pub struct TierLoad {
+    /// Routed requests waiting in the tier queue.
+    pub queue_depth: usize,
+    /// Decode slots currently occupied across the tier's replicas.
+    pub slots_in_use: usize,
+    /// Replicas currently active (unparked).
+    pub active_replicas: usize,
+    /// Seconds since the tier last saw an enqueue.
+    pub idle_s: f64,
+}
+
+/// Alg. 1 adapted to the in-process engine pool: targets are driven by
+/// *observed* demand — per-tier queue depth plus slot occupancy — instead
+/// of the arrival-rate × latency estimate the cluster scaler uses, since
+/// the live gateway can measure its own backlog directly. Scale-to-zero
+/// parks every replica of an idle tier (minus its warm-pool floor);
+/// the gateway un-parks on the next enqueue (a "cold wake").
+pub struct PoolScaler {
+    cfg: OrchestratorConfig,
+    /// Demand a single replica absorbs (its decode-slot count).
+    slots_per_replica: usize,
+    cooldown_until: [f64; 3],
+}
+
+impl PoolScaler {
+    pub fn new(cfg: OrchestratorConfig, slots_per_replica: usize) -> PoolScaler {
+        PoolScaler {
+            cfg,
+            slots_per_replica: slots_per_replica.max(1),
+            cooldown_until: [0.0; 3],
+        }
+    }
+
+    /// Plan the active-replica target for one tier. `max_replicas` is the
+    /// tier's provisioned thread count (the hard ceiling).
+    pub fn target(
+        &mut self,
+        tier: usize,
+        load: TierLoad,
+        max_replicas: usize,
+        now_s: f64,
+    ) -> usize {
+        let warm = self.cfg.warm_pool[tier.min(2)].min(max_replicas);
+        let demand = load.queue_depth + load.slots_in_use;
+        let need = demand.div_ceil(self.slots_per_replica);
+        if need > load.active_replicas {
+            // Scale up (cooldown-gated, warm floor respected).
+            if now_s >= self.cooldown_until[tier.min(2)] {
+                self.cooldown_until[tier.min(2)] = now_s + self.cfg.cooldown_s;
+                return need.max(warm).min(max_replicas);
+            }
+            return load.active_replicas;
+        }
+        if demand == 0 && load.idle_s > self.cfg.idle_timeout_s {
+            // Scale to zero (or the warm floor) after the idle window.
+            return warm;
+        }
+        load.active_replicas
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -207,5 +271,106 @@ mod tests {
         let (mut r, mut s) = setup([0, 0, 0]);
         let actions = s.plan(&mut r, 1000.0);
         assert!(actions.is_empty(), "{actions:?}");
+    }
+
+    fn pool_scaler(warm: [usize; 3]) -> PoolScaler {
+        let cfg = OrchestratorConfig {
+            warm_pool: warm,
+            cooldown_s: 30.0,
+            idle_timeout_s: 120.0,
+            ..OrchestratorConfig::default()
+        };
+        PoolScaler::new(cfg, 8) // 8 decode slots per replica
+    }
+
+    #[test]
+    fn pool_scales_up_on_queue_depth() {
+        let mut s = pool_scaler([0, 0, 0]);
+        // 20 queued + 4 in slots = 24 demand → 3 replicas of 8 slots.
+        let load = TierLoad {
+            queue_depth: 20,
+            slots_in_use: 4,
+            active_replicas: 1,
+            idle_s: 0.0,
+        };
+        assert_eq!(s.target(0, load, 4, 100.0), 3);
+    }
+
+    #[test]
+    fn pool_cooldown_blocks_repeat_upscale() {
+        let mut s = pool_scaler([0, 0, 0]);
+        let load = TierLoad {
+            queue_depth: 30,
+            slots_in_use: 0,
+            active_replicas: 1,
+            idle_s: 0.0,
+        };
+        assert_eq!(s.target(0, load, 8, 0.0), 4);
+        // Still under-provisioned, but inside the cooldown window.
+        assert_eq!(s.target(0, load, 8, 10.0), 1);
+        // Window over → fires again.
+        assert_eq!(s.target(0, load, 8, 31.0), 4);
+    }
+
+    #[test]
+    fn pool_scales_to_zero_when_idle_without_warm_floor() {
+        let mut s = pool_scaler([0, 0, 0]);
+        let load = TierLoad {
+            queue_depth: 0,
+            slots_in_use: 0,
+            active_replicas: 2,
+            idle_s: 200.0,
+        };
+        assert_eq!(s.target(2, load, 2, 500.0), 0);
+    }
+
+    #[test]
+    fn pool_idle_keeps_warm_floor() {
+        let mut s = pool_scaler([1, 1, 1]);
+        let load = TierLoad {
+            queue_depth: 0,
+            slots_in_use: 0,
+            active_replicas: 2,
+            idle_s: 200.0,
+        };
+        assert_eq!(s.target(0, load, 2, 500.0), 1);
+    }
+
+    #[test]
+    fn pool_inflight_work_blocks_scale_down() {
+        let mut s = pool_scaler([0, 0, 0]);
+        // Idle enqueue-wise but slots still draining → hold replicas.
+        let load = TierLoad {
+            queue_depth: 0,
+            slots_in_use: 3,
+            active_replicas: 1,
+            idle_s: 500.0,
+        };
+        assert_eq!(s.target(1, load, 4, 1000.0), 1);
+    }
+
+    #[test]
+    fn pool_target_capped_by_provisioned_replicas() {
+        let mut s = pool_scaler([0, 0, 0]);
+        let load = TierLoad {
+            queue_depth: 500,
+            slots_in_use: 8,
+            active_replicas: 1,
+            idle_s: 0.0,
+        };
+        assert_eq!(s.target(0, load, 4, 0.0), 4);
+    }
+
+    #[test]
+    fn pool_steady_state_holds_current() {
+        let mut s = pool_scaler([0, 0, 0]);
+        let load = TierLoad {
+            queue_depth: 2,
+            slots_in_use: 6,
+            active_replicas: 1,
+            idle_s: 1.0,
+        };
+        // Demand 8 fits one replica exactly → no change.
+        assert_eq!(s.target(0, load, 4, 0.0), 1);
     }
 }

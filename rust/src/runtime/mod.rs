@@ -13,14 +13,15 @@
 //! §Perf log).
 
 pub mod manifest;
+pub mod pjrt;
 pub mod weights;
 
 use std::collections::BTreeMap;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
-use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient,
-          PjRtLoadedExecutable, XlaComputation};
+use pjrt::{HloModuleProto, Literal, PjRtBuffer, PjRtClient,
+           PjRtLoadedExecutable, XlaComputation};
 
 use crate::router::Classifier;
 use crate::tokenizer;
@@ -243,11 +244,51 @@ pub struct Generation {
 }
 
 /// Per-sequence decode state (KV bytes live on the host between steps).
-struct SeqState {
+///
+/// Public so the continuous-batching scheduler
+/// ([`crate::backend::scheduler`]) can own in-flight sequences and
+/// interleave decode steps across them: a sequence is started once
+/// ([`LmEngine::start_seq`]), stepped in engine-chosen batches
+/// ([`LmEngine::step_batch`]) until [`Sequence::done`], and its slot is
+/// released the moment it completes.
+pub struct Sequence {
     kv: Vec<u8>,
     pos: i32,
     last_token: i32,
     out: Vec<i32>,
+    /// Total tokens this sequence may emit (the prefill token counts).
+    budget: usize,
+    prompt_tokens: usize,
+}
+
+impl Sequence {
+    /// Tokens generated so far (prefill token first).
+    pub fn tokens(&self) -> &[i32] {
+        &self.out
+    }
+
+    /// Consume the sequence, yielding its generated tokens.
+    pub fn into_tokens(self) -> Vec<i32> {
+        self.out
+    }
+
+    pub fn generated(&self) -> usize {
+        self.out.len()
+    }
+
+    pub fn prompt_tokens(&self) -> usize {
+        self.prompt_tokens
+    }
+
+    /// Absolute position in the KV cache (prompt + generated).
+    pub fn position(&self) -> usize {
+        self.pos as usize
+    }
+
+    /// Has this sequence exhausted its token budget?
+    pub fn done(&self) -> bool {
+        self.out.len() >= self.budget
+    }
 }
 
 /// A compiled LM tier: batch-1 prefill plus decode executables per batch.
@@ -277,7 +318,7 @@ impl LmEngine {
     }
 
     /// Prefill one prompt; returns its decode state (first token sampled).
-    fn prefill_one(&self, prompt: &str) -> Result<SeqState> {
+    fn prefill_one(&self, prompt: &str) -> Result<Sequence> {
         let ids = tokenizer::encode_words(prompt, self.seq_prefill);
         let len = tokenizer::valid_len(&ids).max(1);
         let toks = i32_buffer(&self.client, &ids, &[1, self.seq_prefill])?;
@@ -291,12 +332,33 @@ impl LmEngine {
         if kv.len() != self.kv_bytes_per_seq() {
             bail!("kv size {} != expected {}", kv.len(), self.kv_bytes_per_seq());
         }
-        Ok(SeqState { kv, pos: len as i32, last_token: first, out: vec![first] })
+        Ok(Sequence {
+            kv,
+            pos: len as i32,
+            last_token: first,
+            out: vec![first],
+            budget: 1,
+            prompt_tokens: len,
+        })
     }
 
-    /// One decode step over a batch of sequences (continuous batching:
-    /// positions may differ per sequence). Batch size must be compiled.
-    fn decode_step(&self, states: &mut [&mut SeqState]) -> Result<()> {
+    /// Start serving a prompt: prefill it and fix its token budget
+    /// (`max_new` capped by the compiled context window). The returned
+    /// sequence already holds its first token; feed it to
+    /// [`Self::step_batch`] until [`Sequence::done`].
+    pub fn start_seq(&self, prompt: &str, max_new: usize) -> Result<Sequence> {
+        let mut st = self.prefill_one(prompt)?;
+        st.budget = max_new
+            .min(self.seq_max.saturating_sub(st.pos as usize))
+            .max(1);
+        Ok(st)
+    }
+
+    /// One decode step over a batch of in-flight sequences (continuous
+    /// batching: positions may differ per sequence). `states.len()` must
+    /// be a compiled batch size; callers must not include sequences that
+    /// are already [`Sequence::done`].
+    pub fn step_batch(&self, states: &mut [&mut Sequence]) -> Result<()> {
         let b = states.len();
         let exe = self
             .decode
@@ -341,25 +403,25 @@ impl LmEngine {
     /// Greedy generation for a single prompt.
     pub fn generate(&self, prompt: &str, max_new: usize) -> Result<Generation> {
         let t0 = Instant::now();
-        let mut st = self.prefill_one(prompt)?;
+        let mut st = self.start_seq(prompt, max_new)?;
         let ttft = t0.elapsed().as_secs_f64();
-        let prompt_tokens = st.pos as usize;
-        let budget = max_new.min(self.seq_max.saturating_sub(st.pos as usize));
-        for _ in 1..budget.max(1) {
+        while !st.done() {
             let mut only = [&mut st];
-            self.decode_step(&mut only)?;
+            self.step_batch(&mut only)?;
         }
         Ok(Generation {
-            tokens: st.out,
+            prompt_tokens: st.prompt_tokens,
+            tokens: st.into_tokens(),
             ttft_s: ttft,
             latency_s: t0.elapsed().as_secs_f64(),
-            prompt_tokens,
         })
     }
 
     /// Greedy generation for a batch of prompts using a compiled batch
     /// size (prompts prefill individually, then decode jointly — the
-    /// continuous-batching pattern the paper's vLLM backend uses).
+    /// continuous-batching pattern the paper's vLLM backend uses). All
+    /// sequences share one budget; the per-sequence interleaving lives in
+    /// [`crate::backend::scheduler`].
     pub fn generate_batch(&self, prompts: &[&str], max_new: usize) -> Result<Vec<Generation>> {
         let b = prompts.len();
         if !self.decode.contains_key(&b) {
@@ -374,18 +436,21 @@ impl LmEngine {
             states.push(st);
         }
         let max_pos = states.iter().map(|s| s.pos).max().unwrap_or(0) as usize;
-        let budget = max_new.min(self.seq_max.saturating_sub(max_pos));
-        for _ in 1..budget.max(1) {
-            let mut refs: Vec<&mut SeqState> = states.iter_mut().collect();
-            self.decode_step(&mut refs)?;
+        let budget = max_new.min(self.seq_max.saturating_sub(max_pos)).max(1);
+        for st in &mut states {
+            st.budget = budget;
+        }
+        for _ in 1..budget {
+            let mut refs: Vec<&mut Sequence> = states.iter_mut().collect();
+            self.step_batch(&mut refs)?;
         }
         let total = t0.elapsed().as_secs_f64();
         Ok(states
             .into_iter()
             .zip(ttfts)
             .map(|(st, ttft)| Generation {
-                prompt_tokens: st.pos as usize - (st.out.len() - 1),
-                tokens: st.out,
+                prompt_tokens: st.prompt_tokens,
+                tokens: st.into_tokens(),
                 ttft_s: ttft,
                 latency_s: total,
             })
@@ -395,6 +460,11 @@ impl LmEngine {
     /// Compiled decode batch sizes (for the batcher).
     pub fn decode_batches(&self) -> Vec<usize> {
         self.decode.keys().copied().collect()
+    }
+
+    /// Largest compiled decode batch.
+    pub fn max_decode_batch(&self) -> usize {
+        self.decode.keys().copied().max().unwrap_or(1)
     }
 }
 

@@ -1,0 +1,174 @@
+//! PJRT facade — the narrow slice of the `xla` bindings the runtime
+//! uses, switchable between the real crate and an in-tree stub.
+//!
+//! With `--features pjrt` the real `xla` bindings are re-exported
+//! unchanged and the live inference path works end-to-end. NOTE: the
+//! feature additionally requires adding the `xla` crate
+//! (github.com/LaurentMazare/xla-rs) to `[dependencies]` by hand — it
+//! cannot live in Cargo.toml because offline/hermetic builds have no
+//! registry access (see the feature note there); until then a `pjrt`
+//! build fails at this `use`. Without the feature (the default — CI and
+//! offline builds), a typed stub keeps every caller compiling: artifact
+//! loading and compilation succeed (so manifests and engine wiring are
+//! testable), but `execute_b` returns an error. Tests that need real
+//! inference already skip when `artifacts/` is absent, which is always
+//! the case in stub builds.
+
+#[cfg(feature = "pjrt")]
+pub use xla::{
+    HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable,
+    XlaComputation,
+};
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{
+    HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable,
+    XlaComputation,
+};
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    //! Shape-checked no-op stand-ins for the xla-rs types. Every method
+    //! mirrors the real signature (including `Result` error types that
+    //! format with `{:?}`) so `runtime` compiles identically either way.
+
+    /// Error type formatted with `{e:?}` by the runtime, like xla's.
+    pub struct Error(pub String);
+
+    impl std::fmt::Debug for Error {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            write!(f, "{}", self.0)
+        }
+    }
+
+    type Result<T> = std::result::Result<T, Error>;
+
+    fn unavailable<T>(what: &str) -> Result<T> {
+        Err(Error(format!(
+            "{what}: PJRT execution unavailable (crate built without the \
+             `pjrt` feature; rebuild with --features pjrt and the xla \
+             bindings to run compiled artifacts)"
+        )))
+    }
+
+    /// Host element types the runtime moves across the PJRT boundary.
+    pub trait Element: Copy {}
+    impl Element for f32 {}
+    impl Element for i32 {}
+
+    /// A parsed HLO module (stub: remembers the source path only).
+    pub struct HloModuleProto {
+        path: String,
+    }
+
+    impl HloModuleProto {
+        pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+            if std::path::Path::new(path).exists() {
+                Ok(HloModuleProto { path: path.to_string() })
+            } else {
+                Err(Error(format!("no such HLO file: {path}")))
+            }
+        }
+    }
+
+    /// A computation handle built from a proto.
+    pub struct XlaComputation {
+        path: String,
+    }
+
+    impl XlaComputation {
+        pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+            XlaComputation { path: proto.path.clone() }
+        }
+    }
+
+    /// The (CPU) PJRT client.
+    #[derive(Clone)]
+    pub struct PjRtClient;
+
+    impl PjRtClient {
+        pub fn cpu() -> Result<PjRtClient> {
+            Ok(PjRtClient)
+        }
+
+        pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+            Ok(PjRtLoadedExecutable { path: comp.path.clone() })
+        }
+
+        pub fn buffer_from_host_buffer<T: Element>(
+            &self,
+            data: &[T],
+            dims: &[usize],
+            _device: Option<usize>,
+        ) -> Result<PjRtBuffer> {
+            let expect: usize = dims.iter().product();
+            if data.len() != expect {
+                return Err(Error(format!(
+                    "host buffer has {} elements, dims {dims:?} want {expect}",
+                    data.len()
+                )));
+            }
+            Ok(PjRtBuffer)
+        }
+    }
+
+    /// A device buffer (stub: no storage; uploads only shape-check).
+    pub struct PjRtBuffer;
+
+    impl PjRtBuffer {
+        pub fn to_literal_sync(&self) -> Result<Literal> {
+            unavailable("to_literal_sync")
+        }
+    }
+
+    /// A compiled executable.
+    pub struct PjRtLoadedExecutable {
+        path: String,
+    }
+
+    impl PjRtLoadedExecutable {
+        pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+            unavailable(&format!("execute {}", self.path))
+        }
+    }
+
+    /// A host-side literal value.
+    pub struct Literal;
+
+    impl Literal {
+        pub fn to_tuple(self) -> Result<Vec<Literal>> {
+            unavailable("to_tuple")
+        }
+
+        pub fn to_vec<T: Element>(&self) -> Result<Vec<T>> {
+            unavailable("to_vec")
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn client_and_upload_shape_check() {
+            let c = PjRtClient::cpu().unwrap();
+            assert!(c.buffer_from_host_buffer(&[1i32, 2, 3], &[1, 3], None).is_ok());
+            assert!(c.buffer_from_host_buffer(&[1i32, 2, 3], &[2, 3], None).is_err());
+        }
+
+        #[test]
+        fn execution_reports_unavailable() {
+            let c = PjRtClient::cpu().unwrap();
+            let missing = HloModuleProto::from_text_file("/no/such/module.hlo");
+            assert!(missing.is_err());
+            // A real file parses and compiles; only execution is stubbed.
+            let exe = {
+                let proto =
+                    HloModuleProto { path: "synthetic".into() };
+                c.compile(&XlaComputation::from_proto(&proto)).unwrap()
+            };
+            let err = exe.execute_b(&[]).unwrap_err();
+            assert!(format!("{err:?}").contains("pjrt"));
+        }
+    }
+}

@@ -160,6 +160,90 @@ impl ServiceTelemetry {
     }
 }
 
+/// Fixed-bucket histogram for serving-path distributions: decode batch
+/// sizes, queue waits, slot occupancy. Cumulative (`≤ bound`) buckets in
+/// the Prometheus style, plus count/sum for means.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    /// Per-bucket counts; `counts[i]` observes `x ≤ bounds[i]`, with one
+    /// trailing overflow bucket (+Inf).
+    counts: Vec<u64>,
+    sum: f64,
+}
+
+impl Histogram {
+    /// `bounds` must be strictly increasing.
+    pub fn new(bounds: &[f64]) -> Histogram {
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly increasing"
+        );
+        Histogram {
+            bounds: bounds.to_vec(),
+            counts: vec![0; bounds.len() + 1],
+            sum: 0.0,
+        }
+    }
+
+    /// Decode-batch-size buckets matching the compiled ladder.
+    pub fn for_batch_sizes() -> Histogram {
+        Histogram::new(
+            &crate::backend::batcher::DECODE_BATCHES
+                .iter()
+                .map(|&b| b as f64)
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| x <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum += x;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum / n as f64
+        }
+    }
+
+    /// Observations in the bucket ending at `bound` (exact match).
+    pub fn bucket(&self, bound: f64) -> u64 {
+        match self.bounds.iter().position(|&b| b == bound) {
+            Some(i) => self.counts[i],
+            None => 0,
+        }
+    }
+
+    /// (upper-bound, count) pairs, overflow bucket last as +Inf.
+    pub fn buckets(&self) -> Vec<(f64, u64)> {
+        let mut out: Vec<(f64, u64)> = self
+            .bounds
+            .iter()
+            .copied()
+            .zip(self.counts.iter().copied())
+            .collect();
+        out.push((f64::INFINITY, self.counts[self.bounds.len()]));
+        out
+    }
+}
+
 /// Prometheus-style text exposition of a metrics snapshot (the gateway's
 /// `/metrics` endpoint).
 pub fn export_prometheus(
@@ -229,5 +313,40 @@ mod tests {
         let s = export_prometheus(&[("ps_requests_total".into(), 42.0)]);
         assert!(s.contains("ps_requests_total 42"));
         assert!(s.contains("# TYPE"));
+    }
+
+    #[test]
+    fn histogram_buckets_and_mean() {
+        let mut h = Histogram::new(&[1.0, 4.0, 8.0]);
+        for x in [1.0, 1.0, 3.0, 4.0, 8.0, 20.0] {
+            h.observe(x);
+        }
+        assert_eq!(h.bucket(1.0), 2); // the two 1.0s
+        assert_eq!(h.bucket(4.0), 2); // 3.0 and 4.0
+        assert_eq!(h.bucket(8.0), 1);
+        assert_eq!(h.count(), 6);
+        let overflow = h.buckets().last().unwrap().1;
+        assert_eq!(overflow, 1); // the 20.0
+        assert!((h.mean() - 37.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_batch_ladder_matches_compiled_sizes() {
+        let mut h = Histogram::for_batch_sizes();
+        h.observe(4.0);
+        h.observe(8.0);
+        h.observe(8.0);
+        assert_eq!(h.bucket(4.0), 1);
+        assert_eq!(h.bucket(8.0), 2);
+        assert_eq!(h.bucket(2.0), 0); // not a compiled rung
+        assert!((h.mean() - 20.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::new(&[0.5]);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.buckets(), vec![(0.5, 0), (f64::INFINITY, 0)]);
     }
 }

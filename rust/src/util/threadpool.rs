@@ -149,6 +149,13 @@ impl<T> Channel<T> {
         self.inner.not_full.notify_all();
     }
 
+    /// Has the channel been closed? (Buffered items may still remain —
+    /// consumers drain them; `recv` returns `None` only when closed
+    /// *and* empty.)
+    pub fn is_closed(&self) -> bool {
+        self.inner.q.lock().unwrap().closed
+    }
+
     pub fn len(&self) -> usize {
         self.inner.q.lock().unwrap().buf.len()
     }
@@ -291,7 +298,9 @@ mod tests {
     fn channel_close_drains_then_none() {
         let ch = Channel::bounded(8);
         ch.send("a").unwrap();
+        assert!(!ch.is_closed());
         ch.close();
+        assert!(ch.is_closed());
         assert_eq!(ch.recv(), Some("a"));
         assert_eq!(ch.recv(), None);
         assert_eq!(ch.send("b"), Err(SendError));

@@ -1,0 +1,225 @@
+//! A minimal, API-compatible shim of the `anyhow` crate.
+//!
+//! The repository builds in offline/hermetic environments with no
+//! crates.io access, so the subset of `anyhow` the codebase uses is
+//! vendored here as a path dependency: [`Error`], [`Result`], the
+//! [`anyhow!`]/[`bail!`]/[`ensure!`] macros, and the [`Context`]
+//! extension trait. Errors are a flat context chain of strings — enough
+//! for `{e}`, `{e:#}` and `{e:?}` reporting — not a full dyn-Error tree.
+//!
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error`: that keeps the blanket `From<E: std::error::Error>`
+//! conversion (what makes `?` work) coherent.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` alias, matching the real crate.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A string-chain error: the outermost context first, root cause last.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a printable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context layer (used by [`Context`]).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    /// `{e}` prints the outermost message; `{e:#}` the whole chain.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    /// `{e:?}` mirrors anyhow's report shape: message plus caused-by list.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// `?` conversion from any std error. Coherent with `From<T> for T`
+/// because `Error` itself does not implement `std::error::Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Preserve the std source chain as context layers.
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+mod private {
+    /// Sealed unification of "things that convert into [`crate::Error`]":
+    /// std errors and `Error` itself. The two impls are coherent because
+    /// `Error` never implements `std::error::Error`.
+    pub trait IntoError {
+        fn into_error(self) -> crate::Error;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> crate::Error {
+            crate::Error::from(self)
+        }
+    }
+
+    impl IntoError for crate::Error {
+        fn into_error(self) -> crate::Error {
+            self
+        }
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` on fallible results.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: private::IntoError> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string, a printable value, or
+/// format args — the real crate's three arms.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Assert a condition, early-returning an [`Error`] when it fails.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        Err(anyhow!("root {}", 42))
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root 42");
+        assert_eq!(e.root_cause(), "root 42");
+    }
+
+    #[test]
+    fn macro_accepts_all_three_arg_shapes() {
+        let x = 7;
+        assert_eq!(format!("{}", anyhow!("literal {x}")), "literal 7");
+        let owned = String::from("from a value");
+        assert_eq!(format!("{}", anyhow!(owned)), "from a value");
+        assert_eq!(format!("{}", anyhow!("{} and {}", 1, 2)), "1 and 2");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn io() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(io().is_err());
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let called = std::cell::Cell::new(false);
+        let ok: std::result::Result<u32, std::io::Error> = Ok(7);
+        let v = ok
+            .with_context(|| {
+                called.set(true);
+                "ctx"
+            })
+            .unwrap();
+        assert_eq!(v, 7);
+        assert!(!called.get(), "context closure must not run on Ok");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert!(f(3).is_err());
+        assert!(format!("{:#}", f(99).unwrap_err()).contains("99"));
+    }
+
+    #[test]
+    fn debug_shows_cause_chain() {
+        let e = fails().context("ctx").unwrap_err();
+        let d = format!("{e:?}");
+        assert!(d.contains("ctx") && d.contains("Caused by") && d.contains("root 42"));
+    }
+}
