@@ -1,25 +1,51 @@
 //! Continuous-batching scheduler — the per-replica serving loop.
 //!
 //! One scheduler owns one engine replica's in-flight sequences ("slots").
-//! The gateway drains routed jobs into it; it forms decode batches at the
-//! compiled ladder sizes via [`BatchPolicy`] (largest rung that the
-//! in-flight set can fill, flush timeout for partial rungs), interleaves
-//! decode steps across sequences at different positions, and retires a
-//! sequence the moment its budget is exhausted — freeing its slot and KV
-//! reservation for the next queued request immediately, so short
-//! completions never wait for long batch-mates (the continuous-batching
-//! property the paper's vLLM backend provides).
+//! The gateway drains routed jobs into it; admissions buffer briefly so
+//! *prefill* also runs at the compiled ladder rungs ([`BatchPolicy`]'s
+//! `PREFILL_BATCHES`) instead of serially per sequence; decode batches
+//! form at the decode ladder sizes (largest rung the in-flight set can
+//! fill, flush timeout for partial rungs), interleaving steps across
+//! sequences at different positions. A sequence retires the moment its
+//! budget is exhausted — or the moment its [`CancelToken`] fires (a
+//! timed-out caller frees its slot early instead of decoding to
+//! completion) — releasing its slot and KV reservation for the next
+//! queued request immediately.
 //!
 //! The scheduler is deliberately a pure state machine over an abstract
 //! [`StepEngine`]: the live path plugs in [`crate::runtime::LmEngine`]
 //! (PJRT), while tests and benches use [`SimStepEngine`] — so the whole
 //! slot/batch/flush logic is exercised in CI without artifacts.
 
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
 use anyhow::{anyhow, Result};
 
 use crate::backend::batcher::BatchPolicy;
 use crate::backend::kv_cache::{KvBlockManager, SeqId};
 use crate::telemetry::Histogram;
+
+/// Shared cancellation flag for one request: the caller's side sets it
+/// (e.g. on request timeout), the scheduler checks it every tick and
+/// evicts the sequence mid-flight.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Relaxed)
+    }
+}
 
 /// What the scheduler needs from a per-sequence decode state.
 pub trait SeqLike {
@@ -34,13 +60,20 @@ pub trait SeqLike {
     fn done(&self) -> bool;
 }
 
-/// An engine replica the scheduler can drive: prefill one prompt into a
-/// sequence, then advance batches of sequences one token at a time.
+/// An engine replica the scheduler can drive: prefill prompts into
+/// sequences, then advance batches of sequences one token at a time.
 pub trait StepEngine {
     type Seq: SeqLike;
 
     /// Prefill a prompt; the returned sequence holds its first token.
     fn start(&mut self, prompt: &str, max_new: usize) -> Result<Self::Seq>;
+
+    /// Prefill a ladder rung of prompts (`(prompt, max_new)` pairs) in
+    /// one dispatch. The default runs serially; engines with batched
+    /// prefill override it to amortize the dispatch cost.
+    fn start_batch(&mut self, reqs: &[(&str, usize)]) -> Result<Vec<Self::Seq>> {
+        reqs.iter().map(|&(p, m)| self.start(p, m)).collect()
+    }
 
     /// One decode step for every sequence in `batch` (its length is
     /// always a compiled ladder size ≤ [`Self::max_batch`]).
@@ -92,6 +125,11 @@ impl StepEngine for crate::runtime::LmEngine {
         self.start_seq(prompt, max_new)
     }
 
+    // `start_batch` keeps the serial default: the AOT pipeline compiles
+    // prefill at batch 1 only (decode gets the ladder), so rung-sized
+    // prefill dispatches become real once multi-batch prefill modules
+    // are exported.
+
     fn step(&mut self, batch: &mut [&mut Self::Seq]) -> Result<()> {
         self.step_batch(batch)
     }
@@ -114,7 +152,7 @@ impl StepEngine for crate::runtime::LmEngine {
 #[derive(Debug, Clone, Copy)]
 pub struct SchedulerConfig {
     pub policy: BatchPolicy,
-    /// Decode slots (max in-flight sequences).
+    /// Decode slots (max in-flight sequences, buffered prefills included).
     pub max_inflight: usize,
     /// Paged-KV pool backing admissions.
     pub kv_blocks: usize,
@@ -131,10 +169,16 @@ pub struct SchedulerConfig {
 #[derive(Debug)]
 pub struct SchedulerStats {
     pub prefills: u64,
+    /// Prefill dispatches executed (each covers a ladder rung).
+    pub prefill_batches: u64,
+    /// Prefill dispatches that covered more than one sequence.
+    pub prefill_batched: u64,
     pub decode_steps: u64,
     /// Decode steps that ran with batch size > 1.
     pub batched_steps: u64,
     pub completed: u64,
+    /// Sequences evicted mid-flight by their [`CancelToken`].
+    pub cancelled: u64,
     pub tokens_out: u64,
     pub peak_inflight: usize,
     /// Distribution of formed decode-batch sizes.
@@ -145,9 +189,12 @@ impl Default for SchedulerStats {
     fn default() -> Self {
         Self {
             prefills: 0,
+            prefill_batches: 0,
+            prefill_batched: 0,
             decode_steps: 0,
             batched_steps: 0,
             completed: 0,
+            cancelled: 0,
             tokens_out: 0,
             peak_inflight: 0,
             batch_hist: Histogram::for_batch_sizes(),
@@ -157,11 +204,12 @@ impl Default for SchedulerStats {
 
 /// Outcome of an admission attempt.
 pub enum Admit<T> {
-    /// Prefilled and holding a slot.
+    /// Buffered for the next prefill rung, holding a slot reservation.
     Admitted,
     /// No slot / KV headroom right now — retry after a tick.
     Rejected(T),
-    /// The engine failed; the payload is returned for error reporting.
+    /// The request can never be served; the payload is returned for
+    /// error reporting.
     Failed(T, anyhow::Error),
 }
 
@@ -175,9 +223,17 @@ pub struct Finished<T> {
 /// Result of one scheduler tick.
 pub struct Tick<T> {
     pub finished: Vec<Finished<T>>,
+    /// Requests evicted by cancellation this tick.
+    pub cancelled: Vec<T>,
+    /// Requests whose prefill/KV admission failed terminally, with the
+    /// error message.
+    pub failed: Vec<(T, String)>,
+    /// Sequences prefilled this tick (possibly across several rungs).
+    pub prefilled: usize,
     /// Decode batch size executed this tick (0 = none).
     pub stepped: usize,
-    /// If holding for batch-mates: seconds until the flush deadline.
+    /// If holding for batch-mates (prefill or decode): seconds until the
+    /// earliest flush deadline.
     pub wait_s: Option<f64>,
 }
 
@@ -185,6 +241,20 @@ struct Slot<S, T> {
     id: SeqId,
     seq: S,
     payload: T,
+    cancel: CancelToken,
+}
+
+/// A request admitted but not yet prefilled (waiting for a prefill rung
+/// to fill). Its KV need is pre-counted against admission so buffered
+/// work cannot oversubscribe the pool.
+struct PendingPrefill<T> {
+    prompt: String,
+    max_new: usize,
+    reserve_new: usize,
+    /// Estimated KV tokens (clamped prompt estimate + reservation).
+    est_tokens: usize,
+    payload: T,
+    cancel: CancelToken,
 }
 
 /// The per-replica continuous-batching state machine.
@@ -193,11 +263,23 @@ pub struct Scheduler<E: StepEngine, T> {
     cfg: SchedulerConfig,
     kv: KvBlockManager,
     slots: Vec<Slot<E::Seq, T>>,
+    pending: VecDeque<PendingPrefill<T>>,
+    /// Estimated KV tokens pre-committed to `pending` (sum of
+    /// `est_tokens`; block rounding is per-sequence at prefill, so this
+    /// is a slight under-estimate across many tiny prompts — the exact
+    /// reservation at prefill time is authoritative).
+    pending_kv_tokens: usize,
     next_id: u64,
     /// Round-robin start offset so no slot starves at partial rungs.
     cursor: usize,
-    /// When the current hold-for-batch-mates window opened.
+    /// When the current decode hold-for-batch-mates window opened.
     hold_since: Option<f64>,
+    /// When the current prefill hold window opened.
+    prefill_hold_since: Option<f64>,
+    /// Sticky prefill flush: once the timeout fires, drain the whole
+    /// buffer at partial rungs instead of re-opening a hold window per
+    /// rung.
+    prefill_flushing: bool,
     /// Sticky flush: once the timeout fires, keep draining partial
     /// batches until a full rung forms (or the replica goes idle).
     flushing: bool,
@@ -212,36 +294,43 @@ impl<E: StepEngine, T> Scheduler<E, T> {
             kv: KvBlockManager::new(cfg.kv_blocks, cfg.kv_block_tokens),
             cfg,
             slots: Vec::new(),
+            pending: VecDeque::new(),
+            pending_kv_tokens: 0,
             next_id: 0,
             cursor: 0,
             hold_since: None,
+            prefill_hold_since: None,
+            prefill_flushing: false,
             flushing: false,
             stats: SchedulerStats::default(),
         }
     }
 
+    /// In-flight requests: decoding slots plus buffered prefills (both
+    /// hold a slot reservation).
     pub fn inflight(&self) -> usize {
-        self.slots.len()
+        self.slots.len() + self.pending.len()
     }
 
     /// Slot occupancy in [0, 1] (the scaling signal).
     pub fn occupancy(&self) -> f64 {
-        self.slots.len() as f64 / self.cfg.max_inflight as f64
+        self.inflight() as f64 / self.cfg.max_inflight as f64
     }
 
     /// Mutable access to the most recently admitted payload — valid only
     /// immediately after [`Self::admit`] returns `Admitted` (the gateway
-    /// stamps TTFT through this).
+    /// restores the job's prompt through this).
     pub fn last_admitted_mut(&mut self) -> Option<&mut T> {
-        self.slots.last_mut().map(|s| &mut s.payload)
+        self.pending.back_mut().map(|p| &mut p.payload)
     }
 
-    /// Try to admit a request: reserve a slot and KV blocks, prefill it.
-    /// `prompt_tokens_est` sizes the KV pre-check (clamped to the
-    /// engine's prompt window, since prefill truncates); the reservation
-    /// itself uses the exact post-tokenization count. A request that
-    /// cannot fit even into an *empty* replica is `Failed`, never
-    /// `Rejected` — bouncing it would retry forever.
+    /// Try to admit a request: reserve a slot and (estimated) KV blocks,
+    /// and buffer it for the next prefill rung. `prompt_tokens_est`
+    /// sizes the KV pre-check (clamped to the engine's prompt window,
+    /// since prefill truncates); the reservation itself uses the exact
+    /// post-tokenization count at prefill time. A request that cannot
+    /// fit even into an *empty* replica is `Failed`, never `Rejected` —
+    /// bouncing it would retry forever.
     pub fn admit(
         &mut self,
         prompt: &str,
@@ -249,7 +338,19 @@ impl<E: StepEngine, T> Scheduler<E, T> {
         prompt_tokens_est: usize,
         payload: T,
     ) -> Admit<T> {
-        if self.slots.len() >= self.cfg.max_inflight {
+        self.admit_cancellable(prompt, max_new, prompt_tokens_est, payload, CancelToken::new())
+    }
+
+    /// [`Self::admit`] with a caller-held [`CancelToken`].
+    pub fn admit_cancellable(
+        &mut self,
+        prompt: &str,
+        max_new: usize,
+        prompt_tokens_est: usize,
+        payload: T,
+        cancel: CancelToken,
+    ) -> Admit<T> {
+        if self.inflight() >= self.cfg.max_inflight {
             return Admit::Rejected(payload);
         }
         let est = prompt_tokens_est.min(self.engine.max_prompt_tokens());
@@ -257,48 +358,59 @@ impl<E: StepEngine, T> Scheduler<E, T> {
         // bounds generation, and prefill emits one token even at
         // max_new = 0.
         let reserve_new = max_new.min(self.engine.max_new_tokens()).max(1);
-        if !self.kv.can_admit(est + reserve_new) {
-            if self.slots.is_empty() {
+        let est_tokens = est + reserve_new;
+        if !self.kv.can_admit(self.pending_kv_tokens + est_tokens) {
+            if self.slots.is_empty() && self.pending.is_empty() {
                 return Admit::Failed(
                     payload,
                     anyhow!(
                         "request needs {} KV tokens but the replica pool \
                          holds {}",
-                        est + reserve_new,
+                        est_tokens,
                         self.cfg.kv_blocks * self.cfg.kv_block_tokens
                     ),
                 );
             }
             return Admit::Rejected(payload);
         }
-        let seq = match self.engine.start(prompt, max_new) {
-            Ok(s) => s,
-            Err(e) => return Admit::Failed(payload, e),
-        };
-        let id = SeqId(self.next_id);
-        self.next_id += 1;
-        if self.kv.admit(id, seq.prompt_tokens(), reserve_new).is_err() {
-            // The estimate undershot and the pool is tight: drop the
-            // prefill (rare) and let backpressure retry — unless the
-            // replica is empty, in which case it can never fit.
-            if self.slots.is_empty() {
-                return Admit::Failed(
-                    payload,
-                    anyhow!(
-                        "prompt ({} tokens) plus budget exceeds the \
-                         replica KV pool",
-                        seq.prompt_tokens()
-                    ),
-                );
-            }
-            return Admit::Rejected(payload);
-        }
-        // The prefill token is the first of the reserved budget.
-        let _ = self.kv.append_token(id);
-        self.stats.prefills += 1;
-        self.slots.push(Slot { id, seq, payload });
-        self.stats.peak_inflight = self.stats.peak_inflight.max(self.slots.len());
+        self.pending_kv_tokens += est_tokens;
+        self.pending.push_back(PendingPrefill {
+            prompt: prompt.to_string(),
+            max_new,
+            reserve_new,
+            est_tokens,
+            payload,
+            cancel,
+        });
+        self.stats.peak_inflight = self.stats.peak_inflight.max(self.inflight());
         Admit::Admitted
+    }
+
+    /// Evict every request whose cancel token fired — buffered or
+    /// decoding — releasing slots and KV instantly.
+    fn sweep_cancelled(&mut self, out: &mut Vec<T>) {
+        let mut i = 0;
+        while i < self.pending.len() {
+            if self.pending[i].cancel.is_cancelled() {
+                let p = self.pending.remove(i).expect("index checked");
+                self.pending_kv_tokens -= p.est_tokens;
+                self.stats.cancelled += 1;
+                out.push(p.payload);
+            } else {
+                i += 1;
+            }
+        }
+        let mut i = 0;
+        while i < self.slots.len() {
+            if self.slots[i].cancel.is_cancelled() {
+                let slot = self.slots.remove(i);
+                self.kv.release(slot.id);
+                self.stats.cancelled += 1;
+                out.push(slot.payload);
+            } else {
+                i += 1;
+            }
+        }
     }
 
     /// Retire every completed sequence, releasing slots + KV instantly.
@@ -320,17 +432,148 @@ impl<E: StepEngine, T> Scheduler<E, T> {
         }
     }
 
-    /// One scheduling decision at time `now_s`: retire finished work,
-    /// then either run one decode batch or report how long to hold for
-    /// batch-mates.
+    /// Flush buffered prefills into slots at ladder rungs. Returns
+    /// (sequences prefilled, seconds until the prefill flush deadline if
+    /// holding for rung-mates).
+    fn run_prefills(
+        &mut self,
+        now_s: f64,
+        tick: &mut Tick<T>,
+        on_prefilled: &mut dyn FnMut(&mut T),
+    ) -> Option<f64> {
+        loop {
+            let waiting = self.pending.len();
+            if waiting == 0 {
+                self.prefill_hold_since = None;
+                self.prefill_flushing = false;
+                return None;
+            }
+            // An idle replica (no decode work to overlap) prefills
+            // immediately: holding for speculative rung-mates there is
+            // pure added latency.
+            let timed_out = self.prefill_flushing
+                || self.slots.is_empty()
+                || self
+                    .prefill_hold_since
+                    .is_some_and(|t| now_s - t >= self.cfg.policy.flush_timeout_s);
+            let Some(b) = self.cfg.policy.prefill_batch_size(waiting, timed_out) else {
+                // Hold for rung-mates until the flush window closes.
+                let opened = *self.prefill_hold_since.get_or_insert(now_s);
+                return Some(
+                    (self.cfg.policy.flush_timeout_s - (now_s - opened)).max(0.0),
+                );
+            };
+            // Once the window fires, drain the whole buffer this tick.
+            self.prefill_flushing =
+                timed_out && b < self.cfg.policy.max_prefill_batch;
+            self.prefill_hold_since = None;
+            let remaining = waiting - b;
+            let batch: Vec<PendingPrefill<T>> = self.pending.drain(..b).collect();
+            let reqs: Vec<(&str, usize)> = batch
+                .iter()
+                .map(|p| (p.prompt.as_str(), p.max_new))
+                .collect();
+            let started = self.engine.start_batch(&reqs);
+            for p in &batch {
+                self.pending_kv_tokens -= p.est_tokens;
+            }
+            let seqs = match started {
+                Ok(s) => s,
+                Err(e) => {
+                    // Engine refused the rung: fail these requests and
+                    // keep the replica alive for the rest.
+                    let msg = format!("prefill failed: {e:#}");
+                    for p in batch {
+                        tick.failed.push((p.payload, msg.clone()));
+                    }
+                    continue;
+                }
+            };
+            self.stats.prefill_batches += 1;
+            if b > 1 {
+                self.stats.prefill_batched += 1;
+            }
+            for (seq, p) in seqs.into_iter().zip(batch) {
+                let id = SeqId(self.next_id);
+                self.next_id += 1;
+                if self.kv.admit(id, seq.prompt_tokens(), p.reserve_new).is_err() {
+                    // The estimate undershot and the pool is tight. With
+                    // other work holding blocks, re-buffer and retry once
+                    // slots retire; on an empty replica it can never fit.
+                    if self.slots.is_empty() && self.pending.is_empty() {
+                        tick.failed.push((
+                            p.payload,
+                            format!(
+                                "prompt ({} tokens) plus budget exceeds the \
+                                 replica KV pool",
+                                seq.prompt_tokens()
+                            ),
+                        ));
+                    } else {
+                        self.pending_kv_tokens += p.est_tokens;
+                        self.pending.push_back(PendingPrefill {
+                            prompt: p.prompt,
+                            max_new: p.max_new,
+                            reserve_new: p.reserve_new,
+                            est_tokens: p.est_tokens,
+                            payload: p.payload,
+                            cancel: p.cancel,
+                        });
+                    }
+                    continue;
+                }
+                // The prefill token is the first of the reserved budget.
+                let _ = self.kv.append_token(id);
+                self.stats.prefills += 1;
+                tick.prefilled += 1;
+                let mut slot = Slot { id, seq, payload: p.payload, cancel: p.cancel };
+                on_prefilled(&mut slot.payload);
+                self.slots.push(slot);
+            }
+            // A re-buffered undershoot would loop (and re-prefill)
+            // forever against the same tight pool within this tick:
+            // stop once anything bounced and retry next tick, after
+            // retirements free blocks.
+            if self.pending.len() > remaining {
+                return None;
+            }
+        }
+    }
+
+    /// One scheduling decision at time `now_s`: evict cancellations,
+    /// retire finished work, flush prefill rungs, then either run one
+    /// decode batch or report how long to hold for batch-mates.
     pub fn tick(&mut self, now_s: f64) -> Result<Tick<T>> {
-        let mut finished = Vec::new();
-        self.retire(&mut finished);
+        self.tick_with(now_s, &mut |_| {})
+    }
+
+    /// [`Self::tick`] with a hook invoked once per sequence the moment
+    /// its prefill completes (the gateway stamps TTFT through this).
+    pub fn tick_with(
+        &mut self,
+        now_s: f64,
+        on_prefilled: &mut dyn FnMut(&mut T),
+    ) -> Result<Tick<T>> {
+        let mut tick = Tick {
+            finished: Vec::new(),
+            cancelled: Vec::new(),
+            failed: Vec::new(),
+            prefilled: 0,
+            stepped: 0,
+            wait_s: None,
+        };
+        self.sweep_cancelled(&mut tick.cancelled);
+        self.retire(&mut tick.finished);
+        let prefill_wait = self.run_prefills(now_s, &mut tick, on_prefilled);
+        // A budget-1 sequence completes at prefill; release immediately.
+        self.retire(&mut tick.finished);
+
         let active = self.slots.len();
         if active == 0 {
             self.hold_since = None;
             self.flushing = false;
-            return Ok(Tick { finished, stepped: 0, wait_s: None });
+            tick.wait_s = prefill_wait;
+            return Ok(tick);
         }
         let timed_out = self.flushing
             || self
@@ -339,7 +582,11 @@ impl<E: StepEngine, T> Scheduler<E, T> {
         let Some(b) = self.cfg.policy.decode_batch_size(active, timed_out) else {
             let opened = *self.hold_since.get_or_insert(now_s);
             let wait = (self.cfg.policy.flush_timeout_s - (now_s - opened)).max(0.0);
-            return Ok(Tick { finished, stepped: 0, wait_s: Some(wait) });
+            tick.wait_s = Some(match prefill_wait {
+                Some(p) => p.min(wait),
+                None => wait,
+            });
+            return Ok(tick);
         };
         // Sticky flush until a full rung forms again.
         self.flushing = timed_out && b < self.cfg.policy.max_decode_batch;
@@ -372,19 +619,27 @@ impl<E: StepEngine, T> Scheduler<E, T> {
         }
         self.stats.tokens_out += b as u64;
         self.stats.batch_hist.observe(b as f64);
-        self.retire(&mut finished);
-        Ok(Tick { finished, stepped: b, wait_s: None })
+        self.retire(&mut tick.finished);
+        tick.stepped = b;
+        Ok(tick)
     }
 
     /// Fail every in-flight request (engine died / shutdown), returning
-    /// the payloads so the caller can report errors.
+    /// the payloads so the caller can report errors. Buffered prefills
+    /// are included.
     pub fn fail_all(&mut self) -> Vec<T> {
-        let mut out = Vec::with_capacity(self.slots.len());
+        let mut out = Vec::with_capacity(self.inflight());
+        for p in self.pending.drain(..) {
+            out.push(p.payload);
+        }
+        self.pending_kv_tokens = 0;
         for slot in self.slots.drain(..) {
             self.kv.release(slot.id);
             out.push(slot.payload);
         }
         self.hold_since = None;
+        self.prefill_hold_since = None;
+        self.prefill_flushing = false;
         self.flushing = false;
         out
     }
@@ -420,6 +675,7 @@ impl<E: StepEngine, T> Scheduler<E, T> {
 /// A deterministic stand-in engine with the cost shape of real batched
 /// decode: each step pays a fixed dispatch cost plus a small per-sequence
 /// cost, so batching amortizes the dispatch exactly like a batched GEMM.
+/// Batched prefill follows the same shape (one dispatch per rung).
 /// Zero-cost configurations make it a pure logic fake for unit tests.
 pub struct SimStepEngine {
     pub prefill_us: u64,
@@ -444,6 +700,27 @@ impl SimStepEngine {
         if us > 0 {
             std::thread::sleep(std::time::Duration::from_micros(us));
         }
+    }
+
+    fn make_seq(prompt: &str, max_new: usize) -> SimSeq {
+        let mut state = 0xcbf29ce484222325u64;
+        for b in prompt.bytes() {
+            state = (state ^ b as u64).wrapping_mul(0x100000001b3);
+        }
+        let mut seq = SimSeq {
+            tokens: Vec::new(),
+            // Mirrors the compiled engines' context-window budget clamp.
+            budget: max_new.clamp(1, SIM_SEQ_MAX),
+            // Mirrors the compiled engines' prefill window truncation.
+            prompt_tokens: prompt
+                .split_whitespace()
+                .count()
+                .clamp(1, SIM_SEQ_PREFILL),
+            state,
+        };
+        let first = seq.next_token();
+        seq.tokens.push(first);
+        seq
     }
 }
 
@@ -489,24 +766,15 @@ impl StepEngine for SimStepEngine {
 
     fn start(&mut self, prompt: &str, max_new: usize) -> Result<SimSeq> {
         Self::burn(self.prefill_us);
-        let mut state = 0xcbf29ce484222325u64;
-        for b in prompt.bytes() {
-            state = (state ^ b as u64).wrapping_mul(0x100000001b3);
-        }
-        let mut seq = SimSeq {
-            tokens: Vec::new(),
-            // Mirrors the compiled engines' context-window budget clamp.
-            budget: max_new.clamp(1, SIM_SEQ_MAX),
-            // Mirrors the compiled engines' prefill window truncation.
-            prompt_tokens: prompt
-                .split_whitespace()
-                .count()
-                .clamp(1, SIM_SEQ_PREFILL),
-            state,
-        };
-        let first = seq.next_token();
-        seq.tokens.push(first);
-        Ok(seq)
+        Ok(Self::make_seq(prompt, max_new))
+    }
+
+    fn start_batch(&mut self, reqs: &[(&str, usize)]) -> Result<Vec<SimSeq>> {
+        // One dispatch for the rung: full cost once, then a quarter-cost
+        // marginal row — the amortization batched prefill exists for.
+        let extra = reqs.len().saturating_sub(1) as u64;
+        Self::burn(self.prefill_us + (self.prefill_us / 4) * extra);
+        Ok(reqs.iter().map(|&(p, m)| Self::make_seq(p, m)).collect())
     }
 
     fn step(&mut self, batch: &mut [&mut SimSeq]) -> Result<()> {
@@ -586,7 +854,7 @@ mod tests {
         }
         // Slots full: the 5th is rejected, not errored.
         assert!(matches!(s.admit("p", 2, 2, 99), Admit::Rejected(99)));
-        // One tick retires the budget-1 sequence → a slot frees.
+        // Ticks retire the budget-1 sequence → a slot frees.
         let mut now = 0.0;
         while s.inflight() == 4 {
             let t = s.tick(now).unwrap();
@@ -620,9 +888,11 @@ mod tests {
         for i in 0..3usize {
             assert!(matches!(s.admit("p", 4, 2, i), Admit::Admitted));
         }
-        // 3 active < rung 4: the first tick holds…
+        // 3 active < rung 4: the first tick prefills but the decode
+        // holds…
         let t = s.tick(0.0).unwrap();
         assert_eq!(t.stepped, 0);
+        assert_eq!(t.prefilled, 3);
         let w = t.wait_s.expect("must report a flush deadline");
         assert!(w > 0.0 && w <= 0.02);
         // …and still holds inside the window…
@@ -662,6 +932,7 @@ mod tests {
             },
         );
         assert!(matches!(s.admit("a b c", 60, 4, 1), Admit::Admitted));
+        // The buffered admission already owns the pool's estimate.
         assert!(matches!(s.admit("a b c", 60, 4, 2), Admit::Rejected(2)));
         let (done, now) = s.drain(0.0).unwrap();
         assert_eq!(done.len(), 1);
@@ -771,5 +1042,104 @@ mod tests {
         assert_eq!(s.stats.tokens_out, 24);
         assert_eq!(s.stats.peak_inflight, 8);
         assert_eq!(s.stats.batch_hist.bucket(8.0), 3);
+    }
+
+    #[test]
+    fn prefill_forms_ladder_rungs() {
+        // max_prefill_batch 4: four admissions prefill in ONE dispatch.
+        let mut s: Scheduler<SimStepEngine, usize> = Scheduler::new(
+            SimStepEngine::instant(),
+            SchedulerConfig {
+                policy: BatchPolicy::custom(8, 4, 0.01),
+                max_inflight: 8,
+                kv_blocks: 256,
+                kv_block_tokens: 16,
+            },
+        );
+        for i in 0..4usize {
+            assert!(matches!(s.admit("a b c", 4, 3, i), Admit::Admitted));
+        }
+        let t = s.tick(0.0).unwrap();
+        assert_eq!(t.prefilled, 4);
+        assert_eq!(s.stats.prefill_batches, 1, "one rung-4 dispatch");
+        assert_eq!(s.stats.prefill_batched, 1);
+        assert_eq!(s.stats.prefills, 4);
+        let (done, _) = s.drain(0.001).unwrap();
+        assert_eq!(done.len(), 4);
+    }
+
+    #[test]
+    fn partial_prefill_holds_then_flushes() {
+        let mut s: Scheduler<SimStepEngine, usize> = Scheduler::new(
+            SimStepEngine::instant(),
+            SchedulerConfig {
+                policy: BatchPolicy::custom(8, 4, 0.02),
+                max_inflight: 8,
+                kv_blocks: 256,
+                kv_block_tokens: 16,
+            },
+        );
+        // Occupy a slot first — an idle replica flushes prefill
+        // immediately, so the hold only applies with decode work to
+        // overlap.
+        assert!(matches!(s.admit("a b", 64, 2, 9), Admit::Admitted));
+        let t = s.tick(0.0).unwrap();
+        assert_eq!(t.prefilled, 1, "idle replica must prefill at once");
+        for i in 0..2usize {
+            assert!(matches!(s.admit("a b", 4, 2, i), Admit::Admitted));
+        }
+        // 2 waiting < rung 4 with a busy slot → hold for rung-mates.
+        let t = s.tick(0.001).unwrap();
+        assert_eq!(t.prefilled, 0);
+        let w = t.wait_s.expect("prefill hold must report a deadline");
+        assert!(w > 0.0 && w <= 0.02);
+        // Flush window closes → both prefill (at sub-rung dispatches).
+        let t = s.tick(0.022).unwrap();
+        assert_eq!(t.prefilled, 2);
+        assert!(s.stats.prefill_batches >= 2);
+    }
+
+    #[test]
+    fn cancellation_frees_slot_mid_decode() {
+        let mut s = sched(4, 4, 0.0);
+        let cancel = CancelToken::new();
+        assert!(matches!(
+            s.admit_cancellable("a b", 100, 2, 0, cancel.clone()),
+            Admit::Admitted
+        ));
+        assert!(matches!(s.admit("a b", 4, 2, 1), Admit::Admitted));
+        // Let both prefill and decode a few steps.
+        let mut now = 0.0;
+        for _ in 0..3 {
+            let t = s.tick(now).unwrap();
+            now += t.wait_s.unwrap_or(0.0).max(1e-9);
+        }
+        assert_eq!(s.inflight(), 2);
+        cancel.cancel();
+        let t = s.tick(now).unwrap();
+        assert_eq!(t.cancelled, vec![0], "cancelled payload evicted");
+        assert_eq!(s.stats.cancelled, 1);
+        // The survivor completes and every resource returns.
+        let (done, _) = s.drain(now).unwrap();
+        assert!(done.iter().all(|f| f.payload == 1));
+        assert_eq!(s.inflight(), 0);
+        assert_eq!(s.kv_occupancy(), 0.0);
+    }
+
+    #[test]
+    fn cancellation_evicts_buffered_prefill_before_it_runs() {
+        let mut s = sched(4, 4, 0.0);
+        let cancel = CancelToken::new();
+        assert!(matches!(
+            s.admit_cancellable("a b", 8, 2, 5, cancel.clone()),
+            Admit::Admitted
+        ));
+        cancel.cancel();
+        let t = s.tick(0.0).unwrap();
+        assert_eq!(t.cancelled, vec![5]);
+        assert_eq!(t.prefilled, 0, "cancelled request must not prefill");
+        assert_eq!(s.stats.prefills, 0);
+        assert_eq!(s.inflight(), 0);
+        assert_eq!(s.kv_occupancy(), 0.0);
     }
 }

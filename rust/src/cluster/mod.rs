@@ -24,25 +24,19 @@ use std::collections::BTreeMap;
 use crate::config::ClusterConfig;
 use crate::models::{BackendKind, ModelSpec};
 use crate::registry::ServiceId;
+use crate::substrate::Substrate;
 
-/// Pod identity.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub struct PodId(pub u64);
+// The simulated cluster speaks the unified substrate vocabulary: a pod
+// is a replica, its lifecycle is `ReplicaState`, and `poll` emits
+// `SubstrateEvent`s — the same types the live engine pool reports, so
+// the orchestrator cannot tell the two apart.
+pub use crate::substrate::{
+    ReplicaId as PodId, ReplicaState as PodState, SubstrateEvent as ClusterEvent,
+};
 
 /// Node identity.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct NodeId(pub usize);
-
-/// Pod lifecycle state.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum PodState {
-    Pulling,
-    Loading,
-    Initializing,
-    Ready,
-    Terminating,
-    Failed,
-}
 
 /// A pod: one replica of a (model, backend) service.
 #[derive(Debug, Clone)]
@@ -56,14 +50,6 @@ pub struct Pod {
     pub state_deadline_s: f64,
     pub created_s: f64,
     pub ready_s: Option<f64>,
-}
-
-/// Cluster-level change produced by `poll`.
-#[derive(Debug, Clone, PartialEq)]
-pub enum ClusterEvent {
-    PodReady { pod: PodId, service: ServiceId, at_s: f64, cold_start_s: f64 },
-    PodGone { pod: PodId, service: ServiceId, at_s: f64 },
-    PodFailed { pod: PodId, service: ServiceId, at_s: f64 },
 }
 
 /// One GPU node.
@@ -235,7 +221,7 @@ impl Cluster {
         self.pods.remove(&pod);
         self.stage_durations.remove(&pod);
         self.nodes[node.0].gpus_free += gpus;
-        Some(ClusterEvent::PodFailed { pod, service, at_s: now_s })
+        Some(ClusterEvent::ReplicaFailed { replica: pod, service, at_s: now_s })
     }
 
     /// Advance pod state machines up to `now`; returns lifecycle events.
@@ -250,6 +236,12 @@ impl Cluster {
                     break;
                 }
                 match p.state {
+                    // Scheduling is instantaneous in the sim (pods are
+                    // created already Pulling); kept for exhaustiveness
+                    // over the shared lifecycle.
+                    PodState::Scheduled => {
+                        p.state = PodState::Pulling;
+                    }
                     PodState::Pulling => {
                         let (load, _) = self.stage_durations[&id];
                         p.state = PodState::Loading;
@@ -264,8 +256,8 @@ impl Cluster {
                         p.state = PodState::Ready;
                         let at = p.state_deadline_s;
                         p.ready_s = Some(at);
-                        out.push(ClusterEvent::PodReady {
-                            pod: id,
+                        out.push(ClusterEvent::ReplicaReady {
+                            replica: id,
                             service: p.service,
                             at_s: at,
                             cold_start_s: at - p.created_s,
@@ -281,7 +273,11 @@ impl Cluster {
                         self.pods.remove(&id);
                         self.stage_durations.remove(&id);
                         self.nodes[node.0].gpus_free += gpus;
-                        out.push(ClusterEvent::PodGone { pod: id, service, at_s: at });
+                        out.push(ClusterEvent::ReplicaGone {
+                            replica: id,
+                            service,
+                            at_s: at,
+                        });
                         break;
                     }
                 }
@@ -323,6 +319,47 @@ impl Cluster {
     }
 }
 
+impl Substrate for Cluster {
+    fn provision(
+        &mut self,
+        service: ServiceId,
+        model_idx: usize,
+        spec: &ModelSpec,
+        backend: BackendKind,
+        now_s: f64,
+    ) -> Option<PodId> {
+        self.schedule(service, model_idx, spec, backend, now_s)
+    }
+
+    fn terminate(&mut self, replica: PodId, now_s: f64) {
+        Cluster::terminate(self, replica, now_s);
+    }
+
+    fn fail(&mut self, replica: PodId, now_s: f64) -> Option<ClusterEvent> {
+        Cluster::fail(self, replica, now_s)
+    }
+
+    fn poll(&mut self, now_s: f64) -> Vec<ClusterEvent> {
+        Cluster::poll(self, now_s)
+    }
+
+    fn replica_state(&self, replica: PodId) -> Option<PodState> {
+        self.pods.get(&replica).map(|p| p.state)
+    }
+
+    fn ready_replicas(&self, service: ServiceId) -> Vec<PodId> {
+        self.ready_pods(service)
+    }
+
+    fn pending_replicas(&self, service: ServiceId) -> usize {
+        self.pending_pods(service)
+    }
+
+    fn estimate_cold_start_s(&self, spec: &ModelSpec, backend: BackendKind) -> f64 {
+        Cluster::estimate_cold_start_s(self, spec, backend)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -346,7 +383,7 @@ mod tests {
         let evs = c.poll(29.1);
         assert_eq!(evs.len(), 1);
         match &evs[0] {
-            ClusterEvent::PodReady { cold_start_s, .. } => {
+            ClusterEvent::ReplicaReady { cold_start_s, .. } => {
                 assert!((cold_start_s - 29.0).abs() < 1e-9);
             }
             e => panic!("unexpected {e:?}"),
@@ -366,7 +403,7 @@ mod tests {
         // → 1 + 2.8 + 3 = 6.8s total.
         c.schedule(ServiceId(0), 0, &z[0], BackendKind::Vllm, 50.0).unwrap();
         let evs = c.poll(50.0 + 6.8 + 0.1);
-        assert!(matches!(evs[0], ClusterEvent::PodReady { cold_start_s, .. }
+        assert!(matches!(evs[0], ClusterEvent::ReplicaReady { cold_start_s, .. }
                          if (cold_start_s - 6.8).abs() < 1e-9));
     }
 
@@ -392,7 +429,7 @@ mod tests {
         c.poll(200.0);
         c.terminate(pod, 200.0);
         let evs = c.poll(202.1);
-        assert!(matches!(evs[0], ClusterEvent::PodGone { .. }));
+        assert!(matches!(evs[0], ClusterEvent::ReplicaGone { .. }));
         assert_eq!(c.gpus_held(), 0);
         assert_eq!(c.nodes.iter().map(|n| n.gpus_free).sum::<usize>(), 32);
     }
@@ -404,7 +441,7 @@ mod tests {
         let pod = c.schedule(ServiceId(0), 1, &z[1], BackendKind::Vllm, 0.0).unwrap();
         c.poll(100.0);
         let ev = c.fail(pod, 100.0).unwrap();
-        assert!(matches!(ev, ClusterEvent::PodFailed { .. }));
+        assert!(matches!(ev, ClusterEvent::ReplicaFailed { .. }));
         assert_eq!(c.gpus_held(), 0);
         assert!(c.ready_pods(ServiceId(0)).is_empty());
     }

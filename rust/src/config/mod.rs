@@ -165,6 +165,10 @@ pub struct PoolConfig {
     pub queue_capacity: usize,
     /// Largest decode batch the scheduler may form (≤ largest compiled).
     pub max_decode_batch: usize,
+    /// Largest prefill batch the scheduler may form (≤ largest compiled
+    /// prefill rung): admissions buffer briefly so prefill dispatches at
+    /// ladder rungs instead of serially per sequence.
+    pub max_prefill_batch: usize,
     /// How long a partial batch may wait for batch-mates before it runs.
     pub flush_timeout_s: f64,
     /// Paged-KV pool per replica: block count × tokens per block bounds
@@ -174,6 +178,10 @@ pub struct PoolConfig {
     /// How often the pool scaler re-plans per-tier active replicas from
     /// queue depth + slot occupancy.
     pub scale_interval_s: f64,
+    /// Replica health deadline: a Ready replica thread whose heartbeat
+    /// goes stale past this is declared Failed (stalled engine) and
+    /// redeployed by the recovery manager.
+    pub health_deadline_s: f64,
 }
 
 impl Default for PoolConfig {
@@ -183,10 +191,12 @@ impl Default for PoolConfig {
             max_inflight: 8,
             queue_capacity: 256,
             max_decode_batch: 8,
+            max_prefill_batch: 4,
             flush_timeout_s: 0.020,
             kv_blocks: 128,
             kv_block_tokens: 16,
             scale_interval_s: 2.0,
+            health_deadline_s: 3.0,
         }
     }
 }
@@ -326,6 +336,8 @@ impl Config {
                 p.usize_or("queue_capacity", self.pool.queue_capacity);
             self.pool.max_decode_batch =
                 p.usize_or("max_decode_batch", self.pool.max_decode_batch);
+            self.pool.max_prefill_batch =
+                p.usize_or("max_prefill_batch", self.pool.max_prefill_batch);
             self.pool.flush_timeout_s =
                 p.f64_or("flush_timeout_s", self.pool.flush_timeout_s);
             self.pool.kv_blocks = p.usize_or("kv_blocks", self.pool.kv_blocks);
@@ -333,6 +345,8 @@ impl Config {
                 p.usize_or("kv_block_tokens", self.pool.kv_block_tokens);
             self.pool.scale_interval_s =
                 p.f64_or("scale_interval_s", self.pool.scale_interval_s);
+            self.pool.health_deadline_s =
+                p.f64_or("health_deadline_s", self.pool.health_deadline_s);
         }
         if let Some(c) = j.get("cluster") {
             self.cluster.gpus_per_node =
@@ -422,7 +436,9 @@ mod tests {
         assert!((c.pool.flush_timeout_s - 0.004).abs() < 1e-12);
         // untouched knobs keep defaults
         assert_eq!(c.pool.max_decode_batch, 8);
+        assert_eq!(c.pool.max_prefill_batch, 4);
         assert_eq!(c.pool.kv_blocks, 128);
+        assert!((c.pool.health_deadline_s - 3.0).abs() < 1e-12);
     }
 
     #[test]

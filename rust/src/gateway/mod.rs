@@ -1,46 +1,55 @@
 //! API Gateway — the entry point of Fig. 1, plus the live serving stack.
 //!
-//! Two layers:
+//! Three layers:
 //! * [`http`] — the from-scratch HTTP/1.1 substrate.
-//! * [`LiveStack`] — the continuous-batching engine pool. A router thread
-//!   owns the classifier (PJRT handles are not `Send`, so each thread
-//!   *creates* its engines) and fans jobs out to bounded per-tier queues;
-//!   N replica threads per tier each run a
-//!   [`crate::backend::scheduler::Scheduler`] that drains its queue into
-//!   prefill/decode batches at the compiled ladder sizes, interleaves
-//!   decode across in-flight sequences, and frees slots the moment a
-//!   short completion finishes. A [`PoolScaler`] parks idle replicas
-//!   (scale-to-zero down to the warm-pool floor) from per-tier queue
-//!   depth + slot occupancy; the next enqueue is a "cold wake".
+//! * [`pool`] — the data plane: `LocalSubstrate`, the continuous-batching
+//!   engine pool behind the unified [`crate::substrate::Substrate`]
+//!   trait. N replica threads per tier each run a
+//!   [`crate::backend::scheduler::Scheduler`] that drains its tier queue
+//!   into prefill/decode batches at the compiled ladder sizes and frees
+//!   slots the moment a completion (or cancellation) finishes.
+//! * [`LiveStack`] — the control plane: a router thread owns the
+//!   classifier (PJRT handles are not `Send`), routes jobs to bounded
+//!   per-tier queues, and drives the substrate with the *same*
+//!   orchestrator the simulator uses — Alg. 1 scaling
+//!   ([`crate::orchestrator::Scaler`] over observed tier load, applied
+//!   through `scaling::apply`), Alg. 2 selection with substrate-measured
+//!   cold starts, and the [`RecoveryManager`]: replica threads that
+//!   panic, stall past the health deadline, or are killed by fault
+//!   injection are detected, terminated, redeployed, and recorded as
+//!   `Incident`s with measured recovery seconds exported at `/metrics`.
 //!
 //! Requests: `POST /v1/completions {"prompt": "...", "max_tokens": N}` →
 //! routed by the hybrid router, executed on the tier the matrix picks,
 //! answered with token ids + timing. `GET /healthz`, `GET /metrics`.
 
 pub mod http;
+pub(crate) mod pool;
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::backend::batcher::{BatchPolicy, DECODE_BATCHES, N_DECODE_BATCHES};
-use crate::backend::scheduler::{
-    Admit, Finished, Scheduler, SchedulerConfig, SimStepEngine, StepEngine,
-};
-use crate::config::{Config, PoolConfig, RouterMode};
+use crate::backend::batcher::{DECODE_BATCHES, N_DECODE_BATCHES};
+use crate::backend::scheduler::{CancelToken, SimStepEngine, StepEngine};
+use crate::config::{Config, OrchestratorConfig, PoolConfig, Profile, RouterMode};
 use crate::models::{zoo, Tier};
-use crate::orchestrator::{PoolScaler, TierLoad};
-use crate::registry::Registry;
+use crate::orchestrator::recovery::RecoveryManager;
+use crate::orchestrator::{ScaleAction, Scaler, TierLoad};
+use crate::registry::{Health, Registry};
 use crate::router::hybrid::HybridRouter;
 use crate::router::keyword::KeywordRouter;
 use crate::router::{Classification, Router};
 use crate::runtime::Runtime;
 use crate::scoring::Weights;
+use crate::substrate::Substrate;
 use crate::util::json::Json;
 use crate::util::threadpool::{Channel, OneShot};
+
+use pool::{LocalSubstrate, PoolShared, TierJob};
 
 /// A live completion response.
 #[derive(Debug, Clone)]
@@ -61,23 +70,8 @@ pub struct LiveResponse {
 struct Job {
     prompt: String,
     max_tokens: usize,
+    cancel: CancelToken,
     reply: OneShot<Result<LiveResponse, String>>,
-}
-
-/// A routed job queued for one tier's replicas.
-struct TierJob {
-    prompt: String,
-    max_tokens: usize,
-    /// Seconds (pool epoch) when routing enqueued the job.
-    enqueue_s: f64,
-    /// Stamped at admission (prefill complete = first token).
-    ttft_s: f64,
-    queue_wait_s: f64,
-    reply: OneShot<Result<LiveResponse, String>>,
-    tier: Tier,
-    model: &'static str,
-    complexity: usize,
-    confidence: f64,
 }
 
 /// Counters exported at `/metrics`.
@@ -93,14 +87,30 @@ pub struct GatewayMetrics {
     pub batched: AtomicU64,
     pub decode_steps: AtomicU64,
     pub prefills: AtomicU64,
+    /// Prefill dispatches that covered more than one sequence (batched
+    /// prefill at the ladder rungs).
+    pub prefill_batched: AtomicU64,
     /// Total queue-wait across requests, in microseconds (exported as
     /// `ps_queue_wait_seconds_total`).
     pub queue_wait_us: AtomicU64,
     /// Enqueues that un-parked a scaled-to-zero tier.
     pub cold_wakes: AtomicU64,
-    /// Callers that gave up waiting (the work itself is not cancelled —
-    /// see [`LiveStack::complete`]).
+    /// Callers that gave up waiting; their sequences are cancelled
+    /// mid-flight (see `cancelled`).
     pub timeouts: AtomicU64,
+    /// Sequences evicted mid-flight by their cancel token, freeing the
+    /// slot early instead of decoding to completion.
+    pub cancelled: AtomicU64,
+    /// In-flight jobs requeued off a failed replica (drained without
+    /// loss onto its replacement).
+    pub requeued: AtomicU64,
+    /// Failure incidents observed by the recovery manager.
+    pub incidents: AtomicU64,
+    /// Incidents closed by a replacement replica reaching Ready.
+    pub recovered: AtomicU64,
+    /// Sum of measured recovery times, µs (exported as
+    /// `ps_recovery_seconds_total`).
+    pub recovery_us_total: AtomicU64,
     /// Formed-batch histogram: one counter per compiled rung, in
     /// [`DECODE_BATCHES`] order.
     pub batch_counts: [AtomicU64; N_DECODE_BATCHES],
@@ -128,26 +138,15 @@ impl GatewayMetrics {
     }
 }
 
-/// Per-tier pool control shared between the router (scaler) and the
-/// tier's replica threads.
-struct TierControl {
-    /// Replicas with index < target actively pull work; the rest drain
-    /// and park (scale-to-zero keeps engines warm but idle).
-    target: AtomicUsize,
-    /// Occupied decode slots across the tier's replicas.
-    slots_in_use: AtomicUsize,
-    /// Last enqueue, µs since the pool epoch (idle tracking).
-    last_enqueue_us: AtomicU64,
-}
-
 /// The live serving stack: hybrid router + a continuous-batching engine
-/// pool (N replica threads per compiled tier).
+/// pool driven by the unified control plane.
 pub struct LiveStack {
     jobs: Channel<Job>,
     pub metrics: Arc<GatewayMetrics>,
-    tier_queues: Vec<Channel<TierJob>>,
-    ctls: Vec<Arc<TierControl>>,
-    threads: Vec<JoinHandle<()>>,
+    shared: Arc<PoolShared>,
+    /// The router/control thread; it owns the substrate and joins every
+    /// replica thread on shutdown.
+    router: Option<JoinHandle<()>>,
     request_timeout_s: f64,
 }
 
@@ -206,8 +205,8 @@ impl LiveStack {
 
     /// The same pool wired to the deterministic synthetic engine and the
     /// keyword router — no artifacts or PJRT needed. Used by integration
-    /// tests and benches to exercise queueing, batching, scaling and
-    /// metrics end-to-end.
+    /// tests and benches to exercise queueing, batching, scaling,
+    /// recovery and metrics end-to-end.
     pub fn start_sim(cfg: &Config) -> Result<LiveStack> {
         Self::start_pool(
             cfg,
@@ -232,107 +231,68 @@ impl LiveStack {
         let epoch = Instant::now();
         let jobs: Channel<Job> = Channel::bounded(cfg.gateway.queue_capacity);
         let metrics = Arc::new(GatewayMetrics::default());
-        let tier_queues: Vec<Channel<TierJob>> = (0..3)
-            .map(|_| Channel::bounded(cfg.pool.queue_capacity.max(1)))
-            .collect();
-        let ctls: Vec<Arc<TierControl>> = (0..3)
-            .map(|i| {
-                Arc::new(TierControl {
-                    target: AtomicUsize::new(cfg.pool.replicas[i]),
-                    slots_in_use: AtomicUsize::new(0),
-                    last_enqueue_us: AtomicU64::new(0),
-                })
-            })
-            .collect();
-        let mut threads = Vec::new();
-        let factory = Arc::new(engine_factory);
-        let total_replicas: usize = cfg.pool.replicas.iter().sum();
-        // Sized so every thread can report without blocking even when
-        // start aborts early on the first failure.
-        let ready: Channel<std::result::Result<(), String>> =
-            Channel::bounded(total_replicas + 2);
-
-        for (ti, &tier) in Tier::ALL.iter().enumerate() {
-            for r in 0..cfg.pool.replicas[ti] {
-                let ctx = ReplicaCtx {
-                    index: r,
-                    queue: tier_queues[ti].clone(),
-                    ctl: Arc::clone(&ctls[ti]),
-                    metrics: Arc::clone(&metrics),
-                    epoch,
-                    pool: cfg.pool.clone(),
-                };
-                let factory = Arc::clone(&factory);
-                let ready_tx = ready.clone();
-                threads.push(
-                    std::thread::Builder::new()
-                        .name(format!("engine-{}-{r}", tier.name()))
-                        .spawn(move || {
-                            // Engines are built on this thread (not Send).
-                            match (*factory)(tier, r) {
-                                Ok(engine) => {
-                                    let _ = ready_tx.send(Ok(()));
-                                    replica_loop(engine, ctx);
-                                }
-                                Err(e) => {
-                                    let _ = ready_tx.send(Err(e));
-                                }
-                            }
-                        })?,
-                );
+        let shared = Arc::new(PoolShared::new(epoch, cfg.pool.queue_capacity));
+        let zoo_models = zoo();
+        let registry = Registry::new(&zoo_models, cfg.orchestrator.telemetry_window_s);
+        let mut substrate = LocalSubstrate::new(
+            Arc::clone(&shared),
+            cfg.pool.clone(),
+            Arc::clone(&metrics),
+            engine_factory,
+            &registry,
+        );
+        // Provision the initial fleet through the same lifecycle every
+        // later replica takes (the measured cold starts seed Alg. 2's
+        // scaled-to-zero estimates), and wait until every engine is warm.
+        for ti in 0..3 {
+            let sid = substrate.tier_service(ti);
+            let (mi, spec, backend) = {
+                let s = registry.get(sid);
+                (s.model_idx, s.spec.clone(), s.backend)
+            };
+            for _ in 0..cfg.pool.replicas[ti] {
+                let _ = substrate.provision(sid, mi, &spec, backend, 0.0);
             }
         }
+        if let Err(e) = substrate.wait_warm() {
+            substrate.shutdown();
+            return Err(anyhow!("engine pool failed to start: {e}"));
+        }
 
-        {
+        let ready: Channel<std::result::Result<(), String>> = Channel::bounded(2);
+        let router_handle = {
             let jobs_rx = jobs.clone();
-            let tqs = tier_queues.clone();
-            let ctls = ctls.clone();
             let metrics = Arc::clone(&metrics);
-            let pool = cfg.pool.clone();
+            let pool_cfg = cfg.pool.clone();
             let orch = cfg.orchestrator.clone();
             let profile = cfg.profile;
             let ready_tx = ready.clone();
-            threads.push(
-                std::thread::Builder::new()
-                    .name("router".into())
-                    .spawn(move || {
-                        let router = match router_factory() {
-                            Ok(r) => {
-                                let _ = ready_tx.send(Ok(()));
-                                r
-                            }
-                            Err(e) => {
-                                let _ = ready_tx.send(Err(e));
-                                for q in &tqs {
-                                    q.close();
-                                }
-                                return;
-                            }
-                        };
-                        router_loop(
-                            router, jobs_rx, tqs, ctls, metrics, epoch, pool, orch,
-                            profile,
-                        );
-                    })?,
-            );
-        }
-
-        // Wait until the router and every replica report warm (or fail).
-        for _ in 0..(total_replicas + 1) {
-            match ready.recv() {
-                Some(Ok(())) => {}
-                Some(Err(e)) => {
-                    jobs.close();
-                    for q in &tier_queues {
-                        q.close();
+            std::thread::Builder::new().name("router".into()).spawn(move || {
+                let router = match router_factory() {
+                    Ok(r) => {
+                        let _ = ready_tx.send(Ok(()));
+                        r
                     }
-                    for t in threads {
-                        let _ = t.join();
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        substrate.shutdown();
+                        return;
                     }
-                    return Err(anyhow!("engine pool failed to start: {e}"));
-                }
-                None => return Err(anyhow!("engine pool start interrupted")),
+                };
+                router_loop(
+                    router, jobs_rx, substrate, registry, metrics, pool_cfg, orch,
+                    profile,
+                );
+            })?
+        };
+        match ready.recv() {
+            Some(Ok(())) => {}
+            Some(Err(e)) => {
+                jobs.close();
+                let _ = router_handle.join();
+                return Err(anyhow!("engine pool failed to start: {e}"));
             }
+            None => return Err(anyhow!("engine pool start interrupted")),
         }
         // Sanitize: Duration::from_secs_f64 panics on negative/NaN/∞.
         let timeout = cfg.gateway.request_timeout_s;
@@ -344,9 +304,8 @@ impl LiveStack {
         Ok(LiveStack {
             jobs,
             metrics,
-            tier_queues,
-            ctls,
-            threads,
+            shared,
+            router: Some(router_handle),
             request_timeout_s,
         })
     }
@@ -354,16 +313,18 @@ impl LiveStack {
     /// Serve one prompt (blocks until a replica answers or the request
     /// timeout elapses).
     ///
-    /// A timeout abandons the *reply*, not the work: the sequence has no
-    /// mid-flight cancellation yet, so it decodes to completion server
-    /// side and still counts in `completed`/`tokens_out`; the timeout
-    /// itself is counted in `timeouts`.
+    /// A timeout fires the job's cancel token: the sequence is evicted
+    /// at the scheduler's next tick, freeing its slot and KV reservation
+    /// early instead of decoding to completion (`ps_cancelled_total`
+    /// counts the evictions, `ps_timeouts_total` the abandonments).
     pub fn complete(&self, prompt: &str, max_tokens: usize) -> Result<LiveResponse> {
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         let reply: OneShot<Result<LiveResponse, String>> = OneShot::new();
+        let cancel = CancelToken::new();
         let job = Job {
             prompt: prompt.to_string(),
             max_tokens,
+            cancel: cancel.clone(),
             reply: reply.clone(),
         };
         if self.jobs.try_send(job).is_err() {
@@ -374,26 +335,30 @@ impl LiveStack {
             Some(out) => out.map_err(|e| anyhow!(e)),
             None => {
                 self.metrics.timeouts.fetch_add(1, Ordering::Relaxed);
+                cancel.cancel();
                 Err(anyhow!("request timed out"))
             }
         }
     }
 
-    /// Active (unparked) replicas across all tiers — the scale-to-zero
-    /// observable.
+    /// Live (provisioned) replicas across all tiers — the scale-to-zero
+    /// observable. Counts Scheduled/Loading/Ready; terminated replicas
+    /// leave the count the moment they drain.
     pub fn active_replicas(&self) -> usize {
-        self.ctls
-            .iter()
-            .map(|c| c.target.load(Ordering::Relaxed))
-            .sum()
+        self.shared.live_total()
     }
 
     /// Occupied decode slots across the pool.
     pub fn slots_in_use(&self) -> usize {
-        self.ctls
-            .iter()
-            .map(|c| c.slots_in_use.load(Ordering::Relaxed))
-            .sum()
+        self.shared.slots_in_use()
+    }
+
+    /// Fault-injection hook for recovery experiments: abruptly kill one
+    /// Ready replica of `tier` (0 = small, 1 = medium, 2 = large). Its
+    /// in-flight jobs requeue, the control plane records an `Incident`
+    /// and redeploys. Returns whether a victim existed.
+    pub fn inject_replica_failure(&self, tier: usize) -> bool {
+        self.shared.inject_failure(tier.min(2))
     }
 
     /// The `/metrics` exposition snapshot.
@@ -409,19 +374,28 @@ impl LiveStack {
             ("ps_batched_total".to_string(), c(&m.batched)),
             ("ps_decode_steps_total".to_string(), c(&m.decode_steps)),
             ("ps_prefill_total".to_string(), c(&m.prefills)),
+            ("ps_prefill_batched_total".to_string(), c(&m.prefill_batched)),
             (
                 "ps_queue_wait_seconds_total".to_string(),
                 m.queue_wait_total_s(),
             ),
             ("ps_cold_wakes_total".to_string(), c(&m.cold_wakes)),
             ("ps_timeouts_total".to_string(), c(&m.timeouts)),
+            ("ps_cancelled_total".to_string(), c(&m.cancelled)),
+            ("ps_requeued_total".to_string(), c(&m.requeued)),
+            ("ps_incidents_total".to_string(), c(&m.incidents)),
+            ("ps_recovered_total".to_string(), c(&m.recovered)),
+            (
+                "ps_recovery_seconds_total".to_string(),
+                m.recovery_us_total.load(Ordering::Relaxed) as f64 / 1e6,
+            ),
         ];
         for (i, &b) in DECODE_BATCHES.iter().enumerate() {
             out.push((format!("ps_decode_b{b}_total"), c(&m.batch_counts[i])));
         }
         out.push((
             "ps_queue_depth".to_string(),
-            self.tier_queues.iter().map(|q| q.len()).sum::<usize>() as f64,
+            self.shared.queues.iter().map(|q| q.len()).sum::<usize>() as f64,
         ));
         out.push(("ps_slots_in_use".to_string(), self.slots_in_use() as f64));
         out.push((
@@ -439,28 +413,21 @@ impl LiveStack {
 impl Drop for LiveStack {
     fn drop(&mut self) {
         self.jobs.close();
-        // The router (the last thread spawned) drains buffered jobs and
-        // then closes the tier queues itself — join it first so those
-        // jobs route normally instead of bouncing off closed queues.
-        if let Some(router) = self.threads.pop() {
+        // The router drains buffered jobs, then shuts the substrate down
+        // (closing tier queues and joining every replica thread).
+        if let Some(router) = self.router.take() {
             let _ = router.join();
-        }
-        // Normally a no-op; guarantees replica exit if the router died
-        // without closing the queues.
-        for q in &self.tier_queues {
-            q.close();
-        }
-        for t in self.threads.drain(..) {
-            let _ = t.join();
         }
     }
 }
 
 /// Route one prompt against the matrix (Alg. 2): returns the execution
-/// tier, the logical model picked, and the classification.
+/// tier, the logical model picked, and the classification. Cold-start
+/// penalties come from the substrate's measured provision→Ready times.
 fn route_one(
     router: &mut dyn Router,
     registry: &Registry,
+    substrate: &dyn Substrate,
     weights: Weights,
     prompt: &str,
     max_tokens: usize,
@@ -468,86 +435,151 @@ fn route_one(
     let class: Classification = router.route(prompt)?;
     let in_tokens = crate::tokenizer::word_count(prompt).max(1) as f64;
     let out_est = 0.5 * max_tokens as f64;
-    let sel = crate::orchestrator::select(
-        registry, weights, &class, in_tokens, out_est, |_| 0.0,
+    let sel = crate::orchestrator::select_on(
+        registry, substrate, weights, &class, in_tokens, out_est,
     )
     .ok_or_else(|| anyhow!("no routable service"))?;
     let svc = registry.get(sel.service);
     Ok((svc.spec.tier, svc.spec.name, class))
 }
 
-/// The router thread: drain gateway jobs → classify → per-tier queues,
-/// and run the pool scaler every `scale_interval_s` (also while idle, so
-/// scale-to-zero fires without traffic).
+/// Mirror the substrate's per-tier replica counts into every service of
+/// the registry (the live registry is a routing view; replica state is
+/// owned by the substrate). A tier with a zero thread budget can never
+/// serve and is marked Unhealthy so Alg. 2 routes around it.
+fn sync_registry(registry: &mut Registry, shared: &PoolShared, pool: &PoolConfig) {
+    for ti in 0..3 {
+        let health = if pool.replicas[ti] == 0 {
+            Health::Unhealthy
+        } else {
+            Health::Healthy
+        };
+        registry.set_tier_state(
+            ti,
+            shared.ready_count(ti),
+            shared.pending_count(ti),
+            health,
+        );
+    }
+}
+
+/// Scale-from-zero: provision one replica for a tier that has queued
+/// work but no live capacity (counted as a cold wake).
+fn cold_wake<E, F>(
+    substrate: &mut LocalSubstrate<E, F>,
+    registry: &mut Registry,
+    metrics: &GatewayMetrics,
+    shared: &PoolShared,
+    ti: usize,
+    now_s: f64,
+) where
+    E: StepEngine,
+    F: Fn(Tier, usize) -> std::result::Result<E, String> + Send + Sync + 'static,
+{
+    let sid = substrate.tier_service(ti);
+    {
+        // `apply` provisions up from the registry's current counts;
+        // refresh them for the canonical cell first.
+        let svc = registry.get_mut(sid);
+        svc.ready_replicas = shared.ready_count(ti);
+        svc.pending_replicas = shared.pending_count(ti);
+    }
+    let spawned = crate::orchestrator::scaling::apply(
+        &[ScaleAction::Up { service: sid, target: 1 }],
+        registry,
+        substrate,
+        now_s,
+    );
+    if !spawned.is_empty() {
+        metrics.cold_wakes.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// The router/control thread: drain gateway jobs → classify → per-tier
+/// queues, and every `scale_interval_s` run one control pass — substrate
+/// lifecycle poll → recovery → Alg. 1 per tier — also while idle, so
+/// scale-to-zero fires without traffic.
 #[allow(clippy::too_many_arguments)]
-fn router_loop(
+fn router_loop<E, F>(
     mut router: Box<dyn Router>,
     jobs: Channel<Job>,
-    tier_queues: Vec<Channel<TierJob>>,
-    ctls: Vec<Arc<TierControl>>,
+    mut substrate: LocalSubstrate<E, F>,
+    mut registry: Registry,
     metrics: Arc<GatewayMetrics>,
-    epoch: Instant,
     pool: PoolConfig,
-    orch: crate::config::OrchestratorConfig,
-    profile: crate::config::Profile,
-) {
-    let zoo_models = zoo();
-    let mut registry = Registry::new(&zoo_models, orch.telemetry_window_s);
-    for s in &mut registry.services {
-        // Live replicas are the pool's engine threads for that tier. A
-        // tier provisioned with zero replicas can never serve: mark its
-        // services unhealthy so Alg. 2 routes around them instead of
-        // hard-failing every request it sends there.
-        let n = pool.replicas[s.spec.tier.index()];
-        s.ready_replicas = n;
-        if n == 0 {
-            s.health = crate::registry::Health::Unhealthy;
-        }
-    }
+    orch: OrchestratorConfig,
+    profile: Profile,
+) where
+    E: StepEngine,
+    F: Fn(Tier, usize) -> std::result::Result<E, String> + Send + Sync + 'static,
+{
+    let shared = substrate.shared();
     let weights = Weights::from_profile(&profile);
-    let mut scaler = PoolScaler::new(orch, pool.max_inflight);
-    let mut last_scale = 0.0f64;
+    // Alg. 1 over the three tiers, demand = queue depth + slot occupancy.
+    let mut scaler = Scaler::for_pool(orch, 3, pool.max_inflight.max(1));
+    let mut recovery = RecoveryManager::new(true);
+    sync_registry(&mut registry, &shared, &pool);
+    let mut last_ctl = f64::NEG_INFINITY;
     loop {
         let job = jobs.recv_timeout(Duration::from_millis(100));
-        let now = epoch.elapsed().as_secs_f64();
+        let now = shared.epoch.elapsed().as_secs_f64();
         if let Some(job) = job {
-            match route_one(&mut *router, &registry, weights, &job.prompt, job.max_tokens)
-            {
-                Err(e) => {
-                    metrics.errors.fetch_add(1, Ordering::Relaxed);
-                    job.reply.put(Err(format!("{e:#}")));
-                }
-                Ok((tier, model, class)) => {
-                    // Zero-replica tiers were marked Unhealthy at
-                    // registry init, so Alg. 2 cannot select one here.
-                    let ti = tier.index();
-                    let tj = TierJob {
-                        prompt: job.prompt,
-                        max_tokens: job.max_tokens,
-                        enqueue_s: now,
-                        ttft_s: 0.0,
-                        queue_wait_s: 0.0,
-                        reply: job.reply,
-                        tier,
-                        model,
-                        complexity: class.complexity,
-                        confidence: class.confidence,
-                    };
-                    match tier_queues[ti].try_send(tj) {
-                        Ok(()) => {
-                            ctls[ti]
-                                .last_enqueue_us
-                                .store((now * 1e6) as u64, Ordering::Relaxed);
-                            // Scale-from-zero: wake a parked tier now
-                            // rather than waiting for the next plan.
-                            if ctls[ti].target.fetch_max(1, Ordering::Relaxed) == 0 {
-                                metrics.cold_wakes.fetch_add(1, Ordering::Relaxed);
+            if job.cancel.is_cancelled() {
+                // The caller gave up while the job sat in the gateway
+                // queue; don't spend routing on it.
+                metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+            } else {
+                match route_one(
+                    &mut *router,
+                    &registry,
+                    &substrate,
+                    weights,
+                    &job.prompt,
+                    job.max_tokens,
+                ) {
+                    Err(e) => {
+                        metrics.errors.fetch_add(1, Ordering::Relaxed);
+                        job.reply.put(Err(format!("{e:#}")));
+                    }
+                    Ok((tier, model, class)) => {
+                        // Zero-budget tiers are Unhealthy in the synced
+                        // registry, so Alg. 2 cannot select one here.
+                        let ti = tier.index();
+                        let tj = TierJob {
+                            prompt: job.prompt,
+                            max_tokens: job.max_tokens,
+                            enqueue_s: now,
+                            ttft_s: 0.0,
+                            queue_wait_s: 0.0,
+                            counted_wait_s: 0.0,
+                            reply: job.reply,
+                            cancel: job.cancel,
+                            tier,
+                            model,
+                            complexity: class.complexity,
+                            confidence: class.confidence,
+                        };
+                        match shared.queues[ti].try_send(tj) {
+                            Ok(()) => {
+                                shared.last_enqueue_us[ti]
+                                    .store((now * 1e6) as u64, Ordering::Relaxed);
+                                if shared.live_count(ti) == 0 {
+                                    cold_wake(
+                                        &mut substrate,
+                                        &mut registry,
+                                        &metrics,
+                                        &shared,
+                                        ti,
+                                        now,
+                                    );
+                                }
                             }
-                        }
-                        Err(tj) => {
-                            metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                            tj.reply
-                                .put(Err("tier queue full (backpressure)".to_string()));
+                            Err(tj) => {
+                                metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                                tj.reply.put(Err(
+                                    "tier queue full (backpressure)".to_string()
+                                ));
+                            }
                         }
                     }
                 }
@@ -555,218 +587,60 @@ fn router_loop(
         } else if jobs.is_closed() && jobs.is_empty() {
             break;
         }
-        if now - last_scale >= pool.scale_interval_s {
-            last_scale = now;
+        if now - last_ctl >= pool.scale_interval_s {
+            last_ctl = now;
+            // Lifecycle first: failures (panic / stall / injected) become
+            // Incidents; recovery redeploys through the Substrate trait —
+            // the same code path the simulator's Table 4 runs take.
+            let events = substrate.poll(now);
+            if !events.is_empty() {
+                recovery.on_events(&events, &mut registry, &mut substrate, now);
+            }
+            metrics
+                .incidents
+                .store(recovery.incidents.len() as u64, Ordering::Relaxed);
+            metrics
+                .recovered
+                .store(recovery.recovered() as u64, Ordering::Relaxed);
+            metrics.recovery_us_total.store(
+                (recovery.total_recovery_s() * 1e6) as u64,
+                Ordering::Relaxed,
+            );
+            sync_registry(&mut registry, &shared, &pool);
             for ti in 0..3 {
                 let load = TierLoad {
-                    queue_depth: tier_queues[ti].len(),
-                    slots_in_use: ctls[ti].slots_in_use.load(Ordering::Relaxed),
-                    active_replicas: ctls[ti].target.load(Ordering::Relaxed),
+                    queue_depth: shared.queues[ti].len(),
+                    slots_in_use: shared.slots_in_tier(ti),
+                    active_replicas: shared.live_count(ti),
                     idle_s: now
-                        - ctls[ti].last_enqueue_us.load(Ordering::Relaxed) as f64 / 1e6,
+                        - shared.last_enqueue_us[ti].load(Ordering::Relaxed) as f64
+                            / 1e6,
                 };
-                let target = scaler.target(ti, load, pool.replicas[ti], now);
-                ctls[ti].target.store(target, Ordering::Relaxed);
-            }
-        }
-    }
-    for q in &tier_queues {
-        q.close();
-    }
-}
-
-/// Everything one replica thread needs besides its engine.
-struct ReplicaCtx {
-    index: usize,
-    queue: Channel<TierJob>,
-    ctl: Arc<TierControl>,
-    metrics: Arc<GatewayMetrics>,
-    epoch: Instant,
-    pool: PoolConfig,
-}
-
-/// Publish this replica's slot occupancy into the tier aggregate.
-fn sync_occupancy(ctl: &TierControl, reported: &mut usize, current: usize) {
-    if current > *reported {
-        ctl.slots_in_use
-            .fetch_add(current - *reported, Ordering::Relaxed);
-    } else if current < *reported {
-        ctl.slots_in_use
-            .fetch_sub(*reported - current, Ordering::Relaxed);
-    }
-    *reported = current;
-}
-
-/// Try to move one routed job into the scheduler. Returns the job back
-/// when the replica has no slot/KV headroom right now.
-fn admit_job<E: StepEngine>(
-    sched: &mut Scheduler<E, TierJob>,
-    mut job: TierJob,
-    ctx: &ReplicaCtx,
-) -> Option<TierJob> {
-    let now = ctx.epoch.elapsed().as_secs_f64();
-    let est = crate::tokenizer::word_count(&job.prompt).max(1) + 1;
-    job.queue_wait_s = (now - job.enqueue_s).max(0.0);
-    // The payload moves into the scheduler while the prompt is borrowed
-    // for prefill; restore it if the job bounces.
-    let prompt = std::mem::take(&mut job.prompt);
-    match sched.admit(&prompt, job.max_tokens, est, job) {
-        Admit::Admitted => {
-            let done = ctx.epoch.elapsed().as_secs_f64();
-            ctx.metrics.prefills.fetch_add(1, Ordering::Relaxed);
-            if let Some(p) = sched.last_admitted_mut() {
-                ctx.metrics.add_queue_wait_s(p.queue_wait_s);
-                // Prefill produced the first token: that's TTFT.
-                p.ttft_s = (done - p.enqueue_s).max(0.0);
-            }
-            None
-        }
-        Admit::Rejected(mut job) => {
-            job.prompt = prompt;
-            Some(job)
-        }
-        Admit::Failed(job, e) => {
-            ctx.metrics.errors.fetch_add(1, Ordering::Relaxed);
-            job.reply.put(Err(format!("admission failed: {e:#}")));
-            None
-        }
-    }
-}
-
-/// Complete a finished request back to its caller.
-fn finish_job(f: Finished<TierJob>, ctx: &ReplicaCtx) {
-    let now = ctx.epoch.elapsed().as_secs_f64();
-    let job = f.payload;
-    ctx.metrics.completed.fetch_add(1, Ordering::Relaxed);
-    ctx.metrics
-        .tokens_out
-        .fetch_add(f.tokens.len() as u64, Ordering::Relaxed);
-    job.reply.put(Ok(LiveResponse {
-        tokens: f.tokens,
-        tier: job.tier.name().to_string(),
-        model: job.model,
-        complexity: job.complexity,
-        confidence: job.confidence,
-        ttft_s: job.ttft_s,
-        latency_s: (now - job.enqueue_s).max(0.0),
-        queue_wait_s: job.queue_wait_s,
-        prompt_tokens: f.prompt_tokens,
-    }));
-}
-
-/// One replica's serving loop: admit → batch-decode → retire, with
-/// flush-timeout holds that wake early on new arrivals, and parking when
-/// the scaler's target drops below this replica's index.
-fn replica_loop<E: StepEngine>(engine: E, ctx: ReplicaCtx) {
-    // Clamp the batch target to the slot count too: with fewer slots
-    // than the biggest rung, a full replica could otherwise never
-    // "fill" a batch and would eat the flush timeout while saturated.
-    let max_batch = ctx
-        .pool
-        .max_decode_batch
-        .min(engine.max_batch())
-        .min(ctx.pool.max_inflight.max(1))
-        .max(1);
-    let policy = BatchPolicy::custom(max_batch, 1, ctx.pool.flush_timeout_s);
-    let mut sched: Scheduler<E, TierJob> = Scheduler::new(
-        engine,
-        SchedulerConfig {
-            policy,
-            max_inflight: ctx.pool.max_inflight.max(1),
-            kv_blocks: ctx.pool.kv_blocks.max(1),
-            kv_block_tokens: ctx.pool.kv_block_tokens.max(1),
-        },
-    );
-    let mut held: Option<TierJob> = None;
-    let mut reported = 0usize;
-    loop {
-        let active = ctx.index < ctx.ctl.target.load(Ordering::Relaxed);
-        // Admit as much as fits. A parked replica stops pulling from the
-        // queue but still finishes a held job and drains its slots.
-        if active || held.is_some() {
-            loop {
-                let job = match held.take().or_else(|| {
-                    if active {
-                        ctx.queue.try_recv()
-                    } else {
-                        None
-                    }
-                }) {
-                    Some(j) => j,
-                    None => break,
-                };
-                match admit_job(&mut sched, job, &ctx) {
-                    None => continue,
-                    Some(back) => {
-                        held = Some(back);
-                        break;
-                    }
+                if let Some(action) = scaler.plan_tier(
+                    ti,
+                    substrate.tier_service(ti),
+                    load,
+                    pool.replicas[ti],
+                    now,
+                ) {
+                    crate::orchestrator::scaling::apply(
+                        &[action],
+                        &mut registry,
+                        &mut substrate,
+                        now,
+                    );
+                }
+                // Orphan guard: queued work must never sit in front of a
+                // fully-parked tier (a job can land between the load
+                // sample and a terminate draining the last replica).
+                if !shared.queues[ti].is_empty() && shared.live_count(ti) == 0 {
+                    cold_wake(&mut substrate, &mut registry, &metrics, &shared, ti, now);
                 }
             }
-        }
-        if sched.inflight() == 0 {
-            sync_occupancy(&ctx.ctl, &mut reported, 0);
-            // Break even with a job still held — the post-loop cleanup
-            // fails it back to its caller instead of spinning forever.
-            if ctx.queue.is_closed() && ctx.queue.is_empty() {
-                break;
-            }
-            if active && held.is_none() {
-                if let Some(j) = ctx.queue.recv_timeout(Duration::from_millis(20)) {
-                    held = Some(j);
-                }
-            } else {
-                // Parked (scale-to-zero): poll coarsely — this bounds
-                // cold-wake latency at ~50 ms while keeping an idle
-                // tier's CPU cost negligible. (A held job cannot persist
-                // at zero inflight — admission fails unserveable
-                // requests outright rather than bouncing them.)
-                std::thread::sleep(Duration::from_millis(50));
-            }
-            continue;
-        }
-        match sched.tick(ctx.epoch.elapsed().as_secs_f64()) {
-            Ok(tick) => {
-                if tick.stepped > 0 {
-                    ctx.metrics.observe_batch(tick.stepped);
-                }
-                for f in tick.finished {
-                    finish_job(f, &ctx);
-                }
-                sync_occupancy(&ctx.ctl, &mut reported, sched.inflight());
-                if tick.stepped == 0 {
-                    if let Some(wait) = tick.wait_s {
-                        // Holding for batch-mates: sleep out the flush
-                        // window, but wake immediately on a new arrival.
-                        let wait = Duration::from_secs_f64(wait.clamp(0.0002, 0.1));
-                        if active && held.is_none() {
-                            if let Some(j) = ctx.queue.recv_timeout(wait) {
-                                held = Some(j);
-                            }
-                        } else {
-                            std::thread::sleep(wait);
-                        }
-                    }
-                }
-            }
-            Err(e) => {
-                let msg = format!("engine step failed: {e:#}");
-                for job in sched.fail_all() {
-                    ctx.metrics.errors.fetch_add(1, Ordering::Relaxed);
-                    job.reply.put(Err(msg.clone()));
-                }
-                sync_occupancy(&ctx.ctl, &mut reported, 0);
-            }
+            sync_registry(&mut registry, &shared, &pool);
         }
     }
-    // Never strand a caller on shutdown.
-    if let Some(job) = held.take() {
-        job.reply.put(Err("gateway shutting down".to_string()));
-    }
-    for job in sched.fail_all() {
-        job.reply.put(Err("gateway shutting down".to_string()));
-    }
-    sync_occupancy(&ctx.ctl, &mut reported, 0);
+    substrate.shutdown();
 }
 
 /// Start the HTTP gateway over a live stack. Returns the bound server.

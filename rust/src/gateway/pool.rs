@@ -1,0 +1,814 @@
+//! LocalSubstrate — the live engine pool as a [`Substrate`].
+//!
+//! Each replica is one OS thread that builds its own engine (PJRT
+//! handles are not `Send`) and runs a
+//! [`crate::backend::scheduler::Scheduler`] over its tier's queue. The
+//! thread publishes its lifecycle through a shared [`ReplicaCell`]:
+//! Scheduled (spawned) → Loading (engine compile/warm-up) → Ready
+//! (scheduler loop running) → Terminating/Gone, or Failed (panic, kill
+//! hook, stalled heartbeat). The router thread owns the substrate and
+//! drives it exactly like the simulator drives its cluster: provision,
+//! terminate, poll for events, hand failures to the
+//! [`crate::orchestrator::recovery::RecoveryManager`].
+//!
+//! Cold-wake latency on the live path is therefore *real*: a
+//! scaled-to-zero tier's next replica pays engine construction in
+//! Loading, and the measured provision→Ready time feeds the same
+//! cold-start estimate Alg. 2 uses for scaled-to-zero penalties.
+
+use std::collections::BTreeMap;
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::backend::batcher::BatchPolicy;
+use crate::backend::scheduler::{
+    Admit, CancelToken, Finished, Scheduler, SchedulerConfig, StepEngine,
+};
+use crate::config::PoolConfig;
+use crate::models::{BackendKind, ModelSpec, Tier};
+use crate::registry::{Registry, ServiceId};
+use crate::substrate::{ReplicaId, ReplicaState, Substrate, SubstrateEvent};
+use crate::util::stats::Ema;
+use crate::util::threadpool::{Channel, OneShot};
+
+use super::{GatewayMetrics, LiveResponse};
+
+/// A routed job queued for one tier's replicas.
+pub(crate) struct TierJob {
+    pub prompt: String,
+    pub max_tokens: usize,
+    /// Seconds (pool epoch) when routing enqueued the job.
+    pub enqueue_s: f64,
+    /// Stamped when prefill completes (first token).
+    pub ttft_s: f64,
+    pub queue_wait_s: f64,
+    /// Wait seconds already added to `ps_queue_wait_seconds_total` —
+    /// a job requeued off a failed replica re-admits, and only the
+    /// delta may count again.
+    pub counted_wait_s: f64,
+    pub reply: OneShot<Result<LiveResponse, String>>,
+    /// Set by a timed-out caller; checked at admission and every tick.
+    pub cancel: CancelToken,
+    pub tier: Tier,
+    pub model: &'static str,
+    pub complexity: usize,
+    pub confidence: f64,
+}
+
+// Replica lifecycle wire encoding (`ReplicaCell::state`).
+const S_SCHEDULED: u8 = 0;
+const S_LOADING: u8 = 1;
+const S_READY: u8 = 2;
+const S_TERMINATING: u8 = 3;
+const S_FAILED: u8 = 4;
+const S_GONE: u8 = 5;
+
+fn decode_state(raw: u8) -> Option<ReplicaState> {
+    match raw {
+        S_SCHEDULED => Some(ReplicaState::Scheduled),
+        S_LOADING => Some(ReplicaState::Loading),
+        S_READY => Some(ReplicaState::Ready),
+        S_TERMINATING => Some(ReplicaState::Terminating),
+        S_FAILED => Some(ReplicaState::Failed),
+        _ => None, // S_GONE: replica no longer exists
+    }
+}
+
+/// Lifecycle mailbox between one replica thread and the control plane.
+pub(crate) struct ReplicaCell {
+    pub state: AtomicU8,
+    /// Last loop heartbeat, µs since the pool epoch (stall detection).
+    pub heartbeat_us: AtomicU64,
+    /// When the replica reached Ready, µs since the pool epoch.
+    pub ready_us: AtomicU64,
+    /// Fault-injection hook: the replica dies abruptly at its next
+    /// heartbeat, requeueing its in-flight work.
+    pub kill: AtomicBool,
+    /// Graceful stop: drain in-flight work, then exit.
+    pub stop: AtomicBool,
+    /// Occupied decode slots (buffered prefills included).
+    pub inflight: AtomicUsize,
+    /// Engine-factory error (set when Loading fails).
+    pub error: Mutex<Option<String>>,
+}
+
+impl ReplicaCell {
+    fn new() -> ReplicaCell {
+        ReplicaCell {
+            state: AtomicU8::new(S_SCHEDULED),
+            heartbeat_us: AtomicU64::new(0),
+            ready_us: AtomicU64::new(0),
+            kill: AtomicBool::new(false),
+            stop: AtomicBool::new(false),
+            inflight: AtomicUsize::new(0),
+            error: Mutex::new(None),
+        }
+    }
+}
+
+/// One tier's replica cells, in provision order.
+type TierCells = Mutex<Vec<(ReplicaId, Arc<ReplicaCell>)>>;
+
+/// State shared between the [`super::LiveStack`] handle (introspection,
+/// fault injection), the router thread (control plane) and the replica
+/// threads (data plane).
+pub(crate) struct PoolShared {
+    pub epoch: Instant,
+    /// Per-tier bounded job queues (router → replicas).
+    pub queues: Vec<Channel<TierJob>>,
+    /// Per-tier replica cells.
+    pub cells: Vec<TierCells>,
+    /// Last enqueue per tier, µs since the pool epoch (idle tracking).
+    pub last_enqueue_us: [AtomicU64; 3],
+}
+
+impl PoolShared {
+    pub fn new(epoch: Instant, queue_capacity: usize) -> PoolShared {
+        PoolShared {
+            epoch,
+            queues: (0..3).map(|_| Channel::bounded(queue_capacity.max(1))).collect(),
+            cells: (0..3).map(|_| Mutex::new(Vec::new())).collect(),
+            last_enqueue_us: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    fn count_states(&self, tier: usize, pred: impl Fn(u8) -> bool) -> usize {
+        self.cells[tier]
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(_, c)| pred(c.state.load(Ordering::Acquire)))
+            .count()
+    }
+
+    /// Replicas holding capacity in a tier (pre-Ready or Ready).
+    pub fn live_count(&self, tier: usize) -> usize {
+        self.count_states(tier, |s| s <= S_READY)
+    }
+
+    pub fn ready_count(&self, tier: usize) -> usize {
+        self.count_states(tier, |s| s == S_READY)
+    }
+
+    pub fn pending_count(&self, tier: usize) -> usize {
+        self.count_states(tier, |s| s == S_SCHEDULED || s == S_LOADING)
+    }
+
+    /// Live replicas across the pool — the scale-to-zero observable.
+    pub fn live_total(&self) -> usize {
+        (0..3).map(|t| self.live_count(t)).sum()
+    }
+
+    /// Occupied decode slots across the pool.
+    pub fn slots_in_use(&self) -> usize {
+        self.cells
+            .iter()
+            .map(|m| {
+                m.lock()
+                    .unwrap()
+                    .iter()
+                    .map(|(_, c)| c.inflight.load(Ordering::Relaxed))
+                    .sum::<usize>()
+            })
+            .sum()
+    }
+
+    pub fn slots_in_tier(&self, tier: usize) -> usize {
+        self.cells[tier]
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(_, c)| c.inflight.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Fault-injection hook: kill one Ready replica of `tier` abruptly
+    /// (its in-flight work is requeued, the control plane detects the
+    /// failure and redeploys). Returns whether a victim existed.
+    pub fn inject_failure(&self, tier: usize) -> bool {
+        for (_, c) in self.cells[tier].lock().unwrap().iter() {
+            if c.state.load(Ordering::Acquire) == S_READY
+                && !c.kill.swap(true, Ordering::Relaxed)
+            {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+struct ReplicaMeta {
+    tier: usize,
+    service: ServiceId,
+    cell: Arc<ReplicaCell>,
+    created_s: f64,
+    /// Last state surfaced through `poll` (transition edge detection).
+    reported: ReplicaState,
+}
+
+/// The live engine pool behind the [`Substrate`] trait. Owned by the
+/// router thread; `E` is the engine type its replica threads build.
+pub(crate) struct LocalSubstrate<E, F>
+where
+    E: StepEngine,
+    F: Fn(Tier, usize) -> Result<E, String> + Send + Sync + 'static,
+{
+    shared: Arc<PoolShared>,
+    pool: PoolConfig,
+    metrics: Arc<GatewayMetrics>,
+    factory: Arc<F>,
+    /// ServiceId.0 → tier index (from the registry's model zoo).
+    svc_tier: Vec<usize>,
+    /// Canonical registry cell per tier (events are keyed by it).
+    tier_service: [ServiceId; 3],
+    meta: BTreeMap<ReplicaId, ReplicaMeta>,
+    handles: BTreeMap<ReplicaId, JoinHandle<()>>,
+    next_id: u64,
+    next_index: [usize; 3],
+    /// Measured provision→Ready seconds per tier (Alg. 2's cold-start
+    /// estimate for scaled-to-zero tiers).
+    cold_start_ema: [Ema; 3],
+    _engine: PhantomData<fn() -> E>,
+}
+
+impl<E, F> LocalSubstrate<E, F>
+where
+    E: StepEngine,
+    F: Fn(Tier, usize) -> Result<E, String> + Send + Sync + 'static,
+{
+    pub fn new(
+        shared: Arc<PoolShared>,
+        pool: PoolConfig,
+        metrics: Arc<GatewayMetrics>,
+        factory: F,
+        registry: &Registry,
+    ) -> LocalSubstrate<E, F> {
+        let svc_tier: Vec<usize> =
+            registry.services.iter().map(|s| s.spec.tier.index()).collect();
+        let tier_service = std::array::from_fn(|ti| {
+            registry
+                .services
+                .iter()
+                .find(|s| s.spec.tier.index() == ti)
+                .map(|s| s.id)
+                .unwrap_or(ServiceId(0))
+        });
+        LocalSubstrate {
+            shared,
+            pool,
+            metrics,
+            factory: Arc::new(factory),
+            svc_tier,
+            tier_service,
+            meta: BTreeMap::new(),
+            handles: BTreeMap::new(),
+            next_id: 0,
+            next_index: [0; 3],
+            cold_start_ema: std::array::from_fn(|_| Ema::new(0.3)),
+            _engine: PhantomData,
+        }
+    }
+
+    pub fn shared(&self) -> Arc<PoolShared> {
+        Arc::clone(&self.shared)
+    }
+
+    /// The canonical registry cell a tier's replicas report under.
+    pub fn tier_service(&self, tier: usize) -> ServiceId {
+        self.tier_service[tier.min(2)]
+    }
+
+    fn tier_of(&self, service: ServiceId) -> usize {
+        self.svc_tier.get(service.0).copied().unwrap_or(0)
+    }
+
+    /// Block until every provisioned replica reports Ready; an engine
+    /// factory failure (or a replica thread dying during warm-up)
+    /// surfaces as the error.
+    pub fn wait_warm(&mut self) -> Result<(), String> {
+        loop {
+            let mut all_ready = true;
+            for (id, m) in &self.meta {
+                match m.cell.state.load(Ordering::Acquire) {
+                    S_READY => {}
+                    S_FAILED => {
+                        return Err(m
+                            .cell
+                            .error
+                            .lock()
+                            .unwrap()
+                            .take()
+                            .unwrap_or_else(|| "replica died during warm-up".into()));
+                    }
+                    _ => {
+                        if self.handles.get(id).map(|h| h.is_finished()).unwrap_or(true)
+                        {
+                            return Err(
+                                "replica thread exited during warm-up".to_string()
+                            );
+                        }
+                        all_ready = false;
+                    }
+                }
+            }
+            if all_ready {
+                return Ok(());
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    /// Close the queues, stop every replica, and join the threads.
+    pub fn shutdown(&mut self) {
+        for q in &self.shared.queues {
+            q.close();
+        }
+        for m in self.meta.values() {
+            m.cell.stop.store(true, Ordering::Relaxed);
+        }
+        for (_, h) in std::mem::take(&mut self.handles) {
+            let _ = h.join();
+        }
+        self.meta.clear();
+        for c in &self.shared.cells {
+            c.lock().unwrap().clear();
+        }
+    }
+
+    fn remove_replica(&mut self, id: ReplicaId, tier: usize) {
+        self.meta.remove(&id);
+        self.shared.cells[tier].lock().unwrap().retain(|(rid, _)| *rid != id);
+        if let Some(h) = self.handles.remove(&id) {
+            if h.is_finished() {
+                let _ = h.join();
+            }
+            // A live (stalled) thread is detached: its kill flag is set,
+            // so it exits the moment it unsticks.
+        }
+    }
+}
+
+impl<E, F> Substrate for LocalSubstrate<E, F>
+where
+    E: StepEngine,
+    F: Fn(Tier, usize) -> Result<E, String> + Send + Sync + 'static,
+{
+    fn provision(
+        &mut self,
+        service: ServiceId,
+        _model_idx: usize,
+        spec: &ModelSpec,
+        _backend: BackendKind,
+        now_s: f64,
+    ) -> Option<ReplicaId> {
+        let ti = spec.tier.index();
+        // The tier's configured replica count is its provisioned ceiling
+        // (thread budget); zero means the tier cannot serve at all.
+        if self.shared.live_count(ti) >= self.pool.replicas[ti] {
+            return None;
+        }
+        let cell = Arc::new(ReplicaCell::new());
+        let id = ReplicaId(self.next_id);
+        self.next_id += 1;
+        let index = self.next_index[ti];
+        self.next_index[ti] += 1;
+        let tier = Tier::ALL[ti];
+        let ctx = ReplicaCtx {
+            queue: self.shared.queues[ti].clone(),
+            cell: Arc::clone(&cell),
+            metrics: Arc::clone(&self.metrics),
+            epoch: self.shared.epoch,
+            pool: self.pool.clone(),
+        };
+        let factory = Arc::clone(&self.factory);
+        let handle = std::thread::Builder::new()
+            .name(format!("engine-{}-{index}", tier.name()))
+            .spawn(move || {
+                // Engines are built on this thread (not Send).
+                ctx.cell.state.store(S_LOADING, Ordering::Release);
+                match (*factory)(tier, index) {
+                    Ok(engine) => replica_loop(engine, ctx),
+                    Err(e) => {
+                        *ctx.cell.error.lock().unwrap() = Some(e);
+                        ctx.cell.state.store(S_FAILED, Ordering::Release);
+                    }
+                }
+            })
+            .ok()?;
+        self.shared.cells[ti].lock().unwrap().push((id, Arc::clone(&cell)));
+        self.meta.insert(id, ReplicaMeta {
+            tier: ti,
+            service,
+            cell,
+            created_s: now_s,
+            reported: ReplicaState::Scheduled,
+        });
+        self.handles.insert(id, handle);
+        Some(id)
+    }
+
+    fn terminate(&mut self, replica: ReplicaId, _now_s: f64) {
+        if let Some(m) = self.meta.get(&replica) {
+            m.cell.stop.store(true, Ordering::Relaxed);
+            // Control-side state so Ready counts drop immediately; the
+            // thread overwrites with Gone once drained.
+            let _ = m.cell.state.compare_exchange(
+                S_READY,
+                S_TERMINATING,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            );
+        }
+    }
+
+    /// Failure is asynchronous on the live substrate: the kill hook
+    /// fires at the replica's next heartbeat and the `ReplicaFailed`
+    /// event surfaces through [`Self::poll`], mirroring how a real crash
+    /// is observed.
+    fn fail(&mut self, replica: ReplicaId, _now_s: f64) -> Option<SubstrateEvent> {
+        if let Some(m) = self.meta.get(&replica) {
+            m.cell.kill.store(true, Ordering::Relaxed);
+        }
+        None
+    }
+
+    fn poll(&mut self, now_s: f64) -> Vec<SubstrateEvent> {
+        let mut out = Vec::new();
+        let ids: Vec<ReplicaId> = self.meta.keys().copied().collect();
+        for id in ids {
+            let (tier, service, created_s, reported, cell) = {
+                let m = &self.meta[&id];
+                (m.tier, m.service, m.created_s, m.reported, Arc::clone(&m.cell))
+            };
+            let raw = cell.state.load(Ordering::Acquire);
+            let thread_dead = self
+                .handles
+                .get(&id)
+                .map(|h| h.is_finished())
+                .unwrap_or(true);
+            let stalled = raw == S_READY && {
+                let hb = cell.heartbeat_us.load(Ordering::Relaxed) as f64 / 1e6;
+                now_s - hb > self.pool.health_deadline_s.max(0.001)
+            };
+            let failed = raw == S_FAILED
+                || stalled
+                || (thread_dead && raw != S_GONE && raw != S_FAILED);
+            if failed {
+                if stalled {
+                    // If the thread is merely stuck it exits (and
+                    // requeues its work) the moment it unsticks.
+                    cell.kill.store(true, Ordering::Relaxed);
+                }
+                out.push(SubstrateEvent::ReplicaFailed {
+                    replica: id,
+                    service,
+                    at_s: now_s,
+                });
+                self.remove_replica(id, tier);
+                continue;
+            }
+            if raw == S_GONE {
+                out.push(SubstrateEvent::ReplicaGone {
+                    replica: id,
+                    service,
+                    at_s: now_s,
+                });
+                self.remove_replica(id, tier);
+                continue;
+            }
+            if raw == S_READY && reported != ReplicaState::Ready {
+                let ready_s = cell.ready_us.load(Ordering::Relaxed) as f64 / 1e6;
+                let cold = (ready_s - created_s).max(0.0);
+                self.cold_start_ema[tier].observe(cold);
+                out.push(SubstrateEvent::ReplicaReady {
+                    replica: id,
+                    service,
+                    at_s: ready_s.max(created_s),
+                    cold_start_s: cold,
+                });
+                if let Some(m) = self.meta.get_mut(&id) {
+                    m.reported = ReplicaState::Ready;
+                }
+            }
+        }
+        out
+    }
+
+    fn replica_state(&self, replica: ReplicaId) -> Option<ReplicaState> {
+        self.meta
+            .get(&replica)
+            .and_then(|m| decode_state(m.cell.state.load(Ordering::Acquire)))
+    }
+
+    fn ready_replicas(&self, service: ServiceId) -> Vec<ReplicaId> {
+        let ti = self.tier_of(service);
+        self.meta
+            .iter()
+            .filter(|(_, m)| {
+                m.tier == ti
+                    && m.cell.state.load(Ordering::Acquire) == S_READY
+                    && !m.cell.stop.load(Ordering::Relaxed)
+            })
+            .map(|(id, _)| *id)
+            .collect()
+    }
+
+    fn pending_replicas(&self, service: ServiceId) -> usize {
+        self.shared.pending_count(self.tier_of(service))
+    }
+
+    fn estimate_cold_start_s(&self, spec: &ModelSpec, _backend: BackendKind) -> f64 {
+        // Prior before the first measured cold start: a conservative
+        // engine-construction guess.
+        self.cold_start_ema[spec.tier.index()].get_or(0.5)
+    }
+}
+
+/// Everything one replica thread needs besides its engine.
+pub(crate) struct ReplicaCtx {
+    pub queue: Channel<TierJob>,
+    pub cell: Arc<ReplicaCell>,
+    pub metrics: Arc<GatewayMetrics>,
+    pub epoch: Instant,
+    pub pool: PoolConfig,
+}
+
+/// Try to move one routed job into the scheduler. Returns the job back
+/// when the replica has no slot/KV headroom right now.
+fn admit_job<E: StepEngine>(
+    sched: &mut Scheduler<E, TierJob>,
+    mut job: TierJob,
+    ctx: &ReplicaCtx,
+) -> Option<TierJob> {
+    if job.cancel.is_cancelled() {
+        // The caller already timed out; don't spend prefill on it.
+        ctx.metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+        return None;
+    }
+    let now = ctx.epoch.elapsed().as_secs_f64();
+    let est = crate::tokenizer::word_count(&job.prompt).max(1) + 1;
+    job.queue_wait_s = (now - job.enqueue_s).max(0.0);
+    // The scheduler buffers its own copy of the prompt for the prefill
+    // rung; the payload keeps the original so a dying replica can
+    // requeue the job intact.
+    let prompt = std::mem::take(&mut job.prompt);
+    let cancel = job.cancel.clone();
+    match sched.admit_cancellable(&prompt, job.max_tokens, est, job, cancel) {
+        Admit::Admitted => {
+            if let Some(p) = sched.last_admitted_mut() {
+                ctx.metrics
+                    .add_queue_wait_s((p.queue_wait_s - p.counted_wait_s).max(0.0));
+                p.counted_wait_s = p.queue_wait_s;
+                p.prompt = prompt;
+            }
+            None
+        }
+        Admit::Rejected(mut job) => {
+            job.prompt = prompt;
+            Some(job)
+        }
+        Admit::Failed(job, e) => {
+            ctx.metrics.errors.fetch_add(1, Ordering::Relaxed);
+            job.reply.put(Err(format!("admission failed: {e:#}")));
+            None
+        }
+    }
+}
+
+/// Complete a finished request back to its caller.
+fn finish_job(f: Finished<TierJob>, ctx: &ReplicaCtx) {
+    let now = ctx.epoch.elapsed().as_secs_f64();
+    let job = f.payload;
+    ctx.metrics.completed.fetch_add(1, Ordering::Relaxed);
+    ctx.metrics
+        .tokens_out
+        .fetch_add(f.tokens.len() as u64, Ordering::Relaxed);
+    job.reply.put(Ok(LiveResponse {
+        tokens: f.tokens,
+        tier: job.tier.name().to_string(),
+        model: job.model,
+        complexity: job.complexity,
+        confidence: job.confidence,
+        ttft_s: job.ttft_s,
+        latency_s: (now - job.enqueue_s).max(0.0),
+        queue_wait_s: job.queue_wait_s,
+        prompt_tokens: f.prompt_tokens,
+    }));
+}
+
+/// Abrupt death (kill hook / injected fault): requeue in-flight jobs so
+/// traffic drains without loss on the replacement replica, then report
+/// Failed.
+fn die_abruptly<E: StepEngine>(
+    sched: &mut Scheduler<E, TierJob>,
+    held: Option<TierJob>,
+    ctx: &ReplicaCtx,
+) {
+    for job in held.into_iter().chain(sched.fail_all()) {
+        if job.cancel.is_cancelled() {
+            ctx.metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+            continue;
+        }
+        match ctx.queue.try_send(job) {
+            Ok(()) => {
+                ctx.metrics.requeued.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(job) => {
+                ctx.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                job.reply.put(Err("replica failed".to_string()));
+            }
+        }
+    }
+    ctx.cell.inflight.store(0, Ordering::Relaxed);
+    ctx.cell.state.store(S_FAILED, Ordering::Release);
+}
+
+/// One replica's serving loop: admit → prefill rungs → batch-decode →
+/// retire, with flush-timeout holds that wake early on new arrivals.
+/// Runs until killed, stopped (graceful drain), or the queue closes.
+pub(crate) fn replica_loop<E: StepEngine>(engine: E, ctx: ReplicaCtx) {
+    // Clamp the batch target to the slot count too: with fewer slots
+    // than the biggest rung, a full replica could otherwise never
+    // "fill" a batch and would eat the flush timeout while saturated.
+    let max_batch = ctx
+        .pool
+        .max_decode_batch
+        .min(engine.max_batch())
+        .min(ctx.pool.max_inflight.max(1))
+        .max(1);
+    let max_prefill = ctx
+        .pool
+        .max_prefill_batch
+        .min(ctx.pool.max_inflight.max(1))
+        .max(1);
+    let policy = BatchPolicy::custom(max_batch, max_prefill, ctx.pool.flush_timeout_s);
+    let mut sched: Scheduler<E, TierJob> = Scheduler::new(
+        engine,
+        SchedulerConfig {
+            policy,
+            max_inflight: ctx.pool.max_inflight.max(1),
+            kv_blocks: ctx.pool.kv_blocks.max(1),
+            kv_block_tokens: ctx.pool.kv_block_tokens.max(1),
+        },
+    );
+    let mut held: Option<TierJob> = None;
+    // A replica whose engine errors on every step must not stay Ready
+    // and black-hole the tier queue: after this many consecutive failed
+    // ticks it reports Failed and the recovery manager redeploys it.
+    const MAX_CONSECUTIVE_ENGINE_ERRORS: usize = 3;
+    let mut engine_errors = 0usize;
+    // Seed the heartbeat before publishing Ready: stall detection runs
+    // `now - heartbeat` the moment the state reads Ready, and a zero
+    // heartbeat would look minutes stale on a long-lived pool.
+    let warm_us = ctx.epoch.elapsed().as_micros() as u64;
+    ctx.cell.heartbeat_us.store(warm_us, Ordering::Relaxed);
+    ctx.cell.ready_us.store(warm_us, Ordering::Relaxed);
+    ctx.cell.state.store(S_READY, Ordering::Release);
+    loop {
+        ctx.cell
+            .heartbeat_us
+            .store(ctx.epoch.elapsed().as_micros() as u64, Ordering::Relaxed);
+        if ctx.cell.kill.load(Ordering::Relaxed) {
+            die_abruptly(&mut sched, held.take(), &ctx);
+            return;
+        }
+        let stopping = ctx.cell.stop.load(Ordering::Relaxed);
+        // Admit as much as fits. A stopping replica drains its slots but
+        // pulls nothing new.
+        if !stopping {
+            loop {
+                let job = match held.take().or_else(|| ctx.queue.try_recv()) {
+                    Some(j) => j,
+                    None => break,
+                };
+                match admit_job(&mut sched, job, &ctx) {
+                    None => continue,
+                    Some(back) => {
+                        held = Some(back);
+                        break;
+                    }
+                }
+            }
+        }
+        if sched.inflight() == 0 {
+            ctx.cell.inflight.store(0, Ordering::Relaxed);
+            if stopping {
+                break;
+            }
+            // Break even with a job still held — the post-loop cleanup
+            // fails it back to its caller instead of spinning forever.
+            if ctx.queue.is_closed() && ctx.queue.is_empty() {
+                break;
+            }
+            if held.is_none() {
+                if let Some(j) = ctx.queue.recv_timeout(Duration::from_millis(20)) {
+                    held = Some(j);
+                }
+            } else {
+                // A held job cannot persist at zero inflight — admission
+                // fails unserveable requests outright rather than
+                // bouncing them — but guard the spin anyway.
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            continue;
+        }
+        let now = ctx.epoch.elapsed().as_secs_f64();
+        let batched_prefills_before = sched.stats.prefill_batched;
+        // A panic inside the engine (as opposed to an Err) must not
+        // strand the in-flight callers until their timeout: treat it as
+        // a crash — requeue the work and report Failed so the control
+        // plane redeploys. (Payloads inside a mid-panic prefill batch
+        // are unwound with the stack and cannot be recovered; everything
+        // buffered or decoding requeues.)
+        let tick = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            sched.tick_with(now, &mut |job| {
+                // Prefill produced the first token: that's TTFT.
+                job.ttft_s = (now - job.enqueue_s).max(0.0);
+            })
+        })) {
+            Ok(t) => t,
+            Err(_) => {
+                die_abruptly(&mut sched, held.take(), &ctx);
+                return;
+            }
+        };
+        match tick {
+            Ok(tick) => {
+                engine_errors = 0;
+                if tick.prefilled > 0 {
+                    ctx.metrics
+                        .prefills
+                        .fetch_add(tick.prefilled as u64, Ordering::Relaxed);
+                    ctx.metrics.prefill_batched.fetch_add(
+                        sched.stats.prefill_batched - batched_prefills_before,
+                        Ordering::Relaxed,
+                    );
+                }
+                if tick.stepped > 0 {
+                    ctx.metrics.observe_batch(tick.stepped);
+                }
+                for f in tick.finished {
+                    finish_job(f, &ctx);
+                }
+                for _ in tick.cancelled {
+                    // The caller already gave up; just free the slot.
+                    ctx.metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+                }
+                for (job, msg) in tick.failed {
+                    ctx.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    job.reply.put(Err(msg));
+                }
+                ctx.cell.inflight.store(sched.inflight(), Ordering::Relaxed);
+                if tick.stepped == 0 && tick.prefilled == 0 {
+                    if let Some(wait) = tick.wait_s {
+                        // Holding for batch-mates: sleep out the flush
+                        // window, but wake immediately on a new arrival.
+                        let wait = Duration::from_secs_f64(wait.clamp(0.0002, 0.1));
+                        if !stopping && held.is_none() {
+                            if let Some(j) = ctx.queue.recv_timeout(wait) {
+                                held = Some(j);
+                            }
+                        } else {
+                            std::thread::sleep(wait);
+                        }
+                    }
+                }
+            }
+            Err(e) => {
+                let msg = format!("engine step failed: {e:#}");
+                for job in sched.fail_all() {
+                    ctx.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    job.reply.put(Err(msg.clone()));
+                }
+                ctx.cell.inflight.store(0, Ordering::Relaxed);
+                engine_errors += 1;
+                if engine_errors >= MAX_CONSECUTIVE_ENGINE_ERRORS {
+                    // The engine is persistently broken: die so the
+                    // control plane records an Incident and redeploys
+                    // instead of letting this replica eat the queue.
+                    die_abruptly(&mut sched, held.take(), &ctx);
+                    return;
+                }
+            }
+        }
+    }
+    // Never strand a caller: a job held at exit goes back to the queue
+    // for a surviving replica (graceful terminate), or errors out when
+    // the whole pool is shutting down.
+    if let Some(job) = held.take() {
+        match ctx.queue.try_send(job) {
+            Ok(()) => {
+                ctx.metrics.requeued.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(job) => job.reply.put(Err("gateway shutting down".to_string())),
+        }
+    }
+    for job in sched.fail_all() {
+        job.reply.put(Err("gateway shutting down".to_string()));
+    }
+    ctx.cell.inflight.store(0, Ordering::Relaxed);
+    ctx.cell.state.store(S_GONE, Ordering::Release);
+}

@@ -38,6 +38,7 @@ pub mod router;
 pub mod runtime;
 pub mod scoring;
 pub mod sim;
+pub mod substrate;
 pub mod telemetry;
 pub mod testkit;
 pub mod tokenizer;

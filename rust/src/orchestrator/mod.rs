@@ -6,10 +6,14 @@
 //!   pools, cooldowns, and scale-to-zero.
 //! * [`recovery`] — failure detection and automatic redeployment (the
 //!   paper's recovery-time experiments, Table 4).
+//!
+//! All three operate over [`crate::substrate::Substrate`], so the
+//! simulated cluster and the live engine pool are driven by the same
+//! control plane.
 
 pub mod recovery;
 pub mod scaling;
 pub mod selection;
 
-pub use scaling::{PoolScaler, ScaleAction, Scaler, TierLoad};
-pub use selection::{select, Selection};
+pub use scaling::{apply, ScaleAction, Scaler, TierLoad};
+pub use selection::{select, select_on, Selection};

@@ -7,11 +7,16 @@
 //! standbys absorb traffic immediately. This module tracks failures and
 //! replacement readiness, and records the measured recovery latency per
 //! incident.
+//!
+//! It speaks only the [`Substrate`] trait, so the same manager (and the
+//! same [`Incident`] records behind Table 4) runs against the simulated
+//! cluster and the live engine pool: a replica thread that panics or
+//! stalls surfaces as a `ReplicaFailed` event exactly like a killed pod.
 
 use std::collections::BTreeMap;
 
-use crate::cluster::{Cluster, ClusterEvent, PodId};
 use crate::registry::{Health, Registry, ServiceId};
+use crate::substrate::{ReplicaId, Substrate, SubstrateEvent};
 
 /// One tracked failure incident.
 #[derive(Debug, Clone)]
@@ -28,7 +33,7 @@ impl Incident {
     }
 }
 
-/// Watches cluster events, reschedules failed replicas, and records
+/// Watches substrate events, reschedules failed replicas, and records
 /// recovery latency.
 pub struct RecoveryManager {
     pub incidents: Vec<Incident>,
@@ -39,8 +44,8 @@ pub struct RecoveryManager {
     pub auto_redeploy: bool,
     /// Whether warm standbys absorb failures (recovery = rerouting at
     /// detection time) — the paper's "auto" mode. Without it, recovery
-    /// is measured to replacement-pod readiness even if spare replicas
-    /// keep serving.
+    /// is measured to replacement-replica readiness even if spare
+    /// replicas keep serving.
     pub standby_absorbs: bool,
 }
 
@@ -58,24 +63,25 @@ impl RecoveryManager {
         }
     }
 
-    /// Process lifecycle events; returns pods scheduled as replacements.
+    /// Process lifecycle events; returns replicas provisioned as
+    /// replacements.
     pub fn on_events(
         &mut self,
-        events: &[ClusterEvent],
+        events: &[SubstrateEvent],
         registry: &mut Registry,
-        cluster: &mut Cluster,
+        substrate: &mut dyn Substrate,
         now_s: f64,
-    ) -> Vec<PodId> {
+    ) -> Vec<ReplicaId> {
         let mut spawned = Vec::new();
         for ev in events {
             match ev {
-                ClusterEvent::PodFailed { service, at_s, .. } => {
+                SubstrateEvent::ReplicaFailed { service, at_s, .. } => {
                     let idx = self.incidents.len();
                     // Warm standbys absorb failures instantly: if other
                     // ready replicas remain, traffic reroutes and the
                     // incident closes at detection time (the paper's
-                    // 4 s "auto" recovery); the replacement pod still
-                    // schedules in the background.
+                    // 4 s "auto" recovery); the replacement replica
+                    // still provisions in the background.
                     let standby = self.standby_absorbs
                         && registry.get(*service).ready_replicas > 1;
                     self.incidents.push(Incident {
@@ -98,16 +104,16 @@ impl RecoveryManager {
                             let s = registry.get(*service);
                             (s.model_idx, s.spec.clone(), s.backend)
                         };
-                        if let Some(pod) = cluster.schedule(
+                        if let Some(replica) = substrate.provision(
                             *service, model_idx, &spec, backend, now_s,
                         ) {
                             registry.get_mut(*service).pending_replicas += 1;
-                            spawned.push(pod);
+                            spawned.push(replica);
                         }
                     }
                 }
-                ClusterEvent::PodReady { service, at_s, .. } => {
-                    // A ready pod closes the oldest open incident.
+                SubstrateEvent::ReplicaReady { service, at_s, .. } => {
+                    // A ready replica closes the oldest open incident.
                     if let Some(open) = self.open.get_mut(service) {
                         if let Some(idx) = open.first().copied() {
                             self.incidents[idx].recovered_at_s = Some(*at_s);
@@ -119,7 +125,7 @@ impl RecoveryManager {
                         svc.health = Health::Healthy;
                     }
                 }
-                ClusterEvent::PodGone { .. } => {}
+                SubstrateEvent::ReplicaGone { .. } => {}
             }
         }
         spawned
@@ -139,14 +145,24 @@ impl RecoveryManager {
         self.open.get(&service).map(|v| !v.is_empty()).unwrap_or(false)
     }
 
+    /// Closed (recovered) incident count.
+    pub fn recovered(&self) -> usize {
+        self.incidents.iter().filter(|i| i.recovered_at_s.is_some()).count()
+    }
+
+    /// Sum of measured recovery seconds across closed incidents (the
+    /// `/metrics` counter behind `ps_recovery_seconds_total`).
+    pub fn total_recovery_s(&self) -> f64 {
+        self.incidents.iter().filter_map(|i| i.recovery_s()).sum()
+    }
+
     /// Mean recovery time across closed incidents.
     pub fn mean_recovery_s(&self) -> Option<f64> {
-        let closed: Vec<f64> =
-            self.incidents.iter().filter_map(|i| i.recovery_s()).collect();
-        if closed.is_empty() {
+        let n = self.recovered();
+        if n == 0 {
             None
         } else {
-            Some(closed.iter().sum::<f64>() / closed.len() as f64)
+            Some(self.total_recovery_s() / n as f64)
         }
     }
 }
@@ -154,8 +170,10 @@ impl RecoveryManager {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::Cluster;
     use crate::config::ClusterConfig;
     use crate::models::{zoo, BackendKind};
+    use crate::substrate::testing::MockSubstrate;
 
     fn setup() -> (Registry, Cluster) {
         let z = zoo();
@@ -191,6 +209,8 @@ mod tests {
         let rec = rm.mean_recovery_s().unwrap();
         assert!((rec - 6.8).abs() < 0.2, "recovery {rec}");
         assert_eq!(reg.get(svc).health, Health::Healthy);
+        assert_eq!(rm.recovered(), 1);
+        assert!((rm.total_recovery_s() - rec).abs() < 1e-9);
     }
 
     #[test]
@@ -208,6 +228,7 @@ mod tests {
         assert!(spawned.is_empty());
         assert!(rm.has_open(svc));
         assert!(rm.mean_recovery_s().is_none());
+        assert_eq!(rm.total_recovery_s(), 0.0);
     }
 
     #[test]
@@ -215,8 +236,8 @@ mod tests {
         let (mut reg, mut cl) = setup();
         let svc = ServiceId(2);
         reg.get_mut(svc).ready_replicas = 3;
-        let ev = ClusterEvent::PodFailed {
-            pod: crate::cluster::PodId(9),
+        let ev = SubstrateEvent::ReplicaFailed {
+            replica: ReplicaId(9),
             service: svc,
             at_s: 5.0,
         };
@@ -224,5 +245,34 @@ mod tests {
         rm.on_events(&[ev], &mut reg, &mut cl, 5.0);
         assert_eq!(reg.get(svc).ready_replicas, 2);
         assert_eq!(reg.get(svc).health, Health::Degraded);
+    }
+
+    #[test]
+    fn recovery_runs_unchanged_on_a_non_cluster_substrate() {
+        // The same manager against the trait-only mock: proves recovery
+        // has no sim-specific assumptions.
+        let z = zoo();
+        let mut reg = Registry::new(&z, 300.0);
+        let mut sub = MockSubstrate::new(4, 5.0);
+        let svc = ServiceId(0);
+        let first = sub
+            .provision(svc, 0, &z[0], BackendKind::Vllm, 0.0)
+            .unwrap();
+        let evs = sub.poll(5.0);
+        reg.get_mut(svc).ready_replicas = 1;
+        let mut rm = RecoveryManager::new(true);
+        rm.on_events(&evs, &mut reg, &mut sub, 5.0);
+
+        let ev = sub.fail(first, 20.0).unwrap();
+        let spawned = rm.on_events(&[ev], &mut reg, &mut sub, 20.0);
+        assert_eq!(spawned.len(), 1);
+        assert!(rm.has_open(svc));
+
+        let evs = sub.poll(25.0); // replacement Ready at 20 + 5
+        reg.get_mut(svc).ready_replicas += 1;
+        reg.get_mut(svc).pending_replicas = 0;
+        rm.on_events(&evs, &mut reg, &mut sub, 25.0);
+        let rec = rm.mean_recovery_s().unwrap();
+        assert!((rec - 5.0).abs() < 1e-9, "recovery {rec}");
     }
 }

@@ -11,12 +11,18 @@
 //!     elif IdleTime(m) > τ:                       scale(max(0, min_warm))
 //! ```
 //!
-//! The scaler is pure decision logic: it reads the registry and emits
-//! [`ScaleAction`]s; the caller applies them to the cluster (sim or
-//! live). This keeps Alg. 1 unit-testable in isolation.
+//! One scaler serves both control planes. The decision core (cooldown,
+//! warm-pool floor, scale-to-zero) is shared; only the demand estimator
+//! differs: the simulator forecasts with Little's Law from telemetry
+//! ([`Scaler::plan`]), while the live engine pool measures its own
+//! backlog directly — per-tier queue depth plus slot occupancy
+//! ([`Scaler::plan_tier`] over a [`TierLoad`]). Planned actions are
+//! applied to either substrate through [`apply`], which speaks only the
+//! [`Substrate`] trait.
 
 use crate::config::OrchestratorConfig;
 use crate::registry::{Registry, ServiceId};
+use crate::substrate::{ReplicaId, Substrate};
 
 /// A scaling decision for one service.
 #[derive(Debug, Clone, PartialEq)]
@@ -27,16 +33,53 @@ pub enum ScaleAction {
     Down { service: ServiceId, target: usize },
 }
 
+/// Live load signal for one engine-pool tier (the gateway samples these
+/// each scaling interval).
+#[derive(Debug, Clone, Copy)]
+pub struct TierLoad {
+    /// Routed requests waiting in the tier queue.
+    pub queue_depth: usize,
+    /// Decode slots currently occupied across the tier's replicas.
+    pub slots_in_use: usize,
+    /// Replicas currently live (Ready plus pending cold starts).
+    pub active_replicas: usize,
+    /// Seconds since the tier last saw an enqueue.
+    pub idle_s: f64,
+}
+
 /// Little's-law scaler with cooldown and warm pools.
+///
+/// One instance plans over one index space — services for the sim
+/// ([`Self::plan`]), tiers for the live pool ([`Self::plan_tier`]); the
+/// per-index cooldown clocks are shared, so use separate instances for
+/// separate index spaces.
 pub struct Scaler {
     cfg: OrchestratorConfig,
-    /// Per-service end-of-cooldown timestamps.
+    /// Demand one replica absorbs on the observed-load path (its decode
+    /// slot count). The Little's-law path divides by `target_concurrency`
+    /// instead.
+    slots_per_replica: usize,
+    /// Per-index end-of-cooldown timestamps.
     cooldown_until: Vec<f64>,
 }
 
 impl Scaler {
     pub fn new(cfg: OrchestratorConfig, n_services: usize) -> Scaler {
-        Scaler { cfg, cooldown_until: vec![0.0; n_services] }
+        Scaler::for_pool(cfg, n_services, 1)
+    }
+
+    /// Scaler for the live engine pool: one index per tier, demand
+    /// divided by the replicas' decode-slot count.
+    pub fn for_pool(
+        cfg: OrchestratorConfig,
+        n_indices: usize,
+        slots_per_replica: usize,
+    ) -> Scaler {
+        Scaler {
+            cfg,
+            slots_per_replica: slots_per_replica.max(1),
+            cooldown_until: vec![0.0; n_indices],
+        }
     }
 
     pub fn cfg(&self) -> &OrchestratorConfig {
@@ -50,7 +93,43 @@ impl Scaler {
         self.cfg.warm_pool[tier.index()]
     }
 
-    /// Run one Alg. 1 pass; returns actions to apply.
+    /// The shared Alg. 1 decision for one scaled entity: `need` replicas
+    /// of demand against `current` capacity. Returns the new target, or
+    /// `None` to hold. `busy` blocks scale-down while observed work is
+    /// still in flight (the live path's signal; forecasts pass `false`).
+    #[allow(clippy::too_many_arguments)]
+    fn decide(
+        &mut self,
+        idx: usize,
+        need: usize,
+        current: usize,
+        busy: bool,
+        idle_s: f64,
+        min_warm: usize,
+        max_replicas: usize,
+        now_s: f64,
+    ) -> Option<usize> {
+        if need > current {
+            if now_s >= self.cooldown_until[idx] {
+                let target = need.max(min_warm).min(max_replicas);
+                if target > current {
+                    self.cooldown_until[idx] = now_s + self.cfg.cooldown_s;
+                    return Some(target);
+                }
+            }
+            return None;
+        }
+        if !busy && idle_s > self.cfg.idle_timeout_s {
+            let target = min_warm; // max(0, min_warm)
+            if target < current {
+                return Some(target);
+            }
+        }
+        None
+    }
+
+    /// Run one Alg. 1 pass over the registry (Little's-law demand);
+    /// returns actions for [`apply`].
     pub fn plan(&mut self, registry: &mut Registry, now_s: f64) -> Vec<ScaleAction> {
         let mut actions = Vec::new();
         for idx in 0..registry.services.len() {
@@ -64,92 +143,102 @@ impl Scaler {
             );
             // Little's Law: L = λW → replicas to hold L streams at
             // `target_concurrency` streams each.
-            let target_raw =
-                (rate * lat / self.cfg.target_concurrency).ceil() as usize;
+            let need = (rate * lat / self.cfg.target_concurrency).ceil() as usize;
             let current = svc.ready_replicas + svc.pending_replicas;
             let idle = svc.telemetry.arrivals.idle_time(now_s);
-
-            if target_raw > current && now_s >= self.cooldown_until[idx] {
-                let target = target_raw
-                    .max(min_warm)
-                    .min(self.cfg.max_replicas);
-                if target > current {
-                    actions.push(ScaleAction::Up { service: id, target });
-                    self.cooldown_until[idx] = now_s + self.cfg.cooldown_s;
-                }
-            } else if idle > self.cfg.idle_timeout_s {
-                let target = min_warm; // max(0, min_warm)
-                if target < current {
-                    actions.push(ScaleAction::Down { service: id, target });
-                }
+            let max = self.cfg.max_replicas;
+            if let Some(target) =
+                self.decide(idx, need, current, false, idle, min_warm, max, now_s)
+            {
+                actions.push(if target > current {
+                    ScaleAction::Up { service: id, target }
+                } else {
+                    ScaleAction::Down { service: id, target }
+                });
             }
         }
         actions
     }
-}
 
-/// Live load signal for one engine-pool tier (the gateway samples these
-/// each scaling interval).
-#[derive(Debug, Clone, Copy)]
-pub struct TierLoad {
-    /// Routed requests waiting in the tier queue.
-    pub queue_depth: usize,
-    /// Decode slots currently occupied across the tier's replicas.
-    pub slots_in_use: usize,
-    /// Replicas currently active (unparked).
-    pub active_replicas: usize,
-    /// Seconds since the tier last saw an enqueue.
-    pub idle_s: f64,
-}
-
-/// Alg. 1 adapted to the in-process engine pool: targets are driven by
-/// *observed* demand — per-tier queue depth plus slot occupancy — instead
-/// of the arrival-rate × latency estimate the cluster scaler uses, since
-/// the live gateway can measure its own backlog directly. Scale-to-zero
-/// parks every replica of an idle tier (minus its warm-pool floor);
-/// the gateway un-parks on the next enqueue (a "cold wake").
-pub struct PoolScaler {
-    cfg: OrchestratorConfig,
-    /// Demand a single replica absorbs (its decode-slot count).
-    slots_per_replica: usize,
-    cooldown_until: [f64; 3],
-}
-
-impl PoolScaler {
-    pub fn new(cfg: OrchestratorConfig, slots_per_replica: usize) -> PoolScaler {
-        PoolScaler {
-            cfg,
-            slots_per_replica: slots_per_replica.max(1),
-            cooldown_until: [0.0; 3],
-        }
-    }
-
-    /// Plan the active-replica target for one tier. `max_replicas` is the
-    /// tier's provisioned thread count (the hard ceiling).
-    pub fn target(
+    /// One Alg. 1 pass for one engine-pool tier from its observed load.
+    /// `service` names the tier's canonical registry cell (events and
+    /// actions are keyed by it); `max_replicas` is the tier's provisioned
+    /// ceiling. Returns the action to [`apply`], or `None` to hold.
+    pub fn plan_tier(
         &mut self,
         tier: usize,
+        service: ServiceId,
         load: TierLoad,
         max_replicas: usize,
         now_s: f64,
-    ) -> usize {
+    ) -> Option<ScaleAction> {
+        let idx = tier.min(self.cooldown_until.len().saturating_sub(1));
         let warm = self.cfg.warm_pool[tier.min(2)].min(max_replicas);
         let demand = load.queue_depth + load.slots_in_use;
         let need = demand.div_ceil(self.slots_per_replica);
-        if need > load.active_replicas {
-            // Scale up (cooldown-gated, warm floor respected).
-            if now_s >= self.cooldown_until[tier.min(2)] {
-                self.cooldown_until[tier.min(2)] = now_s + self.cfg.cooldown_s;
-                return need.max(warm).min(max_replicas);
-            }
-            return load.active_replicas;
-        }
-        if demand == 0 && load.idle_s > self.cfg.idle_timeout_s {
-            // Scale to zero (or the warm floor) after the idle window.
-            return warm;
-        }
-        load.active_replicas
+        let current = load.active_replicas;
+        let target = self.decide(
+            idx,
+            need,
+            current,
+            demand > 0,
+            load.idle_s,
+            warm,
+            max_replicas,
+            now_s,
+        )?;
+        Some(if target > current {
+            ScaleAction::Up { service, target }
+        } else {
+            ScaleAction::Down { service, target }
+        })
     }
+}
+
+/// Apply planned actions to a substrate (sim cluster or live pool):
+/// provision up to each `Up` target counting pending capacity, terminate
+/// excess Ready replicas on `Down`. Returns the replicas provisioned.
+pub fn apply(
+    actions: &[ScaleAction],
+    registry: &mut Registry,
+    substrate: &mut dyn Substrate,
+    now_s: f64,
+) -> Vec<ReplicaId> {
+    let mut spawned = Vec::new();
+    for action in actions {
+        match *action {
+            ScaleAction::Up { service, target } => {
+                let (current, model_idx, spec, backend) = {
+                    let svc = registry.get(service);
+                    (
+                        svc.ready_replicas + svc.pending_replicas,
+                        svc.model_idx,
+                        svc.spec.clone(),
+                        svc.backend,
+                    )
+                };
+                for _ in current..target {
+                    match substrate.provision(service, model_idx, &spec, backend, now_s)
+                    {
+                        Some(id) => {
+                            registry.get_mut(service).pending_replicas += 1;
+                            spawned.push(id);
+                        }
+                        // Out of capacity: the next plan retries.
+                        None => break,
+                    }
+                }
+            }
+            ScaleAction::Down { service, target } => {
+                let ready = substrate.ready_replicas(service);
+                let excess = ready.len().saturating_sub(target);
+                for replica in ready.into_iter().take(excess) {
+                    substrate.terminate(replica, now_s);
+                }
+            }
+        }
+    }
+    spawned
 }
 
 #[cfg(test)]
@@ -158,6 +247,8 @@ mod tests {
     use crate::config::OrchestratorConfig;
     use crate::models::zoo;
     use crate::registry::Registry;
+    use crate::substrate::testing::MockSubstrate;
+    use crate::substrate::ReplicaState;
 
     fn setup(warm: [usize; 3]) -> (Registry, Scaler) {
         let r = Registry::new(&zoo(), 300.0);
@@ -273,14 +364,28 @@ mod tests {
         assert!(actions.is_empty(), "{actions:?}");
     }
 
-    fn pool_scaler(warm: [usize; 3]) -> PoolScaler {
+    fn pool_scaler(warm: [usize; 3]) -> Scaler {
         let cfg = OrchestratorConfig {
             warm_pool: warm,
             cooldown_s: 30.0,
             idle_timeout_s: 120.0,
             ..OrchestratorConfig::default()
         };
-        PoolScaler::new(cfg, 8) // 8 decode slots per replica
+        Scaler::for_pool(cfg, 3, 8) // 8 decode slots per replica
+    }
+
+    fn tier_target(
+        s: &mut Scaler,
+        tier: usize,
+        load: TierLoad,
+        max: usize,
+        now: f64,
+    ) -> usize {
+        match s.plan_tier(tier, ServiceId(0), load, max, now) {
+            Some(ScaleAction::Up { target, .. })
+            | Some(ScaleAction::Down { target, .. }) => target,
+            None => load.active_replicas,
+        }
     }
 
     #[test]
@@ -293,7 +398,7 @@ mod tests {
             active_replicas: 1,
             idle_s: 0.0,
         };
-        assert_eq!(s.target(0, load, 4, 100.0), 3);
+        assert_eq!(tier_target(&mut s, 0, load, 4, 100.0), 3);
     }
 
     #[test]
@@ -305,11 +410,11 @@ mod tests {
             active_replicas: 1,
             idle_s: 0.0,
         };
-        assert_eq!(s.target(0, load, 8, 0.0), 4);
+        assert_eq!(tier_target(&mut s, 0, load, 8, 0.0), 4);
         // Still under-provisioned, but inside the cooldown window.
-        assert_eq!(s.target(0, load, 8, 10.0), 1);
+        assert_eq!(tier_target(&mut s, 0, load, 8, 10.0), 1);
         // Window over → fires again.
-        assert_eq!(s.target(0, load, 8, 31.0), 4);
+        assert_eq!(tier_target(&mut s, 0, load, 8, 31.0), 4);
     }
 
     #[test]
@@ -321,7 +426,7 @@ mod tests {
             active_replicas: 2,
             idle_s: 200.0,
         };
-        assert_eq!(s.target(2, load, 2, 500.0), 0);
+        assert_eq!(tier_target(&mut s, 2, load, 2, 500.0), 0);
     }
 
     #[test]
@@ -333,7 +438,7 @@ mod tests {
             active_replicas: 2,
             idle_s: 200.0,
         };
-        assert_eq!(s.target(0, load, 2, 500.0), 1);
+        assert_eq!(tier_target(&mut s, 0, load, 2, 500.0), 1);
     }
 
     #[test]
@@ -346,7 +451,7 @@ mod tests {
             active_replicas: 1,
             idle_s: 500.0,
         };
-        assert_eq!(s.target(1, load, 4, 1000.0), 1);
+        assert_eq!(tier_target(&mut s, 1, load, 4, 1000.0), 1);
     }
 
     #[test]
@@ -358,7 +463,7 @@ mod tests {
             active_replicas: 1,
             idle_s: 0.0,
         };
-        assert_eq!(s.target(0, load, 4, 0.0), 4);
+        assert_eq!(tier_target(&mut s, 0, load, 4, 0.0), 4);
     }
 
     #[test]
@@ -371,6 +476,46 @@ mod tests {
             idle_s: 1.0,
         };
         // Demand 8 fits one replica exactly → no change.
-        assert_eq!(s.target(0, load, 4, 0.0), 1);
+        assert!(s.plan_tier(0, ServiceId(0), load, 4, 0.0).is_none());
+    }
+
+    #[test]
+    fn apply_provisions_and_terminates_through_the_trait() {
+        let (mut r, _) = setup([0, 0, 0]);
+        let mut sub = MockSubstrate::new(8, 5.0);
+        let sid = ServiceId(0);
+        let spawned = apply(
+            &[ScaleAction::Up { service: sid, target: 3 }],
+            &mut r,
+            &mut sub,
+            0.0,
+        );
+        assert_eq!(spawned.len(), 3);
+        assert_eq!(r.get(sid).pending_replicas, 3);
+        assert_eq!(sub.pending_replicas(sid), 3);
+        // Replicas come Ready; a Down terminates the excess.
+        sub.poll(6.0);
+        assert_eq!(sub.ready_replicas(sid).len(), 3);
+        apply(&[ScaleAction::Down { service: sid, target: 1 }], &mut r, &mut sub, 7.0);
+        let terminating = spawned
+            .iter()
+            .filter(|id| sub.replica_state(**id) == Some(ReplicaState::Terminating))
+            .count();
+        assert_eq!(terminating, 2);
+    }
+
+    #[test]
+    fn apply_stops_at_substrate_capacity() {
+        let (mut r, _) = setup([0, 0, 0]);
+        let mut sub = MockSubstrate::new(2, 1.0);
+        let sid = ServiceId(1);
+        let spawned = apply(
+            &[ScaleAction::Up { service: sid, target: 5 }],
+            &mut r,
+            &mut sub,
+            0.0,
+        );
+        assert_eq!(spawned.len(), 2, "capacity bounds provisioning");
+        assert_eq!(r.get(sid).pending_replicas, 2);
     }
 }

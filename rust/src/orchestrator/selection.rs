@@ -11,6 +11,7 @@
 use crate::registry::{Registry, ServiceId};
 use crate::router::Classification;
 use crate::scoring::{relevance, score, Components, Weights};
+use crate::substrate::Substrate;
 use crate::util::stats::minmax_norm;
 
 /// The outcome of one matrix selection.
@@ -83,6 +84,27 @@ pub fn select(
     best.map(|mut b| {
         b.all_scores = all_scores;
         b
+    })
+}
+
+/// [`select`] with the cold-start penalty sourced from a substrate:
+/// warm cells pay nothing, scaled-to-zero cells pay the substrate's
+/// measured/estimated cold start. This is the form both control planes
+/// (sim driver and live gateway) route through.
+pub fn select_on(
+    registry: &Registry,
+    substrate: &dyn Substrate,
+    weights: Weights,
+    class: &Classification,
+    in_tokens: f64,
+    out_tokens: f64,
+) -> Option<Selection> {
+    select(registry, weights, class, in_tokens, out_tokens, |svc| {
+        if svc.ready_replicas > 0 {
+            0.0
+        } else {
+            substrate.estimate_cold_start_s(&svc.spec, svc.backend)
+        }
     })
 }
 
@@ -169,6 +191,22 @@ mod tests {
         r.get_mut(warm).ready_replicas = 1;
         let w = Weights::from_profile(&Profile::SPEED);
         let sel = select(&r, w, &class(1), 50.0, 50.0, |_| 300.0).unwrap();
+        assert_eq!(sel.service, warm);
+    }
+
+    #[test]
+    fn select_on_sources_cold_start_from_substrate() {
+        let mut r = setup();
+        for s in &mut r.services {
+            s.ready_replicas = 0;
+        }
+        let warm = r.cell(1, BackendKind::Vllm).id;
+        r.get_mut(warm).ready_replicas = 1;
+        // A substrate with a brutal cold start: the one warm cell wins
+        // under a latency-sensitive profile.
+        let sub = crate::substrate::testing::MockSubstrate::new(4, 300.0);
+        let w = Weights::from_profile(&Profile::SPEED);
+        let sel = select_on(&r, &sub, w, &class(1), 50.0, 50.0).unwrap();
         assert_eq!(sel.service, warm);
     }
 

@@ -147,6 +147,26 @@ impl Registry {
     pub fn total_ready(&self) -> usize {
         self.services.iter().map(|s| s.ready_replicas).sum()
     }
+
+    /// Update every service of one engine tier at once. The live
+    /// gateway's registry is a routing view over per-tier replica pools:
+    /// all services of a tier share the tier's engine threads, so their
+    /// replica counts and health move together.
+    pub fn set_tier_state(
+        &mut self,
+        tier_idx: usize,
+        ready: usize,
+        pending: usize,
+        health: Health,
+    ) {
+        for svc in &mut self.services {
+            if svc.spec.tier.index() == tier_idx {
+                svc.ready_replicas = ready;
+                svc.pending_replicas = pending;
+                svc.health = health;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -229,6 +249,23 @@ mod tests {
         let id = r.cell(2, BackendKind::Tgi).id;
         r.get_mut(id).health = Health::Unhealthy;
         assert_eq!(r.routable().count(), 11);
+    }
+
+    #[test]
+    fn tier_state_updates_every_cell_of_the_tier() {
+        let mut r = registry();
+        let tier0 = r.services[0].spec.tier.index();
+        r.set_tier_state(tier0, 2, 1, Health::Degraded);
+        for s in &r.services {
+            if s.spec.tier.index() == tier0 {
+                assert_eq!(s.ready_replicas, 2);
+                assert_eq!(s.pending_replicas, 1);
+                assert_eq!(s.health, Health::Degraded);
+            } else {
+                assert_eq!(s.ready_replicas, 0);
+                assert_eq!(s.health, Health::Healthy);
+            }
+        }
     }
 
     #[test]

@@ -18,7 +18,7 @@ use crate::config::{ClusterConfig, OrchestratorConfig, Profile, RouterMode};
 use crate::models::completion::CompletionModel;
 use crate::models::{zoo, BackendKind};
 use crate::orchestrator::recovery::RecoveryManager;
-use crate::orchestrator::{ScaleAction, Scaler};
+use crate::orchestrator::Scaler;
 use crate::registry::{Registry, ServiceId};
 use crate::router::hybrid::{HybridRouter, SemanticRouter};
 use crate::router::keyword::KeywordRouter;
@@ -491,7 +491,7 @@ pub fn run(
                     let spawned =
                         recovery.on_events(&[ev.clone()], &mut registry, &mut cluster, t);
                     let _ = spawned;
-                    if let ClusterEvent::PodReady { service, .. } = ev {
+                    if let ClusterEvent::ReplicaReady { service, .. } = ev {
                         try_start!(service, t);
                     }
                 }
@@ -513,34 +513,17 @@ pub fn run(
                         }
                     }
                 }
-                // Alg. 1 only under dynamic orchestration.
+                // Alg. 1 only under dynamic orchestration. Actions are
+                // applied through the Substrate trait — the same `apply`
+                // the live gateway's control loop runs.
                 if matches!(cfg.deployment, Deployment::Dynamic { .. }) {
-                    for action in scaler.plan(&mut registry, t) {
-                        match action {
-                            ScaleAction::Up { service, target } => {
-                                let svc = registry.get(service);
-                                let current =
-                                    svc.ready_replicas + svc.pending_replicas;
-                                let (mi, spec, backend) =
-                                    (svc.model_idx, svc.spec.clone(), svc.backend);
-                                for _ in current..target {
-                                    if cluster
-                                        .schedule(service, mi, &spec, backend, t)
-                                        .is_some()
-                                    {
-                                        registry.get_mut(service).pending_replicas += 1;
-                                    }
-                                }
-                            }
-                            ScaleAction::Down { service, target } => {
-                                let ready = cluster.ready_pods(service);
-                                let excess = ready.len().saturating_sub(target);
-                                for pod in ready.into_iter().take(excess) {
-                                    cluster.terminate(pod, t);
-                                }
-                            }
-                        }
-                    }
+                    let actions = scaler.plan(&mut registry, t);
+                    crate::orchestrator::scaling::apply(
+                        &actions,
+                        &mut registry,
+                        &mut cluster,
+                        t,
+                    );
                 }
                 if done < cfg.n_requests {
                     events.push(
@@ -590,13 +573,13 @@ pub fn run(
                         if let Some(ev) = cluster.fail(pod, t) {
                             n_failures += 1;
                             let shifted = match ev {
-                                ClusterEvent::PodFailed { pod, service, .. } => {
-                                    ClusterEvent::PodFailed {
-                                        pod,
-                                        service,
-                                        at_s: t,
-                                    }
-                                }
+                                ClusterEvent::ReplicaFailed {
+                                    replica, service, ..
+                                } => ClusterEvent::ReplicaFailed {
+                                    replica,
+                                    service,
+                                    at_s: t,
+                                },
                                 other => other,
                             };
                             // Recovery acts after the detection delay.
@@ -668,16 +651,16 @@ pub fn run(
 
 fn apply_cluster_event(ev: &ClusterEvent, registry: &mut Registry) {
     match ev {
-        ClusterEvent::PodReady { service, .. } => {
+        ClusterEvent::ReplicaReady { service, .. } => {
             let svc = registry.get_mut(*service);
             svc.pending_replicas = svc.pending_replicas.saturating_sub(1);
             svc.ready_replicas += 1;
         }
-        ClusterEvent::PodGone { service, .. } => {
+        ClusterEvent::ReplicaGone { service, .. } => {
             let svc = registry.get_mut(*service);
             svc.ready_replicas = svc.ready_replicas.saturating_sub(1);
         }
-        ClusterEvent::PodFailed { .. } => {
+        ClusterEvent::ReplicaFailed { .. } => {
             // RecoveryManager adjusts counts/health for failures.
         }
     }

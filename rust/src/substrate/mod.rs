@@ -1,0 +1,329 @@
+//! Substrate — the one runtime-facing abstraction the control plane
+//! drives.
+//!
+//! The paper's headline results (scale-to-zero economics, 4–12 s
+//! recovery, Table 4) come from one control plane operating a Kubernetes
+//! substrate. This module defines that contract: a [`Substrate`] can
+//! provision and terminate replicas, report their lifecycle state, and
+//! surface failures as events. Two implementations exist:
+//!
+//! * [`crate::cluster::Cluster`] — the simulated Kubernetes (pods on GPU
+//!   nodes, image pulls, PVC weight loads, virtual time).
+//! * `gateway::pool::LocalSubstrate` — the live engine pool (replica
+//!   threads; Loading = engine compile/warm-up, Ready = scheduler loop
+//!   running, wall-clock time).
+//!
+//! `orchestrator::{scaling, selection, recovery}` operate only on this
+//! trait, so Algorithm 1, Algorithm 2's cold-start penalties, and the
+//! recovery manager's `Incident` accounting behave identically on the
+//! simulated and live paths.
+
+use crate::models::{BackendKind, ModelSpec};
+use crate::registry::ServiceId;
+
+/// Identity of one replica (a pod in the sim, an engine thread live).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ReplicaId(pub u64);
+
+/// Replica lifecycle. The sim walks the full Kubernetes-shaped chain
+/// (Scheduled → Pulling → Loading → Initializing → Ready); the live
+/// substrate uses the subset that has a physical meaning for an
+/// in-process engine thread (Scheduled → Loading → Ready). Both end in
+/// Terminating → gone, or Failed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaState {
+    /// Accepted; resources assigned, nothing started yet.
+    Scheduled,
+    /// Container image transferring (sim only).
+    Pulling,
+    /// Weights loading / engine compiling and warming up.
+    Loading,
+    /// Backend engine initializing (sim only).
+    Initializing,
+    /// Serving traffic.
+    Ready,
+    /// Draining before exit.
+    Terminating,
+    /// Died (crash, panic, stalled health check).
+    Failed,
+}
+
+impl ReplicaState {
+    /// States that precede Ready (count as `pending` capacity).
+    pub fn is_pending(self) -> bool {
+        matches!(
+            self,
+            ReplicaState::Scheduled
+                | ReplicaState::Pulling
+                | ReplicaState::Loading
+                | ReplicaState::Initializing
+        )
+    }
+
+    /// States that hold capacity (pending or serving).
+    pub fn is_live(self) -> bool {
+        self.is_pending() || self == ReplicaState::Ready
+    }
+}
+
+/// Lifecycle change produced by [`Substrate::poll`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum SubstrateEvent {
+    /// A replica finished its cold start and is serving.
+    ReplicaReady {
+        replica: ReplicaId,
+        service: ServiceId,
+        at_s: f64,
+        /// Provision-to-Ready wall time (the cold-start measurement).
+        cold_start_s: f64,
+    },
+    /// A replica finished draining and exited.
+    ReplicaGone { replica: ReplicaId, service: ServiceId, at_s: f64 },
+    /// A replica died without being asked to.
+    ReplicaFailed { replica: ReplicaId, service: ServiceId, at_s: f64 },
+}
+
+impl SubstrateEvent {
+    pub fn service(&self) -> ServiceId {
+        match self {
+            SubstrateEvent::ReplicaReady { service, .. }
+            | SubstrateEvent::ReplicaGone { service, .. }
+            | SubstrateEvent::ReplicaFailed { service, .. } => *service,
+        }
+    }
+}
+
+/// The runtime-facing contract the orchestrator drives. All timestamps
+/// are explicit seconds so virtual (sim) and wall-clock (live) time share
+/// every call site.
+pub trait Substrate {
+    /// Provision one replica of `service`. Returns its id, or `None`
+    /// when the substrate has no capacity for it right now.
+    fn provision(
+        &mut self,
+        service: ServiceId,
+        model_idx: usize,
+        spec: &ModelSpec,
+        backend: BackendKind,
+        now_s: f64,
+    ) -> Option<ReplicaId>;
+
+    /// Begin graceful termination (drain, then a `ReplicaGone` event).
+    fn terminate(&mut self, replica: ReplicaId, now_s: f64);
+
+    /// Kill a replica abruptly (fault injection for recovery
+    /// experiments). Substrates that can observe the death synchronously
+    /// (the simulator) return the failure event; asynchronous substrates
+    /// (the live pool, where the kill lands at the replica's next
+    /// heartbeat) return `None` and surface the `ReplicaFailed` through
+    /// [`Self::poll`] — callers must handle both.
+    fn fail(&mut self, replica: ReplicaId, now_s: f64) -> Option<SubstrateEvent>;
+
+    /// Advance lifecycle state machines / collect state transitions that
+    /// happened since the last poll.
+    fn poll(&mut self, now_s: f64) -> Vec<SubstrateEvent>;
+
+    /// Current state of a replica (`None` once it is gone).
+    fn replica_state(&self, replica: ReplicaId) -> Option<ReplicaState>;
+
+    /// Replicas of `service` currently Ready.
+    fn ready_replicas(&self, service: ServiceId) -> Vec<ReplicaId>;
+
+    /// Replicas of `service` in any pre-Ready state.
+    fn pending_replicas(&self, service: ServiceId) -> usize;
+
+    /// Expected cold-start seconds for a new replica of this shape (the
+    /// Alg. 2 scaled-to-zero latency penalty).
+    fn estimate_cold_start_s(&self, spec: &ModelSpec, backend: BackendKind) -> f64;
+}
+
+#[cfg(test)]
+pub mod testing {
+    //! A deterministic in-memory substrate for orchestrator unit tests:
+    //! provisioned replicas become Ready after a fixed delay, capacity is
+    //! a plain counter. Lets `scaling::apply` and `RecoveryManager` be
+    //! tested against the trait alone, proving they carry no
+    //! sim-only or gateway-only assumptions.
+
+    use super::*;
+    use std::collections::BTreeMap;
+
+    struct MockReplica {
+        service: ServiceId,
+        state: ReplicaState,
+        ready_at_s: f64,
+        created_s: f64,
+    }
+
+    pub struct MockSubstrate {
+        replicas: BTreeMap<ReplicaId, MockReplica>,
+        next: u64,
+        pub capacity: usize,
+        pub cold_start_s: f64,
+    }
+
+    impl MockSubstrate {
+        pub fn new(capacity: usize, cold_start_s: f64) -> MockSubstrate {
+            MockSubstrate {
+                replicas: BTreeMap::new(),
+                next: 0,
+                capacity,
+                cold_start_s,
+            }
+        }
+
+        fn live_count(&self) -> usize {
+            self.replicas
+                .values()
+                .filter(|r| r.state.is_live() || r.state == ReplicaState::Terminating)
+                .count()
+        }
+    }
+
+    impl Substrate for MockSubstrate {
+        fn provision(
+            &mut self,
+            service: ServiceId,
+            _model_idx: usize,
+            _spec: &ModelSpec,
+            _backend: BackendKind,
+            now_s: f64,
+        ) -> Option<ReplicaId> {
+            if self.live_count() >= self.capacity {
+                return None;
+            }
+            let id = ReplicaId(self.next);
+            self.next += 1;
+            self.replicas.insert(id, MockReplica {
+                service,
+                state: ReplicaState::Loading,
+                ready_at_s: now_s + self.cold_start_s,
+                created_s: now_s,
+            });
+            Some(id)
+        }
+
+        fn terminate(&mut self, replica: ReplicaId, _now_s: f64) {
+            if let Some(r) = self.replicas.get_mut(&replica) {
+                r.state = ReplicaState::Terminating;
+            }
+        }
+
+        fn fail(&mut self, replica: ReplicaId, now_s: f64) -> Option<SubstrateEvent> {
+            let r = self.replicas.get_mut(&replica)?;
+            r.state = ReplicaState::Failed;
+            let service = r.service;
+            self.replicas.remove(&replica);
+            Some(SubstrateEvent::ReplicaFailed { replica, service, at_s: now_s })
+        }
+
+        fn poll(&mut self, now_s: f64) -> Vec<SubstrateEvent> {
+            let mut out = Vec::new();
+            let ids: Vec<ReplicaId> = self.replicas.keys().copied().collect();
+            for id in ids {
+                let r = self.replicas.get_mut(&id).unwrap();
+                match r.state {
+                    ReplicaState::Terminating => {
+                        let service = r.service;
+                        self.replicas.remove(&id);
+                        out.push(SubstrateEvent::ReplicaGone {
+                            replica: id,
+                            service,
+                            at_s: now_s,
+                        });
+                    }
+                    s if s.is_pending() && now_s >= r.ready_at_s => {
+                        r.state = ReplicaState::Ready;
+                        out.push(SubstrateEvent::ReplicaReady {
+                            replica: id,
+                            service: r.service,
+                            at_s: r.ready_at_s,
+                            cold_start_s: r.ready_at_s - r.created_s,
+                        });
+                    }
+                    _ => {}
+                }
+            }
+            out
+        }
+
+        fn replica_state(&self, replica: ReplicaId) -> Option<ReplicaState> {
+            self.replicas.get(&replica).map(|r| r.state)
+        }
+
+        fn ready_replicas(&self, service: ServiceId) -> Vec<ReplicaId> {
+            self.replicas
+                .iter()
+                .filter(|(_, r)| r.service == service && r.state == ReplicaState::Ready)
+                .map(|(id, _)| *id)
+                .collect()
+        }
+
+        fn pending_replicas(&self, service: ServiceId) -> usize {
+            self.replicas
+                .values()
+                .filter(|r| r.service == service && r.state.is_pending())
+                .count()
+        }
+
+        fn estimate_cold_start_s(&self, _spec: &ModelSpec, _backend: BackendKind) -> f64 {
+            self.cold_start_s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testing::MockSubstrate;
+    use super::*;
+    use crate::models::zoo;
+
+    #[test]
+    fn mock_walks_lifecycle_and_reports_cold_start() {
+        let z = zoo();
+        let mut s = MockSubstrate::new(4, 5.0);
+        let id = s
+            .provision(ServiceId(0), 0, &z[0], BackendKind::Vllm, 10.0)
+            .unwrap();
+        assert_eq!(s.replica_state(id), Some(ReplicaState::Loading));
+        assert_eq!(s.pending_replicas(ServiceId(0)), 1);
+        assert!(s.poll(12.0).is_empty());
+        let evs = s.poll(15.0);
+        assert!(matches!(evs[0],
+            SubstrateEvent::ReplicaReady { cold_start_s, .. }
+                if (cold_start_s - 5.0).abs() < 1e-9));
+        assert_eq!(s.ready_replicas(ServiceId(0)), vec![id]);
+        assert_eq!(s.pending_replicas(ServiceId(0)), 0);
+    }
+
+    #[test]
+    fn mock_capacity_bounds_provisioning() {
+        let z = zoo();
+        let mut s = MockSubstrate::new(1, 1.0);
+        assert!(s.provision(ServiceId(0), 0, &z[0], BackendKind::Vllm, 0.0).is_some());
+        assert!(s.provision(ServiceId(0), 0, &z[0], BackendKind::Vllm, 0.0).is_none());
+    }
+
+    #[test]
+    fn mock_terminate_emits_gone() {
+        let z = zoo();
+        let mut s = MockSubstrate::new(2, 1.0);
+        let id = s.provision(ServiceId(3), 0, &z[0], BackendKind::Tgi, 0.0).unwrap();
+        s.poll(2.0);
+        s.terminate(id, 3.0);
+        assert_eq!(s.replica_state(id), Some(ReplicaState::Terminating));
+        let evs = s.poll(4.0);
+        assert!(matches!(evs[0], SubstrateEvent::ReplicaGone { .. }));
+        assert_eq!(s.replica_state(id), None);
+    }
+
+    #[test]
+    fn state_classification() {
+        assert!(ReplicaState::Scheduled.is_pending());
+        assert!(ReplicaState::Loading.is_pending());
+        assert!(!ReplicaState::Ready.is_pending());
+        assert!(ReplicaState::Ready.is_live());
+        assert!(!ReplicaState::Failed.is_live());
+        assert!(!ReplicaState::Terminating.is_live());
+    }
+}

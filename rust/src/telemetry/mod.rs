@@ -245,13 +245,15 @@ impl Histogram {
 }
 
 /// Prometheus-style text exposition of a metrics snapshot (the gateway's
-/// `/metrics` endpoint).
+/// `/metrics` endpoint). Monotonic series (`*_total`, per the Prometheus
+/// naming convention) are typed as counters; everything else is a gauge.
 pub fn export_prometheus(
     metrics: &[(String, f64)],
 ) -> String {
     let mut out = String::new();
     for (name, value) in metrics {
-        out.push_str(&format!("# TYPE {name} gauge\n{name} {value}\n"));
+        let kind = if name.ends_with("_total") { "counter" } else { "gauge" };
+        out.push_str(&format!("# TYPE {name} {kind}\n{name} {value}\n"));
     }
     out
 }
@@ -310,9 +312,13 @@ mod tests {
 
     #[test]
     fn prometheus_format() {
-        let s = export_prometheus(&[("ps_requests_total".into(), 42.0)]);
+        let s = export_prometheus(&[
+            ("ps_requests_total".into(), 42.0),
+            ("ps_queue_depth".into(), 3.0),
+        ]);
         assert!(s.contains("ps_requests_total 42"));
-        assert!(s.contains("# TYPE"));
+        assert!(s.contains("# TYPE ps_requests_total counter"));
+        assert!(s.contains("# TYPE ps_queue_depth gauge"));
     }
 
     #[test]

@@ -161,6 +161,35 @@ fn impossible_requests_fail_fast_instead_of_wedging_the_replica() {
 }
 
 #[test]
+fn timed_out_requests_cancel_mid_flight_and_free_their_slot() {
+    let mut cfg = pool_config();
+    // A 256-token decode on the calibrated sim engine takes ~50 ms; a
+    // 5 ms request timeout must cancel it mid-flight instead of letting
+    // it decode to completion.
+    cfg.gateway.request_timeout_s = 0.005;
+    let stack = LiveStack::start_sim(&cfg).unwrap();
+    let err = stack
+        .complete("please summarize everything about alpha beta gamma", 256)
+        .expect_err("a 5ms timeout cannot cover a 50ms decode");
+    assert!(format!("{err:#}").contains("timed out"), "{err:#}");
+    assert_eq!(stack.metrics.timeouts.load(Ordering::Relaxed), 1);
+    // The sequence is evicted at the scheduler's next tick, freeing the
+    // slot and KV reservation early.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while (stack.metrics.cancelled.load(Ordering::Relaxed) == 0
+        || stack.slots_in_use() > 0)
+        && Instant::now() < deadline
+    {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(
+        stack.metrics.cancelled.load(Ordering::Relaxed) >= 1,
+        "timeout must cancel the in-flight sequence"
+    );
+    assert_eq!(stack.slots_in_use(), 0, "cancelled slot must free");
+}
+
+#[test]
 fn backpressure_rejects_cleanly_when_tier_queue_full() {
     let mut cfg = pool_config();
     // One slot, one-deep queue, serial batches: the third-plus
