@@ -1,5 +1,5 @@
 //! Paged KV-cache block manager — the vLLM PagedAttention idea at the
-//! coordinator level.
+//! coordinator level, extended with a ref-counted radix prefix cache.
 //!
 //! The compiled decode modules hold a dense per-slot KV buffer on device
 //! ([L, 2, B, H, Smax, Dh]); this manager owns the *logical* accounting:
@@ -8,13 +8,113 @@
 //! prompt plus its token budget (reservation-based admission — no
 //! mid-flight OOM evictions). Fragmentation and occupancy statistics feed
 //! the §Perf ablations (block-size sweep).
+//!
+//! ## Prefix cache
+//!
+//! Routed traffic is dominated by shared prompt prefixes (system
+//! prompts, few-shot benchmark templates), so with
+//! [`PrefixCacheConfig::enabled`] the manager keeps a **radix tree keyed
+//! on token-block hashes**: every full prompt block becomes a tree node
+//! holding one physical block and a refcount. A new admission walks the
+//! tree over its prompt's block hashes ([`chain_hash`]) and *shares* the
+//! matched prefix blocks instead of reserving fresh ones — admission
+//! charges only the uncached suffix. Divergence is copy-on-write at
+//! block granularity: the first divergent block branches the tree and
+//! everything from there (partial tail block + the generation budget) is
+//! private to the sequence, so shared blocks are never written.
+//! Releasing a sequence decrements refcounts but keeps the blocks
+//! resident for future hits; unreferenced blocks are reclaimed LRU,
+//! leaf-first, on demand or past the eviction watermark.
+//!
+//! With the cache disabled (the default for [`KvBlockManager::new`]) the
+//! accounting is bit-identical to the original pure-reservation manager.
 
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 
+use crate::util::rng::{fnv1a64_step, FNV64_OFFSET};
+
 /// A sequence being served.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct SeqId(pub u64);
+
+/// Knobs for the radix prefix cache (config: `pool.prefix_cache.*`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrefixCacheConfig {
+    /// Share matched prompt-prefix blocks across sequences.
+    pub enabled: bool,
+    /// Minimum run of consecutive matched blocks (from the root) before
+    /// a match counts as a hit — tiny shared prefixes aren't worth the
+    /// tree churn.
+    pub min_block_run: usize,
+    /// Resident-block ceiling as a fraction of the pool: when held +
+    /// cached blocks exceed it, unreferenced cached blocks are evicted
+    /// LRU until back under (or nothing evictable remains).
+    pub evict_watermark: f64,
+}
+
+impl Default for PrefixCacheConfig {
+    fn default() -> Self {
+        Self { enabled: true, min_block_run: 1, evict_watermark: 0.9 }
+    }
+}
+
+impl PrefixCacheConfig {
+    /// Cache off — bit-identical legacy reservation accounting.
+    pub fn disabled() -> Self {
+        Self { enabled: false, ..Self::default() }
+    }
+}
+
+/// Cumulative prefix-cache counters (exported as `ps_prefix_*` series).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PrefixStats {
+    /// Prompt tokens served from cached blocks.
+    pub hit_tokens: u64,
+    /// Prompt tokens that had to be prefilled.
+    pub miss_tokens: u64,
+    /// Unreferenced cached blocks reclaimed (LRU).
+    pub evicted_blocks: u64,
+}
+
+/// Radix-tree root sentinel (the FNV-1a offset basis).
+pub const ROOT_HASH: u64 = FNV64_OFFSET;
+
+fn fnv_mix(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h = fnv1a64_step(h, b);
+    }
+    h
+}
+
+/// Chained block hash: a node's key commits to its whole root path, so
+/// equal keys mean equal prefixes (token bytes are still compared on
+/// match to guard collisions). Shared with the simulator's prefix model.
+pub fn chain_hash(parent: u64, block: &[i32]) -> u64 {
+    let mut h = fnv_mix(ROOT_HASH, &parent.to_le_bytes());
+    for &t in block {
+        h = fnv_mix(h, &t.to_le_bytes());
+    }
+    h
+}
+
+/// One radix node = one physical block of `block_tokens` prompt tokens.
+#[derive(Debug)]
+struct CacheNode {
+    parent: Option<u64>,
+    /// The block's exact tokens (hash-collision guard).
+    tokens: Vec<i32>,
+    /// Live sequences referencing this block.
+    refs: usize,
+    /// Child nodes (only leaves are evictable).
+    children: usize,
+    /// Σ refs over this node's subtree (self included) — maintained
+    /// incrementally so "is any descendant referenced?" (pinned) is an
+    /// O(1) read instead of a tree walk on the admission hot path.
+    live_desc: usize,
+    /// LRU clock at last touch.
+    last_use: u64,
+}
 
 /// Block-granular KV accounting for one replica.
 #[derive(Debug)]
@@ -22,21 +122,49 @@ pub struct KvBlockManager {
     pub block_tokens: usize,
     pub total_blocks: usize,
     free_blocks: usize,
-    /// Per-sequence (blocks_held, tokens_used, tokens_reserved).
+    /// Per-sequence allocations.
     seqs: BTreeMap<SeqId, SeqAlloc>,
     /// High-water mark (peak occupancy) for reports.
     pub peak_blocks: usize,
+    /// Radix prefix tree: chained block hash → node.
+    cache: BTreeMap<u64, CacheNode>,
+    /// Nodes with `live_desc > 0` (a referenced descendant-or-self) —
+    /// unreclaimable until their referencing sequences release.
+    pinned_count: usize,
+    cfg: PrefixCacheConfig,
+    lru_tick: u64,
+    pub stats: PrefixStats,
 }
 
 #[derive(Debug, Clone)]
 struct SeqAlloc {
+    /// Private blocks (uncached suffix + generation budget).
     blocks: usize,
+    /// Referenced cache nodes, in root order (shared prompt prefix).
+    shared: Vec<u64>,
+    /// How many leading `shared` nodes were already resident at
+    /// admission (they hold KV computed by *earlier* prefills; the rest
+    /// were inserted by this sequence and hold nothing until its own
+    /// prefill runs — see [`KvBlockManager::release_discard`]).
+    preexisting: usize,
+    /// Hit tokens this admission added to [`PrefixStats`] — rolled back
+    /// by [`KvBlockManager::release_discard`] when the prefill never ran.
+    hit_tokens: usize,
     tokens: usize,
     reserved_tokens: usize,
 }
 
 impl KvBlockManager {
+    /// Legacy manager: prefix cache off, pure reservation accounting.
     pub fn new(total_blocks: usize, block_tokens: usize) -> Self {
+        Self::with_prefix_cache(total_blocks, block_tokens, PrefixCacheConfig::disabled())
+    }
+
+    pub fn with_prefix_cache(
+        total_blocks: usize,
+        block_tokens: usize,
+        cfg: PrefixCacheConfig,
+    ) -> Self {
         assert!(total_blocks > 0 && block_tokens > 0);
         Self {
             block_tokens,
@@ -44,6 +172,28 @@ impl KvBlockManager {
             free_blocks: total_blocks,
             seqs: BTreeMap::new(),
             peak_blocks: 0,
+            cache: BTreeMap::new(),
+            pinned_count: 0,
+            cfg,
+            lru_tick: 0,
+            stats: PrefixStats::default(),
+        }
+    }
+
+    /// Propagate a refcount change up the chain: every ref held on a
+    /// node contributes to the `live_desc` of that node and all its
+    /// ancestors; `pinned_count` tracks the 0↔1 transitions.
+    fn adjust_live(&mut self, mut key: Option<u64>, delta: i64) {
+        while let Some(k) = key {
+            let Some(n) = self.cache.get_mut(&k) else { break };
+            let before = n.live_desc;
+            n.live_desc = (n.live_desc as i64 + delta).max(0) as usize;
+            if before == 0 && n.live_desc > 0 {
+                self.pinned_count += 1;
+            } else if before > 0 && n.live_desc == 0 {
+                self.pinned_count -= 1;
+            }
+            key = n.parent;
         }
     }
 
@@ -51,20 +201,170 @@ impl KvBlockManager {
         tokens.div_ceil(self.block_tokens)
     }
 
+    /// Public block rounding (the scheduler tracks pending admissions in
+    /// blocks, not summed tokens — pooled rounding over-admits).
+    pub fn blocks_for_tokens(&self, tokens: usize) -> usize {
+        self.blocks_for(tokens)
+    }
+
+    /// Keys of the resident chain matching `ids`' full leading blocks
+    /// (token-verified), ungated — every one of these nodes would be
+    /// *reused* (not re-allocated) by [`Self::admit_prefix`], whether or
+    /// not the run is long enough to count as a hit.
+    fn match_chain(&self, ids: &[i32]) -> Vec<u64> {
+        if !self.cfg.enabled {
+            return Vec::new();
+        }
+        let mut keys = Vec::new();
+        let mut parent: Option<u64> = None;
+        let mut ph = ROOT_HASH;
+        for chunk in ids.chunks_exact(self.block_tokens) {
+            let h = chain_hash(ph, chunk);
+            match self.cache.get(&h) {
+                Some(n) if n.parent == parent && n.tokens == chunk => {
+                    keys.push(h);
+                    parent = Some(h);
+                    ph = h;
+                }
+                _ => break,
+            }
+        }
+        keys
+    }
+
+    /// [`Self::match_chain`] with the min-run gate applied — the *hit*
+    /// semantics (what counts as cached for stats and `prefix_tokens`).
+    fn match_keys(&self, ids: &[i32]) -> Vec<u64> {
+        let mut keys = self.match_chain(ids);
+        if keys.len() < self.cfg.min_block_run.max(1) {
+            keys.clear();
+        }
+        keys
+    }
+
+    /// Cached prompt-prefix tokens a request with these ids would reuse
+    /// right now (0 when the cache is off or cold).
+    pub fn lookup_prefix(&self, ids: &[i32]) -> usize {
+        self.match_keys(ids).len() * self.block_tokens
+    }
+
+    /// Admission pre-check estimate, one chain walk: `(est_blocks,
+    /// suffix_blocks)` — the blocks an [`Self::admit_prefix`] of these
+    /// ids would allocate *now* (uncached suffix + generation budget),
+    /// and the uncached *prompt* blocks alone (the prefill-rung grouping
+    /// key: prefill work scales with the suffix, not the budget).
+    /// Computed over the ungated resident chain (min-run-gated blocks
+    /// are still reused, only not counted as hits). Optimistic: cached
+    /// blocks can be evicted between the check and the reservation, and
+    /// the reservation at prefill time is authoritative.
+    pub fn admission_need(&self, ids: &[i32], max_new: usize) -> (usize, usize) {
+        let prompt = ids.len().max(1);
+        if !self.cfg.enabled {
+            return (
+                self.blocks_for(prompt + max_new),
+                self.blocks_for(prompt),
+            );
+        }
+        let full = ids.len() / self.block_tokens;
+        let resident = self.match_chain(ids).len();
+        let tail = prompt - full * self.block_tokens;
+        (
+            (full - resident) + self.blocks_for(tail + max_new),
+            (full - resident) + self.blocks_for(tail),
+        )
+    }
+
+    /// The `est_blocks` half of [`Self::admission_need`].
+    pub fn blocks_needed(&self, ids: &[i32], max_new: usize) -> usize {
+        self.admission_need(ids, max_new).0
+    }
+
+    /// Cached blocks reclaimable on demand (unreferenced, no referenced
+    /// descendants) — O(1) via the maintained pin count.
+    fn reclaimable_blocks(&self) -> usize {
+        self.cache.len() - self.pinned_count
+    }
+
+    /// Blocks an admission can draw on: free plus reclaimable cache.
+    pub fn available_blocks(&self) -> usize {
+        self.free_blocks + self.reclaimable_blocks()
+    }
+
     /// Can a sequence with this worst-case token need be admitted now?
     pub fn can_admit(&self, max_tokens: usize) -> bool {
-        self.blocks_for(max_tokens) <= self.free_blocks
+        self.blocks_for(max_tokens) <= self.available_blocks()
+    }
+
+    /// Can `blocks` more blocks be reserved now?
+    pub fn can_admit_blocks(&self, blocks: usize) -> bool {
+        blocks <= self.available_blocks()
+    }
+
+    /// Evict one unreferenced leaf (LRU), freeing its block.
+    ///
+    /// Victim selection scans the tree — O(cache) — but only when a
+    /// victim exists: every reclaimable subtree bottoms out in an
+    /// evictable leaf, so `reclaimable == 0 ⇔ nothing evictable`, and
+    /// that O(1) guard makes the fruitless calls (a full-but-pinned pool
+    /// probed on every admission retry / watermark pass) free. Scans
+    /// that do run each free a block, and the pool bounds the tree.
+    fn evict_one(&mut self) -> bool {
+        if self.reclaimable_blocks() == 0 {
+            return false;
+        }
+        let victim = self
+            .cache
+            .iter()
+            .filter(|(_, n)| n.refs == 0 && n.children == 0)
+            .min_by_key(|(k, n)| (n.last_use, **k))
+            .map(|(k, _)| *k);
+        let Some(k) = victim else { return false };
+        let node = self.cache.remove(&k).expect("victim exists");
+        if let Some(p) = node.parent {
+            if let Some(pn) = self.cache.get_mut(&p) {
+                pn.children -= 1;
+            }
+        }
+        self.free_blocks += 1;
+        self.stats.evicted_blocks += 1;
+        true
+    }
+
+    /// Make at least `need` blocks free, evicting cached blocks LRU.
+    fn ensure_free(&mut self, need: usize) -> bool {
+        while self.free_blocks < need {
+            if !self.evict_one() {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Evict unreferenced cache past the resident-block watermark.
+    fn enforce_watermark(&mut self) {
+        if !self.cfg.enabled {
+            return;
+        }
+        let limit = (self.cfg.evict_watermark.clamp(0.0, 1.0)
+            * self.total_blocks as f64)
+            .floor() as usize;
+        while self.total_blocks - self.free_blocks > limit {
+            if !self.evict_one() {
+                break;
+            }
+        }
     }
 
     /// Admit a sequence, reserving blocks for its full token budget
-    /// (prompt + max generation).
+    /// (prompt + max generation). No prefix sharing — the legacy path,
+    /// and the exact accounting used when the cache is disabled.
     pub fn admit(&mut self, id: SeqId, prompt_tokens: usize, max_new: usize) -> Result<()> {
         if self.seqs.contains_key(&id) {
             bail!("sequence {id:?} already admitted");
         }
         let reserved_tokens = prompt_tokens + max_new;
         let need = self.blocks_for(reserved_tokens);
-        if need > self.free_blocks {
+        if !self.ensure_free(need) {
             bail!(
                 "kv pool exhausted: need {need} blocks, {} free",
                 self.free_blocks
@@ -73,6 +373,9 @@ impl KvBlockManager {
         self.free_blocks -= need;
         self.seqs.insert(id, SeqAlloc {
             blocks: need,
+            shared: Vec::new(),
+            preexisting: 0,
+            hit_tokens: 0,
             tokens: prompt_tokens,
             reserved_tokens,
         });
@@ -80,7 +383,117 @@ impl KvBlockManager {
         Ok(())
     }
 
-    /// Record one generated token.
+    /// Prefix-aware admission: share the cached prompt-prefix blocks
+    /// (refcounted), reserve fresh blocks only for the uncached suffix
+    /// plus the generation budget, and insert the prompt's full blocks
+    /// into the radix tree for later requests. Returns the cached token
+    /// count (the engine's `prefix_tokens` offset). Falls back to
+    /// [`Self::admit`] when the cache is disabled.
+    pub fn admit_prefix(&mut self, id: SeqId, ids: &[i32], max_new: usize) -> Result<usize> {
+        if !self.cfg.enabled {
+            self.admit(id, ids.len().max(1), max_new)?;
+            return Ok(0);
+        }
+        if self.seqs.contains_key(&id) {
+            bail!("sequence {id:?} already admitted");
+        }
+        let prompt = ids.len().max(1);
+        let full = ids.len() / self.block_tokens;
+        // The ungated resident chain: every node is reused (referenced),
+        // but only a run ≥ min_block_run counts as a *hit* (the engine's
+        // skip offset and the hit/miss stats).
+        let chain = self.match_chain(ids);
+        let resident = chain.len();
+        let hit_blocks = if resident >= self.cfg.min_block_run.max(1) {
+            resident
+        } else {
+            0
+        };
+        let tail = prompt - full * self.block_tokens;
+        let need = (full - resident) + self.blocks_for(tail + max_new);
+        // Pin the resident chain (refs > 0 blocks eviction) before
+        // making room for the suffix.
+        self.lru_tick += 1;
+        let tick = self.lru_tick;
+        for &k in &chain {
+            let n = self.cache.get_mut(&k).expect("resident node exists");
+            n.refs += 1;
+            n.last_use = tick;
+        }
+        for &k in &chain {
+            self.adjust_live(Some(k), 1);
+        }
+        if !self.ensure_free(need) {
+            for &k in &chain {
+                self.cache.get_mut(&k).expect("pinned node exists").refs -= 1;
+            }
+            for &k in &chain {
+                self.adjust_live(Some(k), -1);
+            }
+            bail!(
+                "kv pool exhausted: need {need} blocks, {} free",
+                self.free_blocks
+            );
+        }
+        self.free_blocks -= need;
+        // Insert the missed full prompt blocks as new shared nodes,
+        // branching off the resident tip (copy-on-write: the first
+        // divergent block gets a fresh physical block; shared blocks are
+        // never written).
+        let mut shared = chain;
+        let mut private = self.blocks_for(tail + max_new);
+        let mut parent_key = shared.last().copied();
+        let mut ph = parent_key.unwrap_or(ROOT_HASH);
+        let mut inserted = resident;
+        while inserted < full {
+            let chunk = &ids[inserted * self.block_tokens..(inserted + 1) * self.block_tokens];
+            let h = chain_hash(ph, chunk);
+            if self.cache.contains_key(&h) {
+                // An identical chain would already be in `chain`, so an
+                // occupied key is a true hash collision: keep this and
+                // the remaining full blocks private instead of
+                // corrupting the tree.
+                break;
+            }
+            self.cache.insert(h, CacheNode {
+                parent: parent_key,
+                tokens: chunk.to_vec(),
+                refs: 1,
+                children: 0,
+                live_desc: 0,
+                last_use: tick,
+            });
+            if let Some(pk) = parent_key {
+                self.cache.get_mut(&pk).expect("parent exists").children += 1;
+            }
+            self.adjust_live(Some(h), 1);
+            shared.push(h);
+            parent_key = Some(h);
+            ph = h;
+            inserted += 1;
+        }
+        // Collision fallback: un-inserted full blocks stay private
+        // (blocks_for(k·bt + r) = k + blocks_for(r), so the per-sequence
+        // block invariant still holds exactly).
+        private += full - inserted;
+        let cached = hit_blocks * self.block_tokens;
+        self.seqs.insert(id, SeqAlloc {
+            blocks: private,
+            shared,
+            preexisting: resident,
+            hit_tokens: cached,
+            tokens: prompt,
+            reserved_tokens: prompt + max_new,
+        });
+        self.peak_blocks = self.peak_blocks.max(self.used_blocks());
+        self.stats.hit_tokens += cached as u64;
+        self.stats.miss_tokens += (prompt - cached) as u64;
+        self.enforce_watermark();
+        Ok(cached)
+    }
+
+    /// Record one generated token (always lands in a private block — the
+    /// reservation covers tail + budget, so shared blocks stay read-only).
     pub fn append_token(&mut self, id: SeqId) -> Result<()> {
         let a = self
             .seqs
@@ -93,17 +506,86 @@ impl KvBlockManager {
         Ok(())
     }
 
-    /// Release a finished sequence; returns blocks freed.
+    /// Release a finished sequence; returns its private blocks freed.
+    /// Shared prefix blocks drop a reference but stay cache-resident for
+    /// future hits (reclaimed LRU on demand or past the watermark).
     pub fn release(&mut self, id: SeqId) -> usize {
         match self.seqs.remove(&id) {
             Some(a) => {
                 self.free_blocks += a.blocks;
+                for k in a.shared.iter().rev() {
+                    if let Some(n) = self.cache.get_mut(k) {
+                        n.refs = n.refs.saturating_sub(1);
+                    }
+                }
+                for k in a.shared.iter().rev() {
+                    self.adjust_live(Some(*k), -1);
+                }
+                self.enforce_watermark();
                 a.blocks
             }
             None => 0,
         }
     }
 
+    /// Release a sequence whose prefill never executed (engine-refused
+    /// rung) and *discard* the chain blocks it inserted instead of
+    /// keeping them resident: advertising them as cached would hand
+    /// later identical prompts a skip offset over KV that was never
+    /// computed. Blocks that were resident before this admission hold
+    /// KV from earlier, successful prefills and are kept.
+    pub fn release_discard(&mut self, id: SeqId) -> usize {
+        let (inserted, hit, miss) = self
+            .seqs
+            .get(&id)
+            .map(|a| {
+                (
+                    a.shared[a.preexisting..].to_vec(),
+                    a.hit_tokens,
+                    // Prefill never ran, so no tokens were appended and
+                    // `tokens` is still the admission-time prompt count.
+                    a.tokens.saturating_sub(a.hit_tokens),
+                )
+            })
+            .unwrap_or_default();
+        // Roll the admission's hit/miss counters back too: the scaler's
+        // hit-rate signal must not count requests that were never served.
+        self.stats.hit_tokens = self.stats.hit_tokens.saturating_sub(hit as u64);
+        self.stats.miss_tokens = self.stats.miss_tokens.saturating_sub(miss as u64);
+        let freed = self.release(id);
+        for k in inserted.iter().rev() {
+            match self.cache.get(k) {
+                // Already evicted (watermark ran inside release) — the
+                // rest of the chain may still need discarding.
+                None => continue,
+                Some(n) if n.refs == 0 && n.children == 0 => {}
+                // Still referenced or branched: another live sequence
+                // shares it (callers release failed rungs in reverse
+                // admission order so this resolves within the rung).
+                _ => break,
+            }
+            let node = self.cache.remove(k).expect("checked above");
+            if let Some(p) = node.parent {
+                if let Some(pn) = self.cache.get_mut(&p) {
+                    pn.children -= 1;
+                }
+            }
+            self.free_blocks += 1;
+        }
+        freed
+    }
+
+    /// Drop every reclaimable cache block (tests / explicit flush).
+    /// Returns the blocks freed.
+    pub fn purge_cache(&mut self) -> usize {
+        let mut n = 0;
+        while self.evict_one() {
+            n += 1;
+        }
+        n
+    }
+
+    /// Physically occupied blocks (held by sequences or cache-resident).
     pub fn used_blocks(&self) -> usize {
         self.total_blocks - self.free_blocks
     }
@@ -112,22 +594,32 @@ impl KvBlockManager {
         self.free_blocks
     }
 
+    /// Blocks resident in the prefix cache (shared + unreferenced).
+    pub fn cache_blocks(&self) -> usize {
+        self.cache.len()
+    }
+
     pub fn active_seqs(&self) -> usize {
         self.seqs.len()
     }
 
-    /// Occupancy in [0, 1].
+    /// Referenced occupancy in [0, 1] — the admission/scaling signal.
+    /// Cached-but-unreferenced blocks are reclaimable on demand and
+    /// excluded (with the cache off this is exactly used/total).
     pub fn occupancy(&self) -> f64 {
-        self.used_blocks() as f64 / self.total_blocks as f64
+        let referenced = self.total_blocks - self.free_blocks - self.reclaimable_blocks();
+        referenced as f64 / self.total_blocks as f64
     }
 
     /// Internal fragmentation: reserved-but-unused token space as a
     /// fraction of held capacity (the block-size ablation's metric).
+    /// Shared blocks count once per referencing sequence — sharing shows
+    /// up as the same held token appearing in several reservations.
     pub fn internal_fragmentation(&self) -> f64 {
         let mut held_tokens = 0usize;
         let mut used_tokens = 0usize;
         for a in self.seqs.values() {
-            held_tokens += a.blocks * self.block_tokens;
+            held_tokens += (a.blocks + a.shared.len()) * self.block_tokens;
             used_tokens += a.tokens;
         }
         if held_tokens == 0 {
@@ -137,20 +629,78 @@ impl KvBlockManager {
         }
     }
 
-    /// Invariant check used by property tests.
+    /// Invariant check used by property tests: block conservation,
+    /// per-sequence reservations, refcounts and tree-link consistency.
     pub fn check_invariants(&self) -> Result<()> {
         let held: usize = self.seqs.values().map(|a| a.blocks).sum();
-        if held + self.free_blocks != self.total_blocks {
-            bail!("block accounting broken: {held} held + {} free != {}",
-                  self.free_blocks, self.total_blocks);
+        if held + self.cache.len() + self.free_blocks != self.total_blocks {
+            bail!(
+                "block accounting broken: {held} private + {} cached + {} free != {}",
+                self.cache.len(),
+                self.free_blocks,
+                self.total_blocks
+            );
         }
+        let mut want_refs: BTreeMap<u64, usize> = BTreeMap::new();
         for (id, a) in &self.seqs {
             if a.tokens > a.reserved_tokens {
                 bail!("{id:?} tokens exceed reservation");
             }
-            if self.blocks_for(a.reserved_tokens) != a.blocks {
-                bail!("{id:?} holds wrong block count");
+            let shared_tokens = a.shared.len() * self.block_tokens;
+            if self.blocks_for(a.reserved_tokens.saturating_sub(shared_tokens)) != a.blocks {
+                bail!("{id:?} holds wrong private block count");
             }
+            for k in &a.shared {
+                if !self.cache.contains_key(k) {
+                    bail!("{id:?} references evicted cache block {k:#x}");
+                }
+                *want_refs.entry(*k).or_insert(0) += 1;
+            }
+        }
+        let mut want_children: BTreeMap<u64, usize> = BTreeMap::new();
+        let mut want_live: BTreeMap<u64, usize> = BTreeMap::new();
+        for (k, n) in &self.cache {
+            if n.refs != want_refs.get(k).copied().unwrap_or(0) {
+                bail!("node {k:#x} refcount {} != referencing seqs", n.refs);
+            }
+            if let Some(p) = n.parent {
+                if !self.cache.contains_key(&p) {
+                    bail!("node {k:#x} has dangling parent {p:#x}");
+                }
+                *want_children.entry(p).or_insert(0) += 1;
+            }
+            if n.tokens.len() != self.block_tokens {
+                bail!("node {k:#x} holds {} tokens, not a full block", n.tokens.len());
+            }
+            if n.refs > 0 {
+                let mut cur = Some(*k);
+                while let Some(h) = cur {
+                    *want_live.entry(h).or_insert(0) += n.refs;
+                    cur = self.cache.get(&h).and_then(|x| x.parent);
+                }
+            }
+        }
+        let mut pinned = 0usize;
+        for (k, n) in &self.cache {
+            if n.children != want_children.get(k).copied().unwrap_or(0) {
+                bail!("node {k:#x} child count {} inconsistent", n.children);
+            }
+            if n.live_desc != want_live.get(k).copied().unwrap_or(0) {
+                bail!(
+                    "node {k:#x} live_desc {} != subtree refs {}",
+                    n.live_desc,
+                    want_live.get(k).copied().unwrap_or(0)
+                );
+            }
+            if n.live_desc > 0 {
+                pinned += 1;
+            }
+        }
+        if pinned != self.pinned_count {
+            bail!(
+                "pinned count {} != nodes with referenced descendants {pinned}",
+                self.pinned_count
+            );
         }
         Ok(())
     }
@@ -233,5 +783,226 @@ mod tests {
         kv.release(SeqId(2));
         assert_eq!(kv.peak_blocks, 8);
         assert_eq!(kv.used_blocks(), 0);
+    }
+
+    // -- prefix cache ------------------------------------------------------
+
+    fn prefix_kv(total: usize, block: usize) -> KvBlockManager {
+        KvBlockManager::with_prefix_cache(total, block, PrefixCacheConfig::default())
+    }
+
+    fn ids(range: std::ops::Range<i32>) -> Vec<i32> {
+        range.collect()
+    }
+
+    #[test]
+    fn prefix_hit_shares_blocks_and_refcounts() {
+        let mut kv = prefix_kv(16, 4);
+        let prompt = ids(0..8); // 2 full blocks
+        // First admission misses everything: 2 shared nodes + 1 private.
+        assert_eq!(kv.admit_prefix(SeqId(1), &prompt, 4).unwrap(), 0);
+        assert_eq!(kv.used_blocks(), 3);
+        assert_eq!(kv.cache_blocks(), 2);
+        assert_eq!(kv.stats.miss_tokens, 8);
+        // Second admission hits the full 2-block prefix: +1 private only.
+        assert_eq!(kv.admit_prefix(SeqId(2), &prompt, 4).unwrap(), 8);
+        assert_eq!(kv.used_blocks(), 4);
+        assert_eq!(kv.stats.hit_tokens, 8);
+        kv.check_invariants().unwrap();
+        // Releasing one keeps the shared blocks referenced by the other.
+        kv.release(SeqId(1));
+        assert_eq!(kv.cache_blocks(), 2);
+        kv.check_invariants().unwrap();
+        kv.release(SeqId(2));
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prefix_release_keeps_blocks_cached_for_reuse() {
+        let mut kv = prefix_kv(16, 4);
+        let prompt = ids(0..8);
+        kv.admit_prefix(SeqId(1), &prompt, 4).unwrap();
+        kv.release(SeqId(1));
+        // The prefix stays resident after release…
+        assert_eq!(kv.lookup_prefix(&prompt), 8);
+        assert_eq!(kv.cache_blocks(), 2);
+        // …so the next request still hits it.
+        assert_eq!(kv.admit_prefix(SeqId(2), &prompt, 4).unwrap(), 8);
+        kv.release(SeqId(2));
+        // Explicit purge reclaims everything.
+        assert_eq!(kv.purge_cache(), 2);
+        assert_eq!(kv.free_blocks(), 16);
+        assert_eq!(kv.lookup_prefix(&prompt), 0);
+    }
+
+    #[test]
+    fn prefix_divergent_suffix_forks_radix_tree() {
+        let mut kv = prefix_kv(32, 4);
+        let a: Vec<i32> = [&ids(0..4)[..], &ids(100..104)[..]].concat();
+        let b: Vec<i32> = [&ids(0..4)[..], &ids(200..204)[..]].concat();
+        kv.admit_prefix(SeqId(1), &a, 2).unwrap();
+        // b shares block 0, then copy-on-writes at the divergent block:
+        // the tree branches, a's second block is untouched.
+        assert_eq!(kv.admit_prefix(SeqId(2), &b, 2).unwrap(), 4);
+        assert_eq!(kv.cache_blocks(), 3, "root block + two divergent children");
+        kv.check_invariants().unwrap();
+        // Both suffixes remain reachable.
+        kv.release(SeqId(1));
+        kv.release(SeqId(2));
+        assert_eq!(kv.lookup_prefix(&a), 8);
+        assert_eq!(kv.lookup_prefix(&b), 8);
+    }
+
+    #[test]
+    fn prefix_lru_evicts_oldest_unreferenced() {
+        // Pool of 4: two cached 1-block prefixes fill it alongside two
+        // private blocks; a third admission must evict the LRU one.
+        let mut kv = KvBlockManager::with_prefix_cache(4, 4, PrefixCacheConfig {
+            enabled: true,
+            min_block_run: 1,
+            evict_watermark: 1.0, // no watermark pressure — demand-only
+        });
+        let old = ids(0..4);
+        let newer = ids(10..14);
+        kv.admit_prefix(SeqId(1), &old, 1).unwrap();
+        kv.release(SeqId(1));
+        kv.admit_prefix(SeqId(2), &newer, 1).unwrap();
+        kv.release(SeqId(2));
+        assert_eq!(kv.cache_blocks(), 2);
+        // Needs 3 blocks (1 shared-new + 2 private) with only 2 free:
+        // exactly one eviction, and it must be the LRU (old) block.
+        let third = ids(20..24);
+        kv.admit_prefix(SeqId(3), &third, 5).unwrap();
+        assert_eq!(kv.stats.evicted_blocks, 1);
+        assert_eq!(kv.lookup_prefix(&old), 0, "LRU evicted the oldest");
+        assert_eq!(kv.lookup_prefix(&newer), 4, "newer survived");
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prefix_min_block_run_gates_short_matches() {
+        let mut kv = KvBlockManager::with_prefix_cache(32, 4, PrefixCacheConfig {
+            enabled: true,
+            min_block_run: 2,
+            evict_watermark: 0.9,
+        });
+        let short = ids(0..4); // 1 full block < min run
+        let long = ids(0..8); // 2 full blocks ≥ min run
+        kv.admit_prefix(SeqId(1), &long, 2).unwrap();
+        kv.release(SeqId(1));
+        assert_eq!(kv.lookup_prefix(&short), 0, "1-block match below min run");
+        assert_eq!(kv.lookup_prefix(&long), 8);
+        assert_eq!(kv.admit_prefix(SeqId(2), &long, 2).unwrap(), 8);
+        kv.release(SeqId(2));
+    }
+
+    #[test]
+    fn prefix_watermark_bounds_resident_cache() {
+        // Watermark 0.5 of 8 blocks: unreferenced cache must never leave
+        // residency above 4 blocks.
+        let mut kv = KvBlockManager::with_prefix_cache(8, 4, PrefixCacheConfig {
+            enabled: true,
+            min_block_run: 1,
+            evict_watermark: 0.5,
+        });
+        for i in 0..4i32 {
+            let p = ids(i * 10..i * 10 + 4);
+            kv.admit_prefix(SeqId(i as u64), &p, 1).unwrap();
+            kv.release(SeqId(i as u64));
+            assert!(kv.used_blocks() <= 4, "watermark exceeded: {}", kv.used_blocks());
+            kv.check_invariants().unwrap();
+        }
+        assert!(kv.stats.evicted_blocks > 0);
+    }
+
+    #[test]
+    fn prefix_disabled_matches_legacy_accounting() {
+        let mut kv = KvBlockManager::new(16, 16);
+        // admit_prefix degrades to the legacy reservation: no cache
+        // nodes, no hits, identical block math.
+        assert_eq!(kv.admit_prefix(SeqId(1), &ids(0..40), 24).unwrap(), 0);
+        assert_eq!(kv.used_blocks(), 4); // blocks_for(40 + 24)
+        assert_eq!(kv.cache_blocks(), 0);
+        assert_eq!(kv.admit_prefix(SeqId(2), &ids(0..40), 24).unwrap(), 0);
+        assert_eq!(kv.used_blocks(), 8, "no sharing when disabled");
+        assert_eq!(kv.stats.hit_tokens + kv.stats.miss_tokens, 0);
+        kv.release(SeqId(1));
+        kv.release(SeqId(2));
+        assert_eq!(kv.free_blocks(), 16);
+    }
+
+    #[test]
+    fn prefix_failed_prefill_discards_uncomputed_blocks() {
+        let mut kv = prefix_kv(16, 4);
+        let prompt = ids(0..8);
+        kv.admit_prefix(SeqId(1), &prompt, 4).unwrap();
+        // The engine refused the rung: the chain was never prefilled, so
+        // it must not be advertised as cached KV.
+        kv.release_discard(SeqId(1));
+        assert_eq!(kv.lookup_prefix(&prompt), 0);
+        assert_eq!(kv.free_blocks(), 16);
+        assert_eq!(kv.stats.miss_tokens, 0, "failed admission's stats roll back");
+        kv.check_invariants().unwrap();
+        // A chain still referenced by a live (really prefilled) sequence
+        // survives a failed fork's discard.
+        kv.admit_prefix(SeqId(2), &prompt, 4).unwrap();
+        kv.admit_prefix(SeqId(3), &prompt, 4).unwrap();
+        assert_eq!(kv.stats.hit_tokens, 8);
+        kv.release_discard(SeqId(3));
+        assert_eq!(kv.lookup_prefix(&prompt), 8, "live-referenced blocks survive");
+        assert_eq!(kv.stats.hit_tokens, 0, "phantom hit rolled back");
+        assert_eq!(kv.stats.miss_tokens, 8, "seq 2's real prefill still counted");
+        kv.release(SeqId(2));
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prefix_occupancy_counts_referenced_blocks_only() {
+        let mut kv = prefix_kv(16, 4);
+        kv.admit_prefix(SeqId(1), &ids(0..8), 4).unwrap();
+        assert!(kv.occupancy() > 0.0);
+        kv.release(SeqId(1));
+        // Cached blocks are reclaimable → zero *referenced* occupancy,
+        // though the blocks are physically resident.
+        assert_eq!(kv.occupancy(), 0.0);
+        assert_eq!(kv.used_blocks(), 2);
+    }
+
+    #[test]
+    fn prefix_invariants_hold_through_churn() {
+        // SplitMix64 churn mirroring `invariants_hold_through_churn`,
+        // with admissions forking off shared prefix families.
+        let mut kv = prefix_kv(32, 4);
+        let mut rng = crate::util::rng::SplitMix64::new(11);
+        let bases: Vec<Vec<i32>> = (0..3)
+            .map(|b| (0..16).map(|i| (b * 1000 + i) as i32).collect())
+            .collect();
+        let mut live: Vec<SeqId> = Vec::new();
+        for i in 0..600u64 {
+            if rng.chance(0.6) {
+                let base = &bases[rng.below(3) as usize];
+                let cut = rng.below(base.len() as u64 + 1) as usize;
+                let mut p: Vec<i32> = base[..cut].to_vec();
+                for _ in 0..rng.below(8) {
+                    p.push(5000 + rng.below(64) as i32);
+                }
+                let max_new = rng.below(8) as usize + 1;
+                if kv.can_admit_blocks(kv.blocks_needed(&p, max_new))
+                    && kv.admit_prefix(SeqId(i), &p, max_new).is_ok()
+                {
+                    live.push(SeqId(i));
+                }
+            } else if !live.is_empty() {
+                let idx = rng.below(live.len() as u64) as usize;
+                kv.release(live.swap_remove(idx));
+            }
+            kv.check_invariants().unwrap();
+        }
+        for id in live {
+            kv.release(id);
+        }
+        kv.check_invariants().unwrap();
+        kv.purge_cache();
+        assert_eq!(kv.free_blocks(), 32, "all blocks recovered after purge");
     }
 }

@@ -70,9 +70,25 @@ pub fn service_time(
     out_tokens: usize,
     rng: &mut SplitMix64,
 ) -> ServiceTime {
+    service_time_with_prefix(spec, backend, in_tokens, 0, out_tokens, rng)
+}
+
+/// [`service_time`] with a prefix-cache offset: `cached_tokens` of the
+/// prompt have KV-resident blocks and skip prefill compute, so only the
+/// uncached suffix pays prefill time. Draws the same jitter stream as
+/// the uncached path, so cached/uncached sweeps stay sample-comparable.
+pub fn service_time_with_prefix(
+    spec: &ModelSpec,
+    backend: BackendKind,
+    in_tokens: usize,
+    cached_tokens: usize,
+    out_tokens: usize,
+    rng: &mut SplitMix64,
+) -> ServiceTime {
     let lf = backend.latency_factor();
     let jitter = rng.lognormal(0.0, 0.1);
-    let prefill = in_tokens as f64 / spec.prefill_tps * lf * jitter;
+    let suffix = in_tokens.saturating_sub(cached_tokens);
+    let prefill = suffix as f64 / spec.prefill_tps * lf * jitter;
     let jitter2 = rng.lognormal(0.0, 0.1);
     let decode = out_tokens as f64 / spec.decode_tps * lf * jitter2;
     ServiceTime { prefill_s: prefill, decode_s: decode }
@@ -133,6 +149,24 @@ mod tests {
             let st = service_time(&z[0], BackendKind::Vllm, 0, 100, &mut rng);
             assert!(st.decode_s > base * 0.5 && st.decode_s < base * 2.0);
         }
+    }
+
+    #[test]
+    fn prefix_offset_cuts_prefill_only() {
+        let z = zoo();
+        // Same seed → same jitter draws, isolating the cached offset.
+        let mut r1 = SplitMix64::new(9);
+        let mut r2 = SplitMix64::new(9);
+        let cold = service_time(&z[1], BackendKind::Vllm, 200, 100, &mut r1);
+        let warm =
+            service_time_with_prefix(&z[1], BackendKind::Vllm, 200, 150, 100, &mut r2);
+        assert!(warm.prefill_s < cold.prefill_s * 0.5);
+        assert_eq!(warm.decode_s, cold.decode_s);
+        // Over-claimed cache saturates at zero prefill, never negative.
+        let mut r3 = SplitMix64::new(9);
+        let over =
+            service_time_with_prefix(&z[1], BackendKind::Vllm, 100, 500, 10, &mut r3);
+        assert_eq!(over.prefill_s, 0.0);
     }
 
     #[test]

@@ -7,6 +7,7 @@
 
 use anyhow::Result;
 
+use crate::backend::kv_cache::PrefixCacheConfig;
 use crate::util::json::Json;
 
 /// Non-negative preference parameters (α, λ, μ) of the orchestration
@@ -175,6 +176,12 @@ pub struct PoolConfig {
     /// admitted work (reservation-based, no mid-flight OOM).
     pub kv_blocks: usize,
     pub kv_block_tokens: usize,
+    /// Radix prefix cache over the paged pool (`pool.prefix_cache.*`):
+    /// shared prompt prefixes are refcounted across sequences, admission
+    /// charges only the uncached suffix, and unreferenced blocks evict
+    /// LRU past the watermark. On by default; disabling restores the
+    /// exact full-reservation accounting.
+    pub prefix_cache: PrefixCacheConfig,
     /// How often the pool scaler re-plans per-tier active replicas from
     /// queue depth + slot occupancy.
     pub scale_interval_s: f64,
@@ -195,6 +202,7 @@ impl Default for PoolConfig {
             flush_timeout_s: 0.020,
             kv_blocks: 128,
             kv_block_tokens: 16,
+            prefix_cache: PrefixCacheConfig::default(),
             scale_interval_s: 2.0,
             health_deadline_s: 3.0,
         }
@@ -343,6 +351,14 @@ impl Config {
             self.pool.kv_blocks = p.usize_or("kv_blocks", self.pool.kv_blocks);
             self.pool.kv_block_tokens =
                 p.usize_or("kv_block_tokens", self.pool.kv_block_tokens);
+            if let Some(pc) = p.get("prefix_cache") {
+                self.pool.prefix_cache.enabled =
+                    pc.bool_or("enabled", self.pool.prefix_cache.enabled);
+                self.pool.prefix_cache.min_block_run = pc
+                    .usize_or("min_block_run", self.pool.prefix_cache.min_block_run);
+                self.pool.prefix_cache.evict_watermark = pc
+                    .f64_or("evict_watermark", self.pool.prefix_cache.evict_watermark);
+            }
             self.pool.scale_interval_s =
                 p.f64_or("scale_interval_s", self.pool.scale_interval_s);
             self.pool.health_deadline_s =
@@ -439,6 +455,26 @@ mod tests {
         assert_eq!(c.pool.max_prefill_batch, 4);
         assert_eq!(c.pool.kv_blocks, 128);
         assert!((c.pool.health_deadline_s - 3.0).abs() < 1e-12);
+        assert!(c.pool.prefix_cache.enabled, "prefix cache defaults on");
+    }
+
+    #[test]
+    fn overlay_prefix_cache_section() {
+        let mut c = Config::default();
+        assert!(c.pool.prefix_cache.enabled);
+        assert_eq!(c.pool.prefix_cache.min_block_run, 1);
+        assert!((c.pool.prefix_cache.evict_watermark - 0.9).abs() < 1e-12);
+        let j = Json::parse(
+            r#"{"pool":{"prefix_cache":{"enabled":false,"min_block_run":2,
+                "evict_watermark":0.75}}}"#,
+        )
+        .unwrap();
+        c.overlay(&j).unwrap();
+        assert!(!c.pool.prefix_cache.enabled);
+        assert_eq!(c.pool.prefix_cache.min_block_run, 2);
+        assert!((c.pool.prefix_cache.evict_watermark - 0.75).abs() < 1e-12);
+        // untouched pool knobs keep defaults
+        assert_eq!(c.pool.kv_blocks, 128);
     }
 
     #[test]

@@ -246,6 +246,8 @@ mod tests {
             wait_s: 0.1,
             router_overhead_s: 0.0,
             cost_usd: 0.01,
+            in_tokens: 60,
+            prefix_cached_tokens: 0,
         }
     }
 

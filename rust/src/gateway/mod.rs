@@ -111,6 +111,13 @@ pub struct GatewayMetrics {
     /// Sum of measured recovery times, µs (exported as
     /// `ps_recovery_seconds_total`).
     pub recovery_us_total: AtomicU64,
+    /// Prompt tokens served from the replicas' radix prefix caches
+    /// (prefill work skipped).
+    pub prefix_hit_tokens: AtomicU64,
+    /// Prompt tokens that had to be prefilled.
+    pub prefix_miss_tokens: AtomicU64,
+    /// Unreferenced prefix-cache blocks reclaimed (LRU).
+    pub prefix_evicted_blocks: AtomicU64,
     /// Formed-batch histogram: one counter per compiled rung, in
     /// [`DECODE_BATCHES`] order.
     pub batch_counts: [AtomicU64; N_DECODE_BATCHES],
@@ -389,6 +396,18 @@ impl LiveStack {
                 "ps_recovery_seconds_total".to_string(),
                 m.recovery_us_total.load(Ordering::Relaxed) as f64 / 1e6,
             ),
+            (
+                "ps_prefix_hit_tokens_total".to_string(),
+                c(&m.prefix_hit_tokens),
+            ),
+            (
+                "ps_prefix_miss_tokens_total".to_string(),
+                c(&m.prefix_miss_tokens),
+            ),
+            (
+                "ps_prefix_evicted_blocks_total".to_string(),
+                c(&m.prefix_evicted_blocks),
+            ),
         ];
         for (i, &b) in DECODE_BATCHES.iter().enumerate() {
             out.push((format!("ps_decode_b{b}_total"), c(&m.batch_counts[i])));
@@ -396,6 +415,10 @@ impl LiveStack {
         out.push((
             "ps_queue_depth".to_string(),
             self.shared.queues.iter().map(|q| q.len()).sum::<usize>() as f64,
+        ));
+        out.push((
+            "ps_prefix_cache_blocks".to_string(),
+            self.shared.prefix_cache_blocks() as f64,
         ));
         out.push(("ps_slots_in_use".to_string(), self.slots_in_use() as f64));
         out.push((
@@ -520,6 +543,9 @@ fn router_loop<E, F>(
     let mut recovery = RecoveryManager::new(true);
     sync_registry(&mut registry, &shared, &pool);
     let mut last_ctl = f64::NEG_INFINITY;
+    // Last-sampled per-tier prefix hit/miss totals: successive deltas
+    // give a per-interval hit rate (recent traffic only).
+    let mut prefix_last: [(u64, u64); 3] = [(0, 0); 3];
     loop {
         let job = jobs.recv_timeout(Duration::from_millis(100));
         let now = shared.epoch.elapsed().as_secs_f64();
@@ -608,6 +634,17 @@ fn router_loop<E, F>(
             );
             sync_registry(&mut registry, &shared, &pool);
             for ti in 0..3 {
+                // Windowed prefix hit rate: tokens served from cache vs
+                // prefilled since the last control pass (replica churn
+                // can shrink the cumulative sums — resync on regression).
+                let (h, m) = shared.tier_prefix_totals(ti);
+                let (lh, lm) = prefix_last[ti];
+                let (dh, dm) = if h >= lh && m >= lm {
+                    (h - lh, m - lm)
+                } else {
+                    (h, m)
+                };
+                prefix_last[ti] = (h, m);
                 let load = TierLoad {
                     queue_depth: shared.queues[ti].len(),
                     slots_in_use: shared.slots_in_tier(ti),
@@ -615,6 +652,11 @@ fn router_loop<E, F>(
                     idle_s: now
                         - shared.last_enqueue_us[ti].load(Ordering::Relaxed) as f64
                             / 1e6,
+                    prefix_hit_rate: if dh + dm == 0 {
+                        0.0
+                    } else {
+                        dh as f64 / (dh + dm) as f64
+                    },
                 };
                 if let Some(action) = scaler.plan_tier(
                     ti,

@@ -91,6 +91,13 @@ pub(crate) struct ReplicaCell {
     pub stop: AtomicBool,
     /// Occupied decode slots (buffered prefills included).
     pub inflight: AtomicUsize,
+    /// Prompt tokens this replica served from its prefix cache
+    /// (cumulative — the control loop's cache-adjusted demand signal).
+    pub prefix_hit_tokens: AtomicU64,
+    /// Prompt tokens this replica had to prefill (cumulative).
+    pub prefix_miss_tokens: AtomicU64,
+    /// Blocks resident in this replica's prefix cache (gauge).
+    pub prefix_cache_blocks: AtomicU64,
     /// Engine-factory error (set when Loading fails).
     pub error: Mutex<Option<String>>,
 }
@@ -104,6 +111,9 @@ impl ReplicaCell {
             kill: AtomicBool::new(false),
             stop: AtomicBool::new(false),
             inflight: AtomicUsize::new(0),
+            prefix_hit_tokens: AtomicU64::new(0),
+            prefix_miss_tokens: AtomicU64::new(0),
+            prefix_cache_blocks: AtomicU64::new(0),
             error: Mutex::new(None),
         }
     }
@@ -182,6 +192,35 @@ impl PoolShared {
             .unwrap()
             .iter()
             .map(|(_, c)| c.inflight.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Cumulative (prefix-hit, prefix-miss) prompt-token totals across
+    /// the tier's live replicas. The control loop differences successive
+    /// samples into a *windowed* hit rate for `Scaler::plan_tier` — a
+    /// since-boot rate would keep discounting demand long after the
+    /// workload shifts away from cached prefixes.
+    pub fn tier_prefix_totals(&self, tier: usize) -> (u64, u64) {
+        let (mut hit, mut miss) = (0u64, 0u64);
+        for (_, c) in self.cells[tier].lock().unwrap().iter() {
+            hit += c.prefix_hit_tokens.load(Ordering::Relaxed);
+            miss += c.prefix_miss_tokens.load(Ordering::Relaxed);
+        }
+        (hit, miss)
+    }
+
+    /// Blocks resident in prefix caches across the pool (the
+    /// `ps_prefix_cache_blocks` gauge).
+    pub fn prefix_cache_blocks(&self) -> usize {
+        self.cells
+            .iter()
+            .map(|m| {
+                m.lock()
+                    .unwrap()
+                    .iter()
+                    .map(|(_, c)| c.prefix_cache_blocks.load(Ordering::Relaxed) as usize)
+                    .sum::<usize>()
+            })
             .sum()
     }
 
@@ -652,9 +691,14 @@ pub(crate) fn replica_loop<E: StepEngine>(engine: E, ctx: ReplicaCtx) {
             max_inflight: ctx.pool.max_inflight.max(1),
             kv_blocks: ctx.pool.kv_blocks.max(1),
             kv_block_tokens: ctx.pool.kv_block_tokens.max(1),
+            prefix_cache: ctx.pool.prefix_cache,
         },
     );
     let mut held: Option<TierJob> = None;
+    // Last prefix-cache counters forwarded to the gateway (deltas feed
+    // the global `ps_prefix_*` counters; the cell publishes cumulatives
+    // for the per-tier hit-rate signal).
+    let mut prefix_seen = crate::backend::kv_cache::PrefixStats::default();
     // A replica whose engine errors on every step must not stay Ready
     // and black-hole the tier queue: after this many consecutive failed
     // ticks it reports Failed and the recovery manager redeploys it.
@@ -762,6 +806,29 @@ pub(crate) fn replica_loop<E: StepEngine>(engine: E, ctx: ReplicaCtx) {
                     job.reply.put(Err(msg));
                 }
                 ctx.cell.inflight.store(sched.inflight(), Ordering::Relaxed);
+                let ps = sched.prefix_stats();
+                ctx.metrics.prefix_hit_tokens.fetch_add(
+                    ps.hit_tokens - prefix_seen.hit_tokens,
+                    Ordering::Relaxed,
+                );
+                ctx.metrics.prefix_miss_tokens.fetch_add(
+                    ps.miss_tokens - prefix_seen.miss_tokens,
+                    Ordering::Relaxed,
+                );
+                ctx.metrics.prefix_evicted_blocks.fetch_add(
+                    ps.evicted_blocks - prefix_seen.evicted_blocks,
+                    Ordering::Relaxed,
+                );
+                prefix_seen = ps;
+                ctx.cell
+                    .prefix_hit_tokens
+                    .store(ps.hit_tokens, Ordering::Relaxed);
+                ctx.cell
+                    .prefix_miss_tokens
+                    .store(ps.miss_tokens, Ordering::Relaxed);
+                ctx.cell
+                    .prefix_cache_blocks
+                    .store(sched.kv_cached_blocks() as u64, Ordering::Relaxed);
                 if tick.stepped == 0 && tick.prefilled == 0 {
                     if let Some(wait) = tick.wait_s {
                         // Holding for batch-mates: sleep out the flush

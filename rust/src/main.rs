@@ -157,6 +157,9 @@ fn cmd_sim(cfg: &Config, args: &Args) -> Result<()> {
     let mut sc = SimConfig::defaults();
     sc.router_mode = cfg.router.mode;
     sc.profile = cfg.profile;
+    // The serving-pool knobs (prefix cache, KV block geometry) drive the
+    // sim's hit-rate-dependent prefill model.
+    sc.pool = cfg.pool.clone();
     sc.n_requests = args.opt_usize("requests", 20_000)?;
     sc.rate_qps = args.opt_f64("rate", 20.0)?;
     sc.seed = args.opt_u64("seed", 42)?;
@@ -184,12 +187,13 @@ fn cmd_sim(cfg: &Config, args: &Args) -> Result<()> {
     println!("{}", eval::table1(&rep, &TABLE1_RATES));
     println!(
         "success {:.1}%  mean latency {:.1}s  cost/query ${:.4}  \
-         GPU util {:.1}%  throughput {:.1} qps",
+         GPU util {:.1}%  throughput {:.1} qps  prefix hits {:.1}%",
         rep.success_rate() * 100.0,
         rep.mean_latency_s(),
         rep.cost_per_query_usd(),
         rep.gpu_utilization() * 100.0,
-        rep.throughput_qps()
+        rep.throughput_qps(),
+        rep.prefix_hit_token_rate() * 100.0
     );
     Ok(())
 }

@@ -45,7 +45,19 @@ pub struct TierLoad {
     pub active_replicas: usize,
     /// Seconds since the tier last saw an enqueue.
     pub idle_s: f64,
+    /// Fraction of prefill tokens the tier's replicas served from their
+    /// radix prefix caches over the last control interval (0 when the
+    /// cache is off or cold). A warm cache means queued requests bring
+    /// only suffix prefill, so the planner discounts queue pressure
+    /// accordingly; the caller supplies a *windowed* rate so the
+    /// discount tracks recent traffic, not since-boot history.
+    pub prefix_hit_rate: f64,
 }
+
+/// Queue-pressure discount at a fully-warm prefix cache: a hit skips the
+/// shared-prefix prefill but still pays suffix prefill and the full
+/// decode, so at most half the queue signal is relieved.
+const PREFIX_QUEUE_RELIEF: f64 = 0.5;
 
 /// Little's-law scaler with cooldown and warm pools.
 ///
@@ -174,7 +186,11 @@ impl Scaler {
     ) -> Option<ScaleAction> {
         let idx = tier.min(self.cooldown_until.len().saturating_sub(1));
         let warm = self.cfg.warm_pool[tier.min(2)].min(max_replicas);
-        let demand = load.queue_depth + load.slots_in_use;
+        // Cache-adjusted demand: discount queued work by the observed
+        // prefix hit rate (slots in use are already-admitted work and
+        // count in full).
+        let relief = 1.0 - PREFIX_QUEUE_RELIEF * load.prefix_hit_rate.clamp(0.0, 1.0);
+        let demand = (load.queue_depth as f64 * relief).ceil() as usize + load.slots_in_use;
         let need = demand.div_ceil(self.slots_per_replica);
         let current = load.active_replicas;
         let target = self.decide(
@@ -397,6 +413,7 @@ mod tests {
             slots_in_use: 4,
             active_replicas: 1,
             idle_s: 0.0,
+            prefix_hit_rate: 0.0,
         };
         assert_eq!(tier_target(&mut s, 0, load, 4, 100.0), 3);
     }
@@ -409,6 +426,7 @@ mod tests {
             slots_in_use: 0,
             active_replicas: 1,
             idle_s: 0.0,
+            prefix_hit_rate: 0.0,
         };
         assert_eq!(tier_target(&mut s, 0, load, 8, 0.0), 4);
         // Still under-provisioned, but inside the cooldown window.
@@ -425,6 +443,7 @@ mod tests {
             slots_in_use: 0,
             active_replicas: 2,
             idle_s: 200.0,
+            prefix_hit_rate: 0.0,
         };
         assert_eq!(tier_target(&mut s, 2, load, 2, 500.0), 0);
     }
@@ -437,6 +456,7 @@ mod tests {
             slots_in_use: 0,
             active_replicas: 2,
             idle_s: 200.0,
+            prefix_hit_rate: 0.0,
         };
         assert_eq!(tier_target(&mut s, 0, load, 2, 500.0), 1);
     }
@@ -450,6 +470,7 @@ mod tests {
             slots_in_use: 3,
             active_replicas: 1,
             idle_s: 500.0,
+            prefix_hit_rate: 0.0,
         };
         assert_eq!(tier_target(&mut s, 1, load, 4, 1000.0), 1);
     }
@@ -462,6 +483,7 @@ mod tests {
             slots_in_use: 8,
             active_replicas: 1,
             idle_s: 0.0,
+            prefix_hit_rate: 0.0,
         };
         assert_eq!(tier_target(&mut s, 0, load, 4, 0.0), 4);
     }
@@ -474,9 +496,28 @@ mod tests {
             slots_in_use: 6,
             active_replicas: 1,
             idle_s: 1.0,
+            prefix_hit_rate: 0.0,
         };
         // Demand 8 fits one replica exactly → no change.
         assert!(s.plan_tier(0, ServiceId(0), load, 4, 0.0).is_none());
+    }
+
+    #[test]
+    fn pool_prefix_hits_temper_scale_up() {
+        // The same queue scales to 4 replicas cold but only 2 with a
+        // fully-warm prefix cache (half the queue signal relieved).
+        let cold = TierLoad {
+            queue_depth: 30,
+            slots_in_use: 0,
+            active_replicas: 1,
+            idle_s: 0.0,
+            prefix_hit_rate: 0.0,
+        };
+        let mut s = pool_scaler([0, 0, 0]);
+        assert_eq!(tier_target(&mut s, 0, cold, 8, 0.0), 4);
+        let warm = TierLoad { prefix_hit_rate: 1.0, ..cold };
+        let mut s = pool_scaler([0, 0, 0]);
+        assert_eq!(tier_target(&mut s, 0, warm, 8, 0.0), 2);
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //! easy one merely costs money; length nudges borderline prompts.
 
 use crate::config::RouterMode;
-use crate::tokenizer::split_words;
+use crate::tokenizer;
 
 use super::{Classification, Router};
 
@@ -53,14 +53,14 @@ impl KeywordRouter {
     }
 
     /// Count cue hits in a prompt.
-    fn hits(words: &[String]) -> (usize, usize) {
+    fn hits(words: &[&str]) -> (usize, usize) {
         let mut low = 0;
         let mut high = 0;
         for w in words {
-            if LOW_WORDS.contains(&w.as_str()) {
+            if LOW_WORDS.iter().any(|c| w.eq_ignore_ascii_case(c)) {
                 low += 1;
             }
-            if HIGH_WORDS.contains(&w.as_str()) {
+            if HIGH_WORDS.iter().any(|c| w.eq_ignore_ascii_case(c)) {
                 high += 1;
             }
         }
@@ -80,7 +80,10 @@ impl KeywordRouter {
     /// Pure classification (no trait plumbing) — also used by the hybrid
     /// router and benches.
     pub fn classify(text: &str) -> Classification {
-        let words = split_words(text);
+        // Borrowed word runs, matched case-insensitively — one Vec of
+        // slices instead of one heap String per word on every routed
+        // request.
+        let words: Vec<&str> = tokenizer::words(text).collect();
         let (low, high) = Self::hits(&words);
         let (complexity, confidence) = if high > 0 && high >= low {
             // High cues win ties: under-provisioning fails the request.
@@ -103,13 +106,13 @@ impl KeywordRouter {
     }
 }
 
-fn contains_seq(words: &[String], phrase: &[&str]) -> bool {
+fn contains_seq(words: &[&str], phrase: &[&str]) -> bool {
     if phrase.len() > words.len() {
         return false;
     }
     words
         .windows(phrase.len())
-        .any(|w| w.iter().zip(phrase).all(|(a, b)| a == b))
+        .any(|w| w.iter().zip(phrase).all(|(a, b)| a.eq_ignore_ascii_case(b)))
 }
 
 impl Router for KeywordRouter {

@@ -259,6 +259,13 @@ pub struct Sequence {
     /// Total tokens this sequence may emit (the prefill token counts).
     budget: usize,
     prompt_tokens: usize,
+    /// Leading prompt tokens whose KV the serving layer's radix prefix
+    /// cache already held at admission. The compiled batch-1 prefill
+    /// module still recomputes its full window — the offset is the
+    /// accounting/reporting contract (schedulers charge and count only
+    /// the uncached suffix) until suffix-prefill modules are exported
+    /// from `python/compile/` (ROADMAP).
+    prefix_len: usize,
 }
 
 impl Sequence {
@@ -278,6 +285,11 @@ impl Sequence {
 
     pub fn prompt_tokens(&self) -> usize {
         self.prompt_tokens
+    }
+
+    /// Prompt tokens served from the prefix cache (0 without a hit).
+    pub fn prefix_len(&self) -> usize {
+        self.prefix_len
     }
 
     /// Absolute position in the KV cache (prompt + generated).
@@ -339,15 +351,19 @@ impl LmEngine {
             out: vec![first],
             budget: 1,
             prompt_tokens: len,
+            prefix_len: 0,
         })
     }
 
     /// Start serving a prompt: prefill it and fix its token budget
     /// (`max_new` capped by the compiled context window). The returned
     /// sequence already holds its first token; feed it to
-    /// [`Self::step_batch`] until [`Sequence::done`].
-    pub fn start_seq(&self, prompt: &str, max_new: usize) -> Result<Sequence> {
+    /// [`Self::step_batch`] until [`Sequence::done`]. `prefix_tokens` is
+    /// the scheduler's prefix-cache offset (see [`Sequence::prefix_len`]).
+    pub fn start_seq(&self, prompt: &str, max_new: usize, prefix_tokens: usize)
+        -> Result<Sequence> {
         let mut st = self.prefill_one(prompt)?;
+        st.prefix_len = prefix_tokens.min(st.prompt_tokens);
         st.budget = max_new
             .min(self.seq_max.saturating_sub(st.pos as usize))
             .max(1);
@@ -403,7 +419,7 @@ impl LmEngine {
     /// Greedy generation for a single prompt.
     pub fn generate(&self, prompt: &str, max_new: usize) -> Result<Generation> {
         let t0 = Instant::now();
-        let mut st = self.start_seq(prompt, max_new)?;
+        let mut st = self.start_seq(prompt, max_new, 0)?;
         let ttft = t0.elapsed().as_secs_f64();
         while !st.done() {
             let mut only = [&mut st];

@@ -11,10 +11,13 @@ use std::collections::VecDeque;
 
 use anyhow::Result;
 
-use crate::backend::{request_cost_usd, service_time, InferenceRequest};
+use crate::backend::kv_cache::{chain_hash, ROOT_HASH};
+use crate::backend::{request_cost_usd, service_time_with_prefix, InferenceRequest};
 use crate::baselines::{SelectionPolicy, Selector};
 use crate::cluster::{events::EventQueue, Cluster, ClusterEvent};
-use crate::config::{ClusterConfig, OrchestratorConfig, Profile, RouterMode};
+use crate::config::{
+    ClusterConfig, OrchestratorConfig, PoolConfig, Profile, RouterMode,
+};
 use crate::models::completion::CompletionModel;
 use crate::models::{zoo, BackendKind};
 use crate::orchestrator::recovery::RecoveryManager;
@@ -67,6 +70,11 @@ pub struct SimConfig {
     /// Replicas per model for the static deployment (a static fleet must
     /// be provisioned for peak, not average, demand).
     pub static_replicas: usize,
+    /// Serving-pool knobs the data-plane model reads: the prefix cache
+    /// (`pool.prefix_cache`, block size `pool.kv_block_tokens`, capacity
+    /// `pool.kv_blocks`) makes simulated prefill time hit-rate-dependent,
+    /// mirroring the live radix cache.
+    pub pool: PoolConfig,
 }
 
 impl SimConfig {
@@ -87,6 +95,72 @@ impl SimConfig {
             deadline_s: 120.0,
             control_period_s: 5.0,
             static_replicas: 1,
+            pool: PoolConfig::default(),
+        }
+    }
+}
+
+/// Block-hash prefix model for the simulated data plane: the same
+/// chained block hashes as the live radix cache ([`chain_hash`]), with
+/// LRU capped at the pool's block budget — but no per-block refcounts,
+/// since the sim's services have no slot-level KV pool to share. Feeds
+/// [`service_time_with_prefix`] so Table-style sweeps show the
+/// hit-rate-dependent prefill win.
+struct SimPrefixCache {
+    block_tokens: usize,
+    cap_blocks: usize,
+    min_run: usize,
+    tick: u64,
+    /// chain hash → last-use tick.
+    nodes: std::collections::BTreeMap<u64, u64>,
+}
+
+impl SimPrefixCache {
+    fn new(pool: &PoolConfig) -> SimPrefixCache {
+        SimPrefixCache {
+            block_tokens: pool.kv_block_tokens.max(1),
+            cap_blocks: pool.kv_blocks.max(1),
+            min_run: pool.prefix_cache.min_block_run.max(1),
+            tick: 0,
+            nodes: std::collections::BTreeMap::new(),
+        }
+    }
+
+    /// Cached prompt tokens for this prompt right now, then insert its
+    /// full blocks (a request leaves its prefix behind, as prefill does
+    /// on the live path).
+    fn observe(&mut self, prompt: &str) -> usize {
+        let ids = crate::tokenizer::prompt_ids(prompt, usize::MAX);
+        self.tick += 1;
+        let mut matched = 0usize;
+        let mut unbroken = true;
+        let mut parent = ROOT_HASH;
+        let mut chain: Vec<u64> = Vec::new();
+        for chunk in ids.chunks_exact(self.block_tokens) {
+            let h = chain_hash(parent, chunk);
+            if unbroken && self.nodes.contains_key(&h) {
+                matched += 1;
+            } else {
+                unbroken = false;
+            }
+            chain.push(h);
+            parent = h;
+        }
+        for &h in &chain {
+            self.nodes.insert(h, self.tick);
+        }
+        if self.nodes.len() > self.cap_blocks {
+            let mut by_age: Vec<(u64, u64)> =
+                self.nodes.iter().map(|(k, t)| (*t, *k)).collect();
+            by_age.sort_unstable();
+            for &(_, k) in by_age.iter().take(self.nodes.len() - self.cap_blocks) {
+                self.nodes.remove(&k);
+            }
+        }
+        if matched < self.min_run {
+            0
+        } else {
+            matched * self.block_tokens
         }
     }
 }
@@ -105,6 +179,9 @@ pub struct RequestRecord {
     pub wait_s: f64,
     pub router_overhead_s: f64,
     pub cost_usd: f64,
+    pub in_tokens: usize,
+    /// Prompt tokens served from the simulated prefix cache.
+    pub prefix_cached_tokens: usize,
 }
 
 /// Aggregated simulation output.
@@ -173,6 +250,23 @@ impl SimReport {
             self.records.len() as f64 / self.duration_s
         }
     }
+
+    /// Prompt tokens served from the prefix cache.
+    pub fn prefix_hit_tokens(&self) -> usize {
+        self.records.iter().map(|r| r.prefix_cached_tokens).sum()
+    }
+
+    /// Fraction of all prompt tokens served from the prefix cache (the
+    /// sim analogue of `ps_prefix_hit_tokens_total` /
+    /// (`hit` + `miss`)).
+    pub fn prefix_hit_token_rate(&self) -> f64 {
+        let total: usize = self.records.iter().map(|r| r.in_tokens).sum();
+        if total == 0 {
+            0.0
+        } else {
+            self.prefix_hit_tokens() as f64 / total as f64
+        }
+    }
 }
 
 enum Event {
@@ -198,6 +292,8 @@ struct Pending {
     started_s: f64,
     ttft_s: f64,
     finish_total_s: f64,
+    /// Prompt tokens the service's prefix cache held at dispatch.
+    prefix_cached: usize,
 }
 
 /// Run one simulation.
@@ -342,6 +438,11 @@ pub fn run(
     let mut pendings: Vec<Option<Pending>> = (0..cfg.n_requests).map(|_| None).collect();
     let mut records: Vec<RequestRecord> = Vec::with_capacity(cfg.n_requests);
     let mut svc_rng = SplitMix64::new(cfg.seed ^ 0x5151);
+    // Per-service prefix caches (None when pool.prefix_cache is off —
+    // the prefill model then matches the pre-cache behaviour exactly).
+    let mut prefix_caches: Vec<Option<SimPrefixCache>> = (0..registry.services.len())
+        .map(|_| cfg.pool.prefix_cache.enabled.then(|| SimPrefixCache::new(&cfg.pool)))
+        .collect();
     let mut n_failures = 0usize;
     let mut done = 0usize;
 
@@ -372,10 +473,19 @@ pub fn run(
                 svc.telemetry.on_dispatch($t, cap as f64);
                 let p = pendings[req_idx].as_mut().unwrap();
                 let spec = &zoo_models[registry.get($sid).model_idx];
-                let stime = service_time(
+                // Prefix-cache lookup at dispatch: cached prompt tokens
+                // skip prefill compute (and the prompt's blocks are left
+                // behind for the next request, as live prefill does).
+                let cached = prefix_caches[$sid.0]
+                    .as_mut()
+                    .map_or(0, |c| c.observe(&p.req.prompt))
+                    .min(p.req.in_tokens);
+                p.prefix_cached = cached;
+                let stime = service_time_with_prefix(
                     spec,
                     registry.get($sid).backend,
                     p.req.in_tokens,
+                    cached,
                     p.req.max_new_tokens,
                     &mut svc_rng,
                 );
@@ -439,6 +549,7 @@ pub fn run(
                     started_s: 0.0,
                     ttft_s: 0.0,
                     finish_total_s: 0.0,
+                    prefix_cached: 0,
                 });
                 states[sid.0].queue.push_back(i);
                 try_start!(sid, t);
@@ -480,6 +591,8 @@ pub fn run(
                     wait_s: p.started_s - p.enqueued_s,
                     router_overhead_s: p.class.overhead_s,
                     cost_usd: cost,
+                    in_tokens: p.req.in_tokens,
+                    prefix_cached_tokens: p.prefix_cached,
                 });
                 done += 1;
                 try_start!(service, t);
@@ -614,6 +727,8 @@ pub fn run(
             wait_s: now - p.enqueued_s,
             router_overhead_s: p.class.overhead_s,
             cost_usd: 0.0,
+            in_tokens: p.req.in_tokens,
+            prefix_cached_tokens: p.prefix_cached,
         });
     }
 
@@ -809,6 +924,43 @@ mod tests {
             sem.records.iter().map(|r| r.router_overhead_s).sum();
         assert_eq!(kw_overhead, 0.0);
         assert!(sem_overhead > 0.0);
+    }
+
+    #[test]
+    fn prefix_cache_cuts_simulated_prefill_ttft() {
+        // Static fleet + round-robin: service assignment is a counter,
+        // so both runs route identically and differ only in prefill
+        // time — cached runs can only start (FIFO) and finish earlier.
+        let l = lib();
+        let mut cfg = quick_cfg();
+        cfg.deployment = Deployment::Static;
+        cfg.policy = SelectionPolicy::RoundRobin;
+        cfg.router_mode = RouterMode::Keyword;
+        cfg.static_replicas = 2;
+        cfg.rate_qps = 4.0;
+        cfg.n_requests = 600;
+        // Template prompts are short; small blocks make their shared
+        // heads (and full repeats — 2 slot values per template) cacheable.
+        cfg.pool.kv_block_tokens = 2;
+        cfg.pool.prefix_cache.enabled = false;
+        let cold = run(&cfg, &l, oracle(&l, 0.03)).unwrap();
+        cfg.pool.prefix_cache.enabled = true;
+        let warm = run(&cfg, &l, oracle(&l, 0.03)).unwrap();
+        assert_eq!(cold.records.len(), warm.records.len());
+        assert_eq!(cold.prefix_hit_tokens(), 0);
+        assert!(warm.prefix_hit_tokens() > 0, "templated traffic must hit");
+        assert!(warm.prefix_hit_token_rate() > 0.0);
+        let mean_ttft = |r: &SimReport| {
+            crate::util::stats::mean(
+                &r.records.iter().map(|x| x.ttft_s).collect::<Vec<_>>(),
+            )
+        };
+        assert!(
+            mean_ttft(&warm) < mean_ttft(&cold),
+            "warm {:.4}s vs cold {:.4}s",
+            mean_ttft(&warm),
+            mean_ttft(&cold)
+        );
     }
 }
 

@@ -17,35 +17,70 @@ pub const RESERVED: u32 = 4;
 /// Classifier input length (must match `manifest.json` / SEQ_CLS).
 pub const SEQ_CLS: usize = 48;
 
-/// Lowercase and split into maximal ASCII-alphanumeric runs.
-pub fn split_words(text: &str) -> Vec<String> {
-    let mut out = Vec::new();
-    let mut cur = String::new();
-    for ch in text.chars() {
-        let ch = ch.to_ascii_lowercase();
-        if ch.is_ascii_alphanumeric() {
-            cur.push(ch);
-        } else if !cur.is_empty() {
-            out.push(std::mem::take(&mut cur));
-        }
-    }
-    if !cur.is_empty() {
-        out.push(cur);
-    }
-    out
+/// Borrowing iterator over the maximal ASCII-alphanumeric runs of a
+/// prompt — the words of [`split_words`] without a heap allocation per
+/// word (the router classifies every request, so this is a hot path).
+/// Yields subslices in original case; pair with [`word_id_of`], which
+/// lowercases while hashing. Byte-wise scanning is char-boundary-safe
+/// because multi-byte UTF-8 sequences never contain ASCII bytes.
+pub fn words(text: &str) -> Words<'_> {
+    Words { text, pos: 0 }
 }
 
-/// Hash a word to its vocabulary id.
+/// See [`words`].
+pub struct Words<'a> {
+    text: &'a str,
+    pos: usize,
+}
+
+impl<'a> Iterator for Words<'a> {
+    type Item = &'a str;
+
+    fn next(&mut self) -> Option<&'a str> {
+        let bytes = self.text.as_bytes();
+        while self.pos < bytes.len() && !bytes[self.pos].is_ascii_alphanumeric() {
+            self.pos += 1;
+        }
+        if self.pos >= bytes.len() {
+            return None;
+        }
+        let start = self.pos;
+        while self.pos < bytes.len() && bytes[self.pos].is_ascii_alphanumeric() {
+            self.pos += 1;
+        }
+        Some(&self.text[start..self.pos])
+    }
+}
+
+/// Lowercase and split into maximal ASCII-alphanumeric runs. Allocates
+/// one `String` per word — build-time / test use; the request path runs
+/// on [`words`] + [`word_id_of`] instead.
+pub fn split_words(text: &str) -> Vec<String> {
+    words(text).map(|w| w.to_ascii_lowercase()).collect()
+}
+
+/// Hash an (already-lowercased) word to its vocabulary id.
 pub fn word_id(word: &str) -> u32 {
     RESERVED + (fnv1a64(word.as_bytes()) % (VOCAB - RESERVED) as u64) as u32
+}
+
+/// [`word_id`] for a raw original-case run from [`words`]: hashes the
+/// ASCII-lowercased bytes without materializing a lowercase string
+/// (bit-identical to `word_id(&run.to_ascii_lowercase())`).
+pub fn word_id_of(run: &str) -> u32 {
+    let mut h = crate::util::rng::FNV64_OFFSET;
+    for b in run.bytes() {
+        h = crate::util::rng::fnv1a64_step(h, b.to_ascii_lowercase());
+    }
+    RESERVED + (h % (VOCAB - RESERVED) as u64) as u32
 }
 
 /// Encode to exactly `seq_len` ids: `[CLS] words... [SEP] PAD...`.
 pub fn encode(text: &str, seq_len: usize) -> Vec<i32> {
     let mut ids: Vec<i32> = Vec::with_capacity(seq_len);
     ids.push(CLS as i32);
-    for w in split_words(text).into_iter().take(seq_len - 2) {
-        ids.push(word_id(&w) as i32);
+    for w in words(text).take(seq_len - 2) {
+        ids.push(word_id_of(w) as i32);
     }
     ids.push(SEP as i32);
     while ids.len() < seq_len {
@@ -57,15 +92,24 @@ pub fn encode(text: &str, seq_len: usize) -> Vec<i32> {
 
 /// Encode without CLS/SEP framing (LM prompt): word ids, PAD-padded.
 pub fn encode_words(text: &str, max_words: usize) -> Vec<i32> {
-    let mut ids: Vec<i32> = split_words(text)
-        .into_iter()
+    let mut ids: Vec<i32> = words(text)
         .take(max_words)
-        .map(|w| word_id(&w) as i32)
+        .map(|w| word_id_of(w) as i32)
         .collect();
     while ids.len() < max_words {
         ids.push(PAD as i32);
     }
     ids
+}
+
+/// Unpadded word-id stream of a prompt, truncated to `max_tokens` — the
+/// serving layer's prefix-cache key (block hashes chain over these ids;
+/// matches [`encode_words`]' ids minus the padding).
+pub fn prompt_ids(text: &str, max_tokens: usize) -> Vec<i32> {
+    words(text)
+        .take(max_tokens)
+        .map(|w| word_id_of(w) as i32)
+        .collect()
 }
 
 /// Number of non-PAD positions (PAD only appears as right padding).
@@ -78,9 +122,9 @@ pub fn valid_len(ids: &[i32]) -> usize {
 }
 
 /// Token count of a prompt (before truncation) — the router's length
-/// feature and the serving layer's prompt-size estimate.
+/// feature and the serving layer's prompt-size estimate. Allocation-free.
 pub fn word_count(text: &str) -> usize {
-    split_words(text).len()
+    words(text).count()
 }
 
 #[cfg(test)]
@@ -134,5 +178,40 @@ mod tests {
         assert_eq!(valid_len(&[1, 5, 2, 0, 0]), 3);
         assert_eq!(valid_len(&[0, 0]), 0);
         assert_eq!(valid_len(&[1, 2]), 2);
+    }
+
+    #[test]
+    fn borrowing_words_match_split_words() {
+        for text in [
+            "Hello, World!",
+            "f(n) = 3n + 7",
+            "",
+            "  ... !!! ",
+            "Ünïcödé",
+            "MiXeD CaSe 123abc",
+            "trailing-word",
+        ] {
+            let borrowed: Vec<String> =
+                words(text).map(|w| w.to_ascii_lowercase()).collect();
+            assert_eq!(borrowed, split_words(text), "text: {text:?}");
+            assert_eq!(word_count(text), split_words(text).len());
+        }
+    }
+
+    #[test]
+    fn word_id_of_matches_lowercased_word_id() {
+        for run in ["Sum", "PROVE", "the", "123Abc", "A"] {
+            assert_eq!(word_id_of(run), word_id(&run.to_ascii_lowercase()));
+        }
+    }
+
+    #[test]
+    fn prompt_ids_match_encode_words_prefix() {
+        let text = "Solve for X: 3x = 9 please";
+        let padded = encode_words(text, 16);
+        let ids = prompt_ids(text, 16);
+        assert_eq!(ids.len(), word_count(text));
+        assert_eq!(&padded[..ids.len()], &ids[..]);
+        assert_eq!(prompt_ids(text, 3).len(), 3);
     }
 }

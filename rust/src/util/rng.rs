@@ -103,12 +103,26 @@ impl SplitMix64 {
     }
 }
 
+/// FNV-1a 64 offset basis — the one copy of the constant; the tokenizer
+/// word ids and the KV prefix cache's chained block hashes both build on
+/// it (desynchronizing them would break sim/live hash compatibility).
+pub const FNV64_OFFSET: u64 = 0xCBF29CE484222325;
+
+/// FNV-1a 64 prime.
+pub const FNV64_PRIME: u64 = 0x100000001B3;
+
+/// One FNV-1a step: fold a byte into a running hash. Lets callers hash
+/// incrementally (lowercasing, chaining) without materializing buffers.
+#[inline]
+pub fn fnv1a64_step(h: u64, b: u8) -> u64 {
+    (h ^ b as u64).wrapping_mul(FNV64_PRIME)
+}
+
 /// FNV-1a 64 — mirrors `python/compile/tokenizer.py`.
 pub fn fnv1a64(data: &[u8]) -> u64 {
-    let mut h: u64 = 0xCBF29CE484222325;
+    let mut h: u64 = FNV64_OFFSET;
     for &b in data {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001B3);
+        h = fnv1a64_step(h, b);
     }
     h
 }

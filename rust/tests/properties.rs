@@ -2,7 +2,7 @@
 //! over coordinator invariants: routing, batching, KV accounting, scaling.
 
 use pick_and_spin::backend::batcher::{BatchPolicy, DECODE_BATCHES};
-use pick_and_spin::backend::kv_cache::{KvBlockManager, SeqId};
+use pick_and_spin::backend::kv_cache::{KvBlockManager, PrefixCacheConfig, SeqId};
 use pick_and_spin::models::BackendKind;
 use pick_and_spin::router::keyword::KeywordRouter;
 use pick_and_spin::testkit::{check, Gen};
@@ -63,6 +63,56 @@ fn prop_kv_manager_never_leaks_blocks() {
             kv.release(id);
         }
         assert_eq!(kv.free_blocks(), total);
+    });
+}
+
+#[test]
+fn prop_prefix_cache_refcounts_conserve_blocks() {
+    check("prefix cache conservation", 60, |g: &mut Gen| {
+        let block = g.usize(1..8);
+        let total = g.usize(8..64);
+        let cfg = PrefixCacheConfig {
+            enabled: true,
+            min_block_run: g.usize(1..3),
+            evict_watermark: g.f64(0.3..1.0),
+        };
+        let mut kv = KvBlockManager::with_prefix_cache(total, block, cfg);
+        // Shared-prefix families: admissions fork off these bases at a
+        // random depth — the admit/fork/release/evict interleaving the
+        // radix tree must survive.
+        let bases: Vec<Vec<i32>> = (0..3)
+            .map(|b| (0..4 * block as i32).map(|i| b * 1000 + i).collect())
+            .collect();
+        let mut live: Vec<SeqId> = Vec::new();
+        for i in 0..250u64 {
+            if g.bool() {
+                let base = &bases[g.usize(0..bases.len())];
+                let cut = g.usize(0..base.len() + 1);
+                let mut ids: Vec<i32> = base[..cut].to_vec();
+                for _ in 0..g.usize(0..2 * block) {
+                    ids.push(5000 + g.usize(0..50) as i32);
+                }
+                let max_new = g.usize(1..3 * block);
+                // The pre-check is optimistic (pinning a matched chain
+                // can shrink what is actually evictable), so a failed
+                // admit is legal — it must just roll back cleanly.
+                if kv.can_admit_blocks(kv.blocks_needed(&ids, max_new))
+                    && kv.admit_prefix(SeqId(i), &ids, max_new).is_ok()
+                {
+                    live.push(SeqId(i));
+                }
+            } else if !live.is_empty() {
+                let idx = g.usize(0..live.len());
+                kv.release(live.swap_remove(idx));
+            }
+            kv.check_invariants().unwrap();
+        }
+        for id in live {
+            kv.release(id);
+        }
+        kv.check_invariants().unwrap();
+        kv.purge_cache();
+        assert_eq!(kv.free_blocks(), total, "all blocks recovered");
     });
 }
 
