@@ -846,6 +846,32 @@ impl<E: StepEngine, T> Scheduler<E, T> {
         Ok(tick)
     }
 
+    /// Hand back every buffered (admitted but not yet prefilled) request,
+    /// releasing its pre-charged KV blocks. Decoding slots are untouched.
+    /// A gracefully draining replica routes these through the requeue
+    /// path so a surviving replica serves them instead of paying their
+    /// prefill on a replica that is about to exit.
+    pub fn drain_pending(&mut self) -> Vec<T> {
+        let mut out = Vec::with_capacity(self.pending.len());
+        for p in self.pending.drain(..) {
+            self.pending_kv_blocks -= p.est_blocks;
+            out.push(p.payload);
+        }
+        self.prefill_hold_since = None;
+        self.prefill_flushing = false;
+        out
+    }
+
+    /// Visit every decoding slot's payload and its token stream so far.
+    /// The process-substrate worker streams the delta since its last
+    /// visit as `TokenChunk` frames.
+    pub fn for_each_slot(&mut self, mut f: impl FnMut(&mut T, &[i32])) {
+        for slot in &mut self.slots {
+            let Slot { payload, seq, .. } = slot;
+            f(payload, seq.tokens());
+        }
+    }
+
     /// Fail every in-flight request (engine died / shutdown), returning
     /// the payloads so the caller can report errors. Buffered prefills
     /// are included.
@@ -1463,6 +1489,53 @@ mod tests {
         for (x, y) in a.iter().zip(b.iter()) {
             assert_eq!(x.tokens, y.tokens, "prefix hits must not change tokens");
         }
+    }
+
+    #[test]
+    fn drain_pending_returns_buffered_work_and_frees_kv() {
+        // max_prefill_batch 4 + a busy slot: later admissions buffer.
+        let mut s: Scheduler<SimStepEngine, usize> = Scheduler::new(
+            SimStepEngine::instant(),
+            SchedulerConfig {
+                policy: BatchPolicy::custom(8, 4, 10.0),
+                max_inflight: 8,
+                kv_blocks: 256,
+                kv_block_tokens: 16,
+                prefix_cache: PrefixCacheConfig::default(),
+            },
+        );
+        assert!(matches!(s.admit("a b", 32, 2, 0), Admit::Admitted));
+        s.tick(0.0).unwrap(); // idle replica prefills #0 immediately
+        for i in 1..3usize {
+            assert!(matches!(s.admit("a b", 4, 2, i), Admit::Admitted));
+        }
+        // 2 waiting < rung 4 with a busy slot and a huge flush window:
+        // they stay buffered.
+        s.tick(0.001).unwrap();
+        assert_eq!(s.inflight(), 3);
+        let mut back = s.drain_pending();
+        back.sort_unstable();
+        assert_eq!(back, vec![1, 2], "buffered prefills handed back");
+        assert_eq!(s.inflight(), 1, "the decoding slot is untouched");
+        let (done, _) = s.drain(0.002).unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(s.kv_occupancy(), 0.0, "pending KV charges released");
+    }
+
+    #[test]
+    fn for_each_slot_exposes_token_streams() {
+        let mut s = sched(4, 4, 0.0);
+        assert!(matches!(s.admit("a b c", 8, 3, 7), Admit::Admitted));
+        let mut now = 0.0;
+        for _ in 0..3 {
+            let t = s.tick(now).unwrap();
+            now += t.wait_s.unwrap_or(0.0).max(1e-9);
+        }
+        let mut seen = Vec::new();
+        s.for_each_slot(|p, tokens| seen.push((*p, tokens.len())));
+        assert_eq!(seen.len(), 1);
+        assert_eq!(seen[0].0, 7);
+        assert!(seen[0].1 >= 2, "prefill + decode tokens visible");
     }
 
     #[test]

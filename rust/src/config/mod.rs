@@ -151,6 +151,36 @@ impl Default for GatewayConfig {
     }
 }
 
+/// Which runtime substrate the live gateway provisions replicas on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubstrateKind {
+    /// Replica = one engine thread inside the gateway process (shared
+    /// memory data plane; a hard crash takes the whole pool down).
+    Thread,
+    /// Replica = one supervised `ps-replica` OS process, connected over
+    /// a framed JSON RPC channel on a Unix socket (real isolation:
+    /// `kill -9` on a worker is survivable — the paper's pod-per-replica
+    /// deployment model, one host at a time).
+    Process,
+}
+
+impl SubstrateKind {
+    pub fn parse(s: &str) -> Option<SubstrateKind> {
+        match s {
+            "thread" => Some(SubstrateKind::Thread),
+            "process" => Some(SubstrateKind::Process),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SubstrateKind::Thread => "thread",
+            SubstrateKind::Process => "process",
+        }
+    }
+}
+
 /// Engine-pool tunables: the continuous-batching serving path
 /// (gateway job intake → per-tier scheduler → N engine replicas).
 #[derive(Debug, Clone)]
@@ -189,6 +219,20 @@ pub struct PoolConfig {
     /// goes stale past this is declared Failed (stalled engine) and
     /// redeployed by the recovery manager.
     pub health_deadline_s: f64,
+    /// Replica runtime: in-process engine threads (`"thread"`) or
+    /// supervised `ps-replica` worker processes over the RPC data plane
+    /// (`"process"`).
+    pub substrate: SubstrateKind,
+    /// Worker binary for the process substrate. `None` = the current
+    /// executable (the gateway binary re-invokes itself in `ps-replica`
+    /// mode); tests point this at `CARGO_BIN_EXE_pick-and-spin`.
+    pub worker_bin: Option<String>,
+    /// Where worker processes write their stdout/stderr logs (one
+    /// `ps-worker-<tier>-<replica>-<pid>-<seq>.log` per replica; the
+    /// pid + sequence keep names unique across supervisor instances).
+    /// `None` = inherit the gateway's stderr. CI sets this and uploads
+    /// the directory.
+    pub worker_log_dir: Option<String>,
 }
 
 impl Default for PoolConfig {
@@ -205,6 +249,9 @@ impl Default for PoolConfig {
             prefix_cache: PrefixCacheConfig::default(),
             scale_interval_s: 2.0,
             health_deadline_s: 3.0,
+            substrate: SubstrateKind::Thread,
+            worker_bin: None,
+            worker_log_dir: None,
         }
     }
 }
@@ -363,6 +410,16 @@ impl Config {
                 p.f64_or("scale_interval_s", self.pool.scale_interval_s);
             self.pool.health_deadline_s =
                 p.f64_or("health_deadline_s", self.pool.health_deadline_s);
+            if let Some(s) = p.get("substrate").and_then(Json::as_str) {
+                self.pool.substrate = SubstrateKind::parse(s)
+                    .ok_or_else(|| anyhow::anyhow!("bad pool substrate `{s}`"))?;
+            }
+            if let Some(b) = p.get("worker_bin").and_then(Json::as_str) {
+                self.pool.worker_bin = Some(b.to_string());
+            }
+            if let Some(d) = p.get("worker_log_dir").and_then(Json::as_str) {
+                self.pool.worker_log_dir = Some(d.to_string());
+            }
         }
         if let Some(c) = j.get("cluster") {
             self.cluster.gpus_per_node =
@@ -475,6 +532,29 @@ mod tests {
         assert!((c.pool.prefix_cache.evict_watermark - 0.75).abs() < 1e-12);
         // untouched pool knobs keep defaults
         assert_eq!(c.pool.kv_blocks, 128);
+    }
+
+    #[test]
+    fn overlay_substrate_section() {
+        let mut c = Config::default();
+        assert_eq!(c.pool.substrate, SubstrateKind::Thread, "thread by default");
+        assert!(c.pool.worker_bin.is_none());
+        let j = Json::parse(
+            r#"{"pool":{"substrate":"process","worker_bin":"/usr/bin/ps",
+                "worker_log_dir":"/tmp/logs"}}"#,
+        )
+        .unwrap();
+        c.overlay(&j).unwrap();
+        assert_eq!(c.pool.substrate, SubstrateKind::Process);
+        assert_eq!(c.pool.worker_bin.as_deref(), Some("/usr/bin/ps"));
+        assert_eq!(c.pool.worker_log_dir.as_deref(), Some("/tmp/logs"));
+        // untouched pool knobs keep defaults
+        assert_eq!(c.pool.kv_blocks, 128);
+
+        let bad = Json::parse(r#"{"pool":{"substrate":"serverless"}}"#).unwrap();
+        assert!(c.overlay(&bad).is_err());
+        assert_eq!(SubstrateKind::parse("thread"), Some(SubstrateKind::Thread));
+        assert_eq!(SubstrateKind::Process.name(), "process");
     }
 
     #[test]

@@ -25,6 +25,7 @@
 
 pub mod http;
 pub(crate) mod pool;
+pub mod worker;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -35,16 +36,19 @@ use anyhow::{anyhow, Result};
 
 use crate::backend::batcher::{DECODE_BATCHES, N_DECODE_BATCHES};
 use crate::backend::scheduler::{CancelToken, SimStepEngine, StepEngine};
-use crate::config::{Config, OrchestratorConfig, PoolConfig, Profile, RouterMode};
+use crate::config::{
+    Config, OrchestratorConfig, PoolConfig, Profile, RouterMode, SubstrateKind,
+};
 use crate::models::{zoo, Tier};
 use crate::orchestrator::recovery::RecoveryManager;
 use crate::orchestrator::{ScaleAction, Scaler, TierLoad};
-use crate::registry::{Health, Registry};
+use crate::registry::{Health, Registry, ServiceId};
 use crate::router::hybrid::HybridRouter;
 use crate::router::keyword::KeywordRouter;
 use crate::router::{Classification, Router};
 use crate::runtime::Runtime;
 use crate::scoring::Weights;
+use crate::substrate::remote::{ProcessSubstrate, WorkerSpec};
 use crate::substrate::Substrate;
 use crate::util::json::Json;
 use crate::util::threadpool::{Channel, OneShot};
@@ -118,6 +122,16 @@ pub struct GatewayMetrics {
     pub prefix_miss_tokens: AtomicU64,
     /// Unreferenced prefix-cache blocks reclaimed (LRU).
     pub prefix_evicted_blocks: AtomicU64,
+    /// Frames the process-substrate supervisor wrote to workers.
+    pub rpc_frames_sent: AtomicU64,
+    /// Frames received from workers.
+    pub rpc_frames_recv: AtomicU64,
+    /// Completed Ping→Pong round trips.
+    pub rpc_pings: AtomicU64,
+    /// Summed Ping→Pong round-trip time, µs (exported as
+    /// `ps_rpc_rtt_seconds_total`; with `ps_rpc_pings_total` it yields
+    /// the mean RPC latency of the process data plane).
+    pub rpc_rtt_us_total: AtomicU64,
     /// Formed-batch histogram: one counter per compiled rung, in
     /// [`DECODE_BATCHES`] order.
     pub batch_counts: [AtomicU64; N_DECODE_BATCHES],
@@ -157,6 +171,88 @@ pub struct LiveStack {
     request_timeout_s: f64,
 }
 
+/// What the gateway needs from a replica substrate beyond the
+/// orchestrator-facing [`Substrate`] trait: the shared pool state the
+/// router samples, the canonical service per tier, warm-up blocking, and
+/// teardown. Implemented by the thread pool (`LocalSubstrate`) and the
+/// process supervisor (`ProcessSubstrate`) so the router/control thread
+/// is written once against both data planes.
+pub(crate) trait PoolBackend: Substrate + Send {
+    fn pool_shared(&self) -> Arc<PoolShared>;
+    fn service_of_tier(&self, tier: usize) -> ServiceId;
+    fn warm(&mut self) -> std::result::Result<(), String>;
+    fn stop_all(&mut self);
+}
+
+impl<E, F> PoolBackend for LocalSubstrate<E, F>
+where
+    E: StepEngine,
+    F: Fn(Tier, usize) -> std::result::Result<E, String> + Send + Sync + 'static,
+{
+    fn pool_shared(&self) -> Arc<PoolShared> {
+        self.shared()
+    }
+
+    fn service_of_tier(&self, tier: usize) -> ServiceId {
+        self.tier_service(tier)
+    }
+
+    fn warm(&mut self) -> std::result::Result<(), String> {
+        self.wait_warm()
+    }
+
+    fn stop_all(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl PoolBackend for ProcessSubstrate {
+    fn pool_shared(&self) -> Arc<PoolShared> {
+        self.shared()
+    }
+
+    fn service_of_tier(&self, tier: usize) -> ServiceId {
+        self.tier_service(tier)
+    }
+
+    fn warm(&mut self) -> std::result::Result<(), String> {
+        self.wait_warm()
+    }
+
+    fn stop_all(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Build one tier's compiled PJRT engine: compile a *prefix* of the
+/// decode ladder (stop at the first missing rung — the scheduler may
+/// form any compiled rung ≤ its max, so a gap would make it form batches
+/// the engine can't execute). Shared by the thread substrate's replica
+/// factories and the `ps-replica` worker's `--engine pjrt` mode.
+pub fn build_pjrt_engine(
+    artifacts: &str,
+    tier: Tier,
+    max_batch: usize,
+) -> std::result::Result<crate::runtime::LmEngine, String> {
+    let mut rt = Runtime::load(artifacts).map_err(|e| format!("runtime: {e:#}"))?;
+    let mut ladder: Vec<usize> = Vec::new();
+    for &b in DECODE_BATCHES.iter() {
+        let have = rt
+            .manifest
+            .module(&format!("lm_{}_decode_b{b}", tier.name()))
+            .is_ok();
+        if b > max_batch.max(1) || !have {
+            break;
+        }
+        ladder.push(b);
+    }
+    if ladder.is_empty() {
+        ladder.push(1);
+    }
+    rt.lm_engine(tier.name(), &ladder)
+        .map_err(|e| format!("lm {}: {e:#}", tier.name()))
+}
+
 impl LiveStack {
     /// Spin up the engine pool over the compiled PJRT artifacts
     /// (compiles each tier per replica — takes a few seconds; returns
@@ -183,52 +279,37 @@ impl LiveStack {
                 Ok(router)
             },
             move |tier: Tier, _replica: usize| {
-                let mut rt = Runtime::load(&engine_artifacts)
-                    .map_err(|e| format!("runtime: {e:#}"))?;
-                // Compile a *prefix* of the ladder (stop at the first
-                // missing rung): the scheduler may form any compiled
-                // rung ≤ its max, so a gap (say b4 absent but b8
-                // present) would make it form batches the engine can't
-                // execute.
-                let mut ladder: Vec<usize> = Vec::new();
-                for &b in DECODE_BATCHES.iter() {
-                    let have = rt
-                        .manifest
-                        .module(&format!("lm_{}_decode_b{b}", tier.name()))
-                        .is_ok();
-                    if b > max_batch.max(1) || !have {
-                        break;
-                    }
-                    ladder.push(b);
-                }
-                if ladder.is_empty() {
-                    ladder.push(1);
-                }
-                rt.lm_engine(tier.name(), &ladder)
-                    .map_err(|e| format!("lm {}: {e:#}", tier.name()))
+                build_pjrt_engine(&engine_artifacts, tier, max_batch)
             },
+            &["--engine", "pjrt", "--artifacts", cfg.paths.artifacts.as_str()],
         )
     }
 
     /// The same pool wired to the deterministic synthetic engine and the
     /// keyword router — no artifacts or PJRT needed. Used by integration
     /// tests and benches to exercise queueing, batching, scaling,
-    /// recovery and metrics end-to-end.
+    /// recovery and metrics end-to-end. With `pool.substrate = "process"`
+    /// the workers run `ps-replica --engine sim`, so the whole RPC data
+    /// plane is exercised hermetically too.
     pub fn start_sim(cfg: &Config) -> Result<LiveStack> {
         Self::start_pool(
             cfg,
             || Ok(Box::new(KeywordRouter::new()) as Box<dyn Router>),
             |_tier: Tier, _replica: usize| Ok(SimStepEngine::calibrated()),
+            &["--engine", "sim"],
         )
     }
 
-    /// Generic pool bring-up: `router_factory` runs on the router thread,
+    /// Generic pool bring-up: `router_factory` runs on the router thread;
     /// `engine_factory` once per replica on its own thread (PJRT objects
-    /// live and die on the thread that made them).
+    /// live and die on the thread that made them) for the thread
+    /// substrate, while the process substrate spawns `ps-replica`
+    /// workers with `worker_engine_args` instead.
     fn start_pool<E, RF, EF>(
         cfg: &Config,
         router_factory: RF,
         engine_factory: EF,
+        worker_engine_args: &[&str],
     ) -> Result<LiveStack>
     where
         E: StepEngine,
@@ -241,28 +322,74 @@ impl LiveStack {
         let shared = Arc::new(PoolShared::new(epoch, cfg.pool.queue_capacity));
         let zoo_models = zoo();
         let registry = Registry::new(&zoo_models, cfg.orchestrator.telemetry_window_s);
-        let mut substrate = LocalSubstrate::new(
-            Arc::clone(&shared),
-            cfg.pool.clone(),
-            Arc::clone(&metrics),
-            engine_factory,
-            &registry,
-        );
-        // Provision the initial fleet through the same lifecycle every
-        // later replica takes (the measured cold starts seed Alg. 2's
-        // scaled-to-zero estimates), and wait until every engine is warm.
+        match cfg.pool.substrate {
+            SubstrateKind::Thread => {
+                let substrate = LocalSubstrate::new(
+                    Arc::clone(&shared),
+                    cfg.pool.clone(),
+                    Arc::clone(&metrics),
+                    engine_factory,
+                    &registry,
+                );
+                Self::finish_start(cfg, router_factory, substrate, registry, shared, metrics, jobs)
+            }
+            SubstrateKind::Process => {
+                let spec = WorkerSpec::from_pool(&cfg.pool, worker_engine_args)
+                    .map_err(|e| anyhow!("process substrate: {e}"))?;
+                let substrate = ProcessSubstrate::new(
+                    Arc::clone(&shared),
+                    cfg.pool.clone(),
+                    Arc::clone(&metrics),
+                    spec,
+                    &registry,
+                );
+                Self::finish_start(cfg, router_factory, substrate, registry, shared, metrics, jobs)
+            }
+        }
+    }
+
+    /// Substrate-agnostic bring-up: provision the initial fleet through
+    /// the same lifecycle every later replica takes (the measured cold
+    /// starts seed Alg. 2's scaled-to-zero estimates), wait until every
+    /// replica is warm, then hand the substrate to the router thread.
+    fn finish_start<S, RF>(
+        cfg: &Config,
+        router_factory: RF,
+        mut substrate: S,
+        registry: Registry,
+        shared: Arc<PoolShared>,
+        metrics: Arc<GatewayMetrics>,
+        jobs: Channel<Job>,
+    ) -> Result<LiveStack>
+    where
+        S: PoolBackend + 'static,
+        RF: FnOnce() -> std::result::Result<Box<dyn Router>, String> + Send + 'static,
+    {
+        let requested: usize = cfg.pool.replicas.iter().sum();
+        let mut provisioned = 0usize;
         for ti in 0..3 {
-            let sid = substrate.tier_service(ti);
+            let sid = substrate.service_of_tier(ti);
             let (mi, spec, backend) = {
                 let s = registry.get(sid);
                 (s.model_idx, s.spec.clone(), s.backend)
             };
             for _ in 0..cfg.pool.replicas[ti] {
-                let _ = substrate.provision(sid, mi, &spec, backend, 0.0);
+                if substrate.provision(sid, mi, &spec, backend, 0.0).is_some() {
+                    provisioned += 1;
+                }
             }
         }
-        if let Err(e) = substrate.wait_warm() {
-            substrate.shutdown();
+        if provisioned == 0 && requested > 0 {
+            // A fleet that failed to even spawn (bad worker binary, say)
+            // must be a startup error, not a pool that times out every
+            // request.
+            substrate.stop_all();
+            return Err(anyhow!(
+                "engine pool failed to start: no replica could be provisioned"
+            ));
+        }
+        if let Err(e) = substrate.warm() {
+            substrate.stop_all();
             return Err(anyhow!("engine pool failed to start: {e}"));
         }
 
@@ -282,7 +409,7 @@ impl LiveStack {
                     }
                     Err(e) => {
                         let _ = ready_tx.send(Err(e));
-                        substrate.shutdown();
+                        substrate.stop_all();
                         return;
                     }
                 };
@@ -361,11 +488,22 @@ impl LiveStack {
     }
 
     /// Fault-injection hook for recovery experiments: abruptly kill one
-    /// Ready replica of `tier` (0 = small, 1 = medium, 2 = large). Its
-    /// in-flight jobs requeue, the control plane records an `Incident`
-    /// and redeploys. Returns whether a victim existed.
+    /// Ready replica of `tier` (0 = small, 1 = medium, 2 = large). On
+    /// the thread substrate the replica dies at its next heartbeat; on
+    /// the process substrate its worker is SIGKILLed — a true `kill -9`.
+    /// Its in-flight jobs requeue, the control plane records an
+    /// `Incident` and redeploys. Returns whether a victim existed.
     pub fn inject_replica_failure(&self, tier: usize) -> bool {
         self.shared.inject_failure(tier.min(2))
+    }
+
+    /// Graceful-drain hook: one Ready replica of `tier` stops pulling
+    /// work, hands its buffered jobs back through the requeue path,
+    /// finishes its decoding slots, and exits — the scale-down path,
+    /// triggerable deterministically for tests. Returns whether a victim
+    /// existed.
+    pub fn drain_replica(&self, tier: usize) -> bool {
+        self.shared.drain_one(tier.min(2))
     }
 
     /// The `/metrics` exposition snapshot.
@@ -407,6 +545,19 @@ impl LiveStack {
             (
                 "ps_prefix_evicted_blocks_total".to_string(),
                 c(&m.prefix_evicted_blocks),
+            ),
+            (
+                "ps_rpc_frames_sent_total".to_string(),
+                c(&m.rpc_frames_sent),
+            ),
+            (
+                "ps_rpc_frames_recv_total".to_string(),
+                c(&m.rpc_frames_recv),
+            ),
+            ("ps_rpc_pings_total".to_string(), c(&m.rpc_pings)),
+            (
+                "ps_rpc_rtt_seconds_total".to_string(),
+                m.rpc_rtt_us_total.load(Ordering::Relaxed) as f64 / 1e6,
             ),
         ];
         for (i, &b) in DECODE_BATCHES.iter().enumerate() {
@@ -488,18 +639,15 @@ fn sync_registry(registry: &mut Registry, shared: &PoolShared, pool: &PoolConfig
 
 /// Scale-from-zero: provision one replica for a tier that has queued
 /// work but no live capacity (counted as a cold wake).
-fn cold_wake<E, F>(
-    substrate: &mut LocalSubstrate<E, F>,
+fn cold_wake<S: PoolBackend>(
+    substrate: &mut S,
     registry: &mut Registry,
     metrics: &GatewayMetrics,
     shared: &PoolShared,
     ti: usize,
     now_s: f64,
-) where
-    E: StepEngine,
-    F: Fn(Tier, usize) -> std::result::Result<E, String> + Send + Sync + 'static,
-{
-    let sid = substrate.tier_service(ti);
+) {
+    let sid = substrate.service_of_tier(ti);
     {
         // `apply` provisions up from the registry's current counts;
         // refresh them for the canonical cell first.
@@ -523,20 +671,17 @@ fn cold_wake<E, F>(
 /// lifecycle poll → recovery → Alg. 1 per tier — also while idle, so
 /// scale-to-zero fires without traffic.
 #[allow(clippy::too_many_arguments)]
-fn router_loop<E, F>(
+fn router_loop<S: PoolBackend>(
     mut router: Box<dyn Router>,
     jobs: Channel<Job>,
-    mut substrate: LocalSubstrate<E, F>,
+    mut substrate: S,
     mut registry: Registry,
     metrics: Arc<GatewayMetrics>,
     pool: PoolConfig,
     orch: OrchestratorConfig,
     profile: Profile,
-) where
-    E: StepEngine,
-    F: Fn(Tier, usize) -> std::result::Result<E, String> + Send + Sync + 'static,
-{
-    let shared = substrate.shared();
+) {
+    let shared = substrate.pool_shared();
     let weights = Weights::from_profile(&profile);
     // Alg. 1 over the three tiers, demand = queue depth + slot occupancy.
     let mut scaler = Scaler::for_pool(orch, 3, pool.max_inflight.max(1));
@@ -660,7 +805,7 @@ fn router_loop<E, F>(
                 };
                 if let Some(action) = scaler.plan_tier(
                     ti,
-                    substrate.tier_service(ti),
+                    substrate.service_of_tier(ti),
                     load,
                     pool.replicas[ti],
                     now,
@@ -682,7 +827,7 @@ fn router_loop<E, F>(
             sync_registry(&mut registry, &shared, &pool);
         }
     }
-    substrate.shutdown();
+    substrate.stop_all();
 }
 
 /// Start the HTTP gateway over a live stack. Returns the bound server.

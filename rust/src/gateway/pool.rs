@@ -58,15 +58,17 @@ pub(crate) struct TierJob {
     pub confidence: f64,
 }
 
-// Replica lifecycle wire encoding (`ReplicaCell::state`).
-const S_SCHEDULED: u8 = 0;
-const S_LOADING: u8 = 1;
-const S_READY: u8 = 2;
-const S_TERMINATING: u8 = 3;
-const S_FAILED: u8 = 4;
-const S_GONE: u8 = 5;
+// Replica lifecycle wire encoding (`ReplicaCell::state`) — shared with
+// the process substrate's supervisor (`substrate::remote`), whose pump
+// threads publish the same lifecycle through the same cells.
+pub(crate) const S_SCHEDULED: u8 = 0;
+pub(crate) const S_LOADING: u8 = 1;
+pub(crate) const S_READY: u8 = 2;
+pub(crate) const S_TERMINATING: u8 = 3;
+pub(crate) const S_FAILED: u8 = 4;
+pub(crate) const S_GONE: u8 = 5;
 
-fn decode_state(raw: u8) -> Option<ReplicaState> {
+pub(crate) fn decode_state(raw: u8) -> Option<ReplicaState> {
     match raw {
         S_SCHEDULED => Some(ReplicaState::Scheduled),
         S_LOADING => Some(ReplicaState::Loading),
@@ -103,7 +105,7 @@ pub(crate) struct ReplicaCell {
 }
 
 impl ReplicaCell {
-    fn new() -> ReplicaCell {
+    pub(crate) fn new() -> ReplicaCell {
         ReplicaCell {
             state: AtomicU8::new(S_SCHEDULED),
             heartbeat_us: AtomicU64::new(0),
@@ -226,12 +228,35 @@ impl PoolShared {
 
     /// Fault-injection hook: kill one Ready replica of `tier` abruptly
     /// (its in-flight work is requeued, the control plane detects the
-    /// failure and redeploys). Returns whether a victim existed.
+    /// failure and redeploys). On the thread substrate the victim dies at
+    /// its next heartbeat; on the process substrate its worker process is
+    /// SIGKILLed — a true `kill -9`. Returns whether a victim existed.
     pub fn inject_failure(&self, tier: usize) -> bool {
         for (_, c) in self.cells[tier].lock().unwrap().iter() {
             if c.state.load(Ordering::Acquire) == S_READY
                 && !c.kill.swap(true, Ordering::Relaxed)
             {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Gracefully drain one Ready replica of `tier` (test/ops hook): it
+    /// stops pulling new work, hands buffered jobs back through the
+    /// requeue path, finishes its decoding slots, and exits. Returns
+    /// whether a victim existed.
+    pub fn drain_one(&self, tier: usize) -> bool {
+        for (_, c) in self.cells[tier].lock().unwrap().iter() {
+            if c.state.load(Ordering::Acquire) == S_READY
+                && !c.stop.swap(true, Ordering::Relaxed)
+            {
+                let _ = c.state.compare_exchange(
+                    S_READY,
+                    S_TERMINATING,
+                    Ordering::AcqRel,
+                    Ordering::Relaxed,
+                );
                 return true;
             }
         }
@@ -638,6 +663,77 @@ fn finish_job(f: Finished<TierJob>, ctx: &ReplicaCtx) {
     }));
 }
 
+/// Derive one replica's scheduler knobs from the pool config and its
+/// engine's compiled ceiling — shared by the thread substrate's replica
+/// threads and the `ps-replica` worker processes, so both data planes
+/// batch identically. The batch target is clamped to the slot count too:
+/// with fewer slots than the biggest rung, a full replica could
+/// otherwise never "fill" a batch and would eat the flush timeout while
+/// saturated.
+pub(crate) fn sched_config(pool: &PoolConfig, engine_max_batch: usize) -> SchedulerConfig {
+    let max_batch = pool
+        .max_decode_batch
+        .min(engine_max_batch)
+        .min(pool.max_inflight.max(1))
+        .max(1);
+    let max_prefill = pool.max_prefill_batch.min(pool.max_inflight.max(1)).max(1);
+    SchedulerConfig {
+        policy: BatchPolicy::custom(max_batch, max_prefill, pool.flush_timeout_s),
+        max_inflight: pool.max_inflight.max(1),
+        kv_blocks: pool.kv_blocks.max(1),
+        kv_block_tokens: pool.kv_block_tokens.max(1),
+        prefix_cache: pool.prefix_cache,
+    }
+}
+
+/// Route a job back to the tier queue off a dying/draining replica —
+/// shared by the thread substrate's replica loops and the process
+/// substrate's pump threads (the loss-free recovery path both data
+/// planes funnel through). A momentarily full queue gets a brief bounded
+/// retry (another replica or the cold-wake path drains it) before the
+/// caller is failed — dropping a live caller because the queue was full
+/// for one tick is exactly the loss the requeue path exists to prevent.
+/// Returns whether the job was requeued.
+pub(crate) fn requeue_to(
+    queue: &Channel<TierJob>,
+    metrics: &GatewayMetrics,
+    mut job: TierJob,
+    fail_msg: &str,
+) -> bool {
+    if job.cancel.is_cancelled() {
+        metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+        return false;
+    }
+    for attempt in 0..50 {
+        if queue.is_closed() {
+            // Orderly shutdown: the caller is told, but this is not a
+            // serving error — `ps_errors_total` must stay quiet for a
+            // clean teardown.
+            job.reply.put(Err("gateway shutting down".to_string()));
+            return false;
+        }
+        match queue.try_send(job) {
+            Ok(()) => {
+                metrics.requeued.fetch_add(1, Ordering::Relaxed);
+                return true;
+            }
+            Err(back) => {
+                job = back;
+                if attempt < 49 {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            }
+        }
+    }
+    metrics.errors.fetch_add(1, Ordering::Relaxed);
+    job.reply.put(Err(fail_msg.to_string()));
+    false
+}
+
+fn requeue_job(job: TierJob, ctx: &ReplicaCtx, fail_msg: &str) -> bool {
+    requeue_to(&ctx.queue, &ctx.metrics, job, fail_msg)
+}
+
 /// Abrupt death (kill hook / injected fault): requeue in-flight jobs so
 /// traffic drains without loss on the replacement replica, then report
 /// Failed.
@@ -647,19 +743,7 @@ fn die_abruptly<E: StepEngine>(
     ctx: &ReplicaCtx,
 ) {
     for job in held.into_iter().chain(sched.fail_all()) {
-        if job.cancel.is_cancelled() {
-            ctx.metrics.cancelled.fetch_add(1, Ordering::Relaxed);
-            continue;
-        }
-        match ctx.queue.try_send(job) {
-            Ok(()) => {
-                ctx.metrics.requeued.fetch_add(1, Ordering::Relaxed);
-            }
-            Err(job) => {
-                ctx.metrics.errors.fetch_add(1, Ordering::Relaxed);
-                job.reply.put(Err("replica failed".to_string()));
-            }
-        }
+        requeue_job(job, ctx, "replica failed");
     }
     ctx.cell.inflight.store(0, Ordering::Relaxed);
     ctx.cell.state.store(S_FAILED, Ordering::Release);
@@ -669,32 +753,14 @@ fn die_abruptly<E: StepEngine>(
 /// retire, with flush-timeout holds that wake early on new arrivals.
 /// Runs until killed, stopped (graceful drain), or the queue closes.
 pub(crate) fn replica_loop<E: StepEngine>(engine: E, ctx: ReplicaCtx) {
-    // Clamp the batch target to the slot count too: with fewer slots
-    // than the biggest rung, a full replica could otherwise never
-    // "fill" a batch and would eat the flush timeout while saturated.
-    let max_batch = ctx
-        .pool
-        .max_decode_batch
-        .min(engine.max_batch())
-        .min(ctx.pool.max_inflight.max(1))
-        .max(1);
-    let max_prefill = ctx
-        .pool
-        .max_prefill_batch
-        .min(ctx.pool.max_inflight.max(1))
-        .max(1);
-    let policy = BatchPolicy::custom(max_batch, max_prefill, ctx.pool.flush_timeout_s);
-    let mut sched: Scheduler<E, TierJob> = Scheduler::new(
-        engine,
-        SchedulerConfig {
-            policy,
-            max_inflight: ctx.pool.max_inflight.max(1),
-            kv_blocks: ctx.pool.kv_blocks.max(1),
-            kv_block_tokens: ctx.pool.kv_block_tokens.max(1),
-            prefix_cache: ctx.pool.prefix_cache,
-        },
-    );
+    let cfg = sched_config(&ctx.pool, engine.max_batch());
+    let mut sched: Scheduler<E, TierJob> = Scheduler::new(engine, cfg);
     let mut held: Option<TierJob> = None;
+    // Graceful-drain edge: on the tick `stop` is first observed, buffered
+    // (admitted but not yet prefilled) jobs are handed back through the
+    // requeue path so a surviving replica serves them — a draining
+    // replica only finishes the slots it is already decoding.
+    let mut drained_pending = false;
     // Last prefix-cache counters forwarded to the gateway (deltas feed
     // the global `ps_prefix_*` counters; the cell publishes cumulatives
     // for the per-tier hit-rate signal).
@@ -720,6 +786,16 @@ pub(crate) fn replica_loop<E: StepEngine>(engine: E, ctx: ReplicaCtx) {
             return;
         }
         let stopping = ctx.cell.stop.load(Ordering::Relaxed);
+        if stopping && !drained_pending {
+            drained_pending = true;
+            for job in sched.drain_pending() {
+                requeue_job(job, &ctx, "replica draining");
+            }
+            if let Some(job) = held.take() {
+                requeue_job(job, &ctx, "replica draining");
+            }
+            ctx.cell.inflight.store(sched.inflight(), Ordering::Relaxed);
+        }
         // Admit as much as fits. A stopping replica drains its slots but
         // pulls nothing new.
         if !stopping {
@@ -866,16 +942,60 @@ pub(crate) fn replica_loop<E: StepEngine>(engine: E, ctx: ReplicaCtx) {
     // for a surviving replica (graceful terminate), or errors out when
     // the whole pool is shutting down.
     if let Some(job) = held.take() {
-        match ctx.queue.try_send(job) {
-            Ok(()) => {
-                ctx.metrics.requeued.fetch_add(1, Ordering::Relaxed);
-            }
-            Err(job) => job.reply.put(Err("gateway shutting down".to_string())),
-        }
+        requeue_job(job, &ctx, "gateway shutting down");
     }
     for job in sched.fail_all() {
         job.reply.put(Err("gateway shutting down".to_string()));
     }
     ctx.cell.inflight.store(0, Ordering::Relaxed);
     ctx.cell.state.store(S_GONE, Ordering::Release);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::scheduler::SimStepEngine;
+    use crate::models::zoo;
+    use crate::testkit::substrate_conformance::{check, Driver};
+
+    #[test]
+    fn local_substrate_passes_conformance() {
+        // The thread substrate against the shared lifecycle contract
+        // (same suite as MockSubstrate and ProcessSubstrate).
+        let z = zoo();
+        let registry = Registry::new(&z, 300.0);
+        let pool = PoolConfig { replicas: [2, 2, 2], ..PoolConfig::default() };
+        let epoch = Instant::now();
+        let shared = Arc::new(PoolShared::new(epoch, pool.queue_capacity));
+        let metrics = Arc::new(GatewayMetrics::default());
+        let mut sub = LocalSubstrate::new(
+            Arc::clone(&shared),
+            pool,
+            metrics,
+            |_tier: Tier, _i: usize| -> Result<SimStepEngine, String> {
+                Ok(SimStepEngine::instant())
+            },
+            &registry,
+        );
+        let sid = sub.tier_service(0);
+        let (spec, backend) = {
+            let s = registry.get(sid);
+            (s.spec.clone(), s.backend)
+        };
+        let mut d = Driver {
+            substrate: &mut sub,
+            service: sid,
+            model_idx: 0,
+            spec,
+            backend,
+            clock: Box::new(move || {
+                std::thread::sleep(Duration::from_millis(2));
+                epoch.elapsed().as_secs_f64()
+            }),
+            timeout_s: 15.0,
+        };
+        check(&mut d);
+        drop(d);
+        sub.shutdown();
+    }
 }

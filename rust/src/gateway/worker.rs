@@ -1,0 +1,413 @@
+//! `ps-replica` worker loop — one replica as a supervised OS process.
+//!
+//! The process-substrate worker end of [`crate::substrate::proto`]: it
+//! connects to the supervisor's Unix socket, announces itself (`Hello`),
+//! receives the pool's scheduling knobs (`HelloAck`), builds its engine
+//! (the supervisor's `Loading` phase), and then runs the *same*
+//! [`crate::backend::scheduler::Scheduler`] the thread substrate runs —
+//! admitting jobs received as RPC frames, streaming newly decoded tokens
+//! back as `TokenChunk`s, and answering `Done`/`JobFailed`/`Cancelled`
+//! per request. Heartbeats carry the scheduler's cumulative counters so
+//! the gateway's `/metrics` and the scaler's cache-adjusted demand
+//! signal work identically across substrates.
+//!
+//! Shutdown paths:
+//! * `Terminate` frame or SIGTERM → graceful drain: unstarted jobs go
+//!   back as `Returned` frames (the supervisor requeues them), decoding
+//!   slots finish, then `Gone` and exit 0 — the pod `preStop` model.
+//! * engine build/step death → `Fatal` and exit 1; the supervisor
+//!   requeues its dispatch ledger, so nothing is lost.
+//! * supervisor connection lost → exit immediately (a worker must never
+//!   outlive its gateway).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::Read;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::backend::batcher::DECODE_BATCHES;
+use crate::backend::scheduler::{Admit, CancelToken, Scheduler, StepEngine};
+use crate::config::PoolConfig;
+use crate::gateway::pool::sched_config;
+use crate::models::Tier;
+use crate::substrate::proto::{
+    read_frame_blocking, write_frame, Frame, FrameReader, HeartbeatWire, PoolWire,
+    PROTO_VERSION,
+};
+use crate::util::threadpool::Channel;
+
+/// Heartbeat cadence (well inside the default 3 s health deadline).
+const HEARTBEAT_PERIOD: Duration = Duration::from_millis(20);
+
+/// Set by the SIGTERM handler: drain gracefully, exactly as if the
+/// supervisor had sent `Terminate` (Kubernetes sends SIGTERM on pod
+/// deletion; the supervisor's frame is the portable equivalent).
+static SIGTERM_DRAIN: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+fn install_sigterm_handler() {
+    use std::os::raw::c_int;
+    extern "C" fn on_sigterm(_sig: c_int) {
+        // Only async-signal-safe work here: set the flag, nothing else.
+        SIGTERM_DRAIN.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: c_int, handler: extern "C" fn(c_int)) -> usize;
+    }
+    const SIGTERM: c_int = 15;
+    unsafe {
+        let _ = signal(SIGTERM, on_sigterm);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_sigterm_handler() {}
+
+/// CLI surface of the `ps-replica` subcommand.
+pub struct WorkerOptions {
+    /// Unix socket path the supervisor is listening on.
+    pub socket: String,
+    pub tier: Tier,
+    /// Replica index within the tier (log labelling only).
+    pub replica: usize,
+}
+
+/// Reconstruct a scheduler-facing [`PoolConfig`] from the wire knobs
+/// (fields the worker does not schedule with keep their defaults).
+fn pool_from_wire(w: &PoolWire) -> PoolConfig {
+    PoolConfig {
+        max_inflight: w.max_inflight,
+        max_decode_batch: w.max_decode_batch,
+        max_prefill_batch: w.max_prefill_batch,
+        flush_timeout_s: w.flush_timeout_s,
+        kv_blocks: w.kv_blocks,
+        kv_block_tokens: w.kv_block_tokens,
+        prefix_cache: w.prefix_cache,
+        ..PoolConfig::default()
+    }
+}
+
+/// Per-sequence payload inside the worker's scheduler: the supervisor's
+/// job id, how many tokens have been streamed, and the local cancel
+/// token `Cancel` frames fire.
+struct WireJob {
+    id: u64,
+    sent: usize,
+    cancel: CancelToken,
+}
+
+/// Run one worker to completion. `build` constructs the engine once the
+/// pool knobs are known (the PJRT path needs `max_decode_batch` to pick
+/// its compiled ladder). Returns only after a graceful drain; fatal
+/// errors bubble up for a nonzero exit.
+pub fn run_worker<E, F>(opts: &WorkerOptions, build: F) -> Result<()>
+where
+    E: StepEngine,
+    F: FnOnce(Tier, usize, &PoolWire) -> std::result::Result<E, String>,
+{
+    install_sigterm_handler();
+    let epoch = Instant::now();
+    let mut stream = UnixStream::connect(&opts.socket)
+        .with_context(|| format!("connecting to supervisor at {}", opts.socket))?;
+    write_frame(&mut stream, &Frame::Hello {
+        version: PROTO_VERSION,
+        pid: std::process::id() as u64,
+        tier: opts.tier.index(),
+    })?;
+    let mut handshake = FrameReader::new();
+    let pool = match read_frame_blocking(&mut stream, &mut handshake)? {
+        Frame::HelloAck { version, pool } => {
+            if !(1..=PROTO_VERSION).contains(&version) {
+                bail!("supervisor negotiated unsupported protocol v{version}");
+            }
+            pool
+        }
+        f => bail!("expected HelloAck, got {f:?}"),
+    };
+
+    // Reader thread: blocking reads → control channel. It inherits the
+    // handshake's FrameReader so frames coalesced onto the HelloAck read
+    // (say an immediate Terminate) are never stranded. EOF or a read
+    // error closes the channel — the main loop treats that as
+    // "supervisor gone" and exits.
+    let msgs: Channel<Frame> = Channel::bounded(1024);
+    {
+        let mut rx = stream.try_clone().context("cloning socket for reads")?;
+        let msgs = msgs.clone();
+        let mut reader = handshake;
+        std::thread::Builder::new()
+            .name("ps-replica-reader".into())
+            .spawn(move || {
+                let mut buf = [0u8; 16384];
+                'conn: loop {
+                    // Parse-before-read: drain buffered frames first.
+                    loop {
+                        match reader.next() {
+                            Ok(Some(f)) => {
+                                if msgs.send(f).is_err() {
+                                    return;
+                                }
+                            }
+                            Ok(None) => break,
+                            Err(_) => break 'conn,
+                        }
+                    }
+                    match rx.read(&mut buf) {
+                        Ok(0) | Err(_) => break 'conn,
+                        Ok(n) => reader.extend(&buf[..n]),
+                    }
+                }
+                msgs.close();
+            })?;
+    }
+
+    let engine = match build(opts.tier, opts.replica, &pool) {
+        Ok(e) => e,
+        Err(e) => {
+            let _ = write_frame(&mut stream, &Frame::Fatal { error: e.clone() });
+            bail!("engine build failed: {e}");
+        }
+    };
+    let cfg = sched_config(&pool_from_wire(&pool), engine.max_batch());
+    let mut sched: Scheduler<E, WireJob> = Scheduler::new(engine, cfg);
+    write_frame(&mut stream, &Frame::Ready)?;
+
+    let mut incoming: VecDeque<(u64, String, usize)> = VecDeque::new();
+    let mut cancels: BTreeMap<u64, CancelToken> = BTreeMap::new();
+    let mut draining = false;
+    let mut drained_once = false;
+    let mut last_hb = Instant::now() - HEARTBEAT_PERIOD;
+    const MAX_CONSECUTIVE_ENGINE_ERRORS: usize = 3;
+    let mut engine_errors = 0usize;
+
+    loop {
+        // 1. Control-plane frames.
+        while let Some(f) = msgs.try_recv() {
+            handle_ctl(f, &mut stream, &mut incoming, &mut cancels, &mut draining)?;
+        }
+        if msgs.is_closed() && msgs.is_empty() {
+            bail!("supervisor connection lost");
+        }
+        if SIGTERM_DRAIN.load(Ordering::SeqCst) {
+            draining = true;
+        }
+
+        // 2. Graceful drain: hand unstarted work back for requeue (the
+        // buffered prefills once, plus anything that raced in later);
+        // slots already decoding run to completion.
+        if draining {
+            if !drained_once {
+                drained_once = true;
+                for w in sched.drain_pending() {
+                    cancels.remove(&w.id);
+                    write_frame(&mut stream, &Frame::Returned { job: w.id })?;
+                }
+            }
+            for (id, _, _) in incoming.drain(..) {
+                cancels.remove(&id);
+                write_frame(&mut stream, &Frame::Returned { job: id })?;
+            }
+        }
+
+        // 3. Admissions.
+        if !draining {
+            while let Some((id, prompt, max_tokens)) = incoming.pop_front() {
+                let cancel = cancels
+                    .get(&id)
+                    .cloned()
+                    .unwrap_or_default();
+                if cancel.is_cancelled() {
+                    cancels.remove(&id);
+                    write_frame(&mut stream, &Frame::Cancelled { job: id })?;
+                    continue;
+                }
+                let est = crate::tokenizer::word_count(&prompt).max(1) + 1;
+                let payload = WireJob { id, sent: 0, cancel: cancel.clone() };
+                match sched.admit_cancellable(&prompt, max_tokens, est, payload, cancel)
+                {
+                    Admit::Admitted => {}
+                    Admit::Rejected(_) => {
+                        // No headroom right now; retry next turn. The
+                        // supervisor's dispatch cap makes this rare.
+                        incoming.push_front((id, prompt, max_tokens));
+                        break;
+                    }
+                    Admit::Failed(w, e) => {
+                        cancels.remove(&w.id);
+                        write_frame(&mut stream, &Frame::JobFailed {
+                            job: w.id,
+                            error: format!("admission failed: {e:#}"),
+                        })?;
+                    }
+                }
+            }
+        }
+
+        // 4. Idle / exit handling.
+        if sched.inflight() == 0 {
+            if draining && incoming.is_empty() {
+                break;
+            }
+            send_heartbeat(&mut stream, &mut sched, &mut last_hb, false)?;
+            if let Some(f) = msgs.recv_timeout(Duration::from_millis(20)) {
+                handle_ctl(f, &mut stream, &mut incoming, &mut cancels, &mut draining)?;
+            }
+            continue;
+        }
+
+        // 5. One scheduler tick. A panic inside the engine must not
+        // strand the supervisor's ledger: report Fatal and die — the
+        // supervisor requeues everything it dispatched to us.
+        let now = epoch.elapsed().as_secs_f64();
+        let tick = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            sched.tick(now)
+        })) {
+            Ok(t) => t,
+            Err(_) => {
+                let _ = write_frame(&mut stream, &Frame::Fatal {
+                    error: "engine panicked".into(),
+                });
+                bail!("engine panicked");
+            }
+        };
+        match tick {
+            Ok(tick) => {
+                engine_errors = 0;
+                // Stream freshly decoded tokens, then retire finished /
+                // cancelled / failed sequences.
+                let mut chunks: Vec<(u64, Vec<i32>)> = Vec::new();
+                sched.for_each_slot(|w, tokens| {
+                    if tokens.len() > w.sent {
+                        chunks.push((w.id, tokens[w.sent..].to_vec()));
+                        w.sent = tokens.len();
+                    }
+                });
+                for (job, tokens) in chunks {
+                    write_frame(&mut stream, &Frame::TokenChunk { job, tokens })?;
+                }
+                for f in tick.finished {
+                    cancels.remove(&f.payload.id);
+                    let tail = f.tokens[f.payload.sent.min(f.tokens.len())..].to_vec();
+                    write_frame(&mut stream, &Frame::Done {
+                        job: f.payload.id,
+                        prompt_tokens: f.prompt_tokens,
+                        tokens: tail,
+                    })?;
+                }
+                for w in tick.cancelled {
+                    cancels.remove(&w.id);
+                    write_frame(&mut stream, &Frame::Cancelled { job: w.id })?;
+                }
+                for (w, msg) in tick.failed {
+                    cancels.remove(&w.id);
+                    write_frame(&mut stream, &Frame::JobFailed {
+                        job: w.id,
+                        error: msg,
+                    })?;
+                }
+                send_heartbeat(&mut stream, &mut sched, &mut last_hb, false)?;
+                if tick.stepped == 0 && tick.prefilled == 0 {
+                    if let Some(wait) = tick.wait_s {
+                        // Holding for batch-mates: sleep out the flush
+                        // window, waking early on a new control frame.
+                        let wait = Duration::from_secs_f64(wait.clamp(0.0002, 0.1));
+                        if let Some(f) = msgs.recv_timeout(wait) {
+                            handle_ctl(
+                                f,
+                                &mut stream,
+                                &mut incoming,
+                                &mut cancels,
+                                &mut draining,
+                            )?;
+                        }
+                    }
+                }
+            }
+            Err(e) => {
+                let msg = format!("engine step failed: {e:#}");
+                for w in sched.fail_all() {
+                    cancels.remove(&w.id);
+                    write_frame(&mut stream, &Frame::JobFailed {
+                        job: w.id,
+                        error: msg.clone(),
+                    })?;
+                }
+                engine_errors += 1;
+                if engine_errors >= MAX_CONSECUTIVE_ENGINE_ERRORS {
+                    let _ = write_frame(&mut stream, &Frame::Fatal { error: msg });
+                    bail!("engine persistently failing");
+                }
+            }
+        }
+    }
+
+    // Drained: final counters, then the graceful terminal frame.
+    send_heartbeat(&mut stream, &mut sched, &mut last_hb, true)?;
+    write_frame(&mut stream, &Frame::Gone)?;
+    Ok(())
+}
+
+/// Apply one supervisor frame to the worker's control state.
+fn handle_ctl(
+    frame: Frame,
+    stream: &mut UnixStream,
+    incoming: &mut VecDeque<(u64, String, usize)>,
+    cancels: &mut BTreeMap<u64, CancelToken>,
+    draining: &mut bool,
+) -> Result<()> {
+    match frame {
+        Frame::Job { job, prompt, max_tokens } => {
+            cancels.insert(job, CancelToken::new());
+            incoming.push_back((job, prompt, max_tokens));
+        }
+        Frame::Cancel { job } => {
+            if let Some(tok) = cancels.get(&job) {
+                tok.cancel();
+            }
+        }
+        Frame::Ping { nonce } => {
+            write_frame(stream, &Frame::Pong { nonce })?;
+        }
+        Frame::Terminate => {
+            *draining = true;
+        }
+        f => return Err(anyhow!("unexpected supervisor frame {f:?}")),
+    }
+    Ok(())
+}
+
+/// Ship cumulative scheduler counters (throttled; `force` for the final
+/// pre-exit flush so no tail counts are lost).
+fn send_heartbeat<E: StepEngine>(
+    stream: &mut UnixStream,
+    sched: &mut Scheduler<E, WireJob>,
+    last: &mut Instant,
+    force: bool,
+) -> Result<()> {
+    if !force && last.elapsed() < HEARTBEAT_PERIOD {
+        return Ok(());
+    }
+    *last = Instant::now();
+    let stats = &sched.stats;
+    let mut batch_counts = [0u64; DECODE_BATCHES.len()];
+    for (i, &b) in DECODE_BATCHES.iter().enumerate() {
+        batch_counts[i] = stats.batch_hist.bucket(b as f64);
+    }
+    let hb = HeartbeatWire {
+        inflight: sched.inflight(),
+        prefills: stats.prefills,
+        prefill_batched: stats.prefill_batched,
+        decode_steps: stats.decode_steps,
+        batched_steps: stats.batched_steps,
+        batch_counts,
+        prefix_hit_tokens: sched.prefix_stats().hit_tokens,
+        prefix_miss_tokens: sched.prefix_stats().miss_tokens,
+        prefix_evicted_blocks: sched.prefix_stats().evicted_blocks,
+        prefix_cache_blocks: sched.kv_cached_blocks() as u64,
+    };
+    write_frame(stream, &Frame::Heartbeat(hb))?;
+    Ok(())
+}

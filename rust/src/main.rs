@@ -5,6 +5,8 @@
 //! * `route`  — classify a prompt and print the matrix scores (Alg. 2).
 //! * `sim`    — run a virtual-time simulation and print the report.
 //! * `report` — regenerate the paper's headline tables quickly.
+//! * `ps-replica` — engine replica worker process (spawned by the
+//!   gateway when `pool.substrate = "process"`; not for manual use).
 
 use std::sync::Arc;
 
@@ -56,6 +58,11 @@ fn run() -> Result<()> {
         Some((c, rest)) if !c.starts_with("--") => (c.clone(), rest.to_vec()),
         _ => (String::from("help"), argv.clone()),
     };
+    if command == "ps-replica" {
+        // Worker mode has its own option surface (parsed before the
+        // leader spec, which would reject --socket).
+        return cmd_worker(&rest);
+    }
     let args = spec().parse(&rest)?;
     if let Some(l) = args.opt("log-level") {
         if let Some(level) = logging::Level::parse(l) {
@@ -85,9 +92,68 @@ fn run() -> Result<()> {
         "report" => cmd_report(&cfg, &args),
         _ => {
             println!("{}", spec().usage());
-            println!("Commands: serve | route | sim | report");
+            println!("Commands: serve | route | sim | report | ps-replica");
             Ok(())
         }
+    }
+}
+
+/// `ps-replica` — one engine replica as a supervised worker process.
+///
+/// Spawned by the gateway's process substrate (`pool.substrate =
+/// "process"`): connects to the supervisor's Unix socket, builds the
+/// requested engine, and serves RPC jobs until told to drain. This is
+/// the process analogue of the paper's pod-per-replica deployment; it is
+/// not meant to be run by hand.
+fn cmd_worker(argv: &[String]) -> Result<()> {
+    use pick_and_spin::gateway::worker::{run_worker, WorkerOptions};
+    use pick_and_spin::models::Tier;
+
+    let wspec = Spec {
+        name: "pick-and-spin ps-replica",
+        about: "engine replica worker process (spawned by the gateway)",
+        options: vec![
+            ("socket", true, "supervisor Unix socket path"),
+            ("tier", true, "small | medium | large"),
+            ("replica", true, "replica index within the tier"),
+            ("engine", true, "sim | pjrt (default: pjrt)"),
+            ("artifacts", true, "artifacts directory (pjrt engine)"),
+            ("log-level", true, "error|warn|info|debug|trace"),
+        ],
+    };
+    let args = wspec.parse(argv)?;
+    if let Some(l) = args.opt("log-level") {
+        if let Some(level) = logging::Level::parse(l) {
+            logging::set_level(level);
+        }
+    }
+    let socket = args
+        .opt("socket")
+        .ok_or_else(|| anyhow::anyhow!("ps-replica requires --socket"))?
+        .to_string();
+    let tier_name = args.opt("tier").unwrap_or("small");
+    let tier = Tier::ALL
+        .iter()
+        .copied()
+        .find(|t| t.name() == tier_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown tier `{tier_name}`"))?;
+    let replica = args.opt_usize("replica", 0)?;
+    let opts = WorkerOptions { socket, tier, replica };
+    match args.opt("engine").unwrap_or("pjrt") {
+        "sim" => run_worker(&opts, |_tier, _replica, _pool| {
+            Ok(pick_and_spin::backend::scheduler::SimStepEngine::calibrated())
+        }),
+        "pjrt" => {
+            let artifacts = args.opt_or("artifacts", "artifacts").to_string();
+            run_worker(&opts, move |tier, _replica, pool| {
+                pick_and_spin::gateway::build_pjrt_engine(
+                    &artifacts,
+                    tier,
+                    pool.max_decode_batch,
+                )
+            })
+        }
+        e => Err(anyhow::anyhow!("unknown worker engine `{e}`")),
     }
 }
 

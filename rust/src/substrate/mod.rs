@@ -5,18 +5,27 @@
 //! recovery, Table 4) come from one control plane operating a Kubernetes
 //! substrate. This module defines that contract: a [`Substrate`] can
 //! provision and terminate replicas, report their lifecycle state, and
-//! surface failures as events. Two implementations exist:
+//! surface failures as events. Three implementations exist:
 //!
 //! * [`crate::cluster::Cluster`] — the simulated Kubernetes (pods on GPU
 //!   nodes, image pulls, PVC weight loads, virtual time).
 //! * `gateway::pool::LocalSubstrate` — the live engine pool (replica
 //!   threads; Loading = engine compile/warm-up, Ready = scheduler loop
 //!   running, wall-clock time).
+//! * [`remote::ProcessSubstrate`] — replicas as supervised `ps-replica`
+//!   OS processes over the framed JSON RPC data plane ([`proto`]); real
+//!   crash isolation, `kill -9` recovery, the step toward multi-host.
+//!
+//! `testkit::substrate_conformance` pins the shared lifecycle contract
+//! so the implementations cannot drift.
 //!
 //! `orchestrator::{scaling, selection, recovery}` operate only on this
 //! trait, so Algorithm 1, Algorithm 2's cold-start penalties, and the
 //! recovery manager's `Incident` accounting behave identically on the
 //! simulated and live paths.
+
+pub mod proto;
+pub mod remote;
 
 use crate::models::{BackendKind, ModelSpec};
 use crate::registry::ServiceId;
@@ -315,6 +324,28 @@ mod tests {
         let evs = s.poll(4.0);
         assert!(matches!(evs[0], SubstrateEvent::ReplicaGone { .. }));
         assert_eq!(s.replica_state(id), None);
+    }
+
+    #[test]
+    fn mock_substrate_passes_conformance() {
+        // The same suite the thread and process substrates run — the
+        // mock is the contract's reference implementation.
+        let z = zoo();
+        let mut s = MockSubstrate::new(4, 5.0);
+        let mut t = 0.0;
+        let mut d = crate::testkit::substrate_conformance::Driver {
+            substrate: &mut s,
+            service: ServiceId(0),
+            model_idx: 0,
+            spec: z[0].clone(),
+            backend: BackendKind::Vllm,
+            clock: Box::new(move || {
+                t += 0.5;
+                t
+            }),
+            timeout_s: 600.0,
+        };
+        crate::testkit::substrate_conformance::check(&mut d);
     }
 
     #[test]

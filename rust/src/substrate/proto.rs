@@ -1,0 +1,557 @@
+//! Wire protocol for the process substrate's RPC data plane.
+//!
+//! The supervisor (gateway control plane) and each `ps-replica` worker
+//! process speak length-prefixed JSON frames over a Unix stream socket:
+//! a 4-byte big-endian payload length followed by one UTF-8 JSON object
+//! (`util::json` — no serde offline). JSON keeps the frames debuggable
+//! with `socat`/`strings` and reuses the crate's only serializer; the
+//! length prefix makes framing independent of payload content, so
+//! prompts may contain any text the JSON layer can round-trip (which is
+//! why `util::json` must escape control characters and non-BMP code
+//! points losslessly — see its tests).
+//!
+//! Session shape:
+//!
+//! ```text
+//! worker  → Hello   { version, pid, tier }
+//! super   → HelloAck{ version, pool }          (negotiated version + knobs)
+//! worker  → Ready                              (engine built and warm)
+//! super   → Job     { job, prompt, max_tokens }
+//! worker  → TokenChunk { job, tokens }*        (streamed per tick)
+//! worker  → Done    { job, prompt_tokens, tokens }  (tail tokens)
+//! super   → Cancel  { job }                    (caller gave up)
+//! worker  → Cancelled { job }
+//! super   → Ping { nonce }  /  worker → Pong { nonce }   (RPC latency)
+//! worker  → Heartbeat { ... }                  (liveness + counters)
+//! super   → Terminate                          (graceful drain)
+//! worker  → Returned { job }*                  (unstarted work handed back)
+//! worker  → Gone                               (drained; exiting 0)
+//! worker  → Fatal { error }                    (engine build/step died)
+//! ```
+//!
+//! Version negotiation: `Hello.version` is the worker's newest protocol;
+//! the supervisor answers with `min(worker, PROTO_VERSION)`. Either side
+//! that cannot speak the negotiated version hangs up; with a single
+//! version in existence that means an exact match is required, but the
+//! handshake shape lets future versions degrade instead of breaking.
+
+use std::io::{self, Read, Write};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::backend::batcher::N_DECODE_BATCHES;
+use crate::backend::kv_cache::PrefixCacheConfig;
+use crate::config::PoolConfig;
+use crate::util::json::Json;
+
+/// Newest protocol version this build speaks.
+pub const PROTO_VERSION: u64 = 1;
+
+/// Upper bound on one frame's payload (corruption guard: a garbled
+/// length prefix must not trigger a multi-gigabyte allocation).
+pub const MAX_FRAME_BYTES: usize = 16 << 20;
+
+/// Scheduler knobs the supervisor ships to a worker in `HelloAck`, so
+/// worker processes need no config file — the gateway's `pool.*` section
+/// is authoritative for every replica regardless of substrate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PoolWire {
+    pub max_inflight: usize,
+    pub max_decode_batch: usize,
+    pub max_prefill_batch: usize,
+    pub flush_timeout_s: f64,
+    pub kv_blocks: usize,
+    pub kv_block_tokens: usize,
+    pub prefix_cache: PrefixCacheConfig,
+}
+
+impl PoolWire {
+    pub fn from_pool(p: &PoolConfig) -> PoolWire {
+        PoolWire {
+            max_inflight: p.max_inflight,
+            max_decode_batch: p.max_decode_batch,
+            max_prefill_batch: p.max_prefill_batch,
+            flush_timeout_s: p.flush_timeout_s,
+            kv_blocks: p.kv_blocks,
+            kv_block_tokens: p.kv_block_tokens,
+            prefix_cache: p.prefix_cache,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("max_inflight", Json::num(self.max_inflight as f64)),
+            ("max_decode_batch", Json::num(self.max_decode_batch as f64)),
+            ("max_prefill_batch", Json::num(self.max_prefill_batch as f64)),
+            ("flush_timeout_s", Json::num(self.flush_timeout_s)),
+            ("kv_blocks", Json::num(self.kv_blocks as f64)),
+            ("kv_block_tokens", Json::num(self.kv_block_tokens as f64)),
+            ("pc_enabled", Json::Bool(self.prefix_cache.enabled)),
+            ("pc_min_block_run", Json::num(self.prefix_cache.min_block_run as f64)),
+            ("pc_evict_watermark", Json::num(self.prefix_cache.evict_watermark)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<PoolWire> {
+        Ok(PoolWire {
+            max_inflight: j.rusize("max_inflight")?,
+            max_decode_batch: j.rusize("max_decode_batch")?,
+            max_prefill_batch: j.rusize("max_prefill_batch")?,
+            flush_timeout_s: j.rf64("flush_timeout_s")?,
+            kv_blocks: j.rusize("kv_blocks")?,
+            kv_block_tokens: j.rusize("kv_block_tokens")?,
+            prefix_cache: PrefixCacheConfig {
+                enabled: j.bool_or("pc_enabled", true),
+                min_block_run: j.usize_or("pc_min_block_run", 1),
+                evict_watermark: j.f64_or("pc_evict_watermark", 0.9),
+            },
+        })
+    }
+}
+
+/// Cumulative worker-side counters carried by [`Frame::Heartbeat`]. The
+/// supervisor differences successive samples into the gateway's global
+/// metrics and publishes the cumulatives into the replica's cell (the
+/// control loop's cache-adjusted demand signal) — the same split the
+/// thread substrate gets from shared memory, reconstructed over the wire.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct HeartbeatWire {
+    /// Occupied decode slots, buffered prefills included.
+    pub inflight: usize,
+    pub prefills: u64,
+    pub prefill_batched: u64,
+    pub decode_steps: u64,
+    pub batched_steps: u64,
+    /// Formed decode batches per compiled rung (`DECODE_BATCHES` order).
+    pub batch_counts: [u64; N_DECODE_BATCHES],
+    pub prefix_hit_tokens: u64,
+    pub prefix_miss_tokens: u64,
+    pub prefix_evicted_blocks: u64,
+    /// Blocks resident in the worker's prefix cache (gauge).
+    pub prefix_cache_blocks: u64,
+}
+
+/// One protocol frame. `S2W` = supervisor→worker, `W2S` = worker→supervisor.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    // ---- handshake -------------------------------------------------------
+    /// W2S: first frame on the socket.
+    Hello { version: u64, pid: u64, tier: usize },
+    /// S2W: negotiated version + the scheduler knobs for this replica.
+    HelloAck { version: u64, pool: PoolWire },
+    /// W2S: engine built and warm; the supervisor's Loading→Ready edge.
+    Ready,
+    // ---- data plane ------------------------------------------------------
+    /// S2W: dispatch one routed job.
+    Job { job: u64, prompt: String, max_tokens: usize },
+    /// W2S: newly generated tokens for an in-flight job (streamed).
+    TokenChunk { job: u64, tokens: Vec<i32> },
+    /// W2S: job finished; `tokens` is the not-yet-streamed tail.
+    Done { job: u64, prompt_tokens: usize, tokens: Vec<i32> },
+    /// W2S: job failed terminally (admission/prefill error).
+    JobFailed { job: u64, error: String },
+    /// S2W: the caller gave up; evict the sequence.
+    Cancel { job: u64 },
+    /// W2S: the sequence was evicted by its cancel token.
+    Cancelled { job: u64 },
+    /// W2S: graceful drain handed this unstarted job back for requeue.
+    Returned { job: u64 },
+    // ---- control / health ------------------------------------------------
+    /// W2S: liveness + cumulative counters.
+    Heartbeat(HeartbeatWire),
+    /// S2W: RPC latency probe (`nonce` echoes back verbatim).
+    Ping { nonce: u64 },
+    /// W2S: echo of [`Frame::Ping`].
+    Pong { nonce: u64 },
+    /// S2W: drain in-flight work, return unstarted work, then exit 0.
+    Terminate,
+    /// W2S: drained and exiting (graceful terminal frame).
+    Gone,
+    /// W2S: unrecoverable worker error (engine build/step death).
+    Fatal { error: String },
+}
+
+impl Frame {
+    fn tag(&self) -> &'static str {
+        match self {
+            Frame::Hello { .. } => "hello",
+            Frame::HelloAck { .. } => "hello_ack",
+            Frame::Ready => "ready",
+            Frame::Job { .. } => "job",
+            Frame::TokenChunk { .. } => "chunk",
+            Frame::Done { .. } => "done",
+            Frame::JobFailed { .. } => "job_failed",
+            Frame::Cancel { .. } => "cancel",
+            Frame::Cancelled { .. } => "cancelled",
+            Frame::Returned { .. } => "returned",
+            Frame::Heartbeat(_) => "heartbeat",
+            Frame::Ping { .. } => "ping",
+            Frame::Pong { .. } => "pong",
+            Frame::Terminate => "terminate",
+            Frame::Gone => "gone",
+            Frame::Fatal { .. } => "fatal",
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![("t", Json::str(self.tag()))];
+        match self {
+            Frame::Hello { version, pid, tier } => {
+                pairs.push(("version", Json::num(*version as f64)));
+                pairs.push(("pid", Json::num(*pid as f64)));
+                pairs.push(("tier", Json::num(*tier as f64)));
+            }
+            Frame::HelloAck { version, pool } => {
+                pairs.push(("version", Json::num(*version as f64)));
+                pairs.push(("pool", pool.to_json()));
+            }
+            Frame::Job { job, prompt, max_tokens } => {
+                pairs.push(("job", Json::num(*job as f64)));
+                pairs.push(("prompt", Json::str(prompt.clone())));
+                pairs.push(("max_tokens", Json::num(*max_tokens as f64)));
+            }
+            Frame::TokenChunk { job, tokens } => {
+                pairs.push(("job", Json::num(*job as f64)));
+                pairs.push(("tokens", tokens_json(tokens)));
+            }
+            Frame::Done { job, prompt_tokens, tokens } => {
+                pairs.push(("job", Json::num(*job as f64)));
+                pairs.push(("prompt_tokens", Json::num(*prompt_tokens as f64)));
+                pairs.push(("tokens", tokens_json(tokens)));
+            }
+            Frame::JobFailed { job, error } => {
+                pairs.push(("job", Json::num(*job as f64)));
+                pairs.push(("error", Json::str(error.clone())));
+            }
+            Frame::Cancel { job }
+            | Frame::Cancelled { job }
+            | Frame::Returned { job } => {
+                pairs.push(("job", Json::num(*job as f64)));
+            }
+            Frame::Heartbeat(hb) => {
+                pairs.push(("inflight", Json::num(hb.inflight as f64)));
+                pairs.push(("prefills", Json::num(hb.prefills as f64)));
+                pairs.push(("prefill_batched", Json::num(hb.prefill_batched as f64)));
+                pairs.push(("decode_steps", Json::num(hb.decode_steps as f64)));
+                pairs.push(("batched_steps", Json::num(hb.batched_steps as f64)));
+                pairs.push((
+                    "batch_counts",
+                    Json::arr(hb.batch_counts.iter().map(|&c| Json::num(c as f64))),
+                ));
+                pairs.push(("hit_tokens", Json::num(hb.prefix_hit_tokens as f64)));
+                pairs.push(("miss_tokens", Json::num(hb.prefix_miss_tokens as f64)));
+                pairs.push((
+                    "evicted_blocks",
+                    Json::num(hb.prefix_evicted_blocks as f64),
+                ));
+                pairs.push(("cache_blocks", Json::num(hb.prefix_cache_blocks as f64)));
+            }
+            Frame::Ping { nonce } | Frame::Pong { nonce } => {
+                pairs.push(("nonce", Json::num(*nonce as f64)));
+            }
+            Frame::Ready | Frame::Terminate | Frame::Gone => {}
+            Frame::Fatal { error } => {
+                pairs.push(("error", Json::str(error.clone())));
+            }
+        }
+        Json::obj(pairs)
+    }
+
+    fn from_json(j: &Json) -> Result<Frame> {
+        let job = |j: &Json| j.rusize("job").map(|v| v as u64);
+        Ok(match j.rstr("t")? {
+            "hello" => Frame::Hello {
+                version: j.rusize("version")? as u64,
+                pid: j.rusize("pid")? as u64,
+                tier: j.rusize("tier")?,
+            },
+            "hello_ack" => Frame::HelloAck {
+                version: j.rusize("version")? as u64,
+                pool: PoolWire::from_json(j.req("pool")?)?,
+            },
+            "ready" => Frame::Ready,
+            "job" => Frame::Job {
+                job: job(j)?,
+                prompt: j.rstr("prompt")?.to_string(),
+                max_tokens: j.rusize("max_tokens")?,
+            },
+            "chunk" => Frame::TokenChunk { job: job(j)?, tokens: tokens_from(j)? },
+            "done" => Frame::Done {
+                job: job(j)?,
+                prompt_tokens: j.rusize("prompt_tokens")?,
+                tokens: tokens_from(j)?,
+            },
+            "job_failed" => Frame::JobFailed {
+                job: job(j)?,
+                error: j.rstr("error")?.to_string(),
+            },
+            "cancel" => Frame::Cancel { job: job(j)? },
+            "cancelled" => Frame::Cancelled { job: job(j)? },
+            "returned" => Frame::Returned { job: job(j)? },
+            "heartbeat" => {
+                let mut batch_counts = [0u64; N_DECODE_BATCHES];
+                if let Some(a) = j.get("batch_counts").and_then(Json::as_arr) {
+                    for (i, v) in a.iter().take(N_DECODE_BATCHES).enumerate() {
+                        batch_counts[i] = v.as_f64().unwrap_or(0.0) as u64;
+                    }
+                }
+                Frame::Heartbeat(HeartbeatWire {
+                    inflight: j.rusize("inflight")?,
+                    prefills: j.rusize("prefills")? as u64,
+                    prefill_batched: j.rusize("prefill_batched")? as u64,
+                    decode_steps: j.rusize("decode_steps")? as u64,
+                    batched_steps: j.rusize("batched_steps")? as u64,
+                    batch_counts,
+                    prefix_hit_tokens: j.rusize("hit_tokens")? as u64,
+                    prefix_miss_tokens: j.rusize("miss_tokens")? as u64,
+                    prefix_evicted_blocks: j.rusize("evicted_blocks")? as u64,
+                    prefix_cache_blocks: j.rusize("cache_blocks")? as u64,
+                })
+            }
+            "ping" => Frame::Ping { nonce: j.rusize("nonce")? as u64 },
+            "pong" => Frame::Pong { nonce: j.rusize("nonce")? as u64 },
+            "terminate" => Frame::Terminate,
+            "gone" => Frame::Gone,
+            "fatal" => Frame::Fatal { error: j.rstr("error")?.to_string() },
+            t => bail!("unknown frame type `{t}`"),
+        })
+    }
+
+    /// Serialize to the wire form: 4-byte big-endian length + JSON.
+    pub fn encode(&self) -> Vec<u8> {
+        let body = self.to_json().dump().into_bytes();
+        let mut out = Vec::with_capacity(4 + body.len());
+        out.extend_from_slice(&(body.len() as u32).to_be_bytes());
+        out.extend_from_slice(&body);
+        out
+    }
+
+    /// Parse one frame payload (the bytes after the length prefix).
+    pub fn decode(body: &[u8]) -> Result<Frame> {
+        let text = std::str::from_utf8(body)
+            .map_err(|e| anyhow!("frame is not UTF-8: {e}"))?;
+        Frame::from_json(&Json::parse(text)?)
+    }
+}
+
+fn tokens_json(tokens: &[i32]) -> Json {
+    Json::arr(tokens.iter().map(|&t| Json::num(t as f64)))
+}
+
+fn tokens_from(j: &Json) -> Result<Vec<i32>> {
+    Ok(j.rarr("tokens")?
+        .iter()
+        .map(|v| v.as_f64().unwrap_or(0.0) as i32)
+        .collect())
+}
+
+/// Incremental frame decoder. Bytes arrive in arbitrary read-sized
+/// pieces (the supervisor reads with a timeout and may observe partial
+/// frames); `extend` accumulates and [`FrameReader::next`] yields
+/// complete frames without ever losing sync mid-frame.
+#[derive(Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+}
+
+impl FrameReader {
+    pub fn new() -> FrameReader {
+        FrameReader::default()
+    }
+
+    pub fn extend(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Pop the next complete frame, `Ok(None)` if more bytes are needed.
+    /// A parse error is unrecoverable (the stream is desynced) — callers
+    /// must drop the connection.
+    pub fn next(&mut self) -> Result<Option<Frame>> {
+        if self.buf.len() < 4 {
+            return Ok(None);
+        }
+        let len = u32::from_be_bytes([self.buf[0], self.buf[1], self.buf[2], self.buf[3]])
+            as usize;
+        if len > MAX_FRAME_BYTES {
+            bail!("frame length {len} exceeds {MAX_FRAME_BYTES}");
+        }
+        if self.buf.len() < 4 + len {
+            return Ok(None);
+        }
+        let frame = Frame::decode(&self.buf[4..4 + len])?;
+        self.buf.drain(..4 + len);
+        Ok(Some(frame))
+    }
+}
+
+/// Write one frame to a stream (single `write_all`, so frames from one
+/// thread are never interleaved).
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> io::Result<()> {
+    w.write_all(&frame.encode())
+}
+
+/// Blocking read of a single frame with `reader` as carry-over buffer —
+/// used for the handshake, where exactly one frame is expected next.
+pub fn read_frame_blocking(
+    r: &mut impl Read,
+    reader: &mut FrameReader,
+) -> Result<Frame> {
+    let mut chunk = [0u8; 4096];
+    loop {
+        if let Some(f) = reader.next()? {
+            return Ok(f);
+        }
+        let n = r.read(&mut chunk)?;
+        if n == 0 {
+            bail!("connection closed mid-handshake");
+        }
+        reader.extend(&chunk[..n]);
+    }
+}
+
+/// The version both sides will speak, or `None` when no common version
+/// exists. Policy: speak the older of the two; every version from 1 up
+/// to [`PROTO_VERSION`] must stay decodable by this build.
+pub fn negotiate(ours: u64, theirs: u64) -> Option<u64> {
+    let v = ours.min(theirs);
+    if v >= 1 {
+        Some(v)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PoolConfig;
+
+    fn roundtrip(f: Frame) {
+        let bytes = f.encode();
+        let mut r = FrameReader::new();
+        r.extend(&bytes);
+        let back = r.next().unwrap().expect("complete frame");
+        assert_eq!(back, f);
+        assert!(r.next().unwrap().is_none(), "no trailing frame");
+    }
+
+    #[test]
+    fn frames_roundtrip() {
+        roundtrip(Frame::Hello { version: 1, pid: 4242, tier: 2 });
+        roundtrip(Frame::HelloAck {
+            version: 1,
+            pool: PoolWire::from_pool(&PoolConfig::default()),
+        });
+        roundtrip(Frame::Ready);
+        roundtrip(Frame::Job {
+            job: 7,
+            prompt: "what is 2 plus 2?".into(),
+            max_tokens: 16,
+        });
+        roundtrip(Frame::TokenChunk { job: 7, tokens: vec![1, -2, 4095] });
+        roundtrip(Frame::Done { job: 7, prompt_tokens: 5, tokens: vec![9] });
+        roundtrip(Frame::JobFailed { job: 7, error: "kv pool exceeded".into() });
+        roundtrip(Frame::Cancel { job: 9 });
+        roundtrip(Frame::Cancelled { job: 9 });
+        roundtrip(Frame::Returned { job: 10 });
+        roundtrip(Frame::Heartbeat(HeartbeatWire {
+            inflight: 3,
+            prefills: 11,
+            prefill_batched: 2,
+            decode_steps: 100,
+            batched_steps: 40,
+            batch_counts: [60, 30, 10],
+            prefix_hit_tokens: 640,
+            prefix_miss_tokens: 1280,
+            prefix_evicted_blocks: 4,
+            prefix_cache_blocks: 17,
+        }));
+        roundtrip(Frame::Ping { nonce: 123_456_789 });
+        roundtrip(Frame::Pong { nonce: 123_456_789 });
+        roundtrip(Frame::Terminate);
+        roundtrip(Frame::Gone);
+        roundtrip(Frame::Fatal { error: "engine died".into() });
+    }
+
+    #[test]
+    fn job_prompts_survive_hostile_text() {
+        // Prompts are user text: control characters, quotes, backslashes
+        // and non-BMP code points must cross the wire intact (this is
+        // what the util/json escape fixes guarantee).
+        let prompt = "line1\nline2\t\"quoted\" \\slash\u{1}\u{8}\u{c}\u{1f} 😀日本語";
+        let f = Frame::Job { job: 1, prompt: prompt.into(), max_tokens: 4 };
+        let mut r = FrameReader::new();
+        r.extend(&f.encode());
+        match r.next().unwrap().unwrap() {
+            Frame::Job { prompt: p, .. } => assert_eq!(p, prompt),
+            other => panic!("wrong frame {other:?}"),
+        }
+    }
+
+    #[test]
+    fn reader_handles_split_and_coalesced_frames() {
+        let a = Frame::Ping { nonce: 1 }.encode();
+        let b = Frame::Job { job: 2, prompt: "p q r".into(), max_tokens: 8 }.encode();
+        let c = Frame::Gone.encode();
+        let mut stream: Vec<u8> = Vec::new();
+        stream.extend(&a);
+        stream.extend(&b);
+        stream.extend(&c);
+        // Feed one byte at a time: every frame must still pop exactly once.
+        let mut r = FrameReader::new();
+        let mut got = Vec::new();
+        for byte in stream {
+            r.extend(&[byte]);
+            while let Some(f) = r.next().unwrap() {
+                got.push(f);
+            }
+        }
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[0], Frame::Ping { nonce: 1 });
+        assert_eq!(got[2], Frame::Gone);
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected() {
+        let mut r = FrameReader::new();
+        r.extend(&(u32::MAX).to_be_bytes());
+        r.extend(b"garbage");
+        assert!(r.next().is_err());
+    }
+
+    #[test]
+    fn garbage_payload_is_an_error_not_a_panic() {
+        let mut r = FrameReader::new();
+        let body = b"{\"t\":\"nope\"}";
+        r.extend(&(body.len() as u32).to_be_bytes());
+        r.extend(body);
+        assert!(r.next().is_err());
+    }
+
+    #[test]
+    fn negotiation_prefers_older_side() {
+        assert_eq!(negotiate(PROTO_VERSION, PROTO_VERSION), Some(PROTO_VERSION));
+        assert_eq!(negotiate(3, 1), Some(1));
+        assert_eq!(negotiate(1, 9), Some(1));
+        assert_eq!(negotiate(1, 0), None);
+    }
+
+    #[test]
+    fn pool_wire_carries_prefix_cache_knobs() {
+        let p = PoolConfig {
+            max_inflight: 11,
+            prefix_cache: PrefixCacheConfig {
+                enabled: false,
+                min_block_run: 3,
+                ..PrefixCacheConfig::default()
+            },
+            ..PoolConfig::default()
+        };
+        let w = PoolWire::from_pool(&p);
+        let j = w.to_json();
+        let back = PoolWire::from_json(&Json::parse(&j.dump()).unwrap()).unwrap();
+        assert_eq!(back, w);
+        assert!(!back.prefix_cache.enabled);
+        assert_eq!(back.max_inflight, 11);
+    }
+}

@@ -1,0 +1,1026 @@
+//! ProcessSubstrate — replica workers as supervised OS processes.
+//!
+//! The third [`Substrate`] implementation: each replica is a separate
+//! `ps-replica` worker process (a subcommand of the gateway binary)
+//! connected to the control plane over a length-prefixed JSON RPC
+//! channel on a Unix socket ([`crate::substrate::proto`]). Where the
+//! thread substrate shares memory with its replicas, this one must
+//! serialize jobs, token streams, cancellation, and health across a
+//! process boundary — which is exactly what buys real isolation: a
+//! worker that is SIGKILLed mid-decode (something a thread fundamentally
+//! cannot model) loses its address space, and the supervisor still
+//! recovers every in-flight job loss-free from its own dispatch ledger.
+//!
+//! Per replica the supervisor runs one *pump* thread that owns the
+//! worker `Child` and its socket end:
+//!
+//! * lifecycle — process spawned = `Scheduled`, `Hello` received =
+//!   `Loading` (engine building), `Ready` frame = `Ready`; the measured
+//!   spawn→Ready time feeds Alg. 2's cold-start estimate exactly like
+//!   the thread substrate's compile times.
+//! * data plane — pulls [`TierJob`]s from the shared tier queue, ships
+//!   them as `Job` frames while the worker has slot headroom, accumulates
+//!   streamed `TokenChunk`s, and answers the caller on `Done`. The reply
+//!   rendezvous and cancel token never cross the wire; they stay in the
+//!   pump's in-flight ledger, so worker death = requeue the ledger.
+//! * health — every worker frame refreshes the replica cell's heartbeat;
+//!   the control plane applies the same `pool.health_deadline_s` stall
+//!   rule to wire heartbeats that it applies to thread heartbeats.
+//!   `Heartbeat` payloads also carry the worker's cumulative scheduler
+//!   counters and prefix-cache stats, which the pump differences into
+//!   the gateway metrics and publishes into the cell (the scaler's
+//!   cache-adjusted demand signal).
+//! * supervision — `cell.kill` SIGKILLs the worker (fault injection =
+//!   real `kill -9`); `cell.stop` sends `Terminate` for a graceful drain
+//!   (unstarted jobs come back as `Returned` frames and requeue); zombies
+//!   are reaped (`kill` + `wait`) on every pump exit path.
+
+use std::collections::BTreeMap;
+use std::io::{ErrorKind, Read};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::PoolConfig;
+use crate::gateway::pool::{
+    decode_state, requeue_to, PoolShared, ReplicaCell, TierJob, S_FAILED, S_GONE,
+    S_LOADING, S_READY, S_SCHEDULED, S_TERMINATING,
+};
+use crate::gateway::{GatewayMetrics, LiveResponse};
+use crate::models::{BackendKind, ModelSpec, Tier};
+use crate::registry::{Registry, ServiceId};
+use crate::substrate::proto::{
+    negotiate, write_frame, Frame, FrameReader, HeartbeatWire, PoolWire,
+    MAX_FRAME_BYTES, PROTO_VERSION,
+};
+use crate::substrate::{ReplicaId, ReplicaState, Substrate, SubstrateEvent};
+use crate::util::stats::Ema;
+use crate::util::threadpool::Channel;
+
+/// How long a spawned worker gets to connect and say Hello.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
+/// How long a graceful drain may take before the worker is killed.
+const DRAIN_TIMEOUT: Duration = Duration::from_secs(30);
+/// Pump read timeout — the loop's pacing granularity.
+const READ_TIMEOUT: Duration = Duration::from_millis(2);
+/// RPC latency probe period.
+const PING_PERIOD: Duration = Duration::from_millis(250);
+
+/// Unique socket names across every substrate in this process.
+static SOCK_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// How to launch one worker process.
+#[derive(Debug, Clone)]
+pub struct WorkerSpec {
+    /// Worker binary (normally the gateway binary itself).
+    pub bin: String,
+    /// Leading arguments, e.g. `["ps-replica", "--engine", "sim"]`.
+    /// `--socket/--tier/--replica` are appended per replica.
+    pub args: Vec<String>,
+    /// Directory for per-worker stdout/stderr logs (`None` = inherit).
+    pub log_dir: Option<String>,
+}
+
+impl WorkerSpec {
+    /// The spec the gateway derives from `pool.*`: `pool.worker_bin` (or
+    /// the current executable) run in `ps-replica` mode with the given
+    /// engine arguments.
+    pub fn from_pool(pool: &PoolConfig, engine_args: &[&str]) -> Result<WorkerSpec, String> {
+        let bin = match &pool.worker_bin {
+            Some(b) => b.clone(),
+            None => std::env::current_exe()
+                .map_err(|e| format!("cannot resolve worker binary: {e}"))?
+                .to_string_lossy()
+                .into_owned(),
+        };
+        let mut args = vec!["ps-replica".to_string()];
+        args.extend(engine_args.iter().map(|s| s.to_string()));
+        Ok(WorkerSpec { bin, args, log_dir: pool.worker_log_dir.clone() })
+    }
+}
+
+struct ProcReplica {
+    tier: usize,
+    service: ServiceId,
+    cell: Arc<ReplicaCell>,
+    created_s: f64,
+    /// Last state surfaced through `poll` (transition edge detection).
+    reported: ReplicaState,
+}
+
+/// The process-substrate supervisor. Owned by the router thread, driven
+/// through the same [`Substrate`] trait as the simulator's cluster and
+/// the thread pool — `Scaler`, `RecoveryManager` and `select_on` run
+/// unchanged on top of it.
+pub struct ProcessSubstrate {
+    shared: Arc<PoolShared>,
+    pool: PoolConfig,
+    metrics: Arc<GatewayMetrics>,
+    spec: WorkerSpec,
+    svc_tier: Vec<usize>,
+    tier_service: [ServiceId; 3],
+    meta: BTreeMap<ReplicaId, ProcReplica>,
+    pumps: BTreeMap<ReplicaId, JoinHandle<()>>,
+    next_id: u64,
+    next_index: [usize; 3],
+    /// Measured spawn→Ready seconds per tier (Alg. 2's cold-start
+    /// estimate for scaled-to-zero tiers).
+    cold_start_ema: [Ema; 3],
+}
+
+impl ProcessSubstrate {
+    pub(crate) fn new(
+        shared: Arc<PoolShared>,
+        pool: PoolConfig,
+        metrics: Arc<GatewayMetrics>,
+        spec: WorkerSpec,
+        registry: &Registry,
+    ) -> ProcessSubstrate {
+        let svc_tier: Vec<usize> =
+            registry.services.iter().map(|s| s.spec.tier.index()).collect();
+        let tier_service = std::array::from_fn(|ti| {
+            registry
+                .services
+                .iter()
+                .find(|s| s.spec.tier.index() == ti)
+                .map(|s| s.id)
+                .unwrap_or(ServiceId(0))
+        });
+        ProcessSubstrate {
+            shared,
+            pool,
+            metrics,
+            spec,
+            svc_tier,
+            tier_service,
+            meta: BTreeMap::new(),
+            pumps: BTreeMap::new(),
+            next_id: 0,
+            next_index: [0; 3],
+            cold_start_ema: std::array::from_fn(|_| Ema::new(0.3)),
+        }
+    }
+
+    /// A self-contained supervisor (own queues and metrics) — what the
+    /// substrate conformance suite drives directly, without a gateway.
+    pub fn standalone(
+        pool: PoolConfig,
+        registry: &Registry,
+        spec: WorkerSpec,
+    ) -> ProcessSubstrate {
+        let shared = Arc::new(PoolShared::new(Instant::now(), pool.queue_capacity));
+        let metrics = Arc::new(GatewayMetrics::default());
+        ProcessSubstrate::new(shared, pool, metrics, spec, registry)
+    }
+
+    /// The clock epoch replica timestamps are measured against.
+    pub fn epoch(&self) -> Instant {
+        self.shared.epoch
+    }
+
+    pub(crate) fn shared(&self) -> Arc<PoolShared> {
+        Arc::clone(&self.shared)
+    }
+
+    /// The canonical registry cell a tier's replicas report under.
+    pub fn tier_service(&self, tier: usize) -> ServiceId {
+        self.tier_service[tier.min(2)]
+    }
+
+    fn tier_of(&self, service: ServiceId) -> usize {
+        self.svc_tier.get(service.0).copied().unwrap_or(0)
+    }
+
+    /// Block until every provisioned worker reports Ready; a worker that
+    /// dies or errors during bring-up surfaces as the error.
+    pub fn wait_warm(&mut self) -> Result<(), String> {
+        loop {
+            let mut all_ready = true;
+            for (id, m) in &self.meta {
+                match m.cell.state.load(Ordering::Acquire) {
+                    S_READY => {}
+                    S_FAILED => {
+                        return Err(m
+                            .cell
+                            .error
+                            .lock()
+                            .unwrap()
+                            .take()
+                            .unwrap_or_else(|| "worker died during warm-up".into()));
+                    }
+                    _ => {
+                        if self.pumps.get(id).map(|h| h.is_finished()).unwrap_or(true) {
+                            return Err("worker pump exited during warm-up".into());
+                        }
+                        all_ready = false;
+                    }
+                }
+            }
+            if all_ready {
+                return Ok(());
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    /// Close the tier queues, drain every worker, and join the pumps
+    /// (each pump kills and reaps its child on the way out). Idempotent.
+    pub fn shutdown(&mut self) {
+        for q in &self.shared.queues {
+            q.close();
+        }
+        for (_, h) in std::mem::take(&mut self.pumps) {
+            let _ = h.join();
+        }
+        self.meta.clear();
+        for c in &self.shared.cells {
+            c.lock().unwrap().clear();
+        }
+    }
+
+    fn remove_replica(&mut self, id: ReplicaId, tier: usize) {
+        self.meta.remove(&id);
+        self.shared.cells[tier].lock().unwrap().retain(|(rid, _)| *rid != id);
+        if let Some(h) = self.pumps.remove(&id) {
+            if h.is_finished() {
+                let _ = h.join();
+            }
+            // A live pump has its kill flag set (stall path): it kills
+            // and reaps its worker, then exits on its own.
+        }
+    }
+}
+
+impl Drop for ProcessSubstrate {
+    fn drop(&mut self) {
+        // Never leak worker processes, even if the owner forgot to shut
+        // down (a panicking test, say).
+        self.shutdown();
+    }
+}
+
+impl Substrate for ProcessSubstrate {
+    fn provision(
+        &mut self,
+        service: ServiceId,
+        _model_idx: usize,
+        spec: &ModelSpec,
+        _backend: BackendKind,
+        now_s: f64,
+    ) -> Option<ReplicaId> {
+        let ti = spec.tier.index();
+        if self.shared.live_count(ti) >= self.pool.replicas[ti] {
+            return None;
+        }
+        let tier = Tier::ALL[ti];
+        let index = self.next_index[ti];
+        let seq = SOCK_SEQ.fetch_add(1, Ordering::Relaxed);
+        let sock = std::env::temp_dir().join(format!(
+            "ps-and-spin-{}-{seq}.sock",
+            std::process::id(),
+        ));
+        let _ = std::fs::remove_file(&sock);
+        // Bind before spawning so the worker's connect never races the
+        // listener.
+        let listener = match UnixListener::bind(&sock) {
+            Ok(l) => l,
+            Err(e) => {
+                crate::error!("process substrate: bind {}: {e}", sock.display());
+                return None;
+            }
+        };
+        let cell = Arc::new(ReplicaCell::new());
+        // The pump thread starts first and blocks on this channel for
+        // the worker `Child`: if the process spawn fails the channel is
+        // closed instead, and if the *thread* spawn fails no process has
+        // been started yet — neither order can leak an unreaped worker.
+        let child_chan: Channel<Child> = Channel::bounded(1);
+        let handle = {
+            let ctx = PumpStart {
+                listener,
+                socket_path: sock.clone(),
+                cell: Arc::clone(&cell),
+                queue: self.shared.queues[ti].clone(),
+                metrics: Arc::clone(&self.metrics),
+                epoch: self.shared.epoch,
+                pool: self.pool.clone(),
+                tier: ti,
+            };
+            let rx = child_chan.clone();
+            match std::thread::Builder::new()
+                .name(format!("ps-pump-{}-{index}", tier.name()))
+                .spawn(move || match rx.recv() {
+                    Some(child) => pump_loop(ctx.with_child(child)),
+                    None => {
+                        // Worker spawn failed; nothing to supervise.
+                        *ctx.cell.error.lock().unwrap() =
+                            Some("worker spawn failed".into());
+                        ctx.cell.state.store(S_FAILED, Ordering::Release);
+                        let _ = std::fs::remove_file(&ctx.socket_path);
+                    }
+                }) {
+                Ok(h) => h,
+                Err(e) => {
+                    crate::error!("process substrate: pump thread: {e}");
+                    let _ = std::fs::remove_file(&sock);
+                    return None;
+                }
+            }
+        };
+        let mut cmd = Command::new(&self.spec.bin);
+        cmd.args(&self.spec.args)
+            .arg("--socket")
+            .arg(&sock)
+            .arg("--tier")
+            .arg(tier.name())
+            .arg("--replica")
+            .arg(index.to_string())
+            .stdin(Stdio::null());
+        match worker_log(&self.spec.log_dir, tier, index, seq) {
+            Some(f) => {
+                if let Ok(err) = f.try_clone() {
+                    cmd.stdout(f).stderr(err);
+                }
+            }
+            None => {
+                cmd.stdout(Stdio::null());
+                // stderr inherits: worker diagnostics reach the gateway log.
+            }
+        }
+        match cmd.spawn() {
+            Ok(child) => {
+                let _ = child_chan.send(child);
+            }
+            Err(e) => {
+                crate::error!("process substrate: spawn {}: {e}", self.spec.bin);
+                child_chan.close();
+                let _ = handle.join();
+                return None;
+            }
+        }
+        let id = ReplicaId(self.next_id);
+        self.next_id += 1;
+        self.next_index[ti] += 1;
+        self.shared.cells[ti].lock().unwrap().push((id, Arc::clone(&cell)));
+        self.meta.insert(id, ProcReplica {
+            tier: ti,
+            service,
+            cell,
+            created_s: now_s,
+            reported: ReplicaState::Scheduled,
+        });
+        self.pumps.insert(id, handle);
+        Some(id)
+    }
+
+    fn terminate(&mut self, replica: ReplicaId, _now_s: f64) {
+        if let Some(m) = self.meta.get(&replica) {
+            m.cell.stop.store(true, Ordering::Relaxed);
+            // Control-side state so Ready counts drop immediately; the
+            // pump overwrites with Gone once the worker drains.
+            let _ = m.cell.state.compare_exchange(
+                S_READY,
+                S_TERMINATING,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            );
+        }
+    }
+
+    /// Failure is asynchronous: the pump SIGKILLs the worker at its next
+    /// loop turn and the `ReplicaFailed` surfaces through [`Self::poll`]
+    /// when the connection drops — a real `kill -9`, not a simulation.
+    fn fail(&mut self, replica: ReplicaId, _now_s: f64) -> Option<SubstrateEvent> {
+        if let Some(m) = self.meta.get(&replica) {
+            m.cell.kill.store(true, Ordering::Relaxed);
+        }
+        None
+    }
+
+    fn poll(&mut self, now_s: f64) -> Vec<SubstrateEvent> {
+        let mut out = Vec::new();
+        let ids: Vec<ReplicaId> = self.meta.keys().copied().collect();
+        for id in ids {
+            let (tier, service, created_s, reported, cell) = {
+                let m = &self.meta[&id];
+                (m.tier, m.service, m.created_s, m.reported, Arc::clone(&m.cell))
+            };
+            let raw = cell.state.load(Ordering::Acquire);
+            let pump_dead = self
+                .pumps
+                .get(&id)
+                .map(|h| h.is_finished())
+                .unwrap_or(true);
+            // Wire heartbeats against the same health deadline the
+            // thread substrate applies to in-process heartbeats.
+            let stalled = raw == S_READY && {
+                let hb = cell.heartbeat_us.load(Ordering::Relaxed) as f64 / 1e6;
+                now_s - hb > self.pool.health_deadline_s.max(0.001)
+            };
+            let failed = raw == S_FAILED
+                || stalled
+                || (pump_dead && raw != S_GONE && raw != S_FAILED);
+            if failed {
+                if stalled {
+                    // The pump kills the silent worker and requeues its
+                    // in-flight ledger the moment it sees the flag.
+                    cell.kill.store(true, Ordering::Relaxed);
+                }
+                out.push(SubstrateEvent::ReplicaFailed {
+                    replica: id,
+                    service,
+                    at_s: now_s,
+                });
+                self.remove_replica(id, tier);
+                continue;
+            }
+            if raw == S_GONE {
+                out.push(SubstrateEvent::ReplicaGone {
+                    replica: id,
+                    service,
+                    at_s: now_s,
+                });
+                self.remove_replica(id, tier);
+                continue;
+            }
+            if raw == S_READY && reported != ReplicaState::Ready {
+                let ready_s = cell.ready_us.load(Ordering::Relaxed) as f64 / 1e6;
+                let cold = (ready_s - created_s).max(0.0);
+                self.cold_start_ema[tier].observe(cold);
+                out.push(SubstrateEvent::ReplicaReady {
+                    replica: id,
+                    service,
+                    at_s: ready_s.max(created_s),
+                    cold_start_s: cold,
+                });
+                if let Some(m) = self.meta.get_mut(&id) {
+                    m.reported = ReplicaState::Ready;
+                }
+            }
+        }
+        out
+    }
+
+    fn replica_state(&self, replica: ReplicaId) -> Option<ReplicaState> {
+        self.meta
+            .get(&replica)
+            .and_then(|m| decode_state(m.cell.state.load(Ordering::Acquire)))
+    }
+
+    fn ready_replicas(&self, service: ServiceId) -> Vec<ReplicaId> {
+        let ti = self.tier_of(service);
+        self.meta
+            .iter()
+            .filter(|(_, m)| {
+                m.tier == ti
+                    && m.cell.state.load(Ordering::Acquire) == S_READY
+                    && !m.cell.stop.load(Ordering::Relaxed)
+            })
+            .map(|(id, _)| *id)
+            .collect()
+    }
+
+    fn pending_replicas(&self, service: ServiceId) -> usize {
+        self.shared.pending_count(self.tier_of(service))
+    }
+
+    fn estimate_cold_start_s(&self, spec: &ModelSpec, _backend: BackendKind) -> f64 {
+        // Prior before the first measured spawn: process start + engine
+        // build is an order slower than an in-process warm-up.
+        self.cold_start_ema[spec.tier.index()].get_or(1.0)
+    }
+}
+
+/// Per-worker log file. The name carries the supervisor pid and the
+/// process-wide socket sequence: per-tier indices restart at 0 for every
+/// substrate instance (parallel tests, say), and a bare
+/// `ps-worker-small-0.log` would be truncated out from under a worker
+/// another instance is still supervising.
+fn worker_log(
+    dir: &Option<String>,
+    tier: Tier,
+    index: usize,
+    seq: u64,
+) -> Option<std::fs::File> {
+    let dir = dir.as_ref()?;
+    std::fs::create_dir_all(dir).ok()?;
+    std::fs::File::create(format!(
+        "{dir}/ps-worker-{}-{index}-{}-{seq}.log",
+        tier.name(),
+        std::process::id(),
+    ))
+    .ok()
+}
+
+// ---------------------------------------------------------------------------
+// The per-replica pump: supervisor end of the RPC data plane
+// ---------------------------------------------------------------------------
+
+/// Everything the pump thread needs before the worker `Child` exists
+/// (the child arrives over a channel so a failed spawn can never leak).
+struct PumpStart {
+    listener: UnixListener,
+    socket_path: PathBuf,
+    cell: Arc<ReplicaCell>,
+    queue: Channel<TierJob>,
+    metrics: Arc<GatewayMetrics>,
+    epoch: Instant,
+    pool: PoolConfig,
+    tier: usize,
+}
+
+impl PumpStart {
+    fn with_child(self, child: Child) -> PumpCtx {
+        PumpCtx {
+            listener: self.listener,
+            socket_path: self.socket_path,
+            child,
+            cell: self.cell,
+            queue: self.queue,
+            metrics: self.metrics,
+            epoch: self.epoch,
+            pool: self.pool,
+            tier: self.tier,
+        }
+    }
+}
+
+struct PumpCtx {
+    listener: UnixListener,
+    socket_path: PathBuf,
+    child: Child,
+    cell: Arc<ReplicaCell>,
+    queue: Channel<TierJob>,
+    metrics: Arc<GatewayMetrics>,
+    epoch: Instant,
+    pool: PoolConfig,
+    tier: usize,
+}
+
+/// One dispatched job the worker still owes us. The reply rendezvous
+/// and cancel token live here — worker death requeues `job` verbatim.
+struct InflightJob {
+    job: TierJob,
+    tokens: Vec<i32>,
+    chunk_seen: bool,
+    cancel_sent: bool,
+}
+
+fn pump_loop(mut ctx: PumpCtx) {
+    if let Err(e) = pump_session(&mut ctx) {
+        // Only overwrite non-terminal states: a session that ended in
+        // Gone must stay Gone.
+        let raw = ctx.cell.state.load(Ordering::Acquire);
+        if raw != S_GONE {
+            *ctx.cell.error.lock().unwrap() = Some(e);
+            ctx.cell.inflight.store(0, Ordering::Relaxed);
+            ctx.cell.state.store(S_FAILED, Ordering::Release);
+        }
+    }
+    // Reap unconditionally: kill is a no-op on an exited worker, and
+    // wait() collects the zombie either way.
+    let _ = ctx.child.kill();
+    let _ = ctx.child.wait();
+    let _ = std::fs::remove_file(&ctx.socket_path);
+}
+
+/// Run one worker session end to end. `Ok` means a terminal state was
+/// already published (Gone or Failed); `Err` is an abnormal end whose
+/// message lands in the cell.
+fn pump_session(ctx: &mut PumpCtx) -> Result<(), String> {
+    let mut stream = accept_worker(ctx)?;
+    let mut reader = FrameReader::new();
+    // Handshake: Hello → negotiate → HelloAck with the pool knobs.
+    let hello = read_deadline(&mut stream, &mut reader, CONNECT_TIMEOUT, ctx)?;
+    let version = match hello {
+        Frame::Hello { version, tier, .. } => {
+            if tier != ctx.tier {
+                return Err(format!(
+                    "worker announced tier {tier}, expected {}",
+                    ctx.tier
+                ));
+            }
+            negotiate(PROTO_VERSION, version).ok_or_else(|| {
+                format!("no common protocol version (worker spoke {version})")
+            })?
+        }
+        f => return Err(format!("expected Hello, got {f:?}")),
+    };
+    send(
+        &mut stream,
+        &Frame::HelloAck { version, pool: PoolWire::from_pool(&ctx.pool) },
+        ctx,
+    )?;
+    ctx.cell
+        .heartbeat_us
+        .store(ctx.epoch.elapsed().as_micros() as u64, Ordering::Relaxed);
+    ctx.cell.state.store(S_LOADING, Ordering::Release);
+
+    let mut inflight: BTreeMap<u64, InflightJob> = BTreeMap::new();
+    let mut next_job: u64 = 0;
+    let mut last_hb = HeartbeatWire::default();
+    let mut killed = false;
+    let mut draining = false;
+    let mut drain_deadline = Instant::now() + DRAIN_TIMEOUT;
+    let mut last_ping = Instant::now();
+    let mut buf = [0u8; 16384];
+    loop {
+        // 1. Drain whatever the worker sent.
+        match stream.read(&mut buf) {
+            Ok(0) => {
+                return end_dead(ctx, inflight, "worker connection closed");
+            }
+            Ok(n) => {
+                reader.extend(&buf[..n]);
+                let now_us = ctx.epoch.elapsed().as_micros() as u64;
+                ctx.cell.heartbeat_us.store(now_us, Ordering::Relaxed);
+                loop {
+                    let frame = match reader.next() {
+                        Ok(Some(f)) => f,
+                        Ok(None) => break,
+                        Err(e) => {
+                            return end_dead(
+                                ctx,
+                                inflight,
+                                &format!("wire desync: {e:#}"),
+                            );
+                        }
+                    };
+                    ctx.metrics.rpc_frames_recv.fetch_add(1, Ordering::Relaxed);
+                    match frame {
+                        Frame::Ready => {
+                            let now_us = ctx.epoch.elapsed().as_micros() as u64;
+                            ctx.cell.ready_us.store(now_us, Ordering::Relaxed);
+                            // Only the Loading→Ready edge; a terminate
+                            // that already moved the state on keeps it.
+                            let _ = ctx.cell.state.compare_exchange(
+                                S_LOADING,
+                                S_READY,
+                                Ordering::AcqRel,
+                                Ordering::Relaxed,
+                            );
+                            let _ = ctx.cell.state.compare_exchange(
+                                S_SCHEDULED,
+                                S_READY,
+                                Ordering::AcqRel,
+                                Ordering::Relaxed,
+                            );
+                        }
+                        Frame::Heartbeat(hb) => {
+                            apply_heartbeat(&hb, &last_hb, ctx);
+                            last_hb = hb;
+                        }
+                        Frame::TokenChunk { job, tokens } => {
+                            if let Some(e) = inflight.get_mut(&job) {
+                                if !e.chunk_seen {
+                                    e.chunk_seen = true;
+                                    let now = ctx.epoch.elapsed().as_secs_f64();
+                                    e.job.ttft_s = (now - e.job.enqueue_s).max(0.0);
+                                }
+                                e.tokens.extend(tokens);
+                            }
+                        }
+                        Frame::Done { job, prompt_tokens, tokens } => {
+                            if let Some(mut e) = inflight.remove(&job) {
+                                e.tokens.extend(tokens);
+                                finish_entry(e, prompt_tokens, ctx);
+                            }
+                        }
+                        Frame::JobFailed { job, error } => {
+                            if let Some(e) = inflight.remove(&job) {
+                                ctx.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                                e.job.reply.put(Err(error));
+                            }
+                        }
+                        Frame::Cancelled { job } => {
+                            if inflight.remove(&job).is_some() {
+                                ctx.metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        Frame::Returned { job } => {
+                            if let Some(e) = inflight.remove(&job) {
+                                requeue_to(
+                                    &ctx.queue,
+                                    &ctx.metrics,
+                                    e.job,
+                                    "replica draining",
+                                );
+                            }
+                        }
+                        Frame::Pong { nonce } => {
+                            let now_us = ctx.epoch.elapsed().as_micros() as u64;
+                            ctx.metrics
+                                .rpc_rtt_us_total
+                                .fetch_add(now_us.saturating_sub(nonce), Ordering::Relaxed);
+                            ctx.metrics.rpc_pings.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Frame::Gone => {
+                            // Anything the worker still owed us (it
+                            // should have Returned or Done everything)
+                            // requeues as a safety net.
+                            for (_, e) in std::mem::take(&mut inflight) {
+                                requeue_to(
+                                    &ctx.queue,
+                                    &ctx.metrics,
+                                    e.job,
+                                    "replica exited",
+                                );
+                            }
+                            ctx.cell.inflight.store(0, Ordering::Relaxed);
+                            ctx.cell.state.store(S_GONE, Ordering::Release);
+                            return Ok(());
+                        }
+                        Frame::Fatal { error } => {
+                            for (_, e) in std::mem::take(&mut inflight) {
+                                requeue_to(
+                                    &ctx.queue,
+                                    &ctx.metrics,
+                                    e.job,
+                                    "replica failed",
+                                );
+                            }
+                            *ctx.cell.error.lock().unwrap() = Some(error);
+                            ctx.cell.inflight.store(0, Ordering::Relaxed);
+                            ctx.cell.state.store(S_FAILED, Ordering::Release);
+                            return Ok(());
+                        }
+                        f => {
+                            return end_dead(
+                                ctx,
+                                inflight,
+                                &format!("unexpected worker frame {f:?}"),
+                            );
+                        }
+                    }
+                }
+            }
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock
+                    || e.kind() == ErrorKind::TimedOut => {}
+            Err(e) => {
+                return end_dead(ctx, inflight, &format!("socket read: {e}"));
+            }
+        }
+
+        // 2. Fault injection / stall verdicts: a true kill -9.
+        if ctx.cell.kill.load(Ordering::Relaxed) && !killed {
+            killed = true;
+            let _ = ctx.child.kill();
+            // The EOF read above surfaces the death and requeues.
+        }
+
+        // 3. Graceful drain: scale-down terminate, or pool shutdown once
+        // the closed queue is drained dry.
+        let stop = ctx.cell.stop.load(Ordering::Relaxed);
+        let shutdown_done =
+            ctx.queue.is_closed() && ctx.queue.is_empty() && inflight.is_empty();
+        if (stop || shutdown_done) && !draining {
+            draining = true;
+            drain_deadline = Instant::now() + DRAIN_TIMEOUT;
+            if let Err(e) = send(&mut stream, &Frame::Terminate, ctx) {
+                return end_dead(ctx, inflight, &e);
+            }
+        }
+        if draining && Instant::now() > drain_deadline {
+            let _ = ctx.child.kill();
+            return end_dead(ctx, inflight, "graceful drain timed out");
+        }
+
+        // 4. Dispatch while the worker has slot headroom. The ledger cap
+        // mirrors the worker's max_inflight so backpressure stays in the
+        // tier queue where the scaler can see it.
+        if !draining && !killed && ctx.cell.state.load(Ordering::Acquire) == S_READY {
+            while inflight.len() < ctx.pool.max_inflight.max(1) {
+                let Some(mut job) = ctx.queue.try_recv() else { break };
+                if job.cancel.is_cancelled() {
+                    ctx.metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+                let now = ctx.epoch.elapsed().as_secs_f64();
+                job.queue_wait_s = (now - job.enqueue_s).max(0.0);
+                ctx.metrics
+                    .add_queue_wait_s((job.queue_wait_s - job.counted_wait_s).max(0.0));
+                job.counted_wait_s = job.queue_wait_s;
+                let id = next_job;
+                next_job += 1;
+                let frame = Frame::Job {
+                    job: id,
+                    prompt: job.prompt.clone(),
+                    max_tokens: job.max_tokens,
+                };
+                let bytes = frame.encode();
+                if bytes.len() > MAX_FRAME_BYTES {
+                    // A frame the worker's reader would reject as a
+                    // desync. Dispatching it would kill the connection
+                    // and requeue the poison job forever — fail the one
+                    // caller instead.
+                    ctx.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    job.reply.put(Err(format!(
+                        "prompt too large for the RPC data plane \
+                         ({} bytes encoded)",
+                        bytes.len()
+                    )));
+                    continue;
+                }
+                if let Err(e) = send_bytes(&mut stream, &bytes, ctx) {
+                    // A dead socket mid-dispatch: this job never reached
+                    // the worker — back to the queue with the rest.
+                    requeue_to(&ctx.queue, &ctx.metrics, job, "replica failed");
+                    return end_dead(ctx, inflight, &e);
+                }
+                inflight.insert(id, InflightJob {
+                    job,
+                    tokens: Vec::new(),
+                    chunk_seen: false,
+                    cancel_sent: false,
+                });
+            }
+        }
+
+        // 5. Cancellation propagation: a caller that timed out fires its
+        // token locally; the worker evicts the sequence on the Cancel
+        // frame and answers Cancelled.
+        let mut cancels: Vec<u64> = Vec::new();
+        for (id, e) in inflight.iter_mut() {
+            if !e.cancel_sent && e.job.cancel.is_cancelled() {
+                e.cancel_sent = true;
+                cancels.push(*id);
+            }
+        }
+        for id in cancels {
+            if let Err(e) = send(&mut stream, &Frame::Cancel { job: id }, ctx) {
+                return end_dead(ctx, inflight, &e);
+            }
+        }
+
+        // 6. RPC latency probe.
+        if last_ping.elapsed() >= PING_PERIOD {
+            last_ping = Instant::now();
+            let nonce = ctx.epoch.elapsed().as_micros() as u64;
+            if let Err(e) = send(&mut stream, &Frame::Ping { nonce }, ctx) {
+                return end_dead(ctx, inflight, &e);
+            }
+        }
+    }
+}
+
+fn accept_worker(ctx: &mut PumpCtx) -> Result<UnixStream, String> {
+    ctx.listener
+        .set_nonblocking(true)
+        .map_err(|e| format!("listener nonblocking: {e}"))?;
+    let deadline = Instant::now() + CONNECT_TIMEOUT;
+    loop {
+        match ctx.listener.accept() {
+            Ok((stream, _)) => {
+                stream
+                    .set_nonblocking(false)
+                    .map_err(|e| format!("stream blocking: {e}"))?;
+                stream
+                    .set_read_timeout(Some(READ_TIMEOUT))
+                    .map_err(|e| format!("read timeout: {e}"))?;
+                return Ok(stream);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                if let Ok(Some(status)) = ctx.child.try_wait() {
+                    return Err(format!("worker exited before connecting ({status})"));
+                }
+                if Instant::now() > deadline {
+                    return Err("worker never connected".into());
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(format!("accept: {e}")),
+        }
+    }
+}
+
+/// Blocking read of one frame with an overall deadline (handshake).
+fn read_deadline(
+    stream: &mut UnixStream,
+    reader: &mut FrameReader,
+    timeout: Duration,
+    ctx: &PumpCtx,
+) -> Result<Frame, String> {
+    let deadline = Instant::now() + timeout;
+    let mut buf = [0u8; 4096];
+    loop {
+        match reader.next() {
+            Ok(Some(f)) => {
+                ctx.metrics.rpc_frames_recv.fetch_add(1, Ordering::Relaxed);
+                return Ok(f);
+            }
+            Ok(None) => {}
+            Err(e) => return Err(format!("wire desync in handshake: {e:#}")),
+        }
+        if Instant::now() > deadline {
+            return Err("handshake timed out".into());
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => return Err("worker hung up during handshake".into()),
+            Ok(n) => reader.extend(&buf[..n]),
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock
+                    || e.kind() == ErrorKind::TimedOut => {}
+            Err(e) => return Err(format!("handshake read: {e}")),
+        }
+    }
+}
+
+fn send(stream: &mut UnixStream, frame: &Frame, ctx: &PumpCtx) -> Result<(), String> {
+    write_frame(stream, frame).map_err(|e| format!("socket write: {e}"))?;
+    ctx.metrics.rpc_frames_sent.fetch_add(1, Ordering::Relaxed);
+    Ok(())
+}
+
+/// [`send`] for a pre-encoded frame (the dispatch path encodes first to
+/// size-check against [`MAX_FRAME_BYTES`]).
+fn send_bytes(stream: &mut UnixStream, bytes: &[u8], ctx: &PumpCtx) -> Result<(), String> {
+    use std::io::Write;
+    stream
+        .write_all(bytes)
+        .map_err(|e| format!("socket write: {e}"))?;
+    ctx.metrics.rpc_frames_sent.fetch_add(1, Ordering::Relaxed);
+    Ok(())
+}
+
+/// The worker died abruptly (EOF, SIGKILL, wire desync): requeue every
+/// job it still owed us — the supervisor's dispatch ledger is the
+/// loss-free recovery source — and report Failed.
+fn end_dead(
+    ctx: &mut PumpCtx,
+    inflight: BTreeMap<u64, InflightJob>,
+    msg: &str,
+) -> Result<(), String> {
+    for (_, e) in inflight {
+        requeue_to(&ctx.queue, &ctx.metrics, e.job, "replica failed");
+    }
+    Err(msg.to_string())
+}
+
+/// Difference a heartbeat against the last sample into the gateway's
+/// global counters, and publish cumulative values into the replica cell
+/// (the same split shared memory gives the thread substrate).
+fn apply_heartbeat(hb: &HeartbeatWire, last: &HeartbeatWire, ctx: &PumpCtx) {
+    let m = &ctx.metrics;
+    let d = |a: u64, b: u64| a.saturating_sub(b);
+    m.prefills
+        .fetch_add(d(hb.prefills, last.prefills), Ordering::Relaxed);
+    m.prefill_batched
+        .fetch_add(d(hb.prefill_batched, last.prefill_batched), Ordering::Relaxed);
+    m.decode_steps
+        .fetch_add(d(hb.decode_steps, last.decode_steps), Ordering::Relaxed);
+    m.batched
+        .fetch_add(d(hb.batched_steps, last.batched_steps), Ordering::Relaxed);
+    for (i, (&now, &prev)) in
+        hb.batch_counts.iter().zip(last.batch_counts.iter()).enumerate()
+    {
+        m.batch_counts[i].fetch_add(d(now, prev), Ordering::Relaxed);
+    }
+    m.prefix_hit_tokens
+        .fetch_add(d(hb.prefix_hit_tokens, last.prefix_hit_tokens), Ordering::Relaxed);
+    m.prefix_miss_tokens.fetch_add(
+        d(hb.prefix_miss_tokens, last.prefix_miss_tokens),
+        Ordering::Relaxed,
+    );
+    m.prefix_evicted_blocks.fetch_add(
+        d(hb.prefix_evicted_blocks, last.prefix_evicted_blocks),
+        Ordering::Relaxed,
+    );
+    let c = &ctx.cell;
+    c.inflight.store(hb.inflight, Ordering::Relaxed);
+    c.prefix_hit_tokens
+        .store(hb.prefix_hit_tokens, Ordering::Relaxed);
+    c.prefix_miss_tokens
+        .store(hb.prefix_miss_tokens, Ordering::Relaxed);
+    c.prefix_cache_blocks
+        .store(hb.prefix_cache_blocks, Ordering::Relaxed);
+}
+
+/// Answer one caller from the accumulated token stream.
+fn finish_entry(e: InflightJob, prompt_tokens: usize, ctx: &PumpCtx) {
+    let now = ctx.epoch.elapsed().as_secs_f64();
+    let mut job = e.job;
+    if !e.chunk_seen {
+        // Everything arrived in the Done tail (budget-1 sequences).
+        job.ttft_s = (now - job.enqueue_s).max(0.0);
+    }
+    ctx.metrics.completed.fetch_add(1, Ordering::Relaxed);
+    ctx.metrics
+        .tokens_out
+        .fetch_add(e.tokens.len() as u64, Ordering::Relaxed);
+    job.reply.put(Ok(LiveResponse {
+        tokens: e.tokens,
+        tier: job.tier.name().to_string(),
+        model: job.model,
+        complexity: job.complexity,
+        confidence: job.confidence,
+        ttft_s: job.ttft_s,
+        latency_s: (now - job.enqueue_s).max(0.0),
+        queue_wait_s: job.queue_wait_s,
+        prompt_tokens,
+    }));
+}

@@ -19,6 +19,8 @@ use std::ops::Range;
 
 use crate::util::rng::SplitMix64;
 
+pub mod substrate_conformance;
+
 /// Generator handle passed to properties.
 pub struct Gen {
     rng: SplitMix64,

@@ -1,0 +1,256 @@
+//! Substrate conformance suite — the executable contract of
+//! [`crate::substrate::Substrate`].
+//!
+//! Three very different runtimes implement the trait (the simulated
+//! cluster / `MockSubstrate`, the thread pool, the process supervisor),
+//! and the orchestrator is only correct if all of them agree on the
+//! lifecycle semantics. This harness asserts the load-bearing parts
+//! against any implementation:
+//!
+//! * **lifecycle ordering** — provision starts live-but-pending, exactly
+//!   one `ReplicaReady` (with a non-negative measured cold start) before
+//!   any terminal event, then Ready state and membership in
+//!   `ready_replicas`.
+//! * **poll idempotence** — polls at a steady state return no events;
+//!   every transition is edge-triggered exactly once.
+//! * **graceful terminate** — ends in exactly one `ReplicaGone`, after
+//!   which the replica has no state and no further events.
+//! * **terminate during Loading** — must still reach a single terminal
+//!   event (an in-flight warm-up may surface at most one `ReplicaReady`
+//!   first), never a Ready-after-terminal.
+//! * **fail → event** — `fail` surfaces `ReplicaFailed` either
+//!   synchronously (the simulator observes the death) or through `poll`
+//!   (live substrates observe it at the next heartbeat/EOF); callers
+//!   must get exactly one of the two.
+//!
+//! Time is abstracted behind `clock`: the mock advances virtual seconds,
+//! the live substrates sleep a few milliseconds of wall clock per call —
+//! the assertions are identical.
+
+use crate::models::{BackendKind, ModelSpec};
+use crate::registry::ServiceId;
+use crate::substrate::{ReplicaId, ReplicaState, Substrate, SubstrateEvent};
+
+/// One substrate under test plus the environment it needs.
+pub struct Driver<'a> {
+    pub substrate: &'a mut dyn Substrate,
+    /// Service to provision (the substrate must have capacity for at
+    /// least one replica of it at a time).
+    pub service: ServiceId,
+    pub model_idx: usize,
+    pub spec: ModelSpec,
+    pub backend: BackendKind,
+    /// Advance time and return "now" in substrate seconds. Virtual
+    /// substrates step their clock; live ones sleep briefly.
+    pub clock: Box<dyn FnMut() -> f64 + 'a>,
+    /// Budget (in `clock` seconds) for any single transition.
+    pub timeout_s: f64,
+}
+
+fn replica_of(ev: &SubstrateEvent) -> ReplicaId {
+    match ev {
+        SubstrateEvent::ReplicaReady { replica, .. }
+        | SubstrateEvent::ReplicaGone { replica, .. }
+        | SubstrateEvent::ReplicaFailed { replica, .. } => *replica,
+    }
+}
+
+fn poll_for(d: &mut Driver, id: ReplicaId) -> Vec<SubstrateEvent> {
+    let now = (d.clock)();
+    d.substrate
+        .poll(now)
+        .into_iter()
+        .filter(|e| replica_of(e) == id)
+        .collect()
+}
+
+/// Steady states emit nothing: polling must be idempotent.
+fn assert_quiet(d: &mut Driver, id: ReplicaId, stage: &str) {
+    for _ in 0..3 {
+        let evs = poll_for(d, id);
+        assert!(
+            evs.is_empty(),
+            "poll must be idempotent after {stage}, got {evs:?}"
+        );
+    }
+}
+
+fn provision(d: &mut Driver) -> ReplicaId {
+    let now = (d.clock)();
+    let spec = d.spec.clone();
+    let id = d
+        .substrate
+        .provision(d.service, d.model_idx, &spec, d.backend, now)
+        .expect("provision must succeed while capacity remains");
+    let st = d
+        .substrate
+        .replica_state(id)
+        .expect("a provisioned replica must report a state");
+    assert!(st.is_live(), "fresh replica must be live, got {st:?}");
+    assert!(
+        d.substrate.pending_replicas(d.service) >= 1
+            || d.substrate.ready_replicas(d.service).contains(&id),
+        "a provisioned replica must count as pending until Ready"
+    );
+    id
+}
+
+/// Wait for `ReplicaReady`, asserting it arrives exactly once and before
+/// any terminal event. Returns the reported cold start.
+fn wait_ready(d: &mut Driver, id: ReplicaId) -> f64 {
+    let start = (d.clock)();
+    let mut cold = None;
+    loop {
+        for ev in poll_for(d, id) {
+            match ev {
+                SubstrateEvent::ReplicaReady { cold_start_s, .. } => {
+                    assert!(
+                        cold.is_none(),
+                        "ReplicaReady must be emitted exactly once"
+                    );
+                    assert!(
+                        cold_start_s >= 0.0,
+                        "cold start must be non-negative, got {cold_start_s}"
+                    );
+                    cold = Some(cold_start_s);
+                }
+                ev => panic!("unexpected event before Ready: {ev:?}"),
+            }
+        }
+        if let Some(c) = cold {
+            assert_eq!(
+                d.substrate.replica_state(id),
+                Some(ReplicaState::Ready),
+                "state must read Ready after the Ready event"
+            );
+            assert!(
+                d.substrate.ready_replicas(d.service).contains(&id),
+                "a Ready replica must be listed in ready_replicas"
+            );
+            return c;
+        }
+        let now = (d.clock)();
+        assert!(
+            now - start < d.timeout_s,
+            "replica never became Ready within {}s",
+            d.timeout_s
+        );
+    }
+}
+
+enum Terminal {
+    Gone,
+    Failed,
+}
+
+/// Wait for a single terminal event. An in-flight warm-up may surface at
+/// most one `ReplicaReady` first (terminate-during-Loading); nothing may
+/// follow the terminal event.
+fn wait_terminal(d: &mut Driver, id: ReplicaId, allow_ready_first: bool) -> Terminal {
+    let start = (d.clock)();
+    let mut readys = 0usize;
+    loop {
+        for ev in poll_for(d, id) {
+            match ev {
+                SubstrateEvent::ReplicaGone { .. } => return Terminal::Gone,
+                SubstrateEvent::ReplicaFailed { .. } => return Terminal::Failed,
+                SubstrateEvent::ReplicaReady { .. } => {
+                    readys += 1;
+                    assert!(
+                        allow_ready_first && readys == 1,
+                        "unexpected ReplicaReady while terminating"
+                    );
+                }
+            }
+        }
+        let now = (d.clock)();
+        assert!(
+            now - start < d.timeout_s,
+            "replica never reached a terminal state within {}s",
+            d.timeout_s
+        );
+    }
+}
+
+fn assert_removed(d: &mut Driver, id: ReplicaId, stage: &str) {
+    let st = d.substrate.replica_state(id);
+    assert!(
+        st.is_none() || st == Some(ReplicaState::Failed),
+        "{stage}: terminal replica must have no live state, got {st:?}"
+    );
+    assert!(
+        !d.substrate.ready_replicas(d.service).contains(&id),
+        "{stage}: terminal replica must leave ready_replicas"
+    );
+    assert_quiet(d, id, stage);
+}
+
+/// The full conformance suite. Panics with a scenario-specific message
+/// on any contract violation.
+pub fn check(d: &mut Driver) {
+    lifecycle(d);
+    terminate_during_loading(d);
+    fail_surfaces_event(d);
+    estimate_is_positive(d);
+}
+
+/// provision → Ready (once, cold start measured) → terminate → Gone
+/// (once), with idempotent polls at both steady states.
+fn lifecycle(d: &mut Driver) {
+    let id = provision(d);
+    let _cold = wait_ready(d, id);
+    assert_quiet(d, id, "Ready");
+    let now = (d.clock)();
+    d.substrate.terminate(id, now);
+    match wait_terminal(d, id, true) {
+        Terminal::Gone => {}
+        Terminal::Failed => panic!("graceful terminate must end in ReplicaGone"),
+    }
+    assert_removed(d, id, "terminate");
+}
+
+/// terminate fired while the replica is still warming up: still exactly
+/// one terminal event, never Ready-after-terminal.
+fn terminate_during_loading(d: &mut Driver) {
+    let id = provision(d);
+    let now = (d.clock)();
+    d.substrate.terminate(id, now);
+    // Gone is the expected outcome; Failed is tolerated (a warm-up that
+    // cannot be interrupted may be torn down hard), but either way the
+    // replica must be fully removed and quiet.
+    let _ = wait_terminal(d, id, true);
+    assert_removed(d, id, "terminate during Loading");
+}
+
+/// fail() yields exactly one ReplicaFailed — synchronously (sim) or via
+/// poll (live substrates observe the death asynchronously).
+fn fail_surfaces_event(d: &mut Driver) {
+    let id = provision(d);
+    wait_ready(d, id);
+    let now = (d.clock)();
+    match d.substrate.fail(id, now) {
+        Some(ev) => {
+            assert!(
+                matches!(ev, SubstrateEvent::ReplicaFailed { replica, .. } if replica == id),
+                "synchronous fail must return ReplicaFailed for the victim, got {ev:?}"
+            );
+        }
+        None => match wait_terminal(d, id, false) {
+            Terminal::Failed => {}
+            Terminal::Gone => {
+                panic!("fail() must surface ReplicaFailed, not ReplicaGone")
+            }
+        },
+    }
+    assert_removed(d, id, "fail");
+}
+
+/// Cold-start estimates feed Alg. 2 as latency penalties — they must be
+/// finite and positive even before any replica has been measured.
+fn estimate_is_positive(d: &mut Driver) {
+    let est = d.substrate.estimate_cold_start_s(&d.spec, d.backend);
+    assert!(
+        est.is_finite() && est > 0.0,
+        "cold-start estimate must be positive, got {est}"
+    );
+}

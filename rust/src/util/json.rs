@@ -240,6 +240,8 @@ fn write_escaped(out: &mut String, s: &str) {
             '\n' => out.push_str("\\n"),
             '\r' => out.push_str("\\r"),
             '\t' => out.push_str("\\t"),
+            '\u{8}' => out.push_str("\\b"),
+            '\u{c}' => out.push_str("\\f"),
             c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
             c => out.push(c),
         }
@@ -369,33 +371,34 @@ impl<'a> Parser<'a> {
                         b'r' => s.push('\r'),
                         b't' => s.push('\t'),
                         b'u' => {
-                            let hex = self
-                                .b
-                                .get(self.i..self.i + 4)
-                                .ok_or_else(|| anyhow!("bad \\u escape"))?;
-                            let code = u32::from_str_radix(
-                                std::str::from_utf8(hex)?, 16)?;
-                            self.i += 4;
+                            let code = self.hex4()?;
                             let ch = if (0xD800..0xDC00).contains(&code) {
-                                // surrogate pair
+                                // High surrogate: a low surrogate escape
+                                // must follow, and both halves are
+                                // range-checked *before* any arithmetic —
+                                // `\ud800\ud800` must be a parse error,
+                                // not an integer under/overflow.
                                 if self.b.get(self.i) == Some(&b'\\')
                                     && self.b.get(self.i + 1) == Some(&b'u')
                                 {
-                                    let hex2 = self
-                                        .b
-                                        .get(self.i + 2..self.i + 6)
-                                        .ok_or_else(|| anyhow!("bad surrogate"))?;
-                                    let low = u32::from_str_radix(
-                                        std::str::from_utf8(hex2)?, 16)?;
-                                    self.i += 6;
+                                    self.i += 2;
+                                    let low = self.hex4()?;
+                                    if !(0xDC00..0xE000).contains(&low) {
+                                        bail!(
+                                            "high surrogate \\u{code:04x} \
+                                             followed by non-low \\u{low:04x}"
+                                        );
+                                    }
                                     let c = 0x10000
                                         + ((code - 0xD800) << 10)
                                         + (low - 0xDC00);
                                     char::from_u32(c)
                                         .ok_or_else(|| anyhow!("bad surrogate pair"))?
                                 } else {
-                                    bail!("lone high surrogate");
+                                    bail!("lone high surrogate \\u{code:04x}");
                                 }
+                            } else if (0xDC00..0xE000).contains(&code) {
+                                bail!("lone low surrogate \\u{code:04x}");
                             } else {
                                 char::from_u32(code)
                                     .ok_or_else(|| anyhow!("bad codepoint"))?
@@ -404,6 +407,13 @@ impl<'a> Parser<'a> {
                         }
                         _ => bail!("bad escape `\\{}`", e as char),
                     }
+                }
+                c if c < 0x20 => {
+                    // RFC 8259: control characters must be escaped. The
+                    // serializer always escapes them, so accepting raw
+                    // ones would only mask producer bugs.
+                    bail!("raw control character 0x{c:02x} in string at byte {}",
+                          self.i - 1);
                 }
                 _ => {
                     // re-decode UTF-8 from the raw bytes
@@ -418,6 +428,28 @@ impl<'a> Parser<'a> {
                 }
             }
         }
+    }
+
+    /// Exactly four ASCII hex digits of a `\u` escape. Strict by hand:
+    /// `from_str_radix` would also accept a leading `+`, quietly turning
+    /// `\u+0ab` into a codepoint.
+    fn hex4(&mut self) -> Result<u32> {
+        let hex = self
+            .b
+            .get(self.i..self.i + 4)
+            .ok_or_else(|| anyhow!("truncated \\u escape at byte {}", self.i))?;
+        let mut code: u32 = 0;
+        for &b in hex {
+            let d = match b {
+                b'0'..=b'9' => b - b'0',
+                b'a'..=b'f' => b - b'a' + 10,
+                b'A'..=b'F' => b - b'A' + 10,
+                _ => bail!("invalid hex digit `{}` in \\u escape", b as char),
+            };
+            code = (code << 4) | d as u32;
+        }
+        self.i += 4;
+        Ok(code)
     }
 
     fn number(&mut self) -> Result<Json> {
@@ -513,5 +545,74 @@ mod tests {
     fn unicode_passthrough() {
         let v = Json::parse("\"日本語 ünïcödé\"").unwrap();
         assert_eq!(v.as_str().unwrap(), "日本語 ünïcödé");
+    }
+
+    #[test]
+    fn control_characters_roundtrip() {
+        // Every C0 control character must survive dump → parse intact
+        // (RPC frames carry user prompt text; a lossy escape corrupts
+        // jobs on the wire).
+        let s: String = (0u32..0x20).map(|c| char::from_u32(c).unwrap()).collect();
+        let v = Json::Str(s.clone());
+        let dumped = v.dump();
+        assert!(
+            dumped.bytes().all(|b| b >= 0x20),
+            "control chars must be escaped in output: {dumped:?}"
+        );
+        assert_eq!(Json::parse(&dumped).unwrap().as_str().unwrap(), s);
+        // Short escapes for backspace/formfeed, like every other writer.
+        assert!(dumped.contains("\\b") && dumped.contains("\\f"), "{dumped}");
+    }
+
+    #[test]
+    fn non_bmp_escapes_roundtrip() {
+        // Escaped surrogate-pair form and raw UTF-8 form both decode to
+        // the same astral codepoints, and dumping re-parses losslessly.
+        let v = Json::parse(r#""😀 𤭢""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "😀 𤭢");
+        let v2 = Json::parse(&v.dump()).unwrap();
+        assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn malformed_surrogates_error_instead_of_panicking() {
+        // Two high surrogates: underflow in the pair arithmetic used to
+        // abort debug builds; it must be a parse error.
+        assert!(Json::parse(r#""\ud800\ud800""#).is_err());
+        // High surrogate followed by a non-surrogate escape.
+        assert!(Json::parse(r#""\ud800A""#).is_err());
+        // Lone halves, either order.
+        assert!(Json::parse(r#""\ud800""#).is_err());
+        assert!(Json::parse(r#""\udc00""#).is_err());
+        // Truncated escape at end of input.
+        assert!(Json::parse(r#""\ud83d\ude0"#).is_err());
+    }
+
+    #[test]
+    fn hex_escapes_are_strict() {
+        // from_str_radix would accept a leading `+`; the grammar doesn't.
+        assert!(Json::parse(r#""\u+0ab""#).is_err());
+        assert!(Json::parse(r#""\u00g1""#).is_err());
+        // Case-insensitive hex is fine.
+        assert_eq!(
+            Json::parse("\"\\u00e9\"").unwrap().as_str().unwrap(),
+            "é"
+        );
+        assert_eq!(
+            Json::parse("\"\\u00E9\"").unwrap().as_str().unwrap(),
+            "é"
+        );
+    }
+
+    #[test]
+    fn raw_control_characters_are_rejected() {
+        // RFC 8259: unescaped control characters are invalid in strings.
+        assert!(Json::parse("\"a\u{1}b\"").is_err());
+        assert!(Json::parse("\"a\nb\"").is_err());
+        // The escaped forms parse fine.
+        assert_eq!(
+            Json::parse("\"a\\u0001\\nb\"").unwrap().as_str().unwrap(),
+            "a\u{1}\nb"
+        );
     }
 }

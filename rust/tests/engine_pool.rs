@@ -190,6 +190,50 @@ fn timed_out_requests_cancel_mid_flight_and_free_their_slot() {
 }
 
 #[test]
+fn graceful_drain_requeues_queued_jobs_loss_free() {
+    // Terminate the only small-tier replica while it holds admitted and
+    // queued work: the buffered jobs must route back through the requeue
+    // path (not be dropped with the replica), the orphan guard must cold
+    // wake a replacement, and every caller must still get its answer —
+    // loss-free scale-down.
+    let mut cfg = pool_config();
+    cfg.pool.replicas = [1, 1, 1];
+    cfg.pool.max_inflight = 4;
+    cfg.pool.max_prefill_batch = 1;
+    cfg.pool.scale_interval_s = 0.05;
+    cfg.orchestrator.idle_timeout_s = 3600.0;
+    let stack = Arc::new(LiveStack::start_sim(&cfg).unwrap());
+    let n = 12u64;
+    let handles: Vec<_> = (0..n)
+        .map(|i| {
+            let s = Arc::clone(&stack);
+            std::thread::spawn(move || s.complete(&format!("what is {i} plus {i}?"), 48))
+        })
+        .collect();
+    // Let the replica fill its slots (decode of 48 tokens on the
+    // calibrated sim engine runs ~10 ms), then drain it mid-flight.
+    std::thread::sleep(Duration::from_millis(5));
+    assert!(
+        stack.drain_replica(0),
+        "no Ready small-tier replica to drain"
+    );
+    for h in handles {
+        let r = h
+            .join()
+            .unwrap()
+            .expect("request lost across a graceful drain");
+        assert!(!r.tokens.is_empty());
+    }
+    let m = &stack.metrics;
+    assert_eq!(m.completed.load(Ordering::Relaxed), n);
+    assert_eq!(m.errors.load(Ordering::Relaxed), 0, "drain must not error jobs");
+    assert!(
+        m.requeued.load(Ordering::Relaxed) >= 1,
+        "draining replica must hand queued work back through the requeue path"
+    );
+}
+
+#[test]
 fn backpressure_rejects_cleanly_when_tier_queue_full() {
     let mut cfg = pool_config();
     // One slot, one-deep queue, serial batches: the third-plus

@@ -1,0 +1,287 @@
+//! Process-substrate integration: replica workers as real OS processes
+//! (`ps-replica` subcommand of the gateway binary) behind the RPC data
+//! plane. These tests spawn actual worker processes — Cargo builds the
+//! binary for integration tests and exposes it via `CARGO_BIN_EXE_*` —
+//! and drive the full gateway path over Unix-socket framed JSON RPC:
+//! conformance against the shared `Substrate` contract, batched decode,
+//! cancellation propagation, scale-to-zero + cold wake, and the headline
+//! capability the thread substrate fundamentally cannot model: a worker
+//! SIGKILLed mid-decode (`kill -9`) recovering loss-free.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use pick_and_spin::config::{Config, SubstrateKind};
+use pick_and_spin::gateway::LiveStack;
+use pick_and_spin::models::zoo;
+use pick_and_spin::registry::Registry;
+use pick_and_spin::substrate::remote::{ProcessSubstrate, WorkerSpec};
+use pick_and_spin::testkit::substrate_conformance::{check, Driver};
+
+const WORKER_BIN: &str = env!("CARGO_BIN_EXE_pick-and-spin");
+
+fn pcfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.pool.substrate = SubstrateKind::Process;
+    cfg.pool.worker_bin = Some(WORKER_BIN.to_string());
+    // CI sets PS_WORKER_LOG_DIR and uploads the logs as artifacts.
+    cfg.pool.worker_log_dir = std::env::var("PS_WORKER_LOG_DIR").ok();
+    cfg.pool.replicas = [1, 1, 1];
+    cfg.pool.max_inflight = 16;
+    cfg.pool.flush_timeout_s = 0.003;
+    cfg.pool.scale_interval_s = 0.05;
+    cfg
+}
+
+fn metric(stack: &LiveStack, name: &str) -> f64 {
+    stack
+        .metrics_snapshot()
+        .into_iter()
+        .find(|(n, _)| n == name)
+        .map(|(_, v)| v)
+        .unwrap_or_else(|| panic!("{name} missing from /metrics"))
+}
+
+#[test]
+fn process_substrate_passes_conformance() {
+    // The same lifecycle contract MockSubstrate and LocalSubstrate run —
+    // here every provision spawns a real worker process.
+    let cfg = pcfg();
+    let z = zoo();
+    let registry = Registry::new(&z, 300.0);
+    let mut pool = cfg.pool.clone();
+    pool.replicas = [2, 2, 2];
+    let spec = WorkerSpec::from_pool(&pool, &["--engine", "sim"]).unwrap();
+    let mut sub = ProcessSubstrate::standalone(pool, &registry, spec);
+    let epoch = sub.epoch();
+    let sid = sub.tier_service(0);
+    let (mspec, backend) = {
+        let s = registry.get(sid);
+        (s.spec.clone(), s.backend)
+    };
+    let mut d = Driver {
+        substrate: &mut sub,
+        service: sid,
+        model_idx: 0,
+        spec: mspec,
+        backend,
+        clock: Box::new(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            epoch.elapsed().as_secs_f64()
+        }),
+        timeout_s: 30.0,
+    };
+    check(&mut d);
+    drop(d);
+    sub.shutdown();
+}
+
+#[test]
+fn rpc_pool_serves_concurrent_load_with_batched_decode() {
+    // The full engine-pool path end-to-end over the RPC data plane:
+    // router thread → tier queues → pump threads → worker processes →
+    // streamed token chunks back. Decode batching must engage inside the
+    // workers and surface through heartbeat counters at /metrics.
+    let stack = Arc::new(LiveStack::start_sim(&pcfg()).unwrap());
+    let n = 32u64;
+    let handles: Vec<_> = (0..n)
+        .map(|i| {
+            let s = Arc::clone(&stack);
+            std::thread::spawn(move || {
+                s.complete(&format!("what is {i} plus {i}?"), 16).unwrap()
+            })
+        })
+        .collect();
+    let mut total_tokens = 0usize;
+    for h in handles {
+        let r = h.join().unwrap();
+        assert!(!r.tokens.is_empty());
+        assert!(r.latency_s >= r.ttft_s, "latency below TTFT");
+        assert!(r.queue_wait_s >= 0.0);
+        total_tokens += r.tokens.len();
+    }
+    let m = &stack.metrics;
+    assert_eq!(m.requests.load(Ordering::Relaxed), n);
+    assert_eq!(m.completed.load(Ordering::Relaxed), n);
+    assert_eq!(m.errors.load(Ordering::Relaxed), 0);
+    assert_eq!(m.tokens_out.load(Ordering::Relaxed) as usize, total_tokens);
+    // Worker-side counters arrive via heartbeats (≤ 20 ms cadence).
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while m.batched.load(Ordering::Relaxed) == 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(
+        m.batched.load(Ordering::Relaxed) > 0,
+        "no batched decode steps under 32-way concurrency over RPC"
+    );
+    // The RPC plane itself is observable: frames flowed both ways and
+    // Ping→Pong latency was measured.
+    assert!(metric(&stack, "ps_rpc_frames_sent_total") > 0.0);
+    assert!(metric(&stack, "ps_rpc_frames_recv_total") > 0.0);
+    if metric(&stack, "ps_rpc_pings_total") > 0.0 {
+        assert!(metric(&stack, "ps_rpc_rtt_seconds_total") >= 0.0);
+    }
+}
+
+#[test]
+fn rpc_cancellation_propagates_and_frees_worker_slots() {
+    // A timed-out caller fires its cancel token gateway-side; the pump
+    // ships a Cancel frame; the worker evicts the sequence mid-decode
+    // and the slot frees (observable through heartbeat inflight).
+    let mut cfg = pcfg();
+    cfg.gateway.request_timeout_s = 0.01;
+    let stack = LiveStack::start_sim(&cfg).unwrap();
+    let err = stack
+        .complete("please summarize everything about alpha beta gamma", 256)
+        .expect_err("a 10ms timeout cannot cover a ~50ms decode");
+    assert!(format!("{err:#}").contains("timed out"), "{err:#}");
+    assert_eq!(stack.metrics.timeouts.load(Ordering::Relaxed), 1);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while (stack.metrics.cancelled.load(Ordering::Relaxed) == 0
+        || stack.slots_in_use() > 0)
+        && Instant::now() < deadline
+    {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(
+        stack.metrics.cancelled.load(Ordering::Relaxed) >= 1,
+        "timeout must cancel the in-flight sequence across the RPC boundary"
+    );
+    assert_eq!(stack.slots_in_use(), 0, "cancelled slot must free");
+}
+
+#[test]
+fn rpc_pool_scales_to_zero_and_cold_wakes_workers() {
+    // Scale-to-zero terminates worker *processes* (graceful Terminate →
+    // Gone → exit 0); a cold wake spawns a fresh process and pays the
+    // real spawn→Ready cold start, which feeds Alg. 2.
+    let mut cfg = pcfg();
+    cfg.orchestrator.idle_timeout_s = 0.2;
+    cfg.orchestrator.warm_pool = [1, 0, 0];
+    let stack = LiveStack::start_sim(&cfg).unwrap();
+    assert_eq!(stack.active_replicas(), 3);
+
+    stack.complete("what is 2 plus 2?", 4).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(15);
+    while stack.active_replicas() > 1 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    assert_eq!(
+        stack.active_replicas(),
+        1,
+        "idle tiers must park their worker processes to the warm floor"
+    );
+
+    let r = stack
+        .complete("prove that the sum converges and derive a closed form", 6)
+        .unwrap();
+    assert!(!r.tokens.is_empty());
+    assert!(
+        stack.metrics.cold_wakes.load(Ordering::Relaxed) >= 1,
+        "serving a parked tier must count a cold wake"
+    );
+}
+
+#[test]
+fn sigkilled_worker_recovers_loss_free_with_measured_recovery() {
+    // The acceptance scenario: SIGKILL a worker process mid-decode (the
+    // fault a thread substrate cannot model — the address space is
+    // gone). Every in-flight job must requeue off the supervisor's
+    // dispatch ledger and complete on the survivor/replacement, the
+    // replica must re-spawn through Scheduled→Loading→Ready, and
+    // /metrics must show the incident with a measured recovery time.
+    let mut cfg = pcfg();
+    cfg.pool.replicas = [2, 1, 1];
+    cfg.pool.max_inflight = 8;
+    cfg.orchestrator.idle_timeout_s = 3600.0;
+    let stack = Arc::new(LiveStack::start_sim(&cfg).unwrap());
+    assert_eq!(stack.active_replicas(), 4);
+
+    let n = 48u64;
+    let handles: Vec<_> = (0..n)
+        .map(|i| {
+            let s = Arc::clone(&stack);
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(i * 2));
+                s.complete(&format!("what is {i} plus {i}?"), 24)
+            })
+        })
+        .collect();
+
+    // kill -9 one small-tier worker once traffic is flowing.
+    std::thread::sleep(Duration::from_millis(30));
+    assert!(
+        stack.inject_replica_failure(0),
+        "no Ready small-tier worker to kill"
+    );
+
+    for h in handles {
+        let r = h
+            .join()
+            .unwrap()
+            .expect("request lost across a SIGKILLed worker");
+        assert!(!r.tokens.is_empty());
+    }
+
+    let deadline = Instant::now() + Duration::from_secs(15);
+    loop {
+        let incidents = stack.metrics.incidents.load(Ordering::Relaxed);
+        let recovered = stack.metrics.recovered.load(Ordering::Relaxed);
+        if incidents >= 1 && recovered >= 1 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "incident never recovered: incidents={incidents} recovered={recovered}"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert_eq!(
+        stack.active_replicas(),
+        4,
+        "the re-spawned worker must restore the fleet"
+    );
+    assert!(
+        stack.metrics.requeued.load(Ordering::Relaxed) >= 1,
+        "in-flight jobs must requeue off the killed worker's ledger"
+    );
+    assert!(metric(&stack, "ps_incidents_total") >= 1.0);
+    assert!(metric(&stack, "ps_recovered_total") >= 1.0);
+    assert!(
+        metric(&stack, "ps_recovery_seconds_total") > 0.0,
+        "recovery time must be measured and nonzero"
+    );
+    assert_eq!(stack.metrics.errors.load(Ordering::Relaxed), 0);
+    assert_eq!(stack.metrics.completed.load(Ordering::Relaxed), n);
+}
+
+#[test]
+fn rpc_graceful_drain_returns_unstarted_jobs() {
+    // Scale-down over RPC: Terminate → the worker sends Returned frames
+    // for work it never started, finishes its decoding slots, exits 0 —
+    // and every caller still completes.
+    let mut cfg = pcfg();
+    cfg.pool.max_inflight = 4;
+    cfg.pool.max_prefill_batch = 1;
+    cfg.orchestrator.idle_timeout_s = 3600.0;
+    let stack = Arc::new(LiveStack::start_sim(&cfg).unwrap());
+    let n = 12u64;
+    let handles: Vec<_> = (0..n)
+        .map(|i| {
+            let s = Arc::clone(&stack);
+            std::thread::spawn(move || s.complete(&format!("what is {i} plus {i}?"), 48))
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(10));
+    assert!(stack.drain_replica(0), "no Ready small-tier worker to drain");
+    for h in handles {
+        let r = h
+            .join()
+            .unwrap()
+            .expect("request lost across an RPC graceful drain");
+        assert!(!r.tokens.is_empty());
+    }
+    assert_eq!(stack.metrics.completed.load(Ordering::Relaxed), n);
+    assert_eq!(stack.metrics.errors.load(Ordering::Relaxed), 0);
+}

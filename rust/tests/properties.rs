@@ -161,6 +161,45 @@ fn prop_json_roundtrip_preserves_structure() {
 }
 
 #[test]
+fn prop_json_strings_roundtrip_hostile_text() {
+    // RPC frames carry user prompt text: control characters, quote/
+    // backslash runs, BMP and non-BMP (astral) code points must all
+    // survive dump → parse bit-for-bit — a lossy escape corrupts jobs on
+    // the wire.
+    check("json hostile string roundtrip", 300, |g: &mut Gen| {
+        let mut s = String::new();
+        for _ in 0..g.usize(0..40) {
+            let c = match g.usize(0..6) {
+                // C0 control characters (incl. \n \r \t \b \f at 10/13/9/8/12)
+                0 => char::from_u32(g.u32(0..0x20)).unwrap(),
+                // Quote, backslash, solidus
+                1 => *g.pick(&['"', '\\', '/']),
+                // Plain ASCII
+                2 | 3 => char::from_u32(g.u32(0x20..0x7f)).unwrap(),
+                // BMP beyond ASCII (skip the surrogate range)
+                4 => char::from_u32(g.u32(0xA0..0xD7FF)).unwrap(),
+                // Non-BMP: emoji / CJK extension (surrogate pairs in the
+                // escaped form, 4-byte UTF-8 raw)
+                _ => char::from_u32(g.u32(0x1_F300..0x1_FA00)).unwrap(),
+            };
+            s.push(c);
+        }
+        let v = Json::Str(s.clone());
+        let dumped = v.dump();
+        assert!(
+            dumped.bytes().all(|b| b >= 0x20),
+            "escaped output must contain no raw control bytes: {dumped:?}"
+        );
+        let back = Json::parse(&dumped).unwrap();
+        assert_eq!(back.as_str().unwrap(), s, "string mangled in roundtrip");
+        // Nested inside an object as both key and value.
+        let obj = Json::obj(vec![("prompt", Json::str(s.clone()))]);
+        assert_eq!(Json::parse(&obj.dump()).unwrap(), obj);
+        assert_eq!(Json::parse(&obj.pretty()).unwrap(), obj);
+    });
+}
+
+#[test]
 fn prop_percentiles_monotone_and_bounded() {
     check("percentile order", 200, |g: &mut Gen| {
         let xs = g.vec(1..200, |g| g.f64(-1e3..1e3));
