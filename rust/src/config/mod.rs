@@ -181,6 +181,62 @@ impl SubstrateKind {
     }
 }
 
+/// How the process substrate spreads a tier's replicas across the
+/// registered node agents.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Placement {
+    /// Least-loaded with tier anti-affinity: prefer the node hosting the
+    /// fewest replicas of this tier, tie-broken by fewest total replicas
+    /// — one node dying takes out at most one replica of each tier.
+    #[default]
+    Spread,
+    /// Fill the lowest-numbered node before touching the next (bin
+    /// packing; frees whole nodes for scale-down).
+    Pack,
+}
+
+impl Placement {
+    pub fn parse(s: &str) -> Option<Placement> {
+        match s {
+            "spread" => Some(Placement::Spread),
+            "pack" => Some(Placement::Pack),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Placement::Spread => "spread",
+            Placement::Pack => "pack",
+        }
+    }
+}
+
+/// Multi-host node plane for the process substrate (`pool.nodes.*`).
+/// Unset (the default) keeps every replica a local child process —
+/// exactly the single-host behavior the substrate shipped with.
+#[derive(Debug, Clone, Default)]
+pub struct NodesConfig {
+    /// TCP address the supervisor listens on for inbound `ps-node`
+    /// registrations (e.g. `"0.0.0.0:7070"`). Its host part is also the
+    /// bind host for per-replica data listeners (must be reachable from
+    /// the nodes). `None` = no listener.
+    pub listen_addr: Option<String>,
+    /// `host:port` addresses of `ps-node --listen` agents the supervisor
+    /// dials at startup (registration is the same handshake in either
+    /// direction; an unreachable agent is a startup error).
+    pub agents: Vec<String>,
+    /// Replica placement policy across registered nodes.
+    pub placement: Placement,
+}
+
+impl NodesConfig {
+    /// Whether a node plane is configured at all.
+    pub fn configured(&self) -> bool {
+        self.listen_addr.is_some() || !self.agents.is_empty()
+    }
+}
+
 /// Engine-pool tunables: the continuous-batching serving path
 /// (gateway job intake → per-tier scheduler → N engine replicas).
 #[derive(Debug, Clone)]
@@ -233,6 +289,10 @@ pub struct PoolConfig {
     /// `None` = inherit the gateway's stderr. CI sets this and uploads
     /// the directory.
     pub worker_log_dir: Option<String>,
+    /// Multi-host node plane (process substrate only): where node agents
+    /// register and how replicas place across them. Unconfigured =
+    /// local spawn, today's single-host behavior.
+    pub nodes: NodesConfig,
 }
 
 impl Default for PoolConfig {
@@ -252,6 +312,7 @@ impl Default for PoolConfig {
             substrate: SubstrateKind::Thread,
             worker_bin: None,
             worker_log_dir: None,
+            nodes: NodesConfig::default(),
         }
     }
 }
@@ -420,6 +481,44 @@ impl Config {
             if let Some(d) = p.get("worker_log_dir").and_then(Json::as_str) {
                 self.pool.worker_log_dir = Some(d.to_string());
             }
+            if let Some(n) = p.get("nodes") {
+                // Strict throughout: a malformed node plane must be a
+                // startup error, never a silently smaller (or local)
+                // fleet.
+                if let Some(v) = n.get("listen_addr") {
+                    self.pool.nodes.listen_addr = Some(
+                        v.as_str()
+                            .ok_or_else(|| {
+                                anyhow::anyhow!(
+                                    "pool.nodes.listen_addr must be a string"
+                                )
+                            })?
+                            .to_string(),
+                    );
+                }
+                if let Some(v) = n.get("agents") {
+                    let arr = v.as_arr().ok_or_else(|| {
+                        anyhow::anyhow!("pool.nodes.agents must be an array")
+                    })?;
+                    self.pool.nodes.agents = arr
+                        .iter()
+                        .map(|e| {
+                            e.as_str().map(|s| s.to_string()).ok_or_else(|| {
+                                anyhow::anyhow!(
+                                    "pool.nodes.agents entries must be strings"
+                                )
+                            })
+                        })
+                        .collect::<Result<Vec<String>>>()?;
+                }
+                if let Some(v) = n.get("placement") {
+                    let pl = v.as_str().ok_or_else(|| {
+                        anyhow::anyhow!("pool.nodes.placement must be a string")
+                    })?;
+                    self.pool.nodes.placement = Placement::parse(pl)
+                        .ok_or_else(|| anyhow::anyhow!("bad placement `{pl}`"))?;
+                }
+            }
         }
         if let Some(c) = j.get("cluster") {
             self.cluster.gpus_per_node =
@@ -555,6 +654,43 @@ mod tests {
         assert!(c.overlay(&bad).is_err());
         assert_eq!(SubstrateKind::parse("thread"), Some(SubstrateKind::Thread));
         assert_eq!(SubstrateKind::Process.name(), "process");
+    }
+
+    #[test]
+    fn overlay_nodes_section() {
+        let mut c = Config::default();
+        assert!(!c.pool.nodes.configured(), "node plane off by default");
+        assert_eq!(c.pool.nodes.placement, Placement::Spread);
+        let j = Json::parse(
+            r#"{"pool":{"nodes":{"listen_addr":"0.0.0.0:7070",
+                "agents":["10.0.0.5:7071","10.0.0.6:7071"],
+                "placement":"pack"}}}"#,
+        )
+        .unwrap();
+        c.overlay(&j).unwrap();
+        assert!(c.pool.nodes.configured());
+        assert_eq!(c.pool.nodes.listen_addr.as_deref(), Some("0.0.0.0:7070"));
+        assert_eq!(c.pool.nodes.agents.len(), 2);
+        assert_eq!(c.pool.nodes.placement, Placement::Pack);
+        // untouched pool knobs keep defaults
+        assert_eq!(c.pool.substrate, SubstrateKind::Thread);
+
+        let bad = Json::parse(r#"{"pool":{"nodes":{"placement":"anywhere"}}}"#)
+            .unwrap();
+        assert!(c.overlay(&bad).is_err());
+        // Malformed agent lists error loudly instead of shrinking the
+        // fleet to (or past) single-host.
+        let bad = Json::parse(r#"{"pool":{"nodes":{"agents":"10.0.0.5:7071"}}}"#)
+            .unwrap();
+        assert!(c.overlay(&bad).is_err(), "non-array agents must error");
+        let bad =
+            Json::parse(r#"{"pool":{"nodes":{"agents":["10.0.0.5:7071",7071]}}}"#)
+                .unwrap();
+        assert!(c.overlay(&bad).is_err(), "non-string agent entry must error");
+        let bad = Json::parse(r#"{"pool":{"nodes":{"listen_addr":7070}}}"#).unwrap();
+        assert!(c.overlay(&bad).is_err(), "non-string listen_addr must error");
+        assert_eq!(Placement::parse("spread"), Some(Placement::Spread));
+        assert_eq!(Placement::Pack.name(), "pack");
     }
 
     #[test]

@@ -48,6 +48,7 @@ use crate::router::keyword::KeywordRouter;
 use crate::router::{Classification, Router};
 use crate::runtime::Runtime;
 use crate::scoring::Weights;
+use crate::substrate::nodes::NodeRegistry;
 use crate::substrate::remote::{ProcessSubstrate, WorkerSpec};
 use crate::substrate::Substrate;
 use crate::util::json::Json;
@@ -165,6 +166,9 @@ pub struct LiveStack {
     jobs: Channel<Job>,
     pub metrics: Arc<GatewayMetrics>,
     shared: Arc<PoolShared>,
+    /// Multi-host node plane, when `pool.nodes` is configured on the
+    /// process substrate (per-node gauges at `/metrics`).
+    nodes: Option<Arc<NodeRegistry>>,
     /// The router/control thread; it owns the substrate and joins every
     /// replica thread on shutdown.
     router: Option<JoinHandle<()>>,
@@ -182,6 +186,10 @@ pub(crate) trait PoolBackend: Substrate + Send {
     fn service_of_tier(&self, tier: usize) -> ServiceId;
     fn warm(&mut self) -> std::result::Result<(), String>;
     fn stop_all(&mut self);
+    /// The multi-host node registry, when this backend has one.
+    fn node_registry(&self) -> Option<Arc<NodeRegistry>> {
+        None
+    }
 }
 
 impl<E, F> PoolBackend for LocalSubstrate<E, F>
@@ -221,6 +229,10 @@ impl PoolBackend for ProcessSubstrate {
 
     fn stop_all(&mut self) {
         self.shutdown();
+    }
+
+    fn node_registry(&self) -> Option<Arc<NodeRegistry>> {
+        self.nodes()
     }
 }
 
@@ -336,12 +348,19 @@ impl LiveStack {
             SubstrateKind::Process => {
                 let spec = WorkerSpec::from_pool(&cfg.pool, worker_engine_args)
                     .map_err(|e| anyhow!("process substrate: {e}"))?;
+                // Bring the node plane up (dial static agents, bind the
+                // registration listener) before any replica provisions,
+                // so placement sees the fleet. A bad node config is a
+                // startup error, not a silently single-host pool.
+                let nodes = NodeRegistry::from_config(&cfg.pool.nodes)
+                    .map_err(|e| anyhow!("process substrate: {e}"))?;
                 let substrate = ProcessSubstrate::new(
                     Arc::clone(&shared),
                     cfg.pool.clone(),
                     Arc::clone(&metrics),
                     spec,
                     &registry,
+                    nodes,
                 );
                 Self::finish_start(cfg, router_factory, substrate, registry, shared, metrics, jobs)
             }
@@ -365,6 +384,7 @@ impl LiveStack {
         S: PoolBackend + 'static,
         RF: FnOnce() -> std::result::Result<Box<dyn Router>, String> + Send + 'static,
     {
+        let nodes = substrate.node_registry();
         let requested: usize = cfg.pool.replicas.iter().sum();
         let mut provisioned = 0usize;
         for ti in 0..3 {
@@ -439,6 +459,7 @@ impl LiveStack {
             jobs,
             metrics,
             shared,
+            nodes,
             router: Some(router_handle),
             request_timeout_s,
         })
@@ -576,12 +597,63 @@ impl LiveStack {
             "ps_active_replicas".to_string(),
             self.active_replicas() as f64,
         ));
+        if let Some(reg) = &self.nodes {
+            out.push(("ps_node_lost_total".to_string(), reg.lost_total() as f64));
+            // One pass per family: the Prometheus exposition format
+            // requires all samples of a metric in one contiguous group.
+            // Node names are operator input (`ps-node --name`) — escape
+            // them, or one hostile name breaks the whole exposition.
+            let nodes: Vec<_> = reg
+                .snapshot()
+                .into_iter()
+                .map(|n| (prom_label_escape(&n.name), n))
+                .collect();
+            for (name, n) in &nodes {
+                out.push((
+                    format!("ps_node_replicas{{node=\"{name}\"}}"),
+                    n.hosted as f64,
+                ));
+            }
+            for (name, n) in &nodes {
+                out.push((
+                    format!("ps_node_capacity{{node=\"{name}\"}}"),
+                    n.slots as f64,
+                ));
+            }
+            for (name, n) in &nodes {
+                out.push((
+                    format!("ps_node_up{{node=\"{name}\"}}"),
+                    if n.alive { 1.0 } else { 0.0 },
+                ));
+            }
+        }
         out
+    }
+
+    /// Per-node placement/liveness view (`None` unless `pool.nodes` is
+    /// configured on the process substrate).
+    pub fn node_registry(&self) -> Option<Arc<NodeRegistry>> {
+        self.nodes.as_ref().map(Arc::clone)
     }
 
     pub fn shutdown(self) {
         // Dropping joins everything (Drop below).
     }
+}
+
+/// Escape a string for use as a Prometheus label value (the exposition
+/// format requires `\\`, `\"`, and `\n` escapes).
+fn prom_label_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 impl Drop for LiveStack {

@@ -1,7 +1,9 @@
 //! `ps-replica` worker loop — one replica as a supervised OS process.
 //!
 //! The process-substrate worker end of [`crate::substrate::proto`]: it
-//! connects to the supervisor's Unix socket, announces itself (`Hello`),
+//! connects to the supervisor's data listener — a Unix socket path, or
+//! `tcp:host:port` when a `ps-node` agent on another machine spawned it
+//! — announces itself (`Hello`),
 //! receives the pool's scheduling knobs (`HelloAck`), builds its engine
 //! (the supervisor's `Loading` phase), and then runs the *same*
 //! [`crate::backend::scheduler::Scheduler`] the thread substrate runs —
@@ -21,8 +23,6 @@
 //!   outlive its gateway).
 
 use std::collections::{BTreeMap, VecDeque};
-use std::io::Read;
-use std::os::unix::net::UnixStream;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::{Duration, Instant};
 
@@ -34,8 +34,8 @@ use crate::config::PoolConfig;
 use crate::gateway::pool::sched_config;
 use crate::models::Tier;
 use crate::substrate::proto::{
-    read_frame_blocking, write_frame, Frame, FrameReader, HeartbeatWire, PoolWire,
-    PROTO_VERSION,
+    connect_worker, read_frame_blocking, write_frame, Frame, FrameReader,
+    HeartbeatWire, PoolWire, Transport, PROTO_VERSION,
 };
 use crate::util::threadpool::Channel;
 
@@ -68,7 +68,8 @@ fn install_sigterm_handler() {}
 
 /// CLI surface of the `ps-replica` subcommand.
 pub struct WorkerOptions {
-    /// Unix socket path the supervisor is listening on.
+    /// Supervisor data listener: a Unix socket path, or `tcp:host:port`
+    /// (node-agent spawned, multi-host).
     pub socket: String,
     pub tier: Tier,
     /// Replica index within the tier (log labelling only).
@@ -110,15 +111,15 @@ where
 {
     install_sigterm_handler();
     let epoch = Instant::now();
-    let mut stream = UnixStream::connect(&opts.socket)
+    let mut stream: Box<dyn Transport> = connect_worker(&opts.socket)
         .with_context(|| format!("connecting to supervisor at {}", opts.socket))?;
-    write_frame(&mut stream, &Frame::Hello {
+    write_frame(&mut *stream, &Frame::Hello {
         version: PROTO_VERSION,
         pid: std::process::id() as u64,
         tier: opts.tier.index(),
     })?;
     let mut handshake = FrameReader::new();
-    let pool = match read_frame_blocking(&mut stream, &mut handshake)? {
+    let pool = match read_frame_blocking(&mut *stream, &mut handshake)? {
         Frame::HelloAck { version, pool } => {
             if !(1..=PROTO_VERSION).contains(&version) {
                 bail!("supervisor negotiated unsupported protocol v{version}");
@@ -167,13 +168,13 @@ where
     let engine = match build(opts.tier, opts.replica, &pool) {
         Ok(e) => e,
         Err(e) => {
-            let _ = write_frame(&mut stream, &Frame::Fatal { error: e.clone() });
+            let _ = write_frame(&mut *stream, &Frame::Fatal { error: e.clone() });
             bail!("engine build failed: {e}");
         }
     };
     let cfg = sched_config(&pool_from_wire(&pool), engine.max_batch());
     let mut sched: Scheduler<E, WireJob> = Scheduler::new(engine, cfg);
-    write_frame(&mut stream, &Frame::Ready)?;
+    write_frame(&mut *stream, &Frame::Ready)?;
 
     let mut incoming: VecDeque<(u64, String, usize)> = VecDeque::new();
     let mut cancels: BTreeMap<u64, CancelToken> = BTreeMap::new();
@@ -186,7 +187,7 @@ where
     loop {
         // 1. Control-plane frames.
         while let Some(f) = msgs.try_recv() {
-            handle_ctl(f, &mut stream, &mut incoming, &mut cancels, &mut draining)?;
+            handle_ctl(f, &mut *stream, &mut incoming, &mut cancels, &mut draining)?;
         }
         if msgs.is_closed() && msgs.is_empty() {
             bail!("supervisor connection lost");
@@ -203,12 +204,12 @@ where
                 drained_once = true;
                 for w in sched.drain_pending() {
                     cancels.remove(&w.id);
-                    write_frame(&mut stream, &Frame::Returned { job: w.id })?;
+                    write_frame(&mut *stream, &Frame::Returned { job: w.id })?;
                 }
             }
             for (id, _, _) in incoming.drain(..) {
                 cancels.remove(&id);
-                write_frame(&mut stream, &Frame::Returned { job: id })?;
+                write_frame(&mut *stream, &Frame::Returned { job: id })?;
             }
         }
 
@@ -221,7 +222,7 @@ where
                     .unwrap_or_default();
                 if cancel.is_cancelled() {
                     cancels.remove(&id);
-                    write_frame(&mut stream, &Frame::Cancelled { job: id })?;
+                    write_frame(&mut *stream, &Frame::Cancelled { job: id })?;
                     continue;
                 }
                 let est = crate::tokenizer::word_count(&prompt).max(1) + 1;
@@ -237,7 +238,7 @@ where
                     }
                     Admit::Failed(w, e) => {
                         cancels.remove(&w.id);
-                        write_frame(&mut stream, &Frame::JobFailed {
+                        write_frame(&mut *stream, &Frame::JobFailed {
                             job: w.id,
                             error: format!("admission failed: {e:#}"),
                         })?;
@@ -251,9 +252,9 @@ where
             if draining && incoming.is_empty() {
                 break;
             }
-            send_heartbeat(&mut stream, &mut sched, &mut last_hb, false)?;
+            send_heartbeat(&mut *stream, &mut sched, &mut last_hb, false)?;
             if let Some(f) = msgs.recv_timeout(Duration::from_millis(20)) {
-                handle_ctl(f, &mut stream, &mut incoming, &mut cancels, &mut draining)?;
+                handle_ctl(f, &mut *stream, &mut incoming, &mut cancels, &mut draining)?;
             }
             continue;
         }
@@ -267,7 +268,7 @@ where
         })) {
             Ok(t) => t,
             Err(_) => {
-                let _ = write_frame(&mut stream, &Frame::Fatal {
+                let _ = write_frame(&mut *stream, &Frame::Fatal {
                     error: "engine panicked".into(),
                 });
                 bail!("engine panicked");
@@ -286,12 +287,12 @@ where
                     }
                 });
                 for (job, tokens) in chunks {
-                    write_frame(&mut stream, &Frame::TokenChunk { job, tokens })?;
+                    write_frame(&mut *stream, &Frame::TokenChunk { job, tokens })?;
                 }
                 for f in tick.finished {
                     cancels.remove(&f.payload.id);
                     let tail = f.tokens[f.payload.sent.min(f.tokens.len())..].to_vec();
-                    write_frame(&mut stream, &Frame::Done {
+                    write_frame(&mut *stream, &Frame::Done {
                         job: f.payload.id,
                         prompt_tokens: f.prompt_tokens,
                         tokens: tail,
@@ -299,16 +300,16 @@ where
                 }
                 for w in tick.cancelled {
                     cancels.remove(&w.id);
-                    write_frame(&mut stream, &Frame::Cancelled { job: w.id })?;
+                    write_frame(&mut *stream, &Frame::Cancelled { job: w.id })?;
                 }
                 for (w, msg) in tick.failed {
                     cancels.remove(&w.id);
-                    write_frame(&mut stream, &Frame::JobFailed {
+                    write_frame(&mut *stream, &Frame::JobFailed {
                         job: w.id,
                         error: msg,
                     })?;
                 }
-                send_heartbeat(&mut stream, &mut sched, &mut last_hb, false)?;
+                send_heartbeat(&mut *stream, &mut sched, &mut last_hb, false)?;
                 if tick.stepped == 0 && tick.prefilled == 0 {
                     if let Some(wait) = tick.wait_s {
                         // Holding for batch-mates: sleep out the flush
@@ -317,7 +318,7 @@ where
                         if let Some(f) = msgs.recv_timeout(wait) {
                             handle_ctl(
                                 f,
-                                &mut stream,
+                                &mut *stream,
                                 &mut incoming,
                                 &mut cancels,
                                 &mut draining,
@@ -330,14 +331,14 @@ where
                 let msg = format!("engine step failed: {e:#}");
                 for w in sched.fail_all() {
                     cancels.remove(&w.id);
-                    write_frame(&mut stream, &Frame::JobFailed {
+                    write_frame(&mut *stream, &Frame::JobFailed {
                         job: w.id,
                         error: msg.clone(),
                     })?;
                 }
                 engine_errors += 1;
                 if engine_errors >= MAX_CONSECUTIVE_ENGINE_ERRORS {
-                    let _ = write_frame(&mut stream, &Frame::Fatal { error: msg });
+                    let _ = write_frame(&mut *stream, &Frame::Fatal { error: msg });
                     bail!("engine persistently failing");
                 }
             }
@@ -345,15 +346,15 @@ where
     }
 
     // Drained: final counters, then the graceful terminal frame.
-    send_heartbeat(&mut stream, &mut sched, &mut last_hb, true)?;
-    write_frame(&mut stream, &Frame::Gone)?;
+    send_heartbeat(&mut *stream, &mut sched, &mut last_hb, true)?;
+    write_frame(&mut *stream, &Frame::Gone)?;
     Ok(())
 }
 
 /// Apply one supervisor frame to the worker's control state.
 fn handle_ctl(
     frame: Frame,
-    stream: &mut UnixStream,
+    stream: &mut dyn Transport,
     incoming: &mut VecDeque<(u64, String, usize)>,
     cancels: &mut BTreeMap<u64, CancelToken>,
     draining: &mut bool,
@@ -382,7 +383,7 @@ fn handle_ctl(
 /// Ship cumulative scheduler counters (throttled; `force` for the final
 /// pre-exit flush so no tail counts are lost).
 fn send_heartbeat<E: StepEngine>(
-    stream: &mut UnixStream,
+    stream: &mut dyn Transport,
     sched: &mut Scheduler<E, WireJob>,
     last: &mut Instant,
     force: bool,

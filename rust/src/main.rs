@@ -7,6 +7,9 @@
 //! * `report` — regenerate the paper's headline tables quickly.
 //! * `ps-replica` — engine replica worker process (spawned by the
 //!   gateway when `pool.substrate = "process"`; not for manual use).
+//! * `ps-node` — node agent for multi-host serving: registers this
+//!   machine's capacity with a gateway and spawns `ps-replica` workers
+//!   on its orders (`pool.nodes.*`).
 
 use std::sync::Arc;
 
@@ -63,6 +66,9 @@ fn run() -> Result<()> {
         // leader spec, which would reject --socket).
         return cmd_worker(&rest);
     }
+    if command == "ps-node" {
+        return cmd_node(&rest);
+    }
     let args = spec().parse(&rest)?;
     if let Some(l) = args.opt("log-level") {
         if let Some(level) = logging::Level::parse(l) {
@@ -92,7 +98,7 @@ fn run() -> Result<()> {
         "report" => cmd_report(&cfg, &args),
         _ => {
             println!("{}", spec().usage());
-            println!("Commands: serve | route | sim | report | ps-replica");
+            println!("Commands: serve | route | sim | report | ps-replica | ps-node");
             Ok(())
         }
     }
@@ -155,6 +161,70 @@ fn cmd_worker(argv: &[String]) -> Result<()> {
         }
         e => Err(anyhow::anyhow!("unknown worker engine `{e}`")),
     }
+}
+
+/// `ps-node` — one machine's node agent for multi-host serving.
+///
+/// Registers the host's capacity with the gateway's node plane
+/// (`pool.nodes`) and spawns `ps-replica` workers when the supervisor
+/// places replicas here — the process-substrate analogue of a Kubernetes
+/// node running the kubelet. Either side may dial: `--listen` awaits the
+/// supervisor (its address goes in `pool.nodes.agents[]`), `--supervisor`
+/// dials the gateway's `pool.nodes.listen_addr`. The agent exits —
+/// killing its workers, like a node going down whole — when the control
+/// channel drops.
+fn cmd_node(argv: &[String]) -> Result<()> {
+    use pick_and_spin::substrate::nodes::{run_node_agent, NodeAgentOptions};
+
+    let nspec = Spec {
+        name: "pick-and-spin ps-node",
+        about: "node agent: hosts ps-replica workers for a remote gateway",
+        options: vec![
+            ("listen", true, "host:port to await the supervisor's dial-in"),
+            ("supervisor", true, "gateway node-plane address to dial"),
+            ("slots", true, "replica processes this node may host (default 4)"),
+            ("name", true, "node name in the gateway's registry"),
+            ("worker-bin", true, "worker binary (default: this binary)"),
+            ("log-dir", true, "per-worker log directory (default: inherit)"),
+            ("log-level", true, "error|warn|info|debug|trace"),
+        ],
+    };
+    let args = nspec.parse(argv)?;
+    if let Some(l) = args.opt("log-level") {
+        if let Some(level) = logging::Level::parse(l) {
+            logging::set_level(level);
+        }
+    }
+    let opts = NodeAgentOptions {
+        listen: args.opt("listen").map(|s| s.to_string()),
+        supervisor: args.opt("supervisor").map(|s| s.to_string()),
+        slots: args.opt_usize("slots", 4)?,
+        name: args
+            .opt("name")
+            .map(|s| s.to_string())
+            .unwrap_or_else(default_node_name),
+        worker_bin: args.opt("worker-bin").map(|s| s.to_string()),
+        log_dir: args.opt("log-dir").map(|s| s.to_string()),
+    };
+    run_node_agent(&opts)
+}
+
+/// Default `ps-node` name: `<hostname>-<pid>`. A bare pid collides the
+/// moment two agents run as PID 1 in containers (the normal multi-host
+/// deployment), and duplicate names conflate the per-node `/metrics`
+/// series — so the machine identity goes in front.
+fn default_node_name() -> String {
+    let host = std::env::var("HOSTNAME")
+        .ok()
+        .filter(|h| !h.trim().is_empty())
+        .or_else(|| {
+            std::fs::read_to_string("/etc/hostname")
+                .ok()
+                .map(|h| h.trim().to_string())
+                .filter(|h| !h.is_empty())
+        })
+        .unwrap_or_else(|| "node".to_string());
+    format!("{host}-{}", std::process::id())
 }
 
 fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {

@@ -24,6 +24,7 @@
 //! recovery manager's `Incident` accounting behave identically on the
 //! simulated and live paths.
 
+pub mod nodes;
 pub mod proto;
 pub mod remote;
 

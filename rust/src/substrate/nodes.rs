@@ -1,0 +1,835 @@
+//! Node plane — multi-host placement for the process substrate.
+//!
+//! The paper deploys each model tier as pods across a multi-node
+//! Kubernetes cluster; this module is that deployment shape for the
+//! process substrate. A **node agent** (`ps-node` subcommand) runs on
+//! each machine, registers its capacity with the supervisor over the
+//! same framed-JSON plane the workers speak ([`crate::substrate::proto`],
+//! over TCP), and spawns `ps-replica` worker processes on demand. The
+//! supervisor side is the [`NodeRegistry`]: it owns the registered-node
+//! table, dials static agents / accepts inbound registrations, watches
+//! each control channel for liveness, and answers the placement question
+//! (`place`) for [`crate::substrate::remote::ProcessSubstrate`].
+//!
+//! Control-channel shape (either side may have dialed; the agent always
+//! speaks first):
+//!
+//! ```text
+//! agent → NodeHello   { version, name, slots, pid }
+//! super → NodeHelloAck{ version }
+//! super → SpawnReplica{ seq, tier, index, port, args }*
+//! agent → SpawnFailed { seq, error }        (only on a failed fork)
+//! super → Ping / agent → Pong               (liveness)
+//! ```
+//!
+//! The *data* plane never touches the agent: each spawned worker dials
+//! the supervisor's per-replica TCP listener directly (the agent combines
+//! the `SpawnReplica.port` with the control channel's peer host), so a
+//! worker session is byte-identical to the single-host Unix-socket
+//! session — only the transport differs.
+//!
+//! Node death is a first-class incident: when a control channel drops
+//! (agent SIGKILLed, machine gone) or goes silent past the health
+//! deadline, the registry marks the node lost (`ps_node_lost_total`),
+//! and the substrate fails every replica it hosted — their dispatch
+//! ledgers requeue loss-free and the recovery path re-provisions on the
+//! surviving nodes.
+
+use std::collections::BTreeMap;
+use std::io::ErrorKind;
+use std::net::{TcpListener, TcpStream};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::{NodesConfig, Placement};
+use crate::models::Tier;
+use crate::substrate::proto::{
+    negotiate, read_frame_blocking, write_frame, Frame, FrameReader, Transport,
+    PROTO_VERSION,
+};
+
+/// How long an agent/supervisor gets to complete the node handshake.
+const NODE_HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+/// How long the supervisor retries dialing a static agent at startup.
+const DIAL_TIMEOUT: Duration = Duration::from_secs(10);
+/// Node reader poll granularity (also the Ping cadence).
+const NODE_READ_TIMEOUT: Duration = Duration::from_millis(250);
+/// A control channel silent past this is a lost node (EOF is detected
+/// immediately; this covers partitions where packets just stop).
+const NODE_SILENCE_DEADLINE: Duration = Duration::from_secs(5);
+/// Control-channel write timeout: a wedged-but-alive agent (frozen VM,
+/// full receive window) must fail its writes instead of hanging the
+/// writer thread past the silence deadline.
+const NODE_WRITE_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Identity of one registered node agent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NodeId(pub u64);
+
+/// Shared writer half of one node's control channel (per-node lock; see
+/// [`NodeEntry::writer`]).
+type NodeWriter = Arc<Mutex<Box<dyn Transport>>>;
+
+/// Point-in-time view of one node for metrics/introspection.
+#[derive(Debug, Clone)]
+pub struct NodeSnapshot {
+    pub name: String,
+    pub slots: usize,
+    /// Replicas currently placed on the node (all tiers).
+    pub hosted: usize,
+    pub alive: bool,
+}
+
+struct NodeEntry {
+    id: NodeId,
+    name: String,
+    slots: usize,
+    hosted: [usize; 3],
+    alive: bool,
+    /// Writer half of the control channel (SpawnReplica, Ping), behind
+    /// its own per-node lock so frame writes serialize without ever
+    /// holding the registry lock across a (timeout-bounded) network
+    /// write — one wedged agent must not freeze placement, accounting,
+    /// or the `/metrics` snapshot for every other node.
+    writer: NodeWriter,
+    /// Lock-free teardown handle onto the same stream: `shutdown` is
+    /// `&self` and interrupts a blocked peer, so `mark_dead` can sever
+    /// the channel even while a write holds the writer lock.
+    breaker: Box<dyn Transport>,
+}
+
+impl NodeEntry {
+    fn hosted_total(&self) -> usize {
+        self.hosted.iter().sum()
+    }
+}
+
+/// Supervisor-side registry of node agents. Shared (`Arc`) between the
+/// substrate (placement, per-replica accounting), the accept/dial
+/// threads (registration), the per-node watcher threads (liveness), and
+/// the gateway's `/metrics` snapshot.
+pub struct NodeRegistry {
+    inner: Mutex<Vec<NodeEntry>>,
+    next_id: AtomicU64,
+    /// Nodes that registered and were later lost (EOF, silence).
+    lost_total: AtomicU64,
+    closed: AtomicBool,
+    /// Bind host for per-replica data listeners (the host part of
+    /// `pool.nodes.listen_addr`, or the wildcard).
+    data_host: String,
+    /// SpawnReplica seqs the agent reported as failed, keyed for the
+    /// waiting pump thread to pick up.
+    failed_spawns: Mutex<BTreeMap<u64, String>>,
+}
+
+impl NodeRegistry {
+    /// Build the node plane from `pool.nodes`: `Ok(None)` when it is not
+    /// configured (single-host behavior, no threads started). Binds the
+    /// registration listener and synchronously dials every static agent
+    /// — an unreachable agent or unbindable listener is a startup error,
+    /// not a silently smaller fleet.
+    pub fn from_config(cfg: &NodesConfig) -> Result<Option<Arc<NodeRegistry>>, String> {
+        if !cfg.configured() {
+            return Ok(None);
+        }
+        // Per-replica data listeners must be reachable from the nodes:
+        // bind the host the operator chose for the node plane, or the
+        // wildcard when none was named (agents-dial-in mode) — workers
+        // dial the *control channel's* peer host + the advertised port,
+        // so the bind host only has to accept, never be routable itself.
+        // Brackets come off a `[v6]:port` form: the (host, port) tuple
+        // passed to `TcpListener::bind` wants the bare address.
+        let data_host = cfg
+            .listen_addr
+            .as_deref()
+            .and_then(|a| a.rsplit_once(':'))
+            .map(|(h, _)| h.trim_start_matches('[').trim_end_matches(']').to_string())
+            .filter(|h| !h.is_empty())
+            .unwrap_or_else(|| "0.0.0.0".to_string());
+        let reg = Arc::new(NodeRegistry {
+            inner: Mutex::new(Vec::new()),
+            next_id: AtomicU64::new(0),
+            lost_total: AtomicU64::new(0),
+            closed: AtomicBool::new(false),
+            data_host,
+            failed_spawns: Mutex::new(BTreeMap::new()),
+        });
+        if let Some(addr) = &cfg.listen_addr {
+            let listener = TcpListener::bind(addr)
+                .map_err(|e| format!("node plane: bind {addr}: {e}"))?;
+            listener
+                .set_nonblocking(true)
+                .map_err(|e| format!("node plane: listener nonblocking: {e}"))?;
+            let r = Arc::clone(&reg);
+            std::thread::Builder::new()
+                .name("ps-node-accept".into())
+                .spawn(move || accept_loop(listener, r))
+                .map_err(|e| format!("node plane: accept thread: {e}"))?;
+        }
+        for addr in &cfg.agents {
+            let stream = dial_agent(addr)
+                .map_err(|e| format!("node plane: agent {addr}: {e}"))?;
+            Arc::clone(&reg)
+                .admit_node(Box::new(stream))
+                .map_err(|e| format!("node plane: agent {addr}: {e:#}"))?;
+        }
+        Ok(Some(reg))
+    }
+
+    /// Host to bind per-replica data listeners on (reachable from the
+    /// registered nodes).
+    pub fn data_host(&self) -> &str {
+        &self.data_host
+    }
+
+    /// Run the registration handshake on a connected control channel and
+    /// start the node's watcher thread. Returns the new node's id.
+    /// (Takes the `Arc` so the watcher can hold the registry; call as
+    /// `Arc::clone(&reg).admit_node(...)`.)
+    pub fn admit_node(self: Arc<Self>, mut t: Box<dyn Transport>) -> Result<NodeId> {
+        t.set_read_timeout(Some(NODE_READ_TIMEOUT))
+            .map_err(|e| anyhow!("node channel read timeout: {e}"))?;
+        let mut reader = FrameReader::new();
+        let deadline = Instant::now() + NODE_HANDSHAKE_TIMEOUT;
+        let hello = loop {
+            match read_frame_blocking_once(&mut *t, &mut reader)? {
+                Some(f) => break f,
+                None => {
+                    if Instant::now() > deadline {
+                        bail!("node handshake timed out");
+                    }
+                }
+            }
+        };
+        let (name, slots) = match hello {
+            Frame::NodeHello { version, name, slots, .. } => {
+                let v = negotiate(PROTO_VERSION, version)
+                    .ok_or_else(|| anyhow!("no common protocol (node spoke {version})"))?;
+                write_frame(&mut *t, &Frame::NodeHelloAck { version: v })
+                    .map_err(|e| anyhow!("node hello ack: {e}"))?;
+                (name, slots.max(1))
+            }
+            f => bail!("expected NodeHello, got {f:?}"),
+        };
+        let id = NodeId(self.next_id.fetch_add(1, Ordering::Relaxed));
+        let writer = t
+            .try_clone()
+            .map_err(|e| anyhow!("node channel clone: {e}"))?;
+        writer
+            .set_write_timeout(Some(NODE_WRITE_TIMEOUT))
+            .map_err(|e| anyhow!("node channel write timeout: {e}"))?;
+        let breaker = t
+            .try_clone()
+            .map_err(|e| anyhow!("node channel clone: {e}"))?;
+        self.inner.lock().unwrap().push(NodeEntry {
+            id,
+            name: name.clone(),
+            slots,
+            hosted: [0; 3],
+            alive: true,
+            writer: Arc::new(Mutex::new(writer)),
+            breaker,
+        });
+        crate::info!("node plane: registered node `{name}` ({slots} slots)");
+        let reg = Arc::clone(&self);
+        std::thread::Builder::new()
+            .name(format!("ps-node-watch-{name}"))
+            .spawn(move || watch_node(reg, id, t, reader))
+            .map_err(|e| anyhow!("node watcher thread: {e}"))?;
+        Ok(id)
+    }
+
+    /// Choose a node for one replica of `tier`, or `None` when no alive
+    /// node has free slots (the caller then falls back to a local spawn
+    /// if *no* node is registered at all — see `any_alive`).
+    pub fn place(&self, tier: usize, policy: Placement) -> Option<NodeId> {
+        let inner = self.inner.lock().unwrap();
+        let mut candidates: Vec<&NodeEntry> = inner
+            .iter()
+            .filter(|n| n.alive && n.hosted_total() < n.slots)
+            .collect();
+        match policy {
+            Placement::Spread => {
+                candidates.sort_by_key(|n| {
+                    (n.hosted[tier.min(2)], n.hosted_total(), n.id)
+                });
+            }
+            Placement::Pack => candidates.sort_by_key(|n| n.id),
+        }
+        candidates.first().map(|n| n.id)
+    }
+
+    /// Any node registered and alive right now? (Placement returning
+    /// `None` with live nodes means "out of slots", which must not fall
+    /// back to a local spawn and silently overload the supervisor host.)
+    pub fn any_alive(&self) -> bool {
+        self.inner.lock().unwrap().iter().any(|n| n.alive)
+    }
+
+    pub fn alive(&self, id: NodeId) -> bool {
+        self.inner
+            .lock()
+            .unwrap()
+            .iter()
+            .any(|n| n.id == id && n.alive)
+    }
+
+    /// The node's writer handle + name, when it is registered and alive.
+    /// Snapshots under the registry lock; the network write itself then
+    /// happens under the per-node writer lock only.
+    fn writer_of(&self, id: NodeId) -> Result<(NodeWriter, String), String> {
+        let inner = self.inner.lock().unwrap();
+        let entry = inner
+            .iter()
+            .find(|n| n.id == id)
+            .ok_or_else(|| "node no longer registered".to_string())?;
+        if !entry.alive {
+            return Err(format!("node `{}` is lost", entry.name));
+        }
+        Ok((Arc::clone(&entry.writer), entry.name.clone()))
+    }
+
+    /// Ship a SpawnReplica order to the node. The caller then waits for
+    /// the worker to dial its data listener; a write failure marks the
+    /// node lost immediately.
+    pub fn spawn_on(
+        &self,
+        id: NodeId,
+        seq: u64,
+        tier: usize,
+        index: usize,
+        port: u16,
+        args: &[String],
+    ) -> Result<(), String> {
+        let (writer, name) = self.writer_of(id)?;
+        let frame = Frame::SpawnReplica {
+            seq,
+            tier,
+            index,
+            port,
+            args: args.to_vec(),
+        };
+        if let Err(e) = write_frame(&mut **writer.lock().unwrap(), &frame) {
+            self.mark_dead(id);
+            return Err(format!("node `{name}` control write: {e}"));
+        }
+        Ok(())
+    }
+
+    /// Account one replica placed on / released from a node. Release on
+    /// a lost node is a harmless no-op (the entry stays for metrics).
+    pub fn add_hosted(&self, id: NodeId, tier: usize) {
+        if let Some(n) = self.inner.lock().unwrap().iter_mut().find(|n| n.id == id) {
+            n.hosted[tier.min(2)] += 1;
+        }
+    }
+
+    pub fn release(&self, id: NodeId, tier: usize) {
+        if let Some(n) = self.inner.lock().unwrap().iter_mut().find(|n| n.id == id) {
+            let t = tier.min(2);
+            n.hosted[t] = n.hosted[t].saturating_sub(1);
+        }
+    }
+
+    /// Mark a node lost: count it, sever its control channel (the
+    /// watcher exits), and stop placing on it. Idempotent; a no-op once
+    /// the registry is shutting down (an orderly teardown severs every
+    /// channel and must not read as a fleet of lost nodes).
+    pub fn mark_dead(&self, id: NodeId) {
+        if self.closed.load(Ordering::Acquire) {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(n) = inner.iter_mut().find(|n| n.id == id) {
+            if n.alive {
+                n.alive = false;
+                // The breaker severs without taking the writer lock, so
+                // even a write blocked on a wedged agent gets unstuck.
+                n.breaker.shutdown();
+                self.lost_total.fetch_add(1, Ordering::Relaxed);
+                crate::warn_!("node plane: node `{}` lost", n.name);
+            }
+        }
+    }
+
+    /// A SpawnFailed answer for `seq`, if the agent sent one (consumed).
+    pub fn take_spawn_failure(&self, seq: u64) -> Option<String> {
+        self.failed_spawns.lock().unwrap().remove(&seq)
+    }
+
+    /// Liveness probe on the node's control channel. Serialized with
+    /// `spawn_on` through the per-node writer lock so two threads never
+    /// interleave partial frame writes on one stream.
+    fn ping(&self, id: NodeId, nonce: u64) -> bool {
+        match self.writer_of(id) {
+            Ok((writer, _)) => {
+                write_frame(&mut **writer.lock().unwrap(), &Frame::Ping { nonce })
+                    .is_ok()
+            }
+            Err(_) => false,
+        }
+    }
+
+    pub fn lost_total(&self) -> u64 {
+        self.lost_total.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> Vec<NodeSnapshot> {
+        self.inner
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|n| NodeSnapshot {
+                name: n.name.clone(),
+                slots: n.slots,
+                hosted: n.hosted_total(),
+                alive: n.alive,
+            })
+            .collect()
+    }
+
+    /// Tear the node plane down: sever every control channel (agents see
+    /// EOF, kill their workers, and exit) and stop the accept loop.
+    pub fn shutdown(&self) {
+        self.closed.store(true, Ordering::Release);
+        for n in self.inner.lock().unwrap().iter() {
+            n.breaker.shutdown();
+        }
+    }
+}
+
+/// One non-blocking step of a handshake read: `Ok(None)` on timeout.
+fn read_frame_blocking_once(
+    t: &mut dyn Transport,
+    reader: &mut FrameReader,
+) -> Result<Option<Frame>> {
+    if let Some(f) = reader.next()? {
+        return Ok(Some(f));
+    }
+    let mut buf = [0u8; 4096];
+    match t.read(&mut buf) {
+        Ok(0) => bail!("connection closed during node handshake"),
+        Ok(n) => {
+            reader.extend(&buf[..n]);
+            reader.next()
+        }
+        Err(e)
+            if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+        {
+            Ok(None)
+        }
+        Err(e) => Err(e.into()),
+    }
+}
+
+/// Dial a static agent with retries (it may still be starting).
+fn dial_agent(addr: &str) -> std::io::Result<TcpStream> {
+    let deadline = Instant::now() + DIAL_TIMEOUT;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                let _ = s.set_nodelay(true);
+                return Ok(s);
+            }
+            Err(e) => {
+                if Instant::now() > deadline {
+                    return Err(e);
+                }
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+}
+
+/// Accept inbound `ps-node` registrations until the registry closes.
+fn accept_loop(listener: TcpListener, reg: Arc<NodeRegistry>) {
+    while !reg.closed.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let _ = stream.set_nodelay(true);
+                if let Err(e) = Arc::clone(&reg).admit_node(Box::new(stream)) {
+                    crate::error!("node plane: registration failed: {e:#}");
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(e) => {
+                crate::error!("node plane: accept: {e}");
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+}
+
+/// Per-node watcher: drains control frames (Pong, SpawnFailed), pings on
+/// idle, and declares the node lost on EOF, wire desync, or silence past
+/// the deadline.
+fn watch_node(
+    reg: Arc<NodeRegistry>,
+    id: NodeId,
+    mut t: Box<dyn Transport>,
+    mut reader: FrameReader,
+) {
+    let mut buf = [0u8; 4096];
+    let mut last_frame = Instant::now();
+    loop {
+        if reg.closed.load(Ordering::Acquire) {
+            return;
+        }
+        match t.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => {
+                reader.extend(&buf[..n]);
+                loop {
+                    match reader.next() {
+                        Ok(Some(f)) => {
+                            last_frame = Instant::now();
+                            if let Frame::SpawnFailed { seq, error } = f {
+                                reg.failed_spawns.lock().unwrap().insert(seq, error);
+                            }
+                            // Pong and anything else just proves liveness.
+                        }
+                        Ok(None) => break,
+                        Err(_) => {
+                            reg.mark_dead(id);
+                            return;
+                        }
+                    }
+                }
+            }
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock
+                    || e.kind() == ErrorKind::TimedOut =>
+            {
+                // Idle: probe. A failed write is a dead channel.
+                let nonce = last_frame.elapsed().as_micros() as u64;
+                if !reg.ping(id, nonce) {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+        if last_frame.elapsed() > NODE_SILENCE_DEADLINE {
+            break;
+        }
+    }
+    reg.mark_dead(id);
+}
+
+// ---------------------------------------------------------------------------
+// Agent side: the `ps-node` process
+// ---------------------------------------------------------------------------
+
+/// CLI surface of the `ps-node` subcommand.
+pub struct NodeAgentOptions {
+    /// `host:port` to listen on for the supervisor's dial-in
+    /// (`pool.nodes.agents[]` entry). Mutually exclusive with
+    /// `supervisor`.
+    pub listen: Option<String>,
+    /// Supervisor `host:port` to dial (`pool.nodes.listen_addr`).
+    pub supervisor: Option<String>,
+    /// Replica processes this node may host.
+    pub slots: usize,
+    /// Display name in the supervisor's registry and `/metrics`.
+    pub name: String,
+    /// Worker binary (`None` = this binary in `ps-replica` mode).
+    pub worker_bin: Option<String>,
+    /// Per-worker stdout/stderr log directory (`None` = inherit).
+    pub log_dir: Option<String>,
+}
+
+/// Run one node agent to completion: register with the supervisor,
+/// spawn `ps-replica` workers on demand, and exit (killing the workers)
+/// when the control channel drops — a node must never outlive its
+/// supervisor's view of it.
+pub fn run_node_agent(opts: &NodeAgentOptions) -> Result<()> {
+    let (mut ctl, sup_host): (Box<dyn Transport>, String) = match
+        (&opts.listen, &opts.supervisor)
+    {
+        (Some(addr), _) => {
+            let listener = TcpListener::bind(addr)
+                .with_context(|| format!("ps-node: bind {addr}"))?;
+            crate::info!("ps-node `{}`: awaiting supervisor on {addr}", opts.name);
+            let (stream, peer) = listener.accept().context("ps-node: accept")?;
+            let _ = stream.set_nodelay(true);
+            // IPv6 hosts must be bracketed to recombine with a port.
+            let host = match peer.ip() {
+                std::net::IpAddr::V6(v6) => format!("[{v6}]"),
+                v4 => v4.to_string(),
+            };
+            (Box::new(stream), host)
+        }
+        (None, Some(addr)) => {
+            let stream =
+                dial_agent(addr).with_context(|| format!("ps-node: dial {addr}"))?;
+            let host = addr
+                .rsplit_once(':')
+                .map(|(h, _)| h.to_string())
+                .unwrap_or_else(|| addr.clone());
+            (Box::new(stream), host)
+        }
+        (None, None) => bail!("ps-node requires --listen or --supervisor"),
+    };
+    write_frame(&mut *ctl, &Frame::NodeHello {
+        version: PROTO_VERSION,
+        name: opts.name.clone(),
+        slots: opts.slots.max(1),
+        pid: std::process::id() as u64,
+    })?;
+    let mut reader = FrameReader::new();
+    match read_frame_blocking(&mut *ctl, &mut reader)? {
+        Frame::NodeHelloAck { version } => {
+            if !(1..=PROTO_VERSION).contains(&version) {
+                bail!("supervisor negotiated unsupported protocol v{version}");
+            }
+        }
+        f => bail!("expected NodeHelloAck, got {f:?}"),
+    }
+    ctl.set_read_timeout(Some(NODE_READ_TIMEOUT))?;
+    let worker_bin = match &opts.worker_bin {
+        Some(b) => b.clone(),
+        None => std::env::current_exe()
+            .context("ps-node: resolving worker binary")?
+            .to_string_lossy()
+            .into_owned(),
+    };
+    let mut children: Vec<Child> = Vec::new();
+    let mut buf = [0u8; 4096];
+    // Supervisor-silence deadline, mirroring the supervisor's own watch
+    // on the agent: the supervisor pings every NODE_READ_TIMEOUT, so a
+    // channel with no frames for NODE_SILENCE_DEADLINE means the
+    // supervisor host died without a FIN — the agent must not keep its
+    // workers running against a gateway that no longer exists.
+    let mut last_frame = Instant::now();
+    let exit_reason = loop {
+        if last_frame.elapsed() > NODE_SILENCE_DEADLINE {
+            break "supervisor silent past deadline";
+        }
+        match ctl.read(&mut buf) {
+            Ok(0) => break "supervisor connection closed",
+            Ok(n) => {
+                last_frame = Instant::now();
+                reader.extend(&buf[..n]);
+                loop {
+                    let frame = match reader.next() {
+                        Ok(Some(f)) => f,
+                        Ok(None) => break,
+                        Err(_) => return agent_exit(children, "wire desync"),
+                    };
+                    match frame {
+                        Frame::SpawnReplica { seq, tier, index, port, args } => {
+                            match spawn_worker(
+                                &worker_bin,
+                                &args,
+                                &sup_host,
+                                port,
+                                tier,
+                                index,
+                                seq,
+                                &opts.log_dir,
+                            ) {
+                                Ok(child) => children.push(child),
+                                Err(e) => {
+                                    let _ = write_frame(
+                                        &mut *ctl,
+                                        &Frame::SpawnFailed {
+                                            seq,
+                                            error: format!("{e:#}"),
+                                        },
+                                    );
+                                }
+                            }
+                        }
+                        Frame::Ping { nonce } => {
+                            if write_frame(&mut *ctl, &Frame::Pong { nonce }).is_err()
+                            {
+                                // Every exit must go through agent_exit:
+                                // a node that loses its supervisor takes
+                                // its workers down with it, never
+                                // orphans them.
+                                return agent_exit(
+                                    children,
+                                    "control channel write failed",
+                                );
+                            }
+                        }
+                        f => {
+                            crate::warn_!("ps-node: unexpected frame {f:?}");
+                        }
+                    }
+                }
+            }
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock
+                    || e.kind() == ErrorKind::TimedOut =>
+            {
+                // Idle: reap workers that exited on their own (drained
+                // replicas) so the process table stays clean.
+                children.retain_mut(|c| !matches!(c.try_wait(), Ok(Some(_))));
+            }
+            Err(e) => {
+                crate::error!("ps-node: control read: {e}");
+                break "control channel error";
+            }
+        }
+    };
+    agent_exit(children, exit_reason)
+}
+
+/// Kill and reap every hosted worker, then exit the agent loop. Modeling
+/// node death as a unit: when the node (agent) goes, its replicas go.
+fn agent_exit(mut children: Vec<Child>, reason: &str) -> Result<()> {
+    crate::info!("ps-node: exiting ({reason}); stopping {} workers", children.len());
+    for c in children.iter_mut() {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+    Ok(())
+}
+
+/// Fork one `ps-replica` worker that dials the supervisor's data
+/// listener at `sup_host:port`.
+#[allow(clippy::too_many_arguments)]
+fn spawn_worker(
+    bin: &str,
+    args: &[String],
+    sup_host: &str,
+    port: u16,
+    tier: usize,
+    index: usize,
+    seq: u64,
+    log_dir: &Option<String>,
+) -> Result<Child> {
+    let tier_name = Tier::ALL[tier.min(2)].name();
+    let mut cmd = Command::new(bin);
+    cmd.args(args)
+        .arg("--socket")
+        .arg(format!("tcp:{sup_host}:{port}"))
+        .arg("--tier")
+        .arg(tier_name)
+        .arg("--replica")
+        .arg(index.to_string())
+        .stdin(Stdio::null());
+    match crate::substrate::remote::worker_log(log_dir, tier_name, index, seq) {
+        Some(f) => {
+            if let Ok(err) = f.try_clone() {
+                cmd.stdout(f).stderr(err);
+            }
+        }
+        None => {
+            cmd.stdout(Stdio::null());
+            // stderr inherits: worker diagnostics reach the agent log.
+        }
+    }
+    cmd.spawn().with_context(|| format!("spawning {bin}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::chaos;
+
+    /// Drive the registration handshake and a spawn order over the
+    /// deterministic in-memory transport — no sockets, no processes.
+    #[test]
+    fn registry_admits_places_and_loses_nodes() {
+        let reg = Arc::new(NodeRegistry {
+            inner: Mutex::new(Vec::new()),
+            next_id: AtomicU64::new(0),
+            lost_total: AtomicU64::new(0),
+            closed: AtomicBool::new(false),
+            data_host: "127.0.0.1".into(),
+            failed_spawns: Mutex::new(BTreeMap::new()),
+        });
+        let mut agents = Vec::new();
+        for (i, seed) in [(0u64, 11u64), (1, 22)] {
+            let (sup_end, mut agent_end) = chaos::pair(seed);
+            // Fake agent: hello, read ack, then answer frames.
+            let name = format!("n{i}");
+            let h = std::thread::spawn(move || {
+                write_frame(&mut agent_end, &Frame::NodeHello {
+                    version: PROTO_VERSION,
+                    name,
+                    slots: 2,
+                    pid: 1,
+                })
+                .unwrap();
+                let mut r = FrameReader::new();
+                match read_frame_blocking(&mut agent_end, &mut r).unwrap() {
+                    Frame::NodeHelloAck { version } => assert_eq!(version, 1),
+                    f => panic!("expected ack, got {f:?}"),
+                }
+                // Receive frames until severed; fail any spawn order.
+                loop {
+                    match read_frame_blocking(&mut agent_end, &mut r) {
+                        Ok(Frame::SpawnReplica { seq, .. }) => {
+                            write_frame(&mut agent_end, &Frame::SpawnFailed {
+                                seq,
+                                error: "test agent".into(),
+                            })
+                            .unwrap();
+                        }
+                        Ok(Frame::Ping { nonce }) => {
+                            write_frame(&mut agent_end, &Frame::Pong { nonce })
+                                .unwrap();
+                        }
+                        Ok(_) => {}
+                        Err(_) => return,
+                    }
+                }
+            });
+            let id = Arc::clone(&reg).admit_node(Box::new(sup_end)).unwrap();
+            agents.push((id, h));
+        }
+        assert!(reg.any_alive());
+        assert_eq!(reg.snapshot().len(), 2);
+
+        // Spread placement: two replicas of one tier land on different
+        // nodes; a third (slots permitting) balances totals.
+        let a = reg.place(0, Placement::Spread).unwrap();
+        reg.add_hosted(a, 0);
+        let b = reg.place(0, Placement::Spread).unwrap();
+        assert_ne!(a, b, "anti-affinity must spread a tier across nodes");
+        reg.add_hosted(b, 0);
+        // Pack placement fills the first node (it has a free slot).
+        let c = reg.place(1, Placement::Pack).unwrap();
+        assert_eq!(c, NodeId(0));
+
+        // Spawn orders flow; the fake agent answers SpawnFailed, which
+        // lands in the failure table under the right seq.
+        reg.spawn_on(a, 77, 0, 0, 4000, &["ps-replica".into()]).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            if let Some(e) = reg.take_spawn_failure(77) {
+                assert!(e.contains("test agent"));
+                break;
+            }
+            assert!(Instant::now() < deadline, "SpawnFailed never surfaced");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+
+        // Capacity: fill node 0 completely; placement must avoid it.
+        reg.add_hosted(NodeId(0), 1);
+        let d = reg.place(2, Placement::Pack).unwrap();
+        assert_eq!(d, NodeId(1), "a full node must not be placed on");
+
+        // Node loss: severing the control channel marks it lost and
+        // bumps the counter; placement skips it; releases are no-ops.
+        reg.mark_dead(NodeId(1));
+        assert!(!reg.alive(NodeId(1)));
+        assert_eq!(reg.lost_total(), 1);
+        assert!(reg.place(0, Placement::Spread).is_none(), "all nodes full/dead");
+        assert!(reg.spawn_on(NodeId(1), 1, 0, 0, 1, &[]).is_err());
+        reg.release(NodeId(1), 0);
+        reg.shutdown();
+        for (_, h) in agents {
+            h.join().unwrap();
+        }
+        assert_eq!(reg.lost_total(), 1, "shutdown is not node loss");
+    }
+}

@@ -35,7 +35,10 @@
 //! version in existence that means an exact match is required, but the
 //! handshake shape lets future versions degrade instead of breaking.
 
-use std::io::{self, Read, Write};
+use std::io;
+use std::net::TcpStream;
+use std::os::unix::net::UnixStream;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -43,6 +46,113 @@ use crate::backend::batcher::N_DECODE_BATCHES;
 use crate::backend::kv_cache::PrefixCacheConfig;
 use crate::config::PoolConfig;
 use crate::util::json::Json;
+
+/// One end of a supervisor↔worker (or supervisor↔node-agent) channel.
+/// The framing above ([`FrameReader`], [`write_frame`]) is byte-oriented
+/// and transport-agnostic; this trait is the only place a concrete
+/// stream type appears, so the same pump/worker loops run over a Unix
+/// socket (single host), TCP (multi-host), or the in-memory chaos
+/// transport (`testkit::chaos`) that fragments and severs deterministically
+/// in tests.
+pub trait Transport: Send {
+    /// Read up to `buf.len()` bytes; `Ok(0)` means the peer hung up.
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize>;
+    /// Write all of `buf` (frames are written in one call so concurrent
+    /// writers on clones never interleave a frame).
+    fn write_all(&mut self, buf: &[u8]) -> io::Result<()>;
+    /// Timeout for subsequent reads (`None` = block indefinitely).
+    fn set_read_timeout(&self, t: Option<Duration>) -> io::Result<()>;
+    /// Timeout for subsequent writes (`None` = block indefinitely). A
+    /// wedged-but-alive peer (frozen VM, full receive window) must not
+    /// block a control thread forever.
+    fn set_write_timeout(&self, t: Option<Duration>) -> io::Result<()>;
+    /// A second handle onto the same stream (reader/writer split).
+    fn try_clone(&self) -> io::Result<Box<dyn Transport>>;
+    /// Tear the connection down in both directions; blocked reads on any
+    /// clone return. Used for remote "kill": severing the data plane is
+    /// the supervisor's only lever on a worker it cannot signal.
+    fn shutdown(&self);
+    /// Human-readable peer description for logs.
+    fn peer(&self) -> String;
+}
+
+impl Transport for UnixStream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        io::Read::read(self, buf)
+    }
+
+    fn write_all(&mut self, buf: &[u8]) -> io::Result<()> {
+        io::Write::write_all(self, buf)
+    }
+
+    fn set_read_timeout(&self, t: Option<Duration>) -> io::Result<()> {
+        UnixStream::set_read_timeout(self, t)
+    }
+
+    fn set_write_timeout(&self, t: Option<Duration>) -> io::Result<()> {
+        UnixStream::set_write_timeout(self, t)
+    }
+
+    fn try_clone(&self) -> io::Result<Box<dyn Transport>> {
+        Ok(Box::new(UnixStream::try_clone(self)?))
+    }
+
+    fn shutdown(&self) {
+        let _ = UnixStream::shutdown(self, std::net::Shutdown::Both);
+    }
+
+    fn peer(&self) -> String {
+        "unix".to_string()
+    }
+}
+
+impl Transport for TcpStream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        io::Read::read(self, buf)
+    }
+
+    fn write_all(&mut self, buf: &[u8]) -> io::Result<()> {
+        io::Write::write_all(self, buf)
+    }
+
+    fn set_read_timeout(&self, t: Option<Duration>) -> io::Result<()> {
+        TcpStream::set_read_timeout(self, t)
+    }
+
+    fn set_write_timeout(&self, t: Option<Duration>) -> io::Result<()> {
+        TcpStream::set_write_timeout(self, t)
+    }
+
+    fn try_clone(&self) -> io::Result<Box<dyn Transport>> {
+        Ok(Box::new(TcpStream::try_clone(self)?))
+    }
+
+    fn shutdown(&self) {
+        let _ = TcpStream::shutdown(self, std::net::Shutdown::Both);
+    }
+
+    fn peer(&self) -> String {
+        self.peer_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "tcp".to_string())
+    }
+}
+
+/// Worker-side connect: `tcp:host:port` dials TCP (multi-host data
+/// plane, Nagle off — frames are latency-sensitive), anything else is a
+/// Unix socket path (same-host supervisor).
+pub fn connect_worker(addr: &str) -> Result<Box<dyn Transport>> {
+    if let Some(hostport) = addr.strip_prefix("tcp:") {
+        let s = TcpStream::connect(hostport)
+            .map_err(|e| anyhow!("tcp connect {hostport}: {e}"))?;
+        let _ = s.set_nodelay(true);
+        Ok(Box::new(s))
+    } else {
+        let s = UnixStream::connect(addr)
+            .map_err(|e| anyhow!("unix connect {addr}: {e}"))?;
+        Ok(Box::new(s))
+    }
+}
 
 /// Newest protocol version this build speaks.
 pub const PROTO_VERSION: u64 = 1;
@@ -156,6 +266,30 @@ pub enum Frame {
     Cancelled { job: u64 },
     /// W2S: graceful drain handed this unstarted job back for requeue.
     Returned { job: u64 },
+    // ---- node plane (supervisor ↔ ps-node agent) -------------------------
+    /// Agent→super: first frame on a node control channel — register this
+    /// node's capacity (`slots` = replica processes it may host) and
+    /// display name with the supervisor's placement layer.
+    NodeHello { version: u64, name: String, slots: usize, pid: u64 },
+    /// Super→agent: negotiated version; the node is registered.
+    NodeHelloAck { version: u64 },
+    /// Super→agent: spawn one `ps-replica` worker. `seq` is the
+    /// supervisor-unique replica sequence (echoed by `SpawnFailed`),
+    /// `port` the supervisor's per-replica TCP data listener (the agent
+    /// combines it with the control channel's peer host), `args` the
+    /// leading worker argv (subcommand + engine flags) — the supervisor's
+    /// `pool.*` stays authoritative on every host.
+    SpawnReplica {
+        seq: u64,
+        tier: usize,
+        index: usize,
+        port: u16,
+        args: Vec<String>,
+    },
+    /// Agent→super: the spawn for `seq` failed (bad binary, fork error);
+    /// the supervisor fails that replica instead of waiting out the
+    /// connect deadline.
+    SpawnFailed { seq: u64, error: String },
     // ---- control / health ------------------------------------------------
     /// W2S: liveness + cumulative counters.
     Heartbeat(HeartbeatWire),
@@ -184,6 +318,10 @@ impl Frame {
             Frame::Cancel { .. } => "cancel",
             Frame::Cancelled { .. } => "cancelled",
             Frame::Returned { .. } => "returned",
+            Frame::NodeHello { .. } => "node_hello",
+            Frame::NodeHelloAck { .. } => "node_hello_ack",
+            Frame::SpawnReplica { .. } => "spawn",
+            Frame::SpawnFailed { .. } => "spawn_failed",
             Frame::Heartbeat(_) => "heartbeat",
             Frame::Ping { .. } => "ping",
             Frame::Pong { .. } => "pong",
@@ -227,6 +365,29 @@ impl Frame {
             | Frame::Cancelled { job }
             | Frame::Returned { job } => {
                 pairs.push(("job", Json::num(*job as f64)));
+            }
+            Frame::NodeHello { version, name, slots, pid } => {
+                pairs.push(("version", Json::num(*version as f64)));
+                pairs.push(("name", Json::str(name.clone())));
+                pairs.push(("slots", Json::num(*slots as f64)));
+                pairs.push(("pid", Json::num(*pid as f64)));
+            }
+            Frame::NodeHelloAck { version } => {
+                pairs.push(("version", Json::num(*version as f64)));
+            }
+            Frame::SpawnReplica { seq, tier, index, port, args } => {
+                pairs.push(("seq", Json::num(*seq as f64)));
+                pairs.push(("tier", Json::num(*tier as f64)));
+                pairs.push(("index", Json::num(*index as f64)));
+                pairs.push(("port", Json::num(*port as f64)));
+                pairs.push((
+                    "args",
+                    Json::arr(args.iter().map(|a| Json::str(a.clone()))),
+                ));
+            }
+            Frame::SpawnFailed { seq, error } => {
+                pairs.push(("seq", Json::num(*seq as f64)));
+                pairs.push(("error", Json::str(error.clone())));
             }
             Frame::Heartbeat(hb) => {
                 pairs.push(("inflight", Json::num(hb.inflight as f64)));
@@ -288,6 +449,34 @@ impl Frame {
             "cancel" => Frame::Cancel { job: job(j)? },
             "cancelled" => Frame::Cancelled { job: job(j)? },
             "returned" => Frame::Returned { job: job(j)? },
+            "node_hello" => Frame::NodeHello {
+                version: j.rusize("version")? as u64,
+                name: j.rstr("name")?.to_string(),
+                slots: j.rusize("slots")?,
+                pid: j.rusize("pid")? as u64,
+            },
+            "node_hello_ack" => Frame::NodeHelloAck {
+                version: j.rusize("version")? as u64,
+            },
+            "spawn" => Frame::SpawnReplica {
+                seq: j.rusize("seq")? as u64,
+                tier: j.rusize("tier")?,
+                index: j.rusize("index")?,
+                port: j.rusize("port")? as u16,
+                args: j
+                    .rarr("args")?
+                    .iter()
+                    .map(|a| {
+                        a.as_str()
+                            .map(|s| s.to_string())
+                            .ok_or_else(|| anyhow!("spawn arg is not a string"))
+                    })
+                    .collect::<Result<Vec<String>>>()?,
+            },
+            "spawn_failed" => Frame::SpawnFailed {
+                seq: j.rusize("seq")? as u64,
+                error: j.rstr("error")?.to_string(),
+            },
             "heartbeat" => {
                 let mut batch_counts = [0u64; N_DECODE_BATCHES];
                 if let Some(a) = j.get("batch_counts").and_then(Json::as_arr) {
@@ -384,16 +573,18 @@ impl FrameReader {
     }
 }
 
-/// Write one frame to a stream (single `write_all`, so frames from one
-/// thread are never interleaved).
-pub fn write_frame(w: &mut impl Write, frame: &Frame) -> io::Result<()> {
-    w.write_all(&frame.encode())
+/// Write one frame to a transport (single `write_all`, so frames from
+/// one thread are never interleaved).
+pub fn write_frame(t: &mut dyn Transport, frame: &Frame) -> io::Result<()> {
+    t.write_all(&frame.encode())
 }
 
 /// Blocking read of a single frame with `reader` as carry-over buffer —
 /// used for the handshake, where exactly one frame is expected next.
+/// Read timeouts are retried (the transport may have one configured);
+/// EOF and hard errors surface.
 pub fn read_frame_blocking(
-    r: &mut impl Read,
+    t: &mut dyn Transport,
     reader: &mut FrameReader,
 ) -> Result<Frame> {
     let mut chunk = [0u8; 4096];
@@ -401,11 +592,14 @@ pub fn read_frame_blocking(
         if let Some(f) = reader.next()? {
             return Ok(f);
         }
-        let n = r.read(&mut chunk)?;
-        if n == 0 {
-            bail!("connection closed mid-handshake");
+        match t.read(&mut chunk) {
+            Ok(0) => bail!("connection closed mid-handshake"),
+            Ok(n) => reader.extend(&chunk[..n]),
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut => {}
+            Err(e) => return Err(e.into()),
         }
-        reader.extend(&chunk[..n]);
     }
 }
 
@@ -471,6 +665,21 @@ mod tests {
         roundtrip(Frame::Terminate);
         roundtrip(Frame::Gone);
         roundtrip(Frame::Fatal { error: "engine died".into() });
+        roundtrip(Frame::NodeHello {
+            version: 1,
+            name: "node-a".into(),
+            slots: 4,
+            pid: 999,
+        });
+        roundtrip(Frame::NodeHelloAck { version: 1 });
+        roundtrip(Frame::SpawnReplica {
+            seq: 17,
+            tier: 1,
+            index: 0,
+            port: 45123,
+            args: vec!["ps-replica".into(), "--engine".into(), "sim".into()],
+        });
+        roundtrip(Frame::SpawnFailed { seq: 17, error: "no such binary".into() });
     }
 
     #[test]

@@ -34,10 +34,22 @@
 //!   real `kill -9`); `cell.stop` sends `Terminate` for a graceful drain
 //!   (unstarted jobs come back as `Returned` frames and requeue); zombies
 //!   are reaped (`kill` + `wait`) on every pump exit path.
+//!
+//! With `pool.nodes` configured the same supervisor goes **multi-host**:
+//! replicas place onto registered `ps-node` agents
+//! ([`crate::substrate::nodes`]) by the configured policy (least-loaded
+//! spread with tier anti-affinity, or pack), the worker dials back over
+//! TCP, and the pump session is byte-identical — only the
+//! [`Transport`] underneath differs. A remote worker cannot be
+//! signalled, so "kill" severs its data channel instead (the worker
+//! exits when its supervisor link drops); a *node* lost whole takes
+//! every hosted replica with it, each requeueing its ledger loss-free
+//! before the recovery path re-provisions on the survivors.
 
 use std::collections::BTreeMap;
-use std::io::{ErrorKind, Read};
-use std::os::unix::net::{UnixListener, UnixStream};
+use std::io::{self, ErrorKind};
+use std::net::TcpListener;
+use std::os::unix::net::UnixListener;
 use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -53,8 +65,9 @@ use crate::gateway::pool::{
 use crate::gateway::{GatewayMetrics, LiveResponse};
 use crate::models::{BackendKind, ModelSpec, Tier};
 use crate::registry::{Registry, ServiceId};
+use crate::substrate::nodes::{NodeId, NodeRegistry};
 use crate::substrate::proto::{
-    negotiate, write_frame, Frame, FrameReader, HeartbeatWire, PoolWire,
+    negotiate, write_frame, Frame, FrameReader, HeartbeatWire, PoolWire, Transport,
     MAX_FRAME_BYTES, PROTO_VERSION,
 };
 use crate::substrate::{ReplicaId, ReplicaState, Substrate, SubstrateEvent};
@@ -110,6 +123,8 @@ struct ProcReplica {
     created_s: f64,
     /// Last state surfaced through `poll` (transition edge detection).
     reported: ReplicaState,
+    /// Node hosting this replica's worker (`None` = local child).
+    node: Option<NodeId>,
 }
 
 /// The process-substrate supervisor. Owned by the router thread, driven
@@ -130,6 +145,9 @@ pub struct ProcessSubstrate {
     /// Measured spawn→Ready seconds per tier (Alg. 2's cold-start
     /// estimate for scaled-to-zero tiers).
     cold_start_ema: [Ema; 3],
+    /// Multi-host node plane (`pool.nodes`); `None` = every replica is a
+    /// local child process.
+    nodes: Option<Arc<NodeRegistry>>,
 }
 
 impl ProcessSubstrate {
@@ -139,6 +157,7 @@ impl ProcessSubstrate {
         metrics: Arc<GatewayMetrics>,
         spec: WorkerSpec,
         registry: &Registry,
+        nodes: Option<Arc<NodeRegistry>>,
     ) -> ProcessSubstrate {
         let svc_tier: Vec<usize> =
             registry.services.iter().map(|s| s.spec.tier.index()).collect();
@@ -162,11 +181,15 @@ impl ProcessSubstrate {
             next_id: 0,
             next_index: [0; 3],
             cold_start_ema: std::array::from_fn(|_| Ema::new(0.3)),
+            nodes,
         }
     }
 
     /// A self-contained supervisor (own queues and metrics) — what the
     /// substrate conformance suite drives directly, without a gateway.
+    /// Brings up the node plane from `pool.nodes` when configured
+    /// (panicking on an unreachable agent: a standalone harness wants
+    /// misconfiguration loud, the gateway path returns it as an error).
     pub fn standalone(
         pool: PoolConfig,
         registry: &Registry,
@@ -174,7 +197,15 @@ impl ProcessSubstrate {
     ) -> ProcessSubstrate {
         let shared = Arc::new(PoolShared::new(Instant::now(), pool.queue_capacity));
         let metrics = Arc::new(GatewayMetrics::default());
-        ProcessSubstrate::new(shared, pool, metrics, spec, registry)
+        let nodes = NodeRegistry::from_config(&pool.nodes)
+            .expect("standalone process substrate: node plane");
+        ProcessSubstrate::new(shared, pool, metrics, spec, registry, nodes)
+    }
+
+    /// The node registry when `pool.nodes` is configured (placement
+    /// introspection, per-node metrics).
+    pub fn nodes(&self) -> Option<Arc<NodeRegistry>> {
+        self.nodes.as_ref().map(Arc::clone)
     }
 
     /// The clock epoch replica timestamps are measured against.
@@ -228,7 +259,8 @@ impl ProcessSubstrate {
     }
 
     /// Close the tier queues, drain every worker, and join the pumps
-    /// (each pump kills and reaps its child on the way out). Idempotent.
+    /// (each pump kills and reaps its child on the way out), then tear
+    /// the node plane down (agents see EOF and exit). Idempotent.
     pub fn shutdown(&mut self) {
         for q in &self.shared.queues {
             q.close();
@@ -239,6 +271,9 @@ impl ProcessSubstrate {
         self.meta.clear();
         for c in &self.shared.cells {
             c.lock().unwrap().clear();
+        }
+        if let Some(reg) = &self.nodes {
+            reg.shutdown();
         }
     }
 
@@ -279,30 +314,73 @@ impl Substrate for ProcessSubstrate {
         let tier = Tier::ALL[ti];
         let index = self.next_index[ti];
         let seq = SOCK_SEQ.fetch_add(1, Ordering::Relaxed);
-        let sock = std::env::temp_dir().join(format!(
-            "ps-and-spin-{}-{seq}.sock",
-            std::process::id(),
-        ));
-        let _ = std::fs::remove_file(&sock);
-        // Bind before spawning so the worker's connect never races the
-        // listener.
-        let listener = match UnixListener::bind(&sock) {
-            Ok(l) => l,
-            Err(e) => {
-                crate::error!("process substrate: bind {}: {e}", sock.display());
-                return None;
+        // Placement: a registered-and-alive node with free slots hosts
+        // the worker over TCP; with live nodes all at capacity the tier
+        // cannot grow (never silently overload the supervisor host); with
+        // no node plane (or every node lost) spawn a local child —
+        // exactly the single-host behavior.
+        let placed = match &self.nodes {
+            Some(reg) => match reg.place(ti, self.pool.nodes.placement) {
+                Some(nid) => Some((Arc::clone(reg), nid)),
+                None if reg.any_alive() => return None,
+                None => None,
+            },
+            None => None,
+        };
+        // Bind the data listener before spawning so the worker's connect
+        // never races it: a Unix socket for a local child, a TCP port on
+        // the node-reachable host for a placed worker.
+        let (acceptor, socket_path, tcp_port) = match &placed {
+            None => {
+                let sock = std::env::temp_dir().join(format!(
+                    "ps-and-spin-{}-{seq}.sock",
+                    std::process::id(),
+                ));
+                let _ = std::fs::remove_file(&sock);
+                match UnixListener::bind(&sock) {
+                    Ok(l) => (Acceptor::Unix(l), Some(sock), 0u16),
+                    Err(e) => {
+                        crate::error!(
+                            "process substrate: bind {}: {e}",
+                            sock.display()
+                        );
+                        return None;
+                    }
+                }
+            }
+            Some((reg, _)) => {
+                match TcpListener::bind((reg.data_host(), 0)) {
+                    Ok(l) => {
+                        let port = match l.local_addr() {
+                            Ok(a) => a.port(),
+                            Err(e) => {
+                                crate::error!("process substrate: local_addr: {e}");
+                                return None;
+                            }
+                        };
+                        (Acceptor::Tcp(l), None, port)
+                    }
+                    Err(e) => {
+                        crate::error!(
+                            "process substrate: bind {}:0: {e}",
+                            reg.data_host()
+                        );
+                        return None;
+                    }
+                }
             }
         };
         let cell = Arc::new(ReplicaCell::new());
         // The pump thread starts first and blocks on this channel for
-        // the worker `Child`: if the process spawn fails the channel is
-        // closed instead, and if the *thread* spawn fails no process has
-        // been started yet — neither order can leak an unreaped worker.
-        let child_chan: Channel<Child> = Channel::bounded(1);
+        // its worker link (local `Child` or remote placement): if the
+        // spawn fails the channel is closed instead, and if the *thread*
+        // spawn fails nothing has been started yet — neither order can
+        // leak an unreaped worker or an unaccounted node slot.
+        let link_chan: Channel<WorkerLink> = Channel::bounded(1);
         let handle = {
             let ctx = PumpStart {
-                listener,
-                socket_path: sock.clone(),
+                listener: acceptor,
+                socket_path: socket_path.clone(),
                 cell: Arc::clone(&cell),
                 queue: self.shared.queues[ti].clone(),
                 metrics: Arc::clone(&self.metrics),
@@ -310,58 +388,91 @@ impl Substrate for ProcessSubstrate {
                 pool: self.pool.clone(),
                 tier: ti,
             };
-            let rx = child_chan.clone();
+            let rx = link_chan.clone();
             match std::thread::Builder::new()
                 .name(format!("ps-pump-{}-{index}", tier.name()))
                 .spawn(move || match rx.recv() {
-                    Some(child) => pump_loop(ctx.with_child(child)),
+                    Some(link) => pump_loop(ctx.with_link(link)),
                     None => {
                         // Worker spawn failed; nothing to supervise.
                         *ctx.cell.error.lock().unwrap() =
                             Some("worker spawn failed".into());
                         ctx.cell.state.store(S_FAILED, Ordering::Release);
-                        let _ = std::fs::remove_file(&ctx.socket_path);
+                        if let Some(p) = &ctx.socket_path {
+                            let _ = std::fs::remove_file(p);
+                        }
                     }
                 }) {
                 Ok(h) => h,
                 Err(e) => {
                     crate::error!("process substrate: pump thread: {e}");
-                    let _ = std::fs::remove_file(&sock);
+                    if let Some(p) = &socket_path {
+                        let _ = std::fs::remove_file(p);
+                    }
                     return None;
                 }
             }
         };
-        let mut cmd = Command::new(&self.spec.bin);
-        cmd.args(&self.spec.args)
-            .arg("--socket")
-            .arg(&sock)
-            .arg("--tier")
-            .arg(tier.name())
-            .arg("--replica")
-            .arg(index.to_string())
-            .stdin(Stdio::null());
-        match worker_log(&self.spec.log_dir, tier, index, seq) {
-            Some(f) => {
-                if let Ok(err) = f.try_clone() {
-                    cmd.stdout(f).stderr(err);
+        let node_id = match &placed {
+            None => {
+                let sock = socket_path.as_ref().expect("local spawn has a socket");
+                let mut cmd = Command::new(&self.spec.bin);
+                cmd.args(&self.spec.args)
+                    .arg("--socket")
+                    .arg(sock)
+                    .arg("--tier")
+                    .arg(tier.name())
+                    .arg("--replica")
+                    .arg(index.to_string())
+                    .stdin(Stdio::null());
+                match worker_log(&self.spec.log_dir, tier.name(), index, seq) {
+                    Some(f) => {
+                        if let Ok(err) = f.try_clone() {
+                            cmd.stdout(f).stderr(err);
+                        }
+                    }
+                    None => {
+                        cmd.stdout(Stdio::null());
+                        // stderr inherits: worker diagnostics reach the
+                        // gateway log.
+                    }
+                }
+                match cmd.spawn() {
+                    Ok(child) => {
+                        let _ = link_chan.send(WorkerLink::Local(child));
+                        None
+                    }
+                    Err(e) => {
+                        crate::error!(
+                            "process substrate: spawn {}: {e}",
+                            self.spec.bin
+                        );
+                        link_chan.close();
+                        let _ = handle.join();
+                        return None;
+                    }
                 }
             }
-            None => {
-                cmd.stdout(Stdio::null());
-                // stderr inherits: worker diagnostics reach the gateway log.
+            Some((reg, nid)) => {
+                match reg.spawn_on(*nid, seq, ti, index, tcp_port, &self.spec.args) {
+                    Ok(()) => {
+                        reg.add_hosted(*nid, ti);
+                        let _ = link_chan.send(WorkerLink::Remote {
+                            node: *nid,
+                            seq,
+                            reg: Arc::clone(reg),
+                        });
+                        Some(*nid)
+                    }
+                    Err(e) => {
+                        crate::error!("process substrate: place on node: {e}");
+                        link_chan.close();
+                        let _ = handle.join();
+                        return None;
+                    }
+                }
             }
-        }
-        match cmd.spawn() {
-            Ok(child) => {
-                let _ = child_chan.send(child);
-            }
-            Err(e) => {
-                crate::error!("process substrate: spawn {}: {e}", self.spec.bin);
-                child_chan.close();
-                let _ = handle.join();
-                return None;
-            }
-        }
+        };
         let id = ReplicaId(self.next_id);
         self.next_id += 1;
         self.next_index[ti] += 1;
@@ -372,6 +483,7 @@ impl Substrate for ProcessSubstrate {
             cell,
             created_s: now_s,
             reported: ReplicaState::Scheduled,
+            node: node_id,
         });
         self.pumps.insert(id, handle);
         Some(id)
@@ -403,6 +515,21 @@ impl Substrate for ProcessSubstrate {
 
     fn poll(&mut self, now_s: f64) -> Vec<SubstrateEvent> {
         let mut out = Vec::new();
+        // Node death is collective: every replica hosted on a lost node
+        // dies with it. Setting the kill flag makes its pump sever the
+        // data channel, requeue the dispatch ledger loss-free, and
+        // publish Failed — the same single event path an individual
+        // worker death takes, so recovery re-provisions (on a surviving
+        // node, by placement) without a special case.
+        if let Some(reg) = &self.nodes {
+            for m in self.meta.values() {
+                if let Some(nid) = m.node {
+                    if !reg.alive(nid) {
+                        m.cell.kill.store(true, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
         let ids: Vec<ReplicaId> = self.meta.keys().copied().collect();
         for id in ids {
             let (tier, service, created_s, reported, cell) = {
@@ -495,22 +622,23 @@ impl Substrate for ProcessSubstrate {
     }
 }
 
-/// Per-worker log file. The name carries the supervisor pid and the
-/// process-wide socket sequence: per-tier indices restart at 0 for every
-/// substrate instance (parallel tests, say), and a bare
-/// `ps-worker-small-0.log` would be truncated out from under a worker
-/// another instance is still supervising.
-fn worker_log(
+/// Per-worker log file, shared by the local supervisor and the node
+/// agent (`substrate::nodes`) so logs collect identically wherever the
+/// worker runs. The name carries the spawning process's pid and the
+/// supervisor's replica sequence: per-tier indices restart at 0 for
+/// every substrate instance (parallel tests, agents sharing a log
+/// directory), and a bare `ps-worker-small-0.log` would be truncated
+/// out from under a worker another instance is still supervising.
+pub(crate) fn worker_log(
     dir: &Option<String>,
-    tier: Tier,
+    tier: &str,
     index: usize,
     seq: u64,
 ) -> Option<std::fs::File> {
     let dir = dir.as_ref()?;
     std::fs::create_dir_all(dir).ok()?;
     std::fs::File::create(format!(
-        "{dir}/ps-worker-{}-{index}-{}-{seq}.log",
-        tier.name(),
+        "{dir}/ps-worker-{tier}-{index}-{}-{seq}.log",
         std::process::id(),
     ))
     .ok()
@@ -520,11 +648,96 @@ fn worker_log(
 // The per-replica pump: supervisor end of the RPC data plane
 // ---------------------------------------------------------------------------
 
-/// Everything the pump thread needs before the worker `Child` exists
-/// (the child arrives over a channel so a failed spawn can never leak).
+/// The per-replica data listener the worker dials back to: a Unix
+/// socket for a local child, a TCP port for a node-placed worker. The
+/// accepted stream is configured identically (blocking + short read
+/// timeout) and boxed — the session below never sees the difference.
+enum Acceptor {
+    Unix(UnixListener),
+    Tcp(TcpListener),
+}
+
+impl Acceptor {
+    fn set_nonblocking(&self, nb: bool) -> io::Result<()> {
+        match self {
+            Acceptor::Unix(l) => l.set_nonblocking(nb),
+            Acceptor::Tcp(l) => l.set_nonblocking(nb),
+        }
+    }
+
+    fn accept(&self) -> io::Result<Box<dyn Transport>> {
+        match self {
+            Acceptor::Unix(l) => {
+                let (s, _) = l.accept()?;
+                s.set_nonblocking(false)?;
+                s.set_read_timeout(Some(READ_TIMEOUT))?;
+                Ok(Box::new(s))
+            }
+            Acceptor::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                s.set_nonblocking(false)?;
+                let _ = s.set_nodelay(true);
+                s.set_read_timeout(Some(READ_TIMEOUT))?;
+                Ok(Box::new(s))
+            }
+        }
+    }
+}
+
+/// What the pump supervises: a local child it can signal and reap, or a
+/// worker on a remote node it can only reach through the data channel
+/// and the node's accounting.
+enum WorkerLink {
+    Local(Child),
+    Remote {
+        node: NodeId,
+        /// SpawnReplica sequence (keys the agent's SpawnFailed answer).
+        seq: u64,
+        reg: Arc<NodeRegistry>,
+    },
+}
+
+impl WorkerLink {
+    /// Abrupt kill: SIGKILL a local child; a remote worker cannot be
+    /// signalled, so sever its data channel — the worker exits the
+    /// moment its supervisor link drops, and our next read sees EOF.
+    fn kill(&mut self, stream: &dyn Transport) {
+        match self {
+            WorkerLink::Local(child) => {
+                let _ = child.kill();
+            }
+            WorkerLink::Remote { .. } => stream.shutdown(),
+        }
+    }
+
+    /// Pre-connect probe: did the worker already die (local exit) or
+    /// fail to start (agent SpawnFailed / node lost)?
+    fn connect_aborted(&mut self) -> Option<String> {
+        match self {
+            WorkerLink::Local(child) => match child.try_wait() {
+                Ok(Some(status)) => {
+                    Some(format!("worker exited before connecting ({status})"))
+                }
+                _ => None,
+            },
+            WorkerLink::Remote { node, seq, reg } => {
+                if let Some(e) = reg.take_spawn_failure(*seq) {
+                    return Some(format!("node agent could not spawn worker: {e}"));
+                }
+                if !reg.alive(*node) {
+                    return Some("node lost before worker connected".into());
+                }
+                None
+            }
+        }
+    }
+}
+
+/// Everything the pump thread needs before its worker link exists (the
+/// link arrives over a channel so a failed spawn can never leak).
 struct PumpStart {
-    listener: UnixListener,
-    socket_path: PathBuf,
+    listener: Acceptor,
+    socket_path: Option<PathBuf>,
     cell: Arc<ReplicaCell>,
     queue: Channel<TierJob>,
     metrics: Arc<GatewayMetrics>,
@@ -534,11 +747,11 @@ struct PumpStart {
 }
 
 impl PumpStart {
-    fn with_child(self, child: Child) -> PumpCtx {
+    fn with_link(self, link: WorkerLink) -> PumpCtx {
         PumpCtx {
             listener: self.listener,
             socket_path: self.socket_path,
-            child,
+            link,
             cell: self.cell,
             queue: self.queue,
             metrics: self.metrics,
@@ -550,9 +763,9 @@ impl PumpStart {
 }
 
 struct PumpCtx {
-    listener: UnixListener,
-    socket_path: PathBuf,
-    child: Child,
+    listener: Acceptor,
+    socket_path: Option<PathBuf>,
+    link: WorkerLink,
     cell: Arc<ReplicaCell>,
     queue: Channel<TierJob>,
     metrics: Arc<GatewayMetrics>,
@@ -581,21 +794,32 @@ fn pump_loop(mut ctx: PumpCtx) {
             ctx.cell.state.store(S_FAILED, Ordering::Release);
         }
     }
-    // Reap unconditionally: kill is a no-op on an exited worker, and
-    // wait() collects the zombie either way.
-    let _ = ctx.child.kill();
-    let _ = ctx.child.wait();
-    let _ = std::fs::remove_file(&ctx.socket_path);
+    match &mut ctx.link {
+        // Reap unconditionally: kill is a no-op on an exited worker, and
+        // wait() collects the zombie either way.
+        WorkerLink::Local(child) => {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+        // The node agent reaps its own children; here only the slot
+        // accounting is returned so placement sees the free capacity.
+        WorkerLink::Remote { node, reg, .. } => {
+            reg.release(*node, ctx.tier);
+        }
+    }
+    if let Some(p) = &ctx.socket_path {
+        let _ = std::fs::remove_file(p);
+    }
 }
 
 /// Run one worker session end to end. `Ok` means a terminal state was
 /// already published (Gone or Failed); `Err` is an abnormal end whose
 /// message lands in the cell.
 fn pump_session(ctx: &mut PumpCtx) -> Result<(), String> {
-    let mut stream = accept_worker(ctx)?;
+    let mut stream: Box<dyn Transport> = accept_worker(ctx)?;
     let mut reader = FrameReader::new();
     // Handshake: Hello → negotiate → HelloAck with the pool knobs.
-    let hello = read_deadline(&mut stream, &mut reader, CONNECT_TIMEOUT, ctx)?;
+    let hello = read_deadline(&mut *stream, &mut reader, CONNECT_TIMEOUT, ctx)?;
     let version = match hello {
         Frame::Hello { version, tier, .. } => {
             if tier != ctx.tier {
@@ -611,7 +835,7 @@ fn pump_session(ctx: &mut PumpCtx) -> Result<(), String> {
         f => return Err(format!("expected Hello, got {f:?}")),
     };
     send(
-        &mut stream,
+        &mut *stream,
         &Frame::HelloAck { version, pool: PoolWire::from_pool(&ctx.pool) },
         ctx,
     )?;
@@ -766,11 +990,13 @@ fn pump_session(ctx: &mut PumpCtx) -> Result<(), String> {
             }
         }
 
-        // 2. Fault injection / stall verdicts: a true kill -9.
+        // 2. Fault injection / stall verdicts: a true kill -9 for a
+        // local child; for a node-hosted worker the data channel is
+        // severed instead (the worker exits on supervisor loss). Either
+        // way the EOF read above surfaces the death and requeues.
         if ctx.cell.kill.load(Ordering::Relaxed) && !killed {
             killed = true;
-            let _ = ctx.child.kill();
-            // The EOF read above surfaces the death and requeues.
+            ctx.link.kill(&*stream);
         }
 
         // 3. Graceful drain: scale-down terminate, or pool shutdown once
@@ -781,12 +1007,12 @@ fn pump_session(ctx: &mut PumpCtx) -> Result<(), String> {
         if (stop || shutdown_done) && !draining {
             draining = true;
             drain_deadline = Instant::now() + DRAIN_TIMEOUT;
-            if let Err(e) = send(&mut stream, &Frame::Terminate, ctx) {
+            if let Err(e) = send(&mut *stream, &Frame::Terminate, ctx) {
                 return end_dead(ctx, inflight, &e);
             }
         }
         if draining && Instant::now() > drain_deadline {
-            let _ = ctx.child.kill();
+            ctx.link.kill(&*stream);
             return end_dead(ctx, inflight, "graceful drain timed out");
         }
 
@@ -826,7 +1052,7 @@ fn pump_session(ctx: &mut PumpCtx) -> Result<(), String> {
                     )));
                     continue;
                 }
-                if let Err(e) = send_bytes(&mut stream, &bytes, ctx) {
+                if let Err(e) = send_bytes(&mut *stream, &bytes, ctx) {
                     // A dead socket mid-dispatch: this job never reached
                     // the worker — back to the queue with the rest.
                     requeue_to(&ctx.queue, &ctx.metrics, job, "replica failed");
@@ -852,7 +1078,7 @@ fn pump_session(ctx: &mut PumpCtx) -> Result<(), String> {
             }
         }
         for id in cancels {
-            if let Err(e) = send(&mut stream, &Frame::Cancel { job: id }, ctx) {
+            if let Err(e) = send(&mut *stream, &Frame::Cancel { job: id }, ctx) {
                 return end_dead(ctx, inflight, &e);
             }
         }
@@ -861,32 +1087,24 @@ fn pump_session(ctx: &mut PumpCtx) -> Result<(), String> {
         if last_ping.elapsed() >= PING_PERIOD {
             last_ping = Instant::now();
             let nonce = ctx.epoch.elapsed().as_micros() as u64;
-            if let Err(e) = send(&mut stream, &Frame::Ping { nonce }, ctx) {
+            if let Err(e) = send(&mut *stream, &Frame::Ping { nonce }, ctx) {
                 return end_dead(ctx, inflight, &e);
             }
         }
     }
 }
 
-fn accept_worker(ctx: &mut PumpCtx) -> Result<UnixStream, String> {
+fn accept_worker(ctx: &mut PumpCtx) -> Result<Box<dyn Transport>, String> {
     ctx.listener
         .set_nonblocking(true)
         .map_err(|e| format!("listener nonblocking: {e}"))?;
     let deadline = Instant::now() + CONNECT_TIMEOUT;
     loop {
         match ctx.listener.accept() {
-            Ok((stream, _)) => {
-                stream
-                    .set_nonblocking(false)
-                    .map_err(|e| format!("stream blocking: {e}"))?;
-                stream
-                    .set_read_timeout(Some(READ_TIMEOUT))
-                    .map_err(|e| format!("read timeout: {e}"))?;
-                return Ok(stream);
-            }
+            Ok(stream) => return Ok(stream),
             Err(e) if e.kind() == ErrorKind::WouldBlock => {
-                if let Ok(Some(status)) = ctx.child.try_wait() {
-                    return Err(format!("worker exited before connecting ({status})"));
+                if let Some(reason) = ctx.link.connect_aborted() {
+                    return Err(reason);
                 }
                 if Instant::now() > deadline {
                     return Err("worker never connected".into());
@@ -900,7 +1118,7 @@ fn accept_worker(ctx: &mut PumpCtx) -> Result<UnixStream, String> {
 
 /// Blocking read of one frame with an overall deadline (handshake).
 fn read_deadline(
-    stream: &mut UnixStream,
+    stream: &mut dyn Transport,
     reader: &mut FrameReader,
     timeout: Duration,
     ctx: &PumpCtx,
@@ -930,7 +1148,7 @@ fn read_deadline(
     }
 }
 
-fn send(stream: &mut UnixStream, frame: &Frame, ctx: &PumpCtx) -> Result<(), String> {
+fn send(stream: &mut dyn Transport, frame: &Frame, ctx: &PumpCtx) -> Result<(), String> {
     write_frame(stream, frame).map_err(|e| format!("socket write: {e}"))?;
     ctx.metrics.rpc_frames_sent.fetch_add(1, Ordering::Relaxed);
     Ok(())
@@ -938,8 +1156,11 @@ fn send(stream: &mut UnixStream, frame: &Frame, ctx: &PumpCtx) -> Result<(), Str
 
 /// [`send`] for a pre-encoded frame (the dispatch path encodes first to
 /// size-check against [`MAX_FRAME_BYTES`]).
-fn send_bytes(stream: &mut UnixStream, bytes: &[u8], ctx: &PumpCtx) -> Result<(), String> {
-    use std::io::Write;
+fn send_bytes(
+    stream: &mut dyn Transport,
+    bytes: &[u8],
+    ctx: &PumpCtx,
+) -> Result<(), String> {
     stream
         .write_all(bytes)
         .map_err(|e| format!("socket write: {e}"))?;

@@ -247,13 +247,21 @@ impl Histogram {
 /// Prometheus-style text exposition of a metrics snapshot (the gateway's
 /// `/metrics` endpoint). Monotonic series (`*_total`, per the Prometheus
 /// naming convention) are typed as counters; everything else is a gauge.
+/// Labeled series (`name{label="v"}`) share one `# TYPE` line per metric
+/// family — the family name is everything before the label braces.
 pub fn export_prometheus(
     metrics: &[(String, f64)],
 ) -> String {
     let mut out = String::new();
+    let mut typed: Vec<&str> = Vec::new();
     for (name, value) in metrics {
-        let kind = if name.ends_with("_total") { "counter" } else { "gauge" };
-        out.push_str(&format!("# TYPE {name} {kind}\n{name} {value}\n"));
+        let family = name.split('{').next().unwrap_or(name);
+        if !typed.contains(&family) {
+            typed.push(family);
+            let kind = if family.ends_with("_total") { "counter" } else { "gauge" };
+            out.push_str(&format!("# TYPE {family} {kind}\n"));
+        }
+        out.push_str(&format!("{name} {value}\n"));
     }
     out
 }
@@ -319,6 +327,23 @@ mod tests {
         assert!(s.contains("ps_requests_total 42"));
         assert!(s.contains("# TYPE ps_requests_total counter"));
         assert!(s.contains("# TYPE ps_queue_depth gauge"));
+    }
+
+    #[test]
+    fn prometheus_labels_share_one_type_line_per_family() {
+        let s = export_prometheus(&[
+            ("ps_node_replicas{node=\"a\"}".into(), 2.0),
+            ("ps_node_replicas{node=\"b\"}".into(), 1.0),
+            ("ps_node_lost_total".into(), 0.0),
+        ]);
+        assert_eq!(
+            s.matches("# TYPE ps_node_replicas gauge").count(),
+            1,
+            "one TYPE line per family:\n{s}"
+        );
+        assert!(s.contains("ps_node_replicas{node=\"a\"} 2"));
+        assert!(s.contains("ps_node_replicas{node=\"b\"} 1"));
+        assert!(s.contains("# TYPE ps_node_lost_total counter"));
     }
 
     #[test]

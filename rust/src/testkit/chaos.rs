@@ -1,0 +1,369 @@
+//! Deterministic fault-injecting in-memory [`Transport`] — distributed
+//! failures as unit tests, not flaky sleeps.
+//!
+//! [`pair`] returns two connected endpoints backed by in-process byte
+//! queues. The adversarial behaviors real networks exhibit are injected
+//! deterministically:
+//!
+//! * **fragmentation** — every `read` returns a prefix whose length is
+//!   drawn from the endpoint's seeded RNG, so frame boundaries land at
+//!   adversarial byte offsets (a 4-byte length prefix split 1+3, a JSON
+//!   body split mid-escape, …) and every seed explores a different
+//!   interleaving, reproducibly;
+//! * **coalescing** — writes append to one queue, so consecutive frames
+//!   arrive glued together and a single read can span several;
+//! * **latency** — [`ChaosEnd::hold`] parks subsequent writes in a side
+//!   buffer (the peer sees nothing) until [`ChaosEnd::release`] delivers
+//!   them: in-flight-but-undelivered bytes, no wall-clock sleeps;
+//! * **partition** — [`ChaosEnd::sever`] cuts the link *dropping any
+//!   held bytes*, so a stream can end mid-frame exactly like a SIGKILLed
+//!   peer's socket; readers see EOF (`Ok(0)`), writers `BrokenPipe`.
+//!
+//! Blocking reads park on a condvar and wake on delivery/sever — tests
+//! need no sleeps in their assertion paths. With a read timeout of
+//! `Duration::ZERO` a read on an empty link returns `WouldBlock`
+//! immediately, which is how pump-shaped loops are driven one step at a
+//! time.
+
+use std::collections::VecDeque;
+use std::io;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::substrate::proto::Transport;
+use crate::util::rng::SplitMix64;
+
+struct PipeState {
+    buf: VecDeque<u8>,
+    severed: bool,
+}
+
+/// One direction of the link: delivered bytes + the wakeup for readers.
+struct Pipe {
+    state: Mutex<PipeState>,
+    ready: Condvar,
+}
+
+impl Pipe {
+    fn new() -> Arc<Pipe> {
+        Arc::new(Pipe {
+            state: Mutex::new(PipeState { buf: VecDeque::new(), severed: false }),
+            ready: Condvar::new(),
+        })
+    }
+
+    fn deliver(&self, bytes: &[u8]) -> io::Result<()> {
+        let mut st = self.state.lock().unwrap();
+        if st.severed {
+            return Err(io::Error::new(io::ErrorKind::BrokenPipe, "link severed"));
+        }
+        st.buf.extend(bytes.iter().copied());
+        self.ready.notify_all();
+        Ok(())
+    }
+
+    fn sever(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.severed = true;
+        self.ready.notify_all();
+    }
+}
+
+/// One endpoint of a chaos link. Clones (`Transport::try_clone`) share
+/// the endpoint's queues, RNG, and hold buffer, mirroring a cloned
+/// socket handle.
+pub struct ChaosEnd {
+    /// Peer → us.
+    rx: Arc<Pipe>,
+    /// Us → peer.
+    tx: Arc<Pipe>,
+    rng: Arc<Mutex<SplitMix64>>,
+    held: Arc<Mutex<Vec<u8>>>,
+    holding: Arc<AtomicBool>,
+    read_timeout: Arc<Mutex<Option<Duration>>>,
+}
+
+/// A connected pair of endpoints; reads on each side fragment per its
+/// own stream from the shared seed.
+pub fn pair(seed: u64) -> (ChaosEnd, ChaosEnd) {
+    let ab = Pipe::new();
+    let ba = Pipe::new();
+    let mk = |rx: &Arc<Pipe>, tx: &Arc<Pipe>, salt: u64| ChaosEnd {
+        rx: Arc::clone(rx),
+        tx: Arc::clone(tx),
+        rng: Arc::new(Mutex::new(SplitMix64::new(seed ^ salt))),
+        held: Arc::new(Mutex::new(Vec::new())),
+        holding: Arc::new(AtomicBool::new(false)),
+        read_timeout: Arc::new(Mutex::new(None)),
+    };
+    (mk(&ba, &ab, 0xA), mk(&ab, &ba, 0xB))
+}
+
+impl ChaosEnd {
+    /// Cut the link in both directions, dropping any held bytes — the
+    /// peer may observe EOF mid-frame.
+    pub fn sever(&self) {
+        self.held.lock().unwrap().clear();
+        self.holding.store(false, Ordering::Relaxed);
+        self.rx.sever();
+        self.tx.sever();
+    }
+
+    /// Park subsequent writes (latency injection): the peer sees nothing
+    /// until [`Self::release`].
+    pub fn hold(&self) {
+        self.holding.store(true, Ordering::Relaxed);
+    }
+
+    /// Deliver everything held and resume immediate delivery.
+    pub fn release(&self) -> io::Result<()> {
+        self.holding.store(false, Ordering::Relaxed);
+        let held: Vec<u8> = std::mem::take(&mut *self.held.lock().unwrap());
+        if held.is_empty() {
+            Ok(())
+        } else {
+            self.tx.deliver(&held)
+        }
+    }
+
+    /// Bytes currently parked by [`Self::hold`].
+    pub fn held_len(&self) -> usize {
+        self.held.lock().unwrap().len()
+    }
+}
+
+impl Transport for ChaosEnd {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        if buf.is_empty() {
+            return Ok(0);
+        }
+        let timeout = *self.read_timeout.lock().unwrap();
+        let mut st = self.rx.state.lock().unwrap();
+        loop {
+            if !st.buf.is_empty() {
+                // Adversarial fragmentation: a nonempty prefix of what's
+                // available, length drawn from the seeded RNG.
+                let avail = st.buf.len().min(buf.len());
+                let n = 1 + self.rng.lock().unwrap().below(avail as u64) as usize;
+                for slot in buf.iter_mut().take(n) {
+                    *slot = st.buf.pop_front().unwrap();
+                }
+                return Ok(n);
+            }
+            if st.severed {
+                return Ok(0);
+            }
+            match timeout {
+                None => st = self.rx.ready.wait(st).unwrap(),
+                Some(d) => {
+                    let (guard, out) = self.rx.ready.wait_timeout(st, d).unwrap();
+                    st = guard;
+                    if out.timed_out() && st.buf.is_empty() && !st.severed {
+                        return Err(io::Error::new(
+                            io::ErrorKind::WouldBlock,
+                            "chaos read timeout",
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    fn write_all(&mut self, buf: &[u8]) -> io::Result<()> {
+        if self.holding.load(Ordering::Relaxed) {
+            // Latency injection: severed-ness is checked on release —
+            // bytes "in flight" when the link cuts are simply lost,
+            // like any unacked TCP send.
+            self.held.lock().unwrap().extend_from_slice(buf);
+            return Ok(());
+        }
+        self.tx.deliver(buf)
+    }
+
+    fn set_read_timeout(&self, t: Option<Duration>) -> io::Result<()> {
+        *self.read_timeout.lock().unwrap() = t;
+        Ok(())
+    }
+
+    fn set_write_timeout(&self, _t: Option<Duration>) -> io::Result<()> {
+        // Chaos writes never block (delivery is an in-memory append).
+        Ok(())
+    }
+
+    fn try_clone(&self) -> io::Result<Box<dyn Transport>> {
+        Ok(Box::new(ChaosEnd {
+            rx: Arc::clone(&self.rx),
+            tx: Arc::clone(&self.tx),
+            rng: Arc::clone(&self.rng),
+            held: Arc::clone(&self.held),
+            holding: Arc::clone(&self.holding),
+            read_timeout: Arc::clone(&self.read_timeout),
+        }))
+    }
+
+    fn shutdown(&self) {
+        self.sever();
+    }
+
+    fn peer(&self) -> String {
+        "chaos".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::proto::{write_frame, Frame, FrameReader};
+
+    fn drain(end: &mut ChaosEnd, reader: &mut FrameReader) -> Vec<Frame> {
+        // One deterministic step at a time: zero timeout, so an empty
+        // link returns WouldBlock instead of parking the test.
+        end.set_read_timeout(Some(Duration::ZERO)).unwrap();
+        let mut out = Vec::new();
+        let mut buf = [0u8; 64];
+        loop {
+            match end.read(&mut buf) {
+                Ok(0) => break,
+                Ok(n) => {
+                    reader.extend(&buf[..n]);
+                    while let Some(f) = reader.next().unwrap() {
+                        out.push(f);
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) => panic!("chaos read failed: {e}"),
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn fragmented_coalesced_frames_decode_identically() {
+        // Several frames written back-to-back (coalesced on the wire)
+        // must decode to the identical sequence under every seed's
+        // fragmentation pattern.
+        let frames = vec![
+            Frame::Ping { nonce: 1 },
+            Frame::Job { job: 2, prompt: "p q r s t".into(), max_tokens: 8 },
+            Frame::Heartbeat(Default::default()),
+            Frame::Gone,
+        ];
+        for seed in 0..50 {
+            let (mut a, mut b) = pair(seed);
+            for f in &frames {
+                write_frame(&mut a, f).unwrap();
+            }
+            let mut reader = FrameReader::new();
+            let got = drain(&mut b, &mut reader);
+            assert_eq!(got, frames, "seed {seed} corrupted the stream");
+        }
+    }
+
+    #[test]
+    fn reads_fragment_at_adversarial_boundaries() {
+        // Across seeds, reads must split frames — including inside the
+        // 4-byte length prefix. (Any single seed may legally deliver a
+        // small frame whole; the ensemble must not.)
+        let mut fragmented = 0usize;
+        let mut split_prefix = 0usize;
+        for seed in 0..20 {
+            let (mut a, mut b) = pair(seed);
+            write_frame(&mut a, &Frame::Ping { nonce: 42 }).unwrap();
+            b.set_read_timeout(Some(Duration::ZERO)).unwrap();
+            let mut sizes = Vec::new();
+            let mut buf = [0u8; 64];
+            loop {
+                match b.read(&mut buf) {
+                    Ok(n) => sizes.push(n),
+                    Err(_) => break,
+                }
+            }
+            assert!(sizes.iter().all(|&n| n >= 1), "empty read at seed {seed}");
+            if sizes.len() > 1 {
+                fragmented += 1;
+            }
+            if sizes.first().copied().unwrap_or(0) < 4 {
+                split_prefix += 1;
+            }
+        }
+        assert!(fragmented > 0, "no seed ever fragmented a frame");
+        assert!(split_prefix > 0, "no seed ever split the length prefix");
+    }
+
+    #[test]
+    fn severed_mid_frame_is_clean_eof_never_desync() {
+        // Hold the tail of a frame, sever: the reader gets a clean EOF
+        // with a partial frame buffered — no panic, no bogus frame.
+        let (mut a, mut b) = pair(3);
+        write_frame(&mut a, &Frame::Done { job: 9, prompt_tokens: 3, tokens: vec![1, 2] })
+            .unwrap();
+        let bytes = Frame::Job { job: 10, prompt: "never finishes".into(), max_tokens: 4 }
+            .encode();
+        // First half delivered, second half held in flight, then cut.
+        a.write_all(&bytes[..bytes.len() / 2]).unwrap();
+        a.hold();
+        a.write_all(&bytes[bytes.len() / 2..]).unwrap();
+        a.sever();
+
+        let mut reader = FrameReader::new();
+        let mut buf = [0u8; 64];
+        let mut got = Vec::new();
+        loop {
+            match b.read(&mut buf) {
+                Ok(0) => break, // clean EOF
+                Ok(n) => {
+                    reader.extend(&buf[..n]);
+                    while let Some(f) = reader.next().unwrap() {
+                        got.push(f);
+                    }
+                }
+                Err(e) => panic!("sever must read as EOF, got {e}"),
+            }
+        }
+        assert_eq!(got.len(), 1, "only the complete frame decodes");
+        assert!(matches!(got[0], Frame::Done { job: 9, .. }));
+        // The truncated frame stays pending forever — Ok(None), not an
+        // error, not a partial decode.
+        assert!(reader.next().unwrap().is_none());
+        // And the severed writer fails fast.
+        assert!(a.write_all(b"more").is_err());
+    }
+
+    #[test]
+    fn held_bytes_deliver_on_release_in_order() {
+        let (mut a, mut b) = pair(5);
+        write_frame(&mut a, &Frame::Ping { nonce: 1 }).unwrap();
+        a.hold();
+        write_frame(&mut a, &Frame::Ping { nonce: 2 }).unwrap();
+        write_frame(&mut a, &Frame::Ping { nonce: 3 }).unwrap();
+        assert!(a.held_len() > 0);
+
+        let mut reader = FrameReader::new();
+        let got = drain(&mut b, &mut reader);
+        assert_eq!(got, vec![Frame::Ping { nonce: 1 }], "held frames invisible");
+
+        a.release().unwrap();
+        let got = drain(&mut b, &mut reader);
+        assert_eq!(
+            got,
+            vec![Frame::Ping { nonce: 2 }, Frame::Ping { nonce: 3 }],
+            "release delivers in write order"
+        );
+    }
+
+    #[test]
+    fn clones_share_the_link_like_a_cloned_socket() {
+        let (a, mut b) = pair(9);
+        let mut a2 = Transport::try_clone(&a).unwrap();
+        write_frame(&mut *a2, &Frame::Gone).unwrap();
+        let mut reader = FrameReader::new();
+        let got = drain(&mut b, &mut reader);
+        assert_eq!(got, vec![Frame::Gone]);
+        // Severing the original severs the clone's link too.
+        a.sever();
+        let mut buf = [0u8; 8];
+        assert_eq!(b.read(&mut buf).unwrap(), 0);
+        assert!(a2.write_all(b"x").is_err());
+    }
+}

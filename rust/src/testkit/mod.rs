@@ -16,10 +16,30 @@
 //! ```
 
 use std::ops::Range;
+use std::time::{Duration, Instant};
 
 use crate::util::rng::SplitMix64;
 
+pub mod chaos;
 pub mod substrate_conformance;
+
+/// Bounded polling for asynchronous state: evaluate `cond` every couple
+/// of milliseconds until it holds or `timeout` elapses. Returns whether
+/// it held. The replacement for sleep-then-assert in timing-sensitive
+/// tests — the wait ends the moment the state cell flips, and a slow CI
+/// scheduler only stretches the wait, never fails the assertion.
+pub fn wait_until(timeout: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + timeout;
+    loop {
+        if cond() {
+            return true;
+        }
+        if Instant::now() >= deadline {
+            return false;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
 
 /// Generator handle passed to properties.
 pub struct Gen {
@@ -164,5 +184,18 @@ mod tests {
             let v = g.vec(2..5, |g| g.u32(0..10));
             assert!(v.len() >= 2 && v.len() < 5);
         }
+    }
+
+    #[test]
+    fn wait_until_returns_on_condition_and_timeout() {
+        assert!(wait_until(Duration::from_secs(1), || true));
+        let t0 = Instant::now();
+        assert!(!wait_until(Duration::from_millis(10), || false));
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+        let mut calls = 0;
+        assert!(wait_until(Duration::from_secs(5), || {
+            calls += 1;
+            calls >= 3
+        }));
     }
 }

@@ -254,3 +254,129 @@ fn estimate_is_positive(d: &mut Driver) {
         "cold-start estimate must be positive, got {est}"
     );
 }
+
+// ---------------------------------------------------------------------------
+// Node-level contract (multi-host substrates)
+// ---------------------------------------------------------------------------
+
+/// A node-placing substrate under test: the base [`Driver`] plus the
+/// node-plane introspection the contract needs. The closures observe the
+/// shared node registry (not the substrate, which the base driver
+/// mutably borrows); `sever` cuts one node's control link by whatever
+/// means the harness has — SIGKILLing a real agent process, severing a
+/// chaos transport.
+pub struct NodeDriver<'a> {
+    pub base: Driver<'a>,
+    /// Registered node names, in registration order. The contract needs
+    /// at least two.
+    pub node_names: Vec<String>,
+    /// Replicas currently hosted on the named node.
+    pub hosted_on: Box<dyn Fn(&str) -> usize + 'a>,
+    /// Is the named node registered and alive?
+    pub alive: Box<dyn Fn(&str) -> bool + 'a>,
+    /// Kill the named node's agent / sever its control link.
+    pub sever: Box<dyn FnMut(&str) + 'a>,
+}
+
+/// Node-level conformance: registration feeds placement, placement
+/// spreads, and a lost node fails exactly its own replicas — each
+/// surfacing the same single `ReplicaFailed` an individual worker death
+/// does — while replacements land on the survivors.
+pub fn check_nodes(d: &mut NodeDriver) {
+    assert!(
+        d.node_names.len() >= 2,
+        "node conformance needs two registered nodes, got {:?}",
+        d.node_names
+    );
+
+    // Registration → placement, and spread: two replicas of one tier
+    // must land on different nodes when both have free slots.
+    let a = provision(&mut d.base);
+    let _ = wait_ready(&mut d.base, a);
+    let b = provision(&mut d.base);
+    let _ = wait_ready(&mut d.base, b);
+    for n in &d.node_names[..2] {
+        assert_eq!(
+            (d.hosted_on)(n.as_str()),
+            1,
+            "spread placement must put one replica on node `{n}`"
+        );
+    }
+
+    // Node link severed: the victim node's replica fails (exactly one
+    // failure), the other node's replica keeps serving.
+    let victim = d.node_names[0].clone();
+    (d.sever)(victim.as_str());
+    let start = (d.base.clock)();
+    while (d.alive)(victim.as_str()) {
+        let now = (d.base.clock)();
+        assert!(
+            now - start < d.base.timeout_s,
+            "severed node `{victim}` never read as lost"
+        );
+    }
+    let failed = wait_one_failure(&mut d.base, &[a, b]);
+    let survivor = if failed == a { b } else { a };
+    assert_eq!(
+        d.base.substrate.replica_state(survivor),
+        Some(ReplicaState::Ready),
+        "a replica on a surviving node must keep serving through a node loss"
+    );
+    assert!(
+        d.base.substrate.ready_replicas(d.base.service).contains(&survivor),
+        "survivor must stay in ready_replicas"
+    );
+    assert_removed(&mut d.base, failed, "node loss");
+
+    // Re-provision: the replacement must place on the surviving node
+    // (the lost one no longer takes replicas).
+    let c = provision(&mut d.base);
+    let _ = wait_ready(&mut d.base, c);
+    assert_eq!(
+        (d.hosted_on)(d.node_names[1].as_str()),
+        2,
+        "replacement must land on the surviving node"
+    );
+    assert_eq!(
+        (d.hosted_on)(victim.as_str()),
+        0,
+        "a lost node must not be placed on (its replicas released)"
+    );
+
+    // Cleanup through the normal lifecycle.
+    for id in [survivor, c] {
+        let now = (d.base.clock)();
+        d.base.substrate.terminate(id, now);
+        match wait_terminal(&mut d.base, id, true) {
+            Terminal::Gone => {}
+            Terminal::Failed => panic!("graceful terminate must end in ReplicaGone"),
+        }
+        assert_removed(&mut d.base, id, "node-case cleanup");
+    }
+}
+
+/// Wait until exactly one of `ids` fails; no Gone, no spurious extra
+/// events for the watched set.
+fn wait_one_failure(d: &mut Driver, ids: &[ReplicaId]) -> ReplicaId {
+    let start = (d.clock)();
+    loop {
+        let now = (d.clock)();
+        let evs: Vec<SubstrateEvent> = d
+            .substrate
+            .poll(now)
+            .into_iter()
+            .filter(|e| ids.contains(&replica_of(e)))
+            .collect();
+        for ev in evs {
+            match ev {
+                SubstrateEvent::ReplicaFailed { replica, .. } => return replica,
+                ev => panic!("expected one ReplicaFailed after node loss, got {ev:?}"),
+            }
+        }
+        assert!(
+            now - start < d.timeout_s,
+            "node loss never surfaced a ReplicaFailed within {}s",
+            d.timeout_s
+        );
+    }
+}

@@ -5,10 +5,11 @@
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use pick_and_spin::config::Config;
 use pick_and_spin::gateway::{serve_http, LiveStack};
+use pick_and_spin::testkit::wait_until;
 
 fn pool_config() -> Config {
     let mut cfg = Config::default();
@@ -113,16 +114,14 @@ fn idle_tiers_scale_to_zero_and_cold_wake_on_demand() {
 
     stack.complete("what is 2 plus 2?", 4).unwrap();
     // Queue depth + slot occupancy hit zero, idle clock runs → the
-    // scaler parks every tier down to its warm floor.
-    let deadline = Instant::now() + Duration::from_secs(10);
-    while stack.active_replicas() > 1 && Instant::now() < deadline {
-        std::thread::sleep(Duration::from_millis(25));
-    }
-    assert_eq!(
-        stack.active_replicas(),
-        1,
-        "idle tiers must park to the warm-pool floor"
+    // scaler parks every tier down to its warm floor (bounded poll on
+    // the replica count, not a fixed sleep).
+    assert!(
+        wait_until(Duration::from_secs(10), || stack.active_replicas() <= 1),
+        "idle tiers must park to the warm-pool floor (have {})",
+        stack.active_replicas()
     );
+    assert_eq!(stack.active_replicas(), 1, "the warm floor itself stays");
 
     // A hard prompt routes to a parked tier → cold wake, still served.
     let r = stack
@@ -175,18 +174,16 @@ fn timed_out_requests_cancel_mid_flight_and_free_their_slot() {
     assert_eq!(stack.metrics.timeouts.load(Ordering::Relaxed), 1);
     // The sequence is evicted at the scheduler's next tick, freeing the
     // slot and KV reservation early.
-    let deadline = Instant::now() + Duration::from_secs(5);
-    while (stack.metrics.cancelled.load(Ordering::Relaxed) == 0
-        || stack.slots_in_use() > 0)
-        && Instant::now() < deadline
-    {
-        std::thread::sleep(Duration::from_millis(5));
-    }
     assert!(
-        stack.metrics.cancelled.load(Ordering::Relaxed) >= 1,
-        "timeout must cancel the in-flight sequence"
+        wait_until(Duration::from_secs(5), || {
+            stack.metrics.cancelled.load(Ordering::Relaxed) >= 1
+                && stack.slots_in_use() == 0
+        }),
+        "timeout must cancel the in-flight sequence and free its slot \
+         (cancelled={}, slots={})",
+        stack.metrics.cancelled.load(Ordering::Relaxed),
+        stack.slots_in_use()
     );
-    assert_eq!(stack.slots_in_use(), 0, "cancelled slot must free");
 }
 
 #[test]
@@ -210,9 +207,13 @@ fn graceful_drain_requeues_queued_jobs_loss_free() {
             std::thread::spawn(move || s.complete(&format!("what is {i} plus {i}?"), 48))
         })
         .collect();
-    // Let the replica fill its slots (decode of 48 tokens on the
-    // calibrated sim engine runs ~10 ms), then drain it mid-flight.
-    std::thread::sleep(Duration::from_millis(5));
+    // Drain the replica mid-flight — once decode slots are actually
+    // occupied (bounded poll on the occupancy cells; the fixed 5 ms
+    // sleep this replaces missed the window under a loaded scheduler).
+    assert!(
+        wait_until(Duration::from_secs(10), || stack.slots_in_use() > 0),
+        "replica never started decoding"
+    );
     assert!(
         stack.drain_replica(0),
         "no Ready small-tier replica to drain"

@@ -7,10 +7,11 @@
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use pick_and_spin::config::Config;
 use pick_and_spin::gateway::LiveStack;
+use pick_and_spin::testkit::wait_until;
 
 #[test]
 fn killed_replica_recovers_and_drains_without_loss() {
@@ -37,8 +38,14 @@ fn killed_replica_recovers_and_drains_without_loss() {
         })
         .collect();
 
-    // Kill one small-tier replica once traffic is flowing.
-    std::thread::sleep(Duration::from_millis(30));
+    // Kill one small-tier replica once traffic is actually flowing —
+    // bounded poll on the slot-occupancy cells, not a fixed sleep (a
+    // slow CI scheduler stretches the wait instead of missing the
+    // window).
+    assert!(
+        wait_until(Duration::from_secs(10), || stack.slots_in_use() > 0),
+        "traffic never started decoding"
+    );
     assert!(
         stack.inject_replica_failure(0),
         "no Ready small-tier replica to kill"
@@ -56,23 +63,19 @@ fn killed_replica_recovers_and_drains_without_loss() {
 
     // The control plane recorded the incident and closed it when the
     // replacement reached Ready.
-    let deadline = Instant::now() + Duration::from_secs(10);
-    loop {
-        let incidents = stack.metrics.incidents.load(Ordering::Relaxed);
-        let recovered = stack.metrics.recovered.load(Ordering::Relaxed);
-        if incidents >= 1 && recovered >= 1 {
-            break;
-        }
-        assert!(
-            Instant::now() < deadline,
-            "incident never recovered: incidents={incidents} recovered={recovered}"
-        );
-        std::thread::sleep(Duration::from_millis(20));
-    }
-    assert_eq!(
-        stack.active_replicas(),
-        4,
-        "the replacement must restore the fleet"
+    assert!(
+        wait_until(Duration::from_secs(10), || {
+            stack.metrics.incidents.load(Ordering::Relaxed) >= 1
+                && stack.metrics.recovered.load(Ordering::Relaxed) >= 1
+        }),
+        "incident never recovered: incidents={} recovered={}",
+        stack.metrics.incidents.load(Ordering::Relaxed),
+        stack.metrics.recovered.load(Ordering::Relaxed)
+    );
+    assert!(
+        wait_until(Duration::from_secs(10), || stack.active_replicas() == 4),
+        "the replacement must restore the fleet (have {})",
+        stack.active_replicas()
     );
 
     // The measured recovery time is nonzero and exposed at /metrics.

@@ -1,0 +1,242 @@
+//! Multi-host substrate integration: the process substrate placing
+//! replicas across two real `ps-node` agents on localhost TCP. Each
+//! agent is a separate OS process (spawned from `CARGO_BIN_EXE`), each
+//! worker another one dialing the supervisor's per-replica TCP listener
+//! — the full paper deployment shape, one machine standing in for many.
+//! Covers: registration → placement spread (asserted at the registry and
+//! through the `/metrics` per-node gauges), the substrate conformance
+//! suite (base + node cases) over TCP, and the headline incident —
+//! SIGKILL of an entire node-agent mid-decode, which must fail every
+//! hosted replica together, requeue their dispatch ledgers loss-free
+//! (`ps_requeued_total > 0`, zero lost completions), and re-provision
+//! the fleet on the surviving node.
+
+use std::net::TcpListener;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use pick_and_spin::config::{Config, SubstrateKind};
+use pick_and_spin::gateway::LiveStack;
+use pick_and_spin::models::zoo;
+use pick_and_spin::registry::Registry;
+use pick_and_spin::substrate::remote::{ProcessSubstrate, WorkerSpec};
+use pick_and_spin::testkit::substrate_conformance::{
+    check, check_nodes, Driver, NodeDriver,
+};
+use pick_and_spin::testkit::wait_until;
+
+const BIN: &str = env!("CARGO_BIN_EXE_pick-and-spin");
+
+/// Reserve a free localhost port (bind to 0, note, release). The brief
+/// release window is benign on a CI runner: the agent rebinds within
+/// milliseconds and the supervisor dials with a 10 s retry.
+fn free_port() -> u16 {
+    TcpListener::bind("127.0.0.1:0")
+        .unwrap()
+        .local_addr()
+        .unwrap()
+        .port()
+}
+
+struct Agent {
+    name: String,
+    addr: String,
+    child: Child,
+}
+
+impl Drop for Agent {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn spawn_agent(name: &str, slots: usize) -> Agent {
+    let addr = format!("127.0.0.1:{}", free_port());
+    let mut cmd = Command::new(BIN);
+    cmd.arg("ps-node")
+        .arg("--listen")
+        .arg(&addr)
+        .arg("--slots")
+        .arg(slots.to_string())
+        .arg("--name")
+        .arg(name)
+        .stdin(Stdio::null())
+        .stdout(Stdio::null());
+    if let Ok(dir) = std::env::var("PS_WORKER_LOG_DIR") {
+        cmd.arg("--log-dir").arg(dir);
+    }
+    let child = cmd.spawn().expect("spawn ps-node agent");
+    Agent { name: name.to_string(), addr, child }
+}
+
+fn node_config(agents: &[&Agent]) -> Config {
+    let mut cfg = Config::default();
+    cfg.pool.substrate = SubstrateKind::Process;
+    cfg.pool.worker_bin = Some(BIN.to_string());
+    cfg.pool.worker_log_dir = std::env::var("PS_WORKER_LOG_DIR").ok();
+    cfg.pool.nodes.agents = agents.iter().map(|a| a.addr.clone()).collect();
+    cfg
+}
+
+fn metric(stack: &LiveStack, name: &str) -> f64 {
+    stack
+        .metrics_snapshot()
+        .into_iter()
+        .find(|(n, _)| n == name)
+        .map(|(_, v)| v)
+        .unwrap_or_else(|| panic!("{name} missing from /metrics"))
+}
+
+#[test]
+fn tcp_substrate_with_two_node_agents_passes_conformance() {
+    // The same lifecycle contract Mock/Local/Process(Unix) run, now with
+    // every worker spawned by a node agent and speaking TCP — plus the
+    // node-level cases: placement spread, node loss failing exactly the
+    // hosted replica, re-provision on the survivor. The sever is a real
+    // SIGKILL of the whole agent process.
+    let a0 = spawn_agent("n0", 4);
+    let a1 = spawn_agent("n1", 4);
+    let z = zoo();
+    let registry = Registry::new(&z, 300.0);
+    let mut cfg = node_config(&[&a0, &a1]);
+    cfg.pool.replicas = [2, 2, 2];
+    let spec = WorkerSpec::from_pool(&cfg.pool, &["--engine", "sim"]).unwrap();
+    let mut sub = ProcessSubstrate::standalone(cfg.pool.clone(), &registry, spec);
+    let reg = sub.nodes().expect("node plane must be up");
+    let epoch = sub.epoch();
+    let sid = sub.tier_service(0);
+    let (mspec, backend) = {
+        let s = registry.get(sid);
+        (s.spec.clone(), s.backend)
+    };
+    let agents = Arc::new(Mutex::new(vec![a0, a1]));
+    {
+        let base = Driver {
+            substrate: &mut sub,
+            service: sid,
+            model_idx: 0,
+            spec: mspec,
+            backend,
+            clock: Box::new(move || {
+                std::thread::sleep(Duration::from_millis(5));
+                epoch.elapsed().as_secs_f64()
+            }),
+            timeout_s: 30.0,
+        };
+        let reg_hosted = Arc::clone(&reg);
+        let reg_alive = Arc::clone(&reg);
+        let agents_sever = Arc::clone(&agents);
+        let mut d = NodeDriver {
+            base,
+            node_names: vec!["n0".into(), "n1".into()],
+            hosted_on: Box::new(move |n| {
+                reg_hosted
+                    .snapshot()
+                    .iter()
+                    .find(|s| s.name == n)
+                    .map(|s| s.hosted)
+                    .unwrap_or(0)
+            }),
+            alive: Box::new(move |n| {
+                reg_alive.snapshot().iter().any(|s| s.name == n && s.alive)
+            }),
+            sever: Box::new(move |n| {
+                for a in agents_sever.lock().unwrap().iter_mut() {
+                    if a.name == n {
+                        let _ = a.child.kill();
+                    }
+                }
+            }),
+        };
+        // Base contract first (lifecycle, fail→event, terminate during
+        // Loading — all over TCP through an agent), then the node cases.
+        check(&mut d.base);
+        check_nodes(&mut d);
+    }
+    sub.shutdown();
+}
+
+#[test]
+fn node_agent_sigkill_mid_decode_recovers_loss_free() {
+    // The acceptance scenario: a whole node dies (agent SIGKILLed) while
+    // its replicas are decoding. Every hosted replica must fail together,
+    // their dispatch ledgers requeue loss-free, the scaler re-provisions
+    // on the surviving node, and every caller still gets its answer.
+    let mut a0 = spawn_agent("n0", 8);
+    let a1 = spawn_agent("n1", 8);
+    let mut cfg = node_config(&[&a0, &a1]);
+    cfg.pool.replicas = [2, 1, 1];
+    cfg.pool.max_inflight = 8;
+    cfg.pool.flush_timeout_s = 0.003;
+    cfg.pool.scale_interval_s = 0.05;
+    cfg.orchestrator.idle_timeout_s = 3600.0;
+    let stack = Arc::new(LiveStack::start_sim(&cfg).unwrap());
+    assert_eq!(stack.active_replicas(), 4);
+
+    // Spread placement, proven through the per-node /metrics gauges:
+    // [2,1,1] replicas across two empty nodes must split 2/2.
+    assert_eq!(metric(&stack, "ps_node_replicas{node=\"n0\"}"), 2.0);
+    assert_eq!(metric(&stack, "ps_node_replicas{node=\"n1\"}"), 2.0);
+    assert_eq!(metric(&stack, "ps_node_capacity{node=\"n0\"}"), 8.0);
+    assert_eq!(metric(&stack, "ps_node_up{node=\"n0\"}"), 1.0);
+    assert_eq!(metric(&stack, "ps_node_lost_total"), 0.0);
+
+    let n = 48u64;
+    let handles: Vec<_> = (0..n)
+        .map(|i| {
+            let s = Arc::clone(&stack);
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(i * 2));
+                s.complete(&format!("what is {i} plus {i}?"), 24)
+            })
+        })
+        .collect();
+
+    // SIGKILL the whole n0 agent once decode is actually in flight
+    // (bounded poll on slot occupancy — no fixed sleep).
+    assert!(
+        wait_until(Duration::from_secs(10), || stack.slots_in_use() > 0),
+        "traffic never started decoding"
+    );
+    let _ = a0.child.kill();
+
+    // Zero lost completions across the node death.
+    for h in handles {
+        let r = h
+            .join()
+            .unwrap()
+            .expect("request lost across a node-agent SIGKILL");
+        assert!(!r.tokens.is_empty());
+    }
+
+    // The node read as lost, and the fleet re-provisioned on n1.
+    assert!(
+        wait_until(Duration::from_secs(20), || {
+            metric(&stack, "ps_node_lost_total") >= 1.0
+                && stack.active_replicas() == 4
+        }),
+        "node loss never recovered: lost={} replicas={}",
+        metric(&stack, "ps_node_lost_total"),
+        stack.active_replicas()
+    );
+    assert_eq!(metric(&stack, "ps_node_up{node=\"n0\"}"), 0.0);
+    assert!(
+        wait_until(Duration::from_secs(10), || {
+            metric(&stack, "ps_node_replicas{node=\"n1\"}") >= 4.0
+        }),
+        "replacements must land on the surviving node"
+    );
+    assert_eq!(metric(&stack, "ps_node_replicas{node=\"n0\"}"), 0.0);
+    assert!(
+        stack.metrics.requeued.load(Ordering::Relaxed) >= 1,
+        "in-flight jobs must requeue off the lost node's ledgers"
+    );
+    assert!(metric(&stack, "ps_incidents_total") >= 2.0, "both hosted replicas fail");
+    assert_eq!(stack.metrics.errors.load(Ordering::Relaxed), 0);
+    assert_eq!(stack.metrics.completed.load(Ordering::Relaxed), n);
+    drop(stack);
+    drop(a1);
+}

@@ -5,6 +5,7 @@ use pick_and_spin::backend::batcher::{BatchPolicy, DECODE_BATCHES};
 use pick_and_spin::backend::kv_cache::{KvBlockManager, PrefixCacheConfig, SeqId};
 use pick_and_spin::models::BackendKind;
 use pick_and_spin::router::keyword::KeywordRouter;
+use pick_and_spin::substrate::proto::{Frame, FrameReader, MAX_FRAME_BYTES};
 use pick_and_spin::testkit::{check, Gen};
 use pick_and_spin::tokenizer;
 use pick_and_spin::util::json::Json;
@@ -197,6 +198,102 @@ fn prop_json_strings_roundtrip_hostile_text() {
         assert_eq!(Json::parse(&obj.dump()).unwrap(), obj);
         assert_eq!(Json::parse(&obj.pretty()).unwrap(), obj);
     });
+}
+
+/// One random wire frame (the kinds that carry variable payloads).
+fn arb_frame(g: &mut Gen) -> Frame {
+    match g.usize(0..6) {
+        0 => Frame::Ping { nonce: g.u64(0..1_000_000) },
+        1 => Frame::Job {
+            job: g.u64(0..1000),
+            prompt: g.text(20),
+            max_tokens: g.usize(1..64),
+        },
+        2 => Frame::TokenChunk {
+            job: g.u64(0..1000),
+            tokens: g.vec(0..8, |g| g.u32(0..50_000) as i32),
+        },
+        3 => Frame::Cancelled { job: g.u64(0..1000) },
+        4 => Frame::Returned { job: g.u64(0..1000) },
+        _ => Frame::Gone,
+    }
+}
+
+#[test]
+fn prop_frame_reader_decodes_any_fragmentation() {
+    // The RPC plane's framing invariant: however a valid frame stream is
+    // fragmented or coalesced by the transport (seeded adversarial chunk
+    // sizes), the decoded sequence is identical — and a stream severed
+    // mid-frame stays cleanly pending (`Ok(None)`), never a panic, a
+    // desync error, or a phantom frame.
+    check("frame fragmentation", 200, |g: &mut Gen| {
+        let frames: Vec<Frame> = g.vec(1..8, arb_frame);
+        let encoded: Vec<Vec<u8>> = frames.iter().map(|f| f.encode()).collect();
+        let stream: Vec<u8> = encoded.iter().flatten().copied().collect();
+        // Sever point: anywhere in the stream (== len means no cut).
+        let cut = g.usize(0..stream.len() + 1);
+        // Frames fully contained before the sever must decode; the one
+        // the cut lands inside must not.
+        let mut expected = Vec::new();
+        let mut off = 0usize;
+        for (f, e) in frames.iter().zip(&encoded) {
+            off += e.len();
+            if off <= cut {
+                expected.push(f.clone());
+            } else {
+                break;
+            }
+        }
+        let mut r = FrameReader::new();
+        let mut got = Vec::new();
+        let mut i = 0usize;
+        while i < cut {
+            let n = g.usize(1..65).min(cut - i);
+            r.extend(&stream[i..i + n]);
+            i += n;
+            while let Some(f) = r.next().expect("valid stream never desyncs") {
+                got.push(f);
+            }
+        }
+        assert_eq!(got, expected, "fragmentation changed the decoded sequence");
+        assert!(
+            r.next().expect("severed tail must not error").is_none(),
+            "a mid-frame sever must leave the reader pending, not yield a frame"
+        );
+    });
+}
+
+#[test]
+fn frame_guard_boundary_cases() {
+    // len == guard: a frame that fills MAX_FRAME_BYTES exactly is legal
+    // — pending while partial, decoded once complete.
+    let probe = Frame::Job { job: 1, prompt: String::new(), max_tokens: 1 }.encode();
+    let overhead = probe.len() - 4; // body bytes with an empty prompt
+    let pad = MAX_FRAME_BYTES - overhead;
+    let big = Frame::Job { job: 1, prompt: "a".repeat(pad), max_tokens: 1 }.encode();
+    assert_eq!(
+        big.len(),
+        4 + MAX_FRAME_BYTES,
+        "constructed frame must fill the guard exactly"
+    );
+    let mut r = FrameReader::new();
+    r.extend(&big[..big.len() - 1]);
+    assert!(
+        r.next().unwrap().is_none(),
+        "guard-size frame mid-arrival is pending, not an error"
+    );
+    r.extend(&big[big.len() - 1..]);
+    match r.next().unwrap().expect("guard-size frame must decode") {
+        Frame::Job { prompt, .. } => assert_eq!(prompt.len(), pad),
+        f => panic!("wrong frame {f:?}"),
+    }
+    assert!(r.next().unwrap().is_none(), "no trailing bytes");
+
+    // len == guard + 1: rejected from the length prefix alone — a
+    // garbled prefix must never trigger the allocation.
+    let mut r = FrameReader::new();
+    r.extend(&(MAX_FRAME_BYTES as u32 + 1).to_be_bytes());
+    assert!(r.next().is_err(), "guard+1 must be rejected");
 }
 
 #[test]
