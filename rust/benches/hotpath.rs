@@ -255,6 +255,79 @@ fn main() {
         );
     }
 
+    if selected("affinity") {
+        // Fleet-level shared-prefix serving through the full gateway:
+        // several prompt families, each carrying a 64-word preamble (4
+        // KV blocks), served by 1 replica, by 3 replicas with blind
+        // tier-queue fan-out, and by 3 replicas with cache-affinity
+        // routing. The acceptance signal: affinity keeps the aggregate
+        // prefix hit-token rate from degrading as replicas grow —
+        // at least the blind fan-out rate, and within a sliver of the
+        // single-replica (perfect-locality) rate.
+        use pick_and_spin::config::Config;
+        use pick_and_spin::gateway::LiveStack;
+        use std::sync::atomic::Ordering;
+
+        let families = 8usize;
+        let rounds = 15usize;
+        let preambles: Vec<String> = (0..families)
+            .map(|f| vec![format!("family{f}"); 64].join(" "))
+            .collect();
+        let run = |replicas: usize, affinity: bool| -> (f64, u64, u64) {
+            let mut cfg = Config::default();
+            cfg.pool.replicas = [replicas, 1, 1];
+            cfg.pool.max_inflight = 8;
+            cfg.pool.flush_timeout_s = 0.001;
+            cfg.pool.affinity.enabled = affinity;
+            let stack = LiveStack::start_sim(&cfg).expect("bench stack");
+            for r in 0..rounds {
+                for (f, pre) in preambles.iter().enumerate() {
+                    stack
+                        .complete(&format!("{pre} what is {f} plus {r}?"), 4)
+                        .expect("bench request");
+                }
+            }
+            // Replica loops flush scheduler stats on their next turn.
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            let m = &stack.metrics;
+            let hits = m.prefix_hit_tokens.load(Ordering::Relaxed);
+            let miss = m.prefix_miss_tokens.load(Ordering::Relaxed);
+            let rate = hits as f64 / (hits + miss).max(1) as f64;
+            (rate, hits, m.affinity_hits.load(Ordering::Relaxed))
+        };
+
+        let (single_rate, single_hits, _) = run(1, false);
+        let (blind_rate, blind_hits, _) = run(3, false);
+        let (aff_rate, aff_hits_toks, aff_hits) = run(3, true);
+        println!(
+            "{:<44} {:>10} toks   {:>11.1}% hit rate  (1 replica)",
+            "fleet shared-prefix hit tokens", single_hits, single_rate * 100.0
+        );
+        println!(
+            "{:<44} {:>10} toks   {:>11.1}% hit rate  (3 replicas, blind fan-out)",
+            "fleet shared-prefix hit tokens", blind_hits, blind_rate * 100.0
+        );
+        println!(
+            "{:<44} {:>10} toks   {:>11.1}% hit rate  (3 replicas, affinity, {aff_hits} routed hits)",
+            "fleet shared-prefix hit tokens", aff_hits_toks, aff_rate * 100.0
+        );
+        assert!(aff_hits > 0, "affinity routing never placed a request");
+        assert!(
+            aff_rate >= blind_rate,
+            "affinity must not hit less than blind fan-out \
+             ({:.1}% vs {:.1}%)",
+            aff_rate * 100.0,
+            blind_rate * 100.0
+        );
+        assert!(
+            aff_rate >= 0.95 * single_rate,
+            "3-replica affinity must stay within 5% of single-replica \
+             locality ({:.1}% vs {:.1}%)",
+            aff_rate * 100.0,
+            single_rate * 100.0
+        );
+    }
+
     // Live PJRT path (needs artifacts).
     let artifacts = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
     if std::path::Path::new(&format!("{artifacts}/manifest.json")).exists() {

@@ -66,6 +66,29 @@ impl PrefixCacheConfig {
     }
 }
 
+/// Everything an admission decision needs from the KV pool, in one call:
+/// the result of [`KvBlockManager::probe`]. Replaces the scattered
+/// `lookup_prefix` / `admission_need` / `blocks_needed` / `can_admit` /
+/// `can_admit_blocks` probes so the scheduler's admission path and the
+/// router's affinity scorer share one code path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdmissionProbe {
+    /// Prompt tokens already KV-resident under the min-run hit gate —
+    /// the engine's prefill skip offset.
+    pub cached_tokens: usize,
+    /// Blocks an admission would allocate right now (uncached suffix
+    /// plus generation budget; the whole reservation with the cache off).
+    pub needed_blocks: usize,
+    /// Uncached *prompt* blocks alone, excluding the generation budget —
+    /// the prefill-rung grouping key (prefill work scales with the
+    /// suffix, not the budget).
+    pub suffix_blocks: usize,
+    /// Whether `needed_blocks` fit the pool right now (free plus
+    /// LRU-reclaimable cache). Optimistic, like every pre-check here:
+    /// the reservation at prefill time stays authoritative.
+    pub admissible: bool,
+}
+
 /// Cumulative prefix-cache counters (exported as `ps_prefix_*` series).
 #[derive(Debug, Default, Clone, Copy)]
 pub struct PrefixStats {
@@ -242,41 +265,62 @@ impl KvBlockManager {
         keys
     }
 
+    /// One-call admission probe, one chain walk: what a request with
+    /// these prompt ids and generation budget would cost *now*. The
+    /// block need is computed over the ungated resident chain (min-run
+    /// gated blocks are still reused, only not counted as hits), while
+    /// `cached_tokens` applies the hit gate. Optimistic: cached blocks
+    /// can be evicted between the probe and the reservation, and the
+    /// reservation at prefill time is authoritative.
+    pub fn probe(&self, ids: &[i32], max_new: usize) -> AdmissionProbe {
+        let prompt = ids.len().max(1);
+        let (cached_tokens, needed_blocks, suffix_blocks) = if self.cfg.enabled {
+            let full = ids.len() / self.block_tokens;
+            let resident = self.match_chain(ids).len();
+            let hit_blocks = if resident >= self.cfg.min_block_run.max(1) {
+                resident
+            } else {
+                0
+            };
+            let tail = prompt - full * self.block_tokens;
+            (
+                hit_blocks * self.block_tokens,
+                (full - resident) + self.blocks_for(tail + max_new),
+                (full - resident) + self.blocks_for(tail),
+            )
+        } else {
+            (
+                0,
+                self.blocks_for(prompt + max_new),
+                self.blocks_for(prompt),
+            )
+        };
+        AdmissionProbe {
+            cached_tokens,
+            needed_blocks,
+            suffix_blocks,
+            admissible: needed_blocks <= self.available_blocks(),
+        }
+    }
+
     /// Cached prompt-prefix tokens a request with these ids would reuse
     /// right now (0 when the cache is off or cold).
+    #[deprecated(note = "use probe(ids, 0).cached_tokens")]
     pub fn lookup_prefix(&self, ids: &[i32]) -> usize {
         self.match_keys(ids).len() * self.block_tokens
     }
 
-    /// Admission pre-check estimate, one chain walk: `(est_blocks,
-    /// suffix_blocks)` — the blocks an [`Self::admit_prefix`] of these
-    /// ids would allocate *now* (uncached suffix + generation budget),
-    /// and the uncached *prompt* blocks alone (the prefill-rung grouping
-    /// key: prefill work scales with the suffix, not the budget).
-    /// Computed over the ungated resident chain (min-run-gated blocks
-    /// are still reused, only not counted as hits). Optimistic: cached
-    /// blocks can be evicted between the check and the reservation, and
-    /// the reservation at prefill time is authoritative.
+    /// Admission pre-check estimate: `(est_blocks, suffix_blocks)`.
+    #[deprecated(note = "use probe(ids, max_new).{needed_blocks, suffix_blocks}")]
     pub fn admission_need(&self, ids: &[i32], max_new: usize) -> (usize, usize) {
-        let prompt = ids.len().max(1);
-        if !self.cfg.enabled {
-            return (
-                self.blocks_for(prompt + max_new),
-                self.blocks_for(prompt),
-            );
-        }
-        let full = ids.len() / self.block_tokens;
-        let resident = self.match_chain(ids).len();
-        let tail = prompt - full * self.block_tokens;
-        (
-            (full - resident) + self.blocks_for(tail + max_new),
-            (full - resident) + self.blocks_for(tail),
-        )
+        let p = self.probe(ids, max_new);
+        (p.needed_blocks, p.suffix_blocks)
     }
 
-    /// The `est_blocks` half of [`Self::admission_need`].
+    /// The `est_blocks` half of the admission estimate.
+    #[deprecated(note = "use probe(ids, max_new).needed_blocks")]
     pub fn blocks_needed(&self, ids: &[i32], max_new: usize) -> usize {
-        self.admission_need(ids, max_new).0
+        self.probe(ids, max_new).needed_blocks
     }
 
     /// Cached blocks reclaimable on demand (unreferenced, no referenced
@@ -291,11 +335,13 @@ impl KvBlockManager {
     }
 
     /// Can a sequence with this worst-case token need be admitted now?
+    #[deprecated(note = "use probe(...).admissible or available_blocks()")]
     pub fn can_admit(&self, max_tokens: usize) -> bool {
         self.blocks_for(max_tokens) <= self.available_blocks()
     }
 
     /// Can `blocks` more blocks be reserved now?
+    #[deprecated(note = "use probe(...).admissible or available_blocks()")]
     pub fn can_admit_blocks(&self, blocks: usize) -> bool {
         blocks <= self.available_blocks()
     }
@@ -575,6 +621,135 @@ impl KvBlockManager {
         freed
     }
 
+    /// Top-`k` resident prefix chains as `(terminal chain hash, chain
+    /// length in blocks)` pairs, most recently used first — the compact
+    /// summary a replica advertises for cache-affinity routing. Only
+    /// chain *tips* are listed (a chained hash commits to its whole root
+    /// path, so one pair names the entire prefix), and only chains long
+    /// enough to pass the min-run hit gate.
+    pub fn hot_prefixes(&self, k: usize) -> Vec<(u64, u32)> {
+        if !self.cfg.enabled || k == 0 {
+            return Vec::new();
+        }
+        let min = self.cfg.min_block_run.max(1) as u32;
+        let mut tips: Vec<(u64, u64, u32)> = Vec::new();
+        for (h, n) in &self.cache {
+            if n.children > 0 {
+                continue;
+            }
+            let mut len = 0u32;
+            let mut cur = Some(*h);
+            while let Some(c) = cur {
+                len += 1;
+                cur = self.cache.get(&c).and_then(|x| x.parent);
+            }
+            if len < min {
+                continue;
+            }
+            tips.push((n.last_use, *h, len));
+        }
+        // Most recently touched first; hash breaks ties deterministically.
+        tips.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        tips.truncate(k);
+        tips.into_iter().map(|(_, h, l)| (h, l)).collect()
+    }
+
+    /// Export the token blocks of the resident chain ending at
+    /// `terminal`, root block first — the payload of a cross-replica
+    /// prefix transfer. Every exported block is backed by KV a real
+    /// prefill computed here (never-prefilled chains are discarded by
+    /// [`Self::release_discard`] before they can be advertised). `None`
+    /// when the chain is no longer fully resident.
+    pub fn export_prefix(&self, terminal: u64) -> Option<Vec<Vec<i32>>> {
+        if !self.cfg.enabled {
+            return None;
+        }
+        let mut rev: Vec<Vec<i32>> = Vec::new();
+        let mut cur = Some(terminal);
+        while let Some(h) = cur {
+            let n = self.cache.get(&h)?;
+            rev.push(n.tokens.clone());
+            cur = n.parent;
+        }
+        rev.reverse();
+        Some(rev)
+    }
+
+    /// Import a transferred chain of token blocks (root block first),
+    /// inserting them as resident unreferenced cache nodes — exactly the
+    /// state a local prefill-then-release would leave. The donor only
+    /// exports computed KV, so the imported chain is sound to advertise.
+    /// Blocks already resident are just touched; the import stops early
+    /// (keeping the valid leading run) on a malformed block, a hash
+    /// collision, or an unevictable-full pool. Returns the tokens newly
+    /// imported.
+    pub fn import_prefix(&mut self, blocks: &[Vec<i32>]) -> usize {
+        if !self.cfg.enabled {
+            return 0;
+        }
+        self.lru_tick += 1;
+        let tick = self.lru_tick;
+        let mut parent: Option<u64> = None;
+        let mut ph = ROOT_HASH;
+        let mut imported = 0usize;
+        // Hold a reference on each inserted node until the import ends so
+        // the eviction scan run for a *later* block can never reclaim the
+        // chain's own leading run out from under it.
+        let mut pins: Vec<u64> = Vec::new();
+        for block in blocks {
+            if block.len() != self.block_tokens {
+                break;
+            }
+            let h = chain_hash(ph, block);
+            match self.cache.get_mut(&h) {
+                Some(n) if n.parent == parent && n.tokens == *block => {
+                    n.last_use = tick;
+                }
+                // Occupied by a different chain: a true hash collision —
+                // stop rather than corrupt the tree.
+                Some(_) => break,
+                None => {
+                    if !self.ensure_free(1) {
+                        break;
+                    }
+                    // A matched (not inserted, so unpinned) tip can still
+                    // be the eviction victim: linking to it would dangle.
+                    if parent.is_some_and(|pk| !self.cache.contains_key(&pk)) {
+                        break;
+                    }
+                    self.free_blocks -= 1;
+                    self.cache.insert(h, CacheNode {
+                        parent,
+                        tokens: block.clone(),
+                        refs: 1,
+                        children: 0,
+                        live_desc: 0,
+                        last_use: tick,
+                    });
+                    if let Some(pk) = parent {
+                        self.cache.get_mut(&pk).expect("parent resident").children += 1;
+                    }
+                    self.adjust_live(Some(h), 1);
+                    pins.push(h);
+                    imported += block.len();
+                }
+            }
+            parent = Some(h);
+            ph = h;
+        }
+        for k in pins.iter().rev() {
+            if let Some(n) = self.cache.get_mut(k) {
+                n.refs -= 1;
+            }
+        }
+        for k in pins.iter().rev() {
+            self.adjust_live(Some(*k), -1);
+        }
+        self.peak_blocks = self.peak_blocks.max(self.used_blocks());
+        self.enforce_watermark();
+        imported
+    }
+
     /// Drop every reclaimable cache block (tests / explicit flush).
     /// Returns the blocks freed.
     pub fn purge_cache(&mut self) -> usize {
@@ -723,7 +898,7 @@ mod tests {
     fn admission_rejects_when_full() {
         let mut kv = KvBlockManager::new(4, 16);
         kv.admit(SeqId(1), 32, 32).unwrap(); // 4 blocks
-        assert!(!kv.can_admit(1));
+        assert!(!kv.probe(&[0], 0).admissible);
         assert!(kv.admit(SeqId(2), 1, 0).is_err());
     }
 
@@ -761,7 +936,7 @@ mod tests {
         let mut rng = crate::util::rng::SplitMix64::new(7);
         let mut live: Vec<SeqId> = Vec::new();
         for i in 0..500u64 {
-            if rng.chance(0.6) && kv.can_admit(24) {
+            if rng.chance(0.6) && kv.probe(&[7; 24], 0).admissible {
                 let id = SeqId(i);
                 if kv.admit(id, rng.below(16) as usize + 1, 8).is_ok() {
                     live.push(id);
@@ -795,6 +970,12 @@ mod tests {
         range.collect()
     }
 
+    /// Cached prompt tokens a request would reuse (the old
+    /// `lookup_prefix`, now through the collapsed probe API).
+    fn cached(kv: &KvBlockManager, ids: &[i32]) -> usize {
+        kv.probe(ids, 0).cached_tokens
+    }
+
     #[test]
     fn prefix_hit_shares_blocks_and_refcounts() {
         let mut kv = prefix_kv(16, 4);
@@ -824,7 +1005,7 @@ mod tests {
         kv.admit_prefix(SeqId(1), &prompt, 4).unwrap();
         kv.release(SeqId(1));
         // The prefix stays resident after release…
-        assert_eq!(kv.lookup_prefix(&prompt), 8);
+        assert_eq!(cached(&kv, &prompt), 8);
         assert_eq!(kv.cache_blocks(), 2);
         // …so the next request still hits it.
         assert_eq!(kv.admit_prefix(SeqId(2), &prompt, 4).unwrap(), 8);
@@ -832,7 +1013,7 @@ mod tests {
         // Explicit purge reclaims everything.
         assert_eq!(kv.purge_cache(), 2);
         assert_eq!(kv.free_blocks(), 16);
-        assert_eq!(kv.lookup_prefix(&prompt), 0);
+        assert_eq!(cached(&kv, &prompt), 0);
     }
 
     #[test]
@@ -849,8 +1030,8 @@ mod tests {
         // Both suffixes remain reachable.
         kv.release(SeqId(1));
         kv.release(SeqId(2));
-        assert_eq!(kv.lookup_prefix(&a), 8);
-        assert_eq!(kv.lookup_prefix(&b), 8);
+        assert_eq!(cached(&kv, &a), 8);
+        assert_eq!(cached(&kv, &b), 8);
     }
 
     #[test]
@@ -874,8 +1055,8 @@ mod tests {
         let third = ids(20..24);
         kv.admit_prefix(SeqId(3), &third, 5).unwrap();
         assert_eq!(kv.stats.evicted_blocks, 1);
-        assert_eq!(kv.lookup_prefix(&old), 0, "LRU evicted the oldest");
-        assert_eq!(kv.lookup_prefix(&newer), 4, "newer survived");
+        assert_eq!(cached(&kv, &old), 0, "LRU evicted the oldest");
+        assert_eq!(cached(&kv, &newer), 4, "newer survived");
         kv.check_invariants().unwrap();
     }
 
@@ -890,8 +1071,8 @@ mod tests {
         let long = ids(0..8); // 2 full blocks ≥ min run
         kv.admit_prefix(SeqId(1), &long, 2).unwrap();
         kv.release(SeqId(1));
-        assert_eq!(kv.lookup_prefix(&short), 0, "1-block match below min run");
-        assert_eq!(kv.lookup_prefix(&long), 8);
+        assert_eq!(cached(&kv, &short), 0, "1-block match below min run");
+        assert_eq!(cached(&kv, &long), 8);
         assert_eq!(kv.admit_prefix(SeqId(2), &long, 2).unwrap(), 8);
         kv.release(SeqId(2));
     }
@@ -939,7 +1120,7 @@ mod tests {
         // The engine refused the rung: the chain was never prefilled, so
         // it must not be advertised as cached KV.
         kv.release_discard(SeqId(1));
-        assert_eq!(kv.lookup_prefix(&prompt), 0);
+        assert_eq!(cached(&kv, &prompt), 0);
         assert_eq!(kv.free_blocks(), 16);
         assert_eq!(kv.stats.miss_tokens, 0, "failed admission's stats roll back");
         kv.check_invariants().unwrap();
@@ -949,7 +1130,7 @@ mod tests {
         kv.admit_prefix(SeqId(3), &prompt, 4).unwrap();
         assert_eq!(kv.stats.hit_tokens, 8);
         kv.release_discard(SeqId(3));
-        assert_eq!(kv.lookup_prefix(&prompt), 8, "live-referenced blocks survive");
+        assert_eq!(cached(&kv, &prompt), 8, "live-referenced blocks survive");
         assert_eq!(kv.stats.hit_tokens, 0, "phantom hit rolled back");
         assert_eq!(kv.stats.miss_tokens, 8, "seq 2's real prefill still counted");
         kv.release(SeqId(2));
@@ -987,7 +1168,7 @@ mod tests {
                     p.push(5000 + rng.below(64) as i32);
                 }
                 let max_new = rng.below(8) as usize + 1;
-                if kv.can_admit_blocks(kv.blocks_needed(&p, max_new))
+                if kv.probe(&p, max_new).admissible
                     && kv.admit_prefix(SeqId(i), &p, max_new).is_ok()
                 {
                     live.push(SeqId(i));
@@ -1004,5 +1185,125 @@ mod tests {
         kv.check_invariants().unwrap();
         kv.purge_cache();
         assert_eq!(kv.free_blocks(), 32, "all blocks recovered after purge");
+    }
+
+    // -- probe / hot_prefixes / transfer -----------------------------------
+
+    #[test]
+    fn probe_matches_admission_arithmetic() {
+        // Cache on: probe must agree with what admit_prefix then charges.
+        let mut kv = prefix_kv(16, 4);
+        let prompt = ids(0..10); // 2 full blocks + 2-token tail
+        let p = kv.probe(&prompt, 4);
+        assert_eq!(p.cached_tokens, 0);
+        assert_eq!(p.needed_blocks, 2 + 2); // 2 prompt blocks + ceil(2+4 / 4)
+        assert_eq!(p.suffix_blocks, 3);
+        assert!(p.admissible);
+        kv.admit_prefix(SeqId(1), &prompt, 4).unwrap();
+        assert_eq!(kv.used_blocks(), p.needed_blocks);
+        // Warm probe sees the cached prefix and charges the suffix only.
+        let warm = kv.probe(&prompt, 4);
+        assert_eq!(warm.cached_tokens, 8);
+        assert_eq!(warm.needed_blocks, 2);
+        kv.release(SeqId(1));
+
+        // Cache off: identical to the legacy whole-reservation math.
+        let kv = KvBlockManager::new(16, 4);
+        let p = kv.probe(&prompt, 4);
+        assert_eq!(p.cached_tokens, 0);
+        assert_eq!(p.needed_blocks, 4); // blocks_for(10 + 4)
+        assert_eq!(p.suffix_blocks, 3); // blocks_for(10)
+        // Empty ids still cost the one-token prompt floor.
+        assert_eq!(kv.probe(&[], 0).needed_blocks, 1);
+    }
+
+    #[test]
+    fn probe_admissible_tracks_pool_headroom() {
+        let mut kv = KvBlockManager::new(4, 16);
+        assert!(kv.probe(&[1; 32], 32).admissible);
+        kv.admit(SeqId(1), 32, 32).unwrap(); // all 4 blocks
+        assert!(!kv.probe(&[1], 0).admissible);
+        kv.release(SeqId(1));
+        assert!(kv.probe(&[1], 0).admissible);
+    }
+
+    #[test]
+    fn hot_prefixes_advertises_recent_chain_tips() {
+        let mut kv = prefix_kv(32, 4);
+        let a = ids(0..8); // 2-block chain
+        let b = ids(100..104); // 1-block chain, touched later
+        kv.admit_prefix(SeqId(1), &a, 1).unwrap();
+        kv.release(SeqId(1));
+        kv.admit_prefix(SeqId(2), &b, 1).unwrap();
+        kv.release(SeqId(2));
+        let hot = kv.hot_prefixes(8);
+        assert_eq!(hot.len(), 2, "one entry per chain tip");
+        assert_eq!(hot[0].1, 1, "most recent chain (b) first");
+        assert_eq!(hot[1].1, 2, "a's tip advertises its full 2-block depth");
+        // The advertised tip hash is the request's own chain hash at that
+        // depth — exactly what the affinity scorer recomputes.
+        let mut ph = ROOT_HASH;
+        for chunk in a.chunks_exact(4) {
+            ph = chain_hash(ph, chunk);
+        }
+        assert_eq!(hot[1].0, ph);
+        // Top-k truncates.
+        assert_eq!(kv.hot_prefixes(1).len(), 1);
+        assert!(KvBlockManager::new(32, 4).hot_prefixes(8).is_empty());
+    }
+
+    #[test]
+    fn export_import_transfers_a_prefix_between_pools() {
+        let mut donor = prefix_kv(16, 4);
+        let prompt = ids(0..12); // 3 full blocks
+        donor.admit_prefix(SeqId(1), &prompt, 2).unwrap();
+        donor.release(SeqId(1));
+        let tip = donor.hot_prefixes(1)[0];
+        assert_eq!(tip.1, 3);
+        let blocks = donor.export_prefix(tip.0).expect("chain resident");
+        assert_eq!(blocks.len(), 3);
+        assert_eq!(blocks[0], ids(0..4), "root block first");
+
+        // Cold pool imports the run: the prefix becomes a local hit with
+        // zero tokens lost — every prompt token is either cached or
+        // still charged as suffix.
+        let mut cold = prefix_kv(16, 4);
+        assert_eq!(cold.probe(&prompt, 2).cached_tokens, 0);
+        assert_eq!(cold.import_prefix(&blocks), 12);
+        cold.check_invariants().unwrap();
+        let p = cold.probe(&prompt, 2);
+        assert_eq!(p.cached_tokens, 12);
+        assert_eq!(cold.admit_prefix(SeqId(9), &prompt, 2).unwrap(), 12);
+        cold.release(SeqId(9));
+        // Idempotent: re-importing touches, never double-allocates.
+        assert_eq!(cold.import_prefix(&blocks), 0);
+        assert_eq!(cold.cache_blocks(), 3);
+        cold.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn import_respects_pool_pressure_and_stays_consistent() {
+        // 4-block pool with 3 blocks pinned by a live sequence: only one
+        // block of the 3-block chain can land; the import must keep the
+        // valid leading run and the invariants. (Watermark off — demand
+        // pressure is what's under test.)
+        let mut kv = KvBlockManager::with_prefix_cache(4, 4, PrefixCacheConfig {
+            enabled: true,
+            min_block_run: 1,
+            evict_watermark: 1.0,
+        });
+        kv.admit(SeqId(1), 8, 4).unwrap(); // 3 private blocks (cache path off for admit)
+        let chain: Vec<Vec<i32>> =
+            vec![ids(0..4), ids(4..8), ids(8..12)];
+        let imported = kv.import_prefix(&chain);
+        assert_eq!(imported, 4, "only the root block fits");
+        kv.check_invariants().unwrap();
+        assert_eq!(kv.probe(&ids(0..4), 0).cached_tokens, 4);
+        kv.release(SeqId(1));
+        kv.check_invariants().unwrap();
+        // Malformed (short) block: nothing imported, nothing corrupted.
+        let mut kv = prefix_kv(8, 4);
+        assert_eq!(kv.import_prefix(&[ids(0..3)]), 0);
+        kv.check_invariants().unwrap();
     }
 }

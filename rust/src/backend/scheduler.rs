@@ -105,6 +105,15 @@ pub trait StepEngine {
     fn max_new_tokens(&self) -> usize {
         usize::MAX
     }
+
+    /// Ingest `tokens` tokens of *transferred* KV (a cross-replica
+    /// prefix transfer landing in the local pool). Engines model the
+    /// transfer/ingest cost here so it is comparable against the prefill
+    /// recompute it replaces; the default no-op suits engines that can't
+    /// ingest foreign KV yet (they simply don't take transfers).
+    fn ingest_kv(&mut self, tokens: usize) {
+        let _ = tokens;
+    }
 }
 
 impl SeqLike for crate::runtime::Sequence {
@@ -392,7 +401,7 @@ impl<E: StepEngine, T> Scheduler<E, T> {
         // pool rejects without re-tokenizing — a held job bounces off
         // the gateway and retries this path every replica-loop tick.
         let floor_blocks = self.kv.blocks_for_tokens(reserve_new);
-        if !self.kv.can_admit_blocks(self.pending_kv_blocks + floor_blocks) {
+        if self.pending_kv_blocks + floor_blocks > self.kv.available_blocks() {
             if self.slots.is_empty() && self.pending.is_empty() {
                 return Admit::Failed(
                     payload,
@@ -424,9 +433,8 @@ impl<E: StepEngine, T> Scheduler<E, T> {
                         ),
                     ),
                 };
-                let (est_blocks, suffix_blocks) =
-                    self.kv.admission_need(&ids, reserve_new);
-                (memo_key, ids, est_blocks, suffix_blocks)
+                let p = self.kv.probe(&ids, reserve_new);
+                (memo_key, ids, p.needed_blocks, p.suffix_blocks)
             } else {
                 let est = prompt_tokens_est.min(self.engine.max_prompt_tokens());
                 (
@@ -436,7 +444,7 @@ impl<E: StepEngine, T> Scheduler<E, T> {
                     self.kv.blocks_for_tokens(est),
                 )
             };
-        if !self.kv.can_admit_blocks(self.pending_kv_blocks + est_blocks) {
+        if self.pending_kv_blocks + est_blocks > self.kv.available_blocks() {
             if self.slots.is_empty() && self.pending.is_empty() {
                 return Admit::Failed(
                     payload,
@@ -478,6 +486,33 @@ impl<E: StepEngine, T> Scheduler<E, T> {
     /// Blocks currently resident in the prefix cache (gauge).
     pub fn kv_cached_blocks(&self) -> usize {
         self.kv.cache_blocks()
+    }
+
+    /// The replica's compact prefix summary for cache-affinity routing:
+    /// top-`k` resident chains as `(tip chain hash, blocks)` pairs.
+    pub fn hot_prefixes(&self, k: usize) -> Vec<(u64, u32)> {
+        self.kv.hot_prefixes(k)
+    }
+
+    /// Export the cached block run ending at chain hash `tip` (donor
+    /// side of a cross-replica prefix transfer).
+    pub fn export_prefix(&self, tip: u64) -> Option<Vec<Vec<i32>>> {
+        self.kv.export_prefix(tip)
+    }
+
+    /// Ingest a transferred prefix chain (receiver side): the engine
+    /// models the transfer/ingest cost, the pool gains the chain as
+    /// resident cache — from then on it is an ordinary local hit.
+    /// Returns the tokens newly imported.
+    pub fn import_prefix(&mut self, blocks: &[Vec<i32>]) -> usize {
+        if !self.cfg.prefix_cache.enabled {
+            return 0;
+        }
+        let imported = self.kv.import_prefix(blocks);
+        if imported > 0 {
+            self.engine.ingest_kv(imported);
+        }
+        imported
     }
 
     /// Evict every request whose cancel token fired — buffered or
@@ -933,6 +968,11 @@ pub struct SimStepEngine {
     pub prefill_per_token_us: u64,
     pub step_base_us: u64,
     pub step_per_seq_us: u64,
+    /// Per-token cost of ingesting *transferred* KV (cross-replica
+    /// prefix transfer). Set well below `prefill_per_token_us`: moving
+    /// computed KV over the wire beats recomputing it, and the gap is
+    /// what the affinity benches measure.
+    pub transfer_per_token_us: u64,
 }
 
 impl SimStepEngine {
@@ -943,6 +983,7 @@ impl SimStepEngine {
             prefill_per_token_us: 0,
             step_base_us: 0,
             step_per_seq_us: 0,
+            transfer_per_token_us: 0,
         }
     }
 
@@ -955,6 +996,9 @@ impl SimStepEngine {
             prefill_per_token_us: 12,
             step_base_us: 180,
             step_per_seq_us: 25,
+            // ~4× cheaper than recomputing the same tokens' prefill —
+            // the regime where pulling a hot prefix beats a cold start.
+            transfer_per_token_us: 3,
         }
     }
 
@@ -1069,6 +1113,10 @@ impl StepEngine for SimStepEngine {
 
     fn max_new_tokens(&self) -> usize {
         SIM_SEQ_MAX
+    }
+
+    fn ingest_kv(&mut self, tokens: usize) {
+        Self::burn(self.transfer_per_token_us * tokens as u64);
     }
 }
 
@@ -1489,6 +1537,36 @@ mod tests {
         for (x, y) in a.iter().zip(b.iter()) {
             assert_eq!(x.tokens, y.tokens, "prefix hits must not change tokens");
         }
+    }
+
+    #[test]
+    fn transferred_prefix_serves_as_local_hit() {
+        // Donor computes a 2-block prefix; a cold scheduler imports the
+        // exported run and must serve the same prompt as a local hit,
+        // with identical outputs and zero lost tokens.
+        let prompt = "one two three four five six seven eight";
+        let mut donor = tiny_pool(PrefixCacheConfig::default());
+        assert!(matches!(donor.admit(prompt, 4, 8, 0), Admit::Admitted));
+        let (done_a, _) = donor.drain(0.0).unwrap();
+        let tip = donor.hot_prefixes(4)[0];
+        assert_eq!(tip.1, 2, "two full 4-token blocks advertised");
+        let blocks = donor.export_prefix(tip.0).expect("chain resident");
+
+        let mut cold = tiny_pool(PrefixCacheConfig::default());
+        assert_eq!(cold.import_prefix(&blocks), 8);
+        assert!(matches!(cold.admit(prompt, 4, 8, 0), Admit::Admitted));
+        let (done_b, _) = cold.drain(0.0).unwrap();
+        assert!(
+            cold.prefix_stats().hit_tokens >= 8,
+            "transferred prefix must count as a hit"
+        );
+        assert_eq!(done_a[0].tokens, done_b[0].tokens, "transfer must not change outputs");
+        assert_eq!(done_b[0].tokens.len(), 4, "zero lost tokens");
+        assert_eq!(cold.kv_occupancy(), 0.0);
+        // Cache off: transfers are refused outright.
+        let mut off = tiny_pool(PrefixCacheConfig::disabled());
+        assert_eq!(off.import_prefix(&blocks), 0);
+        assert!(off.hot_prefixes(4).is_empty());
     }
 
     #[test]

@@ -237,6 +237,34 @@ impl NodesConfig {
     }
 }
 
+/// Cache-affinity dispatch (`pool.affinity.*`): route each request to
+/// the replica whose advertised hot-prefix summary shares the longest
+/// chained block-hash prefix with the prompt, instead of blind per-tier
+/// fan-out. Off by default — disabled reproduces the exact legacy
+/// round-robin queue behavior bit-for-bit.
+#[derive(Debug, Clone)]
+pub struct AffinityConfig {
+    /// Master switch. `false` = legacy tier-queue fan-out, no summaries
+    /// consulted, no transfers brokered.
+    pub enabled: bool,
+    /// How many hot prefix chain tips each replica advertises per
+    /// heartbeat (top-K by recency).
+    pub top_k: usize,
+    /// Minimum matched chain length (in KV blocks) before the router
+    /// prefers a replica over the least-loaded fallback.
+    pub min_match_blocks: usize,
+    /// Broker cross-replica KV block transfer: when a request routes to
+    /// a cold replica but a peer advertises its prefix, pull the cached
+    /// blocks over the RPC plane instead of recomputing them.
+    pub transfer: bool,
+}
+
+impl Default for AffinityConfig {
+    fn default() -> Self {
+        Self { enabled: false, top_k: 8, min_match_blocks: 1, transfer: true }
+    }
+}
+
 /// Engine-pool tunables: the continuous-batching serving path
 /// (gateway job intake → per-tier scheduler → N engine replicas).
 #[derive(Debug, Clone)]
@@ -268,6 +296,9 @@ pub struct PoolConfig {
     /// LRU past the watermark. On by default; disabling restores the
     /// exact full-reservation accounting.
     pub prefix_cache: PrefixCacheConfig,
+    /// Cache-affinity routing + cross-replica KV transfer
+    /// (`pool.affinity.*`). Off by default.
+    pub affinity: AffinityConfig,
     /// How often the pool scaler re-plans per-tier active replicas from
     /// queue depth + slot occupancy.
     pub scale_interval_s: f64,
@@ -307,6 +338,7 @@ impl Default for PoolConfig {
             kv_blocks: 128,
             kv_block_tokens: 16,
             prefix_cache: PrefixCacheConfig::default(),
+            affinity: AffinityConfig::default(),
             scale_interval_s: 2.0,
             health_deadline_s: 3.0,
             substrate: SubstrateKind::Thread,
@@ -466,6 +498,16 @@ impl Config {
                     .usize_or("min_block_run", self.pool.prefix_cache.min_block_run);
                 self.pool.prefix_cache.evict_watermark = pc
                     .f64_or("evict_watermark", self.pool.prefix_cache.evict_watermark);
+            }
+            if let Some(a) = p.get("affinity") {
+                self.pool.affinity.enabled =
+                    a.bool_or("enabled", self.pool.affinity.enabled);
+                self.pool.affinity.top_k =
+                    a.usize_or("top_k", self.pool.affinity.top_k);
+                self.pool.affinity.min_match_blocks = a
+                    .usize_or("min_match_blocks", self.pool.affinity.min_match_blocks);
+                self.pool.affinity.transfer =
+                    a.bool_or("transfer", self.pool.affinity.transfer);
             }
             self.pool.scale_interval_s =
                 p.f64_or("scale_interval_s", self.pool.scale_interval_s);
@@ -631,6 +673,28 @@ mod tests {
         assert!((c.pool.prefix_cache.evict_watermark - 0.75).abs() < 1e-12);
         // untouched pool knobs keep defaults
         assert_eq!(c.pool.kv_blocks, 128);
+    }
+
+    #[test]
+    fn overlay_affinity_section() {
+        let mut c = Config::default();
+        assert!(!c.pool.affinity.enabled, "affinity routing defaults off");
+        assert_eq!(c.pool.affinity.top_k, 8);
+        assert_eq!(c.pool.affinity.min_match_blocks, 1);
+        assert!(c.pool.affinity.transfer);
+        let j = Json::parse(
+            r#"{"pool":{"affinity":{"enabled":true,"top_k":4,
+                "min_match_blocks":2,"transfer":false}}}"#,
+        )
+        .unwrap();
+        c.overlay(&j).unwrap();
+        assert!(c.pool.affinity.enabled);
+        assert_eq!(c.pool.affinity.top_k, 4);
+        assert_eq!(c.pool.affinity.min_match_blocks, 2);
+        assert!(!c.pool.affinity.transfer);
+        // untouched pool knobs keep defaults
+        assert_eq!(c.pool.kv_blocks, 128);
+        assert!(c.pool.prefix_cache.enabled);
     }
 
     #[test]

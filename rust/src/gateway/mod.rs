@@ -54,7 +54,7 @@ use crate::substrate::Substrate;
 use crate::util::json::Json;
 use crate::util::threadpool::{Channel, OneShot};
 
-use pool::{LocalSubstrate, PoolShared, TierJob};
+use pool::{LocalSubstrate, PoolShared, ReplicaCell, TierJob, S_READY};
 
 /// A live completion response.
 #[derive(Debug, Clone)]
@@ -71,12 +71,77 @@ pub struct LiveResponse {
     pub prompt_tokens: usize,
 }
 
-/// An unrouted job, as `complete()` hands it to the router thread.
+/// An unrouted job, as `complete_request()` hands it to the router thread.
 struct Job {
     prompt: String,
     max_tokens: usize,
+    /// Session/tenant key for cache-affinity routing: requests sharing a
+    /// key rendezvous on the same replica even before their prefix is
+    /// cached anywhere, so the cache warms in one place.
+    affinity_key: Option<String>,
     cancel: CancelToken,
     reply: OneShot<Result<LiveResponse, String>>,
+}
+
+/// One completion request, builder-style — the gateway's entry API.
+///
+/// ```no_run
+/// # use pick_and_spin::gateway::{CompletionRequest, LiveStack};
+/// # fn go(stack: &LiveStack) -> anyhow::Result<()> {
+/// let r = stack.complete_request(
+///     CompletionRequest::new("summarize this ticket")
+///         .max_tokens(32)
+///         .affinity_key("tenant-7")
+///         .deadline_s(2.5),
+/// )?;
+/// # Ok(()) }
+/// ```
+///
+/// `prompt` and `max_tokens` are what [`LiveStack::complete`] always
+/// took; the optional fields are new: `affinity_key` steers
+/// cache-affinity routing (`pool.affinity.*`), `deadline_s` overrides
+/// the gateway-wide request timeout for this call, and `cancel` lets a
+/// caller abort from another thread (timeout and cancel both evict the
+/// sequence mid-flight, freeing its slot and KV reservation).
+#[derive(Clone)]
+pub struct CompletionRequest {
+    pub prompt: String,
+    pub max_tokens: usize,
+    pub affinity_key: Option<String>,
+    pub deadline_s: Option<f64>,
+    pub cancel: Option<CancelToken>,
+}
+
+impl CompletionRequest {
+    pub fn new(prompt: impl Into<String>) -> CompletionRequest {
+        CompletionRequest {
+            prompt: prompt.into(),
+            max_tokens: 16,
+            affinity_key: None,
+            deadline_s: None,
+            cancel: None,
+        }
+    }
+
+    pub fn max_tokens(mut self, n: usize) -> CompletionRequest {
+        self.max_tokens = n;
+        self
+    }
+
+    pub fn affinity_key(mut self, key: impl Into<String>) -> CompletionRequest {
+        self.affinity_key = Some(key.into());
+        self
+    }
+
+    pub fn deadline_s(mut self, seconds: f64) -> CompletionRequest {
+        self.deadline_s = Some(seconds);
+        self
+    }
+
+    pub fn cancel_token(mut self, token: CancelToken) -> CompletionRequest {
+        self.cancel = Some(token);
+        self
+    }
 }
 
 /// Counters exported at `/metrics`.
@@ -133,6 +198,19 @@ pub struct GatewayMetrics {
     /// `ps_rpc_rtt_seconds_total`; with `ps_rpc_pings_total` it yields
     /// the mean RPC latency of the process data plane).
     pub rpc_rtt_us_total: AtomicU64,
+    /// Requests the affinity router placed on the replica advertising
+    /// the longest matching cached prefix.
+    pub affinity_hits: AtomicU64,
+    /// Affinity-enabled dispatches that fell back to the shared tier
+    /// queue (no match, or the matching replica was saturated).
+    pub affinity_fallbacks: AtomicU64,
+    /// Summed matched chain length across affinity hits, in KV blocks.
+    pub affinity_match_blocks: AtomicU64,
+    /// Cross-replica prefix transfers brokered (donor export → target
+    /// import).
+    pub kv_transfers: AtomicU64,
+    /// KV blocks moved by those transfers.
+    pub kv_transfer_blocks: AtomicU64,
     /// Formed-batch histogram: one counter per compiled rung, in
     /// [`DECODE_BATCHES`] order.
     pub batch_counts: [AtomicU64; N_DECODE_BATCHES],
@@ -465,20 +543,27 @@ impl LiveStack {
         })
     }
 
-    /// Serve one prompt (blocks until a replica answers or the request
-    /// timeout elapses).
+    /// Serve one request (blocks until a replica answers, the deadline
+    /// elapses, or the caller's cancel token fires).
     ///
     /// A timeout fires the job's cancel token: the sequence is evicted
     /// at the scheduler's next tick, freeing its slot and KV reservation
     /// early instead of decoding to completion (`ps_cancelled_total`
     /// counts the evictions, `ps_timeouts_total` the abandonments).
-    pub fn complete(&self, prompt: &str, max_tokens: usize) -> Result<LiveResponse> {
+    pub fn complete_request(&self, req: CompletionRequest) -> Result<LiveResponse> {
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         let reply: OneShot<Result<LiveResponse, String>> = OneShot::new();
-        let cancel = CancelToken::new();
+        let cancel = req.cancel.unwrap_or_else(CancelToken::new);
+        // A per-request deadline overrides the gateway-wide timeout;
+        // same sanitization (from_secs_f64 panics on negative/NaN/∞).
+        let timeout_s = match req.deadline_s {
+            Some(d) if d.is_finite() => d.clamp(0.001, 86_400.0),
+            _ => self.request_timeout_s,
+        };
         let job = Job {
-            prompt: prompt.to_string(),
-            max_tokens,
+            prompt: req.prompt,
+            max_tokens: req.max_tokens,
+            affinity_key: req.affinity_key,
             cancel: cancel.clone(),
             reply: reply.clone(),
         };
@@ -486,7 +571,7 @@ impl LiveStack {
             self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
             return Err(anyhow!("queue full (backpressure)"));
         }
-        match reply.wait_timeout(Duration::from_secs_f64(self.request_timeout_s)) {
+        match reply.wait_timeout(Duration::from_secs_f64(timeout_s)) {
             Some(out) => out.map_err(|e| anyhow!(e)),
             None => {
                 self.metrics.timeouts.fetch_add(1, Ordering::Relaxed);
@@ -494,6 +579,11 @@ impl LiveStack {
                 Err(anyhow!("request timed out"))
             }
         }
+    }
+
+    /// Positional back-compat wrapper over [`Self::complete_request`].
+    pub fn complete(&self, prompt: &str, max_tokens: usize) -> Result<LiveResponse> {
+        self.complete_request(CompletionRequest::new(prompt).max_tokens(max_tokens))
     }
 
     /// Live (provisioned) replicas across all tiers — the scale-to-zero
@@ -580,6 +670,20 @@ impl LiveStack {
                 "ps_rpc_rtt_seconds_total".to_string(),
                 m.rpc_rtt_us_total.load(Ordering::Relaxed) as f64 / 1e6,
             ),
+            ("ps_affinity_hit_total".to_string(), c(&m.affinity_hits)),
+            (
+                "ps_affinity_fallback_total".to_string(),
+                c(&m.affinity_fallbacks),
+            ),
+            (
+                "ps_affinity_match_blocks_total".to_string(),
+                c(&m.affinity_match_blocks),
+            ),
+            ("ps_kv_transfer_total".to_string(), c(&m.kv_transfers)),
+            (
+                "ps_kv_transfer_blocks_total".to_string(),
+                c(&m.kv_transfer_blocks),
+            ),
         ];
         for (i, &b) in DECODE_BATCHES.iter().enumerate() {
             out.push((format!("ps_decode_b{b}_total"), c(&m.batch_counts[i])));
@@ -597,6 +701,30 @@ impl LiveStack {
             "ps_active_replicas".to_string(),
             self.active_replicas() as f64,
         ));
+        // Per-replica affinity placement series (one family at a time —
+        // the exposition format wants samples of a family contiguous).
+        // Quiet with affinity off: counters only move when the affinity
+        // router places work.
+        let mut hit_series = Vec::new();
+        let mut match_series = Vec::new();
+        for (ti, tier) in Tier::ALL.iter().enumerate() {
+            for (id, cell) in self.shared.cells[ti].lock().unwrap().iter() {
+                let h = cell.affinity_hits.load(Ordering::Relaxed);
+                let b = cell.affinity_match_blocks.load(Ordering::Relaxed);
+                if h == 0 && b == 0 {
+                    continue;
+                }
+                let labels = format!("tier=\"{}\",replica=\"{}\"", tier.name(), id.0);
+                hit_series
+                    .push((format!("ps_replica_affinity_hits{{{labels}}}"), h as f64));
+                match_series.push((
+                    format!("ps_replica_affinity_match_blocks{{{labels}}}"),
+                    b as f64,
+                ));
+            }
+        }
+        out.extend(hit_series);
+        out.extend(match_series);
         if let Some(reg) = &self.nodes {
             out.push(("ps_node_lost_total".to_string(), reg.lost_total() as f64));
             // One pass per family: the Prometheus exposition format
@@ -709,6 +837,142 @@ fn sync_registry(registry: &mut Registry, shared: &PoolShared, pool: &PoolConfig
     }
 }
 
+/// Token cap when scoring a prompt for affinity. Chain hashes are
+/// cumulative per block, so truncation never produces a *wrong* match —
+/// it only stops scoring extremely long prompts past this depth.
+const AFFINITY_SCORE_TOKEN_CAP: usize = 4096;
+
+/// FNV-1a over a session key (rendezvous placement for keys whose
+/// prefix isn't cached anywhere yet).
+fn session_hash(key: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in key.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
+/// Cache-affinity dispatch (`pool.affinity.enabled`): score the prompt's
+/// block-hash chain against every ready replica's advertised hot-prefix
+/// summary and place the job on the longest match's private queue. On a
+/// saturated match the job goes to the least-loaded replica instead and
+/// a prefix transfer is brokered so the blocks follow it. Requests with
+/// no match but a session key rendezvous on a stable replica so their
+/// cache warms in one place. Returns the job back when nothing could be
+/// placed directly — the caller takes the legacy tier-queue path.
+fn affinity_place(
+    shared: &PoolShared,
+    pool: &PoolConfig,
+    metrics: &GatewayMetrics,
+    ti: usize,
+    affinity_key: Option<&str>,
+    mut tj: TierJob,
+) -> Option<TierJob> {
+    let aff = &pool.affinity;
+    let cells: Vec<Arc<ReplicaCell>> = shared.cells[ti]
+        .lock()
+        .unwrap()
+        .iter()
+        .filter(|(_, c)| {
+            c.state.load(Ordering::Acquire) == S_READY
+                && !c.stop.load(Ordering::Relaxed)
+        })
+        .map(|(_, c)| Arc::clone(c))
+        .collect();
+    if cells.is_empty() {
+        metrics.affinity_fallbacks.fetch_add(1, Ordering::Relaxed);
+        return Some(tj);
+    }
+    // The prompt's cumulative block-boundary chain hashes — the same
+    // chain the replicas' radix caches key on, so an advertised
+    // `(tip, len)` matches iff our hash at `len` blocks equals the tip.
+    let bt = pool.kv_block_tokens.max(1);
+    let ids = crate::tokenizer::prompt_ids(&tj.prompt, AFFINITY_SCORE_TOKEN_CAP);
+    let mut hashes: Vec<u64> = Vec::with_capacity(ids.len() / bt);
+    let mut ph = crate::backend::kv_cache::ROOT_HASH;
+    for chunk in ids.chunks_exact(bt) {
+        ph = crate::backend::kv_cache::chain_hash(ph, chunk);
+        hashes.push(ph);
+    }
+    // Longest advertised match across the tier's ready replicas.
+    let mut best: Option<(usize, u32, u64)> = None; // (cell, len, tip)
+    for (i, c) in cells.iter().enumerate() {
+        for &(tip, len) in c.hot.lock().unwrap().iter() {
+            let l = len as usize;
+            if l >= 1
+                && l <= hashes.len()
+                && hashes[l - 1] == tip
+                && best.map(|(_, bl, _)| len > bl).unwrap_or(true)
+            {
+                best = Some((i, len, tip));
+            }
+        }
+    }
+    match best.filter(|&(_, l, _)| l as usize >= aff.min_match_blocks.max(1)) {
+        Some((bi, len, tip)) => {
+            match cells[bi].direct.try_send(tj) {
+                Ok(()) => {
+                    metrics.affinity_hits.fetch_add(1, Ordering::Relaxed);
+                    metrics
+                        .affinity_match_blocks
+                        .fetch_add(len as u64, Ordering::Relaxed);
+                    cells[bi].affinity_hits.fetch_add(1, Ordering::Relaxed);
+                    cells[bi]
+                        .affinity_match_blocks
+                        .fetch_add(len as u64, Ordering::Relaxed);
+                    return None;
+                }
+                Err(back) => {
+                    // The hot replica is saturated: pick the least-loaded
+                    // peer and broker a transfer so the prefix follows
+                    // the job instead of being recomputed.
+                    tj = back;
+                    if aff.transfer && cells.len() > 1 {
+                        let (tix, _) = cells
+                            .iter()
+                            .enumerate()
+                            .filter(|(i, _)| *i != bi)
+                            .min_by_key(|(_, c)| c.inflight.load(Ordering::Relaxed))
+                            .expect("len > 1 after excluding one");
+                        cells[bi]
+                            .fetch_reqs
+                            .lock()
+                            .unwrap()
+                            .push((tip, Arc::clone(&cells[tix])));
+                        match cells[tix].direct.try_send(tj) {
+                            Ok(()) => {
+                                metrics
+                                    .affinity_fallbacks
+                                    .fetch_add(1, Ordering::Relaxed);
+                                return None;
+                            }
+                            Err(back) => tj = back,
+                        }
+                    }
+                }
+            }
+        }
+        None => {
+            if let Some(key) = affinity_key {
+                // No cached match anywhere: rendezvous on a stable
+                // replica for this key. Counted as a fallback — it is a
+                // placement bet, not a cache hit.
+                let i = (session_hash(key) % cells.len() as u64) as usize;
+                match cells[i].direct.try_send(tj) {
+                    Ok(()) => {
+                        metrics.affinity_fallbacks.fetch_add(1, Ordering::Relaxed);
+                        return None;
+                    }
+                    Err(back) => tj = back,
+                }
+            }
+        }
+    }
+    metrics.affinity_fallbacks.fetch_add(1, Ordering::Relaxed);
+    Some(tj)
+}
+
 /// Scale-from-zero: provision one replica for a tier that has queued
 /// work but no live capacity (counted as a cold wake).
 fn cold_wake<S: PoolBackend>(
@@ -802,27 +1066,50 @@ fn router_loop<S: PoolBackend>(
                             complexity: class.complexity,
                             confidence: class.confidence,
                         };
-                        match shared.queues[ti].try_send(tj) {
-                            Ok(()) => {
+                        // Cache-affinity placement first (off = the
+                        // exact legacy tier fan-out below, bit for bit).
+                        let pending = if pool.affinity.enabled {
+                            affinity_place(
+                                &shared,
+                                &pool,
+                                &metrics,
+                                ti,
+                                job.affinity_key.as_deref(),
+                                tj,
+                            )
+                        } else {
+                            Some(tj)
+                        };
+                        match pending {
+                            None => {
+                                // Placed on a ready replica's private
+                                // queue; ready ⇒ the tier is live, no
+                                // cold wake to consider.
                                 shared.last_enqueue_us[ti]
                                     .store((now * 1e6) as u64, Ordering::Relaxed);
-                                if shared.live_count(ti) == 0 {
-                                    cold_wake(
-                                        &mut substrate,
-                                        &mut registry,
-                                        &metrics,
-                                        &shared,
-                                        ti,
-                                        now,
-                                    );
+                            }
+                            Some(tj) => match shared.queues[ti].try_send(tj) {
+                                Ok(()) => {
+                                    shared.last_enqueue_us[ti]
+                                        .store((now * 1e6) as u64, Ordering::Relaxed);
+                                    if shared.live_count(ti) == 0 {
+                                        cold_wake(
+                                            &mut substrate,
+                                            &mut registry,
+                                            &metrics,
+                                            &shared,
+                                            ti,
+                                            now,
+                                        );
+                                    }
                                 }
-                            }
-                            Err(tj) => {
-                                metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                                tj.reply.put(Err(
-                                    "tier queue full (backpressure)".to_string()
-                                ));
-                            }
+                                Err(tj) => {
+                                    metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                                    tj.reply.put(Err(
+                                        "tier queue full (backpressure)".to_string(),
+                                    ));
+                                }
+                            },
                         }
                     }
                 }
@@ -931,7 +1218,20 @@ fn handle_completion(stack: &LiveStack, req: &http::Request) -> Result<String> {
     let j = Json::parse(req.body_str()?)?;
     let prompt = j.rstr("prompt")?;
     let max_tokens = j.usize_or("max_tokens", 16).min(64);
-    let r = stack.complete(prompt, max_tokens)?;
+    let mut creq = CompletionRequest::new(prompt).max_tokens(max_tokens);
+    // Optional affinity/session key and per-request deadline — the same
+    // fields the builder API takes, reachable over HTTP.
+    if let Some(key) = j
+        .get("affinity_key")
+        .and_then(Json::as_str)
+        .or_else(|| j.get("session").and_then(Json::as_str))
+    {
+        creq = creq.affinity_key(key);
+    }
+    if let Some(d) = j.get("deadline_s").and_then(Json::as_f64) {
+        creq = creq.deadline_s(d);
+    }
+    let r = stack.complete_request(creq)?;
     Ok(Json::obj(vec![
         ("model", Json::str(r.model)),
         ("tier", Json::str(r.tier.clone())),

@@ -79,6 +79,15 @@ pub(crate) fn decode_state(raw: u8) -> Option<ReplicaState> {
     }
 }
 
+/// One exported prefix: the cached token blocks of a chain, root-first.
+pub(crate) type BlockRun = Vec<Vec<i32>>;
+
+/// Bound on one replica's private affinity queue. Shallow on purpose:
+/// affinity should steer work, not pile it up behind one hot replica —
+/// when the direct queue is full the router falls back to the shared
+/// tier queue and another replica serves (and then warms up) the prefix.
+pub(crate) const DIRECT_QUEUE_CAP: usize = 32;
+
 /// Lifecycle mailbox between one replica thread and the control plane.
 pub(crate) struct ReplicaCell {
     pub state: AtomicU8,
@@ -100,6 +109,28 @@ pub(crate) struct ReplicaCell {
     pub prefix_miss_tokens: AtomicU64,
     /// Blocks resident in this replica's prefix cache (gauge).
     pub prefix_cache_blocks: AtomicU64,
+    /// Hot-prefix summary this replica last advertised: top-K cached
+    /// chain tips as `(chain_hash, chain_len_blocks)`, recency-ordered.
+    /// Published by the replica thread (or the supervisor pump from
+    /// heartbeat/`PrefixAd` frames); read by the router's affinity
+    /// scorer. Empty when affinity is off.
+    pub hot: Mutex<Vec<(u64, u32)>>,
+    /// Private affinity queue, drained ahead of the shared tier queue.
+    /// Only the affinity router enqueues here — with affinity off it
+    /// stays empty and dispatch is exactly the legacy tier fan-out.
+    pub direct: Channel<TierJob>,
+    /// Donor-side transfer inbox: `(chain_tip_hash, target cell)` pairs
+    /// posted by the router. The replica exports the cached run and
+    /// pushes it into the target's `incoming`.
+    pub fetch_reqs: Mutex<Vec<(u64, Arc<ReplicaCell>)>>,
+    /// Target-side transfer inbox: block runs awaiting import into this
+    /// replica's prefix cache.
+    pub incoming: Mutex<Vec<BlockRun>>,
+    /// Requests the affinity router placed here for a prefix match
+    /// (cumulative; the per-replica `/metrics` series).
+    pub affinity_hits: AtomicU64,
+    /// Summed matched chain length, in KV blocks, across those hits.
+    pub affinity_match_blocks: AtomicU64,
     /// Engine-factory error (set when Loading fails).
     pub error: Mutex<Option<String>>,
 }
@@ -116,6 +147,12 @@ impl ReplicaCell {
             prefix_hit_tokens: AtomicU64::new(0),
             prefix_miss_tokens: AtomicU64::new(0),
             prefix_cache_blocks: AtomicU64::new(0),
+            hot: Mutex::new(Vec::new()),
+            direct: Channel::bounded(DIRECT_QUEUE_CAP),
+            fetch_reqs: Mutex::new(Vec::new()),
+            incoming: Mutex::new(Vec::new()),
+            affinity_hits: AtomicU64::new(0),
+            affinity_match_blocks: AtomicU64::new(0),
             error: Mutex::new(None),
         }
     }
@@ -745,8 +782,47 @@ fn die_abruptly<E: StepEngine>(
     for job in held.into_iter().chain(sched.fail_all()) {
         requeue_job(job, ctx, "replica failed");
     }
+    // Affinity-routed jobs waiting in the private queue requeue to the
+    // shared tier queue — they lose their placement, never their answer.
+    while let Some(job) = ctx.cell.direct.try_recv() {
+        requeue_job(job, ctx, "replica failed");
+    }
     ctx.cell.inflight.store(0, Ordering::Relaxed);
     ctx.cell.state.store(S_FAILED, Ordering::Release);
+}
+
+/// Service the fleet prefix-cache plane for one tick: publish this
+/// replica's hot-prefix summary, export cached runs requested by the
+/// router on behalf of cold peers, and import runs peers sent us.
+fn service_affinity<E: StepEngine>(
+    sched: &mut Scheduler<E, TierJob>,
+    ctx: &ReplicaCtx,
+) {
+    let aff = &ctx.pool.affinity;
+    if !aff.enabled {
+        return;
+    }
+    *ctx.cell.hot.lock().unwrap() = sched.hot_prefixes(aff.top_k);
+    if !aff.transfer {
+        return;
+    }
+    let reqs: Vec<(u64, Arc<ReplicaCell>)> =
+        std::mem::take(&mut *ctx.cell.fetch_reqs.lock().unwrap());
+    for (hash, target) in reqs {
+        // An evicted prefix simply yields nothing; the cold replica
+        // recomputes, which is the pre-transfer behavior.
+        if let Some(blocks) = sched.export_prefix(hash) {
+            ctx.metrics.kv_transfers.fetch_add(1, Ordering::Relaxed);
+            ctx.metrics
+                .kv_transfer_blocks
+                .fetch_add(blocks.len() as u64, Ordering::Relaxed);
+            target.incoming.lock().unwrap().push(blocks);
+        }
+    }
+    let runs: Vec<BlockRun> = std::mem::take(&mut *ctx.cell.incoming.lock().unwrap());
+    for run in runs {
+        let _ = sched.import_prefix(&run);
+    }
 }
 
 /// One replica's serving loop: admit → prefill rungs → batch-decode →
@@ -791,16 +867,30 @@ pub(crate) fn replica_loop<E: StepEngine>(engine: E, ctx: ReplicaCtx) {
             for job in sched.drain_pending() {
                 requeue_job(job, &ctx, "replica draining");
             }
+            while let Some(job) = ctx.cell.direct.try_recv() {
+                requeue_job(job, &ctx, "replica draining");
+            }
             if let Some(job) = held.take() {
                 requeue_job(job, &ctx, "replica draining");
             }
             ctx.cell.inflight.store(sched.inflight(), Ordering::Relaxed);
         }
+        if !stopping {
+            // Import transferred prefixes before admitting so an
+            // affinity-routed job lands on an already-warm cache.
+            service_affinity(&mut sched, &ctx);
+        }
         // Admit as much as fits. A stopping replica drains its slots but
-        // pulls nothing new.
+        // pulls nothing new. The private affinity queue drains ahead of
+        // the shared tier queue — those jobs were placed *here* for
+        // their prefix.
         if !stopping {
             loop {
-                let job = match held.take().or_else(|| ctx.queue.try_recv()) {
+                let job = match held
+                    .take()
+                    .or_else(|| ctx.cell.direct.try_recv())
+                    .or_else(|| ctx.queue.try_recv())
+                {
                     Some(j) => j,
                     None => break,
                 };
@@ -940,8 +1030,12 @@ pub(crate) fn replica_loop<E: StepEngine>(engine: E, ctx: ReplicaCtx) {
     }
     // Never strand a caller: a job held at exit goes back to the queue
     // for a surviving replica (graceful terminate), or errors out when
-    // the whole pool is shutting down.
+    // the whole pool is shutting down. The private affinity queue is
+    // drained the same way.
     if let Some(job) = held.take() {
+        requeue_job(job, &ctx, "gateway shutting down");
+    }
+    while let Some(job) = ctx.cell.direct.try_recv() {
         requeue_job(job, &ctx, "gateway shutting down");
     }
     for job in sched.fail_all() {

@@ -79,7 +79,7 @@ pub struct WorkerOptions {
 /// Reconstruct a scheduler-facing [`PoolConfig`] from the wire knobs
 /// (fields the worker does not schedule with keep their defaults).
 fn pool_from_wire(w: &PoolWire) -> PoolConfig {
-    PoolConfig {
+    let mut p = PoolConfig {
         max_inflight: w.max_inflight,
         max_decode_batch: w.max_decode_batch,
         max_prefill_batch: w.max_prefill_batch,
@@ -88,7 +88,25 @@ fn pool_from_wire(w: &PoolWire) -> PoolConfig {
         kv_block_tokens: w.kv_block_tokens,
         prefix_cache: w.prefix_cache,
         ..PoolConfig::default()
+    };
+    if w.affinity_top_k > 0 {
+        p.affinity.enabled = true;
+        p.affinity.top_k = w.affinity_top_k;
     }
+    p
+}
+
+/// Cross-replica KV transfer traffic staged between the control plane
+/// and the scheduler: frames arrive on the reader thread, but
+/// export/import needs the scheduler, so the main loop applies them.
+#[derive(Default)]
+struct Transfers {
+    /// Donor requests awaiting export: `(req, terminal chain hash)`.
+    fetches: Vec<(u64, u64)>,
+    /// Partially delivered prefixes, keyed by chain hash until `done`.
+    staged: BTreeMap<u64, Vec<Vec<i32>>>,
+    /// Fully delivered prefixes awaiting import.
+    imports: Vec<Vec<Vec<i32>>>,
 }
 
 /// Per-sequence payload inside the worker's scheduler: the supervisor's
@@ -119,15 +137,18 @@ where
         tier: opts.tier.index(),
     })?;
     let mut handshake = FrameReader::new();
-    let pool = match read_frame_blocking(&mut *stream, &mut handshake)? {
+    let (version, pool) = match read_frame_blocking(&mut *stream, &mut handshake)? {
         Frame::HelloAck { version, pool } => {
             if !(1..=PROTO_VERSION).contains(&version) {
                 bail!("supervisor negotiated unsupported protocol v{version}");
             }
-            pool
+            (version, pool)
         }
         f => bail!("expected HelloAck, got {f:?}"),
     };
+    // Prefix advertising is a v2-plane feature: a v1 supervisor never
+    // enables it, and we never ship v2 payloads on a v1 session.
+    let hot_k = if version >= 2 { pool.affinity_top_k } else { 0 };
 
     // Reader thread: blocking reads → control channel. It inherits the
     // handshake's FrameReader so frames coalesced onto the HelloAck read
@@ -178,6 +199,7 @@ where
 
     let mut incoming: VecDeque<(u64, String, usize)> = VecDeque::new();
     let mut cancels: BTreeMap<u64, CancelToken> = BTreeMap::new();
+    let mut xfers = Transfers::default();
     let mut draining = false;
     let mut drained_once = false;
     let mut last_hb = Instant::now() - HEARTBEAT_PERIOD;
@@ -187,13 +209,36 @@ where
     loop {
         // 1. Control-plane frames.
         while let Some(f) = msgs.try_recv() {
-            handle_ctl(f, &mut *stream, &mut incoming, &mut cancels, &mut draining)?;
+            handle_ctl(f, &mut *stream, &mut incoming, &mut cancels, &mut xfers, &mut draining)?;
         }
         if msgs.is_closed() && msgs.is_empty() {
             bail!("supervisor connection lost");
         }
         if SIGTERM_DRAIN.load(Ordering::SeqCst) {
             draining = true;
+        }
+
+        // 1b. Cross-replica KV transfers: answer the supervisor's donor
+        // fetches, then ingest delivered prefixes — imports land before
+        // admissions so an affinity-routed job admits against a warm
+        // cache. An evicted prefix answers with an empty run (done is
+        // still set, so the supervisor retires the transfer).
+        for (req, hash) in xfers.fetches.drain(..) {
+            let blocks = sched.export_prefix(hash).unwrap_or_default();
+            write_frame(&mut *stream, &Frame::BlocksChunk { req, hash, blocks, done: true })?;
+        }
+        if !xfers.imports.is_empty() {
+            let mut imported = 0usize;
+            for run in xfers.imports.drain(..) {
+                imported += sched.import_prefix(&run);
+            }
+            if imported > 0 && hot_k > 0 {
+                // Advertise the freshly warmed prefix ahead of the next
+                // heartbeat so the router can target it immediately.
+                write_frame(&mut *stream, &Frame::PrefixAd {
+                    prefixes: sched.hot_prefixes(hot_k),
+                })?;
+            }
         }
 
         // 2. Graceful drain: hand unstarted work back for requeue (the
@@ -252,9 +297,9 @@ where
             if draining && incoming.is_empty() {
                 break;
             }
-            send_heartbeat(&mut *stream, &mut sched, &mut last_hb, false)?;
+            send_heartbeat(&mut *stream, &mut sched, &mut last_hb, hot_k, false)?;
             if let Some(f) = msgs.recv_timeout(Duration::from_millis(20)) {
-                handle_ctl(f, &mut *stream, &mut incoming, &mut cancels, &mut draining)?;
+                handle_ctl(f, &mut *stream, &mut incoming, &mut cancels, &mut xfers, &mut draining)?;
             }
             continue;
         }
@@ -309,7 +354,7 @@ where
                         error: msg,
                     })?;
                 }
-                send_heartbeat(&mut *stream, &mut sched, &mut last_hb, false)?;
+                send_heartbeat(&mut *stream, &mut sched, &mut last_hb, hot_k, false)?;
                 if tick.stepped == 0 && tick.prefilled == 0 {
                     if let Some(wait) = tick.wait_s {
                         // Holding for batch-mates: sleep out the flush
@@ -321,6 +366,7 @@ where
                                 &mut *stream,
                                 &mut incoming,
                                 &mut cancels,
+                                &mut xfers,
                                 &mut draining,
                             )?;
                         }
@@ -346,7 +392,7 @@ where
     }
 
     // Drained: final counters, then the graceful terminal frame.
-    send_heartbeat(&mut *stream, &mut sched, &mut last_hb, true)?;
+    send_heartbeat(&mut *stream, &mut sched, &mut last_hb, hot_k, true)?;
     write_frame(&mut *stream, &Frame::Gone)?;
     Ok(())
 }
@@ -357,6 +403,7 @@ fn handle_ctl(
     stream: &mut dyn Transport,
     incoming: &mut VecDeque<(u64, String, usize)>,
     cancels: &mut BTreeMap<u64, CancelToken>,
+    xfers: &mut Transfers,
     draining: &mut bool,
 ) -> Result<()> {
     match frame {
@@ -372,6 +419,22 @@ fn handle_ctl(
         Frame::Ping { nonce } => {
             write_frame(stream, &Frame::Pong { nonce })?;
         }
+        Frame::FetchBlocks { req, hash } => {
+            // We are the donor: export on the main loop (needs the
+            // scheduler) and answer with a BlocksChunk echoing `req`.
+            xfers.fetches.push((req, hash));
+        }
+        Frame::BlocksChunk { hash, blocks, done, .. } => {
+            // We are the recipient of a brokered prefix delivery.
+            // Chunks accumulate per chain hash until `done`.
+            xfers.staged.entry(hash).or_default().extend(blocks);
+            if done {
+                let run = xfers.staged.remove(&hash).unwrap_or_default();
+                if !run.is_empty() {
+                    xfers.imports.push(run);
+                }
+            }
+        }
         Frame::Terminate => {
             *draining = true;
         }
@@ -386,6 +449,7 @@ fn send_heartbeat<E: StepEngine>(
     stream: &mut dyn Transport,
     sched: &mut Scheduler<E, WireJob>,
     last: &mut Instant,
+    hot_k: usize,
     force: bool,
 ) -> Result<()> {
     if !force && last.elapsed() < HEARTBEAT_PERIOD {
@@ -408,6 +472,7 @@ fn send_heartbeat<E: StepEngine>(
         prefix_miss_tokens: sched.prefix_stats().miss_tokens,
         prefix_evicted_blocks: sched.prefix_stats().evicted_blocks,
         prefix_cache_blocks: sched.kv_cached_blocks() as u64,
+        hot: if hot_k > 0 { sched.hot_prefixes(hot_k) } else { Vec::new() },
     };
     write_frame(stream, &Frame::Heartbeat(hb))?;
     Ok(())

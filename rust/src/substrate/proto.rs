@@ -31,9 +31,14 @@
 //!
 //! Version negotiation: `Hello.version` is the worker's newest protocol;
 //! the supervisor answers with `min(worker, PROTO_VERSION)`. Either side
-//! that cannot speak the negotiated version hangs up; with a single
-//! version in existence that means an exact match is required, but the
-//! handshake shape lets future versions degrade instead of breaking.
+//! that cannot speak the negotiated version hangs up; versions degrade
+//! instead of breaking. Version 2 adds the fleet-wide prefix-cache
+//! plane: the heartbeat's `hot` prefix summary plus the
+//! `PrefixAd`/`FetchBlocks`/`BlocksChunk` transfer frames — the
+//! supervisor never sends a v2-only frame on a v1 session, and a v1
+//! decoder skips the unknown `hot` heartbeat key. Chain hashes are u64
+//! and cross the wire as 16-digit hex strings: `Json::Num` is an f64
+//! and would silently round hashes above 2^53.
 
 use std::io;
 use std::net::TcpStream;
@@ -155,7 +160,7 @@ pub fn connect_worker(addr: &str) -> Result<Box<dyn Transport>> {
 }
 
 /// Newest protocol version this build speaks.
-pub const PROTO_VERSION: u64 = 1;
+pub const PROTO_VERSION: u64 = 2;
 
 /// Upper bound on one frame's payload (corruption guard: a garbled
 /// length prefix must not trigger a multi-gigabyte allocation).
@@ -173,6 +178,10 @@ pub struct PoolWire {
     pub kv_blocks: usize,
     pub kv_block_tokens: usize,
     pub prefix_cache: PrefixCacheConfig,
+    /// How many hot prefix chain tips the worker should advertise per
+    /// heartbeat. `0` = affinity routing off, advertise nothing (the v1
+    /// wire behavior).
+    pub affinity_top_k: usize,
 }
 
 impl PoolWire {
@@ -185,6 +194,7 @@ impl PoolWire {
             kv_blocks: p.kv_blocks,
             kv_block_tokens: p.kv_block_tokens,
             prefix_cache: p.prefix_cache,
+            affinity_top_k: if p.affinity.enabled { p.affinity.top_k } else { 0 },
         }
     }
 
@@ -199,6 +209,7 @@ impl PoolWire {
             ("pc_enabled", Json::Bool(self.prefix_cache.enabled)),
             ("pc_min_block_run", Json::num(self.prefix_cache.min_block_run as f64)),
             ("pc_evict_watermark", Json::num(self.prefix_cache.evict_watermark)),
+            ("aff_top_k", Json::num(self.affinity_top_k as f64)),
         ])
     }
 
@@ -215,6 +226,7 @@ impl PoolWire {
                 min_block_run: j.usize_or("pc_min_block_run", 1),
                 evict_watermark: j.f64_or("pc_evict_watermark", 0.9),
             },
+            affinity_top_k: j.usize_or("aff_top_k", 0),
         })
     }
 }
@@ -239,6 +251,11 @@ pub struct HeartbeatWire {
     pub prefix_evicted_blocks: u64,
     /// Blocks resident in the worker's prefix cache (gauge).
     pub prefix_cache_blocks: u64,
+    /// v2: hot prefix summary — top-K cached chain tips as
+    /// `(chain_hash, chain_len_blocks)`, recency-ordered. The router
+    /// scores request prompts against these for cache-affinity dispatch.
+    /// Empty when affinity is off (and always absent on a v1 wire).
+    pub hot: Vec<(u64, u32)>,
 }
 
 /// One protocol frame. `S2W` = supervisor→worker, `W2S` = worker→supervisor.
@@ -266,6 +283,20 @@ pub enum Frame {
     Cancelled { job: u64 },
     /// W2S: graceful drain handed this unstarted job back for requeue.
     Returned { job: u64 },
+    // ---- fleet prefix cache (v2) -----------------------------------------
+    /// W2S: immediate hot-prefix advertisement, sent when the worker's
+    /// summary changes so the router sees new prefixes faster than the
+    /// heartbeat period. Same payload shape as the heartbeat `hot` field.
+    PrefixAd { prefixes: Vec<(u64, u32)> },
+    /// S2W: ask a donor worker for the cached block run whose chain tip
+    /// is `hash`. `req` is a supervisor-unique transfer id echoed back.
+    FetchBlocks { req: u64, hash: u64 },
+    /// Bidirectional: the block run for one transfer. Worker→super as
+    /// the answer to [`Frame::FetchBlocks`] (echoing `req`; `blocks`
+    /// empty when the prefix was evicted in the meantime); super→worker
+    /// as delivery into a cold replica (`req` = 0). `done` marks the
+    /// final chunk of the transfer.
+    BlocksChunk { req: u64, hash: u64, blocks: Vec<Vec<i32>>, done: bool },
     // ---- node plane (supervisor ↔ ps-node agent) -------------------------
     /// Agent→super: first frame on a node control channel — register this
     /// node's capacity (`slots` = replica processes it may host) and
@@ -318,6 +349,9 @@ impl Frame {
             Frame::Cancel { .. } => "cancel",
             Frame::Cancelled { .. } => "cancelled",
             Frame::Returned { .. } => "returned",
+            Frame::PrefixAd { .. } => "prefix_ad",
+            Frame::FetchBlocks { .. } => "fetch_blocks",
+            Frame::BlocksChunk { .. } => "blocks_chunk",
             Frame::NodeHello { .. } => "node_hello",
             Frame::NodeHelloAck { .. } => "node_hello_ack",
             Frame::SpawnReplica { .. } => "spawn",
@@ -366,6 +400,19 @@ impl Frame {
             | Frame::Returned { job } => {
                 pairs.push(("job", Json::num(*job as f64)));
             }
+            Frame::PrefixAd { prefixes } => {
+                pairs.push(("prefixes", prefixes_json(prefixes)));
+            }
+            Frame::FetchBlocks { req, hash } => {
+                pairs.push(("req", Json::num(*req as f64)));
+                pairs.push(("hash", hash_json(*hash)));
+            }
+            Frame::BlocksChunk { req, hash, blocks, done } => {
+                pairs.push(("req", Json::num(*req as f64)));
+                pairs.push(("hash", hash_json(*hash)));
+                pairs.push(("blocks", Json::arr(blocks.iter().map(|b| tokens_json(b)))));
+                pairs.push(("done", Json::Bool(*done)));
+            }
             Frame::NodeHello { version, name, slots, pid } => {
                 pairs.push(("version", Json::num(*version as f64)));
                 pairs.push(("name", Json::str(name.clone())));
@@ -406,6 +453,11 @@ impl Frame {
                     Json::num(hb.prefix_evicted_blocks as f64),
                 ));
                 pairs.push(("cache_blocks", Json::num(hb.prefix_cache_blocks as f64)));
+                // v2: omitted entirely when empty so a v1-shaped
+                // heartbeat stays byte-identical with affinity off.
+                if !hb.hot.is_empty() {
+                    pairs.push(("hot", prefixes_json(&hb.hot)));
+                }
             }
             Frame::Ping { nonce } | Frame::Pong { nonce } => {
                 pairs.push(("nonce", Json::num(*nonce as f64)));
@@ -449,6 +501,31 @@ impl Frame {
             "cancel" => Frame::Cancel { job: job(j)? },
             "cancelled" => Frame::Cancelled { job: job(j)? },
             "returned" => Frame::Returned { job: job(j)? },
+            "prefix_ad" => Frame::PrefixAd {
+                prefixes: prefixes_from(j.rarr("prefixes")?)?,
+            },
+            "fetch_blocks" => Frame::FetchBlocks {
+                req: j.rusize("req")? as u64,
+                hash: hash_from(j.rstr("hash")?)?,
+            },
+            "blocks_chunk" => Frame::BlocksChunk {
+                req: j.rusize("req")? as u64,
+                hash: hash_from(j.rstr("hash")?)?,
+                blocks: j
+                    .rarr("blocks")?
+                    .iter()
+                    .map(|b| {
+                        b.as_arr()
+                            .map(|ts| {
+                                ts.iter()
+                                    .map(|v| v.as_f64().unwrap_or(0.0) as i32)
+                                    .collect()
+                            })
+                            .ok_or_else(|| anyhow!("block is not a token array"))
+                    })
+                    .collect::<Result<Vec<Vec<i32>>>>()?,
+                done: j.bool_or("done", true),
+            },
             "node_hello" => Frame::NodeHello {
                 version: j.rusize("version")? as u64,
                 name: j.rstr("name")?.to_string(),
@@ -495,6 +572,13 @@ impl Frame {
                     prefix_miss_tokens: j.rusize("miss_tokens")? as u64,
                     prefix_evicted_blocks: j.rusize("evicted_blocks")? as u64,
                     prefix_cache_blocks: j.rusize("cache_blocks")? as u64,
+                    // Lenient: absent (v1 peer, or affinity off) = empty.
+                    hot: j
+                        .get("hot")
+                        .and_then(Json::as_arr)
+                        .map(prefixes_from)
+                        .transpose()?
+                        .unwrap_or_default(),
                 })
             }
             "ping" => Frame::Ping { nonce: j.rusize("nonce")? as u64 },
@@ -525,6 +609,46 @@ impl Frame {
 
 fn tokens_json(tokens: &[i32]) -> Json {
     Json::arr(tokens.iter().map(|&t| Json::num(t as f64)))
+}
+
+/// Chain hashes are full-range u64; `Json::Num` is an f64 (exact only
+/// to 2^53), so hashes cross the wire as fixed-width hex strings.
+fn hash_json(h: u64) -> Json {
+    Json::str(format!("{h:016x}"))
+}
+
+fn hash_from(s: &str) -> Result<u64> {
+    u64::from_str_radix(s, 16).map_err(|e| anyhow!("bad chain hash `{s}`: {e}"))
+}
+
+/// `(chain_hash, chain_len_blocks)` pairs as `[["<hex>", len], ...]`.
+fn prefixes_json(prefixes: &[(u64, u32)]) -> Json {
+    Json::arr(
+        prefixes
+            .iter()
+            .map(|&(h, l)| Json::arr(vec![hash_json(h), Json::num(l as f64)])),
+    )
+}
+
+fn prefixes_from(entries: &[Json]) -> Result<Vec<(u64, u32)>> {
+    entries
+        .iter()
+        .map(|e| {
+            let pair = e
+                .as_arr()
+                .filter(|p| p.len() == 2)
+                .ok_or_else(|| anyhow!("prefix entry is not a [hash, len] pair"))?;
+            let h = pair[0]
+                .as_str()
+                .ok_or_else(|| anyhow!("prefix hash is not a string"))
+                .and_then(hash_from)?;
+            let l = pair[1]
+                .as_f64()
+                .ok_or_else(|| anyhow!("prefix length is not a number"))?
+                as u32;
+            Ok((h, l))
+        })
+        .collect()
 }
 
 fn tokens_from(j: &Json) -> Result<Vec<i32>> {
@@ -659,7 +783,24 @@ mod tests {
             prefix_miss_tokens: 1280,
             prefix_evicted_blocks: 4,
             prefix_cache_blocks: 17,
+            hot: vec![(u64::MAX, 7), (0x0123_4567_89ab_cdef, 2), (0, 1)],
         }));
+        roundtrip(Frame::PrefixAd {
+            prefixes: vec![(u64::MAX - 1, 3), (1, 1)],
+        });
+        roundtrip(Frame::FetchBlocks { req: 42, hash: u64::MAX });
+        roundtrip(Frame::BlocksChunk {
+            req: 42,
+            hash: u64::MAX,
+            blocks: vec![vec![1, 2, 3, 4], vec![-5, 0, 7, 4095]],
+            done: true,
+        });
+        roundtrip(Frame::BlocksChunk {
+            req: 0,
+            hash: 0x8000_0000_0000_0001,
+            blocks: vec![],
+            done: false,
+        });
         roundtrip(Frame::Ping { nonce: 123_456_789 });
         roundtrip(Frame::Pong { nonce: 123_456_789 });
         roundtrip(Frame::Terminate);
@@ -743,6 +884,43 @@ mod tests {
         assert_eq!(negotiate(3, 1), Some(1));
         assert_eq!(negotiate(1, 9), Some(1));
         assert_eq!(negotiate(1, 0), None);
+        // A v2 supervisor facing a v1 worker speaks v1 (no v2 frames).
+        assert_eq!(negotiate(PROTO_VERSION, 1), Some(1));
+    }
+
+    #[test]
+    fn chain_hashes_survive_the_full_u64_range() {
+        // Hashes ride as hex strings precisely because Json::Num is an
+        // f64: every value here is unrepresentable (or ambiguous) above
+        // 2^53 and must still round-trip bit-exactly.
+        for h in [u64::MAX, u64::MAX - 1, (1u64 << 53) + 1, 1u64 << 63, 0] {
+            roundtrip(Frame::FetchBlocks { req: 1, hash: h });
+            roundtrip(Frame::PrefixAd { prefixes: vec![(h, 9)] });
+        }
+        // And the hex encoding is canonical enough to compare equal.
+        assert_eq!(hash_from("ffffffffffffffff").unwrap(), u64::MAX);
+        assert!(hash_from("not-hex").is_err());
+        assert!(hash_from("10000000000000000").is_err(), "overflow must error");
+    }
+
+    #[test]
+    fn v1_heartbeat_without_hot_field_decodes_empty() {
+        // A v1 worker's heartbeat has no `hot` key; the v2 supervisor
+        // must decode it with an empty summary, not an error.
+        let hb = HeartbeatWire { inflight: 1, prefills: 2, ..Default::default() };
+        let bytes = Frame::Heartbeat(hb.clone()).encode();
+        // hot empty ⇒ the encoded JSON carries no "hot" key at all (the
+        // exact v1 wire shape).
+        assert!(!String::from_utf8(bytes.clone()).unwrap().contains("hot"));
+        let mut r = FrameReader::new();
+        r.extend(&bytes);
+        match r.next().unwrap().unwrap() {
+            Frame::Heartbeat(back) => {
+                assert!(back.hot.is_empty());
+                assert_eq!(back, hb);
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
     }
 
     #[test]
@@ -762,5 +940,19 @@ mod tests {
         assert_eq!(back, w);
         assert!(!back.prefix_cache.enabled);
         assert_eq!(back.max_inflight, 11);
+        assert_eq!(back.affinity_top_k, 0, "affinity off ⇒ no advertising");
+    }
+
+    #[test]
+    fn pool_wire_ships_affinity_top_k_only_when_enabled() {
+        let mut p = PoolConfig::default();
+        p.affinity.top_k = 5;
+        assert_eq!(PoolWire::from_pool(&p).affinity_top_k, 0, "disabled");
+        p.affinity.enabled = true;
+        let w = PoolWire::from_pool(&p);
+        assert_eq!(w.affinity_top_k, 5);
+        let back = PoolWire::from_json(&Json::parse(&w.to_json().dump()).unwrap())
+            .unwrap();
+        assert_eq!(back, w);
     }
 }

@@ -82,6 +82,9 @@ const DRAIN_TIMEOUT: Duration = Duration::from_secs(30);
 const READ_TIMEOUT: Duration = Duration::from_millis(2);
 /// RPC latency probe period.
 const PING_PERIOD: Duration = Duration::from_millis(250);
+/// Blocks per `BlocksChunk` delivery frame: keeps any single frame well
+/// under [`MAX_FRAME_BYTES`] however long a transferred prefix run is.
+const XFER_CHUNK_BLOCKS: usize = 64;
 
 /// Unique socket names across every substrate in this process.
 static SOCK_SEQ: AtomicU64 = AtomicU64::new(0);
@@ -794,6 +797,11 @@ fn pump_loop(mut ctx: PumpCtx) {
             ctx.cell.state.store(S_FAILED, Ordering::Release);
         }
     }
+    // Jobs the router direct-placed on this replica that the session
+    // never dispatched: back to the tier queue, loss-free.
+    while let Some(job) = ctx.cell.direct.try_recv() {
+        requeue_to(&ctx.queue, &ctx.metrics, job, "replica exited");
+    }
     match &mut ctx.link {
         // Reap unconditionally: kill is a no-op on an exited worker, and
         // wait() collects the zombie either way.
@@ -846,6 +854,13 @@ fn pump_session(ctx: &mut PumpCtx) -> Result<(), String> {
 
     let mut inflight: BTreeMap<u64, InflightJob> = BTreeMap::new();
     let mut next_job: u64 = 0;
+    // Outstanding donor fetches this pump brokered: req id → the cold
+    // replica's cell (blocks accumulate here until the donor's `done`).
+    // Req 0 is reserved for supervisor→worker deliveries, so fetch req
+    // ids start at 1.
+    let mut next_xfer: u64 = 1;
+    let mut xfer_pending: BTreeMap<u64, (Arc<ReplicaCell>, Vec<Vec<i32>>)> =
+        BTreeMap::new();
     let mut last_hb = HeartbeatWire::default();
     let mut killed = false;
     let mut draining = false;
@@ -935,6 +950,42 @@ fn pump_session(ctx: &mut PumpCtx) -> Result<(), String> {
                                 );
                             }
                         }
+                        Frame::PrefixAd { prefixes } => {
+                            // Immediate advertisement (a freshly imported
+                            // prefix, ahead of the heartbeat cadence).
+                            *ctx.cell.hot.lock().unwrap() = prefixes;
+                        }
+                        Frame::BlocksChunk { req, blocks, done, .. } => {
+                            // Donor's answer to a brokered FetchBlocks:
+                            // accumulate until `done`, then hand the run
+                            // to the cold replica's inbox. An unknown req
+                            // (donor restarted mid-fetch) is dropped —
+                            // the transfer is an optimization, the routed
+                            // job recomputes its prefill either way.
+                            if let Some(entry) = xfer_pending.get_mut(&req) {
+                                entry.1.extend(blocks);
+                                if done {
+                                    if let Some((target, run)) =
+                                        xfer_pending.remove(&req)
+                                    {
+                                        if !run.is_empty() {
+                                            ctx.metrics
+                                                .kv_transfers
+                                                .fetch_add(1, Ordering::Relaxed);
+                                            ctx.metrics.kv_transfer_blocks.fetch_add(
+                                                run.len() as u64,
+                                                Ordering::Relaxed,
+                                            );
+                                            target
+                                                .incoming
+                                                .lock()
+                                                .unwrap()
+                                                .push(run);
+                                        }
+                                    }
+                                }
+                            }
+                        }
                         Frame::Pong { nonce } => {
                             let now_us = ctx.epoch.elapsed().as_micros() as u64;
                             ctx.metrics
@@ -1002,8 +1053,10 @@ fn pump_session(ctx: &mut PumpCtx) -> Result<(), String> {
         // 3. Graceful drain: scale-down terminate, or pool shutdown once
         // the closed queue is drained dry.
         let stop = ctx.cell.stop.load(Ordering::Relaxed);
-        let shutdown_done =
-            ctx.queue.is_closed() && ctx.queue.is_empty() && inflight.is_empty();
+        let shutdown_done = ctx.queue.is_closed()
+            && ctx.queue.is_empty()
+            && ctx.cell.direct.is_empty()
+            && inflight.is_empty();
         if (stop || shutdown_done) && !draining {
             draining = true;
             drain_deadline = Instant::now() + DRAIN_TIMEOUT;
@@ -1021,7 +1074,14 @@ fn pump_session(ctx: &mut PumpCtx) -> Result<(), String> {
         // tier queue where the scaler can see it.
         if !draining && !killed && ctx.cell.state.load(Ordering::Acquire) == S_READY {
             while inflight.len() < ctx.pool.max_inflight.max(1) {
-                let Some(mut job) = ctx.queue.try_recv() else { break };
+                // Affinity-routed jobs first: the router placed them on
+                // this replica for its cache, so they must not be
+                // overtaken by tier-queue work that fills the slots.
+                let Some(mut job) =
+                    ctx.cell.direct.try_recv().or_else(|| ctx.queue.try_recv())
+                else {
+                    break;
+                };
                 if job.cancel.is_cancelled() {
                     ctx.metrics.cancelled.fetch_add(1, Ordering::Relaxed);
                     continue;
@@ -1065,6 +1125,44 @@ fn pump_session(ctx: &mut PumpCtx) -> Result<(), String> {
                     cancel_sent: false,
                 });
             }
+        }
+
+        // 4b. Fleet prefix plane (protocol v2 only — a v1 worker never
+        // sees these frames). Forward donor fetches the router queued on
+        // this cell, and deliver brokered block runs to the worker in
+        // bounded chunks (req 0 marks a delivery, not a fetch reply).
+        if version >= 2 && !draining && !killed {
+            let reqs = std::mem::take(&mut *ctx.cell.fetch_reqs.lock().unwrap());
+            for (hash, target) in reqs {
+                let req = next_xfer;
+                next_xfer += 1;
+                xfer_pending.insert(req, (target, Vec::new()));
+                if let Err(e) = send(&mut *stream, &Frame::FetchBlocks { req, hash }, ctx) {
+                    return end_dead(ctx, inflight, &e);
+                }
+            }
+            let runs = std::mem::take(&mut *ctx.cell.incoming.lock().unwrap());
+            for run in runs {
+                let total = run.len();
+                let mut shipped = 0usize;
+                for chunk in run.chunks(XFER_CHUNK_BLOCKS) {
+                    shipped += chunk.len();
+                    let frame = Frame::BlocksChunk {
+                        req: 0,
+                        hash: 0,
+                        blocks: chunk.to_vec(),
+                        done: shipped == total,
+                    };
+                    if let Err(e) = send(&mut *stream, &frame, ctx) {
+                        return end_dead(ctx, inflight, &e);
+                    }
+                }
+            }
+        } else if version < 2 {
+            // A v1 worker cannot donate or receive: discard rather than
+            // let the router's requests accumulate unserved.
+            ctx.cell.fetch_reqs.lock().unwrap().clear();
+            ctx.cell.incoming.lock().unwrap().clear();
         }
 
         // 5. Cancellation propagation: a caller that timed out fires its
@@ -1213,6 +1311,12 @@ fn apply_heartbeat(hb: &HeartbeatWire, last: &HeartbeatWire, ctx: &PumpCtx) {
     );
     let c = &ctx.cell;
     c.inflight.store(hb.inflight, Ordering::Relaxed);
+    // The hot-prefix summary the router scores against. Skipped when
+    // both sides are empty (affinity off) so the steady state takes no
+    // lock; the empty-after-nonempty edge still clears a stale ad.
+    if !(hb.hot.is_empty() && last.hot.is_empty()) {
+        *c.hot.lock().unwrap() = hb.hot.clone();
+    }
     c.prefix_hit_tokens
         .store(hb.prefix_hit_tokens, Ordering::Relaxed);
     c.prefix_miss_tokens

@@ -1,0 +1,232 @@
+//! Fleet-wide prefix cache integration: cache-affinity routing
+//! (replicas advertise hot prefix summaries, the router scores each
+//! request's chain hashes against them and direct-places on the longest
+//! match) and cross-replica KV block transfer (a saturated hot replica
+//! spills to a cold peer with a brokered copy of the shared prefix).
+//! Also covers the redesigned dispatch entry API: `CompletionRequest`
+//! builder, per-request deadlines, and the HTTP fields they parse from.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use pick_and_spin::config::{Config, SubstrateKind};
+use pick_and_spin::gateway::{CompletionRequest, LiveStack};
+
+/// 16 words — four 4-token blocks under `kv_block_tokens = 4`, so every
+/// request sharing it produces the same leading chain hashes.
+const PREAMBLE: &str = "alpha beta gamma delta epsilon zeta eta theta \
+                        iota kappa lambda mu nu xi omicron pi";
+
+fn acfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.pool.replicas = [2, 1, 1];
+    cfg.pool.max_inflight = 4;
+    cfg.pool.flush_timeout_s = 0.003;
+    cfg.pool.kv_block_tokens = 4;
+    cfg.pool.affinity.enabled = true;
+    cfg
+}
+
+#[test]
+fn shared_prefix_requests_converge_on_the_cached_replica() {
+    let stack = LiveStack::start_sim(&acfg()).unwrap();
+    let m = &stack.metrics;
+    // The first request lands through the legacy tier queue (no replica
+    // has advertised anything yet) and counts as a fallback; repeats
+    // re-send until the serving replica's hot-prefix ad propagates and
+    // the router scores a match.
+    let mut hits = 0u64;
+    for i in 0..40 {
+        let r = stack.complete(&format!("{PREAMBLE} question {i}"), 4).unwrap();
+        assert!(!r.tokens.is_empty());
+        hits = m.affinity_hits.load(Ordering::Relaxed);
+        if hits > 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(hits > 0, "router never scored an affinity hit");
+    assert!(
+        m.affinity_match_blocks.load(Ordering::Relaxed) >= hits,
+        "every hit matches at least one block"
+    );
+    // The dispatch invariant: with affinity on, every routed request
+    // counts exactly one of hit / fallback.
+    assert_eq!(
+        hits + m.affinity_fallbacks.load(Ordering::Relaxed),
+        m.requests.load(Ordering::Relaxed),
+        "hit + fallback must partition the dispatches"
+    );
+    // The hit is attributed to a specific replica in /metrics.
+    let snap = stack.metrics_snapshot();
+    assert!(
+        snap.iter()
+            .any(|(n, v)| n.starts_with("ps_replica_affinity_hits{") && *v > 0.0),
+        "per-replica affinity series missing"
+    );
+}
+
+#[test]
+fn affinity_disabled_reproduces_legacy_routing() {
+    let mut cfg = acfg();
+    cfg.pool.affinity.enabled = false;
+    let stack = LiveStack::start_sim(&cfg).unwrap();
+    for i in 0..12 {
+        let r = stack.complete(&format!("{PREAMBLE} question {i}"), 4).unwrap();
+        assert!(!r.tokens.is_empty());
+    }
+    // Off = the exact pre-affinity fan-out: no placement decisions, no
+    // transfers, no per-replica series — only the zeroed globals.
+    let m = &stack.metrics;
+    assert_eq!(m.affinity_hits.load(Ordering::Relaxed), 0);
+    assert_eq!(m.affinity_fallbacks.load(Ordering::Relaxed), 0);
+    assert_eq!(m.affinity_match_blocks.load(Ordering::Relaxed), 0);
+    assert_eq!(m.kv_transfers.load(Ordering::Relaxed), 0);
+    assert_eq!(m.kv_transfer_blocks.load(Ordering::Relaxed), 0);
+    let snap = stack.metrics_snapshot();
+    assert_eq!(
+        snap.iter()
+            .find(|(n, _)| n == "ps_affinity_hit_total")
+            .map(|(_, v)| *v),
+        Some(0.0)
+    );
+    assert!(
+        snap.iter().all(|(n, _)| !n.starts_with("ps_replica_affinity")),
+        "per-replica affinity series must not exist with affinity off"
+    );
+}
+
+#[test]
+fn saturated_hot_replica_spills_with_brokered_transfer_loss_free() {
+    let mut cfg = acfg();
+    // One slot, serial decode: the hot replica's private queue fills
+    // well before a 48-request burst drains, forcing the router's
+    // spill path (least-loaded peer + brokered block transfer).
+    cfg.pool.max_inflight = 1;
+    cfg.pool.max_decode_batch = 1;
+    cfg.pool.queue_capacity = 256;
+    let stack = Arc::new(LiveStack::start_sim(&cfg).unwrap());
+    let m = &stack.metrics;
+    // Warm until the router demonstrably matches an advertised prefix.
+    for i in 0..40 {
+        stack.complete(&format!("{PREAMBLE} warm {i}"), 2).unwrap();
+        if m.affinity_hits.load(Ordering::Relaxed) > 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(m.affinity_hits.load(Ordering::Relaxed) > 0, "warm-up never hit");
+
+    let n = 48u64;
+    let handles: Vec<_> = (0..n)
+        .map(|i| {
+            let s = Arc::clone(&stack);
+            std::thread::spawn(move || s.complete(&format!("{PREAMBLE} burst {i}"), 24))
+        })
+        .collect();
+    for h in handles {
+        let r = h
+            .join()
+            .unwrap()
+            .expect("no request may be lost to the spill path");
+        assert!(!r.tokens.is_empty(), "spilled request lost its tokens");
+    }
+    assert_eq!(m.errors.load(Ordering::Relaxed), 0, "spill must not error jobs");
+    // The overflow actually took the transfer path: the donor exported
+    // its cached prefix run to the cold peer at least once.
+    assert!(
+        m.kv_transfers.load(Ordering::Relaxed) > 0,
+        "saturating the hot replica must broker a block transfer \
+         (hits={}, fallbacks={})",
+        m.affinity_hits.load(Ordering::Relaxed),
+        m.affinity_fallbacks.load(Ordering::Relaxed),
+    );
+    assert!(
+        m.kv_transfer_blocks.load(Ordering::Relaxed)
+            >= m.kv_transfers.load(Ordering::Relaxed),
+        "each transfer moves at least one block"
+    );
+}
+
+#[test]
+fn affinity_over_the_rpc_data_plane() {
+    // The same convergence through real worker processes: hot summaries
+    // ride heartbeat frames, the supervisor publishes them into the
+    // replica cells, and direct-placed jobs drain ahead of tier work.
+    let mut cfg = acfg();
+    cfg.pool.substrate = SubstrateKind::Process;
+    cfg.pool.worker_bin = Some(env!("CARGO_BIN_EXE_pick-and-spin").to_string());
+    cfg.pool.worker_log_dir = std::env::var("PS_WORKER_LOG_DIR").ok();
+    let stack = LiveStack::start_sim(&cfg).unwrap();
+    let m = &stack.metrics;
+    let mut hits = 0u64;
+    for i in 0..60 {
+        let r = stack.complete(&format!("{PREAMBLE} question {i}"), 4).unwrap();
+        assert!(!r.tokens.is_empty());
+        hits = m.affinity_hits.load(Ordering::Relaxed);
+        if hits > 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(hits > 0, "no affinity hit over the RPC plane (heartbeat ads)");
+    assert_eq!(m.errors.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn completion_request_builder_and_deadline_override() {
+    let stack = LiveStack::start_sim(&acfg()).unwrap();
+    let r = stack
+        .complete_request(
+            CompletionRequest::new("what is 2 plus 2?")
+                .max_tokens(6)
+                .affinity_key("tenant-7"),
+        )
+        .unwrap();
+    assert!(!r.tokens.is_empty());
+    assert!(r.tokens.len() <= 6);
+    // A per-request deadline overrides the global timeout: 2 ms cannot
+    // cover a 256-token decode on the calibrated sim engine.
+    let err = stack
+        .complete_request(
+            CompletionRequest::new("please summarize everything about alpha beta")
+                .max_tokens(256)
+                .deadline_s(0.002),
+        )
+        .expect_err("a 2ms deadline cannot cover a 256-token decode");
+    assert!(format!("{err:#}").contains("timed out"), "{err:#}");
+    assert!(stack.metrics.timeouts.load(Ordering::Relaxed) >= 1);
+}
+
+#[test]
+fn http_completions_accept_affinity_and_deadline_fields() {
+    use pick_and_spin::gateway::http::http_request;
+    use pick_and_spin::gateway::serve_http;
+
+    let stack = Arc::new(LiveStack::start_sim(&acfg()).unwrap());
+    let srv = serve_http(Arc::clone(&stack), 0, 8).unwrap();
+    let (status, body) = http_request(
+        srv.port,
+        "POST",
+        "/v1/completions",
+        Some(
+            r#"{"prompt": "what is 1 plus 2?", "max_tokens": 5,
+                "affinity_key": "sess-1", "deadline_s": 30.0}"#,
+        ),
+    )
+    .unwrap();
+    assert_eq!(status, 200, "body: {body}");
+    let j = pick_and_spin::util::json::Json::parse(&body).unwrap();
+    assert!(j.rarr("tokens").unwrap().len() <= 5);
+    // "session" is accepted as an alias for affinity_key.
+    let (status, body) = http_request(
+        srv.port,
+        "POST",
+        "/v1/completions",
+        Some(r#"{"prompt": "what is 1 plus 2?", "max_tokens": 5, "session": "sess-1"}"#),
+    )
+    .unwrap();
+    assert_eq!(status, 200, "body: {body}");
+    srv.stop();
+}

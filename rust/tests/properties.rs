@@ -50,7 +50,7 @@ fn prop_kv_manager_never_leaks_blocks() {
             if g.bool() {
                 let prompt = g.usize(1..40);
                 let gen_budget = g.usize(0..40);
-                if kv.can_admit(prompt + gen_budget) {
+                if kv.blocks_for_tokens(prompt + gen_budget) <= kv.available_blocks() {
                     kv.admit(SeqId(i), prompt, gen_budget).unwrap();
                     live.push(SeqId(i));
                 }
@@ -97,7 +97,7 @@ fn prop_prefix_cache_refcounts_conserve_blocks() {
                 // The pre-check is optimistic (pinning a matched chain
                 // can shrink what is actually evictable), so a failed
                 // admit is legal — it must just roll back cleanly.
-                if kv.can_admit_blocks(kv.blocks_needed(&ids, max_new))
+                if kv.probe(&ids, max_new).admissible
                     && kv.admit_prefix(SeqId(i), &ids, max_new).is_ok()
                 {
                     live.push(SeqId(i));
@@ -200,9 +200,20 @@ fn prop_json_strings_roundtrip_hostile_text() {
     });
 }
 
+/// A chain hash stressing the full u64 range — including values above
+/// f64's 2^53 exact-integer ceiling, which is why hashes cross the wire
+/// as hex strings rather than JSON numbers.
+fn arb_hash(g: &mut Gen) -> u64 {
+    match g.usize(0..4) {
+        0 => u64::MAX,
+        1 => (1u64 << 53) + 1,
+        _ => g.u64(0..u64::MAX),
+    }
+}
+
 /// One random wire frame (the kinds that carry variable payloads).
 fn arb_frame(g: &mut Gen) -> Frame {
-    match g.usize(0..6) {
+    match g.usize(0..9) {
         0 => Frame::Ping { nonce: g.u64(0..1_000_000) },
         1 => Frame::Job {
             job: g.u64(0..1000),
@@ -215,6 +226,16 @@ fn arb_frame(g: &mut Gen) -> Frame {
         },
         3 => Frame::Cancelled { job: g.u64(0..1000) },
         4 => Frame::Returned { job: g.u64(0..1000) },
+        5 => Frame::PrefixAd {
+            prefixes: g.vec(0..4, |g| (arb_hash(g), g.u32(1..64))),
+        },
+        6 => Frame::FetchBlocks { req: g.u64(1..1000), hash: arb_hash(g) },
+        7 => Frame::BlocksChunk {
+            req: g.u64(0..1000),
+            hash: arb_hash(g),
+            blocks: g.vec(0..3, |g| g.vec(0..5, |g| g.u32(0..50_000) as i32)),
+            done: g.bool(),
+        },
         _ => Frame::Gone,
     }
 }
@@ -259,6 +280,136 @@ fn prop_frame_reader_decodes_any_fragmentation() {
         assert!(
             r.next().expect("severed tail must not error").is_none(),
             "a mid-frame sever must leave the reader pending, not yield a frame"
+        );
+    });
+}
+
+/// Read a chaos endpoint dry (zero timeout → `WouldBlock` when idle,
+/// `Ok(0)` on sever), decoding through a caller-held reader so partial
+/// frames persist across calls.
+fn drain_chaos(
+    end: &mut pick_and_spin::testkit::chaos::ChaosEnd,
+    reader: &mut FrameReader,
+) -> (Vec<Frame>, bool) {
+    use pick_and_spin::substrate::proto::Transport;
+    end.set_read_timeout(Some(std::time::Duration::ZERO)).unwrap();
+    let mut out = Vec::new();
+    let mut buf = [0u8; 96];
+    loop {
+        match end.read(&mut buf) {
+            Ok(0) => return (out, true),
+            Ok(n) => {
+                reader.extend(&buf[..n]);
+                while let Some(f) = reader.next().expect("valid stream never desyncs") {
+                    out.push(f);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                return (out, false);
+            }
+            Err(e) => panic!("chaos read failed: {e}"),
+        }
+    }
+}
+
+#[test]
+fn prop_kv_transfer_frames_survive_chaos_transport() {
+    // The fetch/chunk exchange that moves KV blocks between replicas,
+    // run over the fault-injecting transport: whatever fragment
+    // boundaries the seed picks, the reassembled run is bit-identical
+    // to what the donor exported — and a link severed mid-transfer ends
+    // in a clean EOF with `done` never observed, so the recipient
+    // imports nothing rather than a truncated prefix.
+    use pick_and_spin::substrate::proto::write_frame;
+    use pick_and_spin::testkit::chaos;
+
+    check("kv transfer over chaos", 80, |g: &mut Gen| {
+        let hash = arb_hash(g);
+        let run: Vec<Vec<i32>> =
+            g.vec(1..6, |g| g.vec(1..8, |g| g.u32(0..50_000) as i32));
+
+        // Clean transfer: supervisor fetches, donor answers block by
+        // block with `done` on the last chunk.
+        let (mut sup, mut wrk) = chaos::pair(g.u64(0..u64::MAX));
+        write_frame(&mut sup, &Frame::FetchBlocks { req: 7, hash }).unwrap();
+        let mut wrk_reader = FrameReader::new();
+        let (got, eof) = drain_chaos(&mut wrk, &mut wrk_reader);
+        assert!(!eof);
+        assert_eq!(got, vec![Frame::FetchBlocks { req: 7, hash }]);
+        for (i, b) in run.iter().enumerate() {
+            write_frame(&mut wrk, &Frame::BlocksChunk {
+                req: 7,
+                hash,
+                blocks: vec![b.clone()],
+                done: i + 1 == run.len(),
+            })
+            .unwrap();
+        }
+        let mut sup_reader = FrameReader::new();
+        let (chunks, _) = drain_chaos(&mut sup, &mut sup_reader);
+        let mut rebuilt: Vec<Vec<i32>> = Vec::new();
+        let mut done = false;
+        for f in chunks {
+            match f {
+                Frame::BlocksChunk { req: 7, hash: h, blocks, done: d } => {
+                    assert_eq!(h, hash, "chunk answered with the wrong hash");
+                    assert!(!done, "chunks after done");
+                    rebuilt.extend(blocks);
+                    done = d;
+                }
+                f => panic!("unexpected frame {f:?}"),
+            }
+        }
+        assert!(done, "transfer must terminate with done");
+        assert_eq!(rebuilt, run, "reassembled run must match the export");
+
+        // Severed mid-transfer: the tail chunk is held in flight and the
+        // link cut — the receiver sees every fully delivered chunk, then
+        // EOF; `done` never arrives, so nothing gets imported.
+        let (mut sup, mut wrk) = chaos::pair(g.u64(0..u64::MAX));
+        write_frame(&mut wrk, &Frame::BlocksChunk {
+            req: 9,
+            hash,
+            blocks: run[..run.len() - 1].to_vec(),
+            done: false,
+        })
+        .unwrap();
+        wrk.hold();
+        write_frame(&mut wrk, &Frame::BlocksChunk {
+            req: 9,
+            hash,
+            blocks: vec![run[run.len() - 1].clone()],
+            done: true,
+        })
+        .unwrap();
+        wrk.sever();
+        let mut reader = FrameReader::new();
+        let mut partial: Vec<Vec<i32>> = Vec::new();
+        let mut saw_done = false;
+        loop {
+            let (fs, eof) = drain_chaos(&mut sup, &mut reader);
+            for f in fs {
+                match f {
+                    Frame::BlocksChunk { blocks, done, .. } => {
+                        partial.extend(blocks);
+                        saw_done |= done;
+                    }
+                    f => panic!("unexpected frame {f:?}"),
+                }
+            }
+            if eof {
+                break;
+            }
+        }
+        assert!(!saw_done, "a severed transfer must never look complete");
+        assert_eq!(
+            partial,
+            run[..run.len() - 1].to_vec(),
+            "delivered chunks must still decode exactly"
+        );
+        assert!(
+            reader.next().expect("severed tail must not error").is_none(),
+            "mid-frame sever leaves the reader pending, never a phantom frame"
         );
     });
 }
