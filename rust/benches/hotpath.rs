@@ -141,6 +141,7 @@ fn main() {
                     // Short distinct prompts — the cache is inert here;
                     // the production default keeps the comparison honest.
                     prefix_cache: PrefixCacheConfig::default(),
+                    speculative: pick_and_spin::config::SpeculativeConfig::disabled(),
                 },
             );
             let mut queued: Vec<usize> = (0..64).rev().collect();
@@ -210,6 +211,7 @@ fn main() {
                     kv_blocks: 1024,
                     kv_block_tokens: 16,
                     prefix_cache: prefix,
+                    speculative: pick_and_spin::config::SpeculativeConfig::disabled(),
                 },
             );
             let mut queued: Vec<usize> = (0..prompts.len()).rev().collect();
@@ -326,6 +328,169 @@ fn main() {
             aff_rate * 100.0,
             single_rate * 100.0
         );
+    }
+
+    if selected("speculative") {
+        // Cross-tier speculative decoding end-to-end: the pinned BENCH_7
+        // scenario — 64 concurrent hard prompts (routed to verify tiers),
+        // 32-token budgets, draft window 4 — served plain, speculative at
+        // a fixed 0.7 sim acceptance, and speculative at acceptance 0
+        // (every draft rejected; the EMA latch must make it ≈ plain).
+        // Tokens/sec takes the best of 3 repeats per scenario to damp
+        // shared-runner noise; TTFT/TPOT percentiles pool all repeats.
+        use pick_and_spin::config::Config;
+        use pick_and_spin::gateway::LiveStack;
+        use pick_and_spin::util::json::Json;
+        use pick_and_spin::util::stats::percentile;
+        use std::sync::atomic::Ordering;
+        use std::sync::Arc;
+
+        const REQS: usize = 64;
+        const MAX_NEW: usize = 32;
+        const DRAFT_TOKENS: usize = 4;
+        const REPEATS: usize = 3;
+
+        struct SpecRun {
+            tps: f64,
+            ttfts: Vec<f64>,
+            tpots: Vec<f64>,
+            drafted: u64,
+            accepted: u64,
+            rejected: u64,
+            verify_steps: u64,
+        }
+
+        let run = |enabled: bool, accept: f64| -> SpecRun {
+            let mut out = SpecRun {
+                tps: 0.0,
+                ttfts: Vec::new(),
+                tpots: Vec::new(),
+                drafted: 0,
+                accepted: 0,
+                rejected: 0,
+                verify_steps: 0,
+            };
+            for _ in 0..REPEATS {
+                let mut cfg = Config::default();
+                cfg.pool.replicas = [1, 1, 1];
+                cfg.pool.max_inflight = 16;
+                cfg.pool.max_decode_batch = 8;
+                cfg.pool.flush_timeout_s = 0.001;
+                cfg.pool.scale_interval_s = 0.02;
+                cfg.pool.speculative.enabled = enabled;
+                cfg.pool.speculative.draft_tier = 0;
+                cfg.pool.speculative.draft_tokens = DRAFT_TOKENS;
+                cfg.pool.speculative.sim_accept = accept;
+                let stack = Arc::new(LiveStack::start_sim(&cfg).expect("bench stack"));
+                // Let the router publish draft-tier availability (first
+                // control pass) before the burst arrives.
+                std::thread::sleep(std::time::Duration::from_millis(120));
+                let t0 = std::time::Instant::now();
+                let handles: Vec<_> = (0..REQS)
+                    .map(|i| {
+                        let s = Arc::clone(&stack);
+                        std::thread::spawn(move || {
+                            s.complete(
+                                &format!(
+                                    "prove that series {i} converges and \
+                                     derive the bound"
+                                ),
+                                MAX_NEW,
+                            )
+                            .expect("bench request")
+                        })
+                    })
+                    .collect();
+                let mut toks = 0usize;
+                for h in handles {
+                    let r = h.join().expect("bench thread");
+                    toks += r.tokens.len();
+                    out.ttfts.push(r.ttft_s);
+                    if r.tokens.len() > 1 {
+                        out.tpots.push(
+                            (r.latency_s - r.ttft_s) / (r.tokens.len() - 1) as f64,
+                        );
+                    }
+                }
+                out.tps = out.tps.max(toks as f64 / t0.elapsed().as_secs_f64());
+                // Replica loops flush scheduler stats on their next turn.
+                std::thread::sleep(std::time::Duration::from_millis(20));
+                let m = &stack.metrics;
+                out.drafted = m.spec_drafted_tokens.load(Ordering::Relaxed);
+                out.accepted = m.spec_accepted_tokens.load(Ordering::Relaxed);
+                out.rejected = m.spec_rejected_tokens.load(Ordering::Relaxed);
+                out.verify_steps = m.spec_verify_steps.load(Ordering::Relaxed);
+            }
+            out
+        };
+
+        let plain = run(false, 0.0);
+        let spec = run(true, 0.7);
+        let zero = run(true, 0.0);
+        let line = |name: &str, r: &SpecRun, note: &str| {
+            println!(
+                "{:<44} {:>12.0} tok/s   ttft p50 {:>6.2} ms   tpot p50 {:>7.1} µs   ({note})",
+                name,
+                r.tps,
+                percentile(&r.ttfts, 50.0) * 1e3,
+                percentile(&r.tpots, 50.0) * 1e6,
+            );
+        };
+        line("speculative decode (gateway, sim)", &plain, "plain");
+        line("speculative decode (gateway, sim)", &spec, "accept 0.7, k=4");
+        line("speculative decode (gateway, sim)", &zero, "accept 0.0, k=4");
+        assert!(
+            spec.drafted > 0 && spec.accepted > 0,
+            "speculation never engaged (drafted {}, accepted {})",
+            spec.drafted,
+            spec.accepted
+        );
+        assert!(
+            spec.tps > plain.tps,
+            "speculative decode at 0.7 acceptance must beat plain \
+             ({:.0} vs {:.0} tok/s)",
+            spec.tps,
+            plain.tps
+        );
+        assert!(
+            zero.tps >= 0.95 * plain.tps,
+            "speculation at 0 acceptance must auto-disable to within 5% \
+             of plain ({:.0} vs {:.0} tok/s)",
+            zero.tps,
+            plain.tps
+        );
+
+        let block = |r: &SpecRun| {
+            Json::obj(vec![
+                ("tok_s", Json::num(r.tps)),
+                ("ttft_p50_s", Json::num(percentile(&r.ttfts, 50.0))),
+                ("ttft_p95_s", Json::num(percentile(&r.ttfts, 95.0))),
+                ("tpot_p50_s", Json::num(percentile(&r.tpots, 50.0))),
+                ("tpot_p95_s", Json::num(percentile(&r.tpots, 95.0))),
+                ("spec_drafted_tokens", Json::num(r.drafted as f64)),
+                ("spec_accepted_tokens", Json::num(r.accepted as f64)),
+                ("spec_rejected_tokens", Json::num(r.rejected as f64)),
+                ("spec_verify_steps", Json::num(r.verify_steps as f64)),
+            ])
+        };
+        let report = Json::obj(vec![
+            ("bench", Json::str("speculative")),
+            (
+                "scenario",
+                Json::obj(vec![
+                    ("requests", Json::num(REQS as f64)),
+                    ("max_tokens", Json::num(MAX_NEW as f64)),
+                    ("draft_tokens", Json::num(DRAFT_TOKENS as f64)),
+                    ("repeats", Json::num(REPEATS as f64)),
+                ]),
+            ),
+            ("plain", block(&plain)),
+            ("spec_accept_70", block(&spec)),
+            ("spec_accept_0", block(&zero)),
+            ("speedup_at_70", Json::num(spec.tps / plain.tps)),
+        ]);
+        std::fs::write("BENCH_7.json", report.dump()).expect("write BENCH_7.json");
+        println!("wrote BENCH_7.json (speedup at 0.7 acceptance: {:.2}x)", spec.tps / plain.tps);
     }
 
     // Live PJRT path (needs artifacts).

@@ -67,10 +67,9 @@ impl PrefixCacheConfig {
 }
 
 /// Everything an admission decision needs from the KV pool, in one call:
-/// the result of [`KvBlockManager::probe`]. Replaces the scattered
-/// `lookup_prefix` / `admission_need` / `blocks_needed` / `can_admit` /
-/// `can_admit_blocks` probes so the scheduler's admission path and the
-/// router's affinity scorer share one code path.
+/// the result of [`KvBlockManager::probe`]. The scheduler's admission
+/// path and the router's affinity scorer share this one code path (the
+/// scattered per-question probes it replaced are gone).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct AdmissionProbe {
     /// Prompt tokens already KV-resident under the min-run hit gate —
@@ -303,26 +302,6 @@ impl KvBlockManager {
         }
     }
 
-    /// Cached prompt-prefix tokens a request with these ids would reuse
-    /// right now (0 when the cache is off or cold).
-    #[deprecated(note = "use probe(ids, 0).cached_tokens")]
-    pub fn lookup_prefix(&self, ids: &[i32]) -> usize {
-        self.match_keys(ids).len() * self.block_tokens
-    }
-
-    /// Admission pre-check estimate: `(est_blocks, suffix_blocks)`.
-    #[deprecated(note = "use probe(ids, max_new).{needed_blocks, suffix_blocks}")]
-    pub fn admission_need(&self, ids: &[i32], max_new: usize) -> (usize, usize) {
-        let p = self.probe(ids, max_new);
-        (p.needed_blocks, p.suffix_blocks)
-    }
-
-    /// The `est_blocks` half of the admission estimate.
-    #[deprecated(note = "use probe(ids, max_new).needed_blocks")]
-    pub fn blocks_needed(&self, ids: &[i32], max_new: usize) -> usize {
-        self.probe(ids, max_new).needed_blocks
-    }
-
     /// Cached blocks reclaimable on demand (unreferenced, no referenced
     /// descendants) — O(1) via the maintained pin count.
     fn reclaimable_blocks(&self) -> usize {
@@ -332,18 +311,6 @@ impl KvBlockManager {
     /// Blocks an admission can draw on: free plus reclaimable cache.
     pub fn available_blocks(&self) -> usize {
         self.free_blocks + self.reclaimable_blocks()
-    }
-
-    /// Can a sequence with this worst-case token need be admitted now?
-    #[deprecated(note = "use probe(...).admissible or available_blocks()")]
-    pub fn can_admit(&self, max_tokens: usize) -> bool {
-        self.blocks_for(max_tokens) <= self.available_blocks()
-    }
-
-    /// Can `blocks` more blocks be reserved now?
-    #[deprecated(note = "use probe(...).admissible or available_blocks()")]
-    pub fn can_admit_blocks(&self, blocks: usize) -> bool {
-        blocks <= self.available_blocks()
     }
 
     /// Evict one unreferenced leaf (LRU), freeing its block.
@@ -550,6 +517,23 @@ impl KvBlockManager {
         }
         a.tokens += 1;
         Ok(())
+    }
+
+    /// Roll back up to `n` recorded tokens — the speculative-decode
+    /// rejection path. Only the *logical* sequence length shrinks; the
+    /// reservation (and thus every private block) is untouched and the
+    /// shared prefix chain is never walked, so rollback can neither free
+    /// a block nor perturb a refcount. Returns the tokens actually
+    /// rolled back (capped at the current length).
+    pub fn rollback_tokens(&mut self, id: SeqId, n: usize) -> usize {
+        match self.seqs.get_mut(&id) {
+            Some(a) => {
+                let rolled = n.min(a.tokens);
+                a.tokens -= rolled;
+                rolled
+            }
+            None => 0,
+        }
     }
 
     /// Release a finished sequence; returns its private blocks freed.
@@ -912,6 +896,46 @@ mod tests {
     }
 
     #[test]
+    fn rollback_restores_headroom_without_freeing_blocks() {
+        let mut kv = KvBlockManager::new(8, 4);
+        kv.admit(SeqId(1), 2, 4).unwrap(); // reserve 6 tokens → 2 blocks
+        for _ in 0..4 {
+            kv.append_token(SeqId(1)).unwrap();
+        }
+        assert!(kv.append_token(SeqId(1)).is_err(), "budget exhausted");
+        // Rolling back rejected draft tokens re-opens append headroom…
+        assert_eq!(kv.rollback_tokens(SeqId(1), 3), 3);
+        kv.check_invariants().unwrap();
+        // …but never touches block accounting.
+        assert_eq!(kv.used_blocks(), 2);
+        for _ in 0..3 {
+            kv.append_token(SeqId(1)).unwrap();
+        }
+        assert!(kv.append_token(SeqId(1)).is_err());
+        // Over-rollback caps at the current length; unknown ids roll 0.
+        assert_eq!(kv.rollback_tokens(SeqId(1), 100), 6);
+        assert_eq!(kv.rollback_tokens(SeqId(99), 5), 0);
+        kv.check_invariants().unwrap();
+        assert_eq!(kv.release(SeqId(1)), 2);
+    }
+
+    #[test]
+    fn rollback_never_perturbs_shared_prefix_refcounts() {
+        let mut kv = prefix_kv(16, 4);
+        let prompt = ids(0..8); // 2 shared blocks
+        kv.admit_prefix(SeqId(1), &prompt, 4).unwrap();
+        assert_eq!(kv.admit_prefix(SeqId(2), &prompt, 4).unwrap(), 8);
+        kv.append_token(SeqId(2)).unwrap();
+        kv.append_token(SeqId(2)).unwrap();
+        assert_eq!(kv.rollback_tokens(SeqId(2), 2), 2);
+        kv.check_invariants().unwrap();
+        assert_eq!(kv.cache_blocks(), 2, "shared chain untouched by rollback");
+        kv.release(SeqId(1));
+        kv.release(SeqId(2));
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
     fn double_admit_rejected() {
         let mut kv = KvBlockManager::new(8, 4);
         kv.admit(SeqId(1), 1, 1).unwrap();
@@ -970,8 +994,8 @@ mod tests {
         range.collect()
     }
 
-    /// Cached prompt tokens a request would reuse (the old
-    /// `lookup_prefix`, now through the collapsed probe API).
+    /// Cached prompt tokens a request would reuse right now (via the
+    /// collapsed probe API).
     fn cached(kv: &KvBlockManager, ids: &[i32]) -> usize {
         kv.probe(ids, 0).cached_tokens
     }

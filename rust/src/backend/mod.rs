@@ -94,6 +94,23 @@ pub fn service_time_with_prefix(
     ServiceTime { prefill_s: prefill, decode_s: decode }
 }
 
+/// Expected tokens landed per verify step under speculative decoding
+/// with per-token acceptance rate `accept` and draft window `k`: the
+/// correction token always lands, plus draft token `i` iff the first `i`
+/// drafts all pass — `1 + Σ_{i=1..k} a^i`. This is the decode-throughput
+/// multiplier the simulator and scaler use; 1.0 when speculation is off
+/// (`k = 0` or `accept ≤ 0`).
+pub fn spec_tokens_per_step(accept: f64, k: usize) -> f64 {
+    let a = accept.clamp(0.0, 1.0);
+    let mut run = 1.0;
+    let mut total = 1.0;
+    for _ in 0..k {
+        run *= a;
+        total += run;
+    }
+    total
+}
+
 /// $ cost of one request: the replica-seconds it occupied divided by the
 /// streams sharing the replica, at the model's GPU rate.
 pub fn request_cost_usd(
@@ -167,6 +184,20 @@ mod tests {
         let over =
             service_time_with_prefix(&z[1], BackendKind::Vllm, 100, 500, 10, &mut r3);
         assert_eq!(over.prefill_s, 0.0);
+    }
+
+    #[test]
+    fn spec_tokens_per_step_matches_the_geometric_sum() {
+        // Off: exactly one token per step.
+        assert_eq!(spec_tokens_per_step(0.0, 4), 1.0);
+        assert_eq!(spec_tokens_per_step(0.7, 0), 1.0);
+        // Perfect acceptance lands the whole window plus the correction.
+        assert_eq!(spec_tokens_per_step(1.0, 4), 5.0);
+        // a=0.5, k=2 → 1 + 0.5 + 0.25.
+        assert!((spec_tokens_per_step(0.5, 2) - 1.75).abs() < 1e-12);
+        // Out-of-range rates clamp rather than exploding the multiplier.
+        assert_eq!(spec_tokens_per_step(3.0, 4), 5.0);
+        assert_eq!(spec_tokens_per_step(-1.0, 4), 1.0);
     }
 
     #[test]

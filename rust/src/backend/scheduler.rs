@@ -25,6 +25,7 @@ use anyhow::{anyhow, Result};
 
 use crate::backend::batcher::BatchPolicy;
 use crate::backend::kv_cache::{KvBlockManager, PrefixCacheConfig, PrefixStats, SeqId};
+use crate::config::SpeculativeConfig;
 use crate::telemetry::Histogram;
 
 /// Shared cancellation flag for one request: the caller's side sets it
@@ -85,6 +86,34 @@ pub trait StepEngine {
     /// One decode step for every sequence in `batch` (its length is
     /// always a compiled ladder size ≤ [`Self::max_batch`]).
     fn step(&mut self, batch: &mut [&mut Self::Seq]) -> Result<()>;
+
+    /// Propose up to `k` draft tokens for `seq` — the small-tier half of
+    /// cross-tier speculative decoding. Engines that cannot draft return
+    /// an empty vec (the default), and the scheduler falls back to plain
+    /// decode for that batch. Implementations must cap the draft at the
+    /// sequence's remaining budget minus one, so the verify step's
+    /// correction token always has headroom.
+    fn draft_tokens(&mut self, seq: &Self::Seq, k: usize) -> Vec<i32> {
+        let _ = (seq, k);
+        Vec::new()
+    }
+
+    /// Score each sequence's draft tokens against its resident KV in
+    /// *one* batched step, appending the longest accepted draft prefix
+    /// plus one correction token (so a verify step always lands between
+    /// 1 and k + 1 tokens per sequence). Returns the count of **draft**
+    /// tokens accepted per sequence, aligned with `batch`. The default
+    /// ignores the drafts and runs a plain step — engines without a
+    /// verify kernel degrade to ordinary decode, never to an error.
+    fn verify_batch(
+        &mut self,
+        batch: &mut [&mut Self::Seq],
+        drafts: &[&[i32]],
+    ) -> Result<Vec<usize>> {
+        let _ = drafts;
+        self.step(batch)?;
+        Ok(vec![0; batch.len()])
+    }
 
     /// Largest decode batch this engine can execute.
     fn max_batch(&self) -> usize {
@@ -163,6 +192,11 @@ impl StepEngine for crate::runtime::LmEngine {
         // `start_seq` clamps every budget to the compiled context.
         self.seq_max
     }
+
+    // `draft_tokens` / `verify_batch` keep the trait defaults: the
+    // compiled path decodes plainly until a multi-position verify module
+    // is exported (ROADMAP direction 4's compiled half);
+    // `Sequence::rollback_draft` is the cleanup hook it will use.
 }
 
 /// Scheduler knobs (derived from [`crate::config::PoolConfig`]).
@@ -177,6 +211,11 @@ pub struct SchedulerConfig {
     /// Radix prefix cache over the paged pool: shared prompt prefixes
     /// are refcounted and admission charges only the uncached suffix.
     pub prefix_cache: PrefixCacheConfig,
+    /// Cross-tier speculative decoding. Verify-side replicas get the
+    /// pool's config verbatim; draft-tier replicas (and anything below)
+    /// get it force-disabled by the pairing rule, and the disabled
+    /// default reproduces plain decode bit-for-bit.
+    pub speculative: SpeculativeConfig,
 }
 
 /// Counters a scheduler accumulates over its lifetime.
@@ -203,6 +242,14 @@ pub struct SchedulerStats {
     pub peak_inflight: usize,
     /// Distribution of formed decode-batch sizes.
     pub batch_hist: Histogram,
+    /// Speculative decode: draft tokens proposed to verify steps.
+    pub spec_drafted_tokens: u64,
+    /// Draft tokens the verify step accepted (landed without recompute).
+    pub spec_accepted_tokens: u64,
+    /// Draft tokens rejected and rolled back out of the KV ledger.
+    pub spec_rejected_tokens: u64,
+    /// Batched verify steps executed (each replaces 1..=k+1 plain steps).
+    pub spec_verify_steps: u64,
 }
 
 impl Default for SchedulerStats {
@@ -218,9 +265,22 @@ impl Default for SchedulerStats {
             tokens_out: 0,
             peak_inflight: 0,
             batch_hist: Histogram::for_batch_sizes(),
+            spec_drafted_tokens: 0,
+            spec_accepted_tokens: 0,
+            spec_rejected_tokens: 0,
+            spec_verify_steps: 0,
         }
     }
 }
+
+/// EMA smoothing for the observed acceptance rate: one fifth of each
+/// verify step's rate folds in, so a burst of rejections moves the
+/// signal but a single unlucky step cannot.
+const SPEC_EMA_ALPHA: f64 = 0.2;
+
+/// Verify steps before the EMA is trusted for auto-disable — the EMA
+/// initializes optimistically at 1.0 and needs a few steps of evidence.
+const SPEC_EMA_WARMUP: u64 = 8;
 
 /// Outcome of an admission attempt.
 pub enum Admit<T> {
@@ -317,6 +377,17 @@ pub struct Scheduler<E: StepEngine, T> {
     /// gateway retries a bounced job verbatim every replica tick, and
     /// re-tokenizing + re-hashing it each attempt is pure waste.
     rejected_ids: Option<(String, Vec<i32>)>,
+    /// EMA of the per-verify-step draft acceptance rate (init 1.0).
+    spec_accept_ema: f64,
+    /// Latched once the EMA drops below `speculative.min_accept_rate`
+    /// after warmup: this replica stops speculating for its lifetime
+    /// (the workload has told us drafts don't match).
+    spec_disabled: bool,
+    /// Router-fed liveness of the paired draft tier: false while the
+    /// draft tier is cold, saturated, or mid-recovery, and every batch
+    /// falls back to plain decode (loss-free — the requeue invariants
+    /// never see a draft in flight).
+    draft_available: bool,
     pub stats: SchedulerStats,
 }
 
@@ -341,7 +412,38 @@ impl<E: StepEngine, T> Scheduler<E, T> {
             prefill_flushing: false,
             flushing: false,
             rejected_ids: None,
+            spec_accept_ema: 1.0,
+            spec_disabled: false,
+            draft_available: false,
             stats: SchedulerStats::default(),
+        }
+    }
+
+    /// Router signal: whether the paired draft tier can draft right now.
+    /// Defaults to false, so a scheduler speculates only once its owner
+    /// confirms the draft tier is warm and has headroom.
+    pub fn set_draft_available(&mut self, ok: bool) {
+        self.draft_available = ok;
+    }
+
+    /// Observed draft-acceptance EMA (1.0 until the first verify step).
+    pub fn spec_accept_ema(&self) -> f64 {
+        self.spec_accept_ema
+    }
+
+    /// Whether this scheduler still speculates (config on and the EMA
+    /// has not tripped the auto-disable latch). Draft-tier availability
+    /// is a separate, transient condition.
+    pub fn spec_active(&self) -> bool {
+        self.cfg.speculative.enabled && !self.spec_disabled
+    }
+
+    /// Draft window for the next decode batch: 0 = plain decode.
+    fn spec_draft_window(&self) -> usize {
+        if self.spec_active() && self.draft_available {
+            self.cfg.speculative.draft_tokens
+        } else {
+            0
         }
     }
 
@@ -857,6 +959,36 @@ impl<E: StepEngine, T> Scheduler<E, T> {
         }
         self.cursor = (start + b) % active.max(1);
 
+        // Speculative draft pass: ask the engine for a lookahead window
+        // per selected slot and charge the drafts against each
+        // sequence's existing KV reservation *optimistically* (draft
+        // appends only move the logical length — the reservation's
+        // blocks were counted at admission, so drafting can never
+        // allocate). A slot whose reservation is exhausted truncates its
+        // draft; if no slot drafts anything, the batch runs plain.
+        let spec_k = self.spec_draft_window();
+        let mut drafts: Vec<Vec<i32>> = Vec::new();
+        if spec_k > 0 {
+            let engine = &mut self.engine;
+            let kv = &mut self.kv;
+            for (i, slot) in self.slots.iter_mut().enumerate() {
+                if !selected[i] {
+                    continue;
+                }
+                let mut d = engine.draft_tokens(&slot.seq, spec_k);
+                let mut appended = 0;
+                while appended < d.len() {
+                    if kv.append_token(slot.id).is_err() {
+                        break;
+                    }
+                    appended += 1;
+                }
+                d.truncate(appended);
+                drafts.push(d);
+            }
+        }
+        let speculate = drafts.iter().any(|d| !d.is_empty());
+
         let engine = &mut self.engine;
         let mut ids = Vec::with_capacity(b);
         let mut refs: Vec<&mut E::Seq> = Vec::with_capacity(b);
@@ -866,15 +998,59 @@ impl<E: StepEngine, T> Scheduler<E, T> {
                 refs.push(&mut slot.seq);
             }
         }
-        engine.step(&mut refs)?;
-        for id in ids {
-            let _ = self.kv.append_token(id);
+        if speculate {
+            let before: Vec<usize> = refs.iter().map(|s| s.tokens().len()).collect();
+            let slices: Vec<&[i32]> = drafts.iter().map(|d| d.as_slice()).collect();
+            let accepted = engine.verify_batch(&mut refs, &slices)?;
+            // Settle the KV ledger against what actually landed: the
+            // drafts were charged up front, so rejected drafts roll
+            // back and the correction/bonus tokens append the shortfall.
+            // Rollback shrinks only the logical length — blocks and
+            // shared-prefix refcounts are untouched by construction.
+            let mut step_drafted = 0u64;
+            let mut step_accepted = 0u64;
+            let mut landed_total = 0u64;
+            for (j, id) in ids.iter().enumerate() {
+                let drafted = drafts[j].len();
+                let landed = refs[j].tokens().len().saturating_sub(before[j]);
+                if landed < drafted {
+                    self.kv.rollback_tokens(*id, drafted - landed);
+                } else {
+                    for _ in 0..landed - drafted {
+                        let _ = self.kv.append_token(*id);
+                    }
+                }
+                step_drafted += drafted as u64;
+                step_accepted +=
+                    accepted.get(j).copied().unwrap_or(0).min(drafted) as u64;
+                landed_total += landed as u64;
+            }
+            self.stats.spec_drafted_tokens += step_drafted;
+            self.stats.spec_accepted_tokens += step_accepted;
+            self.stats.spec_rejected_tokens += step_drafted - step_accepted;
+            self.stats.spec_verify_steps += 1;
+            self.stats.tokens_out += landed_total;
+            if step_drafted > 0 {
+                let rate = step_accepted as f64 / step_drafted as f64;
+                self.spec_accept_ema =
+                    (1.0 - SPEC_EMA_ALPHA) * self.spec_accept_ema + SPEC_EMA_ALPHA * rate;
+                if self.stats.spec_verify_steps >= SPEC_EMA_WARMUP
+                    && self.spec_accept_ema < self.cfg.speculative.min_accept_rate
+                {
+                    self.spec_disabled = true;
+                }
+            }
+        } else {
+            engine.step(&mut refs)?;
+            for id in ids {
+                let _ = self.kv.append_token(id);
+            }
+            self.stats.tokens_out += b as u64;
         }
         self.stats.decode_steps += 1;
         if b > 1 {
             self.stats.batched_steps += 1;
         }
-        self.stats.tokens_out += b as u64;
         self.stats.batch_hist.observe(b as f64);
         self.retire(&mut tick.finished);
         tick.stepped = b;
@@ -973,6 +1149,18 @@ pub struct SimStepEngine {
     /// computed KV over the wire beats recomputing it, and the gap is
     /// what the affinity benches measure.
     pub transfer_per_token_us: u64,
+    /// Per-draft-token surcharge on a verify step: scoring k extra
+    /// positions against resident KV costs far less than k extra
+    /// dispatches (the whole point of batched verify), but is not free.
+    pub verify_per_token_us: u64,
+    /// Speculative acceptance model `(rate, rng)`: the probability each
+    /// draft token matches what this engine would have decoded. `None`
+    /// (the default) means the engine cannot draft or verify — the
+    /// scheduler's plain path runs even with speculation configured on.
+    /// Only *timing* is stochastic: drafts come from the sequence's own
+    /// lookahead, so the landed token stream is bit-identical to plain
+    /// decode at every acceptance rate.
+    accept: Option<(f64, crate::util::rng::SplitMix64)>,
 }
 
 impl SimStepEngine {
@@ -984,6 +1172,8 @@ impl SimStepEngine {
             step_base_us: 0,
             step_per_seq_us: 0,
             transfer_per_token_us: 0,
+            verify_per_token_us: 0,
+            accept: None,
         }
     }
 
@@ -999,7 +1189,22 @@ impl SimStepEngine {
             // ~4× cheaper than recomputing the same tokens' prefill —
             // the regime where pulling a hot prefix beats a cold start.
             transfer_per_token_us: 3,
+            // Scoring a resident draft position is a fraction of the
+            // 25 µs marginal decode row — verify wins whenever at least
+            // ~1 in 12 draft tokens lands.
+            verify_per_token_us: 2,
+            accept: None,
         }
+    }
+
+    /// Attach the speculative acceptance model: each draft token is
+    /// accepted independently with probability `rate` (sequential — the
+    /// first rejection ends the accepted prefix), drawn from a seeded
+    /// [`crate::util::rng::SplitMix64`] so runs are reproducible.
+    pub fn with_acceptance(mut self, rate: f64, seed: u64) -> SimStepEngine {
+        self.accept =
+            Some((rate.clamp(0.0, 1.0), crate::util::rng::SplitMix64::new(seed)));
+        self
     }
 
     fn burn(us: u64) {
@@ -1040,12 +1245,32 @@ pub struct SimSeq {
 }
 
 impl SimSeq {
-    fn next_token(&mut self) -> i32 {
-        self.state = self
-            .state
+    fn lcg_next(state: &mut u64) -> i32 {
+        *state = state
             .wrapping_mul(6364136223846793005)
             .wrapping_add(1442695040888963407);
-        ((self.state >> 33) & 0xFFF) as i32
+        ((*state >> 33) & 0xFFF) as i32
+    }
+
+    fn next_token(&mut self) -> i32 {
+        Self::lcg_next(&mut self.state)
+    }
+
+    /// Lookahead draft: peek the next `k` tokens of the LCG stream
+    /// *without* advancing it, capped at the remaining budget minus one
+    /// (the verify step's correction token needs headroom). Because the
+    /// draft is the stream itself, acceptance verdicts only decide how
+    /// many tokens land per step — never *which* tokens — keeping
+    /// speculative output bit-identical to plain decode.
+    fn peek_tokens(&self, k: usize) -> Vec<i32> {
+        let remaining = self.budget.saturating_sub(self.tokens.len());
+        if remaining <= 1 {
+            return Vec::new();
+        }
+        let mut state = self.state;
+        (0..k.min(remaining - 1))
+            .map(|_| Self::lcg_next(&mut state))
+            .collect()
     }
 }
 
@@ -1107,6 +1332,54 @@ impl StepEngine for SimStepEngine {
         Ok(())
     }
 
+    // The sim models the *verify* side of cross-tier speculation: the
+    // draft tier's lookahead arrives for free (its cost lands on the
+    // draft replica, not this one) and the acceptance model decides how
+    // much of it this engine's one batched verify step keeps.
+
+    fn draft_tokens(&mut self, seq: &SimSeq, k: usize) -> Vec<i32> {
+        if self.accept.is_none() {
+            return Vec::new();
+        }
+        seq.peek_tokens(k)
+    }
+
+    fn verify_batch(
+        &mut self,
+        batch: &mut [&mut SimSeq],
+        drafts: &[&[i32]],
+    ) -> Result<Vec<usize>> {
+        let Some((rate, rng)) = self.accept.as_mut() else {
+            self.step(batch)?;
+            return Ok(vec![0; batch.len()]);
+        };
+        let rate = *rate;
+        let mut accepted = Vec::with_capacity(batch.len());
+        let mut draft_total = 0u64;
+        for (seq, d) in batch.iter_mut().zip(drafts) {
+            draft_total += d.len() as u64;
+            let mut acc = 0usize;
+            while acc < d.len() && rng.chance(rate) {
+                acc += 1;
+            }
+            // Defensive cap (drafts are already budget-bounded): the
+            // accepted prefix plus the correction token must fit.
+            let remaining = seq.budget.saturating_sub(seq.tokens.len());
+            let land = (acc + 1).min(remaining);
+            for _ in 0..land {
+                let t = seq.next_token();
+                seq.tokens.push(t);
+            }
+            accepted.push(land.saturating_sub(1));
+        }
+        Self::burn(
+            self.step_base_us
+                + self.step_per_seq_us * batch.len() as u64
+                + self.verify_per_token_us * draft_total,
+        );
+        Ok(accepted)
+    }
+
     fn max_prompt_tokens(&self) -> usize {
         SIM_SEQ_PREFILL
     }
@@ -1141,6 +1414,7 @@ mod tests {
                 kv_blocks: 256,
                 kv_block_tokens: 16,
                 prefix_cache: PrefixCacheConfig::default(),
+                speculative: SpeculativeConfig::disabled(),
             },
         )
     }
@@ -1256,6 +1530,7 @@ mod tests {
                 kv_blocks: 4,
                 kv_block_tokens: 16,
                 prefix_cache: PrefixCacheConfig::default(),
+                speculative: SpeculativeConfig::disabled(),
             },
         );
         assert!(matches!(s.admit("a b c", 60, 4, 1), Admit::Admitted));
@@ -1280,6 +1555,7 @@ mod tests {
                 kv_blocks: 2,
                 kv_block_tokens: 4,
                 prefix_cache: PrefixCacheConfig::default(),
+                speculative: SpeculativeConfig::disabled(),
             },
         );
         assert!(matches!(s.admit("a b c", 16, 4, 7), Admit::Failed(7, _)));
@@ -1383,6 +1659,7 @@ mod tests {
                 kv_blocks: 256,
                 kv_block_tokens: 16,
                 prefix_cache: PrefixCacheConfig::default(),
+                speculative: SpeculativeConfig::disabled(),
             },
         );
         for i in 0..4usize {
@@ -1407,6 +1684,7 @@ mod tests {
                 kv_blocks: 256,
                 kv_block_tokens: 16,
                 prefix_cache: PrefixCacheConfig::default(),
+                speculative: SpeculativeConfig::disabled(),
             },
         );
         // Occupy a slot first — an idle replica flushes prefill
@@ -1484,6 +1762,7 @@ mod tests {
                 kv_blocks: 4,
                 kv_block_tokens: 4,
                 prefix_cache: prefix,
+                speculative: SpeculativeConfig::disabled(),
             },
         )
     }
@@ -1580,6 +1859,7 @@ mod tests {
                 kv_blocks: 256,
                 kv_block_tokens: 16,
                 prefix_cache: PrefixCacheConfig::default(),
+                speculative: SpeculativeConfig::disabled(),
             },
         );
         assert!(matches!(s.admit("a b", 32, 2, 0), Admit::Admitted));
@@ -1630,6 +1910,7 @@ mod tests {
                 kv_blocks: 3,
                 kv_block_tokens: 16,
                 prefix_cache: PrefixCacheConfig::disabled(),
+                speculative: SpeculativeConfig::disabled(),
             },
         );
         let prompt = "w w w w w w w w w"; // 9 tokens + 8 budget = 17
@@ -1642,5 +1923,196 @@ mod tests {
         assert_eq!(done.len(), 1);
         assert!(matches!(s.admit(prompt, 8, 9, 2), Admit::Admitted));
         let _ = s.drain(now).unwrap();
+    }
+
+    // -- speculative decode ------------------------------------------------
+
+    fn spec_cfg(min_accept_rate: f64) -> SpeculativeConfig {
+        SpeculativeConfig {
+            enabled: true,
+            draft_tier: 0,
+            draft_tokens: 4,
+            min_accept_rate,
+            sim_accept: 0.75,
+        }
+    }
+
+    fn spec_sched(
+        accept: f64,
+        seed: u64,
+        spec: SpeculativeConfig,
+        max_batch: usize,
+    ) -> Scheduler<SimStepEngine, usize> {
+        Scheduler::new(
+            SimStepEngine::instant().with_acceptance(accept, seed),
+            SchedulerConfig {
+                policy: BatchPolicy::custom(max_batch, 1, 0.0),
+                max_inflight: 8,
+                kv_blocks: 256,
+                kv_block_tokens: 16,
+                prefix_cache: PrefixCacheConfig::default(),
+                speculative: spec,
+            },
+        )
+    }
+
+    #[test]
+    fn speculative_decode_saves_steps_and_keeps_the_token_stream() {
+        // Accept-everything drafts: every verify step lands k + 1 = 5
+        // tokens, so a 16-token sequence needs 3 verify steps where
+        // plain decode needs 15.
+        let mut spec = spec_sched(1.0, 42, spec_cfg(0.3), 1);
+        spec.set_draft_available(true);
+        let mut plain = sched(8, 1, 0.0);
+        for s in [&mut spec, &mut plain] {
+            assert!(matches!(s.admit("spec prompt", 16, 2, 0), Admit::Admitted));
+        }
+        let (a, _) = spec.drain(0.0).unwrap();
+        let (b, _) = plain.drain(0.0).unwrap();
+        assert_eq!(a[0].tokens, b[0].tokens, "speculation must not change tokens");
+        assert_eq!(a[0].tokens.len(), 16);
+        assert_eq!(spec.stats.spec_verify_steps, 3);
+        assert_eq!(spec.stats.spec_drafted_tokens, 12);
+        assert_eq!(spec.stats.spec_accepted_tokens, 12);
+        assert_eq!(spec.stats.spec_rejected_tokens, 0);
+        assert_eq!(spec.stats.tokens_out, plain.stats.tokens_out);
+        assert!(
+            spec.stats.decode_steps < plain.stats.decode_steps,
+            "{} verify dispatches vs {} plain",
+            spec.stats.decode_steps,
+            plain.stats.decode_steps
+        );
+        assert!((spec.spec_accept_ema() - 1.0).abs() < 1e-12);
+        assert_eq!(spec.kv_occupancy(), 0.0);
+    }
+
+    #[test]
+    fn speculation_waits_for_the_draft_tier_signal() {
+        // Config on but the draft tier never reports ready: every batch
+        // must run the plain path (and turning the signal off mid-run
+        // falls back too).
+        let mut s = spec_sched(1.0, 7, spec_cfg(0.3), 1);
+        assert!(matches!(s.admit("p q", 8, 2, 0), Admit::Admitted));
+        let (done, now) = s.drain(0.0).unwrap();
+        assert_eq!(done[0].tokens.len(), 8);
+        assert_eq!(s.stats.spec_verify_steps, 0, "no drafts without the signal");
+        assert!(s.spec_active(), "config stays armed");
+        // Signal flips on: the next request speculates.
+        s.set_draft_available(true);
+        assert!(matches!(s.admit("p q", 8, 2, 1), Admit::Admitted));
+        let _ = s.drain(now).unwrap();
+        assert!(s.stats.spec_verify_steps > 0);
+        // Mid-recovery: the signal drops and speculation stops cleanly.
+        s.set_draft_available(false);
+        let steps = s.stats.spec_verify_steps;
+        assert!(matches!(s.admit("p q", 8, 2, 2), Admit::Admitted));
+        let _ = s.drain(1.0).unwrap();
+        assert_eq!(s.stats.spec_verify_steps, steps);
+    }
+
+    #[test]
+    fn speculative_disabled_config_is_bit_identical_to_plain() {
+        // Engine carries an acceptance model, but the (default-off)
+        // config must keep the plain path: identical stats, streams, KV.
+        let mut off = spec_sched(0.9, 3, SpeculativeConfig::disabled(), 8);
+        off.set_draft_available(true); // signal alone must not speculate
+        let mut plain = sched(8, 8, 0.0);
+        for s in [&mut off, &mut plain] {
+            for i in 0..4usize {
+                assert!(matches!(s.admit("x y z", 6 + i, 3, i), Admit::Admitted));
+            }
+        }
+        let (a, _) = off.drain(0.0).unwrap();
+        let (b, _) = plain.drain(0.0).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.tokens, y.tokens);
+        }
+        assert_eq!(off.stats.decode_steps, plain.stats.decode_steps);
+        assert_eq!(off.stats.tokens_out, plain.stats.tokens_out);
+        assert_eq!(off.stats.spec_drafted_tokens, 0);
+        assert_eq!(off.stats.spec_verify_steps, 0);
+    }
+
+    #[test]
+    fn speculative_auto_disables_below_min_accept_rate() {
+        // Acceptance 0: every draft is rejected and rolled back, the
+        // EMA decays 0.8^n from 1.0, and after the warmup it trips the
+        // per-replica latch — the rest of the run decodes plainly, and
+        // the sequence still completes exactly.
+        let mut s = spec_sched(0.0, 9, spec_cfg(0.3), 1);
+        s.set_draft_available(true);
+        assert!(matches!(s.admit("long running prompt", 64, 3, 0), Admit::Admitted));
+        let (done, _) = s.drain(0.0).unwrap();
+        assert_eq!(done[0].tokens.len(), 64, "rollback loses no completions");
+        let mut plain = sched(8, 1, 0.0);
+        assert!(matches!(plain.admit("long running prompt", 64, 3, 0), Admit::Admitted));
+        let (pd, _) = plain.drain(0.0).unwrap();
+        assert_eq!(done[0].tokens, pd[0].tokens);
+        assert!(!s.spec_active(), "EMA must latch the disable");
+        assert_eq!(s.stats.spec_verify_steps, SPEC_EMA_WARMUP);
+        assert_eq!(s.stats.spec_accepted_tokens, 0);
+        assert_eq!(
+            s.stats.spec_rejected_tokens,
+            s.stats.spec_drafted_tokens
+        );
+        assert!(
+            s.stats.decode_steps > s.stats.spec_verify_steps,
+            "post-latch decode must be plain"
+        );
+        assert!(s.spec_accept_ema() < 0.3);
+        assert_eq!(s.kv_occupancy(), 0.0);
+    }
+
+    #[test]
+    fn any_verdict_sequence_matches_plain_decode_exactly() {
+        // Property: for any seeded accept/reject verdict stream, the
+        // scheduler's KV ledger and slot state end identical to a plain
+        // run of the same workload — rollback never leaks a block,
+        // never frees a shared prefix block, and never changes tokens.
+        for seed in 0..24u64 {
+            let rate = (seed % 11) as f64 / 10.0;
+            let mut spec = spec_sched(rate, seed.wrapping_mul(0x9e37), spec_cfg(0.0), 4);
+            spec.set_draft_available(true);
+            let mut plain = sched(8, 4, 0.0);
+            let shared = "one two three four five six seven eight";
+            for s in [&mut spec, &mut plain] {
+                for i in 0..6usize {
+                    let budget = 3 + (seed as usize + i * 5) % 13;
+                    assert!(matches!(
+                        s.admit(shared, budget, 8, i),
+                        Admit::Admitted
+                    ));
+                }
+            }
+            // Tick manually so the KV invariants are checked after
+            // every draft/verify/rollback cycle, not just at the end.
+            let mut now = 0.0;
+            let mut done = Vec::new();
+            while spec.inflight() > 0 {
+                let t = spec.tick(now).unwrap();
+                spec.kv.check_invariants().unwrap();
+                done.extend(t.finished);
+                if let Some(w) = t.wait_s {
+                    now += w.max(1e-9);
+                }
+            }
+            let (pd, _) = plain.drain(0.0).unwrap();
+            assert_eq!(done.len(), pd.len());
+            done.sort_by_key(|f| f.payload);
+            let mut pd = pd;
+            pd.sort_by_key(|f| f.payload);
+            for (a, b) in done.iter().zip(pd.iter()) {
+                assert_eq!(a.tokens, b.tokens, "rate {rate} seed {seed}");
+            }
+            assert_eq!(spec.stats.completed, plain.stats.completed);
+            assert_eq!(spec.stats.tokens_out, plain.stats.tokens_out);
+            assert_eq!(spec.inflight(), 0);
+            assert_eq!(spec.kv_occupancy(), 0.0, "no leaked blocks");
+            assert_eq!(
+                spec.stats.spec_drafted_tokens,
+                spec.stats.spec_accepted_tokens + spec.stats.spec_rejected_tokens
+            );
+        }
     }
 }

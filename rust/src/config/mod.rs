@@ -265,6 +265,61 @@ impl Default for AffinityConfig {
     }
 }
 
+/// Cross-tier speculative decoding (`pool.speculative.*`): a small tier
+/// drafts a window of tokens that a bigger tier's engine verifies in one
+/// batched step, landing the longest accepted prefix plus one correction
+/// token per step. Off by default — disabled reproduces the exact
+/// plain-decode scheduling bit-for-bit. `Copy` so it rides inside
+/// `SchedulerConfig`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpeculativeConfig {
+    /// Master switch. `false` = plain decode everywhere, no draft
+    /// windows, no verify steps, no rollback.
+    pub enabled: bool,
+    /// Tier index that drafts (0 = small). Pairing rule: only tiers
+    /// strictly *above* this one speculate; the draft tier itself (and
+    /// anything below it) always decodes plainly.
+    pub draft_tier: usize,
+    /// Draft window k: tokens drafted per verify step. Each verify step
+    /// lands between 1 (all rejected → correction only) and k + 1 (all
+    /// accepted + bonus) tokens.
+    pub draft_tokens: usize,
+    /// Auto-disable floor: a verify-side scheduler whose EMA acceptance
+    /// rate drops below this (after a short warmup) stops speculating —
+    /// low-acceptance workloads must not pay verify overhead forever.
+    pub min_accept_rate: f64,
+    /// Acceptance-rate model for the synthetic (sim) engines: the
+    /// probability each draft token matches the verify model's choice.
+    /// Only the *timing* is modeled — token streams stay bit-identical
+    /// to plain decode. Ignored on the compiled path.
+    pub sim_accept: f64,
+}
+
+impl SpeculativeConfig {
+    /// The inert configuration (also the `Default`).
+    pub fn disabled() -> SpeculativeConfig {
+        SpeculativeConfig::default()
+    }
+
+    /// Whether `verify_tier` pairs with the configured draft tier: the
+    /// draft tier must sit strictly below it on the ladder.
+    pub fn pairs_with(&self, verify_tier: usize) -> bool {
+        self.enabled && self.draft_tier < verify_tier && verify_tier < 3
+    }
+}
+
+impl Default for SpeculativeConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            draft_tier: 0,
+            draft_tokens: 4,
+            min_accept_rate: 0.3,
+            sim_accept: 0.75,
+        }
+    }
+}
+
 /// Engine-pool tunables: the continuous-batching serving path
 /// (gateway job intake → per-tier scheduler → N engine replicas).
 #[derive(Debug, Clone)]
@@ -299,6 +354,9 @@ pub struct PoolConfig {
     /// Cache-affinity routing + cross-replica KV transfer
     /// (`pool.affinity.*`). Off by default.
     pub affinity: AffinityConfig,
+    /// Cross-tier speculative decoding (`pool.speculative.*`): small-tier
+    /// drafts, big-tier batched verify. Off by default.
+    pub speculative: SpeculativeConfig,
     /// How often the pool scaler re-plans per-tier active replicas from
     /// queue depth + slot occupancy.
     pub scale_interval_s: f64,
@@ -339,6 +397,7 @@ impl Default for PoolConfig {
             kv_block_tokens: 16,
             prefix_cache: PrefixCacheConfig::default(),
             affinity: AffinityConfig::default(),
+            speculative: SpeculativeConfig::default(),
             scale_interval_s: 2.0,
             health_deadline_s: 3.0,
             substrate: SubstrateKind::Thread,
@@ -508,6 +567,18 @@ impl Config {
                     .usize_or("min_match_blocks", self.pool.affinity.min_match_blocks);
                 self.pool.affinity.transfer =
                     a.bool_or("transfer", self.pool.affinity.transfer);
+            }
+            if let Some(s) = p.get("speculative") {
+                self.pool.speculative.enabled =
+                    s.bool_or("enabled", self.pool.speculative.enabled);
+                self.pool.speculative.draft_tier =
+                    s.usize_or("draft_tier", self.pool.speculative.draft_tier);
+                self.pool.speculative.draft_tokens =
+                    s.usize_or("draft_tokens", self.pool.speculative.draft_tokens);
+                self.pool.speculative.min_accept_rate = s
+                    .f64_or("min_accept_rate", self.pool.speculative.min_accept_rate);
+                self.pool.speculative.sim_accept =
+                    s.f64_or("sim_accept", self.pool.speculative.sim_accept);
             }
             self.pool.scale_interval_s =
                 p.f64_or("scale_interval_s", self.pool.scale_interval_s);
@@ -695,6 +766,35 @@ mod tests {
         // untouched pool knobs keep defaults
         assert_eq!(c.pool.kv_blocks, 128);
         assert!(c.pool.prefix_cache.enabled);
+    }
+
+    #[test]
+    fn overlay_speculative_section() {
+        let mut c = Config::default();
+        assert!(!c.pool.speculative.enabled, "speculative decode defaults off");
+        assert_eq!(c.pool.speculative.draft_tier, 0);
+        assert_eq!(c.pool.speculative.draft_tokens, 4);
+        assert!((c.pool.speculative.min_accept_rate - 0.3).abs() < 1e-12);
+        assert!((c.pool.speculative.sim_accept - 0.75).abs() < 1e-12);
+        let j = Json::parse(
+            r#"{"pool":{"speculative":{"enabled":true,"draft_tier":1,
+                "draft_tokens":6,"min_accept_rate":0.5,"sim_accept":0.8}}}"#,
+        )
+        .unwrap();
+        c.overlay(&j).unwrap();
+        assert!(c.pool.speculative.enabled);
+        assert_eq!(c.pool.speculative.draft_tier, 1);
+        assert_eq!(c.pool.speculative.draft_tokens, 6);
+        assert!((c.pool.speculative.min_accept_rate - 0.5).abs() < 1e-12);
+        assert!((c.pool.speculative.sim_accept - 0.8).abs() < 1e-12);
+        // untouched pool knobs keep defaults
+        assert_eq!(c.pool.kv_blocks, 128);
+        assert!(!c.pool.affinity.enabled);
+        // Pairing rule: only tiers strictly above the draft tier verify.
+        assert!(c.pool.speculative.pairs_with(2));
+        assert!(!c.pool.speculative.pairs_with(1), "draft tier never verifies");
+        assert!(!c.pool.speculative.pairs_with(0));
+        assert!(!SpeculativeConfig::disabled().pairs_with(2), "off ⇒ no pairs");
     }
 
     #[test]

@@ -211,6 +211,15 @@ pub struct GatewayMetrics {
     pub kv_transfers: AtomicU64,
     /// KV blocks moved by those transfers.
     pub kv_transfer_blocks: AtomicU64,
+    /// Draft tokens proposed by the speculative decode path.
+    pub spec_drafted_tokens: AtomicU64,
+    /// Draft tokens the verify pass accepted (landed without a big-tier
+    /// decode step of their own).
+    pub spec_accepted_tokens: AtomicU64,
+    /// Draft tokens rejected and rolled back.
+    pub spec_rejected_tokens: AtomicU64,
+    /// Batched verify steps executed.
+    pub spec_verify_steps: AtomicU64,
     /// Formed-batch histogram: one counter per compiled rung, in
     /// [`DECODE_BATCHES`] order.
     pub batch_counts: [AtomicU64; N_DECODE_BATCHES],
@@ -382,10 +391,24 @@ impl LiveStack {
     /// the workers run `ps-replica --engine sim`, so the whole RPC data
     /// plane is exercised hermetically too.
     pub fn start_sim(cfg: &Config) -> Result<LiveStack> {
+        let spec = cfg.pool.speculative;
         Self::start_pool(
             cfg,
             || Ok(Box::new(KeywordRouter::new()) as Box<dyn Router>),
-            |_tier: Tier, _replica: usize| Ok(SimStepEngine::calibrated()),
+            move |tier: Tier, replica: usize| {
+                let mut e = SimStepEngine::calibrated();
+                if spec.enabled {
+                    // Deterministic per-replica verdict stream at the
+                    // configured acceptance rate (pool.speculative
+                    // .sim_accept). Harmless on unpaired tiers — their
+                    // schedulers run with speculation disabled and never
+                    // call verify_batch.
+                    let seed =
+                        0x5BEC ^ ((tier.index() as u64) << 32) ^ replica as u64;
+                    e = e.with_acceptance(spec.sim_accept, seed);
+                }
+                Ok(e)
+            },
             &["--engine", "sim"],
         )
     }
@@ -684,6 +707,22 @@ impl LiveStack {
                 "ps_kv_transfer_blocks_total".to_string(),
                 c(&m.kv_transfer_blocks),
             ),
+            (
+                "ps_spec_drafted_tokens_total".to_string(),
+                c(&m.spec_drafted_tokens),
+            ),
+            (
+                "ps_spec_accepted_tokens_total".to_string(),
+                c(&m.spec_accepted_tokens),
+            ),
+            (
+                "ps_spec_rejected_tokens_total".to_string(),
+                c(&m.spec_rejected_tokens),
+            ),
+            (
+                "ps_spec_verify_steps_total".to_string(),
+                c(&m.spec_verify_steps),
+            ),
         ];
         for (i, &b) in DECODE_BATCHES.iter().enumerate() {
             out.push((format!("ps_decode_b{b}_total"), c(&m.batch_counts[i])));
@@ -725,6 +764,18 @@ impl LiveStack {
         }
         out.extend(hit_series);
         out.extend(match_series);
+        // Per-tier cumulative speculative acceptance rate. Quiet with
+        // speculation off: a tier that never drafted has no sample.
+        for (ti, tier) in Tier::ALL.iter().enumerate() {
+            let (accepted, drafted) = self.shared.tier_spec_totals(ti);
+            if drafted == 0 {
+                continue;
+            }
+            out.push((
+                format!("ps_spec_accept_rate{{tier=\"{}\"}}", tier.name()),
+                accepted as f64 / drafted as f64,
+            ));
+        }
         if let Some(reg) = &self.nodes {
             out.push(("ps_node_lost_total".to_string(), reg.lost_total() as f64));
             // One pass per family: the Prometheus exposition format
@@ -1027,6 +1078,9 @@ fn router_loop<S: PoolBackend>(
     // Last-sampled per-tier prefix hit/miss totals: successive deltas
     // give a per-interval hit rate (recent traffic only).
     let mut prefix_last: [(u64, u64); 3] = [(0, 0); 3];
+    // Same windowing for speculative accepted/drafted token totals — the
+    // scaler's acceptance-rate demand discount tracks recent traffic.
+    let mut spec_last: [(u64, u64); 3] = [(0, 0); 3];
     loop {
         let job = jobs.recv_timeout(Duration::from_millis(100));
         let now = shared.epoch.elapsed().as_secs_f64();
@@ -1137,6 +1191,20 @@ fn router_loop<S: PoolBackend>(
                 Ordering::Relaxed,
             );
             sync_registry(&mut registry, &shared, &pool);
+            // Draft-tier availability for the speculative path: verify
+            // tiers fall back to plain decode (loss-free) whenever the
+            // draft tier is parked, unhealthy, or saturated. Published
+            // once per control pass; the thread substrate's replica
+            // loops sample the flag directly, the process substrate's
+            // pumps relay edges as SpecDraft frames.
+            if pool.speculative.enabled {
+                let dt = pool.speculative.draft_tier.min(2);
+                let ready = shared.ready_count(dt);
+                let ok = registry.draft_tier_ready(dt)
+                    && ready > 0
+                    && shared.slots_in_tier(dt) < ready * pool.max_inflight.max(1);
+                shared.spec_draft_ok.store(ok, Ordering::Relaxed);
+            }
             for ti in 0..3 {
                 // Windowed prefix hit rate: tokens served from cache vs
                 // prefilled since the last control pass (replica churn
@@ -1149,6 +1217,11 @@ fn router_loop<S: PoolBackend>(
                     (h, m)
                 };
                 prefix_last[ti] = (h, m);
+                let (sa, sd) = shared.tier_spec_totals(ti);
+                let (lsa, lsd) = spec_last[ti];
+                let (dsa, dsd) =
+                    if sa >= lsa && sd >= lsd { (sa - lsa, sd - lsd) } else { (sa, sd) };
+                spec_last[ti] = (sa, sd);
                 let load = TierLoad {
                     queue_depth: shared.queues[ti].len(),
                     slots_in_use: shared.slots_in_tier(ti),
@@ -1160,6 +1233,11 @@ fn router_loop<S: PoolBackend>(
                         0.0
                     } else {
                         dh as f64 / (dh + dm) as f64
+                    },
+                    spec_accept_rate: if dsd == 0 {
+                        0.0
+                    } else {
+                        dsa as f64 / dsd as f64
                     },
                 };
                 if let Some(action) = scaler.plan_tier(

@@ -131,6 +131,14 @@ pub(crate) struct ReplicaCell {
     pub affinity_hits: AtomicU64,
     /// Summed matched chain length, in KV blocks, across those hits.
     pub affinity_match_blocks: AtomicU64,
+    /// Speculative-decoding counters (cumulative, mirroring the prefix
+    /// counters): draft tokens proposed, accepted, rejected, and verify
+    /// steps run. The control loop differences accepted/drafted into the
+    /// windowed acceptance rate that tempers `Scaler::plan_tier`.
+    pub spec_drafted_tokens: AtomicU64,
+    pub spec_accepted_tokens: AtomicU64,
+    pub spec_rejected_tokens: AtomicU64,
+    pub spec_verify_steps: AtomicU64,
     /// Engine-factory error (set when Loading fails).
     pub error: Mutex<Option<String>>,
 }
@@ -153,6 +161,10 @@ impl ReplicaCell {
             incoming: Mutex::new(Vec::new()),
             affinity_hits: AtomicU64::new(0),
             affinity_match_blocks: AtomicU64::new(0),
+            spec_drafted_tokens: AtomicU64::new(0),
+            spec_accepted_tokens: AtomicU64::new(0),
+            spec_rejected_tokens: AtomicU64::new(0),
+            spec_verify_steps: AtomicU64::new(0),
             error: Mutex::new(None),
         }
     }
@@ -172,6 +184,12 @@ pub(crate) struct PoolShared {
     pub cells: Vec<TierCells>,
     /// Last enqueue per tier, µs since the pool epoch (idle tracking).
     pub last_enqueue_us: [AtomicU64; 3],
+    /// Draft-tier availability for cross-tier speculation: the router's
+    /// control pass sets it true while the paired draft tier is live and
+    /// unsaturated; replica threads sample it every loop and fall back
+    /// to plain decode the moment it drops. Starts false — verify tiers
+    /// never speculate before the draft tier is confirmed warm.
+    pub spec_draft_ok: Arc<AtomicBool>,
 }
 
 impl PoolShared {
@@ -181,6 +199,7 @@ impl PoolShared {
             queues: (0..3).map(|_| Channel::bounded(queue_capacity.max(1))).collect(),
             cells: (0..3).map(|_| Mutex::new(Vec::new())).collect(),
             last_enqueue_us: std::array::from_fn(|_| AtomicU64::new(0)),
+            spec_draft_ok: Arc::new(AtomicBool::new(false)),
         }
     }
 
@@ -246,6 +265,19 @@ impl PoolShared {
             miss += c.prefix_miss_tokens.load(Ordering::Relaxed);
         }
         (hit, miss)
+    }
+
+    /// Cumulative (accepted, drafted) speculative-token totals across
+    /// the tier's live replicas — windowed by the control loop into the
+    /// acceptance rate for `Scaler::plan_tier`, exactly like
+    /// [`Self::tier_prefix_totals`].
+    pub fn tier_spec_totals(&self, tier: usize) -> (u64, u64) {
+        let (mut accepted, mut drafted) = (0u64, 0u64);
+        for (_, c) in self.cells[tier].lock().unwrap().iter() {
+            accepted += c.spec_accepted_tokens.load(Ordering::Relaxed);
+            drafted += c.spec_drafted_tokens.load(Ordering::Relaxed);
+        }
+        (accepted, drafted)
     }
 
     /// Blocks resident in prefix caches across the pool (the
@@ -483,6 +515,8 @@ where
             metrics: Arc::clone(&self.metrics),
             epoch: self.shared.epoch,
             pool: self.pool.clone(),
+            tier: ti,
+            spec_draft_ok: Arc::clone(&self.shared.spec_draft_ok),
         };
         let factory = Arc::clone(&self.factory);
         let handle = std::thread::Builder::new()
@@ -635,6 +669,10 @@ pub(crate) struct ReplicaCtx {
     pub metrics: Arc<GatewayMetrics>,
     pub epoch: Instant,
     pub pool: PoolConfig,
+    /// This replica's tier (speculative pairing rule input).
+    pub tier: usize,
+    /// Live draft-tier-availability signal (see `PoolShared::spec_draft_ok`).
+    pub spec_draft_ok: Arc<AtomicBool>,
 }
 
 /// Try to move one routed job into the scheduler. Returns the job back
@@ -706,8 +744,15 @@ fn finish_job(f: Finished<TierJob>, ctx: &ReplicaCtx) {
 /// batch identically. The batch target is clamped to the slot count too:
 /// with fewer slots than the biggest rung, a full replica could
 /// otherwise never "fill" a batch and would eat the flush timeout while
-/// saturated.
-pub(crate) fn sched_config(pool: &PoolConfig, engine_max_batch: usize) -> SchedulerConfig {
+/// saturated. `tier` applies the speculative pairing rule: only tiers
+/// that verify against a configured draft tier get the draft/verify
+/// state machine; everyone else (the draft tier included) runs plain
+/// decode bit-for-bit.
+pub(crate) fn sched_config(
+    pool: &PoolConfig,
+    engine_max_batch: usize,
+    tier: usize,
+) -> SchedulerConfig {
     let max_batch = pool
         .max_decode_batch
         .min(engine_max_batch)
@@ -720,6 +765,11 @@ pub(crate) fn sched_config(pool: &PoolConfig, engine_max_batch: usize) -> Schedu
         kv_blocks: pool.kv_blocks.max(1),
         kv_block_tokens: pool.kv_block_tokens.max(1),
         prefix_cache: pool.prefix_cache,
+        speculative: if pool.speculative.pairs_with(tier) {
+            pool.speculative
+        } else {
+            crate::config::SpeculativeConfig::disabled()
+        },
     }
 }
 
@@ -829,7 +879,7 @@ fn service_affinity<E: StepEngine>(
 /// retire, with flush-timeout holds that wake early on new arrivals.
 /// Runs until killed, stopped (graceful drain), or the queue closes.
 pub(crate) fn replica_loop<E: StepEngine>(engine: E, ctx: ReplicaCtx) {
-    let cfg = sched_config(&ctx.pool, engine.max_batch());
+    let cfg = sched_config(&ctx.pool, engine.max_batch(), ctx.tier);
     let mut sched: Scheduler<E, TierJob> = Scheduler::new(engine, cfg);
     let mut held: Option<TierJob> = None;
     // Graceful-drain edge: on the tick `stop` is first observed, buffered
@@ -841,6 +891,10 @@ pub(crate) fn replica_loop<E: StepEngine>(engine: E, ctx: ReplicaCtx) {
     // the global `ps_prefix_*` counters; the cell publishes cumulatives
     // for the per-tier hit-rate signal).
     let mut prefix_seen = crate::backend::kv_cache::PrefixStats::default();
+    // Last speculative counters forwarded, same split: deltas into the
+    // global `ps_spec_*` counters, cumulatives into the cell for the
+    // per-tier acceptance-rate signal.
+    let mut spec_seen = (0u64, 0u64, 0u64, 0u64);
     // A replica whose engine errors on every step must not stay Ready
     // and black-hole the tier queue: after this many consecutive failed
     // ticks it reports Failed and the recovery manager redeploys it.
@@ -880,6 +934,9 @@ pub(crate) fn replica_loop<E: StepEngine>(engine: E, ctx: ReplicaCtx) {
             // affinity-routed job lands on an already-warm cache.
             service_affinity(&mut sched, &ctx);
         }
+        // Sample the draft-tier signal every loop: a cold, saturated, or
+        // mid-recovery draft tier drops the next tick to plain decode.
+        sched.set_draft_available(ctx.spec_draft_ok.load(Ordering::Relaxed));
         // Admit as much as fits. A stopping replica drains its slots but
         // pulls nothing new. The private affinity queue drains ahead of
         // the shared tier queue — those jobs were placed *here* for
@@ -986,6 +1043,40 @@ pub(crate) fn replica_loop<E: StepEngine>(engine: E, ctx: ReplicaCtx) {
                     Ordering::Relaxed,
                 );
                 prefix_seen = ps;
+                let ss = &sched.stats;
+                let spec_now = (
+                    ss.spec_drafted_tokens,
+                    ss.spec_accepted_tokens,
+                    ss.spec_rejected_tokens,
+                    ss.spec_verify_steps,
+                );
+                if spec_now != spec_seen {
+                    ctx.metrics
+                        .spec_drafted_tokens
+                        .fetch_add(spec_now.0 - spec_seen.0, Ordering::Relaxed);
+                    ctx.metrics
+                        .spec_accepted_tokens
+                        .fetch_add(spec_now.1 - spec_seen.1, Ordering::Relaxed);
+                    ctx.metrics
+                        .spec_rejected_tokens
+                        .fetch_add(spec_now.2 - spec_seen.2, Ordering::Relaxed);
+                    ctx.metrics
+                        .spec_verify_steps
+                        .fetch_add(spec_now.3 - spec_seen.3, Ordering::Relaxed);
+                    spec_seen = spec_now;
+                    ctx.cell
+                        .spec_drafted_tokens
+                        .store(spec_now.0, Ordering::Relaxed);
+                    ctx.cell
+                        .spec_accepted_tokens
+                        .store(spec_now.1, Ordering::Relaxed);
+                    ctx.cell
+                        .spec_rejected_tokens
+                        .store(spec_now.2, Ordering::Relaxed);
+                    ctx.cell
+                        .spec_verify_steps
+                        .store(spec_now.3, Ordering::Relaxed);
+                }
                 ctx.cell
                     .prefix_hit_tokens
                     .store(ps.hit_tokens, Ordering::Relaxed);

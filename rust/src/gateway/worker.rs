@@ -93,6 +93,18 @@ fn pool_from_wire(w: &PoolWire) -> PoolConfig {
         p.affinity.enabled = true;
         p.affinity.top_k = w.affinity_top_k;
     }
+    // A nonzero draft window means the supervisor already applied the
+    // tier-pairing rule for this replica (`PoolWire::from_pool_for_tier`)
+    // — reconstruct an enabled config that pairs with our tier.
+    if w.spec_draft_tokens > 0 {
+        p.speculative.enabled = true;
+        p.speculative.draft_tier = 0;
+        p.speculative.draft_tokens = w.spec_draft_tokens;
+        p.speculative.min_accept_rate = w.spec_min_accept;
+        p.speculative.sim_accept = w.spec_sim_accept;
+    } else {
+        p.speculative.enabled = false;
+    }
     p
 }
 
@@ -193,7 +205,7 @@ where
             bail!("engine build failed: {e}");
         }
     };
-    let cfg = sched_config(&pool_from_wire(&pool), engine.max_batch());
+    let cfg = sched_config(&pool_from_wire(&pool), engine.max_batch(), opts.tier.index());
     let mut sched: Scheduler<E, WireJob> = Scheduler::new(engine, cfg);
     write_frame(&mut *stream, &Frame::Ready)?;
 
@@ -202,6 +214,10 @@ where
     let mut xfers = Transfers::default();
     let mut draining = false;
     let mut drained_once = false;
+    // Draft-tier availability, toggled by SpecDraft frames. Starts false:
+    // the scheduler runs plain decode until the supervisor confirms the
+    // paired draft tier live.
+    let mut spec_ok = false;
     let mut last_hb = Instant::now() - HEARTBEAT_PERIOD;
     const MAX_CONSECUTIVE_ENGINE_ERRORS: usize = 3;
     let mut engine_errors = 0usize;
@@ -209,7 +225,15 @@ where
     loop {
         // 1. Control-plane frames.
         while let Some(f) = msgs.try_recv() {
-            handle_ctl(f, &mut *stream, &mut incoming, &mut cancels, &mut xfers, &mut draining)?;
+            handle_ctl(
+                f,
+                &mut *stream,
+                &mut incoming,
+                &mut cancels,
+                &mut xfers,
+                &mut draining,
+                &mut spec_ok,
+            )?;
         }
         if msgs.is_closed() && msgs.is_empty() {
             bail!("supervisor connection lost");
@@ -217,6 +241,7 @@ where
         if SIGTERM_DRAIN.load(Ordering::SeqCst) {
             draining = true;
         }
+        sched.set_draft_available(spec_ok);
 
         // 1b. Cross-replica KV transfers: answer the supervisor's donor
         // fetches, then ingest delivered prefixes — imports land before
@@ -299,7 +324,15 @@ where
             }
             send_heartbeat(&mut *stream, &mut sched, &mut last_hb, hot_k, false)?;
             if let Some(f) = msgs.recv_timeout(Duration::from_millis(20)) {
-                handle_ctl(f, &mut *stream, &mut incoming, &mut cancels, &mut xfers, &mut draining)?;
+                handle_ctl(
+                    f,
+                    &mut *stream,
+                    &mut incoming,
+                    &mut cancels,
+                    &mut xfers,
+                    &mut draining,
+                    &mut spec_ok,
+                )?;
             }
             continue;
         }
@@ -368,6 +401,7 @@ where
                                 &mut cancels,
                                 &mut xfers,
                                 &mut draining,
+                                &mut spec_ok,
                             )?;
                         }
                     }
@@ -405,6 +439,7 @@ fn handle_ctl(
     cancels: &mut BTreeMap<u64, CancelToken>,
     xfers: &mut Transfers,
     draining: &mut bool,
+    spec_ok: &mut bool,
 ) -> Result<()> {
     match frame {
         Frame::Job { job, prompt, max_tokens } => {
@@ -434,6 +469,9 @@ fn handle_ctl(
                     xfers.imports.push(run);
                 }
             }
+        }
+        Frame::SpecDraft { ok } => {
+            *spec_ok = ok;
         }
         Frame::Terminate => {
             *draining = true;
@@ -473,6 +511,10 @@ fn send_heartbeat<E: StepEngine>(
         prefix_evicted_blocks: sched.prefix_stats().evicted_blocks,
         prefix_cache_blocks: sched.kv_cached_blocks() as u64,
         hot: if hot_k > 0 { sched.hot_prefixes(hot_k) } else { Vec::new() },
+        spec_drafted_tokens: stats.spec_drafted_tokens,
+        spec_accepted_tokens: stats.spec_accepted_tokens,
+        spec_rejected_tokens: stats.spec_rejected_tokens,
+        spec_verify_steps: stats.spec_verify_steps,
     };
     write_frame(stream, &Frame::Heartbeat(hb))?;
     Ok(())

@@ -146,8 +146,16 @@ fn cmd_worker(argv: &[String]) -> Result<()> {
     let replica = args.opt_usize("replica", 0)?;
     let opts = WorkerOptions { socket, tier, replica };
     match args.opt("engine").unwrap_or("pjrt") {
-        "sim" => run_worker(&opts, |_tier, _replica, _pool| {
-            Ok(pick_and_spin::backend::scheduler::SimStepEngine::calibrated())
+        "sim" => run_worker(&opts, |tier, replica, pool| {
+            let mut e = pick_and_spin::backend::scheduler::SimStepEngine::calibrated();
+            if pool.spec_draft_tokens > 0 {
+                // Deterministic per-replica verdict stream: the sim
+                // engine's acceptance model only decides how many drafts
+                // land per verify step, never which tokens.
+                let seed = 0x5BEC ^ ((tier.index() as u64) << 32) ^ replica as u64;
+                e = e.with_acceptance(pool.spec_sim_accept, seed);
+            }
+            Ok(e)
         }),
         "pjrt" => {
             let artifacts = args.opt_or("artifacts", "artifacts").to_string();

@@ -52,12 +52,25 @@ pub struct TierLoad {
     /// accordingly; the caller supplies a *windowed* rate so the
     /// discount tracks recent traffic, not since-boot history.
     pub prefix_hit_rate: f64,
+    /// Fraction of drafted tokens the tier's verify replicas accepted
+    /// over the last control interval (0 when speculation is off or the
+    /// tier has no draft pairing). Accepted draft tokens land several
+    /// outputs per verify step, so queued decode work drains faster and
+    /// the planner discounts queue pressure; windowed like
+    /// `prefix_hit_rate`.
+    pub spec_accept_rate: f64,
 }
 
 /// Queue-pressure discount at a fully-warm prefix cache: a hit skips the
 /// shared-prefix prefill but still pays suffix prefill and the full
 /// decode, so at most half the queue signal is relieved.
 const PREFIX_QUEUE_RELIEF: f64 = 0.5;
+
+/// Queue-pressure discount at full speculative acceptance: every verify
+/// step lands multiple tokens, but prefill and scheduling overhead are
+/// unchanged, so (like the prefix discount) at most half the queue
+/// signal is relieved.
+const SPEC_QUEUE_RELIEF: f64 = 0.5;
 
 /// Little's-law scaler with cooldown and warm pools.
 ///
@@ -187,9 +200,14 @@ impl Scaler {
         let idx = tier.min(self.cooldown_until.len().saturating_sub(1));
         let warm = self.cfg.warm_pool[tier.min(2)].min(max_replicas);
         // Cache-adjusted demand: discount queued work by the observed
-        // prefix hit rate (slots in use are already-admitted work and
-        // count in full).
-        let relief = 1.0 - PREFIX_QUEUE_RELIEF * load.prefix_hit_rate.clamp(0.0, 1.0);
+        // prefix hit rate and speculative acceptance rate (slots in use
+        // are already-admitted work and count in full). The reliefs
+        // compose multiplicatively — each scales what the other left —
+        // so both maxed out leaves a 0.25 floor rather than discounting
+        // below zero; the clamp guards degenerate rate inputs.
+        let relief = ((1.0 - PREFIX_QUEUE_RELIEF * load.prefix_hit_rate.clamp(0.0, 1.0))
+            * (1.0 - SPEC_QUEUE_RELIEF * load.spec_accept_rate.clamp(0.0, 1.0)))
+            .clamp(0.0, 1.0);
         let demand = (load.queue_depth as f64 * relief).ceil() as usize + load.slots_in_use;
         let need = demand.div_ceil(self.slots_per_replica);
         let current = load.active_replicas;
@@ -414,6 +432,7 @@ mod tests {
             active_replicas: 1,
             idle_s: 0.0,
             prefix_hit_rate: 0.0,
+            spec_accept_rate: 0.0,
         };
         assert_eq!(tier_target(&mut s, 0, load, 4, 100.0), 3);
     }
@@ -427,6 +446,7 @@ mod tests {
             active_replicas: 1,
             idle_s: 0.0,
             prefix_hit_rate: 0.0,
+            spec_accept_rate: 0.0,
         };
         assert_eq!(tier_target(&mut s, 0, load, 8, 0.0), 4);
         // Still under-provisioned, but inside the cooldown window.
@@ -444,6 +464,7 @@ mod tests {
             active_replicas: 2,
             idle_s: 200.0,
             prefix_hit_rate: 0.0,
+            spec_accept_rate: 0.0,
         };
         assert_eq!(tier_target(&mut s, 2, load, 2, 500.0), 0);
     }
@@ -457,6 +478,7 @@ mod tests {
             active_replicas: 2,
             idle_s: 200.0,
             prefix_hit_rate: 0.0,
+            spec_accept_rate: 0.0,
         };
         assert_eq!(tier_target(&mut s, 0, load, 2, 500.0), 1);
     }
@@ -471,6 +493,7 @@ mod tests {
             active_replicas: 1,
             idle_s: 500.0,
             prefix_hit_rate: 0.0,
+            spec_accept_rate: 0.0,
         };
         assert_eq!(tier_target(&mut s, 1, load, 4, 1000.0), 1);
     }
@@ -484,6 +507,7 @@ mod tests {
             active_replicas: 1,
             idle_s: 0.0,
             prefix_hit_rate: 0.0,
+            spec_accept_rate: 0.0,
         };
         assert_eq!(tier_target(&mut s, 0, load, 4, 0.0), 4);
     }
@@ -497,6 +521,7 @@ mod tests {
             active_replicas: 1,
             idle_s: 1.0,
             prefix_hit_rate: 0.0,
+            spec_accept_rate: 0.0,
         };
         // Demand 8 fits one replica exactly → no change.
         assert!(s.plan_tier(0, ServiceId(0), load, 4, 0.0).is_none());
@@ -512,12 +537,54 @@ mod tests {
             active_replicas: 1,
             idle_s: 0.0,
             prefix_hit_rate: 0.0,
+            spec_accept_rate: 0.0,
         };
         let mut s = pool_scaler([0, 0, 0]);
         assert_eq!(tier_target(&mut s, 0, cold, 8, 0.0), 4);
         let warm = TierLoad { prefix_hit_rate: 1.0, ..cold };
         let mut s = pool_scaler([0, 0, 0]);
         assert_eq!(tier_target(&mut s, 0, warm, 8, 0.0), 2);
+    }
+
+    #[test]
+    fn pool_spec_acceptance_tempers_scale_up() {
+        // Accepted draft tokens drain queued decode faster, so the same
+        // queue asks for half the replicas at full acceptance.
+        let plain = TierLoad {
+            queue_depth: 30,
+            slots_in_use: 0,
+            active_replicas: 1,
+            idle_s: 0.0,
+            prefix_hit_rate: 0.0,
+            spec_accept_rate: 0.0,
+        };
+        let mut s = pool_scaler([0, 0, 0]);
+        assert_eq!(tier_target(&mut s, 0, plain, 8, 0.0), 4);
+        let spec = TierLoad { spec_accept_rate: 1.0, ..plain };
+        let mut s = pool_scaler([0, 0, 0]);
+        assert_eq!(tier_target(&mut s, 0, spec, 8, 0.0), 2);
+    }
+
+    #[test]
+    fn pool_reliefs_compose_multiplicatively_with_a_floor() {
+        // Both discounts maxed: relief = (1-0.5)(1-0.5) = 0.25, not
+        // 1 - 0.5 - 0.5 = 0 — the queue never vanishes from the plan.
+        let load = TierLoad {
+            queue_depth: 32,
+            slots_in_use: 0,
+            active_replicas: 0,
+            idle_s: 0.0,
+            prefix_hit_rate: 1.0,
+            spec_accept_rate: 1.0,
+        };
+        let mut s = pool_scaler([0, 0, 0]);
+        // 32 × 0.25 = 8 → exactly one 8-slot replica.
+        assert_eq!(tier_target(&mut s, 0, load, 8, 0.0), 1);
+        // Degenerate (out-of-range) rates clamp instead of driving the
+        // composed relief negative: demand stays at the 0.25 floor.
+        let wild = TierLoad { prefix_hit_rate: 7.0, spec_accept_rate: 9.0, ..load };
+        let mut s = pool_scaler([0, 0, 0]);
+        assert_eq!(tier_target(&mut s, 0, wild, 8, 0.0), 1);
     }
 
     #[test]

@@ -148,6 +148,19 @@ impl Registry {
         self.services.iter().map(|s| s.ready_replicas).sum()
     }
 
+    /// Cross-tier speculative pairing: can `draft_tier` draft right now?
+    /// True when at least one of the tier's services is healthy-enough
+    /// with a ready replica. A cold, recovering, or unhealthy draft tier
+    /// returns false, and every paired verify tier falls back to plain
+    /// decode until the tier comes back.
+    pub fn draft_tier_ready(&self, draft_tier: usize) -> bool {
+        self.services.iter().any(|s| {
+            s.spec.tier.index() == draft_tier
+                && s.health != Health::Unhealthy
+                && s.ready_replicas > 0
+        })
+    }
+
     /// Update every service of one engine tier at once. The live
     /// gateway's registry is a routing view over per-tier replica pools:
     /// all services of a tier share the tier's engine threads, so their
@@ -266,6 +279,22 @@ mod tests {
                 assert_eq!(s.health, Health::Healthy);
             }
         }
+    }
+
+    #[test]
+    fn draft_tier_ready_tracks_health_and_replicas() {
+        let mut r = registry();
+        let tier0 = r.services[0].spec.tier.index();
+        assert!(!r.draft_tier_ready(tier0), "cold tier cannot draft");
+        r.set_tier_state(tier0, 1, 0, Health::Healthy);
+        assert!(r.draft_tier_ready(tier0));
+        // Degraded still drafts; dead does not.
+        r.set_tier_state(tier0, 1, 0, Health::Degraded);
+        assert!(r.draft_tier_ready(tier0));
+        r.set_tier_state(tier0, 0, 1, Health::Healthy);
+        assert!(!r.draft_tier_ready(tier0), "mid-recovery tier cannot draft");
+        r.set_tier_state(tier0, 2, 0, Health::Unhealthy);
+        assert!(!r.draft_tier_ready(tier0));
     }
 
     #[test]

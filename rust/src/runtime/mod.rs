@@ -301,6 +301,22 @@ impl Sequence {
     pub fn done(&self) -> bool {
         self.out.len() >= self.budget
     }
+
+    /// Roll back the last `n` generated tokens — the speculative-decode
+    /// rejection cleanup for the compiled path. The KV positions beyond
+    /// the restored `pos` become dead weight the next decode step simply
+    /// overwrites, so only the cursor state needs rewinding: the output
+    /// stream shrinks, `pos` rewinds with it, and `last_token` is
+    /// refreshed so the next dispatch feeds the correct id. At least the
+    /// prefill token is always kept (a sequence never rolls back to
+    /// empty). Returns the tokens actually removed.
+    pub fn rollback_draft(&mut self, n: usize) -> usize {
+        let rolled = n.min(self.out.len().saturating_sub(1));
+        self.out.truncate(self.out.len() - rolled);
+        self.pos -= rolled as i32;
+        self.last_token = *self.out.last().expect("prefill token always present");
+        rolled
+    }
 }
 
 /// A compiled LM tier: batch-1 prefill plus decode executables per batch.
@@ -492,4 +508,38 @@ fn literal_bytes(lit: &Literal) -> Result<Vec<u8>> {
         out.extend_from_slice(&x.to_le_bytes());
     }
     Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(tokens: &[i32], pos: i32) -> Sequence {
+        Sequence {
+            kv: Vec::new(),
+            pos,
+            last_token: *tokens.last().unwrap(),
+            out: tokens.to_vec(),
+            budget: 8,
+            prompt_tokens: 3,
+            prefix_len: 0,
+        }
+    }
+
+    #[test]
+    fn rollback_draft_restores_decode_cursor_state() {
+        let mut s = seq(&[10, 11, 12, 13], 7);
+        assert_eq!(s.rollback_draft(2), 2);
+        assert_eq!(s.tokens(), &[10, 11]);
+        assert_eq!(s.position(), 5);
+        assert_eq!(s.last_token, 11, "next dispatch must feed the kept tail");
+        assert!(!s.done());
+        // Over-rollback keeps the prefill token — a sequence never
+        // rewinds to empty.
+        assert_eq!(s.rollback_draft(10), 1);
+        assert_eq!(s.tokens(), &[10]);
+        assert_eq!(s.position(), 4);
+        assert_eq!(s.last_token, 10);
+        assert_eq!(s.rollback_draft(1), 0);
+    }
 }

@@ -36,7 +36,12 @@
 //! plane: the heartbeat's `hot` prefix summary plus the
 //! `PrefixAd`/`FetchBlocks`/`BlocksChunk` transfer frames — the
 //! supervisor never sends a v2-only frame on a v1 session, and a v1
-//! decoder skips the unknown `hot` heartbeat key. Chain hashes are u64
+//! decoder skips the unknown `hot` heartbeat key. Version 2 also carries
+//! the cross-tier speculative-decoding plane: `PoolWire`'s `spec_*`
+//! knobs, the heartbeat's `spec_*` counters (omitted while zero, so a
+//! plain-decode heartbeat keeps the v1 byte shape), and the
+//! supervisor→worker [`Frame::SpecDraft`] draft-tier-availability
+//! signal. Chain hashes are u64
 //! and cross the wire as 16-digit hex strings: `Json::Num` is an f64
 //! and would silently round hashes above 2^53.
 
@@ -182,6 +187,19 @@ pub struct PoolWire {
     /// heartbeat. `0` = affinity routing off, advertise nothing (the v1
     /// wire behavior).
     pub affinity_top_k: usize,
+    /// Draft window for cross-tier speculative decoding. `0` =
+    /// speculation off for this replica (the v1 wire behavior); nonzero
+    /// means the worker's scheduler runs the draft/verify state machine
+    /// with this window once the supervisor signals the draft tier live
+    /// ([`Frame::SpecDraft`]).
+    pub spec_draft_tokens: usize,
+    /// Acceptance EMA floor below which the worker's scheduler latches
+    /// speculation off (meaningless when `spec_draft_tokens` is 0).
+    pub spec_min_accept: f64,
+    /// Sim-engine acceptance model rate (process-substrate sim workers
+    /// reconstruct their acceptance model from this; ignored by live
+    /// engines, meaningless when `spec_draft_tokens` is 0).
+    pub spec_sim_accept: f64,
 }
 
 impl PoolWire {
@@ -195,7 +213,25 @@ impl PoolWire {
             kv_block_tokens: p.kv_block_tokens,
             prefix_cache: p.prefix_cache,
             affinity_top_k: if p.affinity.enabled { p.affinity.top_k } else { 0 },
+            spec_draft_tokens: if p.speculative.enabled {
+                p.speculative.draft_tokens
+            } else {
+                0
+            },
+            spec_min_accept: p.speculative.min_accept_rate,
+            spec_sim_accept: p.speculative.sim_accept,
         }
+    }
+
+    /// `from_pool` with the per-tier pairing rule applied: a tier that
+    /// does not verify against a draft tier ships `spec_draft_tokens: 0`
+    /// and runs plain decode bit-for-bit.
+    pub fn from_pool_for_tier(p: &PoolConfig, tier: usize) -> PoolWire {
+        let mut w = PoolWire::from_pool(p);
+        if !p.speculative.pairs_with(tier) {
+            w.spec_draft_tokens = 0;
+        }
+        w
     }
 
     fn to_json(&self) -> Json {
@@ -210,6 +246,9 @@ impl PoolWire {
             ("pc_min_block_run", Json::num(self.prefix_cache.min_block_run as f64)),
             ("pc_evict_watermark", Json::num(self.prefix_cache.evict_watermark)),
             ("aff_top_k", Json::num(self.affinity_top_k as f64)),
+            ("spec_draft_tokens", Json::num(self.spec_draft_tokens as f64)),
+            ("spec_min_accept", Json::num(self.spec_min_accept)),
+            ("spec_sim_accept", Json::num(self.spec_sim_accept)),
         ])
     }
 
@@ -227,6 +266,10 @@ impl PoolWire {
                 evict_watermark: j.f64_or("pc_evict_watermark", 0.9),
             },
             affinity_top_k: j.usize_or("aff_top_k", 0),
+            // Lenient: absent (v1 supervisor) = speculation off.
+            spec_draft_tokens: j.usize_or("spec_draft_tokens", 0),
+            spec_min_accept: j.f64_or("spec_min_accept", 0.3),
+            spec_sim_accept: j.f64_or("spec_sim_accept", 0.75),
         })
     }
 }
@@ -256,6 +299,13 @@ pub struct HeartbeatWire {
     /// scores request prompts against these for cache-affinity dispatch.
     /// Empty when affinity is off (and always absent on a v1 wire).
     pub hot: Vec<(u64, u32)>,
+    /// v2: speculative-decoding counters, cumulative like the prefix
+    /// counters. All zero (and absent on the wire) while the worker runs
+    /// plain decode, so a non-speculating heartbeat keeps the v1 shape.
+    pub spec_drafted_tokens: u64,
+    pub spec_accepted_tokens: u64,
+    pub spec_rejected_tokens: u64,
+    pub spec_verify_steps: u64,
 }
 
 /// One protocol frame. `S2W` = supervisor→worker, `W2S` = worker→supervisor.
@@ -321,6 +371,13 @@ pub enum Frame {
     /// the supervisor fails that replica instead of waiting out the
     /// connect deadline.
     SpawnFailed { seq: u64, error: String },
+    // ---- speculative decoding (v2) ---------------------------------------
+    /// S2W: draft-tier availability edge. `ok: true` means the paired
+    /// draft tier is live and unsaturated, so the worker's scheduler may
+    /// speculate; `ok: false` (also the worker's initial state) forces
+    /// plain decode. Sent on change by the supervisor's control loop —
+    /// never on a v1 session.
+    SpecDraft { ok: bool },
     // ---- control / health ------------------------------------------------
     /// W2S: liveness + cumulative counters.
     Heartbeat(HeartbeatWire),
@@ -356,6 +413,7 @@ impl Frame {
             Frame::NodeHelloAck { .. } => "node_hello_ack",
             Frame::SpawnReplica { .. } => "spawn",
             Frame::SpawnFailed { .. } => "spawn_failed",
+            Frame::SpecDraft { .. } => "spec_draft",
             Frame::Heartbeat(_) => "heartbeat",
             Frame::Ping { .. } => "ping",
             Frame::Pong { .. } => "pong",
@@ -436,6 +494,9 @@ impl Frame {
                 pairs.push(("seq", Json::num(*seq as f64)));
                 pairs.push(("error", Json::str(error.clone())));
             }
+            Frame::SpecDraft { ok } => {
+                pairs.push(("ok", Json::Bool(*ok)));
+            }
             Frame::Heartbeat(hb) => {
                 pairs.push(("inflight", Json::num(hb.inflight as f64)));
                 pairs.push(("prefills", Json::num(hb.prefills as f64)));
@@ -457,6 +518,32 @@ impl Frame {
                 // heartbeat stays byte-identical with affinity off.
                 if !hb.hot.is_empty() {
                     pairs.push(("hot", prefixes_json(&hb.hot)));
+                }
+                // v2: likewise omitted while zero — a plain-decode
+                // worker's heartbeat is byte-identical to v1.
+                if hb.spec_drafted_tokens != 0 {
+                    pairs.push((
+                        "spec_drafted",
+                        Json::num(hb.spec_drafted_tokens as f64),
+                    ));
+                }
+                if hb.spec_accepted_tokens != 0 {
+                    pairs.push((
+                        "spec_accepted",
+                        Json::num(hb.spec_accepted_tokens as f64),
+                    ));
+                }
+                if hb.spec_rejected_tokens != 0 {
+                    pairs.push((
+                        "spec_rejected",
+                        Json::num(hb.spec_rejected_tokens as f64),
+                    ));
+                }
+                if hb.spec_verify_steps != 0 {
+                    pairs.push((
+                        "spec_verify_steps",
+                        Json::num(hb.spec_verify_steps as f64),
+                    ));
                 }
             }
             Frame::Ping { nonce } | Frame::Pong { nonce } => {
@@ -554,6 +641,7 @@ impl Frame {
                 seq: j.rusize("seq")? as u64,
                 error: j.rstr("error")?.to_string(),
             },
+            "spec_draft" => Frame::SpecDraft { ok: j.bool_or("ok", false) },
             "heartbeat" => {
                 let mut batch_counts = [0u64; N_DECODE_BATCHES];
                 if let Some(a) = j.get("batch_counts").and_then(Json::as_arr) {
@@ -579,6 +667,11 @@ impl Frame {
                         .map(prefixes_from)
                         .transpose()?
                         .unwrap_or_default(),
+                    // Lenient: absent (v1 peer, or plain decode) = zero.
+                    spec_drafted_tokens: j.usize_or("spec_drafted", 0) as u64,
+                    spec_accepted_tokens: j.usize_or("spec_accepted", 0) as u64,
+                    spec_rejected_tokens: j.usize_or("spec_rejected", 0) as u64,
+                    spec_verify_steps: j.usize_or("spec_verify_steps", 0) as u64,
                 })
             }
             "ping" => Frame::Ping { nonce: j.rusize("nonce")? as u64 },
@@ -784,7 +877,13 @@ mod tests {
             prefix_evicted_blocks: 4,
             prefix_cache_blocks: 17,
             hot: vec![(u64::MAX, 7), (0x0123_4567_89ab_cdef, 2), (0, 1)],
+            spec_drafted_tokens: 48,
+            spec_accepted_tokens: 30,
+            spec_rejected_tokens: 18,
+            spec_verify_steps: 12,
         }));
+        roundtrip(Frame::SpecDraft { ok: true });
+        roundtrip(Frame::SpecDraft { ok: false });
         roundtrip(Frame::PrefixAd {
             prefixes: vec![(u64::MAX - 1, 3), (1, 1)],
         });
@@ -941,6 +1040,45 @@ mod tests {
         assert!(!back.prefix_cache.enabled);
         assert_eq!(back.max_inflight, 11);
         assert_eq!(back.affinity_top_k, 0, "affinity off ⇒ no advertising");
+    }
+
+    #[test]
+    fn plain_decode_heartbeat_keeps_the_v1_byte_shape() {
+        // A worker that never speculated has all-zero spec counters; its
+        // heartbeat must not grow new keys (v1 peers skip nothing, and
+        // the wire stays bit-for-bit the pre-speculation shape).
+        let hb = HeartbeatWire { inflight: 2, decode_steps: 9, ..Default::default() };
+        let bytes = Frame::Heartbeat(hb.clone()).encode();
+        assert!(!String::from_utf8(bytes.clone()).unwrap().contains("spec"));
+        let mut r = FrameReader::new();
+        r.extend(&bytes);
+        match r.next().unwrap().unwrap() {
+            Frame::Heartbeat(back) => assert_eq!(back, hb),
+            other => panic!("wrong frame {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pool_wire_ships_spec_window_only_when_paired() {
+        let mut p = PoolConfig::default();
+        p.speculative.draft_tokens = 6;
+        assert_eq!(PoolWire::from_pool(&p).spec_draft_tokens, 0, "disabled");
+        p.speculative.enabled = true;
+        p.speculative.draft_tier = 0;
+        let w = PoolWire::from_pool(&p);
+        assert_eq!(w.spec_draft_tokens, 6);
+        let back = PoolWire::from_json(&Json::parse(&w.to_json().dump()).unwrap())
+            .unwrap();
+        assert_eq!(back, w);
+        // Per-tier: the draft tier itself (and any unpaired tier) ships 0.
+        assert_eq!(PoolWire::from_pool_for_tier(&p, 0).spec_draft_tokens, 0);
+        assert_eq!(PoolWire::from_pool_for_tier(&p, 2).spec_draft_tokens, 6);
+        // A v1-era PoolWire JSON (no spec keys) decodes to speculation off.
+        let legacy = r#"{"max_inflight":8,"max_decode_batch":8,
+            "max_prefill_batch":4,"flush_timeout_s":0.01,
+            "kv_blocks":128,"kv_block_tokens":16}"#;
+        let old = PoolWire::from_json(&Json::parse(legacy).unwrap()).unwrap();
+        assert_eq!(old.spec_draft_tokens, 0);
     }
 
     #[test]

@@ -52,7 +52,7 @@ use std::net::TcpListener;
 use std::os::unix::net::UnixListener;
 use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -390,6 +390,7 @@ impl Substrate for ProcessSubstrate {
                 epoch: self.shared.epoch,
                 pool: self.pool.clone(),
                 tier: ti,
+                spec_draft_ok: Arc::clone(&self.shared.spec_draft_ok),
             };
             let rx = link_chan.clone();
             match std::thread::Builder::new()
@@ -747,6 +748,7 @@ struct PumpStart {
     epoch: Instant,
     pool: PoolConfig,
     tier: usize,
+    spec_draft_ok: Arc<AtomicBool>,
 }
 
 impl PumpStart {
@@ -761,6 +763,7 @@ impl PumpStart {
             epoch: self.epoch,
             pool: self.pool,
             tier: self.tier,
+            spec_draft_ok: self.spec_draft_ok,
         }
     }
 }
@@ -775,6 +778,9 @@ struct PumpCtx {
     epoch: Instant,
     pool: PoolConfig,
     tier: usize,
+    /// Router-published draft-tier availability, relayed to the worker
+    /// as `SpecDraft` frames on every edge (v2 sessions only).
+    spec_draft_ok: Arc<AtomicBool>,
 }
 
 /// One dispatched job the worker still owes us. The reply rendezvous
@@ -842,9 +848,15 @@ fn pump_session(ctx: &mut PumpCtx) -> Result<(), String> {
         }
         f => return Err(format!("expected Hello, got {f:?}")),
     };
+    // The pool window is tier-gated: only a tier the speculative config
+    // pairs as a *verifier* receives a nonzero draft window, so a draft
+    // tier's own worker never tries to speculate against itself.
     send(
         &mut *stream,
-        &Frame::HelloAck { version, pool: PoolWire::from_pool(&ctx.pool) },
+        &Frame::HelloAck {
+            version,
+            pool: PoolWire::from_pool_for_tier(&ctx.pool, ctx.tier),
+        },
         ctx,
     )?;
     ctx.cell
@@ -862,6 +874,10 @@ fn pump_session(ctx: &mut PumpCtx) -> Result<(), String> {
     let mut xfer_pending: BTreeMap<u64, (Arc<ReplicaCell>, Vec<Vec<i32>>)> =
         BTreeMap::new();
     let mut last_hb = HeartbeatWire::default();
+    // Last draft-availability value shipped to the worker; `None` until
+    // the first edge so a fresh worker starts from its own default
+    // (unavailable) and the very first `true` is always delivered.
+    let mut last_spec_ok: Option<bool> = None;
     let mut killed = false;
     let mut draining = false;
     let mut drain_deadline = Instant::now() + DRAIN_TIMEOUT;
@@ -1165,6 +1181,24 @@ fn pump_session(ctx: &mut PumpCtx) -> Result<(), String> {
             ctx.cell.incoming.lock().unwrap().clear();
         }
 
+        // 4c. Speculative draft-availability relay (v2, verify tiers
+        // only): the router publishes whether the draft tier can serve
+        // draft windows right now; the worker falls back to plain decode
+        // while the signal is down. Sent on edges, not every turn.
+        if version >= 2
+            && !draining
+            && !killed
+            && ctx.pool.speculative.pairs_with(ctx.tier)
+        {
+            let ok = ctx.spec_draft_ok.load(Ordering::Relaxed);
+            if last_spec_ok != Some(ok) {
+                last_spec_ok = Some(ok);
+                if let Err(e) = send(&mut *stream, &Frame::SpecDraft { ok }, ctx) {
+                    return end_dead(ctx, inflight, &e);
+                }
+            }
+        }
+
         // 5. Cancellation propagation: a caller that timed out fires its
         // token locally; the worker evicts the sequence on the Cancel
         // frame and answers Cancelled.
@@ -1309,6 +1343,22 @@ fn apply_heartbeat(hb: &HeartbeatWire, last: &HeartbeatWire, ctx: &PumpCtx) {
         d(hb.prefix_evicted_blocks, last.prefix_evicted_blocks),
         Ordering::Relaxed,
     );
+    m.spec_drafted_tokens.fetch_add(
+        d(hb.spec_drafted_tokens, last.spec_drafted_tokens),
+        Ordering::Relaxed,
+    );
+    m.spec_accepted_tokens.fetch_add(
+        d(hb.spec_accepted_tokens, last.spec_accepted_tokens),
+        Ordering::Relaxed,
+    );
+    m.spec_rejected_tokens.fetch_add(
+        d(hb.spec_rejected_tokens, last.spec_rejected_tokens),
+        Ordering::Relaxed,
+    );
+    m.spec_verify_steps.fetch_add(
+        d(hb.spec_verify_steps, last.spec_verify_steps),
+        Ordering::Relaxed,
+    );
     let c = &ctx.cell;
     c.inflight.store(hb.inflight, Ordering::Relaxed);
     // The hot-prefix summary the router scores against. Skipped when
@@ -1323,6 +1373,14 @@ fn apply_heartbeat(hb: &HeartbeatWire, last: &HeartbeatWire, ctx: &PumpCtx) {
         .store(hb.prefix_miss_tokens, Ordering::Relaxed);
     c.prefix_cache_blocks
         .store(hb.prefix_cache_blocks, Ordering::Relaxed);
+    c.spec_drafted_tokens
+        .store(hb.spec_drafted_tokens, Ordering::Relaxed);
+    c.spec_accepted_tokens
+        .store(hb.spec_accepted_tokens, Ordering::Relaxed);
+    c.spec_rejected_tokens
+        .store(hb.spec_rejected_tokens, Ordering::Relaxed);
+    c.spec_verify_steps
+        .store(hb.spec_verify_steps, Ordering::Relaxed);
 }
 
 /// Answer one caller from the accumulated token stream.

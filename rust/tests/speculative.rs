@@ -1,0 +1,211 @@
+//! Cross-tier speculative decoding end-to-end: small-tier drafts,
+//! big-tier batched verify, on both substrates.
+//!
+//! The acceptance model lives in the sim engine (deterministic verdict
+//! streams at `pool.speculative.sim_accept`), and the sim engine drafts
+//! by lookahead on its own token stream — so speculation changes *when*
+//! tokens land, never *which* tokens land. That makes the strongest
+//! possible integration check cheap: a speculative run must produce
+//! bit-identical completions to a plain run of the same prompts, while
+//! the spec counters prove the draft/verify path actually engaged. The
+//! recovery test SIGKILLs the draft tier mid-stream and requires every
+//! completion to survive via the plain-decode fallback.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use pick_and_spin::config::{Config, SubstrateKind};
+use pick_and_spin::gateway::LiveStack;
+use pick_and_spin::testkit::wait_until;
+
+const WORKER_BIN: &str = env!("CARGO_BIN_EXE_pick-and-spin");
+
+/// Hard prompts (keyword complexity 2) route to the large tier, which is
+/// a verify tier under `draft_tier = 0`.
+fn hard_prompt(i: usize) -> String {
+    format!("prove that series {i} converges and derive the bound")
+}
+
+fn scfg(enabled: bool, accept: f64) -> Config {
+    let mut cfg = Config::default();
+    cfg.pool.replicas = [1, 1, 1];
+    cfg.pool.max_inflight = 8;
+    cfg.pool.flush_timeout_s = 0.003;
+    cfg.pool.scale_interval_s = 0.02;
+    // No scale-down noise during the experiments.
+    cfg.orchestrator.idle_timeout_s = 3600.0;
+    cfg.pool.speculative.enabled = enabled;
+    cfg.pool.speculative.draft_tier = 0;
+    cfg.pool.speculative.draft_tokens = 4;
+    cfg.pool.speculative.sim_accept = accept;
+    cfg
+}
+
+fn pcfg(enabled: bool, accept: f64) -> Config {
+    let mut cfg = scfg(enabled, accept);
+    cfg.pool.substrate = SubstrateKind::Process;
+    cfg.pool.worker_bin = Some(WORKER_BIN.to_string());
+    cfg.pool.worker_log_dir = std::env::var("PS_WORKER_LOG_DIR").ok();
+    cfg
+}
+
+/// Serve every prompt and return prompt index → token stream.
+fn serve(stack: &Arc<LiveStack>, n: usize, max_new: usize) -> BTreeMap<usize, Vec<i32>> {
+    let handles: Vec<_> = (0..n)
+        .map(|i| {
+            let s = Arc::clone(stack);
+            std::thread::spawn(move || {
+                (i, s.complete(&hard_prompt(i), max_new).expect("request").tokens)
+            })
+        })
+        .collect();
+    handles
+        .into_iter()
+        .map(|h| h.join().expect("request thread"))
+        .collect()
+}
+
+/// Wait for the router's first control pass to publish draft-tier
+/// availability, then serve; speculation engages mid-run at the latest.
+fn serve_speculative(
+    stack: &Arc<LiveStack>,
+    n: usize,
+    max_new: usize,
+) -> BTreeMap<usize, Vec<i32>> {
+    std::thread::sleep(Duration::from_millis(200));
+    serve(stack, n, max_new)
+}
+
+#[test]
+fn speculative_decode_is_token_identical_and_engages_on_the_thread_substrate() {
+    let n = 24;
+    let plain_stack = Arc::new(LiveStack::start_sim(&scfg(false, 0.0)).unwrap());
+    let plain = serve(&plain_stack, n, 24);
+    drop(plain_stack);
+
+    let stack = Arc::new(LiveStack::start_sim(&scfg(true, 0.7)).unwrap());
+    let spec = serve_speculative(&stack, n, 24);
+    assert_eq!(plain, spec, "speculation must never change the token stream");
+    assert!(
+        wait_until(Duration::from_secs(10), || {
+            stack.metrics.spec_drafted_tokens.load(Ordering::Relaxed) > 0
+                && stack.metrics.spec_accepted_tokens.load(Ordering::Relaxed) > 0
+        }),
+        "speculation never engaged: drafted={} accepted={}",
+        stack.metrics.spec_drafted_tokens.load(Ordering::Relaxed),
+        stack.metrics.spec_accepted_tokens.load(Ordering::Relaxed),
+    );
+    assert_eq!(stack.metrics.errors.load(Ordering::Relaxed), 0);
+
+    // The whole plane is visible at /metrics, including the per-tier
+    // acceptance-rate gauge for the verify tier that served the prompts.
+    let snap = stack.metrics_snapshot();
+    let get = |name: &str| {
+        snap.iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| *v)
+            .unwrap_or_else(|| panic!("{name} missing from /metrics"))
+    };
+    assert!(get("ps_spec_drafted_tokens_total") > 0.0);
+    assert!(get("ps_spec_accepted_tokens_total") > 0.0);
+    assert!(get("ps_spec_verify_steps_total") > 0.0);
+    let rate = snap
+        .iter()
+        .find(|(k, _)| k.starts_with("ps_spec_accept_rate{tier="))
+        .map(|(_, v)| *v)
+        .expect("no per-tier acceptance gauge for a tier that drafted");
+    assert!(
+        rate > 0.0 && rate <= 1.0,
+        "acceptance gauge out of range: {rate}"
+    );
+}
+
+#[test]
+fn speculative_decode_disabled_exports_no_spec_series() {
+    // Off by default: the plain pool must not even emit the per-tier
+    // acceptance gauges (counters stay, pinned at zero).
+    let stack = Arc::new(LiveStack::start_sim(&scfg(false, 0.0)).unwrap());
+    serve(&stack, 4, 8);
+    assert_eq!(stack.metrics.spec_drafted_tokens.load(Ordering::Relaxed), 0);
+    assert_eq!(stack.metrics.spec_verify_steps.load(Ordering::Relaxed), 0);
+    let snap = stack.metrics_snapshot();
+    assert!(snap.iter().any(|(k, v)| k == "ps_spec_drafted_tokens_total" && *v == 0.0));
+    assert!(!snap.iter().any(|(k, _)| k.starts_with("ps_spec_accept_rate")));
+}
+
+#[test]
+fn speculative_decode_is_token_identical_over_the_process_substrate() {
+    // Same check across the RPC data plane: the tier-gated PoolWire
+    // window, the SpecDraft availability relay, and the heartbeat spec
+    // counters all have to work for this to both engage and stay
+    // bit-identical. The worker's sim engine seeds its token stream from
+    // the prompt, so the process pool must reproduce the thread pool's
+    // plain completions exactly.
+    let n = 16;
+    let plain_stack = Arc::new(LiveStack::start_sim(&scfg(false, 0.0)).unwrap());
+    let plain = serve(&plain_stack, n, 16);
+    drop(plain_stack);
+
+    let stack = Arc::new(LiveStack::start_sim(&pcfg(true, 0.7)).unwrap());
+    let spec = serve_speculative(&stack, n, 16);
+    assert_eq!(plain, spec, "speculation must never change the token stream");
+    // Counters flow back through worker heartbeats (omitted-when-zero on
+    // the wire, so nonzero here proves the v2 spec plane round-trips).
+    assert!(
+        wait_until(Duration::from_secs(10), || {
+            stack.metrics.spec_drafted_tokens.load(Ordering::Relaxed) > 0
+                && stack.metrics.spec_verify_steps.load(Ordering::Relaxed) > 0
+        }),
+        "spec counters never surfaced over the RPC plane: drafted={} steps={}",
+        stack.metrics.spec_drafted_tokens.load(Ordering::Relaxed),
+        stack.metrics.spec_verify_steps.load(Ordering::Relaxed),
+    );
+    assert_eq!(stack.metrics.errors.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn draft_tier_sigkill_falls_back_to_plain_decode_without_loss() {
+    // Kill the draft tier mid-stream: the router's next control pass
+    // drops the availability signal, verify tiers fall back to plain
+    // decode, and — the actual requirement — not a single completion is
+    // lost or corrupted while the draft tier recovers.
+    let n = 32usize;
+    let stack = Arc::new(LiveStack::start_sim(&scfg(true, 0.7)).unwrap());
+    std::thread::sleep(Duration::from_millis(200));
+    let handles: Vec<_> = (0..n)
+        .map(|i| {
+            let s = Arc::clone(&stack);
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(i as u64 * 3));
+                s.complete(&hard_prompt(i), 24)
+            })
+        })
+        .collect();
+    assert!(
+        wait_until(Duration::from_secs(10), || stack.slots_in_use() > 0),
+        "traffic never started decoding"
+    );
+    assert!(
+        stack.inject_replica_failure(0),
+        "no Ready draft-tier replica to kill"
+    );
+    for h in handles {
+        let r = h
+            .join()
+            .unwrap()
+            .expect("completion lost across the draft-tier failure");
+        assert!(!r.tokens.is_empty());
+    }
+    assert_eq!(stack.metrics.errors.load(Ordering::Relaxed), 0);
+    assert_eq!(stack.metrics.completed.load(Ordering::Relaxed), n as u64);
+    // The incident was recorded and the draft tier redeployed.
+    assert!(
+        wait_until(Duration::from_secs(10), || {
+            stack.metrics.incidents.load(Ordering::Relaxed) >= 1
+                && stack.metrics.recovered.load(Ordering::Relaxed) >= 1
+        }),
+        "draft-tier incident never recovered"
+    );
+}
