@@ -493,6 +493,209 @@ fn main() {
         println!("wrote BENCH_7.json (speedup at 0.7 acceptance: {:.2}x)", spec.tps / plain.tps);
     }
 
+    if selected("overload") {
+        // Overload control end-to-end: the pinned BENCH_8 scenario — a
+        // batch flood at ~2× the single-slot drain rate of one tier,
+        // followed by a burst of deadline-carrying interactive requests.
+        // Served with admission off (legacy FIFO: interactive starves
+        // behind the flood and times out) and on (priority admission +
+        // watermark shedding: batch is shed, interactive overtakes the
+        // flood and makes its deadline). The service time is calibrated
+        // first so the deadline scales with the machine instead of being
+        // a magic number.
+        use pick_and_spin::config::{Config, Priority};
+        use pick_and_spin::gateway::{
+            CompletionError, CompletionRequest, FailureKind, LiveStack,
+        };
+        use pick_and_spin::util::json::Json;
+        use std::sync::atomic::Ordering;
+        use std::sync::Arc;
+
+        const BATCH: usize = 96;
+        const INTERACTIVE: usize = 16;
+        const BATCH_TOKENS: usize = 48;
+        const INTER_TOKENS: usize = 8;
+
+        let mk_cfg = |admission: bool| {
+            let mut cfg = Config::default();
+            cfg.pool.replicas = [1, 1, 1]; // plan_tier's ceiling: no scale-out
+            cfg.pool.max_inflight = 1;
+            cfg.pool.flush_timeout_s = 0.001;
+            cfg.pool.scale_interval_s = 0.02;
+            cfg.pool.queue_capacity = 256;
+            cfg.pool.admission.enabled = admission;
+            cfg.pool.admission.watermark = 0.125; // shed past 32 queued
+            cfg
+        };
+        let hard = |i: usize| {
+            format!("prove that series {i} converges and derive the bound")
+        };
+
+        // Calibrate the single-slot service time (large tier, serial).
+        let per_job_s = {
+            let stack = LiveStack::start_sim(&mk_cfg(false)).expect("bench stack");
+            std::thread::sleep(std::time::Duration::from_millis(120));
+            let t0 = std::time::Instant::now();
+            for i in 0..8 {
+                stack.complete(&hard(i), BATCH_TOKENS).expect("calibration");
+            }
+            t0.elapsed().as_secs_f64() / 8.0
+        };
+        let deadline_s = (per_job_s * 24.0).clamp(0.05, 10.0);
+
+        struct OverloadRun {
+            inter_ok: usize,
+            batch_ok: usize,
+            batch_shed: usize,
+            shed: [u64; 3],
+            rejected_backlog: u64,
+            rejected_deadline: u64,
+            wall_s: f64,
+        }
+
+        let run = |admission: bool| -> OverloadRun {
+            let stack = Arc::new(LiveStack::start_sim(&mk_cfg(admission)).expect("bench stack"));
+            std::thread::sleep(std::time::Duration::from_millis(120));
+            let t0 = std::time::Instant::now();
+            let batch: Vec<_> = (0..BATCH)
+                .map(|i| {
+                    let s = Arc::clone(&stack);
+                    std::thread::spawn(move || {
+                        s.complete_request(
+                            CompletionRequest::new(hard(i))
+                                .max_tokens(BATCH_TOKENS)
+                                .priority(Priority::Batch),
+                        )
+                    })
+                })
+                .collect();
+            // Let the flood buffer (and a drain sample land) before the
+            // interactive burst arrives behind it.
+            std::thread::sleep(std::time::Duration::from_secs_f64(
+                (per_job_s * 8.0).max(0.05),
+            ));
+            let inter: Vec<_> = (0..INTERACTIVE)
+                .map(|i| {
+                    let s = Arc::clone(&stack);
+                    std::thread::spawn(move || {
+                        s.complete_request(
+                            CompletionRequest::new(hard(1000 + i))
+                                .max_tokens(INTER_TOKENS)
+                                .priority(Priority::Interactive)
+                                .deadline_s(deadline_s),
+                        )
+                    })
+                })
+                .collect();
+            // An Ok under a deadline IS the goodput signal: the caller
+            // wait is bounded by the deadline, so every completion met it.
+            let inter_ok = inter
+                .into_iter()
+                .map(|h| h.join().expect("bench thread"))
+                .filter(|r| r.is_ok())
+                .count();
+            let mut batch_ok = 0usize;
+            let mut batch_shed = 0usize;
+            for h in batch {
+                match h.join().expect("bench thread") {
+                    Ok(_) => batch_ok += 1,
+                    Err(e) => {
+                        let shed = e
+                            .downcast_ref::<CompletionError>()
+                            .map(|ce| {
+                                matches!(
+                                    ce.kind,
+                                    FailureKind::Shed | FailureKind::QueueFull
+                                )
+                            })
+                            .unwrap_or(false);
+                        assert!(shed, "batch request failed untyped: {e}");
+                        batch_shed += 1;
+                    }
+                }
+            }
+            let m = &stack.metrics;
+            OverloadRun {
+                inter_ok,
+                batch_ok,
+                batch_shed,
+                shed: std::array::from_fn(|p| {
+                    m.shed_total[p].iter().map(|c| c.load(Ordering::Relaxed)).sum()
+                }),
+                rejected_backlog: m.admission_rejected_backlog.load(Ordering::Relaxed),
+                rejected_deadline: m.admission_rejected_deadline.load(Ordering::Relaxed),
+                wall_s: t0.elapsed().as_secs_f64(),
+            }
+        };
+
+        let off = run(false);
+        let on = run(true);
+        let line = |name: &str, r: &OverloadRun, note: &str| {
+            println!(
+                "{:<44} {:>3}/{} interactive in deadline   {:>3}/{} batch ok, {} shed   ({:.2}s wall, {note})",
+                name, r.inter_ok, INTERACTIVE, r.batch_ok, BATCH, r.batch_shed, r.wall_s
+            );
+        };
+        line("overload 2x (gateway, sim)", &off, "admission off");
+        line("overload 2x (gateway, sim)", &on, "admission on");
+        assert!(
+            on.inter_ok > off.inter_ok,
+            "admission control must lift interactive goodput under 2x \
+             overload ({} vs {} of {INTERACTIVE} in deadline)",
+            on.inter_ok,
+            off.inter_ok
+        );
+        assert!(
+            on.shed[2] > 0,
+            "the 2x batch flood must trip the watermark shed"
+        );
+        assert_eq!(
+            (on.shed[0], on.shed[1]),
+            (0, 0),
+            "only batch priority may be shed under the 2x flood"
+        );
+        assert_eq!(
+            on.batch_ok + on.batch_shed,
+            BATCH,
+            "every batch request must resolve exactly once"
+        );
+
+        let block = |r: &OverloadRun| {
+            Json::obj(vec![
+                ("interactive_in_deadline", Json::num(r.inter_ok as f64)),
+                ("batch_completed", Json::num(r.batch_ok as f64)),
+                ("batch_shed", Json::num(r.batch_shed as f64)),
+                ("shed_interactive", Json::num(r.shed[0] as f64)),
+                ("shed_standard", Json::num(r.shed[1] as f64)),
+                ("shed_batch", Json::num(r.shed[2] as f64)),
+                ("rejected_backlog", Json::num(r.rejected_backlog as f64)),
+                ("rejected_deadline", Json::num(r.rejected_deadline as f64)),
+                ("wall_s", Json::num(r.wall_s)),
+            ])
+        };
+        let report = Json::obj(vec![
+            ("bench", Json::str("overload")),
+            (
+                "scenario",
+                Json::obj(vec![
+                    ("batch_requests", Json::num(BATCH as f64)),
+                    ("interactive_requests", Json::num(INTERACTIVE as f64)),
+                    ("batch_tokens", Json::num(BATCH_TOKENS as f64)),
+                    ("interactive_tokens", Json::num(INTER_TOKENS as f64)),
+                    ("per_job_s", Json::num(per_job_s)),
+                    ("deadline_s", Json::num(deadline_s)),
+                ]),
+            ),
+            ("admission_off", block(&off)),
+            ("admission_on", block(&on)),
+        ]);
+        std::fs::write("BENCH_8.json", report.dump()).expect("write BENCH_8.json");
+        println!(
+            "wrote BENCH_8.json (interactive goodput {} -> {} of {INTERACTIVE})",
+            off.inter_ok, on.inter_ok
+        );
+    }
+
     // Live PJRT path (needs artifacts).
     let artifacts = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
     if std::path::Path::new(&format!("{artifacts}/manifest.json")).exists() {

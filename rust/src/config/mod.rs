@@ -320,6 +320,144 @@ impl Default for SpeculativeConfig {
     }
 }
 
+/// Request priority class for admission control and weighted-fair
+/// dequeue. Lower index = more latency-sensitive; under overload the
+/// gateway sheds from the *highest* index (batch) first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Priority {
+    /// Latency-sensitive interactive traffic — shed last.
+    Interactive,
+    /// The default class for unlabelled requests.
+    #[default]
+    Standard,
+    /// Throughput work that tolerates deferral — shed first.
+    Batch,
+}
+
+impl Priority {
+    pub const ALL: [Priority; 3] =
+        [Priority::Interactive, Priority::Standard, Priority::Batch];
+
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "interactive" => Some(Priority::Interactive),
+            "standard" => Some(Priority::Standard),
+            "batch" => Some(Priority::Batch),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Standard => "standard",
+            Priority::Batch => "batch",
+        }
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Standard => 1,
+            Priority::Batch => 2,
+        }
+    }
+
+    pub fn from_index(i: usize) -> Priority {
+        Priority::ALL[i.min(2)]
+    }
+}
+
+/// Overload admission control (`pool.admission.*`): router-side priority
+/// buffers with weighted-fair dequeue, queue-depth watermark shedding of
+/// the lowest priority class, and deadline-feasibility rejection from
+/// the measured per-tier drain rate. Off by default — disabled
+/// reproduces the exact direct tier-queue dispatch bit-for-bit.
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// Master switch. `false` = jobs go straight to the tier queues,
+    /// no priority buffers, no shedding, no feasibility checks.
+    pub enabled: bool,
+    /// Shed watermark as a fraction of `pool.queue_capacity`: once a
+    /// tier's backlog (queue + priority buffers) passes this, the
+    /// lowest-priority buffered work is shed with 429 + Retry-After.
+    pub watermark: f64,
+    /// Weighted-fair dequeue weights `[interactive, standard, batch]`:
+    /// per scheduling round, how many jobs each class may dispatch
+    /// before yielding to the next class.
+    pub weights: [usize; 3],
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        Self { enabled: false, watermark: 0.75, weights: [4, 2, 1] }
+    }
+}
+
+/// Tier-name → tier-index for chain route parsing (mirrors
+/// `models::Tier::name` without a dependency edge).
+fn chain_tier_index(s: &str) -> Option<usize> {
+    match s {
+        "small" => Some(0),
+        "medium" => Some(1),
+        "large" => Some(2),
+        _ => None,
+    }
+}
+
+/// Per-route fallback chains (`pool.chains.*`): when a completion on an
+/// origin tier fails, times out, or scores below the floor, the gateway
+/// re-dispatches it along the configured escalation route (bigger
+/// tiers), degrading to a smaller tier instead when the target is
+/// saturated — all under a per-request hop budget with exponential
+/// backoff and a gateway-wide retry-budget ratio so retries can never
+/// amplify an outage. Empty routes (the default) reproduce the exact
+/// single-dispatch behavior bit-for-bit.
+#[derive(Debug, Clone)]
+pub struct ChainsConfig {
+    /// Ordered escalation targets per origin tier index (e.g.
+    /// `routes[0] = [1, 2]`: small escalates to medium then large).
+    /// Empty = no chain for that origin tier.
+    pub routes: [Vec<usize>; 3],
+    /// Per-request hop budget: total escalate/degrade re-dispatches one
+    /// request may consume after its first attempt.
+    pub max_retries: usize,
+    /// Exponential backoff base between hops (hop n waits
+    /// `backoff_base_s * 2^n`).
+    pub backoff_base_s: f64,
+    /// Gateway-wide retry budget: chain re-dispatches are forfeited
+    /// (the request fails with its last error) once issued retries
+    /// would exceed this fraction of fresh traffic.
+    pub retry_budget_ratio: f64,
+    /// Relevance floor: a successful completion whose tier relevance
+    /// score (`scoring::relevance`) falls below this escalates anyway.
+    /// `0.0` (default) never triggers on success.
+    pub score_floor: f64,
+    /// Permit degrading to a smaller tier when every escalation target
+    /// is saturated (queue full).
+    pub degrade: bool,
+}
+
+impl ChainsConfig {
+    /// Whether any route is configured at all.
+    pub fn any(&self) -> bool {
+        self.routes.iter().any(|r| !r.is_empty())
+    }
+}
+
+impl Default for ChainsConfig {
+    fn default() -> Self {
+        Self {
+            routes: [Vec::new(), Vec::new(), Vec::new()],
+            max_retries: 2,
+            backoff_base_s: 0.05,
+            retry_budget_ratio: 0.1,
+            score_floor: 0.0,
+            degrade: true,
+        }
+    }
+}
+
 /// Engine-pool tunables: the continuous-batching serving path
 /// (gateway job intake → per-tier scheduler → N engine replicas).
 #[derive(Debug, Clone)]
@@ -357,6 +495,13 @@ pub struct PoolConfig {
     /// Cross-tier speculative decoding (`pool.speculative.*`): small-tier
     /// drafts, big-tier batched verify. Off by default.
     pub speculative: SpeculativeConfig,
+    /// Overload admission control (`pool.admission.*`): priority
+    /// buffers, watermark shedding, deadline feasibility. Off by
+    /// default.
+    pub admission: AdmissionConfig,
+    /// Per-route fallback chains (`pool.chains.*`): escalate/degrade
+    /// re-dispatch under bounded retry budgets. Empty by default.
+    pub chains: ChainsConfig,
     /// How often the pool scaler re-plans per-tier active replicas from
     /// queue depth + slot occupancy.
     pub scale_interval_s: f64,
@@ -398,6 +543,8 @@ impl Default for PoolConfig {
             prefix_cache: PrefixCacheConfig::default(),
             affinity: AffinityConfig::default(),
             speculative: SpeculativeConfig::default(),
+            admission: AdmissionConfig::default(),
+            chains: ChainsConfig::default(),
             scale_interval_s: 2.0,
             health_deadline_s: 3.0,
             substrate: SubstrateKind::Thread,
@@ -579,6 +726,77 @@ impl Config {
                     .f64_or("min_accept_rate", self.pool.speculative.min_accept_rate);
                 self.pool.speculative.sim_accept =
                     s.f64_or("sim_accept", self.pool.speculative.sim_accept);
+            }
+            if let Some(a) = p.get("admission") {
+                self.pool.admission.enabled =
+                    a.bool_or("enabled", self.pool.admission.enabled);
+                self.pool.admission.watermark =
+                    a.f64_or("watermark", self.pool.admission.watermark);
+                if let Some(w) = a.get("weights") {
+                    let arr = w.as_arr().ok_or_else(|| {
+                        anyhow::anyhow!("pool.admission.weights must be an array")
+                    })?;
+                    for (i, v) in arr.iter().take(3).enumerate() {
+                        self.pool.admission.weights[i] =
+                            v.as_usize().ok_or_else(|| {
+                                anyhow::anyhow!(
+                                    "pool.admission.weights entries must be \
+                                     non-negative integers"
+                                )
+                            })?;
+                    }
+                }
+            }
+            if let Some(ch) = p.get("chains") {
+                // Strict throughout: a malformed chain route must be a
+                // startup error, never a silently chainless gateway.
+                for (ti, origin) in ["small", "medium", "large"].iter().enumerate()
+                {
+                    if let Some(v) = ch.get(origin) {
+                        let arr = v.as_arr().ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "pool.chains.{origin} must be an array of tier \
+                                 names"
+                            )
+                        })?;
+                        let mut route = Vec::new();
+                        for e in arr {
+                            let name = e.as_str().ok_or_else(|| {
+                                anyhow::anyhow!(
+                                    "pool.chains.{origin} entries must be tier \
+                                     name strings"
+                                )
+                            })?;
+                            let target =
+                                chain_tier_index(name).ok_or_else(|| {
+                                    anyhow::anyhow!(
+                                        "pool.chains.{origin}: unknown tier \
+                                         `{name}`"
+                                    )
+                                })?;
+                            if target == ti {
+                                return Err(anyhow::anyhow!(
+                                    "pool.chains.{origin}: a route cannot \
+                                     target its own origin tier"
+                                ));
+                            }
+                            route.push(target);
+                        }
+                        self.pool.chains.routes[ti] = route;
+                    }
+                }
+                self.pool.chains.max_retries =
+                    ch.usize_or("max_retries", self.pool.chains.max_retries);
+                self.pool.chains.backoff_base_s =
+                    ch.f64_or("backoff_base_s", self.pool.chains.backoff_base_s);
+                self.pool.chains.retry_budget_ratio = ch.f64_or(
+                    "retry_budget_ratio",
+                    self.pool.chains.retry_budget_ratio,
+                );
+                self.pool.chains.score_floor =
+                    ch.f64_or("score_floor", self.pool.chains.score_floor);
+                self.pool.chains.degrade =
+                    ch.bool_or("degrade", self.pool.chains.degrade);
             }
             self.pool.scale_interval_s =
                 p.f64_or("scale_interval_s", self.pool.scale_interval_s);
@@ -855,6 +1073,77 @@ mod tests {
         assert!(c.overlay(&bad).is_err(), "non-string listen_addr must error");
         assert_eq!(Placement::parse("spread"), Some(Placement::Spread));
         assert_eq!(Placement::Pack.name(), "pack");
+    }
+
+    #[test]
+    fn overlay_admission_section() {
+        let mut c = Config::default();
+        assert!(!c.pool.admission.enabled, "admission control defaults off");
+        assert!((c.pool.admission.watermark - 0.75).abs() < 1e-12);
+        assert_eq!(c.pool.admission.weights, [4, 2, 1]);
+        let j = Json::parse(
+            r#"{"pool":{"admission":{"enabled":true,"watermark":0.5,
+                "weights":[8,3,1]}}}"#,
+        )
+        .unwrap();
+        c.overlay(&j).unwrap();
+        assert!(c.pool.admission.enabled);
+        assert!((c.pool.admission.watermark - 0.5).abs() < 1e-12);
+        assert_eq!(c.pool.admission.weights, [8, 3, 1]);
+        // untouched pool knobs keep defaults
+        assert_eq!(c.pool.kv_blocks, 128);
+
+        let bad =
+            Json::parse(r#"{"pool":{"admission":{"weights":"high"}}}"#).unwrap();
+        assert!(c.overlay(&bad).is_err(), "non-array weights must error");
+        let bad =
+            Json::parse(r#"{"pool":{"admission":{"weights":[1,"x",3]}}}"#)
+                .unwrap();
+        assert!(c.overlay(&bad).is_err(), "non-integer weight must error");
+        assert_eq!(Priority::parse("interactive"), Some(Priority::Interactive));
+        assert_eq!(Priority::parse("rush"), None);
+        assert_eq!(Priority::Batch.name(), "batch");
+        assert_eq!(Priority::default(), Priority::Standard);
+        assert_eq!(Priority::from_index(0), Priority::Interactive);
+        assert_eq!(Priority::from_index(9), Priority::Batch);
+    }
+
+    #[test]
+    fn overlay_chains_section() {
+        let mut c = Config::default();
+        assert!(!c.pool.chains.any(), "no chains by default");
+        assert_eq!(c.pool.chains.max_retries, 2);
+        let j = Json::parse(
+            r#"{"pool":{"chains":{"small":["medium","large"],
+                "medium":["large"],"max_retries":3,"backoff_base_s":0.01,
+                "retry_budget_ratio":0.25,"score_floor":0.4,
+                "degrade":false}}}"#,
+        )
+        .unwrap();
+        c.overlay(&j).unwrap();
+        assert!(c.pool.chains.any());
+        assert_eq!(c.pool.chains.routes[0], vec![1, 2]);
+        assert_eq!(c.pool.chains.routes[1], vec![2]);
+        assert!(c.pool.chains.routes[2].is_empty());
+        assert_eq!(c.pool.chains.max_retries, 3);
+        assert!((c.pool.chains.backoff_base_s - 0.01).abs() < 1e-12);
+        assert!((c.pool.chains.retry_budget_ratio - 0.25).abs() < 1e-12);
+        assert!((c.pool.chains.score_floor - 0.4).abs() < 1e-12);
+        assert!(!c.pool.chains.degrade);
+        // untouched pool knobs keep defaults
+        assert_eq!(c.pool.kv_blocks, 128);
+
+        let bad =
+            Json::parse(r#"{"pool":{"chains":{"small":"medium"}}}"#).unwrap();
+        assert!(c.overlay(&bad).is_err(), "non-array route must error");
+        let bad =
+            Json::parse(r#"{"pool":{"chains":{"small":["huge"]}}}"#).unwrap();
+        assert!(c.overlay(&bad).is_err(), "unknown tier name must error");
+        let bad =
+            Json::parse(r#"{"pool":{"chains":{"small":["small"]}}}"#).unwrap();
+        assert!(c.overlay(&bad).is_err(), "self-targeting route must error");
+        let bad = Json::parse(r#"{"pool":{"chains":{"medium":[2]}}}"#).unwrap();
+        assert!(c.overlay(&bad).is_err(), "non-string route entry must error");
     }
 
     #[test]

@@ -260,6 +260,7 @@ mod tests {
             system_cost_usd: 0.69,
             mean_recovery_s: Some(10.0),
             n_failures_injected: 2,
+            n_shed: 0,
             semantic_refinement_rate: 0.4,
         }
     }

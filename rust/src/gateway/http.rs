@@ -71,12 +71,66 @@ pub fn parse_request(stream: &mut TcpStream) -> Result<Request> {
     Ok(Request { method, path, headers, body })
 }
 
+/// A response a handler hands back: status, content type, body, and any
+/// extra headers (`Retry-After` on 429s). Handlers that only need the
+/// basics can keep returning the `(status, content-type, body)` tuple —
+/// it converts.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: String,
+    pub body: Vec<u8>,
+    pub headers: Vec<(String, String)>,
+}
+
+impl Response {
+    pub fn new(
+        status: u16,
+        content_type: impl Into<String>,
+        body: Vec<u8>,
+    ) -> Response {
+        Response {
+            status,
+            content_type: content_type.into(),
+            body,
+            headers: Vec::new(),
+        }
+    }
+
+    /// Attach an extra header.
+    pub fn header(
+        mut self,
+        name: impl Into<String>,
+        value: impl Into<String>,
+    ) -> Response {
+        self.headers.push((name.into(), value.into()));
+        self
+    }
+}
+
+impl From<(u16, String, Vec<u8>)> for Response {
+    fn from((status, content_type, body): (u16, String, Vec<u8>)) -> Response {
+        Response::new(status, content_type, body)
+    }
+}
+
 /// Write a response.
 pub fn write_response(
     stream: &mut TcpStream,
     status: u16,
     content_type: &str,
     body: &[u8],
+) -> Result<()> {
+    write_response_headers(stream, status, content_type, body, &[])
+}
+
+/// Write a response with extra headers.
+pub fn write_response_headers(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    extra: &[(String, String)],
 ) -> Result<()> {
     let reason = match status {
         200 => "OK",
@@ -85,14 +139,19 @@ pub fn write_response(
         429 => "Too Many Requests",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
+        504 => "Gateway Timeout",
         _ => "Unknown",
     };
     write!(
         stream,
         "HTTP/1.1 {status} {reason}\r\ncontent-type: {content_type}\r\n\
-         content-length: {}\r\nconnection: close\r\n\r\n",
+         content-length: {}\r\nconnection: close\r\n",
         body.len()
     )?;
+    for (k, v) in extra {
+        write!(stream, "{k}: {v}\r\n")?;
+    }
+    write!(stream, "\r\n")?;
     stream.write_all(body)?;
     Ok(())
 }
@@ -104,12 +163,13 @@ pub struct HttpServer {
 }
 
 impl HttpServer {
-    /// Bind and serve on a threadpool; `handler` maps requests to
-    /// (status, content-type, body). Returns once bound, serving on a
-    /// background thread.
-    pub fn start<F>(port: u16, threads: usize, handler: F) -> Result<HttpServer>
+    /// Bind and serve on a threadpool; `handler` maps requests to a
+    /// [`Response`] (or a `(status, content-type, body)` tuple). Returns
+    /// once bound, serving on a background thread.
+    pub fn start<F, R>(port: u16, threads: usize, handler: F) -> Result<HttpServer>
     where
-        F: Fn(&Request) -> (u16, String, Vec<u8>) + Send + Sync + 'static,
+        F: Fn(&Request) -> R + Send + Sync + 'static,
+        R: Into<Response>,
     {
         let listener = TcpListener::bind(("127.0.0.1", port))?;
         let actual_port = listener.local_addr()?.port();
@@ -129,9 +189,13 @@ impl HttpServer {
                                 let _ = stream.set_nodelay(true);
                                 match parse_request(&mut stream) {
                                     Ok(req) => {
-                                        let (status, ct, body) = h(&req);
-                                        let _ = write_response(
-                                            &mut stream, status, &ct, &body,
+                                        let resp: Response = h(&req).into();
+                                        let _ = write_response_headers(
+                                            &mut stream,
+                                            resp.status,
+                                            &resp.content_type,
+                                            &resp.body,
+                                            &resp.headers,
                                         );
                                     }
                                     Err(e) => {
@@ -174,6 +238,18 @@ pub fn http_request(
     path: &str,
     body: Option<&str>,
 ) -> Result<(u16, String)> {
+    let (status, _, body) = http_request_full(port, method, path, body)?;
+    Ok((status, body))
+}
+
+/// Like [`http_request`] but also returns the response headers, so
+/// callers can inspect `Retry-After` and friends.
+pub fn http_request_full(
+    port: u16,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> Result<(u16, Vec<(String, String)>, String)> {
     let mut stream = TcpStream::connect(("127.0.0.1", port))?;
     let body = body.unwrap_or("");
     write!(
@@ -190,6 +266,7 @@ pub fn http_request(
         .nth(1)
         .ok_or_else(|| anyhow!("bad status line"))?
         .parse()?;
+    let mut headers = Vec::new();
     let mut content_length = 0usize;
     loop {
         let mut h = String::new();
@@ -198,14 +275,16 @@ pub fn http_request(
             break;
         }
         if let Some((k, v)) = h.split_once(':') {
-            if k.trim().eq_ignore_ascii_case("content-length") {
-                content_length = v.trim().parse()?;
+            let (k, v) = (k.trim().to_string(), v.trim().to_string());
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.parse()?;
             }
+            headers.push((k, v));
         }
     }
     let mut body = vec![0u8; content_length];
     reader.read_exact(&mut body)?;
-    Ok((status, String::from_utf8(body)?))
+    Ok((status, headers, String::from_utf8(body)?))
 }
 
 #[cfg(test)]
@@ -238,6 +317,24 @@ mod tests {
         assert_eq!((s1, b1.as_str()), (200, "ok"));
         let (s2, _) = http_request(srv.port, "GET", "/missing", None).unwrap();
         assert_eq!(s2, 404);
+    }
+
+    #[test]
+    fn response_extra_headers_round_trip() {
+        let srv = HttpServer::start(0, 2, |_req| {
+            Response::new(429, "text/plain", b"slow down".to_vec())
+                .header("Retry-After", "3")
+        })
+        .unwrap();
+        let (status, headers, body) =
+            http_request_full(srv.port, "GET", "/", None).unwrap();
+        assert_eq!(status, 429);
+        assert_eq!(body, "slow down");
+        let ra = headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case("retry-after"))
+            .map(|(_, v)| v.as_str());
+        assert_eq!(ra, Some("3"));
     }
 
     #[test]

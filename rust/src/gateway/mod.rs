@@ -27,8 +27,9 @@ pub mod http;
 pub(crate) mod pool;
 pub mod worker;
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -37,7 +38,8 @@ use anyhow::{anyhow, Result};
 use crate::backend::batcher::{DECODE_BATCHES, N_DECODE_BATCHES};
 use crate::backend::scheduler::{CancelToken, SimStepEngine, StepEngine};
 use crate::config::{
-    Config, OrchestratorConfig, PoolConfig, Profile, RouterMode, SubstrateKind,
+    Config, OrchestratorConfig, PoolConfig, Priority, Profile, RouterMode,
+    SubstrateKind,
 };
 use crate::models::{zoo, Tier};
 use crate::orchestrator::recovery::RecoveryManager;
@@ -48,6 +50,7 @@ use crate::router::keyword::KeywordRouter;
 use crate::router::{Classification, Router};
 use crate::runtime::Runtime;
 use crate::scoring::Weights;
+use crate::telemetry::Histogram;
 use crate::substrate::nodes::NodeRegistry;
 use crate::substrate::remote::{ProcessSubstrate, WorkerSpec};
 use crate::substrate::Substrate;
@@ -71,6 +74,92 @@ pub struct LiveResponse {
     pub prompt_tokens: usize,
 }
 
+/// Why a completion failed — typed end to end so the HTTP layer can
+/// answer 429 vs 503 vs 504 instead of a blanket 500.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailureKind {
+    /// The caller's wait elapsed (gateway timeout fired the cancel).
+    Timeout,
+    /// The per-request deadline expired before a replica ever started on
+    /// it — dropped at dequeue instead of burning replica steps.
+    DeadlineExpired,
+    /// Shed by admission control (over the watermark, or the deadline
+    /// was infeasible given the measured drain rate).
+    Shed,
+    /// A bounded queue was full (backpressure).
+    QueueFull,
+    /// The serving replica was lost and the job could not be requeued.
+    ReplicaLost,
+    /// The fallback chain ran out of targets or retry budget.
+    ChainExhausted,
+    /// Orderly pool teardown.
+    Shutdown,
+    /// Everything else (routing errors, engine failures).
+    Internal,
+}
+
+impl FailureKind {
+    /// The HTTP status a failure of this kind maps to: 429 for load
+    /// rejections the client should retry later, 503 for capacity loss,
+    /// 504 for deadlines, 500 for internal faults.
+    pub fn http_status(self) -> u16 {
+        match self {
+            FailureKind::Shed | FailureKind::QueueFull => 429,
+            FailureKind::ReplicaLost
+            | FailureKind::ChainExhausted
+            | FailureKind::Shutdown => 503,
+            FailureKind::Timeout | FailureKind::DeadlineExpired => 504,
+            FailureKind::Internal => 500,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FailureKind::Timeout => "timeout",
+            FailureKind::DeadlineExpired => "deadline_expired",
+            FailureKind::Shed => "shed",
+            FailureKind::QueueFull => "queue_full",
+            FailureKind::ReplicaLost => "replica_lost",
+            FailureKind::ChainExhausted => "chain_exhausted",
+            FailureKind::Shutdown => "shutdown",
+            FailureKind::Internal => "internal",
+        }
+    }
+}
+
+/// A typed completion failure. `Display` is the bare message, so error
+/// text observed by callers is unchanged from the untyped era.
+#[derive(Debug, Clone)]
+pub struct CompletionError {
+    pub kind: FailureKind,
+    pub msg: String,
+    /// Client back-off hint for 429s, from the observed drain rate.
+    pub retry_after_s: Option<f64>,
+}
+
+impl CompletionError {
+    pub fn new(kind: FailureKind, msg: impl Into<String>) -> CompletionError {
+        CompletionError { kind, msg: msg.into(), retry_after_s: None }
+    }
+
+    pub fn retry_after(mut self, seconds: f64) -> CompletionError {
+        self.retry_after_s = Some(seconds.max(0.0));
+        self
+    }
+
+    pub(crate) fn internal(msg: impl Into<String>) -> CompletionError {
+        CompletionError::new(FailureKind::Internal, msg)
+    }
+}
+
+impl std::fmt::Display for CompletionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for CompletionError {}
+
 /// An unrouted job, as `complete_request()` hands it to the router thread.
 struct Job {
     prompt: String,
@@ -79,8 +168,14 @@ struct Job {
     /// key rendezvous on the same replica even before their prefix is
     /// cached anywhere, so the cache warms in one place.
     affinity_key: Option<String>,
+    /// Admission class (weighted-fair dequeue, shed order).
+    priority: Priority,
+    /// Absolute deadline, seconds since the pool epoch (`f64::INFINITY`
+    /// when the caller set none) — stamped at submit so queue time
+    /// counts against it.
+    deadline_abs_s: f64,
     cancel: CancelToken,
-    reply: OneShot<Result<LiveResponse, String>>,
+    reply: OneShot<Result<LiveResponse, CompletionError>>,
 }
 
 /// One completion request, builder-style — the gateway's entry API.
@@ -109,6 +204,11 @@ pub struct CompletionRequest {
     pub max_tokens: usize,
     pub affinity_key: Option<String>,
     pub deadline_s: Option<f64>,
+    /// Admission class under overload control (`pool.admission.*`):
+    /// weighted-fair dequeue weight, and shed order when queues pass the
+    /// watermark (batch sheds first, interactive last). Defaults to
+    /// `Standard`; inert while admission is disabled.
+    pub priority: Priority,
     pub cancel: Option<CancelToken>,
 }
 
@@ -119,6 +219,7 @@ impl CompletionRequest {
             max_tokens: 16,
             affinity_key: None,
             deadline_s: None,
+            priority: Priority::default(),
             cancel: None,
         }
     }
@@ -135,6 +236,11 @@ impl CompletionRequest {
 
     pub fn deadline_s(mut self, seconds: f64) -> CompletionRequest {
         self.deadline_s = Some(seconds);
+        self
+    }
+
+    pub fn priority(mut self, p: Priority) -> CompletionRequest {
+        self.priority = p;
         self
     }
 
@@ -220,9 +326,46 @@ pub struct GatewayMetrics {
     pub spec_rejected_tokens: AtomicU64,
     /// Batched verify steps executed.
     pub spec_verify_steps: AtomicU64,
+    /// Requests shed by admission control, `[priority][tier]`
+    /// (`ps_shed_total{priority,tier}`).
+    pub shed_total: [[AtomicU64; 3]; 3],
+    /// Queued jobs dropped at dequeue because their deadline had already
+    /// elapsed (`ps_shed_total{reason="expired"}`).
+    pub shed_expired: AtomicU64,
+    /// Admission-gate rejections: the deadline was infeasible given the
+    /// measured drain rate.
+    pub admission_rejected_deadline: AtomicU64,
+    /// Admission-gate rejections: the tier's whole backlog (buffer plus
+    /// queue) was at capacity.
+    pub admission_rejected_backlog: AtomicU64,
+    /// Chain hops escalated to a bigger tier, per origin route.
+    pub chain_escalated: [AtomicU64; 3],
+    /// Chain hops degraded to a smaller tier (targets saturated).
+    pub chain_degraded: [AtomicU64; 3],
+    /// Requests whose fallback chain ran out of targets or budget.
+    pub chain_exhausted: [AtomicU64; 3],
+    /// Chain re-dispatches issued (the retry-budget numerator).
+    pub retries_issued: AtomicU64,
+    /// Fresh jobs dispatched (the retry-budget denominator).
+    pub fresh_jobs: AtomicU64,
+    /// Per-priority queue-wait histograms, [`Priority::ALL`] order.
+    pub queue_wait_hist: [WaitHist; 3],
     /// Formed-batch histogram: one counter per compiled rung, in
     /// [`DECODE_BATCHES`] order.
     pub batch_counts: [AtomicU64; N_DECODE_BATCHES],
+}
+
+/// A mutex-wrapped queue-wait [`Histogram`] with overload-relevant
+/// bounds (1 ms … 10 s), newtyped so `GatewayMetrics` keeps deriving
+/// `Default`.
+pub struct WaitHist(pub Mutex<Histogram>);
+
+impl Default for WaitHist {
+    fn default() -> WaitHist {
+        WaitHist(Mutex::new(Histogram::new(&[
+            0.001, 0.005, 0.02, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0,
+        ])))
+    }
 }
 
 impl GatewayMetrics {
@@ -244,6 +387,16 @@ impl GatewayMetrics {
 
     pub fn queue_wait_total_s(&self) -> f64 {
         self.queue_wait_us.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Record one request's end-to-end queue wait into its priority's
+    /// histogram (first admission only — requeues don't observe twice).
+    pub fn observe_queue_wait(&self, priority: Priority, wait_s: f64) {
+        self.queue_wait_hist[priority.index()]
+            .0
+            .lock()
+            .unwrap()
+            .observe(wait_s.max(0.0));
     }
 }
 
@@ -573,33 +726,52 @@ impl LiveStack {
     /// at the scheduler's next tick, freeing its slot and KV reservation
     /// early instead of decoding to completion (`ps_cancelled_total`
     /// counts the evictions, `ps_timeouts_total` the abandonments).
+    /// Failures carry a typed [`CompletionError`] (downcastable from the
+    /// returned `anyhow::Error`) so callers — the HTTP layer above all —
+    /// can distinguish shed/queue-full (429) from capacity loss (503)
+    /// from deadlines (504).
     pub fn complete_request(&self, req: CompletionRequest) -> Result<LiveResponse> {
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        let reply: OneShot<Result<LiveResponse, String>> = OneShot::new();
+        let reply: OneShot<Result<LiveResponse, CompletionError>> = OneShot::new();
         let cancel = req.cancel.unwrap_or_else(CancelToken::new);
         // A per-request deadline overrides the gateway-wide timeout;
         // same sanitization (from_secs_f64 panics on negative/NaN/∞).
-        let timeout_s = match req.deadline_s {
-            Some(d) if d.is_finite() => d.clamp(0.001, 86_400.0),
-            _ => self.request_timeout_s,
+        let (timeout_s, explicit_deadline) = match req.deadline_s {
+            Some(d) if d.is_finite() => (d.clamp(0.001, 86_400.0), true),
+            _ => (self.request_timeout_s, false),
+        };
+        // Anchor the absolute deadline at submit, not at routing: time
+        // spent queued in the gateway counts against it.
+        let deadline_abs_s = if explicit_deadline {
+            self.shared.epoch.elapsed().as_secs_f64() + timeout_s
+        } else {
+            f64::INFINITY
         };
         let job = Job {
             prompt: req.prompt,
             max_tokens: req.max_tokens,
             affinity_key: req.affinity_key,
+            priority: req.priority,
+            deadline_abs_s,
             cancel: cancel.clone(),
             reply: reply.clone(),
         };
         if self.jobs.try_send(job).is_err() {
             self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-            return Err(anyhow!("queue full (backpressure)"));
+            return Err(anyhow::Error::new(CompletionError::new(
+                FailureKind::QueueFull,
+                "queue full (backpressure)",
+            )));
         }
         match reply.wait_timeout(Duration::from_secs_f64(timeout_s)) {
-            Some(out) => out.map_err(|e| anyhow!(e)),
+            Some(out) => out.map_err(anyhow::Error::new),
             None => {
                 self.metrics.timeouts.fetch_add(1, Ordering::Relaxed);
                 cancel.cancel();
-                Err(anyhow!("request timed out"))
+                Err(anyhow::Error::new(CompletionError::new(
+                    FailureKind::Timeout,
+                    "request timed out",
+                )))
             }
         }
     }
@@ -775,6 +947,83 @@ impl LiveStack {
                 format!("ps_spec_accept_rate{{tier=\"{}\"}}", tier.name()),
                 accepted as f64 / drafted as f64,
             ));
+        }
+        // Overload-control series. Quiet with admission and chains off:
+        // labeled samples appear only once their counters move, so a
+        // plain pool's exposition is unchanged.
+        for (pi, p) in Priority::ALL.iter().enumerate() {
+            for (ti, tier) in Tier::ALL.iter().enumerate() {
+                let v = m.shed_total[pi][ti].load(Ordering::Relaxed);
+                if v == 0 {
+                    continue;
+                }
+                out.push((
+                    format!(
+                        "ps_shed_total{{priority=\"{}\",tier=\"{}\"}}",
+                        p.name(),
+                        tier.name()
+                    ),
+                    v as f64,
+                ));
+            }
+        }
+        let expired = m.shed_expired.load(Ordering::Relaxed);
+        if expired > 0 {
+            out.push(("ps_shed_total{reason=\"expired\"}".to_string(), expired as f64));
+        }
+        for (reason, v) in [
+            ("deadline_infeasible", m.admission_rejected_deadline.load(Ordering::Relaxed)),
+            ("backlog", m.admission_rejected_backlog.load(Ordering::Relaxed)),
+        ] {
+            if v == 0 {
+                continue;
+            }
+            out.push((
+                format!("ps_admission_rejected_total{{reason=\"{reason}\"}}"),
+                v as f64,
+            ));
+        }
+        for (family, counters) in [
+            ("ps_chain_escalated_total", &m.chain_escalated),
+            ("ps_chain_degraded_total", &m.chain_degraded),
+            ("ps_chain_exhausted_total", &m.chain_exhausted),
+        ] {
+            for (ti, tier) in Tier::ALL.iter().enumerate() {
+                let v = counters[ti].load(Ordering::Relaxed);
+                if v == 0 {
+                    continue;
+                }
+                out.push((
+                    format!("{family}{{route=\"{}\"}}", tier.name()),
+                    v as f64,
+                ));
+            }
+        }
+        let fresh = m.fresh_jobs.load(Ordering::Relaxed);
+        let retries = m.retries_issued.load(Ordering::Relaxed);
+        out.push((
+            "ps_retry_budget_ratio".to_string(),
+            if fresh == 0 { 0.0 } else { retries as f64 / fresh as f64 },
+        ));
+        // Per-priority queue-wait histograms, cumulative `le` buckets in
+        // the exposition convention (only priorities that saw traffic).
+        for (pi, p) in Priority::ALL.iter().enumerate() {
+            let h = m.queue_wait_hist[pi].0.lock().unwrap();
+            if h.count() == 0 {
+                continue;
+            }
+            let mut cum = 0u64;
+            for (le, n) in h.buckets() {
+                cum += n;
+                let le = if le.is_finite() { format!("{le}") } else { "+Inf".into() };
+                out.push((
+                    format!(
+                        "ps_queue_wait_hist_seconds{{priority=\"{}\",le=\"{le}\"}}",
+                        p.name()
+                    ),
+                    cum as f64,
+                ));
+            }
         }
         if let Some(reg) = &self.nodes {
             out.push(("ps_node_lost_total".to_string(), reg.lost_total() as f64));
@@ -1053,6 +1302,517 @@ fn cold_wake<S: PoolBackend>(
     }
 }
 
+/// Router-side admission gate (`pool.admission.enabled`): per-tier,
+/// per-priority buffers sit between routing and the bounded tier queues,
+/// drained by weighted-fair round-robin across priorities; the lowest
+/// priority sheds past the watermark; a drain-rate EMA prices deadline
+/// feasibility and the `Retry-After` hint. With admission off (the
+/// default) the gate never enters the dispatch path and routing is the
+/// exact legacy tier fan-out, bit for bit.
+struct AdmissionGate {
+    watermark: f64,
+    weights: [usize; 3],
+    cap: usize,
+    /// Tier-queue feed depth per live replica: the pump keeps at most
+    /// this many jobs in the FIFO tier queue per replica, so priority
+    /// ordering stays in the gate's buffers instead of being flattened
+    /// into a deep first-come queue.
+    feed: usize,
+    /// Buffered jobs awaiting dispatch, `[tier][priority]`.
+    buf: [[VecDeque<TierJob>; 3]; 3],
+    /// Weighted-fair cursor (current priority class) per tier.
+    cls: [usize; 3],
+    /// Dispatch credit left for the cursor's class, per tier.
+    credit: [usize; 3],
+    /// Jobs handed to each tier queue since boot (drain accounting).
+    dispatched: [u64; 3],
+    /// Observed per-tier drain rate, jobs/sec.
+    rate: [crate::util::stats::Ema; 3],
+    /// Last control-pass sample: (time, dispatched, queue length).
+    last_sample: [(f64, u64, usize); 3],
+}
+
+impl AdmissionGate {
+    fn new(pool: &PoolConfig) -> AdmissionGate {
+        AdmissionGate {
+            watermark: pool.admission.watermark.clamp(0.0, 1.0),
+            weights: pool.admission.weights,
+            cap: pool.queue_capacity.max(1),
+            feed: pool.max_inflight.max(1),
+            buf: std::array::from_fn(|_| std::array::from_fn(|_| VecDeque::new())),
+            cls: [0; 3],
+            credit: [pool.admission.weights[0].max(1); 3],
+            dispatched: [0; 3],
+            rate: std::array::from_fn(|_| crate::util::stats::Ema::new(0.3)),
+            last_sample: [(0.0, 0, 0); 3],
+        }
+    }
+
+    fn buffered(&self, ti: usize) -> usize {
+        self.buf[ti].iter().map(|q| q.len()).sum()
+    }
+
+    fn has_buffered(&self) -> bool {
+        (0..3).any(|ti| self.buffered(ti) > 0)
+    }
+
+    /// Predicted queue wait for work arriving at `ti` now, from the
+    /// drain-rate EMA. `None` until a drain has been observed — the
+    /// gate never rejects on a guess.
+    fn est_wait(&self, ti: usize, backlog: usize) -> Option<f64> {
+        let r = self.rate[ti].get()?;
+        if r <= 1e-9 {
+            return None;
+        }
+        Some((backlog as f64 + 1.0) / r)
+    }
+
+    /// The client back-off hint attached to 429s.
+    fn retry_after(&self, ti: usize, backlog: usize) -> f64 {
+        self.est_wait(ti, backlog).unwrap_or(1.0).clamp(0.05, 60.0)
+    }
+
+    /// Jobs that will be served before a priority-`pi` arrival at tier
+    /// `ti`: the tier queue, every buffered job of the same or higher
+    /// priority, and only the weighted-fair interleave share of
+    /// lower-priority work — an interactive request does not wait behind
+    /// a batch flood it is entitled to overtake.
+    fn work_ahead(&self, ti: usize, pi: usize, queue_len: usize) -> usize {
+        let cohort: usize = (0..=pi).map(|p| self.buf[ti][p].len()).sum();
+        let wp = self.weights[pi].max(1);
+        let mut ahead = queue_len + cohort;
+        for q in (pi + 1)..3 {
+            let share = (cohort * self.weights[q].max(1)).div_ceil(wp);
+            ahead += self.buf[ti][q].len().min(share);
+        }
+        ahead
+    }
+
+    /// Gate one routed job: reject an infeasible deadline or a full
+    /// backlog immediately, otherwise buffer it and shed the lowest
+    /// priority past the watermark. Every outcome resolves the job
+    /// exactly once — buffered, or replied with a typed error.
+    fn admit(
+        &mut self,
+        ti: usize,
+        tj: TierJob,
+        now: f64,
+        metrics: &GatewayMetrics,
+        shared: &PoolShared,
+        pressure: &mut [f64; 3],
+    ) {
+        let backlog = shared.queues[ti].len() + self.buffered(ti);
+        if tj.deadline_abs_s.is_finite() {
+            let ahead = self.work_ahead(ti, tj.priority.index(), shared.queues[ti].len());
+            if let Some(wait) = self.est_wait(ti, ahead) {
+                if now + wait > tj.deadline_abs_s {
+                    // The deadline cannot be met at the measured drain
+                    // rate: reject now instead of burning it in a queue.
+                    metrics
+                        .admission_rejected_deadline
+                        .fetch_add(1, Ordering::Relaxed);
+                    tj.reply.put(Err(CompletionError::new(
+                        FailureKind::Shed,
+                        format!(
+                            "deadline infeasible: predicted queue wait {wait:.3}s"
+                        ),
+                    )
+                    .retry_after(self.retry_after(ti, ahead))));
+                    return;
+                }
+            }
+        }
+        if backlog >= self.cap {
+            metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            metrics.admission_rejected_backlog.fetch_add(1, Ordering::Relaxed);
+            tj.reply.put(Err(CompletionError::new(
+                FailureKind::QueueFull,
+                "tier queue full (backpressure)",
+            )
+            .retry_after(self.retry_after(ti, backlog))));
+            return;
+        }
+        self.buf[ti][tj.priority.index()].push_back(tj);
+        // Watermark shed: protect interactive latency by dropping the
+        // newest batch (then standard) work. Interactive is never shed —
+        // it is bounded by the hard backlog cap instead.
+        let wm = (self.watermark * self.cap as f64).ceil() as usize;
+        while shared.queues[ti].len() + self.buffered(ti) > wm {
+            let Some(pi) =
+                [2usize, 1].into_iter().find(|&p| !self.buf[ti][p].is_empty())
+            else {
+                break;
+            };
+            let victim = self.buf[ti][pi].pop_back().expect("class non-empty");
+            metrics.shed_total[pi][ti].fetch_add(1, Ordering::Relaxed);
+            pressure[ti] += 1.0;
+            let hint = self.retry_after(ti, self.buffered(ti));
+            victim.reply.put(Err(CompletionError::new(
+                FailureKind::Shed,
+                "shed: tier over watermark",
+            )
+            .retry_after(hint)));
+        }
+    }
+
+    /// Drain buffers into the tier queues, weighted-fair across
+    /// priorities. Returns the tiers that received work while fully
+    /// parked (the caller cold-wakes them).
+    fn pump(
+        &mut self,
+        now: f64,
+        metrics: &GatewayMetrics,
+        shared: &PoolShared,
+    ) -> Vec<usize> {
+        let mut wake = Vec::new();
+        for ti in 0..3 {
+            loop {
+                // Keep the FIFO tier queue shallow — enough to saturate
+                // every live replica's slots, no more. The rest waits in
+                // the priority buffers where weighted-fair order (and
+                // shedding) still apply.
+                let depth = self.feed * shared.live_count(ti).max(1);
+                if shared.queues[ti].len() >= depth {
+                    break;
+                }
+                let Some(pi) = self.next_class(ti) else { break };
+                let tj = self.buf[ti][pi].pop_front().expect("class non-empty");
+                if now > tj.deadline_abs_s {
+                    // Expired while buffered — the same dead-work drop
+                    // the replicas apply at dequeue (expiry outranks
+                    // cancellation; an abandoned deadline fires both).
+                    metrics.shed_expired.fetch_add(1, Ordering::Relaxed);
+                    tj.reply.put(Err(CompletionError::new(
+                        FailureKind::DeadlineExpired,
+                        "deadline expired before dispatch",
+                    )));
+                    continue;
+                }
+                if tj.cancel.is_cancelled() {
+                    metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+                match shared.queues[ti].try_send(tj) {
+                    Ok(()) => {
+                        self.credit[ti] = self.credit[ti].saturating_sub(1);
+                        self.dispatched[ti] += 1;
+                        shared.last_enqueue_us[ti]
+                            .store((now * 1e6) as u64, Ordering::Relaxed);
+                        if shared.live_count(ti) == 0 && !wake.contains(&ti) {
+                            wake.push(ti);
+                        }
+                    }
+                    Err(back) => {
+                        self.buf[ti][pi].push_front(back);
+                        break;
+                    }
+                }
+            }
+        }
+        wake
+    }
+
+    /// Weighted-fair class pick: serve the cursor's class while it has
+    /// credit and work; cycling on resets each class's credit from its
+    /// weight. `None` when every buffer for the tier is empty.
+    fn next_class(&mut self, ti: usize) -> Option<usize> {
+        if (0..3).all(|p| self.buf[ti][p].is_empty()) {
+            return None;
+        }
+        for _ in 0..4 {
+            let c = self.cls[ti];
+            if self.credit[ti] > 0 && !self.buf[ti][c].is_empty() {
+                return Some(c);
+            }
+            self.cls[ti] = (c + 1) % 3;
+            self.credit[ti] = self.weights[self.cls[ti]].max(1);
+        }
+        None
+    }
+
+    /// Control-pass hook: difference dispatch/queue samples into the
+    /// per-tier drain-rate EMA (jobs the tier consumed per second).
+    fn sample_rates(&mut self, now: f64, shared: &PoolShared) {
+        for ti in 0..3 {
+            let qlen = shared.queues[ti].len();
+            let (t0, d0, q0) = self.last_sample[ti];
+            self.last_sample[ti] = (now, self.dispatched[ti], qlen);
+            let dt = now - t0;
+            if dt <= 0.0 {
+                continue;
+            }
+            let fed = (self.dispatched[ti] - d0) as i64;
+            let consumed = fed - (qlen as i64 - q0 as i64);
+            if consumed > 0 {
+                self.rate[ti].observe(consumed as f64 / dt);
+            } else if qlen + self.buffered(ti) > 0 {
+                // Backlogged but nothing drained: decay toward zero so
+                // feasibility stops promising waits the tier can't meet.
+                self.rate[ti].observe(0.0);
+            }
+        }
+    }
+
+    /// Teardown: every still-buffered job is answered the way draining
+    /// replicas answer theirs — an orderly shutdown, not a serving
+    /// error.
+    fn fail_all_shutdown(&mut self) {
+        for tier in self.buf.iter_mut() {
+            for q in tier.iter_mut() {
+                for tj in q.drain(..) {
+                    tj.reply.put(Err(CompletionError::new(
+                        FailureKind::Shutdown,
+                        "gateway shutting down",
+                    )));
+                }
+            }
+        }
+    }
+}
+
+/// One request riding a fallback chain (`pool.chains.*`): the caller's
+/// reply is parked here while each hop dispatches with a private
+/// rendezvous, so the machine decides after every hop — deliver,
+/// escalate, degrade, or exhaust — and the caller is answered exactly
+/// once.
+struct PendingChain {
+    caller: OneShot<Result<LiveResponse, CompletionError>>,
+    cancel: CancelToken,
+    /// The current hop's private rendezvous (polled, never parked on).
+    hop: OneShot<Result<LiveResponse, CompletionError>>,
+    /// Origin tier: the route label and the escalation-list key.
+    origin: usize,
+    /// Tier currently serving the hop.
+    current: usize,
+    /// Next unconsumed position in `routes[origin]`.
+    next_idx: usize,
+    /// Per-request retry budget remaining.
+    hops_left: usize,
+    /// A decided re-dispatch waiting out its exponential backoff:
+    /// (target tier, not-before seconds).
+    redispatch: Option<(usize, f64)>,
+    /// The failure behind the last hop decision (what the caller sees
+    /// if the chain exhausts with nothing in hand).
+    last_err: Option<CompletionError>,
+    /// A low-score completion kept while escalating for quality: if the
+    /// upgrade hop dies, the caller still gets an answer, never an
+    /// error.
+    fallback: Option<LiveResponse>,
+    prompt: String,
+    max_tokens: usize,
+    priority: Priority,
+    deadline_abs_s: f64,
+    complexity: usize,
+    confidence: f64,
+}
+
+/// Pick the next chain hop: the first unconsumed escalation target with
+/// a serving budget and queue headroom, else — under `chains.degrade` —
+/// the least-backlogged smaller tier. Consumes one unit of per-request
+/// budget and one of the gateway-wide retry-budget ratio; `None` means
+/// the chain is exhausted. Returns (tier, degraded).
+fn chain_pick_target(
+    pc: &mut PendingChain,
+    pool: &PoolConfig,
+    shared: &PoolShared,
+    metrics: &GatewayMetrics,
+) -> Option<(usize, bool)> {
+    if pc.hops_left == 0 {
+        return None;
+    }
+    // Gateway-wide retry-budget ratio: retries never exceed the
+    // configured fraction of fresh traffic, so a retry storm cannot
+    // amplify an outage into a bigger one.
+    let fresh = metrics.fresh_jobs.load(Ordering::Relaxed).max(1);
+    let retries = metrics.retries_issued.load(Ordering::Relaxed);
+    if retries as f64 >= pool.chains.retry_budget_ratio * fresh as f64 {
+        return None;
+    }
+    let cap = pool.queue_capacity.max(1);
+    let route = &pool.chains.routes[pc.origin];
+    let mut pick: Option<(usize, bool)> = None;
+    while pc.next_idx < route.len() {
+        let t = route[pc.next_idx];
+        pc.next_idx += 1;
+        // A zero-budget tier can never serve; a full queue is saturated.
+        // Skipped rungs are consumed — the chain moves up, never back.
+        if pool.replicas[t] > 0 && shared.queues[t].len() < cap {
+            pick = Some((t, false));
+            break;
+        }
+    }
+    if pick.is_none() && pool.chains.degrade {
+        // Every remaining escalation target is saturated: degrade to
+        // the least-backlogged smaller tier instead of failing outright.
+        pick = (0..pc.current)
+            .filter(|&t| pool.replicas[t] > 0 && shared.queues[t].len() < cap)
+            .min_by_key(|&t| shared.queues[t].len())
+            .map(|t| (t, true));
+    }
+    let (t, degraded) = pick?;
+    pc.hops_left -= 1;
+    metrics.retries_issued.fetch_add(1, Ordering::Relaxed);
+    if degraded {
+        metrics.chain_degraded[pc.origin].fetch_add(1, Ordering::Relaxed);
+    } else {
+        metrics.chain_escalated[pc.origin].fetch_add(1, Ordering::Relaxed);
+    }
+    Some((t, degraded))
+}
+
+/// Exponential backoff for the re-dispatch just consumed from the
+/// budget: base, 2·base, 4·base, …
+fn chain_backoff_s(pool: &PoolConfig, pc: &PendingChain) -> f64 {
+    let used = (pool.chains.max_retries.saturating_sub(pc.hops_left)).max(1);
+    pool.chains.backoff_base_s.max(0.0) * 2f64.powi(used as i32 - 1)
+}
+
+/// Dispatch a chain hop to tier `t` with a fresh rendezvous. False when
+/// the target queue filled since it was picked — the caller re-advances
+/// the chain (budget already spent on this pick).
+fn chain_dispatch(
+    pc: &mut PendingChain,
+    t: usize,
+    now: f64,
+    shared: &PoolShared,
+    tier_model: &[&'static str; 3],
+) -> bool {
+    let hop: OneShot<Result<LiveResponse, CompletionError>> = OneShot::new();
+    let tj = TierJob {
+        prompt: pc.prompt.clone(),
+        max_tokens: pc.max_tokens,
+        enqueue_s: now,
+        ttft_s: 0.0,
+        queue_wait_s: 0.0,
+        counted_wait_s: 0.0,
+        reply: hop.clone(),
+        cancel: pc.cancel.clone(),
+        tier: Tier::ALL[t],
+        model: tier_model[t],
+        complexity: pc.complexity,
+        confidence: pc.confidence,
+        priority: pc.priority,
+        deadline_abs_s: pc.deadline_abs_s,
+    };
+    match shared.queues[t].try_send(tj) {
+        Ok(()) => {
+            pc.hop = hop;
+            pc.current = t;
+            shared.last_enqueue_us[t].store((now * 1e6) as u64, Ordering::Relaxed);
+            true
+        }
+        Err(_) => false,
+    }
+}
+
+/// Resolve an exhausted chain: a kept low-score completion beats an
+/// error; otherwise the caller gets a typed `ChainExhausted` carrying
+/// the last hop failure.
+fn chain_exhaust(pc: &mut PendingChain, metrics: &GatewayMetrics) {
+    if let Some(resp) = pc.fallback.take() {
+        pc.caller.put(Ok(resp));
+        return;
+    }
+    metrics.chain_exhausted[pc.origin].fetch_add(1, Ordering::Relaxed);
+    let last = pc
+        .last_err
+        .take()
+        .map(|e| e.msg)
+        .unwrap_or_else(|| "no remaining target".to_string());
+    pc.caller.put(Err(CompletionError::new(
+        FailureKind::ChainExhausted,
+        format!("fallback chain exhausted: {last}"),
+    )));
+}
+
+/// One poll of a chain entry: forward a resolved hop, escalate on
+/// failure or a score below the floor, dispatch a matured backoff.
+/// Returns whether the entry is still pending.
+#[allow(clippy::too_many_arguments)]
+fn chain_step<S: PoolBackend>(
+    pc: &mut PendingChain,
+    now: f64,
+    pool: &PoolConfig,
+    shared: &PoolShared,
+    metrics: &GatewayMetrics,
+    tier_model: &[&'static str; 3],
+    tier_cap: &[[f64; 3]; 3],
+    pressure: &mut [f64; 3],
+    substrate: &mut S,
+    registry: &mut Registry,
+) -> bool {
+    if pc.cancel.is_cancelled() {
+        // The caller gave up; the shared token evicts the hop wherever
+        // it is (the replica counts that), and nobody awaits the reply.
+        return false;
+    }
+    if let Some((t, at)) = pc.redispatch {
+        if now < at {
+            return true;
+        }
+        pc.redispatch = None;
+        let mut target = Some(t);
+        while let Some(t) = target {
+            if chain_dispatch(pc, t, now, shared, tier_model) {
+                // Escalation pressure is extra demand on the target tier
+                // — fold it into the scaler's next control pass.
+                pressure[t] += 1.0;
+                if shared.live_count(t) == 0 {
+                    cold_wake(substrate, registry, metrics, shared, t, now);
+                }
+                return true;
+            }
+            // The picked queue filled during the backoff: advance.
+            target = chain_pick_target(pc, pool, shared, metrics).map(|(t, _)| t);
+        }
+        chain_exhaust(pc, metrics);
+        return false;
+    }
+    match pc.hop.try_take() {
+        None => true,
+        Some(Ok(resp)) => {
+            let floor = pool.chains.score_floor;
+            let low = floor > 0.0
+                && crate::scoring::relevance(
+                    &tier_cap[pc.current],
+                    pc.complexity,
+                    pc.confidence,
+                ) < floor
+                && pc.next_idx < pool.chains.routes[pc.origin].len();
+            if low {
+                if let Some((t, _)) = chain_pick_target(pc, pool, shared, metrics) {
+                    // Quality escalation redispatches immediately (no
+                    // backoff — this is an upgrade, not a failure storm)
+                    // and keeps the in-hand answer as the floor.
+                    pc.fallback = Some(resp);
+                    pc.redispatch = Some((t, now));
+                    return true;
+                }
+            }
+            pc.caller.put(Ok(resp));
+            false
+        }
+        Some(Err(e)) => {
+            if e.kind == FailureKind::Shutdown {
+                // Never retry across an orderly teardown.
+                pc.caller.put(Err(e));
+                return false;
+            }
+            pc.last_err = Some(e);
+            match chain_pick_target(pc, pool, shared, metrics) {
+                Some((t, _)) => {
+                    pc.redispatch = Some((t, now + chain_backoff_s(pool, pc)));
+                    true
+                }
+                None => {
+                    chain_exhaust(pc, metrics);
+                    false
+                }
+            }
+        }
+    }
+}
+
 /// The router/control thread: drain gateway jobs → classify → per-tier
 /// queues, and every `scale_interval_s` run one control pass — substrate
 /// lifecycle poll → recovery → Alg. 1 per tier — also while idle, so
@@ -1081,8 +1841,33 @@ fn router_loop<S: PoolBackend>(
     // Same windowing for speculative accepted/drafted token totals — the
     // scaler's acceptance-rate demand discount tracks recent traffic.
     let mut spec_last: [(u64, u64); 3] = [(0, 0); 3];
+    // Overload-control state. Both default off: with admission disabled
+    // and no chains configured the arrival path below is the exact
+    // legacy dispatch, bit for bit.
+    let admission_on = pool.admission.enabled;
+    let chains_on = pool.chains.any();
+    let mut gate = AdmissionGate::new(&pool);
+    let mut chains: Vec<PendingChain> = Vec::new();
+    // Sheds + chain escalations per tier since the last control pass —
+    // extra demand the scaler folds into Alg. 1.
+    let mut pressure: [f64; 3] = [0.0; 3];
+    // Per-tier model identity and capability vector: chain hops re-label
+    // re-dispatched jobs, and the score floor consults the serving
+    // tier's capability.
+    let mut tier_model: [&'static str; 3] = ["", "", ""];
+    let mut tier_cap: [[f64; 3]; 3] = [[0.0; 3]; 3];
+    for ti in 0..3 {
+        let svc = registry.get(substrate.service_of_tier(ti));
+        tier_model[ti] = svc.spec.name;
+        tier_cap[ti] = svc.spec.capability;
+    }
     loop {
-        let job = jobs.recv_timeout(Duration::from_millis(100));
+        // Poll fast while the gate holds buffered work or chains are in
+        // flight; otherwise the legacy 100ms idle tick.
+        let busy = (admission_on && gate.has_buffered())
+            || (chains_on && !chains.is_empty());
+        let job =
+            jobs.recv_timeout(Duration::from_millis(if busy { 5 } else { 100 }));
         let now = shared.epoch.elapsed().as_secs_f64();
         if let Some(job) = job {
             if job.cancel.is_cancelled() {
@@ -1100,12 +1885,41 @@ fn router_loop<S: PoolBackend>(
                 ) {
                     Err(e) => {
                         metrics.errors.fetch_add(1, Ordering::Relaxed);
-                        job.reply.put(Err(format!("{e:#}")));
+                        job.reply
+                            .put(Err(CompletionError::internal(format!("{e:#}"))));
                     }
                     Ok((tier, model, class)) => {
                         // Zero-budget tiers are Unhealthy in the synced
                         // registry, so Alg. 2 cannot select one here.
                         let ti = tier.index();
+                        metrics.fresh_jobs.fetch_add(1, Ordering::Relaxed);
+                        // A configured chain for this route parks the
+                        // caller's reply in the chain machine and gives
+                        // the first hop a private rendezvous.
+                        let mut reply = job.reply;
+                        if chains_on && !pool.chains.routes[ti].is_empty() {
+                            let hop: OneShot<Result<LiveResponse, CompletionError>> =
+                                OneShot::new();
+                            chains.push(PendingChain {
+                                caller: reply,
+                                cancel: job.cancel.clone(),
+                                hop: hop.clone(),
+                                origin: ti,
+                                current: ti,
+                                next_idx: 0,
+                                hops_left: pool.chains.max_retries,
+                                redispatch: None,
+                                last_err: None,
+                                fallback: None,
+                                prompt: job.prompt.clone(),
+                                max_tokens: job.max_tokens,
+                                priority: job.priority,
+                                deadline_abs_s: job.deadline_abs_s,
+                                complexity: class.complexity,
+                                confidence: class.confidence,
+                            });
+                            reply = hop;
+                        }
                         let tj = TierJob {
                             prompt: job.prompt,
                             max_tokens: job.max_tokens,
@@ -1113,12 +1927,14 @@ fn router_loop<S: PoolBackend>(
                             ttft_s: 0.0,
                             queue_wait_s: 0.0,
                             counted_wait_s: 0.0,
-                            reply: job.reply,
+                            reply,
                             cancel: job.cancel,
                             tier,
                             model,
                             complexity: class.complexity,
                             confidence: class.confidence,
+                            priority: job.priority,
+                            deadline_abs_s: job.deadline_abs_s,
                         };
                         // Cache-affinity placement first (off = the
                         // exact legacy tier fan-out below, bit for bit).
@@ -1142,6 +1958,20 @@ fn router_loop<S: PoolBackend>(
                                 shared.last_enqueue_us[ti]
                                     .store((now * 1e6) as u64, Ordering::Relaxed);
                             }
+                            Some(tj) if admission_on => {
+                                // Through the admission gate: feasibility
+                                // + backlog checks, priority buffers,
+                                // watermark shedding. Dispatch happens in
+                                // the pump below.
+                                gate.admit(
+                                    ti,
+                                    tj,
+                                    now,
+                                    &metrics,
+                                    &shared,
+                                    &mut pressure,
+                                );
+                            }
                             Some(tj) => match shared.queues[ti].try_send(tj) {
                                 Ok(()) => {
                                     shared.last_enqueue_us[ti]
@@ -1159,9 +1989,10 @@ fn router_loop<S: PoolBackend>(
                                 }
                                 Err(tj) => {
                                     metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                                    tj.reply.put(Err(
-                                        "tier queue full (backpressure)".to_string(),
-                                    ));
+                                    tj.reply.put(Err(CompletionError::new(
+                                        FailureKind::QueueFull,
+                                        "tier queue full (backpressure)",
+                                    )));
                                 }
                             },
                         }
@@ -1169,7 +2000,42 @@ fn router_loop<S: PoolBackend>(
                 }
             }
         } else if jobs.is_closed() && jobs.is_empty() {
-            break;
+            if chains.is_empty() && !(admission_on && gate.has_buffered()) {
+                break;
+            }
+            // Work is still in flight through the gate or a chain; the
+            // closed jobs channel returns immediately now, so pace the
+            // polling instead of spinning.
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        if admission_on {
+            // Weighted-fair drain of the priority buffers into the tier
+            // queues; tiers fed while fully parked get a cold wake.
+            for ti in gate.pump(now, &metrics, &shared) {
+                cold_wake(&mut substrate, &mut registry, &metrics, &shared, ti, now);
+            }
+        }
+        if chains_on && !chains.is_empty() {
+            let mut i = 0;
+            while i < chains.len() {
+                let keep = chain_step(
+                    &mut chains[i],
+                    now,
+                    &pool,
+                    &shared,
+                    &metrics,
+                    &tier_model,
+                    &tier_cap,
+                    &mut pressure,
+                    &mut substrate,
+                    &mut registry,
+                );
+                if keep {
+                    i += 1;
+                } else {
+                    chains.swap_remove(i);
+                }
+            }
         }
         if now - last_ctl >= pool.scale_interval_s {
             last_ctl = now;
@@ -1191,6 +2057,11 @@ fn router_loop<S: PoolBackend>(
                 Ordering::Relaxed,
             );
             sync_registry(&mut registry, &shared, &pool);
+            if admission_on {
+                // Refresh the drain-rate EMAs behind deadline
+                // feasibility and Retry-After hints.
+                gate.sample_rates(now, &shared);
+            }
             // Draft-tier availability for the speculative path: verify
             // tiers fall back to plain decode (loss-free) whenever the
             // draft tier is parked, unhealthy, or saturated. Published
@@ -1223,7 +2094,11 @@ fn router_loop<S: PoolBackend>(
                     if sa >= lsa && sd >= lsd { (sa - lsa, sd - lsd) } else { (sa, sd) };
                 spec_last[ti] = (sa, sd);
                 let load = TierLoad {
-                    queue_depth: shared.queues[ti].len(),
+                    // Buffered work in the admission gate is queued
+                    // demand the scaler must see, even though it has not
+                    // reached the tier channel yet.
+                    queue_depth: shared.queues[ti].len()
+                        + if admission_on { gate.buffered(ti) } else { 0 },
                     slots_in_use: shared.slots_in_tier(ti),
                     active_replicas: shared.live_count(ti),
                     idle_s: now
@@ -1239,7 +2114,9 @@ fn router_loop<S: PoolBackend>(
                     } else {
                         dsa as f64 / dsd as f64
                     },
+                    pressure: pressure[ti],
                 };
+                pressure[ti] = 0.0;
                 if let Some(action) = scaler.plan_tier(
                     ti,
                     substrate.service_of_tier(ti),
@@ -1265,29 +2142,72 @@ fn router_loop<S: PoolBackend>(
         }
     }
     substrate.stop_all();
+    // Final drain: anything the teardown left unresolved is answered
+    // exactly once — a hop that finished during stop_all is forwarded, a
+    // kept low-score completion beats an error, the rest get Shutdown.
+    for mut pc in chains.drain(..) {
+        if pc.cancel.is_cancelled() {
+            continue;
+        }
+        match pc.hop.try_take() {
+            Some(out) => pc.caller.put(out),
+            None => {
+                if let Some(resp) = pc.fallback.take() {
+                    pc.caller.put(Ok(resp));
+                } else {
+                    pc.caller.put(Err(CompletionError::new(
+                        FailureKind::Shutdown,
+                        "gateway shutting down",
+                    )));
+                }
+            }
+        }
+    }
+    gate.fail_all_shutdown();
 }
 
 /// Start the HTTP gateway over a live stack. Returns the bound server.
 pub fn serve_http(stack: Arc<LiveStack>, port: u16, threads: usize) -> Result<http::HttpServer> {
     http::HttpServer::start(port, threads, move |req| {
         match (req.method.as_str(), req.path.as_str()) {
-            ("GET", "/healthz") => (200, "text/plain".into(), b"ok".to_vec()),
+            ("GET", "/healthz") => {
+                http::Response::new(200, "text/plain", b"ok".to_vec())
+            }
             ("GET", "/metrics") => {
                 let body =
                     crate::telemetry::export_prometheus(&stack.metrics_snapshot());
-                (200, "text/plain".into(), body.into_bytes())
+                http::Response::new(200, "text/plain", body.into_bytes())
             }
             ("POST", "/v1/completions") => match handle_completion(&stack, req) {
-                Ok(body) => (200, "application/json".into(), body.into_bytes()),
-                Err(e) => (
-                    500,
-                    "application/json".into(),
-                    Json::obj(vec![("error", Json::str(format!("{e:#}")))])
-                        .dump()
-                        .into_bytes(),
-                ),
+                Ok(body) => {
+                    http::Response::new(200, "application/json", body.into_bytes())
+                }
+                Err(e) => {
+                    // Typed failures map to honest status codes — 429
+                    // for shed/queue-full (with a Retry-After hint from
+                    // the observed drain rate), 503 for lost capacity,
+                    // 504 for deadlines — instead of a blanket 500.
+                    let (status, retry_after) =
+                        match e.downcast_ref::<CompletionError>() {
+                            Some(ce) => (ce.kind.http_status(), ce.retry_after_s),
+                            None => (500, None),
+                        };
+                    let body = Json::obj(vec![(
+                        "error",
+                        Json::str(format!("{e:#}")),
+                    )])
+                    .dump()
+                    .into_bytes();
+                    let mut resp =
+                        http::Response::new(status, "application/json", body);
+                    if let Some(s) = retry_after {
+                        resp = resp
+                            .header("Retry-After", format!("{}", s.ceil().max(1.0)));
+                    }
+                    resp
+                }
             },
-            _ => (404, "text/plain".into(), b"not found".to_vec()),
+            _ => http::Response::new(404, "text/plain", b"not found".to_vec()),
         }
     })
 }
@@ -1308,6 +2228,11 @@ fn handle_completion(stack: &LiveStack, req: &http::Request) -> Result<String> {
     }
     if let Some(d) = j.get("deadline_s").and_then(Json::as_f64) {
         creq = creq.deadline_s(d);
+    }
+    if let Some(p) = j.get("priority").and_then(Json::as_str) {
+        let p = Priority::parse(p)
+            .ok_or_else(|| anyhow::anyhow!("unknown priority {p:?}"))?;
+        creq = creq.priority(p);
     }
     let r = stack.complete_request(creq)?;
     Ok(Json::obj(vec![

@@ -27,14 +27,14 @@ use crate::backend::batcher::BatchPolicy;
 use crate::backend::scheduler::{
     Admit, CancelToken, Finished, Scheduler, SchedulerConfig, StepEngine,
 };
-use crate::config::PoolConfig;
+use crate::config::{PoolConfig, Priority};
 use crate::models::{BackendKind, ModelSpec, Tier};
 use crate::registry::{Registry, ServiceId};
 use crate::substrate::{ReplicaId, ReplicaState, Substrate, SubstrateEvent};
 use crate::util::stats::Ema;
 use crate::util::threadpool::{Channel, OneShot};
 
-use super::{GatewayMetrics, LiveResponse};
+use super::{CompletionError, FailureKind, GatewayMetrics, LiveResponse};
 
 /// A routed job queued for one tier's replicas.
 pub(crate) struct TierJob {
@@ -49,13 +49,20 @@ pub(crate) struct TierJob {
     /// a job requeued off a failed replica re-admits, and only the
     /// delta may count again.
     pub counted_wait_s: f64,
-    pub reply: OneShot<Result<LiveResponse, String>>,
+    pub reply: OneShot<Result<LiveResponse, CompletionError>>,
     /// Set by a timed-out caller; checked at admission and every tick.
     pub cancel: CancelToken,
     pub tier: Tier,
     pub model: &'static str,
     pub complexity: usize,
     pub confidence: f64,
+    /// Admission class (shed order, weighted-fair dequeue, wait
+    /// histograms). `Standard` for unlabelled work.
+    pub priority: Priority,
+    /// Absolute per-request deadline, seconds since the pool epoch;
+    /// `f64::INFINITY` when the caller set none. Work past its deadline
+    /// is dropped at dequeue instead of charged to a replica.
+    pub deadline_abs_s: f64,
 }
 
 // Replica lifecycle wire encoding (`ReplicaCell::state`) — shared with
@@ -682,12 +689,27 @@ fn admit_job<E: StepEngine>(
     mut job: TierJob,
     ctx: &ReplicaCtx,
 ) -> Option<TierJob> {
+    let now = ctx.epoch.elapsed().as_secs_f64();
+    // Expiry is checked before cancellation: a caller abandoning its
+    // deadline fires both signals at once, and the expired-shed counter
+    // is the one that must account for the dead work.
+    if now > job.deadline_abs_s {
+        // Dead work: the deadline elapsed while the job sat queued.
+        // Dropping it here — before prefill/KV admission — is what keeps
+        // overload from spending replica steps on answers nobody can
+        // use.
+        ctx.metrics.shed_expired.fetch_add(1, Ordering::Relaxed);
+        job.reply.put(Err(CompletionError::new(
+            FailureKind::DeadlineExpired,
+            "deadline expired before dispatch",
+        )));
+        return None;
+    }
     if job.cancel.is_cancelled() {
         // The caller already timed out; don't spend prefill on it.
         ctx.metrics.cancelled.fetch_add(1, Ordering::Relaxed);
         return None;
     }
-    let now = ctx.epoch.elapsed().as_secs_f64();
     let est = crate::tokenizer::word_count(&job.prompt).max(1) + 1;
     job.queue_wait_s = (now - job.enqueue_s).max(0.0);
     // The scheduler buffers its own copy of the prompt for the prefill
@@ -698,6 +720,12 @@ fn admit_job<E: StepEngine>(
     match sched.admit_cancellable(&prompt, job.max_tokens, est, job, cancel) {
         Admit::Admitted => {
             if let Some(p) = sched.last_admitted_mut() {
+                if p.counted_wait_s == 0.0 {
+                    // First admission only (requeues re-admit): the
+                    // per-priority wait distribution behind
+                    // `ps_queue_wait_hist_seconds`.
+                    ctx.metrics.observe_queue_wait(p.priority, p.queue_wait_s);
+                }
                 ctx.metrics
                     .add_queue_wait_s((p.queue_wait_s - p.counted_wait_s).max(0.0));
                 p.counted_wait_s = p.queue_wait_s;
@@ -711,7 +739,8 @@ fn admit_job<E: StepEngine>(
         }
         Admit::Failed(job, e) => {
             ctx.metrics.errors.fetch_add(1, Ordering::Relaxed);
-            job.reply.put(Err(format!("admission failed: {e:#}")));
+            job.reply
+                .put(Err(CompletionError::internal(format!("admission failed: {e:#}"))));
             None
         }
     }
@@ -796,7 +825,10 @@ pub(crate) fn requeue_to(
             // Orderly shutdown: the caller is told, but this is not a
             // serving error — `ps_errors_total` must stay quiet for a
             // clean teardown.
-            job.reply.put(Err("gateway shutting down".to_string()));
+            job.reply.put(Err(CompletionError::new(
+                FailureKind::Shutdown,
+                "gateway shutting down",
+            )));
             return false;
         }
         match queue.try_send(job) {
@@ -813,7 +845,8 @@ pub(crate) fn requeue_to(
         }
     }
     metrics.errors.fetch_add(1, Ordering::Relaxed);
-    job.reply.put(Err(fail_msg.to_string()));
+    job.reply
+        .put(Err(CompletionError::new(FailureKind::ReplicaLost, fail_msg)));
     false
 }
 
@@ -1026,7 +1059,7 @@ pub(crate) fn replica_loop<E: StepEngine>(engine: E, ctx: ReplicaCtx) {
                 }
                 for (job, msg) in tick.failed {
                     ctx.metrics.errors.fetch_add(1, Ordering::Relaxed);
-                    job.reply.put(Err(msg));
+                    job.reply.put(Err(CompletionError::internal(msg)));
                 }
                 ctx.cell.inflight.store(sched.inflight(), Ordering::Relaxed);
                 let ps = sched.prefix_stats();
@@ -1105,7 +1138,7 @@ pub(crate) fn replica_loop<E: StepEngine>(engine: E, ctx: ReplicaCtx) {
                 let msg = format!("engine step failed: {e:#}");
                 for job in sched.fail_all() {
                     ctx.metrics.errors.fetch_add(1, Ordering::Relaxed);
-                    job.reply.put(Err(msg.clone()));
+                    job.reply.put(Err(CompletionError::internal(msg.clone())));
                 }
                 ctx.cell.inflight.store(0, Ordering::Relaxed);
                 engine_errors += 1;
@@ -1130,7 +1163,10 @@ pub(crate) fn replica_loop<E: StepEngine>(engine: E, ctx: ReplicaCtx) {
         requeue_job(job, &ctx, "gateway shutting down");
     }
     for job in sched.fail_all() {
-        job.reply.put(Err("gateway shutting down".to_string()));
+        job.reply.put(Err(CompletionError::new(
+            FailureKind::Shutdown,
+            "gateway shutting down",
+        )));
     }
     ctx.cell.inflight.store(0, Ordering::Relaxed);
     ctx.cell.state.store(S_GONE, Ordering::Release);

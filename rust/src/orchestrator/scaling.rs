@@ -59,6 +59,12 @@ pub struct TierLoad {
     /// the planner discounts queue pressure; windowed like
     /// `prefix_hit_rate`.
     pub spec_accept_rate: f64,
+    /// Overload pressure the admission gate and fallback chains reported
+    /// over the last control interval: requests shed at this tier plus
+    /// chain hops escalated/degraded *into* it. Each unit is a request
+    /// that wanted capacity here and didn't get it, so it counts as
+    /// extra queue demand (0 with overload control off).
+    pub pressure: f64,
 }
 
 /// Queue-pressure discount at a fully-warm prefix cache: a hit skips the
@@ -208,7 +214,12 @@ impl Scaler {
         let relief = ((1.0 - PREFIX_QUEUE_RELIEF * load.prefix_hit_rate.clamp(0.0, 1.0))
             * (1.0 - SPEC_QUEUE_RELIEF * load.spec_accept_rate.clamp(0.0, 1.0)))
             .clamp(0.0, 1.0);
-        let demand = (load.queue_depth as f64 * relief).ceil() as usize + load.slots_in_use;
+        // Shed/escalation pressure is demand that never reached the
+        // queue (or arrived as a chain hop): un-discounted — these
+        // requests already lost once.
+        let demand = (load.queue_depth as f64 * relief).ceil() as usize
+            + load.slots_in_use
+            + load.pressure.max(0.0).ceil() as usize;
         let need = demand.div_ceil(self.slots_per_replica);
         let current = load.active_replicas;
         let target = self.decide(
@@ -433,6 +444,7 @@ mod tests {
             idle_s: 0.0,
             prefix_hit_rate: 0.0,
             spec_accept_rate: 0.0,
+            pressure: 0.0,
         };
         assert_eq!(tier_target(&mut s, 0, load, 4, 100.0), 3);
     }
@@ -447,6 +459,7 @@ mod tests {
             idle_s: 0.0,
             prefix_hit_rate: 0.0,
             spec_accept_rate: 0.0,
+            pressure: 0.0,
         };
         assert_eq!(tier_target(&mut s, 0, load, 8, 0.0), 4);
         // Still under-provisioned, but inside the cooldown window.
@@ -465,6 +478,7 @@ mod tests {
             idle_s: 200.0,
             prefix_hit_rate: 0.0,
             spec_accept_rate: 0.0,
+            pressure: 0.0,
         };
         assert_eq!(tier_target(&mut s, 2, load, 2, 500.0), 0);
     }
@@ -479,6 +493,7 @@ mod tests {
             idle_s: 200.0,
             prefix_hit_rate: 0.0,
             spec_accept_rate: 0.0,
+            pressure: 0.0,
         };
         assert_eq!(tier_target(&mut s, 0, load, 2, 500.0), 1);
     }
@@ -494,6 +509,7 @@ mod tests {
             idle_s: 500.0,
             prefix_hit_rate: 0.0,
             spec_accept_rate: 0.0,
+            pressure: 0.0,
         };
         assert_eq!(tier_target(&mut s, 1, load, 4, 1000.0), 1);
     }
@@ -508,6 +524,7 @@ mod tests {
             idle_s: 0.0,
             prefix_hit_rate: 0.0,
             spec_accept_rate: 0.0,
+            pressure: 0.0,
         };
         assert_eq!(tier_target(&mut s, 0, load, 4, 0.0), 4);
     }
@@ -522,6 +539,7 @@ mod tests {
             idle_s: 1.0,
             prefix_hit_rate: 0.0,
             spec_accept_rate: 0.0,
+            pressure: 0.0,
         };
         // Demand 8 fits one replica exactly → no change.
         assert!(s.plan_tier(0, ServiceId(0), load, 4, 0.0).is_none());
@@ -538,6 +556,7 @@ mod tests {
             idle_s: 0.0,
             prefix_hit_rate: 0.0,
             spec_accept_rate: 0.0,
+            pressure: 0.0,
         };
         let mut s = pool_scaler([0, 0, 0]);
         assert_eq!(tier_target(&mut s, 0, cold, 8, 0.0), 4);
@@ -557,6 +576,7 @@ mod tests {
             idle_s: 0.0,
             prefix_hit_rate: 0.0,
             spec_accept_rate: 0.0,
+            pressure: 0.0,
         };
         let mut s = pool_scaler([0, 0, 0]);
         assert_eq!(tier_target(&mut s, 0, plain, 8, 0.0), 4);
@@ -576,6 +596,7 @@ mod tests {
             idle_s: 0.0,
             prefix_hit_rate: 1.0,
             spec_accept_rate: 1.0,
+            pressure: 0.0,
         };
         let mut s = pool_scaler([0, 0, 0]);
         // 32 × 0.25 = 8 → exactly one 8-slot replica.
@@ -585,6 +606,32 @@ mod tests {
         let wild = TierLoad { prefix_hit_rate: 7.0, spec_accept_rate: 9.0, ..load };
         let mut s = pool_scaler([0, 0, 0]);
         assert_eq!(tier_target(&mut s, 0, wild, 8, 0.0), 1);
+    }
+
+    #[test]
+    fn pool_shed_pressure_counts_as_demand() {
+        // A short queue that holds at one replica scales up once the
+        // admission gate reports shed/escalation pressure — requests
+        // that wanted this tier and didn't get it are still demand.
+        let calm = TierLoad {
+            queue_depth: 4,
+            slots_in_use: 4,
+            active_replicas: 1,
+            idle_s: 0.0,
+            prefix_hit_rate: 0.0,
+            spec_accept_rate: 0.0,
+            pressure: 0.0,
+        };
+        let mut s = pool_scaler([0, 0, 0]);
+        assert!(s.plan_tier(0, ServiceId(0), calm, 4, 0.0).is_none());
+        // 16 sheds last interval → demand 4+4+16 = 24 → 3 replicas.
+        let overloaded = TierLoad { pressure: 16.0, ..calm };
+        let mut s = pool_scaler([0, 0, 0]);
+        assert_eq!(tier_target(&mut s, 0, overloaded, 4, 0.0), 3);
+        // The pressure signal is never allowed to shrink demand.
+        let negative = TierLoad { pressure: -5.0, ..calm };
+        let mut s = pool_scaler([0, 0, 0]);
+        assert!(s.plan_tier(0, ServiceId(0), negative, 4, 0.0).is_none());
     }
 
     #[test]

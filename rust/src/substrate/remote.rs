@@ -62,7 +62,7 @@ use crate::gateway::pool::{
     decode_state, requeue_to, PoolShared, ReplicaCell, TierJob, S_FAILED, S_GONE,
     S_LOADING, S_READY, S_SCHEDULED, S_TERMINATING,
 };
-use crate::gateway::{GatewayMetrics, LiveResponse};
+use crate::gateway::{CompletionError, FailureKind, GatewayMetrics, LiveResponse};
 use crate::models::{BackendKind, ModelSpec, Tier};
 use crate::registry::{Registry, ServiceId};
 use crate::substrate::nodes::{NodeId, NodeRegistry};
@@ -948,7 +948,9 @@ fn pump_session(ctx: &mut PumpCtx) -> Result<(), String> {
                         Frame::JobFailed { job, error } => {
                             if let Some(e) = inflight.remove(&job) {
                                 ctx.metrics.errors.fetch_add(1, Ordering::Relaxed);
-                                e.job.reply.put(Err(error));
+                                e.job
+                                    .reply
+                                    .put(Err(CompletionError::internal(error)));
                             }
                         }
                         Frame::Cancelled { job } => {
@@ -1098,12 +1100,30 @@ fn pump_session(ctx: &mut PumpCtx) -> Result<(), String> {
                 else {
                     break;
                 };
+                let now = ctx.epoch.elapsed().as_secs_f64();
+                if now > job.deadline_abs_s {
+                    // Dead work: the deadline elapsed in the queue. Drop
+                    // before crossing the wire — same rule the thread
+                    // substrate applies at scheduler admission. Expiry
+                    // outranks cancellation: an abandoned deadline fires
+                    // both, and the expired-shed counter must see it.
+                    ctx.metrics.shed_expired.fetch_add(1, Ordering::Relaxed);
+                    job.reply.put(Err(CompletionError::new(
+                        FailureKind::DeadlineExpired,
+                        "deadline expired before dispatch",
+                    )));
+                    continue;
+                }
                 if job.cancel.is_cancelled() {
                     ctx.metrics.cancelled.fetch_add(1, Ordering::Relaxed);
                     continue;
                 }
-                let now = ctx.epoch.elapsed().as_secs_f64();
                 job.queue_wait_s = (now - job.enqueue_s).max(0.0);
+                if job.counted_wait_s == 0.0 {
+                    // First dispatch only (requeues re-dispatch): the
+                    // per-priority wait distribution.
+                    ctx.metrics.observe_queue_wait(job.priority, job.queue_wait_s);
+                }
                 ctx.metrics
                     .add_queue_wait_s((job.queue_wait_s - job.counted_wait_s).max(0.0));
                 job.counted_wait_s = job.queue_wait_s;
@@ -1121,11 +1141,11 @@ fn pump_session(ctx: &mut PumpCtx) -> Result<(), String> {
                     // and requeue the poison job forever — fail the one
                     // caller instead.
                     ctx.metrics.errors.fetch_add(1, Ordering::Relaxed);
-                    job.reply.put(Err(format!(
+                    job.reply.put(Err(CompletionError::internal(format!(
                         "prompt too large for the RPC data plane \
                          ({} bytes encoded)",
                         bytes.len()
-                    )));
+                    ))));
                     continue;
                 }
                 if let Err(e) = send_bytes(&mut *stream, &bytes, ctx) {

@@ -278,6 +278,13 @@ impl<T> OneShot<T> {
             guard = g;
         }
     }
+
+    /// Non-blocking take: the value if one has been `put`, else `None`.
+    /// Lets a poll loop (the gateway's chain state machine) multiplex
+    /// many pending rendezvous without parking on any one of them.
+    pub fn try_take(&self) -> Option<T> {
+        self.state.0.lock().unwrap().take()
+    }
 }
 
 #[cfg(test)]
@@ -365,6 +372,15 @@ mod tests {
             slot.wait_timeout(std::time::Duration::from_millis(20)),
             None
         );
+    }
+
+    #[test]
+    fn oneshot_try_take() {
+        let slot: OneShot<u8> = OneShot::new();
+        assert_eq!(slot.try_take(), None);
+        slot.put(7);
+        assert_eq!(slot.try_take(), Some(7));
+        assert_eq!(slot.try_take(), None, "one-shot: a value takes once");
     }
 
     #[test]

@@ -1,0 +1,493 @@
+//! Overload control + fallback chains, end to end.
+//!
+//! The invariants under test, in rough order of importance:
+//! * **Flags off is PR-parity**: with `pool.admission.enabled = false`
+//!   and no chain routes, the dispatch path is the legacy one — token
+//!   streams must be bit-identical to a run with the overload machinery
+//!   switched on but inert, on both substrates.
+//! * **Exactly-once resolution**: every request resolves exactly once —
+//!   a completion or one typed error — under shedding, escalation, and
+//!   replica SIGKILL.
+//! * **Priority protection**: under 2× overload only batch work sheds;
+//!   interactive requests all complete.
+//! * **Bounded retries**: chain re-dispatches never exceed the
+//!   gateway-wide retry-budget ratio.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use pick_and_spin::config::{Config, Priority, SubstrateKind};
+use pick_and_spin::gateway::{
+    CompletionError, CompletionRequest, FailureKind, LiveStack,
+};
+use pick_and_spin::testkit::wait_until;
+
+const WORKER_BIN: &str = env!("CARGO_BIN_EXE_pick-and-spin");
+
+/// Easy prompts (keyword complexity 0) route to the small tier.
+fn easy_prompt(i: usize) -> String {
+    format!("what is {i} plus {i}?")
+}
+
+/// Hard prompts (keyword complexity 2) route to the large tier.
+fn hard_prompt(i: usize) -> String {
+    format!("prove that series {i} converges and derive the bound")
+}
+
+fn base_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.pool.replicas = [1, 1, 1];
+    cfg.pool.max_inflight = 1;
+    cfg.pool.flush_timeout_s = 0.003;
+    cfg.pool.scale_interval_s = 0.02;
+    // No scale-down noise during the experiments.
+    cfg.orchestrator.idle_timeout_s = 3600.0;
+    cfg
+}
+
+/// Overload features configured but inert: admission on with an
+/// unreachable watermark, chains on with a score floor that never
+/// triggers. Light traffic must be token-identical to flags-off.
+fn inert_overload_cfg() -> Config {
+    let mut cfg = base_cfg();
+    cfg.pool.max_inflight = 8;
+    cfg.pool.admission.enabled = true;
+    cfg.pool.admission.watermark = 1.0;
+    cfg.pool.chains.routes = [vec![1, 2], vec![2], vec![]];
+    cfg.pool.chains.score_floor = 0.0;
+    cfg.pool.chains.backoff_base_s = 0.0;
+    cfg.pool.chains.retry_budget_ratio = 2.0;
+    cfg
+}
+
+fn process_cfg(mut cfg: Config) -> Config {
+    cfg.pool.substrate = SubstrateKind::Process;
+    cfg.pool.worker_bin = Some(WORKER_BIN.to_string());
+    cfg.pool.worker_log_dir = std::env::var("PS_WORKER_LOG_DIR").ok();
+    cfg
+}
+
+/// Serve `n` prompts concurrently; return index → token stream.
+fn serve(
+    stack: &Arc<LiveStack>,
+    n: usize,
+    max_new: usize,
+) -> std::collections::BTreeMap<usize, Vec<i32>> {
+    let handles: Vec<_> = (0..n)
+        .map(|i| {
+            let s = Arc::clone(stack);
+            std::thread::spawn(move || {
+                (i, s.complete(&easy_prompt(i), max_new).expect("request").tokens)
+            })
+        })
+        .collect();
+    handles
+        .into_iter()
+        .map(|h| h.join().expect("request thread"))
+        .collect()
+}
+
+#[test]
+fn flags_off_is_token_identical_to_inert_overload_thread_substrate() {
+    let n = 16;
+    let mut plain_cfg = base_cfg();
+    plain_cfg.pool.max_inflight = 8;
+    let plain_stack = Arc::new(LiveStack::start_sim(&plain_cfg).unwrap());
+    let plain = serve(&plain_stack, n, 16);
+    // Flags off: no overload series beyond the always-on budget gauge.
+    let snap = plain_stack.metrics_snapshot();
+    assert!(!snap.iter().any(|(k, _)| k.starts_with("ps_shed_total")));
+    assert!(!snap.iter().any(|(k, _)| k.starts_with("ps_chain_")));
+    assert!(snap
+        .iter()
+        .any(|(k, v)| k == "ps_retry_budget_ratio" && *v == 0.0));
+    drop(plain_stack);
+
+    let stack = Arc::new(LiveStack::start_sim(&inert_overload_cfg()).unwrap());
+    let wrapped = serve(&stack, n, 16);
+    assert_eq!(plain, wrapped, "inert overload control changed tokens");
+    assert_eq!(stack.metrics.errors.load(Ordering::Relaxed), 0);
+    assert_eq!(stack.metrics.retries_issued.load(Ordering::Relaxed), 0);
+    for row in &stack.metrics.shed_total {
+        for c in row {
+            assert_eq!(c.load(Ordering::Relaxed), 0);
+        }
+    }
+}
+
+#[test]
+fn flags_off_is_token_identical_to_inert_overload_process_substrate() {
+    // Same parity check across the RPC data plane: the process pool with
+    // the whole overload machine switched on (but inert) must reproduce
+    // the thread pool's flags-off completions exactly.
+    let n = 12;
+    let mut plain_cfg = base_cfg();
+    plain_cfg.pool.max_inflight = 8;
+    let plain_stack = Arc::new(LiveStack::start_sim(&plain_cfg).unwrap());
+    let plain = serve(&plain_stack, n, 12);
+    drop(plain_stack);
+
+    let stack = Arc::new(
+        LiveStack::start_sim(&process_cfg(inert_overload_cfg())).unwrap(),
+    );
+    let wrapped = serve(&stack, n, 12);
+    assert_eq!(plain, wrapped, "inert overload control changed tokens");
+    assert_eq!(stack.metrics.errors.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn score_floor_escalates_to_a_stronger_tier() {
+    // Every tier's relevance on these prompts sits below a 0.99 floor,
+    // so any chain-wrapped completion escalates along its route and the
+    // caller's answer comes from the route's last, strongest rung.
+    let mut cfg = base_cfg();
+    cfg.pool.max_inflight = 8;
+    cfg.pool.chains.routes = [vec![2], vec![2], vec![]];
+    cfg.pool.chains.score_floor = 0.99;
+    cfg.pool.chains.max_retries = 2;
+    cfg.pool.chains.backoff_base_s = 0.0;
+    cfg.pool.chains.retry_budget_ratio = 10.0;
+    let stack = Arc::new(LiveStack::start_sim(&cfg).unwrap());
+    let n = 8;
+    let handles: Vec<_> = (0..n)
+        .map(|i| {
+            let s = Arc::clone(&stack);
+            std::thread::spawn(move || s.complete(&easy_prompt(i), 8))
+        })
+        .collect();
+    for h in handles {
+        let r = h.join().unwrap().expect("chained completion");
+        assert_eq!(r.tier, "large", "low-score hop was not escalated");
+        assert!(!r.tokens.is_empty());
+    }
+    let m = &stack.metrics;
+    let escalated: u64 = m
+        .chain_escalated
+        .iter()
+        .map(|c| c.load(Ordering::Relaxed))
+        .sum();
+    assert!(escalated >= 1, "no escalation recorded");
+    assert_eq!(
+        escalated,
+        m.retries_issued.load(Ordering::Relaxed),
+        "every retry here is a quality escalation"
+    );
+    let snap = stack.metrics_snapshot();
+    assert!(snap
+        .iter()
+        .any(|(k, v)| k.starts_with("ps_chain_escalated_total{route=") && *v >= 1.0));
+    assert_eq!(m.errors.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn admission_sheds_batch_only_and_interactive_completes() {
+    // ~3× the watermark in batch work against one slow replica chain,
+    // plus a trickle of interactive traffic: the gate must shed batch
+    // (with a Retry-After hint), never interactive, and every request
+    // must resolve exactly once.
+    let mut cfg = base_cfg();
+    cfg.pool.queue_capacity = 64;
+    cfg.pool.admission.enabled = true;
+    cfg.pool.admission.watermark = 0.125; // shed past 8 queued per tier
+    let stack = Arc::new(LiveStack::start_sim(&cfg).unwrap());
+    let n_batch = 48;
+    let n_inter = 8;
+    let batch: Vec<_> = (0..n_batch)
+        .map(|i| {
+            let s = Arc::clone(&stack);
+            std::thread::spawn(move || {
+                s.complete_request(
+                    CompletionRequest::new(hard_prompt(i))
+                        .max_tokens(32)
+                        .priority(Priority::Batch),
+                )
+            })
+        })
+        .collect();
+    // Give the flood a head start so the backlog is past the watermark.
+    std::thread::sleep(Duration::from_millis(30));
+    let inter: Vec<_> = (0..n_inter)
+        .map(|i| {
+            let s = Arc::clone(&stack);
+            std::thread::spawn(move || {
+                s.complete_request(
+                    CompletionRequest::new(hard_prompt(1000 + i))
+                        .max_tokens(8)
+                        .priority(Priority::Interactive),
+                )
+            })
+        })
+        .collect();
+    for h in inter {
+        let r = h.join().unwrap().expect("interactive must never shed");
+        assert!(!r.tokens.is_empty());
+    }
+    let (mut ok, mut shed) = (0usize, 0usize);
+    for h in batch {
+        match h.join().unwrap() {
+            Ok(r) => {
+                assert!(!r.tokens.is_empty());
+                ok += 1;
+            }
+            Err(e) => {
+                let ce = e
+                    .downcast_ref::<CompletionError>()
+                    .expect("untyped overload failure");
+                assert!(
+                    matches!(ce.kind, FailureKind::Shed | FailureKind::QueueFull),
+                    "unexpected failure kind: {:?}",
+                    ce.kind
+                );
+                assert!(
+                    ce.retry_after_s.unwrap_or(0.0) > 0.0,
+                    "shed without a Retry-After hint"
+                );
+                shed += 1;
+            }
+        }
+    }
+    assert_eq!(ok + shed, n_batch, "a batch request went unresolved");
+    assert!(shed >= 1, "2x overload shed nothing");
+    let m = &stack.metrics;
+    // Interactive and standard rows stay empty — only batch sheds.
+    for ti in 0..3 {
+        assert_eq!(m.shed_total[0][ti].load(Ordering::Relaxed), 0);
+        assert_eq!(m.shed_total[1][ti].load(Ordering::Relaxed), 0);
+    }
+    let batch_shed: u64 =
+        (0..3).map(|ti| m.shed_total[2][ti].load(Ordering::Relaxed)).sum();
+    let backlog_rejects = m.admission_rejected_backlog.load(Ordering::Relaxed);
+    assert_eq!(
+        batch_shed + backlog_rejects,
+        shed as u64,
+        "shed accounting must match caller-visible rejections exactly"
+    );
+    let snap = stack.metrics_snapshot();
+    assert!(snap
+        .iter()
+        .any(|(k, v)| k.starts_with("ps_shed_total{priority=\"batch\"") && *v >= 1.0));
+    assert!(snap
+        .iter()
+        .any(|(k, _)| k.starts_with("ps_queue_wait_hist_seconds{priority=\"interactive\"")));
+}
+
+#[test]
+fn expired_deadlines_are_dropped_at_dequeue() {
+    // A deadline far shorter than the backlog's drain time: queued work
+    // expires before a replica reaches it and is dropped at dequeue —
+    // counted as expired shed — instead of burning decode steps.
+    let cfg = base_cfg();
+    let stack = Arc::new(LiveStack::start_sim(&cfg).unwrap());
+    let n = 32;
+    let handles: Vec<_> = (0..n)
+        .map(|i| {
+            let s = Arc::clone(&stack);
+            std::thread::spawn(move || {
+                s.complete_request(
+                    CompletionRequest::new(hard_prompt(i))
+                        .max_tokens(48)
+                        .deadline_s(0.05),
+                )
+            })
+        })
+        .collect();
+    let mut failed = 0usize;
+    for h in handles {
+        match h.join().unwrap() {
+            Ok(r) => assert!(!r.tokens.is_empty()),
+            Err(e) => {
+                let ce = e
+                    .downcast_ref::<CompletionError>()
+                    .expect("untyped deadline failure");
+                assert!(
+                    matches!(
+                        ce.kind,
+                        FailureKind::Timeout | FailureKind::DeadlineExpired
+                    ),
+                    "unexpected failure kind: {:?}",
+                    ce.kind
+                );
+                failed += 1;
+            }
+        }
+    }
+    assert!(failed >= 1, "a 50ms deadline survived a 32-deep backlog");
+    assert!(
+        wait_until(Duration::from_secs(5), || {
+            stack.metrics.shed_expired.load(Ordering::Relaxed) >= 1
+        }),
+        "no expired-deadline drop was recorded"
+    );
+    let snap = stack.metrics_snapshot();
+    assert!(snap
+        .iter()
+        .any(|(k, v)| k == "ps_shed_total{reason=\"expired\"}" && *v >= 1.0));
+}
+
+#[test]
+fn sigkill_under_chain_loses_zero_completions() {
+    // SIGKILL the small tier's only worker while chained traffic is in
+    // flight over the process substrate: loss-free requeue (and, for
+    // anything that surfaces as a typed replica failure, the chain's
+    // escalation) must land every completion.
+    let cfg = process_cfg(inert_overload_cfg());
+    let stack = Arc::new(LiveStack::start_sim(&cfg).unwrap());
+    let n = 24usize;
+    let handles: Vec<_> = (0..n)
+        .map(|i| {
+            let s = Arc::clone(&stack);
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(i as u64 * 3));
+                s.complete(&easy_prompt(i), 16)
+            })
+        })
+        .collect();
+    assert!(
+        wait_until(Duration::from_secs(10), || stack.slots_in_use() > 0),
+        "traffic never started decoding"
+    );
+    assert!(
+        stack.inject_replica_failure(0),
+        "no Ready small-tier replica to kill"
+    );
+    for h in handles {
+        let r = h
+            .join()
+            .unwrap()
+            .expect("completion lost across the SIGKILL");
+        assert!(!r.tokens.is_empty());
+    }
+    assert!(
+        wait_until(Duration::from_secs(10), || {
+            stack.metrics.incidents.load(Ordering::Relaxed) >= 1
+        }),
+        "the kill never surfaced as an incident"
+    );
+}
+
+#[test]
+fn chaos_every_request_resolves_once_and_retries_stay_bounded() {
+    // Everything at once: admission on with a tight watermark, chains
+    // with a score floor and degrade enabled, mixed priorities, some
+    // short deadlines, and a replica kill mid-run. The properties:
+    // every request resolves exactly once (one Ok or one *typed* Err),
+    // and issued retries never exceed the retry-budget ratio.
+    let mut cfg = base_cfg();
+    cfg.pool.max_inflight = 2;
+    cfg.pool.queue_capacity = 32;
+    cfg.pool.admission.enabled = true;
+    cfg.pool.admission.watermark = 0.5;
+    cfg.pool.chains.routes = [vec![1, 2], vec![2], vec![]];
+    cfg.pool.chains.score_floor = 0.9;
+    cfg.pool.chains.max_retries = 2;
+    cfg.pool.chains.backoff_base_s = 0.001;
+    cfg.pool.chains.retry_budget_ratio = 0.5;
+    cfg.pool.chains.degrade = true;
+    let stack = Arc::new(LiveStack::start_sim(&cfg).unwrap());
+    let n = 60usize;
+    let handles: Vec<_> = (0..n)
+        .map(|i| {
+            let s = Arc::clone(&stack);
+            std::thread::spawn(move || {
+                let mut req = CompletionRequest::new(easy_prompt(i))
+                    .max_tokens(12)
+                    .priority(Priority::ALL[i % 3]);
+                if i % 7 == 0 {
+                    req = req.deadline_s(0.2);
+                }
+                s.complete_request(req)
+            })
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(40));
+    // Kill whatever is serving; recovery redeploys it mid-chaos.
+    let _ = stack.inject_replica_failure(1);
+    let (mut ok, mut err) = (0usize, 0usize);
+    for h in handles {
+        match h.join().expect("request thread must resolve") {
+            Ok(r) => {
+                assert!(!r.tokens.is_empty());
+                ok += 1;
+            }
+            Err(e) => {
+                assert!(
+                    e.downcast_ref::<CompletionError>().is_some(),
+                    "untyped failure escaped the gateway: {e:#}"
+                );
+                err += 1;
+            }
+        }
+    }
+    assert_eq!(ok + err, n, "a request resolved zero or two times");
+    let m = &stack.metrics;
+    let fresh = m.fresh_jobs.load(Ordering::Relaxed).max(1);
+    let retries = m.retries_issued.load(Ordering::Relaxed);
+    assert!(
+        retries as f64 <= 0.5 * fresh as f64 + 1.0,
+        "retry budget exceeded: {retries} retries vs {fresh} fresh"
+    );
+    assert_eq!(m.requests.load(Ordering::Relaxed), n as u64);
+}
+
+#[test]
+fn http_maps_overload_failures_to_429_with_retry_after() {
+    use pick_and_spin::gateway::http::http_request_full;
+    use pick_and_spin::gateway::serve_http;
+
+    // A 4-deep queue against 16 concurrent batch posts: the gate must
+    // answer the overflow with 429 + Retry-After, not 500.
+    let mut cfg = base_cfg();
+    cfg.pool.queue_capacity = 4;
+    cfg.pool.admission.enabled = true;
+    cfg.pool.admission.watermark = 0.5;
+    let stack = Arc::new(LiveStack::start_sim(&cfg).unwrap());
+    let srv = serve_http(Arc::clone(&stack), 0, 8).unwrap();
+    let port = srv.port;
+    let handles: Vec<_> = (0..16)
+        .map(|i| {
+            std::thread::spawn(move || {
+                http_request_full(
+                    port,
+                    "POST",
+                    "/v1/completions",
+                    Some(&format!(
+                        r#"{{"prompt": "prove that series {i} converges and derive the bound",
+                            "max_tokens": 32, "priority": "batch"}}"#
+                    )),
+                )
+                .unwrap()
+            })
+        })
+        .collect();
+    let mut saw_ok = false;
+    let mut saw_429 = false;
+    for h in handles {
+        let (status, headers, body) = h.join().unwrap();
+        match status {
+            200 => saw_ok = true,
+            429 => {
+                let ra = headers
+                    .iter()
+                    .find(|(k, _)| k.eq_ignore_ascii_case("retry-after"))
+                    .map(|(_, v)| v.clone())
+                    .unwrap_or_else(|| panic!("429 without Retry-After: {body}"));
+                assert!(ra.parse::<f64>().unwrap() >= 1.0);
+                saw_429 = true;
+            }
+            other => panic!("unexpected status {other}: {body}"),
+        }
+    }
+    assert!(saw_ok, "everything was rejected");
+    assert!(saw_429, "4-deep queue never pushed back on 16 posts");
+    // An unknown priority label is a client error, not a served request.
+    let (status, _, _) = http_request_full(
+        port,
+        "POST",
+        "/v1/completions",
+        Some(r#"{"prompt": "what is 1 plus 1?", "max_tokens": 4, "priority": "urgent"}"#),
+    )
+    .unwrap();
+    assert_eq!(status, 500);
+    srv.stop();
+}
