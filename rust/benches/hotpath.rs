@@ -696,6 +696,173 @@ fn main() {
         );
     }
 
+    if selected("trace") {
+        // Tracing overhead end-to-end: the pinned BENCH_9 scenario — 64
+        // concurrent prompts, 24-token budgets — served with tracing off
+        // (the default null-pointer path) and on (every request sampled,
+        // full span timelines through the flight recorder). The
+        // acceptance gate: tracing-on throughput within 5% of off.
+        // Tokens/sec takes the best of 3 repeats per scenario to damp
+        // shared-runner noise; the recorder's spans give the TTFT phase
+        // decomposition (admit/queued/prefill) the JSON reports.
+        use pick_and_spin::config::Config;
+        use pick_and_spin::gateway::LiveStack;
+        use pick_and_spin::telemetry::trace::SpanKind;
+        use pick_and_spin::util::json::Json;
+        use pick_and_spin::util::stats::percentile;
+        use std::sync::Arc;
+
+        const REQS: usize = 64;
+        const MAX_NEW: usize = 24;
+        const REPEATS: usize = 3;
+
+        struct TraceRun {
+            tps: f64,
+            ttfts: Vec<f64>,
+            // Mean seconds and sample count per span kind, from the
+            // last repeat's flight recorder.
+            phase_mean_s: Vec<(&'static str, f64, usize)>,
+            traces: usize,
+        }
+
+        let run = |enabled: bool| -> TraceRun {
+            let mut out = TraceRun {
+                tps: 0.0,
+                ttfts: Vec::new(),
+                phase_mean_s: Vec::new(),
+                traces: 0,
+            };
+            for _ in 0..REPEATS {
+                let mut cfg = Config::default();
+                cfg.pool.replicas = [1, 1, 1];
+                cfg.pool.max_inflight = 16;
+                cfg.pool.max_decode_batch = 8;
+                cfg.pool.flush_timeout_s = 0.001;
+                cfg.pool.scale_interval_s = 0.02;
+                cfg.pool.trace.enabled = enabled;
+                cfg.pool.trace.sample_rate = 1.0;
+                cfg.pool.trace.ring_size = REQS * 2;
+                let stack = Arc::new(LiveStack::start_sim(&cfg).expect("bench stack"));
+                std::thread::sleep(std::time::Duration::from_millis(120));
+                let t0 = std::time::Instant::now();
+                let handles: Vec<_> = (0..REQS)
+                    .map(|i| {
+                        let s = Arc::clone(&stack);
+                        std::thread::spawn(move || {
+                            s.complete(&format!("what is {i} plus {i}?"), MAX_NEW)
+                                .expect("bench request")
+                        })
+                    })
+                    .collect();
+                let mut toks = 0usize;
+                for h in handles {
+                    let r = h.join().expect("bench thread");
+                    toks += r.tokens.len();
+                    out.ttfts.push(r.ttft_s);
+                }
+                out.tps = out.tps.max(toks as f64 / t0.elapsed().as_secs_f64());
+                // The scheduler records a trace after replying; give the
+                // last few a beat to land in the ring.
+                std::thread::sleep(std::time::Duration::from_millis(20));
+                let records = stack.metrics.recorder.snapshot();
+                out.traces = records.len();
+                out.phase_mean_s = [
+                    SpanKind::Admit,
+                    SpanKind::Queued,
+                    SpanKind::Prefill,
+                    SpanKind::Decode,
+                ]
+                .iter()
+                .map(|kind| {
+                    let durs: Vec<f64> = records
+                        .iter()
+                        .flat_map(|r| r.spans.iter())
+                        .filter(|s| s.kind == *kind)
+                        .map(|s| s.dur_s())
+                        .collect();
+                    let mean = if durs.is_empty() {
+                        0.0
+                    } else {
+                        durs.iter().sum::<f64>() / durs.len() as f64
+                    };
+                    (kind.name(), mean, durs.len())
+                })
+                .collect();
+            }
+            out
+        };
+
+        let off = run(false);
+        let on = run(true);
+        let line = |name: &str, r: &TraceRun, note: &str| {
+            println!(
+                "{:<44} {:>12.0} tok/s   ttft p50 {:>6.2} ms   ({} traces, {note})",
+                name,
+                r.tps,
+                percentile(&r.ttfts, 50.0) * 1e3,
+                r.traces,
+            );
+        };
+        line("request tracing (gateway, sim)", &off, "tracing off");
+        line("request tracing (gateway, sim)", &on, "tracing on, sample 1.0");
+        assert_eq!(off.traces, 0, "tracing off must record nothing");
+        assert!(
+            on.traces >= REQS,
+            "tracing on must record every request ({} of {REQS})",
+            on.traces
+        );
+        assert!(
+            on.tps >= 0.95 * off.tps,
+            "tracing must cost under 5% throughput \
+             ({:.0} vs {:.0} tok/s)",
+            on.tps,
+            off.tps
+        );
+
+        let phases = Json::obj(
+            on.phase_mean_s
+                .iter()
+                .map(|(name, mean, n)| {
+                    (
+                        *name,
+                        Json::obj(vec![
+                            ("mean_s", Json::num(*mean)),
+                            ("spans", Json::num(*n as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let block = |r: &TraceRun| {
+            Json::obj(vec![
+                ("tok_s", Json::num(r.tps)),
+                ("ttft_p50_s", Json::num(percentile(&r.ttfts, 50.0))),
+                ("ttft_p95_s", Json::num(percentile(&r.ttfts, 95.0))),
+                ("traces_recorded", Json::num(r.traces as f64)),
+            ])
+        };
+        let report = Json::obj(vec![
+            ("bench", Json::str("trace")),
+            (
+                "scenario",
+                Json::obj(vec![
+                    ("requests", Json::num(REQS as f64)),
+                    ("max_tokens", Json::num(MAX_NEW as f64)),
+                    ("repeats", Json::num(REPEATS as f64)),
+                ]),
+            ),
+            ("tracing_off", block(&off)),
+            ("tracing_on", block(&on)),
+            ("ttft_phase_decomposition", phases),
+            ("overhead_ratio", Json::num(on.tps / off.tps.max(1e-9))),
+        ]);
+        std::fs::write("BENCH_9.json", report.dump()).expect("write BENCH_9.json");
+        println!(
+            "wrote BENCH_9.json (tracing-on throughput {:.1}% of off)",
+            100.0 * on.tps / off.tps.max(1e-9)
+        );
+    }
+
     // Live PJRT path (needs artifacts).
     let artifacts = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
     if std::path::Path::new(&format!("{artifacts}/manifest.json")).exists() {

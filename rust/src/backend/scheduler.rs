@@ -298,6 +298,9 @@ pub struct Finished<T> {
     pub payload: T,
     pub tokens: Vec<i32>,
     pub prompt_tokens: usize,
+    /// Batched verify steps this sequence participated in (0 when it
+    /// decoded plain) — the gateway's `spec_verify` trace span count.
+    pub spec_steps: u32,
 }
 
 /// Result of one scheduler tick.
@@ -322,6 +325,8 @@ struct Slot<S, T> {
     seq: S,
     payload: T,
     cancel: CancelToken,
+    /// Batched verify steps this sequence participated in.
+    spec_steps: u32,
 }
 
 /// A request admitted but not yet prefilled (waiting for a prefill rung
@@ -654,6 +659,7 @@ impl<E: StepEngine, T> Scheduler<E, T> {
                 self.stats.completed += 1;
                 finished.push(Finished {
                     prompt_tokens: slot.seq.prompt_tokens(),
+                    spec_steps: slot.spec_steps,
                     tokens: slot.seq.into_tokens(),
                     payload: slot.payload,
                 });
@@ -760,7 +766,8 @@ impl<E: StepEngine, T> Scheduler<E, T> {
         let _ = self.kv.append_token(id);
         self.stats.prefills += 1;
         tick.prefilled += 1;
-        let mut slot = Slot { id, seq, payload: p.payload, cancel: p.cancel };
+        let mut slot =
+            Slot { id, seq, payload: p.payload, cancel: p.cancel, spec_steps: 0 };
         on_prefilled(&mut slot.payload);
         self.slots.push(slot);
     }
@@ -1052,6 +1059,15 @@ impl<E: StepEngine, T> Scheduler<E, T> {
             self.stats.batched_steps += 1;
         }
         self.stats.batch_hist.observe(b as f64);
+        if speculate {
+            // Per-sequence verify participation — surfaces as the
+            // `spec_verify` span count on the request's trace.
+            for (i, slot) in self.slots.iter_mut().enumerate() {
+                if selected[i] {
+                    slot.spec_steps += 1;
+                }
+            }
+        }
         self.retire(&mut tick.finished);
         tick.stepped = b;
         Ok(tick)

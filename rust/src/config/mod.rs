@@ -394,6 +394,42 @@ impl Default for AdmissionConfig {
     }
 }
 
+/// Per-request tracing (`pool.trace.*`): typed spans across router →
+/// wire → scheduler, the `/debug/traces` flight recorder, and the
+/// `ps_span_seconds` latency-breakdown histograms. Off by default —
+/// disabled reproduces the untraced dispatch (wire frames included)
+/// bit-for-bit.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Master switch. `false` = no trace contexts are minted, jobs carry
+    /// a null trace pointer, and wire frames omit every trace field.
+    pub enabled: bool,
+    /// Flight-recorder capacity: how many completed traces
+    /// `/debug/traces` retains (newest-first ring).
+    pub ring_size: usize,
+    /// Fraction of requests traced in [0, 1]. Sampling only gates trace
+    /// *recording* — never the token stream — and is deterministic in
+    /// the trace id. Requests arriving with a `traceparent` header are
+    /// always traced.
+    pub sample_rate: f64,
+    /// Structured one-line JSON access log per completed/failed request,
+    /// written through a buffered non-blocking writer. `""` (default) =
+    /// off; `"stderr"` = the gateway's stderr; anything else = a file
+    /// path appended to.
+    pub access_log: String,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            ring_size: crate::telemetry::trace::DEFAULT_RING_SIZE,
+            sample_rate: 1.0,
+            access_log: String::new(),
+        }
+    }
+}
+
 /// Tier-name → tier-index for chain route parsing (mirrors
 /// `models::Tier::name` without a dependency edge).
 fn chain_tier_index(s: &str) -> Option<usize> {
@@ -502,6 +538,9 @@ pub struct PoolConfig {
     /// Per-route fallback chains (`pool.chains.*`): escalate/degrade
     /// re-dispatch under bounded retry budgets. Empty by default.
     pub chains: ChainsConfig,
+    /// Per-request tracing (`pool.trace.*`): spans, flight recorder,
+    /// latency-breakdown histograms, access log. Off by default.
+    pub trace: TraceConfig,
     /// How often the pool scaler re-plans per-tier active replicas from
     /// queue depth + slot occupancy.
     pub scale_interval_s: f64,
@@ -545,6 +584,7 @@ impl Default for PoolConfig {
             speculative: SpeculativeConfig::default(),
             admission: AdmissionConfig::default(),
             chains: ChainsConfig::default(),
+            trace: TraceConfig::default(),
             scale_interval_s: 2.0,
             health_deadline_s: 3.0,
             substrate: SubstrateKind::Thread,
@@ -797,6 +837,17 @@ impl Config {
                     ch.f64_or("score_floor", self.pool.chains.score_floor);
                 self.pool.chains.degrade =
                     ch.bool_or("degrade", self.pool.chains.degrade);
+            }
+            if let Some(t) = p.get("trace") {
+                self.pool.trace.enabled =
+                    t.bool_or("enabled", self.pool.trace.enabled);
+                self.pool.trace.ring_size =
+                    t.usize_or("ring_size", self.pool.trace.ring_size);
+                self.pool.trace.sample_rate =
+                    t.f64_or("sample_rate", self.pool.trace.sample_rate);
+                if let Some(a) = t.get("access_log").and_then(Json::as_str) {
+                    self.pool.trace.access_log = a.to_string();
+                }
             }
             self.pool.scale_interval_s =
                 p.f64_or("scale_interval_s", self.pool.scale_interval_s);
@@ -1144,6 +1195,27 @@ mod tests {
         assert!(c.overlay(&bad).is_err(), "self-targeting route must error");
         let bad = Json::parse(r#"{"pool":{"chains":{"medium":[2]}}}"#).unwrap();
         assert!(c.overlay(&bad).is_err(), "non-string route entry must error");
+    }
+
+    #[test]
+    fn overlay_trace_section() {
+        let mut c = Config::default();
+        assert!(!c.pool.trace.enabled, "tracing defaults off");
+        assert_eq!(c.pool.trace.ring_size, 256);
+        assert!((c.pool.trace.sample_rate - 1.0).abs() < 1e-12);
+        assert!(c.pool.trace.access_log.is_empty());
+        let j = Json::parse(
+            r#"{"pool":{"trace":{"enabled":true,"ring_size":64,
+                "sample_rate":0.5,"access_log":"stderr"}}}"#,
+        )
+        .unwrap();
+        c.overlay(&j).unwrap();
+        assert!(c.pool.trace.enabled);
+        assert_eq!(c.pool.trace.ring_size, 64);
+        assert!((c.pool.trace.sample_rate - 0.5).abs() < 1e-12);
+        assert_eq!(c.pool.trace.access_log, "stderr");
+        // untouched pool knobs keep defaults
+        assert_eq!(c.pool.kv_blocks, 128);
     }
 
     #[test]

@@ -248,6 +248,7 @@ mod tests {
             cost_usd: 0.01,
             in_tokens: 60,
             prefix_cached_tokens: 0,
+            spans: Vec::new(),
         }
     }
 

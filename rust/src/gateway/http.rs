@@ -250,12 +250,28 @@ pub fn http_request_full(
     path: &str,
     body: Option<&str>,
 ) -> Result<(u16, Vec<(String, String)>, String)> {
+    http_request_with_headers(port, method, path, &[], body)
+}
+
+/// Full-control variant: send extra request headers (`traceparent` and
+/// friends) alongside the standard set.
+pub fn http_request_with_headers(
+    port: u16,
+    method: &str,
+    path: &str,
+    extra_headers: &[(&str, &str)],
+    body: Option<&str>,
+) -> Result<(u16, Vec<(String, String)>, String)> {
     let mut stream = TcpStream::connect(("127.0.0.1", port))?;
     let body = body.unwrap_or("");
+    let mut extra = String::new();
+    for (k, v) in extra_headers {
+        extra.push_str(&format!("{k}: {v}\r\n"));
+    }
     write!(
         stream,
         "{method} {path} HTTP/1.1\r\nhost: localhost\r\n\
-         content-length: {}\r\ncontent-type: application/json\r\n\r\n{body}",
+         content-length: {}\r\ncontent-type: application/json\r\n{extra}\r\n{body}",
         body.len()
     )?;
     let mut reader = BufReader::new(&mut stream);

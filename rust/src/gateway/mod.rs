@@ -21,7 +21,9 @@
 //!
 //! Requests: `POST /v1/completions {"prompt": "...", "max_tokens": N}` →
 //! routed by the hybrid router, executed on the tier the matrix picks,
-//! answered with token ids + timing. `GET /healthz`, `GET /metrics`.
+//! answered with token ids + timing. `GET /healthz`, `GET /readyz`,
+//! `GET /metrics`, `GET /debug/traces` (the flight recorder ring, when
+//! `pool.trace.enabled`).
 
 pub mod http;
 pub(crate) mod pool;
@@ -50,6 +52,10 @@ use crate::router::keyword::KeywordRouter;
 use crate::router::{Classification, Router};
 use crate::runtime::Runtime;
 use crate::scoring::Weights;
+use crate::telemetry::trace::{
+    parse_traceparent, AccessLog, FlightRecorder, SpanKind, TraceCtx,
+    TraceRecord, TraceState,
+};
 use crate::telemetry::Histogram;
 use crate::substrate::nodes::NodeRegistry;
 use crate::substrate::remote::{ProcessSubstrate, WorkerSpec};
@@ -174,6 +180,9 @@ struct Job {
     /// when the caller set none) — stamped at submit so queue time
     /// counts against it.
     deadline_abs_s: f64,
+    /// Span accumulator when this request is traced (`None` = off: a
+    /// null pointer rides along and no tracing work happens anywhere).
+    trace: Option<Box<TraceState>>,
     cancel: CancelToken,
     reply: OneShot<Result<LiveResponse, CompletionError>>,
 }
@@ -210,6 +219,9 @@ pub struct CompletionRequest {
     /// `Standard`; inert while admission is disabled.
     pub priority: Priority,
     pub cancel: Option<CancelToken>,
+    /// Inbound trace context (parsed from a W3C `traceparent`, or set
+    /// directly). `None` lets the gateway mint one when tracing is on.
+    pub trace: Option<TraceCtx>,
 }
 
 impl CompletionRequest {
@@ -221,6 +233,7 @@ impl CompletionRequest {
             deadline_s: None,
             priority: Priority::default(),
             cancel: None,
+            trace: None,
         }
     }
 
@@ -246,6 +259,18 @@ impl CompletionRequest {
 
     pub fn cancel_token(mut self, token: CancelToken) -> CompletionRequest {
         self.cancel = Some(token);
+        self
+    }
+
+    /// Join an upstream trace by W3C `traceparent` header. Malformed
+    /// headers are ignored (the gateway mints its own id instead).
+    pub fn traceparent(mut self, header: &str) -> CompletionRequest {
+        self.trace = parse_traceparent(header);
+        self
+    }
+
+    pub fn trace_ctx(mut self, ctx: TraceCtx) -> CompletionRequest {
+        self.trace = Some(ctx);
         self
     }
 }
@@ -353,6 +378,19 @@ pub struct GatewayMetrics {
     /// Formed-batch histogram: one counter per compiled rung, in
     /// [`DECODE_BATCHES`] order.
     pub batch_counts: [AtomicU64; N_DECODE_BATCHES],
+    /// Completed-trace ring behind `/debug/traces` (`pool.trace.*`;
+    /// disabled by default — `record` is a no-op until configured).
+    pub recorder: FlightRecorder,
+    /// Structured per-request JSON log (`pool.trace.access_log`).
+    pub access_log: AccessLog,
+    /// Latency-breakdown histograms fed by the span stream,
+    /// `[span kind][tier]` (`ps_span_seconds{span,tier,le}`). Only
+    /// traced requests observe, so the family is quiet with tracing off.
+    pub span_hist: SpanHists,
+    /// Per-tier time-to-first-token histograms (`ps_ttft_seconds`).
+    pub ttft_hist: [TtftHist; 3],
+    /// Per-tier inter-token-latency histograms (`ps_tpot_seconds`).
+    pub tpot_hist: [TpotHist; 3],
 }
 
 /// A mutex-wrapped queue-wait [`Histogram`] with overload-relevant
@@ -364,6 +402,47 @@ impl Default for WaitHist {
     fn default() -> WaitHist {
         WaitHist(Mutex::new(Histogram::new(&[
             0.001, 0.005, 0.02, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0,
+        ])))
+    }
+}
+
+/// `[span kind][tier]` span-duration histograms, newtyped so
+/// `GatewayMetrics` keeps deriving `Default`.
+pub struct SpanHists(pub [[Mutex<Histogram>; 3]; SpanKind::ALL.len()]);
+
+impl Default for SpanHists {
+    fn default() -> SpanHists {
+        SpanHists(std::array::from_fn(|_| {
+            std::array::from_fn(|_| {
+                Mutex::new(Histogram::new(&[
+                    0.001, 0.005, 0.02, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0,
+                    10.0,
+                ]))
+            })
+        }))
+    }
+}
+
+/// Time-to-first-token histogram (5 ms … 10 s — queue wait dominates the
+/// tail, so the upper bounds match the queue-wait histogram's).
+pub struct TtftHist(pub Mutex<Histogram>);
+
+impl Default for TtftHist {
+    fn default() -> TtftHist {
+        TtftHist(Mutex::new(Histogram::new(&[
+            0.005, 0.02, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0,
+        ])))
+    }
+}
+
+/// Inter-token-latency histogram (0.5 ms … 1 s — decode steps are short;
+/// the resolution sits where per-token latency actually lands).
+pub struct TpotHist(pub Mutex<Histogram>);
+
+impl Default for TpotHist {
+    fn default() -> TpotHist {
+        TpotHist(Mutex::new(Histogram::new(&[
+            0.0005, 0.001, 0.002, 0.005, 0.01, 0.02, 0.05, 0.1, 0.25, 1.0,
         ])))
     }
 }
@@ -398,6 +477,65 @@ impl GatewayMetrics {
             .unwrap()
             .observe(wait_s.max(0.0));
     }
+
+    /// Record one completed request's time to first token.
+    pub fn observe_ttft(&self, tier: usize, s: f64) {
+        self.ttft_hist[tier.min(2)].0.lock().unwrap().observe(s.max(0.0));
+    }
+
+    /// Record one completed request's mean inter-token latency.
+    pub fn observe_tpot(&self, tier: usize, s: f64) {
+        self.tpot_hist[tier.min(2)].0.lock().unwrap().observe(s.max(0.0));
+    }
+
+    /// The single terminal step every resolved request takes, traced or
+    /// not: one access-log line when the log is on, and — when the
+    /// request carried a trace — span-histogram observations plus a
+    /// finished [`TraceRecord`] in the flight recorder ring. With
+    /// tracing and the access log both off this is two relaxed atomic
+    /// loads and a null-pointer check.
+    pub fn finish_request(
+        &self,
+        trace: Option<Box<TraceState>>,
+        tier: Tier,
+        priority: Priority,
+        outcome: &'static str,
+        now_s: f64,
+        tokens: usize,
+    ) {
+        if self.access_log.enabled() {
+            let mut kv = vec![
+                ("tier", Json::str(tier.name())),
+                ("priority", Json::str(priority.name())),
+                ("outcome", Json::str(outcome)),
+                ("tokens", Json::num(tokens as f64)),
+                ("ts", Json::num(now_s)),
+            ];
+            if let Some(st) = trace.as_deref() {
+                kv.push(("trace_id", Json::str(st.ctx.id_hex())));
+                kv.push(("total_s", Json::num((now_s - st.start_s).max(0.0))));
+            }
+            self.access_log.write_line(Json::obj(kv).dump());
+        }
+        let Some(st) = trace else { return };
+        let st = *st;
+        for s in &st.spans {
+            self.span_hist.0[s.kind.index()][tier.index()]
+                .lock()
+                .unwrap()
+                .observe(s.dur_s());
+        }
+        self.recorder.record(TraceRecord {
+            trace_id: st.ctx.trace_id,
+            tier: tier.name(),
+            priority: priority.name(),
+            outcome,
+            start_s: st.start_s,
+            total_s: (now_s - st.start_s).max(0.0),
+            tokens,
+            spans: st.spans,
+        });
+    }
 }
 
 /// The live serving stack: hybrid router + a continuous-batching engine
@@ -406,6 +544,9 @@ pub struct LiveStack {
     jobs: Channel<Job>,
     pub metrics: Arc<GatewayMetrics>,
     shared: Arc<PoolShared>,
+    /// Pool configuration view — per-tier readiness (`/readyz`) needs
+    /// the configured replica budgets.
+    pool: PoolConfig,
     /// Multi-host node plane, when `pool.nodes` is configured on the
     /// process substrate (per-node gauges at `/metrics`).
     nodes: Option<Arc<NodeRegistry>>,
@@ -639,6 +780,18 @@ impl LiveStack {
         RF: FnOnce() -> std::result::Result<Box<dyn Router>, String> + Send + 'static,
     {
         let nodes = substrate.node_registry();
+        let tr = &cfg.pool.trace;
+        if tr.enabled {
+            // Wall-clock nanos perturb minted trace ids so concurrent
+            // gateways don't collide; minting stays deterministic within
+            // one stack.
+            let seed = std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_secs() ^ d.subsec_nanos() as u64)
+                .unwrap_or(0x5BEC);
+            metrics.recorder.configure(true, tr.ring_size, tr.sample_rate, seed);
+        }
+        metrics.access_log.configure(&tr.access_log);
         let requested: usize = cfg.pool.replicas.iter().sum();
         let mut provisioned = 0usize;
         for ti in 0..3 {
@@ -713,6 +866,7 @@ impl LiveStack {
             jobs,
             metrics,
             shared,
+            pool: cfg.pool.clone(),
             nodes,
             router: Some(router_handle),
             request_timeout_s,
@@ -742,10 +896,16 @@ impl LiveStack {
         };
         // Anchor the absolute deadline at submit, not at routing: time
         // spent queued in the gateway counts against it.
-        let deadline_abs_s = if explicit_deadline {
-            self.shared.epoch.elapsed().as_secs_f64() + timeout_s
+        let submit_s = self.shared.epoch.elapsed().as_secs_f64();
+        let deadline_abs_s =
+            if explicit_deadline { submit_s + timeout_s } else { f64::INFINITY };
+        // Trace admission: honor a caller-provided context, else mint
+        // one. The sampling decision is deterministic in the trace id.
+        let trace = if self.metrics.recorder.enabled() {
+            let ctx = req.trace.unwrap_or_else(|| self.metrics.recorder.mint());
+            ctx.sampled.then(|| Box::new(TraceState::new(ctx, submit_s)))
         } else {
-            f64::INFINITY
+            None
         };
         let job = Job {
             prompt: req.prompt,
@@ -753,6 +913,7 @@ impl LiveStack {
             affinity_key: req.affinity_key,
             priority: req.priority,
             deadline_abs_s,
+            trace,
             cancel: cancel.clone(),
             reply: reply.clone(),
         };
@@ -779,6 +940,20 @@ impl LiveStack {
     /// Positional back-compat wrapper over [`Self::complete_request`].
     pub fn complete(&self, prompt: &str, max_tokens: usize) -> Result<LiveResponse> {
         self.complete_request(CompletionRequest::new(prompt).max_tokens(max_tokens))
+    }
+
+    /// Resolve the trace context an inbound request will carry: parse
+    /// the caller's `traceparent` when present, else mint one. `None`
+    /// when tracing is off or the request is unsampled — the HTTP layer
+    /// uses this to echo `x-trace-id` before dispatching.
+    pub fn trace_ctx(&self, traceparent: Option<&str>) -> Option<TraceCtx> {
+        if !self.metrics.recorder.enabled() {
+            return None;
+        }
+        let ctx = traceparent
+            .and_then(parse_traceparent)
+            .unwrap_or_else(|| self.metrics.recorder.mint());
+        ctx.sampled.then_some(ctx)
     }
 
     /// Live (provisioned) replicas across all tiers — the scale-to-zero
@@ -1025,6 +1200,68 @@ impl LiveStack {
                 ));
             }
         }
+        // Per-tier TTFT / TPOT histograms — always on, quiet until a
+        // tier completes its first request.
+        for (ti, tier) in Tier::ALL.iter().enumerate() {
+            let h = m.ttft_hist[ti].0.lock().unwrap();
+            if h.count() == 0 {
+                continue;
+            }
+            let mut cum = 0u64;
+            for (le, n) in h.buckets() {
+                cum += n;
+                let le = if le.is_finite() { format!("{le}") } else { "+Inf".into() };
+                out.push((
+                    format!("ps_ttft_seconds{{tier=\"{}\",le=\"{le}\"}}", tier.name()),
+                    cum as f64,
+                ));
+            }
+        }
+        for (ti, tier) in Tier::ALL.iter().enumerate() {
+            let h = m.tpot_hist[ti].0.lock().unwrap();
+            if h.count() == 0 {
+                continue;
+            }
+            let mut cum = 0u64;
+            for (le, n) in h.buckets() {
+                cum += n;
+                let le = if le.is_finite() { format!("{le}") } else { "+Inf".into() };
+                out.push((
+                    format!("ps_tpot_seconds{{tier=\"{}\",le=\"{le}\"}}", tier.name()),
+                    cum as f64,
+                ));
+            }
+        }
+        // Latency-breakdown histograms from the span stream. Quiet with
+        // tracing off: only traced requests observe spans, so a plain
+        // pool exports no `ps_span_seconds` series at all.
+        for kind in SpanKind::ALL {
+            for (ti, tier) in Tier::ALL.iter().enumerate() {
+                let h = m.span_hist.0[kind.index()][ti].lock().unwrap();
+                if h.count() == 0 {
+                    continue;
+                }
+                let mut cum = 0u64;
+                for (le, n) in h.buckets() {
+                    cum += n;
+                    let le =
+                        if le.is_finite() { format!("{le}") } else { "+Inf".into() };
+                    out.push((
+                        format!(
+                            "ps_span_seconds{{span=\"{}\",tier=\"{}\",le=\"{le}\"}}",
+                            kind.name(),
+                            tier.name()
+                        ),
+                        cum as f64,
+                    ));
+                }
+            }
+        }
+        let trace_dropped = m.recorder.dropped.load(Ordering::Relaxed)
+            + m.access_log.dropped.load(Ordering::Relaxed);
+        if trace_dropped > 0 {
+            out.push(("ps_trace_dropped_total".to_string(), trace_dropped as f64));
+        }
         if let Some(reg) = &self.nodes {
             out.push(("ps_node_lost_total".to_string(), reg.lost_total() as f64));
             // One pass per family: the Prometheus exposition format
@@ -1167,8 +1404,14 @@ fn affinity_place(
     metrics: &GatewayMetrics,
     ti: usize,
     affinity_key: Option<&str>,
+    now: f64,
     mut tj: TierJob,
 ) -> Option<TierJob> {
+    if let Some(st) = tj.trace.as_deref_mut() {
+        // The placement decision itself (scoring + queue pick) —
+        // normally sub-millisecond.
+        st.phase(SpanKind::AffinityPlace, now);
+    }
     let aff = &pool.affinity;
     let cells: Vec<Arc<ReplicaCell>> = shared.cells[ti]
         .lock()
@@ -1240,6 +1483,11 @@ fn affinity_place(
                             .lock()
                             .unwrap()
                             .push((tip, Arc::clone(&cells[tix])));
+                        if let Some(st) = tj.trace.as_deref_mut() {
+                            // Marker: a prefix transfer was brokered for
+                            // this job (`n` = matched chain blocks).
+                            st.phase_n(SpanKind::KvTransfer, now, len);
+                        }
                         match cells[tix].direct.try_send(tj) {
                             Ok(()) => {
                                 metrics
@@ -1395,7 +1643,7 @@ impl AdmissionGate {
     fn admit(
         &mut self,
         ti: usize,
-        tj: TierJob,
+        mut tj: TierJob,
         now: f64,
         metrics: &GatewayMetrics,
         shared: &PoolShared,
@@ -1411,6 +1659,9 @@ impl AdmissionGate {
                     metrics
                         .admission_rejected_deadline
                         .fetch_add(1, Ordering::Relaxed);
+                    if let Some(st) = tj.trace.as_deref_mut() {
+                        st.phase(SpanKind::Shed, now);
+                    }
                     tj.reply.put(Err(CompletionError::new(
                         FailureKind::Shed,
                         format!(
@@ -1418,6 +1669,14 @@ impl AdmissionGate {
                         ),
                     )
                     .retry_after(self.retry_after(ti, ahead))));
+                    metrics.finish_request(
+                        tj.trace.take(),
+                        tj.tier,
+                        tj.priority,
+                        "shed",
+                        now,
+                        0,
+                    );
                     return;
                 }
             }
@@ -1425,11 +1684,22 @@ impl AdmissionGate {
         if backlog >= self.cap {
             metrics.rejected.fetch_add(1, Ordering::Relaxed);
             metrics.admission_rejected_backlog.fetch_add(1, Ordering::Relaxed);
+            if let Some(st) = tj.trace.as_deref_mut() {
+                st.phase(SpanKind::Shed, now);
+            }
             tj.reply.put(Err(CompletionError::new(
                 FailureKind::QueueFull,
                 "tier queue full (backpressure)",
             )
             .retry_after(self.retry_after(ti, backlog))));
+            metrics.finish_request(
+                tj.trace.take(),
+                tj.tier,
+                tj.priority,
+                "queue_full",
+                now,
+                0,
+            );
             return;
         }
         self.buf[ti][tj.priority.index()].push_back(tj);
@@ -1443,15 +1713,26 @@ impl AdmissionGate {
             else {
                 break;
             };
-            let victim = self.buf[ti][pi].pop_back().expect("class non-empty");
+            let mut victim = self.buf[ti][pi].pop_back().expect("class non-empty");
             metrics.shed_total[pi][ti].fetch_add(1, Ordering::Relaxed);
             pressure[ti] += 1.0;
             let hint = self.retry_after(ti, self.buffered(ti));
+            if let Some(st) = victim.trace.as_deref_mut() {
+                st.phase(SpanKind::Shed, now);
+            }
             victim.reply.put(Err(CompletionError::new(
                 FailureKind::Shed,
                 "shed: tier over watermark",
             )
             .retry_after(hint)));
+            metrics.finish_request(
+                victim.trace.take(),
+                victim.tier,
+                victim.priority,
+                "shed",
+                now,
+                0,
+            );
         }
     }
 
@@ -1476,7 +1757,12 @@ impl AdmissionGate {
                     break;
                 }
                 let Some(pi) = self.next_class(ti) else { break };
-                let tj = self.buf[ti][pi].pop_front().expect("class non-empty");
+                let mut tj = self.buf[ti][pi].pop_front().expect("class non-empty");
+                if let Some(st) = tj.trace.as_deref_mut() {
+                    // Residence in the priority buffers ends here —
+                    // whatever comes next (dispatch, expiry, cancel).
+                    st.phase(SpanKind::GateBuffered, now);
+                }
                 if now > tj.deadline_abs_s {
                     // Expired while buffered — the same dead-work drop
                     // the replicas apply at dequeue (expiry outranks
@@ -1486,10 +1772,26 @@ impl AdmissionGate {
                         FailureKind::DeadlineExpired,
                         "deadline expired before dispatch",
                     )));
+                    metrics.finish_request(
+                        tj.trace.take(),
+                        tj.tier,
+                        tj.priority,
+                        "deadline_expired",
+                        now,
+                        0,
+                    );
                     continue;
                 }
                 if tj.cancel.is_cancelled() {
                     metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+                    metrics.finish_request(
+                        tj.trace.take(),
+                        tj.tier,
+                        tj.priority,
+                        "cancelled",
+                        now,
+                        0,
+                    );
                     continue;
                 }
                 match shared.queues[ti].try_send(tj) {
@@ -1556,14 +1858,22 @@ impl AdmissionGate {
     /// Teardown: every still-buffered job is answered the way draining
     /// replicas answer theirs — an orderly shutdown, not a serving
     /// error.
-    fn fail_all_shutdown(&mut self) {
+    fn fail_all_shutdown(&mut self, metrics: &GatewayMetrics, now: f64) {
         for tier in self.buf.iter_mut() {
             for q in tier.iter_mut() {
-                for tj in q.drain(..) {
+                for mut tj in q.drain(..) {
                     tj.reply.put(Err(CompletionError::new(
                         FailureKind::Shutdown,
                         "gateway shutting down",
                     )));
+                    metrics.finish_request(
+                        tj.trace.take(),
+                        tj.tier,
+                        tj.priority,
+                        "shutdown",
+                        now,
+                        0,
+                    );
                 }
             }
         }
@@ -1604,6 +1914,11 @@ struct PendingChain {
     deadline_abs_s: f64,
     complexity: usize,
     confidence: f64,
+    /// Shared trace id across every hop (each hop runs its own span
+    /// timeline; the `chain_hop{n}` marker links them).
+    trace: Option<TraceCtx>,
+    /// Hops dispatched so far — the `n` on the next hop's marker.
+    hop_n: u32,
 }
 
 /// Pick the next chain hop: the first unconsumed escalation target with
@@ -1678,6 +1993,16 @@ fn chain_dispatch(
     tier_model: &[&'static str; 3],
 ) -> bool {
     let hop: OneShot<Result<LiveResponse, CompletionError>> = OneShot::new();
+    // Each hop gets a fresh timeline under the shared trace id, opened
+    // with a zero-length `chain_hop{n}` marker — the flight recorder
+    // then holds one record per hop, all filterable by that id.
+    pc.hop_n += 1;
+    let hop_n = pc.hop_n;
+    let trace = pc.trace.map(|ctx| {
+        let mut st = Box::new(TraceState::new(ctx, now));
+        st.phase_n(SpanKind::ChainHop, now, hop_n);
+        st
+    });
     let tj = TierJob {
         prompt: pc.prompt.clone(),
         max_tokens: pc.max_tokens,
@@ -1693,6 +2018,7 @@ fn chain_dispatch(
         confidence: pc.confidence,
         priority: pc.priority,
         deadline_abs_s: pc.deadline_abs_s,
+        trace,
     };
     match shared.queues[t].try_send(tj) {
         Ok(()) => {
@@ -1869,7 +2195,7 @@ fn router_loop<S: PoolBackend>(
         let job =
             jobs.recv_timeout(Duration::from_millis(if busy { 5 } else { 100 }));
         let now = shared.epoch.elapsed().as_secs_f64();
-        if let Some(job) = job {
+        if let Some(mut job) = job {
             if job.cancel.is_cancelled() {
                 // The caller gave up while the job sat in the gateway
                 // queue; don't spend routing on it.
@@ -1893,6 +2219,12 @@ fn router_loop<S: PoolBackend>(
                         // registry, so Alg. 2 cannot select one here.
                         let ti = tier.index();
                         metrics.fresh_jobs.fetch_add(1, Ordering::Relaxed);
+                        let mut trace = job.trace.take();
+                        if let Some(st) = trace.as_deref_mut() {
+                            // Admission + routing closed: a tier is
+                            // chosen; everything before this is `admit`.
+                            st.phase(SpanKind::Admit, now);
+                        }
                         // A configured chain for this route parks the
                         // caller's reply in the chain machine and gives
                         // the first hop a private rendezvous.
@@ -1917,6 +2249,8 @@ fn router_loop<S: PoolBackend>(
                                 deadline_abs_s: job.deadline_abs_s,
                                 complexity: class.complexity,
                                 confidence: class.confidence,
+                                trace: trace.as_deref().map(|st| st.ctx),
+                                hop_n: 0,
                             });
                             reply = hop;
                         }
@@ -1935,6 +2269,7 @@ fn router_loop<S: PoolBackend>(
                             confidence: class.confidence,
                             priority: job.priority,
                             deadline_abs_s: job.deadline_abs_s,
+                            trace,
                         };
                         // Cache-affinity placement first (off = the
                         // exact legacy tier fan-out below, bit for bit).
@@ -1945,6 +2280,7 @@ fn router_loop<S: PoolBackend>(
                                 &metrics,
                                 ti,
                                 job.affinity_key.as_deref(),
+                                now,
                                 tj,
                             )
                         } else {
@@ -1987,12 +2323,23 @@ fn router_loop<S: PoolBackend>(
                                         );
                                     }
                                 }
-                                Err(tj) => {
+                                Err(mut tj) => {
                                     metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                                    if let Some(st) = tj.trace.as_deref_mut() {
+                                        st.phase(SpanKind::Shed, now);
+                                    }
                                     tj.reply.put(Err(CompletionError::new(
                                         FailureKind::QueueFull,
                                         "tier queue full (backpressure)",
                                     )));
+                                    metrics.finish_request(
+                                        tj.trace.take(),
+                                        tj.tier,
+                                        tj.priority,
+                                        "queue_full",
+                                        now,
+                                        0,
+                                    );
                                 }
                             },
                         }
@@ -2163,60 +2510,143 @@ fn router_loop<S: PoolBackend>(
             }
         }
     }
-    gate.fail_all_shutdown();
+    gate.fail_all_shutdown(&metrics, shared.epoch.elapsed().as_secs_f64());
 }
 
 /// Start the HTTP gateway over a live stack. Returns the bound server.
 pub fn serve_http(stack: Arc<LiveStack>, port: u16, threads: usize) -> Result<http::HttpServer> {
     http::HttpServer::start(port, threads, move |req| {
-        match (req.method.as_str(), req.path.as_str()) {
+        let (path, query) =
+            req.path.split_once('?').unwrap_or((req.path.as_str(), ""));
+        match (req.method.as_str(), path) {
             ("GET", "/healthz") => {
                 http::Response::new(200, "text/plain", b"ok".to_vec())
             }
+            ("GET", "/readyz") => handle_readyz(&stack),
+            ("GET", "/debug/traces") => handle_traces(&stack, query),
             ("GET", "/metrics") => {
                 let body =
                     crate::telemetry::export_prometheus(&stack.metrics_snapshot());
                 http::Response::new(200, "text/plain", body.into_bytes())
             }
-            ("POST", "/v1/completions") => match handle_completion(&stack, req) {
-                Ok(body) => {
-                    http::Response::new(200, "application/json", body.into_bytes())
-                }
-                Err(e) => {
-                    // Typed failures map to honest status codes — 429
-                    // for shed/queue-full (with a Retry-After hint from
-                    // the observed drain rate), 503 for lost capacity,
-                    // 504 for deadlines — instead of a blanket 500.
-                    let (status, retry_after) =
-                        match e.downcast_ref::<CompletionError>() {
-                            Some(ce) => (ce.kind.http_status(), ce.retry_after_s),
-                            None => (500, None),
-                        };
-                    let body = Json::obj(vec![(
-                        "error",
-                        Json::str(format!("{e:#}")),
-                    )])
-                    .dump()
-                    .into_bytes();
-                    let mut resp =
-                        http::Response::new(status, "application/json", body);
-                    if let Some(s) = retry_after {
-                        resp = resp
-                            .header("Retry-After", format!("{}", s.ceil().max(1.0)));
+            ("POST", "/v1/completions") => {
+                // Resolve the trace context here so the id can be echoed
+                // on every response, success or failure.
+                let ctx = stack.trace_ctx(req.header("traceparent"));
+                let resp = match handle_completion(&stack, req, ctx) {
+                    Ok(body) => http::Response::new(
+                        200,
+                        "application/json",
+                        body.into_bytes(),
+                    ),
+                    Err(e) => {
+                        // Typed failures map to honest status codes — 429
+                        // for shed/queue-full (with a Retry-After hint from
+                        // the observed drain rate), 503 for lost capacity,
+                        // 504 for deadlines — instead of a blanket 500.
+                        let (status, retry_after) =
+                            match e.downcast_ref::<CompletionError>() {
+                                Some(ce) => (ce.kind.http_status(), ce.retry_after_s),
+                                None => (500, None),
+                            };
+                        let body = Json::obj(vec![(
+                            "error",
+                            Json::str(format!("{e:#}")),
+                        )])
+                        .dump()
+                        .into_bytes();
+                        let mut resp =
+                            http::Response::new(status, "application/json", body);
+                        if let Some(s) = retry_after {
+                            resp = resp
+                                .header("Retry-After", format!("{}", s.ceil().max(1.0)));
+                        }
+                        resp
                     }
-                    resp
+                };
+                match ctx {
+                    Some(c) => resp.header("x-trace-id", c.id_hex()),
+                    None => resp,
                 }
-            },
+            }
             _ => http::Response::new(404, "text/plain", b"not found".to_vec()),
         }
     })
 }
 
-fn handle_completion(stack: &LiveStack, req: &http::Request) -> Result<String> {
+/// `/readyz`: per-tier readiness. A tier is ready when it has at least
+/// one Ready replica, is configured away (zero replica budget), or is
+/// idle-parked by scale-to-zero with nothing queued; 503 until every
+/// tier is.
+fn handle_readyz(stack: &LiveStack) -> http::Response {
+    let mut tiers = Vec::new();
+    let mut all = true;
+    for (ti, tier) in Tier::ALL.iter().enumerate() {
+        let ready = stack.shared.ready_count(ti);
+        let queued = stack.shared.queues[ti].len();
+        let ok = stack.pool.replicas[ti] == 0
+            || ready > 0
+            || (stack.shared.live_count(ti) == 0 && queued == 0);
+        all &= ok;
+        tiers.push(Json::obj(vec![
+            ("tier", Json::str(tier.name())),
+            ("ready", Json::Bool(ok)),
+            ("ready_replicas", Json::num(ready as f64)),
+            ("queued", Json::num(queued as f64)),
+        ]));
+    }
+    let body = Json::obj(vec![
+        ("ready", Json::Bool(all)),
+        ("tiers", Json::arr(tiers)),
+    ])
+    .dump();
+    http::Response::new(
+        if all { 200 } else { 503 },
+        "application/json",
+        body.into_bytes(),
+    )
+}
+
+/// `/debug/traces`: newest-first JSON dump of the flight recorder ring.
+/// Filters compose: `?tier=small`, `?outcome=ok`, `?slow_ms=250` (keep
+/// only traces at least this slow end to end).
+fn handle_traces(stack: &LiveStack, query: &str) -> http::Response {
+    let mut tier: Option<&str> = None;
+    let mut outcome: Option<&str> = None;
+    let mut slow_s = 0.0f64;
+    for kv in query.split('&') {
+        let Some((k, v)) = kv.split_once('=') else { continue };
+        match k {
+            "tier" => tier = Some(v),
+            "outcome" => outcome = Some(v),
+            "slow_ms" => slow_s = v.parse::<f64>().unwrap_or(0.0) / 1e3,
+            _ => {}
+        }
+    }
+    let recs = stack.metrics.recorder.snapshot();
+    let body = Json::arr(
+        recs.iter()
+            .filter(|r| tier.map_or(true, |t| r.tier == t))
+            .filter(|r| outcome.map_or(true, |o| r.outcome == o))
+            .filter(|r| r.total_s >= slow_s)
+            .map(|r| r.to_json()),
+    )
+    .dump();
+    http::Response::new(200, "application/json", body.into_bytes())
+}
+
+fn handle_completion(
+    stack: &LiveStack,
+    req: &http::Request,
+    trace: Option<TraceCtx>,
+) -> Result<String> {
     let j = Json::parse(req.body_str()?)?;
     let prompt = j.rstr("prompt")?;
     let max_tokens = j.usize_or("max_tokens", 16).min(64);
     let mut creq = CompletionRequest::new(prompt).max_tokens(max_tokens);
+    if let Some(ctx) = trace {
+        creq = creq.trace_ctx(ctx);
+    }
     // Optional affinity/session key and per-request deadline — the same
     // fields the builder API takes, reachable over HTTP.
     if let Some(key) = j

@@ -31,6 +31,7 @@ use crate::config::{PoolConfig, Priority};
 use crate::models::{BackendKind, ModelSpec, Tier};
 use crate::registry::{Registry, ServiceId};
 use crate::substrate::{ReplicaId, ReplicaState, Substrate, SubstrateEvent};
+use crate::telemetry::trace::{SpanKind, TraceState};
 use crate::util::stats::Ema;
 use crate::util::threadpool::{Channel, OneShot};
 
@@ -63,6 +64,9 @@ pub(crate) struct TierJob {
     /// `f64::INFINITY` when the caller set none. Work past its deadline
     /// is dropped at dequeue instead of charged to a replica.
     pub deadline_abs_s: f64,
+    /// Per-request span accumulator (`None` = untraced: the trace-off
+    /// path carries a null pointer and does no tracing work at all).
+    pub trace: Option<Box<TraceState>>,
 }
 
 // Replica lifecycle wire encoding (`ReplicaCell::state`) — shared with
@@ -699,15 +703,34 @@ fn admit_job<E: StepEngine>(
         // overload from spending replica steps on answers nobody can
         // use.
         ctx.metrics.shed_expired.fetch_add(1, Ordering::Relaxed);
+        if let Some(st) = job.trace.as_deref_mut() {
+            st.phase(SpanKind::Shed, now);
+        }
         job.reply.put(Err(CompletionError::new(
             FailureKind::DeadlineExpired,
             "deadline expired before dispatch",
         )));
+        ctx.metrics.finish_request(
+            job.trace.take(),
+            job.tier,
+            job.priority,
+            "deadline_expired",
+            now,
+            0,
+        );
         return None;
     }
     if job.cancel.is_cancelled() {
         // The caller already timed out; don't spend prefill on it.
         ctx.metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+        ctx.metrics.finish_request(
+            job.trace.take(),
+            job.tier,
+            job.priority,
+            "cancelled",
+            now,
+            0,
+        );
         return None;
     }
     let est = crate::tokenizer::word_count(&job.prompt).max(1) + 1;
@@ -730,6 +753,11 @@ fn admit_job<E: StepEngine>(
                     .add_queue_wait_s((p.queue_wait_s - p.counted_wait_s).max(0.0));
                 p.counted_wait_s = p.queue_wait_s;
                 p.prompt = prompt;
+                if let Some(st) = p.trace.as_deref_mut() {
+                    // Close the queue phase (a re-admitted requeue's mark
+                    // sits at its requeue time, so the span is the re-wait).
+                    st.phase(SpanKind::Queued, now);
+                }
             }
             None
         }
@@ -737,10 +765,18 @@ fn admit_job<E: StepEngine>(
             job.prompt = prompt;
             Some(job)
         }
-        Admit::Failed(job, e) => {
+        Admit::Failed(mut job, e) => {
             ctx.metrics.errors.fetch_add(1, Ordering::Relaxed);
             job.reply
                 .put(Err(CompletionError::internal(format!("admission failed: {e:#}"))));
+            ctx.metrics.finish_request(
+                job.trace.take(),
+                job.tier,
+                job.priority,
+                "internal",
+                now,
+                0,
+            );
             None
         }
     }
@@ -749,11 +785,25 @@ fn admit_job<E: StepEngine>(
 /// Complete a finished request back to its caller.
 fn finish_job(f: Finished<TierJob>, ctx: &ReplicaCtx) {
     let now = ctx.epoch.elapsed().as_secs_f64();
-    let job = f.payload;
+    let mut job = f.payload;
+    let tokens = f.tokens.len();
+    let latency_s = (now - job.enqueue_s).max(0.0);
     ctx.metrics.completed.fetch_add(1, Ordering::Relaxed);
-    ctx.metrics
-        .tokens_out
-        .fetch_add(f.tokens.len() as u64, Ordering::Relaxed);
+    ctx.metrics.tokens_out.fetch_add(tokens as u64, Ordering::Relaxed);
+    ctx.metrics.observe_ttft(ctx.tier, job.ttft_s);
+    if tokens > 1 {
+        ctx.metrics.observe_tpot(
+            ctx.tier,
+            (latency_s - job.ttft_s).max(0.0) / (tokens - 1) as f64,
+        );
+    }
+    if let Some(st) = job.trace.as_deref_mut() {
+        st.phase(SpanKind::Decode, now);
+        if f.spec_steps > 0 {
+            // Zero-length marker carrying the verify-step count.
+            st.phase_n(SpanKind::SpecVerify, now, f.spec_steps);
+        }
+    }
     job.reply.put(Ok(LiveResponse {
         tokens: f.tokens,
         tier: job.tier.name().to_string(),
@@ -761,10 +811,18 @@ fn finish_job(f: Finished<TierJob>, ctx: &ReplicaCtx) {
         complexity: job.complexity,
         confidence: job.confidence,
         ttft_s: job.ttft_s,
-        latency_s: (now - job.enqueue_s).max(0.0),
+        latency_s,
         queue_wait_s: job.queue_wait_s,
         prompt_tokens: f.prompt_tokens,
     }));
+    ctx.metrics.finish_request(
+        job.trace.take(),
+        job.tier,
+        job.priority,
+        "ok",
+        now,
+        tokens,
+    );
 }
 
 /// Derive one replica's scheduler knobs from the pool config and its
@@ -815,10 +873,16 @@ pub(crate) fn requeue_to(
     metrics: &GatewayMetrics,
     mut job: TierJob,
     fail_msg: &str,
+    now_s: f64,
 ) -> bool {
     if job.cancel.is_cancelled() {
         metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+        metrics.finish_request(job.trace.take(), job.tier, job.priority, "cancelled", now_s, 0);
         return false;
+    }
+    if let Some(st) = job.trace.as_deref_mut() {
+        // The doomed attempt, dispatch mark → loss detection.
+        st.phase(SpanKind::Requeue, now_s);
     }
     for attempt in 0..50 {
         if queue.is_closed() {
@@ -829,6 +893,7 @@ pub(crate) fn requeue_to(
                 FailureKind::Shutdown,
                 "gateway shutting down",
             )));
+            metrics.finish_request(job.trace.take(), job.tier, job.priority, "shutdown", now_s, 0);
             return false;
         }
         match queue.try_send(job) {
@@ -847,11 +912,13 @@ pub(crate) fn requeue_to(
     metrics.errors.fetch_add(1, Ordering::Relaxed);
     job.reply
         .put(Err(CompletionError::new(FailureKind::ReplicaLost, fail_msg)));
+    metrics.finish_request(job.trace.take(), job.tier, job.priority, "replica_lost", now_s, 0);
     false
 }
 
 fn requeue_job(job: TierJob, ctx: &ReplicaCtx, fail_msg: &str) -> bool {
-    requeue_to(&ctx.queue, &ctx.metrics, job, fail_msg)
+    let now = ctx.epoch.elapsed().as_secs_f64();
+    requeue_to(&ctx.queue, &ctx.metrics, job, fail_msg, now)
 }
 
 /// Abrupt death (kill hook / injected fault): requeue in-flight jobs so
@@ -1027,6 +1094,9 @@ pub(crate) fn replica_loop<E: StepEngine>(engine: E, ctx: ReplicaCtx) {
             sched.tick_with(now, &mut |job| {
                 // Prefill produced the first token: that's TTFT.
                 job.ttft_s = (now - job.enqueue_s).max(0.0);
+                if let Some(st) = job.trace.as_deref_mut() {
+                    st.phase(SpanKind::Prefill, now);
+                }
             })
         })) {
             Ok(t) => t,
@@ -1053,13 +1123,29 @@ pub(crate) fn replica_loop<E: StepEngine>(engine: E, ctx: ReplicaCtx) {
                 for f in tick.finished {
                     finish_job(f, &ctx);
                 }
-                for _ in tick.cancelled {
+                for mut job in tick.cancelled {
                     // The caller already gave up; just free the slot.
                     ctx.metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+                    ctx.metrics.finish_request(
+                        job.trace.take(),
+                        job.tier,
+                        job.priority,
+                        "cancelled",
+                        now,
+                        0,
+                    );
                 }
-                for (job, msg) in tick.failed {
+                for (mut job, msg) in tick.failed {
                     ctx.metrics.errors.fetch_add(1, Ordering::Relaxed);
                     job.reply.put(Err(CompletionError::internal(msg)));
+                    ctx.metrics.finish_request(
+                        job.trace.take(),
+                        job.tier,
+                        job.priority,
+                        "internal",
+                        now,
+                        0,
+                    );
                 }
                 ctx.cell.inflight.store(sched.inflight(), Ordering::Relaxed);
                 let ps = sched.prefix_stats();
@@ -1136,9 +1222,17 @@ pub(crate) fn replica_loop<E: StepEngine>(engine: E, ctx: ReplicaCtx) {
             }
             Err(e) => {
                 let msg = format!("engine step failed: {e:#}");
-                for job in sched.fail_all() {
+                for mut job in sched.fail_all() {
                     ctx.metrics.errors.fetch_add(1, Ordering::Relaxed);
                     job.reply.put(Err(CompletionError::internal(msg.clone())));
+                    ctx.metrics.finish_request(
+                        job.trace.take(),
+                        job.tier,
+                        job.priority,
+                        "internal",
+                        now,
+                        0,
+                    );
                 }
                 ctx.cell.inflight.store(0, Ordering::Relaxed);
                 engine_errors += 1;
@@ -1162,11 +1256,20 @@ pub(crate) fn replica_loop<E: StepEngine>(engine: E, ctx: ReplicaCtx) {
     while let Some(job) = ctx.cell.direct.try_recv() {
         requeue_job(job, &ctx, "gateway shutting down");
     }
-    for job in sched.fail_all() {
+    let now = ctx.epoch.elapsed().as_secs_f64();
+    for mut job in sched.fail_all() {
         job.reply.put(Err(CompletionError::new(
             FailureKind::Shutdown,
             "gateway shutting down",
         )));
+        ctx.metrics.finish_request(
+            job.trace.take(),
+            job.tier,
+            job.priority,
+            "shutdown",
+            now,
+            0,
+        );
     }
     ctx.cell.inflight.store(0, Ordering::Relaxed);
     ctx.cell.state.store(S_GONE, Ordering::Release);

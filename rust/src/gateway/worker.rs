@@ -37,6 +37,7 @@ use crate::substrate::proto::{
     connect_worker, read_frame_blocking, write_frame, Frame, FrameReader,
     HeartbeatWire, PoolWire, Transport, PROTO_VERSION,
 };
+use crate::telemetry::trace::{Span, SpanKind};
 use crate::util::threadpool::Channel;
 
 /// Heartbeat cadence (well inside the default 3 s health deadline).
@@ -123,11 +124,19 @@ struct Transfers {
 
 /// Per-sequence payload inside the worker's scheduler: the supervisor's
 /// job id, how many tokens have been streamed, and the local cancel
-/// token `Cancel` frames fire.
+/// token `Cancel` frames fire. The trace fields are receipt-relative
+/// timestamps for the worker-side spans shipped back on `Done` (the
+/// supervisor rebases them onto its dispatch mark); all zero-cost when
+/// the job is untraced.
 struct WireJob {
     id: u64,
     sent: usize,
     cancel: CancelToken,
+    /// Worker-epoch time the `Job` frame arrived.
+    recv_s: f64,
+    /// Worker-epoch time of the first decoded token (0 until prefilled).
+    first_s: f64,
+    traced: bool,
 }
 
 /// Run one worker to completion. `build` constructs the engine once the
@@ -209,8 +218,13 @@ where
     let mut sched: Scheduler<E, WireJob> = Scheduler::new(engine, cfg);
     write_frame(&mut *stream, &Frame::Ready)?;
 
-    let mut incoming: VecDeque<(u64, String, usize)> = VecDeque::new();
+    let mut incoming: VecDeque<(u64, String, usize, bool, f64)> = VecDeque::new();
     let mut cancels: BTreeMap<u64, CancelToken> = BTreeMap::new();
+    // Completed-but-unshipped trace spans (job id, receipt-relative
+    // span). Prefill spans land here when a sequence gets its first
+    // token and flush on the next heartbeat — so a worker killed
+    // mid-decode still leaves its prefill on the supervisor's trace.
+    let mut span_out: Vec<(u64, Span)> = Vec::new();
     let mut xfers = Transfers::default();
     let mut draining = false;
     let mut drained_once = false;
@@ -228,6 +242,7 @@ where
             handle_ctl(
                 f,
                 &mut *stream,
+                epoch.elapsed().as_secs_f64(),
                 &mut incoming,
                 &mut cancels,
                 &mut xfers,
@@ -274,18 +289,22 @@ where
                 drained_once = true;
                 for w in sched.drain_pending() {
                     cancels.remove(&w.id);
+                    span_out.retain(|(id, _)| *id != w.id);
                     write_frame(&mut *stream, &Frame::Returned { job: w.id })?;
                 }
             }
-            for (id, _, _) in incoming.drain(..) {
+            for (id, _, _, _, _) in incoming.drain(..) {
                 cancels.remove(&id);
+                span_out.retain(|(sid, _)| *sid != id);
                 write_frame(&mut *stream, &Frame::Returned { job: id })?;
             }
         }
 
         // 3. Admissions.
         if !draining {
-            while let Some((id, prompt, max_tokens)) = incoming.pop_front() {
+            while let Some((id, prompt, max_tokens, traced, recv_s)) =
+                incoming.pop_front()
+            {
                 let cancel = cancels
                     .get(&id)
                     .cloned()
@@ -296,14 +315,21 @@ where
                     continue;
                 }
                 let est = crate::tokenizer::word_count(&prompt).max(1) + 1;
-                let payload = WireJob { id, sent: 0, cancel: cancel.clone() };
+                let payload = WireJob {
+                    id,
+                    sent: 0,
+                    cancel: cancel.clone(),
+                    recv_s,
+                    first_s: 0.0,
+                    traced,
+                };
                 match sched.admit_cancellable(&prompt, max_tokens, est, payload, cancel)
                 {
                     Admit::Admitted => {}
                     Admit::Rejected(_) => {
                         // No headroom right now; retry next turn. The
                         // supervisor's dispatch cap makes this rare.
-                        incoming.push_front((id, prompt, max_tokens));
+                        incoming.push_front((id, prompt, max_tokens, traced, recv_s));
                         break;
                     }
                     Admit::Failed(w, e) => {
@@ -311,6 +337,7 @@ where
                         write_frame(&mut *stream, &Frame::JobFailed {
                             job: w.id,
                             error: format!("admission failed: {e:#}"),
+                            spans: vec![],
                         })?;
                     }
                 }
@@ -322,11 +349,19 @@ where
             if draining && incoming.is_empty() {
                 break;
             }
-            send_heartbeat(&mut *stream, &mut sched, &mut last_hb, hot_k, false)?;
+            send_heartbeat(
+                &mut *stream,
+                &mut sched,
+                &mut last_hb,
+                hot_k,
+                &mut span_out,
+                false,
+            )?;
             if let Some(f) = msgs.recv_timeout(Duration::from_millis(20)) {
                 handle_ctl(
                     f,
                     &mut *stream,
+                    epoch.elapsed().as_secs_f64(),
                     &mut incoming,
                     &mut cancels,
                     &mut xfers,
@@ -342,7 +377,19 @@ where
         // supervisor requeues everything it dispatched to us.
         let now = epoch.elapsed().as_secs_f64();
         let tick = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            sched.tick(now)
+            sched.tick_with(now, &mut |w: &mut WireJob| {
+                // First token landed: stamp it and stage the prefill
+                // span (receipt-relative) for the next heartbeat flush.
+                w.first_s = now;
+                if w.traced {
+                    span_out.push((w.id, Span {
+                        kind: SpanKind::Prefill,
+                        start_s: 0.0,
+                        end_s: (now - w.recv_s).max(0.0),
+                        n: 0,
+                    }));
+                }
+            })
         })) {
             Ok(t) => t,
             Err(_) => {
@@ -370,24 +417,58 @@ where
                 for f in tick.finished {
                     cancels.remove(&f.payload.id);
                     let tail = f.tokens[f.payload.sent.min(f.tokens.len())..].to_vec();
+                    // Ship the spans not yet flushed via heartbeat, plus
+                    // the decode span and the verify-step marker — all
+                    // receipt-relative for the supervisor's rebase.
+                    let mut spans = take_spans(&mut span_out, f.payload.id);
+                    if f.payload.traced {
+                        let first_rel =
+                            (f.payload.first_s - f.payload.recv_s).max(0.0);
+                        let end_rel = (now - f.payload.recv_s).max(first_rel);
+                        spans.push(Span {
+                            kind: SpanKind::Decode,
+                            start_s: first_rel,
+                            end_s: end_rel,
+                            n: 0,
+                        });
+                        if f.spec_steps > 0 {
+                            spans.push(Span {
+                                kind: SpanKind::SpecVerify,
+                                start_s: end_rel,
+                                end_s: end_rel,
+                                n: f.spec_steps,
+                            });
+                        }
+                    }
                     write_frame(&mut *stream, &Frame::Done {
                         job: f.payload.id,
                         prompt_tokens: f.prompt_tokens,
                         tokens: tail,
+                        spans,
                     })?;
                 }
                 for w in tick.cancelled {
                     cancels.remove(&w.id);
+                    span_out.retain(|(id, _)| *id != w.id);
                     write_frame(&mut *stream, &Frame::Cancelled { job: w.id })?;
                 }
                 for (w, msg) in tick.failed {
                     cancels.remove(&w.id);
+                    let spans = take_spans(&mut span_out, w.id);
                     write_frame(&mut *stream, &Frame::JobFailed {
                         job: w.id,
                         error: msg,
+                        spans,
                     })?;
                 }
-                send_heartbeat(&mut *stream, &mut sched, &mut last_hb, hot_k, false)?;
+                send_heartbeat(
+                    &mut *stream,
+                    &mut sched,
+                    &mut last_hb,
+                    hot_k,
+                    &mut span_out,
+                    false,
+                )?;
                 if tick.stepped == 0 && tick.prefilled == 0 {
                     if let Some(wait) = tick.wait_s {
                         // Holding for batch-mates: sleep out the flush
@@ -397,6 +478,7 @@ where
                             handle_ctl(
                                 f,
                                 &mut *stream,
+                                epoch.elapsed().as_secs_f64(),
                                 &mut incoming,
                                 &mut cancels,
                                 &mut xfers,
@@ -411,9 +493,11 @@ where
                 let msg = format!("engine step failed: {e:#}");
                 for w in sched.fail_all() {
                     cancels.remove(&w.id);
+                    let spans = take_spans(&mut span_out, w.id);
                     write_frame(&mut *stream, &Frame::JobFailed {
                         job: w.id,
                         error: msg.clone(),
+                        spans,
                     })?;
                 }
                 engine_errors += 1;
@@ -426,25 +510,41 @@ where
     }
 
     // Drained: final counters, then the graceful terminal frame.
-    send_heartbeat(&mut *stream, &mut sched, &mut last_hb, hot_k, true)?;
+    send_heartbeat(&mut *stream, &mut sched, &mut last_hb, hot_k, &mut span_out, true)?;
     write_frame(&mut *stream, &Frame::Gone)?;
     Ok(())
 }
 
-/// Apply one supervisor frame to the worker's control state.
+/// Remove and return the staged-but-unshipped spans for one job.
+fn take_spans(span_out: &mut Vec<(u64, Span)>, job: u64) -> Vec<Span> {
+    let mut spans = Vec::new();
+    let mut i = 0;
+    while i < span_out.len() {
+        if span_out[i].0 == job {
+            spans.push(span_out.remove(i).1);
+        } else {
+            i += 1;
+        }
+    }
+    spans
+}
+
+/// Apply one supervisor frame to the worker's control state. `now_s` is
+/// the worker-epoch receipt time (the base trace spans are relative to).
 fn handle_ctl(
     frame: Frame,
     stream: &mut dyn Transport,
-    incoming: &mut VecDeque<(u64, String, usize)>,
+    now_s: f64,
+    incoming: &mut VecDeque<(u64, String, usize, bool, f64)>,
     cancels: &mut BTreeMap<u64, CancelToken>,
     xfers: &mut Transfers,
     draining: &mut bool,
     spec_ok: &mut bool,
 ) -> Result<()> {
     match frame {
-        Frame::Job { job, prompt, max_tokens } => {
+        Frame::Job { job, prompt, max_tokens, trace } => {
             cancels.insert(job, CancelToken::new());
-            incoming.push_back((job, prompt, max_tokens));
+            incoming.push_back((job, prompt, max_tokens, !trace.is_empty(), now_s));
         }
         Frame::Cancel { job } => {
             if let Some(tok) = cancels.get(&job) {
@@ -488,6 +588,7 @@ fn send_heartbeat<E: StepEngine>(
     sched: &mut Scheduler<E, WireJob>,
     last: &mut Instant,
     hot_k: usize,
+    span_out: &mut Vec<(u64, Span)>,
     force: bool,
 ) -> Result<()> {
     if !force && last.elapsed() < HEARTBEAT_PERIOD {
@@ -515,6 +616,9 @@ fn send_heartbeat<E: StepEngine>(
         spec_accepted_tokens: stats.spec_accepted_tokens,
         spec_rejected_tokens: stats.spec_rejected_tokens,
         spec_verify_steps: stats.spec_verify_steps,
+        // Early-flush staged spans (prefills of still-decoding jobs) so
+        // a worker killed mid-decode leaves its prefill on the trace.
+        spans: std::mem::take(span_out),
     };
     write_frame(stream, &Frame::Heartbeat(hb))?;
     Ok(())

@@ -29,6 +29,7 @@ use crate::router::hybrid::{HybridRouter, SemanticRouter};
 use crate::router::keyword::KeywordRouter;
 use crate::router::{Classification, Classifier, Router};
 use crate::scoring::Weights;
+use crate::telemetry::trace::{Span, SpanKind};
 use crate::util::rng::SplitMix64;
 use crate::workload::{Generator, TemplateLibrary};
 
@@ -184,6 +185,43 @@ pub struct RequestRecord {
     pub in_tokens: usize,
     /// Prompt tokens served from the simulated prefix cache.
     pub prefix_cached_tokens: usize,
+    /// Span timeline on virtual time (`pool.trace.enabled`) — the same
+    /// kinds and ordering the live gateway's `/debug/traces` reports, so
+    /// sim and live traces are schema-identical. Empty with tracing off.
+    pub spans: Vec<Span>,
+}
+
+/// Synthesize the live span schema for one sim request on virtual time:
+/// `admit` (routing overhead) → `queued` → `prefill` → `decode`, with
+/// `started_s = None` for work that never reached a replica (the
+/// timeline then ends in an open-ended `queued` span).
+fn sim_request_spans(
+    arrival_s: f64,
+    overhead_s: f64,
+    started_s: Option<f64>,
+    ttft_s: f64,
+    latency_s: f64,
+) -> Vec<Span> {
+    let a1 = arrival_s + overhead_s.max(0.0);
+    let mut spans =
+        vec![Span { kind: SpanKind::Admit, start_s: arrival_s, end_s: a1, n: 0 }];
+    match started_s {
+        Some(st) => {
+            // The same contiguity the live path has: queue ends at
+            // dispatch, prefill ends at first token, decode at finish.
+            let q_end = (st + overhead_s).max(a1);
+            let first = (arrival_s + ttft_s).max(q_end);
+            let fin = (arrival_s + latency_s).max(first);
+            spans.push(Span { kind: SpanKind::Queued, start_s: a1, end_s: q_end, n: 0 });
+            spans.push(Span { kind: SpanKind::Prefill, start_s: q_end, end_s: first, n: 0 });
+            spans.push(Span { kind: SpanKind::Decode, start_s: first, end_s: fin, n: 0 });
+        }
+        None => {
+            let fin = (arrival_s + latency_s).max(a1);
+            spans.push(Span { kind: SpanKind::Queued, start_s: a1, end_s: fin, n: 0 });
+        }
+    }
+    spans
 }
 
 /// Aggregated simulation output.
@@ -575,6 +613,28 @@ pub fn run(
                             cost_usd: 0.0,
                             in_tokens: req.in_tokens,
                             prefix_cached_tokens: 0,
+                            spans: if cfg.pool.trace.enabled {
+                                // Admit then a zero-length shed marker —
+                                // the same shape a live gate rejection
+                                // records.
+                                let a1 = req.arrival_s + class.overhead_s;
+                                vec![
+                                    Span {
+                                        kind: SpanKind::Admit,
+                                        start_s: req.arrival_s,
+                                        end_s: a1,
+                                        n: 0,
+                                    },
+                                    Span {
+                                        kind: SpanKind::Shed,
+                                        start_s: a1,
+                                        end_s: a1,
+                                        n: 0,
+                                    },
+                                ]
+                            } else {
+                                Vec::new()
+                            },
                         });
                         n_shed += 1;
                         done += 1;
@@ -644,6 +704,17 @@ pub fn run(
                     cost_usd: cost,
                     in_tokens: p.req.in_tokens,
                     prefix_cached_tokens: p.prefix_cached,
+                    spans: if cfg.pool.trace.enabled {
+                        sim_request_spans(
+                            p.req.arrival_s,
+                            p.class.overhead_s,
+                            Some(p.started_s),
+                            p.ttft_s,
+                            latency,
+                        )
+                    } else {
+                        Vec::new()
+                    },
                 });
                 done += 1;
                 try_start!(service, t);
@@ -780,6 +851,17 @@ pub fn run(
             cost_usd: 0.0,
             in_tokens: p.req.in_tokens,
             prefix_cached_tokens: p.prefix_cached,
+            spans: if cfg.pool.trace.enabled {
+                sim_request_spans(
+                    p.req.arrival_s,
+                    p.class.overhead_s,
+                    (p.finish_total_s > 0.0).then_some(p.started_s),
+                    p.ttft_s,
+                    cfg.deadline_s,
+                )
+            } else {
+                Vec::new()
+            },
         });
     }
 

@@ -41,9 +41,13 @@
 //! knobs, the heartbeat's `spec_*` counters (omitted while zero, so a
 //! plain-decode heartbeat keeps the v1 byte shape), and the
 //! supervisor→worker [`Frame::SpecDraft`] draft-tier-availability
-//! signal. Chain hashes are u64
-//! and cross the wire as 16-digit hex strings: `Json::Num` is an f64
-//! and would silently round hashes above 2^53.
+//! signal. Version 2 also carries the tracing plane: `Job` ships the
+//! request's `traceparent` out (omitted for untraced jobs), and
+//! `Done`/`JobFailed`/`Heartbeat` carry worker-side span batches back
+//! (receipt-relative timestamps; omitted when empty) — so with tracing
+//! off every frame keeps the exact pre-tracing byte shape. Chain hashes
+//! are u64 and cross the wire as 16-digit hex strings: `Json::Num` is
+//! an f64 and would silently round hashes above 2^53.
 
 use std::io;
 use std::net::TcpStream;
@@ -55,6 +59,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::backend::batcher::N_DECODE_BATCHES;
 use crate::backend::kv_cache::PrefixCacheConfig;
 use crate::config::PoolConfig;
+use crate::telemetry::trace::{spans_from_wire, spans_to_wire, Span, SpanKind};
 use crate::util::json::Json;
 
 /// One end of a supervisor↔worker (or supervisor↔node-agent) channel.
@@ -306,6 +311,11 @@ pub struct HeartbeatWire {
     pub spec_accepted_tokens: u64,
     pub spec_rejected_tokens: u64,
     pub spec_verify_steps: u64,
+    /// v2: early-flushed trace spans for in-flight jobs, keyed by job id
+    /// with receipt-relative timestamps (a prefill span ships here before
+    /// `Done` so a worker killed mid-decode still leaves its prefill on
+    /// the trace). Empty — and absent on the wire — with tracing off.
+    pub spans: Vec<(u64, Span)>,
 }
 
 /// One protocol frame. `S2W` = supervisor→worker, `W2S` = worker→supervisor.
@@ -319,14 +329,19 @@ pub enum Frame {
     /// W2S: engine built and warm; the supervisor's Loading→Ready edge.
     Ready,
     // ---- data plane ------------------------------------------------------
-    /// S2W: dispatch one routed job.
-    Job { job: u64, prompt: String, max_tokens: usize },
+    /// S2W: dispatch one routed job. `trace` is the request's
+    /// `traceparent` — empty for untraced jobs and then absent on the
+    /// wire (v2; a v1 worker never sees the key).
+    Job { job: u64, prompt: String, max_tokens: usize, trace: String },
     /// W2S: newly generated tokens for an in-flight job (streamed).
     TokenChunk { job: u64, tokens: Vec<i32> },
     /// W2S: job finished; `tokens` is the not-yet-streamed tail.
-    Done { job: u64, prompt_tokens: usize, tokens: Vec<i32> },
-    /// W2S: job failed terminally (admission/prefill error).
-    JobFailed { job: u64, error: String },
+    /// `spans` carries the worker-side trace spans not already flushed
+    /// via heartbeat (receipt-relative; empty ⇒ absent on the wire).
+    Done { job: u64, prompt_tokens: usize, tokens: Vec<i32>, spans: Vec<Span> },
+    /// W2S: job failed terminally (admission/prefill error). `spans` as
+    /// on [`Frame::Done`].
+    JobFailed { job: u64, error: String, spans: Vec<Span> },
     /// S2W: the caller gave up; evict the sequence.
     Cancel { job: u64 },
     /// W2S: the sequence was evicted by its cancel token.
@@ -435,23 +450,34 @@ impl Frame {
                 pairs.push(("version", Json::num(*version as f64)));
                 pairs.push(("pool", pool.to_json()));
             }
-            Frame::Job { job, prompt, max_tokens } => {
+            Frame::Job { job, prompt, max_tokens, trace } => {
                 pairs.push(("job", Json::num(*job as f64)));
                 pairs.push(("prompt", Json::str(prompt.clone())));
                 pairs.push(("max_tokens", Json::num(*max_tokens as f64)));
+                // v2: omitted for untraced jobs — the exact pre-tracing
+                // byte shape.
+                if !trace.is_empty() {
+                    pairs.push(("trace", Json::str(trace.clone())));
+                }
             }
             Frame::TokenChunk { job, tokens } => {
                 pairs.push(("job", Json::num(*job as f64)));
                 pairs.push(("tokens", tokens_json(tokens)));
             }
-            Frame::Done { job, prompt_tokens, tokens } => {
+            Frame::Done { job, prompt_tokens, tokens, spans } => {
                 pairs.push(("job", Json::num(*job as f64)));
                 pairs.push(("prompt_tokens", Json::num(*prompt_tokens as f64)));
                 pairs.push(("tokens", tokens_json(tokens)));
+                if !spans.is_empty() {
+                    pairs.push(("spans", spans_to_wire(spans)));
+                }
             }
-            Frame::JobFailed { job, error } => {
+            Frame::JobFailed { job, error, spans } => {
                 pairs.push(("job", Json::num(*job as f64)));
                 pairs.push(("error", Json::str(error.clone())));
+                if !spans.is_empty() {
+                    pairs.push(("spans", spans_to_wire(spans)));
+                }
             }
             Frame::Cancel { job }
             | Frame::Cancelled { job }
@@ -545,6 +571,11 @@ impl Frame {
                         Json::num(hb.spec_verify_steps as f64),
                     ));
                 }
+                // v2: likewise omitted when no spans flushed — a
+                // trace-off heartbeat keeps the v1 byte shape.
+                if !hb.spans.is_empty() {
+                    pairs.push(("spans", hb_spans_json(&hb.spans)));
+                }
             }
             Frame::Ping { nonce } | Frame::Pong { nonce } => {
                 pairs.push(("nonce", Json::num(*nonce as f64)));
@@ -574,16 +605,20 @@ impl Frame {
                 job: job(j)?,
                 prompt: j.rstr("prompt")?.to_string(),
                 max_tokens: j.rusize("max_tokens")?,
+                // Lenient: absent (v1 supervisor, or untraced) = "".
+                trace: j.str_or("trace", "").to_string(),
             },
             "chunk" => Frame::TokenChunk { job: job(j)?, tokens: tokens_from(j)? },
             "done" => Frame::Done {
                 job: job(j)?,
                 prompt_tokens: j.rusize("prompt_tokens")?,
                 tokens: tokens_from(j)?,
+                spans: j.get("spans").map(spans_from_wire).unwrap_or_default(),
             },
             "job_failed" => Frame::JobFailed {
                 job: job(j)?,
                 error: j.rstr("error")?.to_string(),
+                spans: j.get("spans").map(spans_from_wire).unwrap_or_default(),
             },
             "cancel" => Frame::Cancel { job: job(j)? },
             "cancelled" => Frame::Cancelled { job: job(j)? },
@@ -672,6 +707,8 @@ impl Frame {
                     spec_accepted_tokens: j.usize_or("spec_accepted", 0) as u64,
                     spec_rejected_tokens: j.usize_or("spec_rejected", 0) as u64,
                     spec_verify_steps: j.usize_or("spec_verify_steps", 0) as u64,
+                    // Lenient: absent (v1 peer, or tracing off) = empty.
+                    spans: j.get("spans").map(hb_spans_from).unwrap_or_default(),
                 })
             }
             "ping" => Frame::Ping { nonce: j.rusize("nonce")? as u64 },
@@ -749,6 +786,42 @@ fn tokens_from(j: &Json) -> Result<Vec<i32>> {
         .iter()
         .map(|v| v.as_f64().unwrap_or(0.0) as i32)
         .collect())
+}
+
+/// Heartbeat span batches: `[[job, name, start, dur, n], ...]`. Job ids
+/// are sequential counters well under 2^53, so `Json::Num` is exact.
+fn hb_spans_json(entries: &[(u64, Span)]) -> Json {
+    Json::arr(entries.iter().map(|(job, s)| {
+        Json::arr(vec![
+            Json::num(*job as f64),
+            Json::str(s.kind.name()),
+            Json::num(s.start_s),
+            Json::num(s.dur_s()),
+            Json::num(s.n as f64),
+        ])
+    }))
+}
+
+/// Lenient decode (mirrors `spans_from_wire`): malformed entries and
+/// unknown span kinds are skipped, never fatal.
+fn hb_spans_from(j: &Json) -> Vec<(u64, Span)> {
+    let mut out = Vec::new();
+    let Some(items) = j.as_arr() else { return out };
+    for it in items {
+        let Some(f) = it.as_arr() else { continue };
+        if f.len() < 4 {
+            continue;
+        }
+        let Some(job) = f[0].as_f64() else { continue };
+        let Some(kind) = f[1].as_str().and_then(SpanKind::from_name) else { continue };
+        let (Some(start), Some(dur)) = (f[2].as_f64(), f[3].as_f64()) else { continue };
+        let n = f.get(4).and_then(Json::as_f64).unwrap_or(0.0) as u32;
+        out.push((
+            job as u64,
+            Span { kind, start_s: start, end_s: start + dur.max(0.0), n },
+        ));
+    }
+    out
 }
 
 /// Incremental frame decoder. Bytes arrive in arbitrary read-sized
@@ -858,10 +931,41 @@ mod tests {
             job: 7,
             prompt: "what is 2 plus 2?".into(),
             max_tokens: 16,
+            trace: String::new(),
+        });
+        roundtrip(Frame::Job {
+            job: 8,
+            prompt: "traced".into(),
+            max_tokens: 4,
+            trace: format!("00-{:032x}-{:016x}-01", 99u128, 5u64),
         });
         roundtrip(Frame::TokenChunk { job: 7, tokens: vec![1, -2, 4095] });
-        roundtrip(Frame::Done { job: 7, prompt_tokens: 5, tokens: vec![9] });
-        roundtrip(Frame::JobFailed { job: 7, error: "kv pool exceeded".into() });
+        roundtrip(Frame::Done {
+            job: 7,
+            prompt_tokens: 5,
+            tokens: vec![9],
+            spans: vec![],
+        });
+        roundtrip(Frame::Done {
+            job: 7,
+            prompt_tokens: 5,
+            tokens: vec![9],
+            spans: vec![
+                Span { kind: SpanKind::Prefill, start_s: 0.0, end_s: 0.25, n: 0 },
+                Span { kind: SpanKind::Decode, start_s: 0.25, end_s: 1.5, n: 0 },
+                Span { kind: SpanKind::SpecVerify, start_s: 1.5, end_s: 1.5, n: 6 },
+            ],
+        });
+        roundtrip(Frame::JobFailed {
+            job: 7,
+            error: "kv pool exceeded".into(),
+            spans: vec![],
+        });
+        roundtrip(Frame::JobFailed {
+            job: 7,
+            error: "kv pool exceeded".into(),
+            spans: vec![Span { kind: SpanKind::Prefill, start_s: 0.0, end_s: 0.1, n: 0 }],
+        });
         roundtrip(Frame::Cancel { job: 9 });
         roundtrip(Frame::Cancelled { job: 9 });
         roundtrip(Frame::Returned { job: 10 });
@@ -881,6 +985,10 @@ mod tests {
             spec_accepted_tokens: 30,
             spec_rejected_tokens: 18,
             spec_verify_steps: 12,
+            spans: vec![
+                (7, Span { kind: SpanKind::Prefill, start_s: 0.0, end_s: 0.5, n: 0 }),
+                (9, Span { kind: SpanKind::Prefill, start_s: 0.1, end_s: 0.3, n: 0 }),
+            ],
         }));
         roundtrip(Frame::SpecDraft { ok: true });
         roundtrip(Frame::SpecDraft { ok: false });
@@ -928,7 +1036,12 @@ mod tests {
         // and non-BMP code points must cross the wire intact (this is
         // what the util/json escape fixes guarantee).
         let prompt = "line1\nline2\t\"quoted\" \\slash\u{1}\u{8}\u{c}\u{1f} 😀日本語";
-        let f = Frame::Job { job: 1, prompt: prompt.into(), max_tokens: 4 };
+        let f = Frame::Job {
+            job: 1,
+            prompt: prompt.into(),
+            max_tokens: 4,
+            trace: String::new(),
+        };
         let mut r = FrameReader::new();
         r.extend(&f.encode());
         match r.next().unwrap().unwrap() {
@@ -940,7 +1053,13 @@ mod tests {
     #[test]
     fn reader_handles_split_and_coalesced_frames() {
         let a = Frame::Ping { nonce: 1 }.encode();
-        let b = Frame::Job { job: 2, prompt: "p q r".into(), max_tokens: 8 }.encode();
+        let b = Frame::Job {
+            job: 2,
+            prompt: "p q r".into(),
+            max_tokens: 8,
+            trace: String::new(),
+        }
+        .encode();
         let c = Frame::Gone.encode();
         let mut stream: Vec<u8> = Vec::new();
         stream.extend(&a);
@@ -1079,6 +1198,72 @@ mod tests {
             "kv_blocks":128,"kv_block_tokens":16}"#;
         let old = PoolWire::from_json(&Json::parse(legacy).unwrap()).unwrap();
         assert_eq!(old.spec_draft_tokens, 0);
+    }
+
+    #[test]
+    fn untraced_frames_keep_the_pre_tracing_byte_shape() {
+        // With tracing off, Job/Done/JobFailed/Heartbeat must encode
+        // without any trace key — bit-for-bit the PR 8 wire.
+        let job = Frame::Job {
+            job: 3,
+            prompt: "plain".into(),
+            max_tokens: 8,
+            trace: String::new(),
+        };
+        let done = Frame::Done { job: 3, prompt_tokens: 2, tokens: vec![1], spans: vec![] };
+        let failed =
+            Frame::JobFailed { job: 3, error: "boom".into(), spans: vec![] };
+        let hb = Frame::Heartbeat(HeartbeatWire { inflight: 1, ..Default::default() });
+        for f in [&job, &done, &failed, &hb] {
+            let text = String::from_utf8(f.encode()[4..].to_vec()).unwrap();
+            assert!(!text.contains("trace"), "{text}");
+            assert!(!text.contains("spans"), "{text}");
+        }
+        // And the exact pre-tracing serialization, field for field.
+        assert_eq!(
+            String::from_utf8(job.encode()[4..].to_vec()).unwrap(),
+            r#"{"job":3,"max_tokens":8,"prompt":"plain","t":"job"}"#,
+        );
+        assert_eq!(
+            String::from_utf8(done.encode()[4..].to_vec()).unwrap(),
+            r#"{"job":3,"prompt_tokens":2,"t":"done","tokens":[1]}"#,
+        );
+    }
+
+    #[test]
+    fn traced_job_round_trips_and_v1_decode_defaults_empty() {
+        let tp = format!("00-{:032x}-{:016x}-01", 0xabcdu128, 1u64);
+        let f = Frame::Job {
+            job: 5,
+            prompt: "q".into(),
+            max_tokens: 2,
+            trace: tp.clone(),
+        };
+        let mut r = FrameReader::new();
+        r.extend(&f.encode());
+        match r.next().unwrap().unwrap() {
+            Frame::Job { trace, .. } => assert_eq!(trace, tp),
+            other => panic!("wrong frame {other:?}"),
+        }
+        // A v1-shaped job (no trace key) decodes with trace = "".
+        let legacy = br#"{"job":5,"max_tokens":2,"prompt":"q","t":"job"}"#;
+        match Frame::decode(legacy).unwrap() {
+            Frame::Job { trace, .. } => assert!(trace.is_empty()),
+            other => panic!("wrong frame {other:?}"),
+        }
+        // Malformed span entries in a heartbeat degrade, not error.
+        let hb = br#"{"t":"heartbeat","inflight":0,"prefills":0,
+            "prefill_batched":0,"decode_steps":0,"batched_steps":0,
+            "hit_tokens":0,"miss_tokens":0,"evicted_blocks":0,
+            "cache_blocks":0,"spans":[[1,"nope",0,1,0],[2,"decode",0.5,1.0,0]]}"#;
+        match Frame::decode(hb).unwrap() {
+            Frame::Heartbeat(h) => {
+                assert_eq!(h.spans.len(), 1);
+                assert_eq!(h.spans[0].0, 2);
+                assert_eq!(h.spans[0].1.kind, SpanKind::Decode);
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
     }
 
     #[test]

@@ -71,6 +71,7 @@ use crate::substrate::proto::{
     MAX_FRAME_BYTES, PROTO_VERSION,
 };
 use crate::substrate::{ReplicaId, ReplicaState, Substrate, SubstrateEvent};
+use crate::telemetry::trace::{format_traceparent, Span, SpanKind};
 use crate::util::stats::Ema;
 use crate::util::threadpool::Channel;
 
@@ -805,8 +806,9 @@ fn pump_loop(mut ctx: PumpCtx) {
     }
     // Jobs the router direct-placed on this replica that the session
     // never dispatched: back to the tier queue, loss-free.
+    let now = ctx.epoch.elapsed().as_secs_f64();
     while let Some(job) = ctx.cell.direct.try_recv() {
-        requeue_to(&ctx.queue, &ctx.metrics, job, "replica exited");
+        requeue_to(&ctx.queue, &ctx.metrics, job, "replica exited", now);
     }
     match &mut ctx.link {
         // Reap unconditionally: kill is a no-op on an exited worker, and
@@ -926,6 +928,14 @@ fn pump_session(ctx: &mut PumpCtx) -> Result<(), String> {
                             );
                         }
                         Frame::Heartbeat(hb) => {
+                            // Early-flushed worker spans (prefills of
+                            // still-decoding jobs): merged now so a
+                            // SIGKILL later keeps what already happened.
+                            for (jid, span) in &hb.spans {
+                                if let Some(e) = inflight.get_mut(jid) {
+                                    merge_worker_span(&mut e.job, *span);
+                                }
+                            }
                             apply_heartbeat(&hb, &last_hb, ctx);
                             last_hb = hb;
                         }
@@ -939,23 +949,47 @@ fn pump_session(ctx: &mut PumpCtx) -> Result<(), String> {
                                 e.tokens.extend(tokens);
                             }
                         }
-                        Frame::Done { job, prompt_tokens, tokens } => {
+                        Frame::Done { job, prompt_tokens, tokens, spans } => {
                             if let Some(mut e) = inflight.remove(&job) {
                                 e.tokens.extend(tokens);
+                                for span in spans {
+                                    merge_worker_span(&mut e.job, span);
+                                }
                                 finish_entry(e, prompt_tokens, ctx);
                             }
                         }
-                        Frame::JobFailed { job, error } => {
-                            if let Some(e) = inflight.remove(&job) {
+                        Frame::JobFailed { job, error, spans } => {
+                            if let Some(mut e) = inflight.remove(&job) {
                                 ctx.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                                for span in spans {
+                                    merge_worker_span(&mut e.job, span);
+                                }
                                 e.job
                                     .reply
                                     .put(Err(CompletionError::internal(error)));
+                                let now = ctx.epoch.elapsed().as_secs_f64();
+                                ctx.metrics.finish_request(
+                                    e.job.trace.take(),
+                                    e.job.tier,
+                                    e.job.priority,
+                                    "internal",
+                                    now,
+                                    0,
+                                );
                             }
                         }
                         Frame::Cancelled { job } => {
-                            if inflight.remove(&job).is_some() {
+                            if let Some(mut e) = inflight.remove(&job) {
                                 ctx.metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+                                let now = ctx.epoch.elapsed().as_secs_f64();
+                                ctx.metrics.finish_request(
+                                    e.job.trace.take(),
+                                    e.job.tier,
+                                    e.job.priority,
+                                    "cancelled",
+                                    now,
+                                    0,
+                                );
                             }
                         }
                         Frame::Returned { job } => {
@@ -965,6 +999,7 @@ fn pump_session(ctx: &mut PumpCtx) -> Result<(), String> {
                                     &ctx.metrics,
                                     e.job,
                                     "replica draining",
+                                    ctx.epoch.elapsed().as_secs_f64(),
                                 );
                             }
                         }
@@ -1015,12 +1050,14 @@ fn pump_session(ctx: &mut PumpCtx) -> Result<(), String> {
                             // Anything the worker still owed us (it
                             // should have Returned or Done everything)
                             // requeues as a safety net.
+                            let now = ctx.epoch.elapsed().as_secs_f64();
                             for (_, e) in std::mem::take(&mut inflight) {
                                 requeue_to(
                                     &ctx.queue,
                                     &ctx.metrics,
                                     e.job,
                                     "replica exited",
+                                    now,
                                 );
                             }
                             ctx.cell.inflight.store(0, Ordering::Relaxed);
@@ -1028,12 +1065,14 @@ fn pump_session(ctx: &mut PumpCtx) -> Result<(), String> {
                             return Ok(());
                         }
                         Frame::Fatal { error } => {
+                            let now = ctx.epoch.elapsed().as_secs_f64();
                             for (_, e) in std::mem::take(&mut inflight) {
                                 requeue_to(
                                     &ctx.queue,
                                     &ctx.metrics,
                                     e.job,
                                     "replica failed",
+                                    now,
                                 );
                             }
                             *ctx.cell.error.lock().unwrap() = Some(error);
@@ -1108,14 +1147,33 @@ fn pump_session(ctx: &mut PumpCtx) -> Result<(), String> {
                     // outranks cancellation: an abandoned deadline fires
                     // both, and the expired-shed counter must see it.
                     ctx.metrics.shed_expired.fetch_add(1, Ordering::Relaxed);
+                    if let Some(st) = job.trace.as_deref_mut() {
+                        st.phase(SpanKind::Shed, now);
+                    }
                     job.reply.put(Err(CompletionError::new(
                         FailureKind::DeadlineExpired,
                         "deadline expired before dispatch",
                     )));
+                    ctx.metrics.finish_request(
+                        job.trace.take(),
+                        job.tier,
+                        job.priority,
+                        "deadline_expired",
+                        now,
+                        0,
+                    );
                     continue;
                 }
                 if job.cancel.is_cancelled() {
                     ctx.metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+                    ctx.metrics.finish_request(
+                        job.trace.take(),
+                        job.tier,
+                        job.priority,
+                        "cancelled",
+                        now,
+                        0,
+                    );
                     continue;
                 }
                 job.queue_wait_s = (now - job.enqueue_s).max(0.0);
@@ -1129,10 +1187,21 @@ fn pump_session(ctx: &mut PumpCtx) -> Result<(), String> {
                 job.counted_wait_s = job.queue_wait_s;
                 let id = next_job;
                 next_job += 1;
+                // Close the queue phase at dispatch: the mark this sets
+                // is also the base every receipt-relative worker span
+                // rebases onto when it comes back over the wire.
+                let trace_hdr = match job.trace.as_deref_mut() {
+                    Some(st) => {
+                        st.phase(SpanKind::Queued, now);
+                        format_traceparent(&st.ctx)
+                    }
+                    None => String::new(),
+                };
                 let frame = Frame::Job {
                     job: id,
                     prompt: job.prompt.clone(),
                     max_tokens: job.max_tokens,
+                    trace: trace_hdr,
                 };
                 let bytes = frame.encode();
                 if bytes.len() > MAX_FRAME_BYTES {
@@ -1146,12 +1215,20 @@ fn pump_session(ctx: &mut PumpCtx) -> Result<(), String> {
                          ({} bytes encoded)",
                         bytes.len()
                     ))));
+                    ctx.metrics.finish_request(
+                        job.trace.take(),
+                        job.tier,
+                        job.priority,
+                        "internal",
+                        now,
+                        0,
+                    );
                     continue;
                 }
                 if let Err(e) = send_bytes(&mut *stream, &bytes, ctx) {
                     // A dead socket mid-dispatch: this job never reached
                     // the worker — back to the queue with the rest.
-                    requeue_to(&ctx.queue, &ctx.metrics, job, "replica failed");
+                    requeue_to(&ctx.queue, &ctx.metrics, job, "replica failed", now);
                     return end_dead(ctx, inflight, &e);
                 }
                 inflight.insert(id, InflightJob {
@@ -1328,10 +1405,22 @@ fn end_dead(
     inflight: BTreeMap<u64, InflightJob>,
     msg: &str,
 ) -> Result<(), String> {
+    let now = ctx.epoch.elapsed().as_secs_f64();
     for (_, e) in inflight {
-        requeue_to(&ctx.queue, &ctx.metrics, e.job, "replica failed");
+        requeue_to(&ctx.queue, &ctx.metrics, e.job, "replica failed", now);
     }
     Err(msg.to_string())
+}
+
+/// Rebase one receipt-relative worker span onto the job's dispatch mark
+/// (set by the `Queued` phase at dispatch) and append it to the trace.
+fn merge_worker_span(job: &mut TierJob, mut span: Span) {
+    if let Some(st) = job.trace.as_deref_mut() {
+        let base = st.mark_s;
+        span.start_s += base;
+        span.end_s += base;
+        st.push_span(span);
+    }
 }
 
 /// Difference a heartbeat against the last sample into the gateway's
@@ -1411,10 +1500,17 @@ fn finish_entry(e: InflightJob, prompt_tokens: usize, ctx: &PumpCtx) {
         // Everything arrived in the Done tail (budget-1 sequences).
         job.ttft_s = (now - job.enqueue_s).max(0.0);
     }
+    let tokens = e.tokens.len();
+    let latency_s = (now - job.enqueue_s).max(0.0);
     ctx.metrics.completed.fetch_add(1, Ordering::Relaxed);
-    ctx.metrics
-        .tokens_out
-        .fetch_add(e.tokens.len() as u64, Ordering::Relaxed);
+    ctx.metrics.tokens_out.fetch_add(tokens as u64, Ordering::Relaxed);
+    ctx.metrics.observe_ttft(ctx.tier, job.ttft_s);
+    if tokens > 1 {
+        ctx.metrics.observe_tpot(
+            ctx.tier,
+            (latency_s - job.ttft_s).max(0.0) / (tokens - 1) as f64,
+        );
+    }
     job.reply.put(Ok(LiveResponse {
         tokens: e.tokens,
         tier: job.tier.name().to_string(),
@@ -1422,8 +1518,16 @@ fn finish_entry(e: InflightJob, prompt_tokens: usize, ctx: &PumpCtx) {
         complexity: job.complexity,
         confidence: job.confidence,
         ttft_s: job.ttft_s,
-        latency_s: (now - job.enqueue_s).max(0.0),
+        latency_s,
         queue_wait_s: job.queue_wait_s,
         prompt_tokens,
     }));
+    ctx.metrics.finish_request(
+        job.trace.take(),
+        job.tier,
+        job.priority,
+        "ok",
+        now,
+        tokens,
+    );
 }

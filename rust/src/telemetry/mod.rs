@@ -9,6 +9,8 @@ use std::collections::VecDeque;
 
 use crate::util::stats::{Ema, Summary};
 
+pub mod trace;
+
 /// Sliding-window request counter → arrival-rate estimate (Alg. 1's
 /// `GetAvgRequestRate(m, w)`).
 #[derive(Debug, Clone)]

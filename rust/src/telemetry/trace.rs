@@ -1,0 +1,672 @@
+//! Per-request tracing: trace contexts, typed spans, the W3C
+//! `traceparent` format, and the gateway's flight recorder.
+//!
+//! Every traced request carries a [`TraceState`] from HTTP admission
+//! through router, gate, queue, and replica (or across the RPC wire to a
+//! worker process) back to the caller. Phases append [`Span`]s with
+//! monotonic gateway-epoch timestamps at each handoff; the completed
+//! timeline lands in the [`FlightRecorder`] ring exposed at
+//! `/debug/traces` and feeds the `ps_span_seconds{span,tier,le}`
+//! latency-breakdown histograms. All timestamps are f64 seconds on the
+//! caller's clock (gateway epoch live, virtual time in the simulator) so
+//! sim and live emit the identical schema.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+use crate::util::threadpool::Channel;
+
+/// Typed span kinds — one per phase a request can pass through.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Admission + routing: request entry until a tier is chosen.
+    Admit,
+    /// Residence in the admission gate's priority buffers.
+    GateBuffered,
+    /// Tier-queue (or direct-queue) wait until scheduler admission.
+    Queued,
+    /// Affinity placement decision in the router.
+    AffinityPlace,
+    /// Brokered cross-replica KV block transfer ahead of admission.
+    KvTransfer,
+    /// Prompt prefill: scheduler admission until first token.
+    Prefill,
+    /// Decode: first token until completion.
+    Decode,
+    /// Speculative verify activity during decode (`n` = verify steps).
+    SpecVerify,
+    /// Fallback-chain redispatch (`n` = hop number).
+    ChainHop,
+    /// Loss-free requeue after replica/worker loss or drain.
+    Requeue,
+    /// Shed/rejected/expired at the admission gate.
+    Shed,
+}
+
+impl SpanKind {
+    pub const ALL: [SpanKind; 11] = [
+        SpanKind::Admit,
+        SpanKind::GateBuffered,
+        SpanKind::Queued,
+        SpanKind::AffinityPlace,
+        SpanKind::KvTransfer,
+        SpanKind::Prefill,
+        SpanKind::Decode,
+        SpanKind::SpecVerify,
+        SpanKind::ChainHop,
+        SpanKind::Requeue,
+        SpanKind::Shed,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Admit => "admit",
+            SpanKind::GateBuffered => "gate_buffered",
+            SpanKind::Queued => "queued",
+            SpanKind::AffinityPlace => "affinity_place",
+            SpanKind::KvTransfer => "kv_transfer",
+            SpanKind::Prefill => "prefill",
+            SpanKind::Decode => "decode",
+            SpanKind::SpecVerify => "spec_verify",
+            SpanKind::ChainHop => "chain_hop",
+            SpanKind::Requeue => "requeue",
+            SpanKind::Shed => "shed",
+        }
+    }
+
+    pub fn index(self) -> usize {
+        SpanKind::ALL.iter().position(|k| *k == self).unwrap_or(0)
+    }
+
+    pub fn from_name(name: &str) -> Option<SpanKind> {
+        SpanKind::ALL.iter().copied().find(|k| k.name() == name)
+    }
+}
+
+/// One closed span on the request timeline. `n` is a kind-specific
+/// count (chain hop number, speculative verify steps); 0 means unset
+/// and is omitted from serialized forms.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span {
+    pub kind: SpanKind,
+    pub start_s: f64,
+    pub end_s: f64,
+    pub n: u32,
+}
+
+impl Span {
+    pub fn dur_s(&self) -> f64 {
+        (self.end_s - self.start_s).max(0.0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut kv = vec![
+            ("span", Json::str(self.kind.name())),
+            ("start_s", Json::num(self.start_s)),
+            ("dur_s", Json::num(self.dur_s())),
+        ];
+        if self.n != 0 {
+            kv.push(("n", Json::num(self.n as f64)));
+        }
+        Json::obj(kv)
+    }
+}
+
+/// 128-bit W3C trace id plus the sampling decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceCtx {
+    pub trace_id: u128,
+    pub sampled: bool,
+}
+
+impl TraceCtx {
+    pub fn id_hex(&self) -> String {
+        format!("{:032x}", self.trace_id)
+    }
+}
+
+/// Parse a W3C `traceparent` header (`00-<32hex>-<16hex>-<2hex>`).
+/// Returns the trace id and the caller's sampled flag; all-zero trace
+/// ids are invalid per spec and rejected.
+pub fn parse_traceparent(header: &str) -> Option<TraceCtx> {
+    let mut parts = header.trim().split('-');
+    let version = parts.next()?;
+    let trace = parts.next()?;
+    let parent = parts.next()?;
+    let flags = parts.next()?;
+    if version.len() != 2 || trace.len() != 32 || parent.len() != 16 || flags.len() != 2 {
+        return None;
+    }
+    if version == "ff" {
+        return None;
+    }
+    let trace_id = u128::from_str_radix(trace, 16).ok()?;
+    u64::from_str_radix(parent, 16).ok()?;
+    let flags = u8::from_str_radix(flags, 16).ok()?;
+    if trace_id == 0 {
+        return None;
+    }
+    Some(TraceCtx { trace_id, sampled: flags & 0x01 != 0 })
+}
+
+/// Format an outbound `traceparent` for a trace id. The parent span id
+/// is derived from the trace id (this gateway keeps spans in-band, not
+/// as W3C sub-spans), flags echo the sampling decision.
+pub fn format_traceparent(ctx: &TraceCtx) -> String {
+    let span_id = (mix64(ctx.trace_id as u64 ^ (ctx.trace_id >> 64) as u64)).max(1);
+    format!(
+        "00-{:032x}-{span_id:016x}-{:02x}",
+        ctx.trace_id,
+        if ctx.sampled { 1 } else { 0 }
+    )
+}
+
+/// SplitMix64 finalizer — cheap stateless bit mixing for id minting and
+/// deterministic sampling.
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Live per-request span accumulator. Carried as
+/// `Option<Box<TraceState>>` on the job through every handoff, so the
+/// trace-off path stores a null pointer and does no work.
+#[derive(Debug, Clone)]
+pub struct TraceState {
+    pub ctx: TraceCtx,
+    /// Request entry time (gateway epoch seconds).
+    pub start_s: f64,
+    /// Last handoff time — each phase closes `[mark_s, now]`.
+    pub mark_s: f64,
+    pub spans: Vec<Span>,
+}
+
+impl TraceState {
+    pub fn new(ctx: TraceCtx, now_s: f64) -> TraceState {
+        TraceState { ctx, start_s: now_s, mark_s: now_s, spans: Vec::with_capacity(8) }
+    }
+
+    /// Close the current phase `[mark_s, now]` as `kind` and advance the
+    /// mark to `now`.
+    pub fn phase(&mut self, kind: SpanKind, now_s: f64) {
+        self.phase_n(kind, now_s, 0);
+    }
+
+    pub fn phase_n(&mut self, kind: SpanKind, now_s: f64, n: u32) {
+        let start = self.mark_s;
+        let end = now_s.max(start);
+        self.spans.push(Span { kind, start_s: start, end_s: end, n });
+        self.mark_s = end;
+    }
+
+    /// Insert an already-anchored span (e.g. a worker-side span merged by
+    /// the supervisor) without moving the mark.
+    pub fn push_span(&mut self, span: Span) {
+        self.spans.push(span);
+    }
+}
+
+/// A completed request timeline as stored by the recorder.
+#[derive(Debug, Clone)]
+pub struct TraceRecord {
+    pub trace_id: u128,
+    pub tier: &'static str,
+    pub priority: &'static str,
+    /// `"ok"` or the typed failure kind name (`shed`, `timeout`, ...).
+    pub outcome: &'static str,
+    pub start_s: f64,
+    pub total_s: f64,
+    pub tokens: usize,
+    pub spans: Vec<Span>,
+}
+
+impl TraceRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("trace_id", Json::str(format!("{:032x}", self.trace_id))),
+            ("tier", Json::str(self.tier)),
+            ("priority", Json::str(self.priority)),
+            ("outcome", Json::str(self.outcome)),
+            ("start_s", Json::num(self.start_s)),
+            ("total_s", Json::num(self.total_s)),
+            ("tokens", Json::num(self.tokens as f64)),
+            ("spans", Json::arr(self.spans.iter().map(|s| s.to_json()))),
+        ])
+    }
+}
+
+/// Per-gateway flight recorder: a bounded ring of the most recent
+/// completed traces. Writers claim a slot with one atomic increment and
+/// `try_lock` the storage — on contention the record is dropped (and
+/// counted) rather than ever blocking the serving path; only the
+/// `/debug/traces` scrape holds the lock across the ring.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    enabled: AtomicBool,
+    /// Ring capacity; settable once at stack start.
+    cap: AtomicUsize,
+    /// Sampling rate in [0,1] as f64 bits.
+    sample_bits: AtomicU64,
+    /// Monotonic id-minting counter, seeded per process.
+    mint: AtomicU64,
+    seed: AtomicU64,
+    head: AtomicUsize,
+    ring: Mutex<Vec<Option<TraceRecord>>>,
+    pub dropped: AtomicU64,
+}
+
+pub const DEFAULT_RING_SIZE: usize = 256;
+
+impl Default for FlightRecorder {
+    fn default() -> FlightRecorder {
+        FlightRecorder {
+            enabled: AtomicBool::new(false),
+            cap: AtomicUsize::new(DEFAULT_RING_SIZE),
+            sample_bits: AtomicU64::new(1.0f64.to_bits()),
+            mint: AtomicU64::new(1),
+            seed: AtomicU64::new(0x5BEC_7AC3_D00D_F00D),
+            head: AtomicUsize::new(0),
+            ring: Mutex::new(Vec::new()),
+            dropped: AtomicU64::new(0),
+        }
+    }
+}
+
+impl FlightRecorder {
+    /// Configure at stack start. `seed` perturbs minted trace ids so
+    /// concurrent gateways do not collide (wall-clock nanos live; a
+    /// fixed seed in tests keeps minting deterministic).
+    pub fn configure(&self, enabled: bool, ring_size: usize, sample_rate: f64, seed: u64) {
+        self.cap.store(ring_size.max(1), Ordering::Relaxed);
+        self.sample_bits
+            .store(sample_rate.clamp(0.0, 1.0).to_bits(), Ordering::Relaxed);
+        self.seed.store(seed, Ordering::Relaxed);
+        self.enabled.store(enabled, Ordering::Release);
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Acquire)
+    }
+
+    /// Mint a fresh 128-bit trace id and take the sampling decision.
+    /// Sampling is deterministic in the id (`mix(id) / 2^64 < rate`) so
+    /// a given id samples identically everywhere it is observed.
+    pub fn mint(&self) -> TraceCtx {
+        let seed = self.seed.load(Ordering::Relaxed);
+        let c = self.mint.fetch_add(1, Ordering::Relaxed);
+        let hi = mix64(seed ^ c);
+        let lo = mix64(c.wrapping_mul(0xA24B_AED4_963E_E407) ^ seed.rotate_left(17));
+        let trace_id = ((hi as u128) << 64) | lo as u128 | 1;
+        TraceCtx { trace_id, sampled: self.sample_hit(trace_id) }
+    }
+
+    pub fn sample_hit(&self, trace_id: u128) -> bool {
+        let rate = f64::from_bits(self.sample_bits.load(Ordering::Relaxed));
+        if rate >= 1.0 {
+            return true;
+        }
+        if rate <= 0.0 {
+            return false;
+        }
+        let x = mix64(trace_id as u64 ^ (trace_id >> 64) as u64);
+        (x as f64 / u64::MAX as f64) < rate
+    }
+
+    /// Record a completed trace. Never blocks: one atomic slot claim, a
+    /// `try_lock`, and an O(1) slot write.
+    pub fn record(&self, rec: TraceRecord) {
+        if !self.enabled() {
+            return;
+        }
+        let cap = self.cap.load(Ordering::Relaxed).max(1);
+        match self.ring.try_lock() {
+            Ok(mut ring) => {
+                if ring.len() < cap {
+                    ring.resize(cap, None);
+                } else if ring.len() > cap {
+                    ring.truncate(cap);
+                }
+                let i = self.head.fetch_add(1, Ordering::Relaxed) % cap;
+                ring[i] = Some(rec);
+            }
+            Err(_) => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Newest-first snapshot of the ring.
+    pub fn snapshot(&self) -> Vec<TraceRecord> {
+        let ring = match self.ring.lock() {
+            Ok(r) => r,
+            Err(p) => p.into_inner(),
+        };
+        if ring.is_empty() {
+            return Vec::new();
+        }
+        let cap = ring.len();
+        let head = self.head.load(Ordering::Relaxed);
+        let mut out = Vec::new();
+        for off in 1..=cap {
+            // Walk backwards from the most recently written slot.
+            let i = (head + cap - off) % cap;
+            if let Some(rec) = &ring[i] {
+                out.push(rec.clone());
+            }
+        }
+        out
+    }
+}
+
+// ---- wire form ----------------------------------------------------------
+
+/// Serialize spans for the RPC wire as compact arrays
+/// `[name, start_s, dur_s, n]`. Whether timestamps are absolute or
+/// receipt-relative is the caller's contract: workers ship spans
+/// relative to job receipt and the supervisor rebases them onto its
+/// dispatch mark.
+pub fn spans_to_wire(spans: &[Span]) -> Json {
+    Json::arr(spans.iter().map(|s| {
+        Json::arr(vec![
+            Json::str(s.kind.name()),
+            Json::num(s.start_s),
+            Json::num(s.dur_s()),
+            Json::num(s.n as f64),
+        ])
+    }))
+}
+
+/// Lenient decode of the wire form: unknown span kinds and malformed
+/// entries are skipped, so mixed-version fleets degrade to partial
+/// traces instead of failed frames.
+pub fn spans_from_wire(j: &Json) -> Vec<Span> {
+    let mut out = Vec::new();
+    let Some(items) = j.as_arr() else { return out };
+    for it in items {
+        let Some(f) = it.as_arr() else { continue };
+        if f.len() < 3 {
+            continue;
+        }
+        let Some(kind) = f[0].as_str().and_then(SpanKind::from_name) else { continue };
+        let (Some(start), Some(dur)) = (f[1].as_f64(), f[2].as_f64()) else { continue };
+        let n = f.get(3).and_then(Json::as_f64).unwrap_or(0.0) as u32;
+        out.push(Span { kind, start_s: start, end_s: start + dur.max(0.0), n });
+    }
+    out
+}
+
+// ---- access log ---------------------------------------------------------
+
+/// Buffered non-blocking access-log writer. The serving path `try_send`s
+/// one JSON line per completed/failed request into a bounded channel and
+/// a background thread drains it to stderr or an append-mode file; when
+/// the buffer is full the line is dropped (and counted) so the router
+/// hot path never stalls on I/O.
+pub struct AccessLog {
+    enabled: AtomicBool,
+    tx: Mutex<Option<Channel<String>>>,
+    writer: Mutex<Option<std::thread::JoinHandle<()>>>,
+    pub dropped: AtomicU64,
+}
+
+impl std::fmt::Debug for AccessLog {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("AccessLog")
+            .field("enabled", &self.enabled.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+impl Default for AccessLog {
+    fn default() -> AccessLog {
+        AccessLog {
+            enabled: AtomicBool::new(false),
+            tx: Mutex::new(None),
+            writer: Mutex::new(None),
+            dropped: AtomicU64::new(0),
+        }
+    }
+}
+
+impl AccessLog {
+    /// Start the writer thread. `target` is `""` (disabled), `"stderr"`,
+    /// or a file path opened in append mode.
+    pub fn configure(&self, target: &str) {
+        if target.is_empty() {
+            return;
+        }
+        let ch: Channel<String> = Channel::bounded(1024);
+        let rx = ch.clone();
+        let target = target.to_string();
+        let handle = std::thread::Builder::new()
+            .name("ps-access-log".into())
+            .spawn(move || {
+                let mut file: Option<std::fs::File> = if target == "stderr" {
+                    None
+                } else {
+                    std::fs::OpenOptions::new()
+                        .create(true)
+                        .append(true)
+                        .open(&target)
+                        .ok()
+                };
+                while let Some(line) = rx.recv() {
+                    match &mut file {
+                        Some(f) => {
+                            let _ = writeln!(f, "{line}");
+                        }
+                        None => eprintln!("{line}"),
+                    }
+                    // Batch-drain whatever queued while we wrote, then
+                    // flush once — amortizes syscalls under load.
+                    for line in rx.drain_up_to(256) {
+                        match &mut file {
+                            Some(f) => {
+                                let _ = writeln!(f, "{line}");
+                            }
+                            None => eprintln!("{line}"),
+                        }
+                    }
+                    if let Some(f) = &mut file {
+                        let _ = f.flush();
+                    }
+                }
+            })
+            .expect("spawn access log writer");
+        *self.tx.lock().unwrap() = Some(ch);
+        *self.writer.lock().unwrap() = Some(handle);
+        self.enabled.store(true, Ordering::Release);
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Acquire)
+    }
+
+    /// Enqueue one line; drops (and counts) instead of blocking.
+    pub fn write_line(&self, line: String) {
+        if !self.enabled() {
+            return;
+        }
+        let guard = self.tx.lock().unwrap();
+        if let Some(ch) = guard.as_ref() {
+            if ch.try_send(line).is_err() {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+impl Drop for AccessLog {
+    fn drop(&mut self) {
+        if let Some(ch) = self.tx.lock().unwrap().take() {
+            ch.close();
+        }
+        if let Some(h) = self.writer.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traceparent_round_trip() {
+        let ctx = TraceCtx { trace_id: 0x0123_4567_89ab_cdef_0123_4567_89ab_cdef, sampled: true };
+        let header = format_traceparent(&ctx);
+        let back = parse_traceparent(&header).unwrap();
+        assert_eq!(back.trace_id, ctx.trace_id);
+        assert!(back.sampled);
+    }
+
+    #[test]
+    fn traceparent_rejects_malformed() {
+        assert!(parse_traceparent("").is_none());
+        assert!(parse_traceparent("00-abc-def-01").is_none());
+        assert!(parse_traceparent(&format!("00-{:032x}-{:016x}-01", 0u128, 5u64)).is_none());
+        assert!(parse_traceparent(&format!("ff-{:032x}-{:016x}-01", 7u128, 5u64)).is_none());
+        assert!(parse_traceparent(&format!("00-{:032x}-{:016x}-zz", 7u128, 5u64)).is_none());
+        let ok = parse_traceparent(&format!("00-{:032x}-{:016x}-00", 7u128, 5u64)).unwrap();
+        assert!(!ok.sampled);
+        assert_eq!(ok.trace_id, 7);
+    }
+
+    #[test]
+    fn minted_ids_unique_and_nonzero() {
+        let rec = FlightRecorder::default();
+        rec.configure(true, 8, 1.0, 42);
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..1000 {
+            let ctx = rec.mint();
+            assert_ne!(ctx.trace_id, 0);
+            assert!(ctx.sampled);
+            assert!(seen.insert(ctx.trace_id), "duplicate trace id");
+        }
+    }
+
+    #[test]
+    fn sampling_rate_is_deterministic_and_roughly_proportional() {
+        let rec = FlightRecorder::default();
+        rec.configure(true, 8, 0.25, 7);
+        let mut hits = 0usize;
+        for _ in 0..4000 {
+            let ctx = rec.mint();
+            // Decision is a pure function of the id.
+            assert_eq!(ctx.sampled, rec.sample_hit(ctx.trace_id));
+            hits += ctx.sampled as usize;
+        }
+        assert!((600..1400).contains(&hits), "hits {hits} far from 25%");
+    }
+
+    #[test]
+    fn ring_keeps_newest_first() {
+        let rec = FlightRecorder::default();
+        rec.configure(true, 4, 1.0, 1);
+        for i in 0..10u32 {
+            rec.record(TraceRecord {
+                trace_id: i as u128 + 1,
+                tier: "small",
+                priority: "standard",
+                outcome: "ok",
+                start_s: i as f64,
+                total_s: 1.0,
+                tokens: 3,
+                spans: vec![],
+            });
+        }
+        let snap = rec.snapshot();
+        assert_eq!(snap.len(), 4);
+        let ids: Vec<u128> = snap.iter().map(|r| r.trace_id).collect();
+        assert_eq!(ids, vec![10, 9, 8, 7]);
+    }
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let rec = FlightRecorder::default();
+        rec.record(TraceRecord {
+            trace_id: 1,
+            tier: "small",
+            priority: "standard",
+            outcome: "ok",
+            start_s: 0.0,
+            total_s: 1.0,
+            tokens: 0,
+            spans: vec![],
+        });
+        assert!(rec.snapshot().is_empty());
+    }
+
+    #[test]
+    fn phase_chain_is_contiguous_and_monotonic() {
+        let ctx = TraceCtx { trace_id: 9, sampled: true };
+        let mut st = TraceState::new(ctx, 1.0);
+        st.phase(SpanKind::Admit, 1.5);
+        st.phase(SpanKind::Queued, 2.0);
+        // A clock that runs backwards must not produce a negative span.
+        st.phase(SpanKind::Prefill, 1.9);
+        st.phase(SpanKind::Decode, 3.0);
+        let spans = &st.spans;
+        assert_eq!(spans.len(), 4);
+        for w in spans.windows(2) {
+            assert!(w[1].start_s >= w[0].start_s);
+            assert!((w[1].start_s - w[0].end_s).abs() < 1e-12);
+        }
+        for s in spans {
+            assert!(s.end_s >= s.start_s);
+        }
+    }
+
+    #[test]
+    fn span_json_omits_zero_n() {
+        let s = Span { kind: SpanKind::Decode, start_s: 1.0, end_s: 2.0, n: 0 };
+        assert!(s.to_json().get("n").is_none());
+        let s = Span { kind: SpanKind::ChainHop, start_s: 1.0, end_s: 2.0, n: 2 };
+        assert_eq!(s.to_json().get("n").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn wire_spans_round_trip_and_skip_unknown() {
+        let spans = vec![
+            Span { kind: SpanKind::Prefill, start_s: 0.5, end_s: 0.75, n: 0 },
+            Span { kind: SpanKind::SpecVerify, start_s: 0.75, end_s: 0.75, n: 4 },
+        ];
+        let j = spans_to_wire(&spans);
+        let back = spans_from_wire(&j);
+        assert_eq!(back, spans);
+        // Unknown kinds and malformed entries are skipped, not fatal.
+        let j = Json::parse(r#"[["warp",0,1,0],["decode",1.0,0.5],["decode"],7]"#).unwrap();
+        let back = spans_from_wire(&j);
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].kind, SpanKind::Decode);
+        assert!((back[0].end_s - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn access_log_writes_lines_to_file() {
+        let dir = std::env::temp_dir().join(format!("ps-acclog-{}", std::process::id()));
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("access.jsonl");
+        let _ = std::fs::remove_file(&path);
+        {
+            let log = AccessLog::default();
+            assert!(!log.enabled());
+            log.write_line("before-configure".into()); // silently ignored
+            log.configure(path.to_str().unwrap());
+            assert!(log.enabled());
+            log.write_line(r#"{"trace_id":"abc","outcome":"ok"}"#.into());
+            log.write_line(r#"{"trace_id":"def","outcome":"shed"}"#.into());
+            // Drop closes the channel and joins the writer.
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "{text:?}");
+        assert!(lines[0].contains("\"abc\""));
+        assert!(lines[1].contains("\"shed\""));
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,568 @@
+//! End-to-end request tracing, across every layer it touches.
+//!
+//! The invariants under test:
+//! * **Trace-off is PR-parity**: with `pool.trace.enabled = false` (the
+//!   default) no trace contexts are minted, `/metrics` exports no
+//!   `ps_span_seconds` series, the flight recorder stays empty, and
+//!   token streams are bit-identical to a tracing-on run.
+//! * **Complete, monotonic timelines** on both the thread and process
+//!   substrates: every completed request's record carries `admit`,
+//!   `queued`, `prefill`, and `decode` spans with end ≥ start and all
+//!   spans anchored inside the request's lifetime — on the process
+//!   substrate the prefill/decode spans crossed the RPC wire.
+//! * **SIGKILL mid-decode keeps the trace**: a worker killed with
+//!   in-flight work yields a trace containing a `requeue` span plus a
+//!   `decode` span from the second attempt, and zero lost completions.
+//! * **W3C interop**: an inbound `traceparent` header round-trips —
+//!   the response echoes the same trace id in `x-trace-id` and the
+//!   record lands in `/debug/traces` under that id.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use pick_and_spin::config::{Config, SubstrateKind};
+use pick_and_spin::gateway::LiveStack;
+use pick_and_spin::telemetry::trace::{SpanKind, TraceCtx, TraceRecord};
+use pick_and_spin::testkit::wait_until;
+use pick_and_spin::util::json::Json;
+
+const WORKER_BIN: &str = env!("CARGO_BIN_EXE_pick-and-spin");
+
+fn easy_prompt(i: usize) -> String {
+    format!("what is {i} plus {i}?")
+}
+
+fn base_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.pool.replicas = [1, 1, 1];
+    cfg.pool.max_inflight = 8;
+    cfg.pool.flush_timeout_s = 0.003;
+    cfg.pool.scale_interval_s = 0.02;
+    cfg.orchestrator.idle_timeout_s = 3600.0;
+    cfg
+}
+
+fn traced_cfg() -> Config {
+    let mut cfg = base_cfg();
+    cfg.pool.trace.enabled = true;
+    cfg.pool.trace.sample_rate = 1.0;
+    cfg
+}
+
+fn process_cfg(mut cfg: Config) -> Config {
+    cfg.pool.substrate = SubstrateKind::Process;
+    cfg.pool.worker_bin = Some(WORKER_BIN.to_string());
+    cfg.pool.worker_log_dir = std::env::var("PS_WORKER_LOG_DIR").ok();
+    cfg
+}
+
+/// Serve `n` easy prompts concurrently with explicit trace ids
+/// `base+i`; return index → token stream.
+fn serve_traced(
+    stack: &Arc<LiveStack>,
+    n: usize,
+    base: u128,
+    max_new: usize,
+) -> std::collections::BTreeMap<usize, Vec<i32>> {
+    use pick_and_spin::gateway::CompletionRequest;
+    let handles: Vec<_> = (0..n)
+        .map(|i| {
+            let s = Arc::clone(stack);
+            std::thread::spawn(move || {
+                let req = CompletionRequest::new(easy_prompt(i))
+                    .max_tokens(max_new)
+                    .trace_ctx(TraceCtx {
+                        trace_id: base + i as u128,
+                        sampled: true,
+                    });
+                (i, s.complete_request(req).expect("request").tokens)
+            })
+        })
+        .collect();
+    handles
+        .into_iter()
+        .map(|h| h.join().expect("request thread"))
+        .collect()
+}
+
+fn find_record(stack: &LiveStack, trace_id: u128) -> Option<TraceRecord> {
+    stack
+        .metrics
+        .recorder
+        .snapshot()
+        .into_iter()
+        .find(|r| r.trace_id == trace_id)
+}
+
+/// Every span well-formed and anchored inside the request lifetime, and
+/// the phase spans (admit/queued/prefill/decode) in causal order.
+fn assert_timeline(r: &TraceRecord) {
+    assert!(!r.spans.is_empty(), "empty timeline for {:032x}", r.trace_id);
+    let end = r.start_s + r.total_s;
+    for s in &r.spans {
+        assert!(
+            s.end_s >= s.start_s,
+            "span {} runs backwards: [{}, {}]",
+            s.kind.name(),
+            s.start_s,
+            s.end_s
+        );
+        assert!(
+            s.start_s >= r.start_s - 1e-9 && s.end_s <= end + 1e-6,
+            "span {} [{}, {}] outside request [{}, {}]",
+            s.kind.name(),
+            s.start_s,
+            s.end_s,
+            r.start_s,
+            end
+        );
+    }
+    let last_end = |kind: SpanKind| -> f64 {
+        r.spans
+            .iter()
+            .filter(|s| s.kind == kind)
+            .map(|s| s.end_s)
+            .fold(f64::NAN, f64::max)
+    };
+    for kind in [SpanKind::Admit, SpanKind::Queued, SpanKind::Prefill, SpanKind::Decode] {
+        assert!(
+            r.spans.iter().any(|s| s.kind == kind),
+            "timeline for {:032x} is missing `{}`: {:?}",
+            r.trace_id,
+            kind.name(),
+            r.spans.iter().map(|s| s.kind.name()).collect::<Vec<_>>()
+        );
+    }
+    assert!(last_end(SpanKind::Admit) <= last_end(SpanKind::Prefill) + 1e-9);
+    assert!(last_end(SpanKind::Prefill) <= last_end(SpanKind::Decode) + 1e-9);
+}
+
+#[test]
+fn trace_off_is_default_exports_nothing_and_tokens_match_trace_on() {
+    let n = 16;
+    let plain_stack = Arc::new(LiveStack::start_sim(&base_cfg()).unwrap());
+    let plain = serve_traced(&plain_stack, n, 0x9000, 16);
+    // Off (the default): no span series, no recorded traces, and the
+    // explicit per-request ctx is ignored (no recorder to land in).
+    let snap = plain_stack.metrics_snapshot();
+    assert!(!snap.iter().any(|(k, _)| k.starts_with("ps_span_seconds")));
+    assert!(plain_stack.metrics.recorder.snapshot().is_empty());
+    assert!(!plain_stack.metrics.recorder.enabled());
+    // The latency-breakdown histograms are always-on (satellite metrics,
+    // not gated on tracing).
+    assert!(snap.iter().any(|(k, _)| k.starts_with("ps_ttft_seconds")));
+    assert!(snap.iter().any(|(k, _)| k.starts_with("ps_tpot_seconds")));
+    drop(plain_stack);
+
+    let stack = Arc::new(LiveStack::start_sim(&traced_cfg()).unwrap());
+    let traced = serve_traced(&stack, n, 0x9000, 16);
+    assert_eq!(plain, traced, "tracing changed the token stream");
+    assert_eq!(stack.metrics.errors.load(Ordering::Relaxed), 0);
+    // On: the same traffic now exports span histograms and records.
+    assert!(
+        wait_until(Duration::from_secs(5), || {
+            stack.metrics.recorder.snapshot().len() >= n
+        }),
+        "recorder holds {} of {n} traces",
+        stack.metrics.recorder.snapshot().len()
+    );
+    let snap = stack.metrics_snapshot();
+    assert!(snap.iter().any(|(k, _)| k.starts_with("ps_span_seconds")));
+}
+
+#[test]
+fn thread_substrate_traces_are_complete_and_monotonic() {
+    let n = 8;
+    let stack = Arc::new(LiveStack::start_sim(&traced_cfg()).unwrap());
+    serve_traced(&stack, n, 0xA000, 12);
+    assert!(
+        wait_until(Duration::from_secs(5), || {
+            (0..n).all(|i| find_record(&stack, 0xA000 + i as u128).is_some())
+        }),
+        "not every trace landed in the recorder"
+    );
+    for i in 0..n {
+        let r = find_record(&stack, 0xA000 + i as u128).unwrap();
+        assert_eq!(r.outcome, "ok");
+        assert!(r.tokens > 0);
+        assert_timeline(&r);
+    }
+}
+
+#[test]
+fn process_substrate_traces_cross_the_wire() {
+    // Same timeline completeness, but prefill/decode spans originate
+    // inside worker *processes* and come back over the RPC frames.
+    let n = 8;
+    let stack =
+        Arc::new(LiveStack::start_sim(&process_cfg(traced_cfg())).unwrap());
+    serve_traced(&stack, n, 0xB000, 12);
+    assert!(
+        wait_until(Duration::from_secs(10), || {
+            (0..n).all(|i| find_record(&stack, 0xB000 + i as u128).is_some())
+        }),
+        "not every trace crossed the wire into the recorder"
+    );
+    for i in 0..n {
+        let r = find_record(&stack, 0xB000 + i as u128).unwrap();
+        assert_eq!(r.outcome, "ok");
+        assert_timeline(&r);
+    }
+    assert_eq!(stack.metrics.errors.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn sigkill_mid_decode_trace_shows_requeue_and_second_decode() {
+    // SIGKILL one of two small-tier workers with traffic in flight: the
+    // supervisor requeues off its dispatch ledger, and the victims'
+    // traces must show the `requeue` span plus a fresh `decode` span
+    // from the second attempt — with zero lost completions.
+    let mut cfg = process_cfg(traced_cfg());
+    cfg.pool.replicas = [2, 1, 1];
+    let stack = Arc::new(LiveStack::start_sim(&cfg).unwrap());
+    let n = 48usize;
+    let handles: Vec<_> = (0..n)
+        .map(|i| {
+            let s = Arc::clone(&stack);
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(i as u64 * 2));
+                let req = pick_and_spin::gateway::CompletionRequest::new(
+                    easy_prompt(i),
+                )
+                .max_tokens(24)
+                .trace_ctx(TraceCtx { trace_id: 0xC000 + i as u128, sampled: true });
+                s.complete_request(req)
+            })
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(30));
+    assert!(
+        stack.inject_replica_failure(0),
+        "no Ready small-tier worker to kill"
+    );
+    for h in handles {
+        let r = h
+            .join()
+            .unwrap()
+            .expect("completion lost across the SIGKILL");
+        assert!(!r.tokens.is_empty());
+    }
+    assert_eq!(stack.metrics.completed.load(Ordering::Relaxed), n as u64);
+    assert_eq!(stack.metrics.errors.load(Ordering::Relaxed), 0);
+    assert!(
+        stack.metrics.requeued.load(Ordering::Relaxed) >= 1,
+        "in-flight jobs must requeue off the killed worker's ledger"
+    );
+    // At least one trace carries the scar: requeue + a decode that
+    // finished on the survivor.
+    assert!(
+        wait_until(Duration::from_secs(10), || {
+            stack.metrics.recorder.snapshot().iter().any(|r| {
+                r.outcome == "ok"
+                    && r.spans.iter().any(|s| s.kind == SpanKind::Requeue)
+                    && r.spans.iter().any(|s| s.kind == SpanKind::Decode)
+            })
+        }),
+        "no completed trace shows requeue + second decode"
+    );
+    let scarred: Vec<_> = stack
+        .metrics
+        .recorder
+        .snapshot()
+        .into_iter()
+        .filter(|r| r.spans.iter().any(|s| s.kind == SpanKind::Requeue))
+        .collect();
+    for r in &scarred {
+        assert_eq!(r.outcome, "ok", "requeued request must still complete");
+        let requeue_end = r
+            .spans
+            .iter()
+            .filter(|s| s.kind == SpanKind::Requeue)
+            .map(|s| s.end_s)
+            .fold(f64::NAN, f64::max);
+        let decode_end = r
+            .spans
+            .iter()
+            .filter(|s| s.kind == SpanKind::Decode)
+            .map(|s| s.end_s)
+            .fold(f64::NAN, f64::max);
+        assert!(
+            decode_end >= requeue_end,
+            "second decode must finish after the requeue"
+        );
+    }
+}
+
+#[test]
+fn traceparent_round_trips_over_http_and_lands_in_debug_traces() {
+    use pick_and_spin::gateway::http::http_request_with_headers;
+    use pick_and_spin::gateway::serve_http;
+
+    let stack = Arc::new(LiveStack::start_sim(&traced_cfg()).unwrap());
+    let srv = serve_http(Arc::clone(&stack), 0, 4).unwrap();
+    let port = srv.port;
+    let trace_hex = "4bf92f3577b34da6a3ce929d0e0e4736";
+    let parent = format!("00-{trace_hex}-00f067aa0ba902b7-01");
+    let (status, headers, body) = http_request_with_headers(
+        port,
+        "POST",
+        "/v1/completions",
+        &[("traceparent", &parent)],
+        Some(r#"{"prompt": "what is 2 plus 2?", "max_tokens": 8}"#),
+    )
+    .unwrap();
+    assert_eq!(status, 200, "body: {body}");
+    let echoed = headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case("x-trace-id"))
+        .map(|(_, v)| v.as_str())
+        .expect("response must echo x-trace-id");
+    assert_eq!(echoed, trace_hex, "trace id must survive the round trip");
+
+    // A request without a traceparent gets a freshly minted id.
+    let (status, headers, _) = http_request_with_headers(
+        port,
+        "POST",
+        "/v1/completions",
+        &[],
+        Some(r#"{"prompt": "what is 3 plus 3?", "max_tokens": 8}"#),
+    )
+    .unwrap();
+    assert_eq!(status, 200);
+    let minted = headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case("x-trace-id"))
+        .map(|(_, v)| v.clone())
+        .expect("minted trace id missing");
+    assert_eq!(minted.len(), 32);
+    assert_ne!(minted, trace_hex);
+
+    // Both traces are scrapeable at /debug/traces, newest first.
+    assert!(wait_until(Duration::from_secs(5), || {
+        let (s, b) =
+            pick_and_spin::gateway::http::http_request(port, "GET", "/debug/traces", None)
+                .unwrap();
+        s == 200 && b.contains(trace_hex) && b.contains(&minted)
+    }));
+    let (s, b) = pick_and_spin::gateway::http::http_request(
+        port,
+        "GET",
+        "/debug/traces?outcome=ok",
+        None,
+    )
+    .unwrap();
+    assert_eq!(s, 200);
+    let arr = Json::parse(&b).unwrap();
+    let arr = arr.as_arr().expect("traces body must be a JSON array");
+    assert!(arr.len() >= 2);
+    for rec in arr {
+        assert_eq!(rec.rstr("outcome").unwrap(), "ok");
+        assert!(!rec.rarr("spans").unwrap().is_empty());
+    }
+    // A filter that matches nothing returns an empty array, not an error.
+    let (s, b) = pick_and_spin::gateway::http::http_request(
+        port,
+        "GET",
+        "/debug/traces?outcome=shed&slow_ms=0",
+        None,
+    )
+    .unwrap();
+    assert_eq!(s, 200);
+    assert_eq!(Json::parse(&b).unwrap().as_arr().unwrap().len(), 0);
+    srv.stop();
+}
+
+#[test]
+fn readyz_reports_per_tier_readiness() {
+    use pick_and_spin::gateway::http::http_request;
+    use pick_and_spin::gateway::serve_http;
+
+    let stack = Arc::new(LiveStack::start_sim(&base_cfg()).unwrap());
+    let srv = serve_http(Arc::clone(&stack), 0, 2).unwrap();
+    let (s, b) = http_request(srv.port, "GET", "/healthz", None).unwrap();
+    assert_eq!((s, b.as_str()), (200, "ok"));
+    assert!(
+        wait_until(Duration::from_secs(10), || {
+            http_request(srv.port, "GET", "/readyz", None).unwrap().0 == 200
+        }),
+        "a fully provisioned pool never became ready"
+    );
+    let (_, b) = http_request(srv.port, "GET", "/readyz", None).unwrap();
+    let j = Json::parse(&b).unwrap();
+    assert!(j.bool_or("ready", false));
+    let tiers = j.rarr("tiers").unwrap();
+    assert_eq!(tiers.len(), 3);
+    for t in tiers {
+        assert!(t.bool_or("ready", false), "tier not ready: {}", t.dump());
+        assert!(t.rf64("ready_replicas").unwrap() >= 1.0);
+    }
+    srv.stop();
+}
+
+#[test]
+fn access_log_writes_one_json_line_per_request() {
+    let log_path = std::env::temp_dir().join(format!(
+        "ps-access-{}-{}.log",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos())
+            .unwrap_or(0)
+    ));
+    let log_str = log_path.to_str().unwrap().to_string();
+    let mut cfg = traced_cfg();
+    cfg.pool.trace.access_log = log_str.clone();
+    let stack = Arc::new(LiveStack::start_sim(&cfg).unwrap());
+    let n = 6;
+    serve_traced(&stack, n, 0xD000, 8);
+    assert!(
+        wait_until(Duration::from_secs(5), || {
+            std::fs::read_to_string(&log_str)
+                .map(|s| s.lines().count() >= n)
+                .unwrap_or(false)
+        }),
+        "access log never reached {n} lines"
+    );
+    let text = std::fs::read_to_string(&log_str).unwrap();
+    for line in text.lines() {
+        let j = Json::parse(line).expect("access log line must be JSON");
+        assert_eq!(j.rstr("outcome").unwrap(), "ok");
+        assert!(j.rf64("tokens").unwrap() > 0.0);
+        assert_eq!(j.rstr("trace_id").unwrap().len(), 32);
+        assert!(j.rf64("total_s").unwrap() >= 0.0);
+    }
+    assert_eq!(stack.metrics.access_log.dropped.load(Ordering::Relaxed), 0);
+    drop(stack);
+    let _ = std::fs::remove_file(&log_str);
+}
+
+#[test]
+fn multi_host_traces_are_scrapeable_at_debug_traces() {
+    // The full paper deployment shape: workers hosted by two real
+    // `ps-node` agents on localhost TCP, tracing on — span timelines
+    // must cross node agent → worker → supervisor and come out of the
+    // `/debug/traces` scrape. When `PS_TRACE_DUMP` is set (CI), the
+    // scraped dump is written there and uploaded as an artifact.
+    use pick_and_spin::gateway::http::http_request;
+    use pick_and_spin::gateway::serve_http;
+    use std::process::{Command, Stdio};
+
+    let free_port = || {
+        std::net::TcpListener::bind("127.0.0.1:0")
+            .unwrap()
+            .local_addr()
+            .unwrap()
+            .port()
+    };
+    let spawn_agent = |name: &str| {
+        let addr = format!("127.0.0.1:{}", free_port());
+        let mut cmd = Command::new(WORKER_BIN);
+        cmd.arg("ps-node")
+            .arg("--listen")
+            .arg(&addr)
+            .arg("--slots")
+            .arg("4")
+            .arg("--name")
+            .arg(name)
+            .stdin(Stdio::null())
+            .stdout(Stdio::null());
+        if let Ok(dir) = std::env::var("PS_WORKER_LOG_DIR") {
+            cmd.arg("--log-dir").arg(dir);
+        }
+        let child = cmd.spawn().expect("spawn ps-node agent");
+        (addr, child)
+    };
+    let (addr0, mut agent0) = spawn_agent("trace-n0");
+    let (addr1, mut agent1) = spawn_agent("trace-n1");
+
+    let mut cfg = process_cfg(traced_cfg());
+    cfg.pool.nodes.agents = vec![addr0, addr1];
+    let stack = Arc::new(LiveStack::start_sim(&cfg).unwrap());
+    let srv = serve_http(Arc::clone(&stack), 0, 4).unwrap();
+    let n = 12;
+    serve_traced(&stack, n, 0xE000, 12);
+
+    let mut dump = String::new();
+    assert!(
+        wait_until(Duration::from_secs(10), || {
+            let (s, b) =
+                http_request(srv.port, "GET", "/debug/traces", None).unwrap();
+            dump = b;
+            s == 200
+                && Json::parse(&dump)
+                    .ok()
+                    .and_then(|j| j.as_arr().map(|a| a.len()))
+                    .unwrap_or(0)
+                    >= n
+        }),
+        "multi-host traces never reached /debug/traces"
+    );
+    let j = Json::parse(&dump).unwrap();
+    for rec in j.as_arr().unwrap() {
+        assert_eq!(rec.rstr("trace_id").unwrap().len(), 32);
+        assert!(!rec.rarr("spans").unwrap().is_empty());
+    }
+    if let Ok(path) = std::env::var("PS_TRACE_DUMP") {
+        if let Some(dir) = std::path::Path::new(&path).parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        std::fs::write(&path, &dump).expect("write trace dump");
+    }
+    srv.stop();
+    drop(stack);
+    let _ = agent0.kill();
+    let _ = agent0.wait();
+    let _ = agent1.kill();
+    let _ = agent1.wait();
+}
+
+#[test]
+fn sim_engine_emits_the_same_span_schema_on_virtual_time() {
+    use pick_and_spin::baselines::SelectionPolicy;
+    use pick_and_spin::sim::{Deployment, SimConfig};
+    use pick_and_spin::workload::{OracleClassifier, TemplateLibrary};
+
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/data/templates.json");
+    if !std::path::Path::new(path).exists() {
+        eprintln!("skipping: templates not built");
+        return;
+    }
+    let lib = TemplateLibrary::load(path).unwrap();
+    let mut sc = SimConfig::defaults();
+    sc.deployment = Deployment::Static;
+    sc.policy = SelectionPolicy::RoundRobin;
+    sc.n_requests = 500;
+    sc.rate_qps = 10.0;
+    sc.pool.trace.enabled = true;
+    let cls = Box::new(OracleClassifier::new(lib.clone(), 0.0, 1));
+    let rep = pick_and_spin::sim::run(&sc, &lib, cls).unwrap();
+    let with_spans = rep.records.iter().filter(|r| !r.spans.is_empty()).count();
+    assert!(with_spans > 0, "sim emitted no span timelines");
+    for r in &rep.records {
+        let mut last_start = f64::NEG_INFINITY;
+        for s in &r.spans {
+            assert!(s.end_s >= s.start_s, "sim span runs backwards");
+            assert!(s.start_s >= last_start, "sim spans out of order");
+            last_start = s.start_s;
+            // Same vocabulary as the live path: names round-trip.
+            assert!(SpanKind::from_name(s.kind.name()).is_some());
+        }
+        if r.success {
+            for kind in [SpanKind::Admit, SpanKind::Queued, SpanKind::Prefill, SpanKind::Decode]
+            {
+                assert!(
+                    r.spans.iter().any(|s| s.kind == kind),
+                    "sim success timeline missing `{}`",
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    // Trace off: identical schema switch — records carry no spans.
+    sc.pool.trace.enabled = false;
+    let cls = Box::new(OracleClassifier::new(lib.clone(), 0.0, 1));
+    let rep = pick_and_spin::sim::run(&sc, &lib, cls).unwrap();
+    assert!(rep.records.iter().all(|r| r.spans.is_empty()));
+}
