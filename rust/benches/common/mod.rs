@@ -18,6 +18,18 @@ pub fn library() -> TemplateLibrary {
     )
 }
 
+/// The real library when built, else the built-in synthetic stand-in —
+/// for sections (the pinned routing bench) that must run in CI, where
+/// `make artifacts` hasn't happened.
+pub fn library_or_synthetic() -> TemplateLibrary {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/data/templates.json");
+    if std::path::Path::new(path).exists() {
+        TemplateLibrary::load(path).expect("templates.json parse")
+    } else {
+        TemplateLibrary::synthetic()
+    }
+}
+
 /// Experiment-scale knobs: requests per simulated run. The full paper
 /// scale (155,095 runs) is the default for `paper_tables`; set
 /// PS_BENCH_QUICK=1 for CI-speed runs.

@@ -6,7 +6,7 @@
 
 mod common;
 
-use common::{library, measure, selected, simulate, routed};
+use common::{base_config, library, library_or_synthetic, measure, selected, simulate, routed};
 use pick_and_spin::baselines::SelectionPolicy;
 use pick_and_spin::config::{Profile, RouterMode};
 use pick_and_spin::models::zoo;
@@ -860,6 +860,105 @@ fn main() {
         println!(
             "wrote BENCH_9.json (tracing-on throughput {:.1}% of off)",
             100.0 * on.tps / off.tps.max(1e-9)
+        );
+    }
+
+    if selected("routing") {
+        // Learned routing end-to-end: the pinned BENCH_10 scenario — the
+        // mixed 8-benchmark workload at 8 QPS on the 64-GPU simulated
+        // cluster, served once with the static TierDirected policy
+        // (every class-2 prompt pinned to the large tier: high success,
+        // very expensive) and once with the contextual bandit learning
+        // on top of the same fleet. The acceptance gate: the learner
+        // must lower summed request cost per successful answer without
+        // collapsing the success rate.
+        use pick_and_spin::sim::SimReport;
+        use pick_and_spin::util::json::Json;
+
+        // Runs on the built-in synthetic library when `make artifacts`
+        // hasn't happened (the CI case), or the real one when it has.
+        let lib = library_or_synthetic();
+        let mut sc = base_config(3_000);
+        sc.rate_qps = 8.0;
+        sc.policy = SelectionPolicy::TierDirected;
+        let stat = simulate(&lib, &sc);
+        sc.pool.routing.bandit.enabled = true;
+        let learned = simulate(&lib, &sc);
+
+        let line = |name: &str, r: &SimReport, note: &str| {
+            println!(
+                "{:<44} {:>9.4} $/success   {:>5.1}% success   {:>6.2}s mean lat   ({note})",
+                name,
+                r.cost_per_success_usd(),
+                r.success_rate() * 100.0,
+                r.mean_latency_s(),
+            );
+        };
+        line("learned routing (sim, mixed workload)", &stat, "static tier-directed");
+        line("learned routing (sim, mixed workload)", &learned, "contextual bandit");
+        assert!(
+            !learned.bandit_arms.is_empty(),
+            "the learner never received feedback"
+        );
+        assert!(
+            learned.cost_per_success_usd() < stat.cost_per_success_usd(),
+            "the bandit must lower cost per success \
+             ({:.4} vs {:.4} $/success)",
+            learned.cost_per_success_usd(),
+            stat.cost_per_success_usd()
+        );
+        assert!(
+            learned.success_rate() > 0.4,
+            "learned routing must still answer ({:.1}% success)",
+            learned.success_rate() * 100.0
+        );
+
+        let block = |r: &SimReport| {
+            Json::obj(vec![
+                ("cost_per_success_usd", Json::num(r.cost_per_success_usd())),
+                ("success_rate", Json::num(r.success_rate())),
+                ("mean_latency_s", Json::num(r.mean_latency_s())),
+                ("requests", Json::num(r.records.len() as f64)),
+            ])
+        };
+        let arms = Json::arr(learned.bandit_arms.iter().map(|a| {
+            Json::obj(vec![
+                ("class", Json::num(a.class as f64)),
+                ("tier", Json::num(a.tier as f64)),
+                ("selections", Json::num(a.selections as f64)),
+                ("successes", Json::num(a.successes as f64)),
+                ("failures", Json::num(a.failures as f64)),
+                ("mean_reward", Json::num(a.mean_reward)),
+                ("mean_latency_s", Json::num(a.mean_latency_s)),
+                ("mean_cost_usd", Json::num(a.mean_cost_usd)),
+            ])
+        }));
+        let report = Json::obj(vec![
+            ("bench", Json::str("routing")),
+            (
+                "scenario",
+                Json::obj(vec![
+                    ("requests", Json::num(sc.n_requests as f64)),
+                    ("rate_qps", Json::num(sc.rate_qps)),
+                    ("seed", Json::num(sc.seed as f64)),
+                ]),
+            ),
+            ("static_tier_directed", block(&stat)),
+            ("bandit", block(&learned)),
+            ("bandit_arms", arms),
+            (
+                "cost_per_success_ratio",
+                Json::num(
+                    learned.cost_per_success_usd()
+                        / stat.cost_per_success_usd().max(1e-12),
+                ),
+            ),
+        ]);
+        std::fs::write("BENCH_10.json", report.dump()).expect("write BENCH_10.json");
+        println!(
+            "wrote BENCH_10.json (cost/success {:.4} -> {:.4} $)",
+            stat.cost_per_success_usd(),
+            learned.cost_per_success_usd()
         );
     }
 

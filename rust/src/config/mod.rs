@@ -430,6 +430,42 @@ impl Default for TraceConfig {
     }
 }
 
+/// Learned routing (`pool.routing.*`): feedback-driven policies layered
+/// over the static classifier + Alg. 2 selection. Off by default —
+/// disabled reproduces the exact static routing decisions bit-for-bit.
+#[derive(Debug, Clone, Default)]
+pub struct RoutingConfig {
+    /// Online contextual bandit over (complexity class, tier) arms.
+    pub bandit: BanditConfig,
+}
+
+/// Contextual-bandit tier selection (`pool.routing.bandit.*`): per
+/// (complexity-class, tier) running estimates of success, latency, and
+/// cost learned from completed-request outcomes, selecting tiers via an
+/// epsilon-greedy/UCB policy. Off by default — the static router's
+/// choice always stands when disabled.
+#[derive(Debug, Clone)]
+pub struct BanditConfig {
+    /// Master switch. `false` = static routing only: no arms, no RNG
+    /// draws, no feedback, token-identical legacy behavior.
+    pub enabled: bool,
+    /// Exploration rate: fraction of selections routed to a uniformly
+    /// random eligible tier once every arm has `min_samples` pulls.
+    pub epsilon: f64,
+    /// Rolling window (samples) for each arm's reward/latency/cost
+    /// estimates — old outcomes age out so the learner tracks drift.
+    pub window: usize,
+    /// Forced-exploration floor: arms with fewer pulls than this are
+    /// tried first (round-robin) before the greedy/UCB policy engages.
+    pub min_samples: usize,
+}
+
+impl Default for BanditConfig {
+    fn default() -> Self {
+        Self { enabled: false, epsilon: 0.05, window: 256, min_samples: 10 }
+    }
+}
+
 /// Tier-name → tier-index for chain route parsing (mirrors
 /// `models::Tier::name` without a dependency edge).
 fn chain_tier_index(s: &str) -> Option<usize> {
@@ -541,6 +577,9 @@ pub struct PoolConfig {
     /// Per-request tracing (`pool.trace.*`): spans, flight recorder,
     /// latency-breakdown histograms, access log. Off by default.
     pub trace: TraceConfig,
+    /// Learned routing (`pool.routing.*`): contextual-bandit tier
+    /// selection fed by completed-request outcomes. Off by default.
+    pub routing: RoutingConfig,
     /// How often the pool scaler re-plans per-tier active replicas from
     /// queue depth + slot occupancy.
     pub scale_interval_s: f64,
@@ -585,6 +624,7 @@ impl Default for PoolConfig {
             admission: AdmissionConfig::default(),
             chains: ChainsConfig::default(),
             trace: TraceConfig::default(),
+            routing: RoutingConfig::default(),
             scale_interval_s: 2.0,
             health_deadline_s: 3.0,
             substrate: SubstrateKind::Thread,
@@ -849,6 +889,18 @@ impl Config {
                     self.pool.trace.access_log = a.to_string();
                 }
             }
+            if let Some(r) = p.get("routing") {
+                if let Some(b) = r.get("bandit") {
+                    self.pool.routing.bandit.enabled =
+                        b.bool_or("enabled", self.pool.routing.bandit.enabled);
+                    self.pool.routing.bandit.epsilon =
+                        b.f64_or("epsilon", self.pool.routing.bandit.epsilon);
+                    self.pool.routing.bandit.window =
+                        b.usize_or("window", self.pool.routing.bandit.window);
+                    self.pool.routing.bandit.min_samples = b
+                        .usize_or("min_samples", self.pool.routing.bandit.min_samples);
+                }
+            }
             self.pool.scale_interval_s =
                 p.f64_or("scale_interval_s", self.pool.scale_interval_s);
             self.pool.health_deadline_s =
@@ -1064,6 +1116,28 @@ mod tests {
         assert!(!c.pool.speculative.pairs_with(1), "draft tier never verifies");
         assert!(!c.pool.speculative.pairs_with(0));
         assert!(!SpeculativeConfig::disabled().pairs_with(2), "off ⇒ no pairs");
+    }
+
+    #[test]
+    fn overlay_routing_section() {
+        let mut c = Config::default();
+        assert!(!c.pool.routing.bandit.enabled, "bandit defaults off");
+        assert!((c.pool.routing.bandit.epsilon - 0.05).abs() < 1e-12);
+        assert_eq!(c.pool.routing.bandit.window, 256);
+        assert_eq!(c.pool.routing.bandit.min_samples, 10);
+        let j = Json::parse(
+            r#"{"pool":{"routing":{"bandit":{"enabled":true,"epsilon":0.2,
+                "window":64,"min_samples":5}}}}"#,
+        )
+        .unwrap();
+        c.overlay(&j).unwrap();
+        assert!(c.pool.routing.bandit.enabled);
+        assert!((c.pool.routing.bandit.epsilon - 0.2).abs() < 1e-12);
+        assert_eq!(c.pool.routing.bandit.window, 64);
+        assert_eq!(c.pool.routing.bandit.min_samples, 5);
+        // untouched pool knobs keep defaults
+        assert_eq!(c.pool.kv_blocks, 128);
+        assert!(!c.pool.affinity.enabled);
     }
 
     #[test]

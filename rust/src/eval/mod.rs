@@ -263,6 +263,7 @@ mod tests {
             n_failures_injected: 2,
             n_shed: 0,
             semantic_refinement_rate: 0.4,
+            bandit_arms: Vec::new(),
         }
     }
 

@@ -31,7 +31,7 @@ pub mod worker;
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -47,6 +47,7 @@ use crate::models::{zoo, Tier};
 use crate::orchestrator::recovery::RecoveryManager;
 use crate::orchestrator::{ScaleAction, Scaler, TierLoad};
 use crate::registry::{Health, Registry, ServiceId};
+use crate::router::bandit::{SharedBandit, TierBandit};
 use crate::router::hybrid::HybridRouter;
 use crate::router::keyword::KeywordRouter;
 use crate::router::{Classification, Router};
@@ -391,6 +392,11 @@ pub struct GatewayMetrics {
     pub ttft_hist: [TtftHist; 3],
     /// Per-tier inter-token-latency histograms (`ps_tpot_seconds`).
     pub tpot_hist: [TpotHist; 3],
+    /// Learned tier selection (`pool.routing.bandit.enabled`). Set once
+    /// by the router thread at startup when enabled; unset (the default)
+    /// every hook below is a null-pointer check and routing is the exact
+    /// legacy static path.
+    pub bandit: OnceLock<SharedBandit>,
 }
 
 /// A mutex-wrapped queue-wait [`Histogram`] with overload-relevant
@@ -535,6 +541,27 @@ impl GatewayMetrics {
             tokens,
             spans: st.spans,
         });
+    }
+
+    /// Close the routing feedback loop for one resolved request (or
+    /// chain hop — each hop carries its own class/tier label, so credit
+    /// lands on the tier that actually served it). Called at the same
+    /// terminal sites as [`finish_request`](Self::finish_request) for
+    /// real outcomes — completions, sheds, expiries, losses — and *not*
+    /// for caller cancellations or orderly shutdown, which say nothing
+    /// about the tier's fitness. No-op until the router thread arms the
+    /// learner.
+    pub fn bandit_feedback(
+        &self,
+        tier: Tier,
+        complexity: usize,
+        confidence: f64,
+        ok: bool,
+        latency_s: f64,
+    ) {
+        if let Some(b) = self.bandit.get() {
+            b.feedback(complexity, tier.index(), confidence, ok, latency_s);
+        }
     }
 }
 
@@ -1262,6 +1289,11 @@ impl LiveStack {
         if trace_dropped > 0 {
             out.push(("ps_trace_dropped_total".to_string(), trace_dropped as f64));
         }
+        // Learned-routing series (`ps_bandit_*`). Quiet with the bandit
+        // off: the learner is never armed, so no series exist at all.
+        if let Some(b) = m.bandit.get() {
+            out.extend(b.metric_series());
+        }
         if let Some(reg) = &self.nodes {
             out.push(("ps_node_lost_total".to_string(), reg.lost_total() as f64));
             // One pass per family: the Prometheus exposition format
@@ -1677,6 +1709,13 @@ impl AdmissionGate {
                         now,
                         0,
                     );
+                    metrics.bandit_feedback(
+                        tj.tier,
+                        tj.complexity,
+                        tj.confidence,
+                        false,
+                        (now - tj.enqueue_s).max(0.0),
+                    );
                     return;
                 }
             }
@@ -1699,6 +1738,13 @@ impl AdmissionGate {
                 "queue_full",
                 now,
                 0,
+            );
+            metrics.bandit_feedback(
+                tj.tier,
+                tj.complexity,
+                tj.confidence,
+                false,
+                (now - tj.enqueue_s).max(0.0),
             );
             return;
         }
@@ -1732,6 +1778,13 @@ impl AdmissionGate {
                 "shed",
                 now,
                 0,
+            );
+            metrics.bandit_feedback(
+                victim.tier,
+                victim.complexity,
+                victim.confidence,
+                false,
+                (now - victim.enqueue_s).max(0.0),
             );
         }
     }
@@ -1779,6 +1832,13 @@ impl AdmissionGate {
                         "deadline_expired",
                         now,
                         0,
+                    );
+                    metrics.bandit_feedback(
+                        tj.tier,
+                        tj.complexity,
+                        tj.confidence,
+                        false,
+                        (now - tj.enqueue_s).max(0.0),
                     );
                     continue;
                 }
@@ -2139,6 +2199,10 @@ fn chain_step<S: PoolBackend>(
     }
 }
 
+/// Fixed selection-RNG seed for the live learner: bandit decisions are
+/// reproducible run to run given the same outcome stream.
+const BANDIT_SEED: u64 = 0x00ba_4d17_5eed;
+
 /// The router/control thread: drain gateway jobs → classify → per-tier
 /// queues, and every `scale_interval_s` run one control pass — substrate
 /// lifecycle poll → recovery → Alg. 1 per tier — also while idle, so
@@ -2182,10 +2246,32 @@ fn router_loop<S: PoolBackend>(
     // tier's capability.
     let mut tier_model: [&'static str; 3] = ["", "", ""];
     let mut tier_cap: [[f64; 3]; 3] = [[0.0; 3]; 3];
+    let mut tier_cost_rate: [f64; 3] = [0.0; 3];
     for ti in 0..3 {
         let svc = registry.get(substrate.service_of_tier(ti));
         tier_model[ti] = svc.spec.name;
         tier_cap[ti] = svc.spec.capability;
+        tier_cost_rate[ti] = svc.spec.cost_per_replica_second();
+    }
+    // Learned routing (`pool.routing.bandit.enabled`): arm the learner
+    // once, here, where tier capabilities and replica budgets are known.
+    // The seed is fixed — selection is reproducible run to run given the
+    // same outcome stream. Off (the default) the cell stays empty and
+    // every bandit hook in the stack is a null-pointer check.
+    if pool.routing.bandit.enabled {
+        let allowed = [
+            pool.replicas[0] > 0,
+            pool.replicas[1] > 0,
+            pool.replicas[2] > 0,
+        ];
+        let learner = TierBandit::new(
+            &pool.routing.bandit,
+            weights,
+            tier_cap,
+            allowed,
+            BANDIT_SEED,
+        );
+        let _ = metrics.bandit.set(SharedBandit::new(learner, tier_cost_rate));
     }
     loop {
         // Poll fast while the gate holds buffered work or chains are in
@@ -2217,6 +2303,18 @@ fn router_loop<S: PoolBackend>(
                     Ok((tier, model, class)) => {
                         // Zero-budget tiers are Unhealthy in the synced
                         // registry, so Alg. 2 cannot select one here.
+                        // With the bandit armed the learned arm overrides
+                        // the static pick (the static choice remains the
+                        // fallback when no arm is eligible); eligibility
+                        // excludes zero-budget tiers by construction.
+                        let (tier, model) = match metrics.bandit.get() {
+                            Some(b) => {
+                                let bi =
+                                    b.select(class.complexity, tier.index());
+                                (Tier::ALL[bi], tier_model[bi])
+                            }
+                            None => (tier, model),
+                        };
                         let ti = tier.index();
                         metrics.fresh_jobs.fetch_add(1, Ordering::Relaxed);
                         let mut trace = job.trace.take();
@@ -2339,6 +2437,13 @@ fn router_loop<S: PoolBackend>(
                                         "queue_full",
                                         now,
                                         0,
+                                    );
+                                    metrics.bandit_feedback(
+                                        tj.tier,
+                                        tj.complexity,
+                                        tj.confidence,
+                                        false,
+                                        0.0,
                                     );
                                 }
                             },

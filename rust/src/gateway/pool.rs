@@ -718,6 +718,13 @@ fn admit_job<E: StepEngine>(
             now,
             0,
         );
+        ctx.metrics.bandit_feedback(
+            job.tier,
+            job.complexity,
+            job.confidence,
+            false,
+            (now - job.enqueue_s).max(0.0),
+        );
         return None;
     }
     if job.cancel.is_cancelled() {
@@ -777,6 +784,13 @@ fn admit_job<E: StepEngine>(
                 now,
                 0,
             );
+            ctx.metrics.bandit_feedback(
+                job.tier,
+                job.complexity,
+                job.confidence,
+                false,
+                (now - job.enqueue_s).max(0.0),
+            );
             None
         }
     }
@@ -823,6 +837,8 @@ fn finish_job(f: Finished<TierJob>, ctx: &ReplicaCtx) {
         now,
         tokens,
     );
+    ctx.metrics
+        .bandit_feedback(job.tier, job.complexity, job.confidence, true, latency_s);
 }
 
 /// Derive one replica's scheduler knobs from the pool config and its
@@ -913,6 +929,13 @@ pub(crate) fn requeue_to(
     job.reply
         .put(Err(CompletionError::new(FailureKind::ReplicaLost, fail_msg)));
     metrics.finish_request(job.trace.take(), job.tier, job.priority, "replica_lost", now_s, 0);
+    metrics.bandit_feedback(
+        job.tier,
+        job.complexity,
+        job.confidence,
+        false,
+        (now_s - job.enqueue_s).max(0.0),
+    );
     false
 }
 
@@ -1146,6 +1169,13 @@ pub(crate) fn replica_loop<E: StepEngine>(engine: E, ctx: ReplicaCtx) {
                         now,
                         0,
                     );
+                    ctx.metrics.bandit_feedback(
+                        job.tier,
+                        job.complexity,
+                        job.confidence,
+                        false,
+                        (now - job.enqueue_s).max(0.0),
+                    );
                 }
                 ctx.cell.inflight.store(sched.inflight(), Ordering::Relaxed);
                 let ps = sched.prefix_stats();
@@ -1232,6 +1262,13 @@ pub(crate) fn replica_loop<E: StepEngine>(engine: E, ctx: ReplicaCtx) {
                         "internal",
                         now,
                         0,
+                    );
+                    ctx.metrics.bandit_feedback(
+                        job.tier,
+                        job.complexity,
+                        job.confidence,
+                        false,
+                        (now - job.enqueue_s).max(0.0),
                     );
                 }
                 ctx.cell.inflight.store(0, Ordering::Relaxed);

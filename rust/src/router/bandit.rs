@@ -1,0 +1,508 @@
+//! Online contextual-bandit tier selection (`pool.routing.bandit.*`).
+//!
+//! The static router (keywords + classifier, Alg. 2) predicts a
+//! complexity class and maps it to a tier — but never learns from what
+//! actually happened. This layer closes the loop: each completed
+//! request's outcome (success, latency, cost — the same signals the
+//! span timeline records) updates a per-(complexity-class, tier) arm,
+//! and selection becomes epsilon-greedy/UCB over the learned estimates,
+//! PickLLM-style. The reward is the paper's Eq. 2 convex score —
+//! `w_R·R̂ + w_T·T̂ + w_C·Ĉ` with the quality term from
+//! [`scoring::relevance`] — so the learner optimizes exactly the
+//! objective the operator profile declares, it just estimates the
+//! components from observed outcomes instead of priors.
+//!
+//! Determinism: selection RNG is a seeded [`SplitMix64`]; identical
+//! seeds + identical feedback sequences reproduce identical decisions.
+
+use std::sync::{Mutex, MutexGuard};
+
+use crate::config::BanditConfig;
+use crate::scoring::{relevance, score, Components, ScoreNormalizer, Weights};
+use crate::util::rng::SplitMix64;
+use crate::util::stats::Rolling;
+
+use super::N_CLASSES;
+
+/// Tier count mirrors class count (small/medium/large).
+pub const N_TIERS: usize = 3;
+
+/// Tier-index → name for metric labels (mirrors `models::Tier::name`
+/// without a dependency edge, as the config chain parser does).
+const TIER_NAMES: [&str; N_TIERS] = ["small", "medium", "large"];
+
+/// One (class, tier) arm's learned state.
+#[derive(Debug)]
+struct Arm {
+    /// Windowed Eq. 2 rewards (failures contribute 0).
+    rewards: Rolling,
+    /// Times this arm was chosen by `select` (the forced-exploration
+    /// counter — selections, not completions, so concurrent in-flight
+    /// requests can't hammer one cold arm).
+    selections: u64,
+    successes: u64,
+    failures: u64,
+    latency: Rolling,
+    cost: Rolling,
+}
+
+impl Arm {
+    fn new(window: usize) -> Arm {
+        let w = window.max(1);
+        Arm {
+            rewards: Rolling::new(w),
+            selections: 0,
+            successes: 0,
+            failures: 0,
+            latency: Rolling::new(w),
+            cost: Rolling::new(w),
+        }
+    }
+}
+
+/// Public per-arm snapshot (for `SimReport` and `/metrics` gauges).
+#[derive(Debug, Clone)]
+pub struct ArmStat {
+    pub class: usize,
+    pub tier: usize,
+    pub selections: u64,
+    pub successes: u64,
+    pub failures: u64,
+    pub mean_reward: f64,
+    pub mean_latency_s: f64,
+    pub mean_cost_usd: f64,
+}
+
+/// The learner: one arm per (predicted complexity class, tier), shared
+/// reward normalizers, seeded selection RNG. Pure and single-threaded —
+/// the gateway wraps it in [`SharedBandit`], the simulator owns it
+/// directly on virtual time.
+#[derive(Debug)]
+pub struct TierBandit {
+    cfg: BanditConfig,
+    weights: Weights,
+    /// Per-tier capability vector of the tier's canonical model — the
+    /// R̂ input. Fixed at construction (model zoo is static).
+    capability: [[f64; 3]; N_TIERS],
+    /// Tiers eligible for selection (a tier with no replica budget must
+    /// never be chosen).
+    allowed: [bool; N_TIERS],
+    arms: Vec<Arm>, // N_CLASSES × N_TIERS, row-major by class
+    /// Shared latency/cost history → T̂/Ĉ normalization (Eq. 2's
+    /// "historical system statistics").
+    norm: ScoreNormalizer,
+    rng: SplitMix64,
+    /// Monotonic per-tier counters for `/metrics`.
+    selected_total: [u64; N_TIERS],
+    reward_total: [f64; N_TIERS],
+}
+
+impl TierBandit {
+    pub fn new(
+        cfg: &BanditConfig,
+        weights: Weights,
+        capability: [[f64; 3]; N_TIERS],
+        allowed: [bool; N_TIERS],
+        seed: u64,
+    ) -> TierBandit {
+        let window = cfg.window.max(1);
+        TierBandit {
+            cfg: cfg.clone(),
+            weights,
+            capability,
+            allowed,
+            arms: (0..N_CLASSES * N_TIERS).map(|_| Arm::new(window)).collect(),
+            norm: ScoreNormalizer::new(window),
+            rng: SplitMix64::new(seed),
+            selected_total: [0; N_TIERS],
+            reward_total: [0.0; N_TIERS],
+        }
+    }
+
+    fn arm(&self, class: usize, tier: usize) -> &Arm {
+        &self.arms[class.min(N_CLASSES - 1) * N_TIERS + tier.min(N_TIERS - 1)]
+    }
+
+    fn arm_mut(&mut self, class: usize, tier: usize) -> &mut Arm {
+        &mut self.arms[class.min(N_CLASSES - 1) * N_TIERS + tier.min(N_TIERS - 1)]
+    }
+
+    /// Pick a tier for a predicted class. `fallback` (the static
+    /// router's choice) is returned only if no tier is eligible.
+    ///
+    /// Policy: arms under `min_samples` selections are tried first
+    /// (least-selected wins — forced exploration), then with probability
+    /// `epsilon` a uniform eligible tier, otherwise the arm maximizing
+    /// windowed mean reward + a UCB bonus.
+    pub fn select(&mut self, class: usize, fallback: usize) -> usize {
+        let class = class.min(N_CLASSES - 1);
+        if !self.allowed.iter().any(|&a| a) {
+            return fallback;
+        }
+        let pick = self.pick(class);
+        self.arm_mut(class, pick).selections += 1;
+        self.selected_total[pick] += 1;
+        pick
+    }
+
+    fn pick(&mut self, class: usize) -> usize {
+        // Forced exploration: coldest under-sampled arm first.
+        let mut cold: Option<usize> = None;
+        for t in 0..N_TIERS {
+            if !self.allowed[t] {
+                continue;
+            }
+            let n = self.arm(class, t).selections;
+            if n < self.cfg.min_samples as u64
+                && cold.map_or(true, |c| n < self.arm(class, c).selections)
+            {
+                cold = Some(t);
+            }
+        }
+        if let Some(t) = cold {
+            return t;
+        }
+        // Epsilon exploration over eligible tiers.
+        if self.cfg.epsilon > 0.0 && self.rng.chance(self.cfg.epsilon) {
+            let eligible: Vec<usize> =
+                (0..N_TIERS).filter(|&t| self.allowed[t]).collect();
+            return eligible[self.rng.below(eligible.len() as u64) as usize];
+        }
+        // Greedy with a UCB bonus on top of the windowed mean.
+        let total: u64 = (0..N_TIERS)
+            .filter(|&t| self.allowed[t])
+            .map(|t| self.arm(class, t).selections)
+            .sum();
+        let ln_total = (total.max(1) as f64).ln().max(0.0);
+        let mut best = 0usize;
+        let mut best_v = f64::NEG_INFINITY;
+        for t in 0..N_TIERS {
+            if !self.allowed[t] {
+                continue;
+            }
+            let a = self.arm(class, t);
+            let mean = if a.rewards.is_empty() { 0.5 } else { a.rewards.mean() };
+            let v = mean + (2.0 * ln_total / a.selections.max(1) as f64).sqrt();
+            if v > best_v {
+                best_v = v;
+                best = t;
+            }
+        }
+        best
+    }
+
+    /// Record one completed (or terminally failed) request's outcome for
+    /// its serving tier. Failures score 0; successes score the Eq. 2
+    /// convex combination of relevance, timeliness, and economy over the
+    /// learner's own latency/cost history.
+    pub fn feedback(
+        &mut self,
+        class: usize,
+        tier: usize,
+        confidence: f64,
+        ok: bool,
+        latency_s: f64,
+        cost_usd: f64,
+    ) {
+        let class = class.min(N_CLASSES - 1);
+        let tier = tier.min(N_TIERS - 1);
+        let reward = if ok {
+            self.norm.observe(latency_s, cost_usd);
+            score(
+                self.weights,
+                Components {
+                    relevance: relevance(&self.capability[tier], class, confidence),
+                    timeliness: self.norm.timeliness(latency_s),
+                    economy: self.norm.economy(cost_usd),
+                },
+            )
+        } else {
+            0.0
+        };
+        let arm = self.arm_mut(class, tier);
+        arm.rewards.push(reward);
+        if ok {
+            arm.successes += 1;
+            arm.latency.push(latency_s);
+            arm.cost.push(cost_usd);
+        } else {
+            arm.failures += 1;
+        }
+        self.reward_total[tier] += reward;
+    }
+
+    /// Windowed mean reward of one arm (None before any feedback).
+    pub fn estimate(&self, class: usize, tier: usize) -> Option<f64> {
+        let a = self.arm(class, tier);
+        if a.rewards.is_empty() {
+            None
+        } else {
+            Some(a.rewards.mean())
+        }
+    }
+
+    /// Snapshot of every arm that has been selected at least once.
+    pub fn arm_stats(&self) -> Vec<ArmStat> {
+        let mut out = Vec::new();
+        for class in 0..N_CLASSES {
+            for tier in 0..N_TIERS {
+                let a = self.arm(class, tier);
+                if a.selections == 0 && a.successes + a.failures == 0 {
+                    continue;
+                }
+                out.push(ArmStat {
+                    class,
+                    tier,
+                    selections: a.selections,
+                    successes: a.successes,
+                    failures: a.failures,
+                    mean_reward: a.rewards.mean(),
+                    mean_latency_s: a.latency.mean(),
+                    mean_cost_usd: a.cost.mean(),
+                });
+            }
+        }
+        out
+    }
+
+    pub fn selected_total(&self) -> [u64; N_TIERS] {
+        self.selected_total
+    }
+
+    pub fn reward_total(&self) -> [f64; N_TIERS] {
+        self.reward_total
+    }
+
+    /// `ps_bandit_*` series: per-tier selection/reward counters and
+    /// per-arm estimate gauges, quiet-when-zero like every labeled
+    /// family the gateway exports.
+    pub fn metric_series(&self) -> Vec<(String, f64)> {
+        let mut out = Vec::new();
+        for (t, name) in TIER_NAMES.iter().enumerate() {
+            if self.selected_total[t] == 0 {
+                continue;
+            }
+            out.push((
+                format!("ps_bandit_selected_total{{tier=\"{name}\"}}"),
+                self.selected_total[t] as f64,
+            ));
+        }
+        for (t, name) in TIER_NAMES.iter().enumerate() {
+            if self.reward_total[t] == 0.0 {
+                continue;
+            }
+            out.push((
+                format!("ps_bandit_reward_total{{tier=\"{name}\"}}"),
+                self.reward_total[t],
+            ));
+        }
+        for s in self.arm_stats() {
+            if s.successes + s.failures == 0 {
+                continue;
+            }
+            out.push((
+                format!(
+                    "ps_bandit_estimate{{class=\"{}\",tier=\"{}\"}}",
+                    s.class, TIER_NAMES[s.tier]
+                ),
+                s.mean_reward,
+            ));
+        }
+        out
+    }
+}
+
+/// Thread-safe wrapper for the live gateway: the router thread selects,
+/// replica/gate threads feed outcomes back. One mutex around the whole
+/// learner — both operations are a few arithmetic ops per request, far
+/// off the decode hot path.
+#[derive(Debug)]
+pub struct SharedBandit {
+    inner: Mutex<TierBandit>,
+    /// Per-tier $/replica-second — the live cost proxy (the gateway has
+    /// no per-request dollar figure at completion time, so cost ≈
+    /// replica-rate × latency).
+    cost_rate: [f64; N_TIERS],
+}
+
+impl SharedBandit {
+    pub fn new(inner: TierBandit, cost_rate: [f64; N_TIERS]) -> SharedBandit {
+        SharedBandit { inner: Mutex::new(inner), cost_rate }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, TierBandit> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    pub fn select(&self, class: usize, fallback: usize) -> usize {
+        self.lock().select(class, fallback)
+    }
+
+    pub fn feedback(
+        &self,
+        class: usize,
+        tier: usize,
+        confidence: f64,
+        ok: bool,
+        latency_s: f64,
+    ) {
+        let cost = self.cost_rate[tier.min(N_TIERS - 1)] * latency_s.max(0.0);
+        self.lock().feedback(class, tier, confidence, ok, latency_s, cost);
+    }
+
+    pub fn metric_series(&self) -> Vec<(String, f64)> {
+        self.lock().metric_series()
+    }
+
+    pub fn arm_stats(&self) -> Vec<ArmStat> {
+        self.lock().arm_stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Profile;
+
+    fn caps() -> [[f64; 3]; 3] {
+        // Zoo-shaped: small great on easy, weak on hard; large strong
+        // everywhere (and most expensive).
+        [[0.97, 0.80, 0.45], [0.97, 0.90, 0.70], [0.98, 0.94, 0.88]]
+    }
+
+    fn bandit(cfg: &BanditConfig, seed: u64) -> TierBandit {
+        TierBandit::new(
+            cfg,
+            Weights::from_profile(&Profile::BALANCED),
+            caps(),
+            [true; 3],
+            seed,
+        )
+    }
+
+    #[test]
+    fn forced_exploration_tries_every_arm_first() {
+        let cfg = BanditConfig { enabled: true, ..BanditConfig::default() };
+        let mut b = bandit(&cfg, 7);
+        let mut seen = [0u64; 3];
+        for _ in 0..3 * cfg.min_samples {
+            seen[b.select(2, 2)] += 1;
+        }
+        for (t, &n) in seen.iter().enumerate() {
+            assert_eq!(n, cfg.min_samples as u64, "tier {t} under-explored");
+        }
+    }
+
+    #[test]
+    fn selection_is_seed_deterministic() {
+        let cfg = BanditConfig {
+            enabled: true,
+            epsilon: 0.3,
+            window: 64,
+            min_samples: 2,
+        };
+        let run = || {
+            let mut b = bandit(&cfg, 99);
+            let mut picks = Vec::new();
+            for i in 0..500u64 {
+                let class = (i % 3) as usize;
+                let t = b.select(class, class);
+                // Deterministic synthetic outcome stream.
+                let ok = (i * 7 + t as u64) % 5 != 0;
+                b.feedback(class, t, 0.9, ok, 0.5 + t as f64, 0.001 * (t + 1) as f64);
+                picks.push(t);
+            }
+            picks
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn learner_converges_to_the_rewarding_arm() {
+        let cfg = BanditConfig {
+            enabled: true,
+            epsilon: 0.05,
+            window: 128,
+            min_samples: 5,
+        };
+        let mut b = bandit(&cfg, 11);
+        // Class 2: the medium tier succeeds as often as large at a third
+        // of the cost and latency — the learner must shift traffic to it.
+        let mut rng = SplitMix64::new(3);
+        for _ in 0..600 {
+            let t = b.select(2, 2);
+            let (p_ok, lat, cost) = match t {
+                0 => (0.40, 1.0, 0.001),
+                1 => (0.90, 1.5, 0.003),
+                _ => (0.92, 4.0, 0.012),
+            };
+            b.feedback(2, t, 0.95, rng.chance(p_ok), lat, cost);
+        }
+        let picks: Vec<u64> =
+            (0..3).map(|t| b.arm(2, t).selections).collect();
+        assert!(
+            picks[1] > picks[0] && picks[1] > picks[2],
+            "medium must dominate: {picks:?}"
+        );
+        let est1 = b.estimate(2, 1).unwrap();
+        assert!(est1 > b.estimate(2, 0).unwrap());
+        assert!(est1 > b.estimate(2, 2).unwrap());
+    }
+
+    #[test]
+    fn disallowed_tiers_are_never_selected() {
+        let cfg = BanditConfig { enabled: true, ..BanditConfig::default() };
+        let mut b = TierBandit::new(
+            &cfg,
+            Weights::from_profile(&Profile::BALANCED),
+            caps(),
+            [true, false, true],
+            5,
+        );
+        for i in 0..200 {
+            let t = b.select(i % 3, 0);
+            assert_ne!(t, 1, "tier 1 has no replica budget");
+        }
+        // No tier eligible at all → the static fallback stands.
+        let mut none = TierBandit::new(
+            &cfg,
+            Weights::from_profile(&Profile::BALANCED),
+            caps(),
+            [false; 3],
+            5,
+        );
+        assert_eq!(none.select(2, 2), 2);
+    }
+
+    #[test]
+    fn failures_zero_the_reward() {
+        let cfg = BanditConfig { enabled: true, ..BanditConfig::default() };
+        let mut b = bandit(&cfg, 1);
+        b.feedback(0, 0, 1.0, false, 0.0, 0.0);
+        assert_eq!(b.estimate(0, 0), Some(0.0));
+        b.feedback(0, 0, 1.0, true, 0.5, 0.001);
+        assert!(b.estimate(0, 0).unwrap() > 0.0);
+        let stats = b.arm_stats();
+        assert_eq!(stats.len(), 1);
+        assert_eq!((stats[0].successes, stats[0].failures), (1, 1));
+    }
+
+    #[test]
+    fn metric_series_is_quiet_until_used_then_labeled() {
+        let cfg = BanditConfig { enabled: true, ..BanditConfig::default() };
+        let shared = SharedBandit::new(bandit(&cfg, 2), [0.01, 0.03, 0.1]);
+        assert!(shared.metric_series().is_empty(), "fresh learner must be quiet");
+        let t = shared.select(1, 1);
+        shared.feedback(1, t, 0.9, true, 0.8);
+        let series = shared.metric_series();
+        assert!(series
+            .iter()
+            .any(|(k, _)| k.starts_with("ps_bandit_selected_total{tier=")));
+        assert!(series
+            .iter()
+            .any(|(k, _)| k.starts_with("ps_bandit_reward_total{tier=")));
+        assert!(series
+            .iter()
+            .any(|(k, v)| k.starts_with("ps_bandit_estimate{class=") && *v > 0.0));
+    }
+}

@@ -11,6 +11,7 @@
 //! * [`hybrid::HybridRouter`] — keywords first, semantic refinement when
 //!   keyword confidence is low.
 
+pub mod bandit;
 pub mod keyword;
 pub mod hybrid;
 

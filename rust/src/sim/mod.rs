@@ -25,6 +25,7 @@ use crate::models::{zoo, BackendKind};
 use crate::orchestrator::recovery::RecoveryManager;
 use crate::orchestrator::Scaler;
 use crate::registry::{Registry, ServiceId};
+use crate::router::bandit::{ArmStat, TierBandit};
 use crate::router::hybrid::{HybridRouter, SemanticRouter};
 use crate::router::keyword::KeywordRouter;
 use crate::router::{Classification, Classifier, Router};
@@ -242,6 +243,9 @@ pub struct SimReport {
     pub n_shed: usize,
     /// Fraction of prompts the hybrid router refined semantically.
     pub semantic_refinement_rate: f64,
+    /// Per-(class, tier) learner state at the end of the run — empty
+    /// unless `pool.routing.bandit.enabled`.
+    pub bandit_arms: Vec<ArmStat>,
 }
 
 impl SimReport {
@@ -273,6 +277,17 @@ impl SimReport {
         } else {
             self.system_cost_usd / self.records.len() as f64
         }
+    }
+
+    /// Summed per-request serving cost per *successful* answer — the
+    /// figure of merit learned routing optimizes (serving spend that
+    /// bought a usable answer). Infinite when nothing succeeded.
+    pub fn cost_per_success_usd(&self) -> f64 {
+        let ok = self.records.iter().filter(|r| r.success).count();
+        if ok == 0 {
+            return f64::INFINITY;
+        }
+        self.records.iter().map(|r| r.cost_usd).sum::<f64>() / ok as f64
     }
 
     pub fn routing_accuracy(&self) -> f64 {
@@ -358,6 +373,35 @@ pub fn run(
         Weights::from_profile(&cfg.profile),
         cfg.seed ^ 0xABCD,
     );
+    // Learned routing (`pool.routing.bandit.enabled`): the same learner
+    // the live router thread arms, run on virtual time. Each tier's arm
+    // dispatches to that tier's canonical Vllm cell (the sim mirror of
+    // the live `tier_model` table). Off (the default) no learner exists
+    // and every draw below is skipped — the legacy trace, bit for bit.
+    let mut bandit: Option<(TierBandit, [ServiceId; 3])> =
+        if cfg.pool.routing.bandit.enabled {
+            let mut caps = [[0.0f64; 3]; 3];
+            let mut cells = [ServiceId(0); 3];
+            for (ti, cell) in cells.iter_mut().enumerate() {
+                let mi = (0..registry.n_models)
+                    .find(|&mi| zoo_models[mi].tier.index() == ti)
+                    .expect("zoo covers every tier");
+                caps[ti] = zoo_models[mi].capability;
+                *cell = registry.cell(mi, BackendKind::Vllm).id;
+            }
+            Some((
+                TierBandit::new(
+                    &cfg.pool.routing.bandit,
+                    Weights::from_profile(&cfg.profile),
+                    caps,
+                    [true; 3],
+                    cfg.seed ^ 0x00BA_4D17,
+                ),
+                cells,
+            ))
+        } else {
+            None
+        };
     let mut router: Box<dyn Router> = match cfg.router_mode {
         RouterMode::Keyword => Box::new(KeywordRouter::new()),
         RouterMode::Semantic => Box::new(SemanticRouter::new(
@@ -586,6 +630,17 @@ pub fn run(
                     Some(s) => s,
                     None => continue,
                 };
+                // Learned override: the bandit's arm replaces the static
+                // pick (which remains its fallback), exactly as the live
+                // router thread does after `route_one`.
+                let sid = match bandit.as_mut() {
+                    Some((b, cells)) => {
+                        let fallback =
+                            zoo_models[registry.get(sid).model_idx].tier.index();
+                        cells[b.select(class.complexity, fallback)]
+                    }
+                    None => sid,
+                };
                 // Overload admission (the sim analogue of the router's
                 // admission gate): when enabled, an arrival that finds
                 // the selected service's backlog at or past the shed
@@ -638,6 +693,18 @@ pub fn run(
                         });
                         n_shed += 1;
                         done += 1;
+                        if let Some((b, _)) = bandit.as_mut() {
+                            // A shed is a real outcome for the chosen
+                            // tier: zero reward, normalizers untouched.
+                            b.feedback(
+                                class.complexity,
+                                zoo_models[svc.model_idx].tier.index(),
+                                class.confidence,
+                                false,
+                                0.0,
+                                0.0,
+                            );
+                        }
                         continue;
                     }
                 }
@@ -716,6 +783,19 @@ pub fn run(
                         Vec::new()
                     },
                 });
+                if let Some((b, _)) = bandit.as_mut() {
+                    // Credit the serving tier with the realized outcome —
+                    // the sim's exact latency and per-request dollar cost
+                    // (live uses a replica-rate × latency proxy).
+                    b.feedback(
+                        p.class.complexity,
+                        spec.tier.index(),
+                        p.class.confidence,
+                        success,
+                        latency,
+                        cost,
+                    );
+                }
                 done += 1;
                 try_start!(service, t);
             }
@@ -837,6 +917,16 @@ pub fn run(
 
     // Drain: anything still pending at the horizon failed its deadline.
     for p in pendings.into_iter().flatten() {
+        if let Some((b, _)) = bandit.as_mut() {
+            b.feedback(
+                p.class.complexity,
+                zoo_models[registry.get(p.service).model_idx].tier.index(),
+                p.class.confidence,
+                false,
+                0.0,
+                0.0,
+            );
+        }
         records.push(RequestRecord {
             benchmark: p.req.benchmark.clone(),
             true_complexity: p.req.true_complexity,
@@ -894,6 +984,7 @@ pub fn run(
         mean_recovery_s: recovery.mean_recovery_s(),
         n_failures_injected: n_failures,
         n_shed,
+        bandit_arms: bandit.map(|(b, _)| b.arm_stats()).unwrap_or_default(),
         records,
     })
 }
@@ -927,28 +1018,9 @@ mod tests {
     use crate::workload::OracleClassifier;
 
     pub fn lib() -> TemplateLibrary {
-        // Minimal two-benchmark library (fast tests); the real library is
-        // exercised by the integration suite.
-        TemplateLibrary::parse(
-            &crate::util::json::Json::parse(
-                r#"{
-          "slots": {"n": ["3", "7"], "x": ["alpha", "beta"]},
-          "benchmarks": [
-            {"name": "arc", "runs": 500, "success": 400, "unique_prompts": 100,
-             "templates": [
-               {"complexity": 0, "text": "what is {n} plus {n}?"},
-               {"complexity": 1, "text": "why does {x} happen faster?"}]},
-            {"name": "math", "runs": 500, "success": 398, "unique_prompts": 100,
-             "templates": [
-               {"complexity": 2, "text": "prove that {x} is monotonic."},
-               {"complexity": 1, "text": "solve for x: {n}x = {n}."}]}
-          ],
-          "profiles": ["baseline"]
-        }"#,
-            )
-            .unwrap(),
-        )
-        .unwrap()
+        // The shared built-in miniature library (fast tests); the real
+        // library is exercised by the integration suite.
+        TemplateLibrary::synthetic()
     }
 
     pub fn quick_cfg() -> SimConfig {
@@ -1020,6 +1092,81 @@ mod tests {
             "dynamic {:.5} vs static {:.5}",
             dynamic.cost_per_query_usd(),
             stat.cost_per_query_usd()
+        );
+    }
+
+    #[test]
+    fn bandit_off_by_default_and_learner_arms_when_enabled() {
+        let l = lib();
+        // Default config: no learner, no arm stats — the legacy trace.
+        let plain = run(&quick_cfg(), &l, oracle(&l, 0.03)).unwrap();
+        assert!(plain.bandit_arms.is_empty());
+        // Enabled: every class accumulates selections and real feedback.
+        let mut cfg = quick_cfg();
+        cfg.pool.routing.bandit.enabled = true;
+        let learned = run(&cfg, &l, oracle(&l, 0.03)).unwrap();
+        assert_eq!(learned.records.len(), plain.records.len());
+        assert!(!learned.bandit_arms.is_empty());
+        let fed: u64 = learned
+            .bandit_arms
+            .iter()
+            .map(|a| a.successes + a.failures)
+            .sum();
+        assert_eq!(fed as usize, learned.records.len());
+        for class in [0usize, 1, 2] {
+            assert!(
+                learned
+                    .bandit_arms
+                    .iter()
+                    .any(|a| a.class == class && a.selections > 0),
+                "class {class} never routed"
+            );
+        }
+    }
+
+    #[test]
+    fn bandit_sim_is_seed_deterministic() {
+        let l = lib();
+        let mut cfg = quick_cfg();
+        cfg.pool.routing.bandit.enabled = true;
+        let a = run(&cfg, &l, oracle(&l, 0.03)).unwrap();
+        let b = run(&cfg, &l, oracle(&l, 0.03)).unwrap();
+        assert_eq!(a.records.len(), b.records.len());
+        assert_eq!(a.success_rate(), b.success_rate());
+        assert!((a.mean_latency_s() - b.mean_latency_s()).abs() < 1e-12);
+        let key = |r: &SimReport| {
+            r.bandit_arms
+                .iter()
+                .map(|s| (s.class, s.tier, s.selections, s.successes, s.failures))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(key(&a), key(&b));
+    }
+
+    #[test]
+    fn bandit_beats_tier_directed_on_cost_per_success() {
+        // The pinned routing scenario (also the CI `-- routing` bench):
+        // TierDirected statically sends every class-2 prompt to the large
+        // tier — high success, very expensive. The learner discovers that
+        // cheaper tiers buy more successes per dollar and shifts traffic,
+        // so summed request cost per successful answer must drop.
+        let l = lib();
+        let mut cfg = quick_cfg();
+        cfg.n_requests = 3000;
+        cfg.policy = SelectionPolicy::TierDirected;
+        let stat = run(&cfg, &l, oracle(&l, 0.03)).unwrap();
+        cfg.pool.routing.bandit.enabled = true;
+        let learned = run(&cfg, &l, oracle(&l, 0.03)).unwrap();
+        assert!(
+            learned.cost_per_success_usd() < stat.cost_per_success_usd(),
+            "bandit {:.6} vs static {:.6} $/success",
+            learned.cost_per_success_usd(),
+            stat.cost_per_success_usd()
+        );
+        assert!(
+            learned.success_rate() > 0.4,
+            "learned routing must still answer: {:.3}",
+            learned.success_rate()
         );
     }
 

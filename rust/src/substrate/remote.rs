@@ -976,6 +976,13 @@ fn pump_session(ctx: &mut PumpCtx) -> Result<(), String> {
                                     now,
                                     0,
                                 );
+                                ctx.metrics.bandit_feedback(
+                                    e.job.tier,
+                                    e.job.complexity,
+                                    e.job.confidence,
+                                    false,
+                                    (now - e.job.enqueue_s).max(0.0),
+                                );
                             }
                         }
                         Frame::Cancelled { job } => {
@@ -1530,4 +1537,6 @@ fn finish_entry(e: InflightJob, prompt_tokens: usize, ctx: &PumpCtx) {
         now,
         tokens,
     );
+    ctx.metrics
+        .bandit_feedback(job.tier, job.complexity, job.confidence, true, latency_s);
 }

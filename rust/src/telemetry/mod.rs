@@ -7,9 +7,17 @@
 
 use std::collections::VecDeque;
 
-use crate::util::stats::{Ema, Summary};
+use crate::util::stats::{Ema, Rolling, Summary};
 
 pub mod trace;
+
+/// Shortest divisor `RateWindow::rate` will use — stops a burst in the
+/// first instants of a window from reading as a near-infinite rate.
+const RATE_FLOOR_S: f64 = 1.0;
+
+/// Completions retained per service for latency/TTFT percentiles. Bounds
+/// gateway memory: older samples age out instead of accumulating forever.
+const SUMMARY_WINDOW: usize = 4096;
 
 /// Sliding-window request counter → arrival-rate estimate (Alg. 1's
 /// `GetAvgRequestRate(m, w)`).
@@ -17,16 +25,19 @@ pub mod trace;
 pub struct RateWindow {
     window_s: f64,
     events: VecDeque<f64>,
+    /// When the first event was recorded (cold-start elapsed tracking).
+    start_s: Option<f64>,
     /// Total ever observed (events are evicted, the counter is not).
     pub total: u64,
 }
 
 impl RateWindow {
     pub fn new(window_s: f64) -> Self {
-        Self { window_s, events: VecDeque::new(), total: 0 }
+        Self { window_s, events: VecDeque::new(), start_s: None, total: 0 }
     }
 
     pub fn record(&mut self, now_s: f64) {
+        self.start_s.get_or_insert(now_s);
         self.events.push_back(now_s);
         self.total += 1;
         self.evict(now_s);
@@ -42,13 +53,21 @@ impl RateWindow {
         }
     }
 
-    /// Requests per second over the window.
+    /// Requests per second over the window. During cold start (less than
+    /// one full window elapsed since the first event) divide by the time
+    /// actually observed, not the configured window — otherwise Alg. 1's
+    /// `GetAvgRequestRate` underestimates arrival rate and delays the
+    /// first scale-up.
     pub fn rate(&mut self, now_s: f64) -> f64 {
         self.evict(now_s);
         if self.window_s <= 0.0 {
             return 0.0;
         }
-        self.events.len() as f64 / self.window_s
+        let span = match self.start_s {
+            Some(t0) => (now_s - t0).min(self.window_s).max(RATE_FLOOR_S.min(self.window_s)),
+            None => self.window_s,
+        };
+        self.events.len() as f64 / span
     }
 
     /// Seconds since the most recent event (∞ if none) — Alg. 1's
@@ -67,8 +86,8 @@ pub struct ServiceTelemetry {
     pub arrivals: RateWindow,
     pub latency_ema: Ema,
     pub ttft_ema: Ema,
-    latencies: Vec<f64>,
-    ttfts: Vec<f64>,
+    latencies: Rolling,
+    ttfts: Rolling,
     pub successes: u64,
     pub failures: u64,
     /// In-flight requests right now (gauge).
@@ -84,8 +103,8 @@ impl ServiceTelemetry {
             arrivals: RateWindow::new(window_s),
             latency_ema: Ema::new(0.1),
             ttft_ema: Ema::new(0.1),
-            latencies: Vec::new(),
-            ttfts: Vec::new(),
+            latencies: Rolling::new(SUMMARY_WINDOW),
+            ttfts: Rolling::new(SUMMARY_WINDOW),
             successes: 0,
             failures: 0,
             inflight: 0,
@@ -148,11 +167,11 @@ impl ServiceTelemetry {
     }
 
     pub fn latency_summary(&self) -> Summary {
-        Summary::of(&self.latencies)
+        self.latencies.summary()
     }
 
     pub fn ttft_summary(&self) -> Summary {
-        Summary::of(&self.ttfts)
+        self.ttfts.summary()
     }
 
     /// Average latency (Alg. 1's `GetAvgLatency(m)`), with a prior for
@@ -285,6 +304,40 @@ mod tests {
     }
 
     #[test]
+    fn rate_window_cold_start_uses_elapsed_time() {
+        // 5 qps arriving into a 60 s window: after only 4 s the estimate
+        // must read ~5 qps (elapsed divisor), not 20/60 ≈ 0.33 qps.
+        let mut w = RateWindow::new(60.0);
+        let mut n = 0;
+        let mut t = 0.0;
+        while t < 4.0 {
+            w.record(t);
+            n += 1;
+            t += 0.2;
+        }
+        let rate = w.rate(4.0);
+        let expect = n as f64 / 4.0;
+        assert!((rate - expect).abs() < 1e-9, "cold-start rate {rate}, want {expect}");
+        // Steady state (elapsed > window) still divides by the window.
+        let mut s = RateWindow::new(10.0);
+        for t in 0..20 {
+            s.record(t as f64);
+        }
+        assert!((s.rate(19.0) - 1.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rate_window_floors_tiny_elapsed() {
+        // A burst in the first instant must not read as an infinite rate.
+        let mut w = RateWindow::new(60.0);
+        for _ in 0..10 {
+            w.record(0.001);
+        }
+        let rate = w.rate(0.002);
+        assert!(rate <= 10.0 + 1e-9, "burst rate {rate} not floored");
+    }
+
+    #[test]
     fn idle_time_tracks_last_event() {
         let mut w = RateWindow::new(10.0);
         assert!(w.idle_time(5.0).is_infinite());
@@ -312,6 +365,26 @@ mod tests {
         t.on_complete(2.0, 4.0, 1.0, 0.2, false);
         assert!((t.success_rate() - 0.5).abs() < 1e-12);
         assert_eq!(t.inflight, 0);
+    }
+
+    #[test]
+    fn telemetry_memory_stays_bounded_under_sustained_load() {
+        // A long-running gateway used to push every completion into an
+        // unbounded Vec; 1M synthetic completions must stay within the
+        // rolling window and still produce a recent-sample summary.
+        let mut t = ServiceTelemetry::new(60.0);
+        let n = 1_000_000u64;
+        for i in 0..n {
+            let now = i as f64 * 0.01;
+            t.on_dispatch(now, 8.0);
+            t.on_complete(now + 0.5, 8.0, 1.0 + (i % 7) as f64 * 0.1, 0.2, true);
+        }
+        assert!(t.latencies.len() <= SUMMARY_WINDOW, "latencies grew to {}", t.latencies.len());
+        assert!(t.ttfts.len() <= SUMMARY_WINDOW, "ttfts grew to {}", t.ttfts.len());
+        assert_eq!(t.successes, n);
+        let s = t.latency_summary();
+        assert!(s.count > 0 && s.mean >= 1.0 && s.mean <= 1.7, "summary {s:?}");
+        assert!((t.ttft_summary().mean - 0.2).abs() < 1e-9);
     }
 
     #[test]

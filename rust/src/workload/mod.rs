@@ -94,6 +94,34 @@ impl TemplateLibrary {
         Ok(TemplateLibrary { benchmarks, slots })
     }
 
+    /// Built-in miniature library — two benchmarks spanning all three
+    /// complexity classes. The stand-in when `data/templates.json`
+    /// hasn't been built (`make artifacts`): the sim unit tests and the
+    /// pinned CI routing bench run on it, so both exercise the same
+    /// scenario.
+    pub fn synthetic() -> TemplateLibrary {
+        Self::parse(
+            &Json::parse(
+                r#"{
+          "slots": {"n": ["3", "7"], "x": ["alpha", "beta"]},
+          "benchmarks": [
+            {"name": "arc", "runs": 500, "success": 400, "unique_prompts": 100,
+             "templates": [
+               {"complexity": 0, "text": "what is {n} plus {n}?"},
+               {"complexity": 1, "text": "why does {x} happen faster?"}]},
+            {"name": "math", "runs": 500, "success": 398, "unique_prompts": 100,
+             "templates": [
+               {"complexity": 2, "text": "prove that {x} is monotonic."},
+               {"complexity": 1, "text": "solve for x: {n}x = {n}."}]}
+          ],
+          "profiles": ["baseline"]
+        }"#,
+            )
+            .expect("builtin library JSON"),
+        )
+        .expect("builtin library")
+    }
+
     pub fn benchmark(&self, name: &str) -> Result<&Benchmark> {
         self.benchmarks
             .iter()
@@ -141,11 +169,15 @@ pub struct Prompt {
 pub struct Generator<'a> {
     pub lib: &'a TemplateLibrary,
     rng: SplitMix64,
+    /// Σ runs over all benchmarks, computed once (the mixed sampler
+    /// draws against this total on every prompt).
+    runs_total: usize,
 }
 
 impl<'a> Generator<'a> {
     pub fn new(lib: &'a TemplateLibrary, seed: u64) -> Self {
-        Self { lib, rng: SplitMix64::new(seed) }
+        let runs_total = lib.benchmarks.iter().map(|b| b.runs).sum();
+        Self { lib, rng: SplitMix64::new(seed), runs_total }
     }
 
     /// One prompt from a specific benchmark.
@@ -159,20 +191,18 @@ impl<'a> Generator<'a> {
     }
 
     /// One prompt from a benchmark chosen ∝ its Table-1 run count (the
-    /// paper's evaluation mix).
+    /// paper's evaluation mix). `lib` is a `&'a` reference independent of
+    /// `self`'s borrow, so the chosen benchmark needs no clone.
     pub fn prompt_mixed(&mut self) -> Prompt {
-        let total: usize = self.lib.benchmarks.iter().map(|b| b.runs).sum();
-        let mut pick = self.rng.below(total as u64) as usize;
-        for b in &self.lib.benchmarks {
+        let lib = self.lib;
+        let mut pick = self.rng.below(self.runs_total as u64) as usize;
+        for b in &lib.benchmarks {
             if pick < b.runs {
-                // Avoid borrow conflict: clone the benchmark handle data.
-                let bench = b.clone();
-                return self.prompt_from(&bench);
+                return self.prompt_from(b);
             }
             pick -= b.runs;
         }
-        let bench = self.lib.benchmarks[0].clone();
-        self.prompt_from(&bench)
+        self.prompt_from(&lib.benchmarks[0])
     }
 
     /// Build a full [`InferenceRequest`] with token estimates.
@@ -393,6 +423,34 @@ mod tests {
         }
         let frac = hard as f64 / n as f64;
         assert!((frac - 0.75).abs() < 0.05, "hard frac {frac}");
+    }
+
+    #[test]
+    fn mixed_sampling_matches_reference_draw_order() {
+        // The clone-free sampler must consume the RNG stream exactly like
+        // the spec: one weighted draw over Σruns, then prompt_from on the
+        // selected benchmark.
+        let l = lib();
+        let mut g = Generator::new(&l, 1234);
+        let mut rng = SplitMix64::new(1234);
+        let total: u64 = l.benchmarks.iter().map(|b| b.runs as u64).sum();
+        for _ in 0..200 {
+            let got = g.prompt_mixed();
+            let mut pick = rng.below(total) as usize;
+            let mut bench = &l.benchmarks[0];
+            for b in &l.benchmarks {
+                if pick < b.runs {
+                    bench = b;
+                    break;
+                }
+                pick -= b.runs;
+            }
+            let t = &bench.templates[rng.below(bench.templates.len() as u64) as usize];
+            let text = l.fill(&t.text, &mut rng);
+            assert_eq!(got.benchmark, bench.name);
+            assert_eq!(got.text, text);
+            assert_eq!(got.complexity, t.complexity);
+        }
     }
 
     #[test]
